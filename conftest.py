@@ -1,0 +1,8 @@
+"""Make `compile.*` importable when pytest runs from the repo root
+(e.g. `pytest python/tests/ -q`); the Makefile's `cd python` path works
+either way."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

@@ -1,0 +1,122 @@
+//! Diagnostic probe (not part of the paper's deliverables): compares the
+//! FP and quantized forwards on one input, and inspects the classifier's
+//! behaviour on real synthetic images vs generated ones.
+
+use tq_dit::coordinator::pipeline::{Method, Pipeline};
+use tq_dit::coordinator::QuantConfig;
+use tq_dit::metrics::softmax;
+
+use tq_dit::sampler::Sampler;
+use tq_dit::tensor::Tensor;
+use tq_dit::util::cli::Args;
+use tq_dit::util::config::RunConfig;
+use tq_dit::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let mut cfg = RunConfig::from_args(&args)?;
+    cfg.timesteps = 50;
+    cfg.calib_per_group = 4;
+    let pipe = Pipeline::new(cfg.clone())?;
+    let m = pipe.rt.manifest.clone();
+    let b = m.batches.sample;
+    let il = m.model.img_size * m.model.img_size * m.model.channels;
+    let mut rng = Rng::new(1);
+
+    // --- 1. FP vs quantized forward on the same input ------------------
+    let (qc, _) = pipe.calibrate(Method::TqDit, &mut rng)?;
+    let x = Tensor::new(vec![b, m.model.img_size, m.model.img_size,
+                             m.model.channels],
+                        rng.normal_vec(b * il));
+    let t = vec![25i32; b];
+    let y: Vec<i32> = (0..b).map(|i| (i % 8) as i32).collect();
+
+    let wq = pipe.weights.fakequant(&qc.weights);
+    let fp_buf = pipe.rt.upload_all(&pipe.weights.tensors)?;
+    let q_buf = pipe.rt.upload_all(&wq.tensors)?;
+    let xb = pipe.rt.upload(&x)?;
+    let tb = pipe.rt.upload_i32(&t, &[b])?;
+    let yb = pipe.rt.upload_i32(&y, &[b])?;
+
+    let mut inputs: Vec<&xla::PjRtBuffer> = fp_buf.iter().collect();
+    inputs.extend([&xb, &tb, &yb]);
+    let eps_fp = &pipe.rt.run_buffers("dit_fp_sample", &inputs)?[0];
+
+    let qp = Tensor::new(vec![m.qp_len], qc.qparams_for_group(&m, 1));
+    println!("qp vector head: {:?}", &qp.data[..12]);
+    let qpb = pipe.rt.upload(&qp)?;
+    let mut qi: Vec<&xla::PjRtBuffer> = q_buf.iter().collect();
+    qi.extend([&xb, &tb, &yb, &qpb]);
+    let eps_q = &pipe.rt.run_buffers("dit_quant", &qi)?[0];
+
+    let mse = eps_fp.mse(eps_q);
+    let e_norm: f64 = eps_fp.data.iter().map(|&v| (v as f64) * v as f64)
+        .sum::<f64>() / eps_fp.len() as f64;
+    println!("FP-vs-quant eps MSE = {mse:.6e} (fp power {e_norm:.4})");
+
+    // all-bypass must reproduce FP exactly
+    let byp = Tensor::new(vec![m.qp_len], vec![0.0; m.qp_len]);
+    let bypb = pipe.rt.upload(&byp)?;
+    let mut bi: Vec<&xla::PjRtBuffer> = fp_buf.iter().collect();
+    bi.extend([&xb, &tb, &yb, &bypb]);
+    let eps_byp = &pipe.rt.run_buffers("dit_quant", &bi)?[0];
+    println!("FP-vs-bypass eps MSE = {:.6e}", eps_fp.mse(eps_byp));
+
+    // --- 2. classifier on REAL vs GENERATED images ----------------------
+    let ds = &pipe.ds;
+    let mut imgs = vec![0.0f32; m.batches.feat * il];
+    let mut labels = vec![0usize; m.batches.feat];
+    for i in 0..m.batches.feat {
+        labels[i] = i % 8;
+        let mut tmp = vec![0.0f32; il];
+        ds.render(labels[i], &mut rng, &mut tmp);
+        imgs[i * il..(i + 1) * il].copy_from_slice(&tmp);
+    }
+    let (_, cw) = m.load_metric_weights()?;
+    let cbufs = pipe.rt.upload_all(&cw)?;
+    let imgb = pipe.rt.upload(&Tensor::new(
+        vec![m.batches.feat, m.model.img_size, m.model.img_size,
+             m.model.channels], imgs))?;
+    let mut cin: Vec<&xla::PjRtBuffer> = cbufs.iter().collect();
+    cin.push(&imgb);
+    let logits = &pipe.rt.run_buffers("classifier", &cin)?[0];
+    let nc = logits.cols();
+    let mut correct = 0;
+    for i in 0..m.batches.feat {
+        let p = softmax(&logits.data[i * nc..(i + 1) * nc]);
+        let am = p.iter().enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        if am == labels[i] { correct += 1; }
+    }
+    println!("classifier acc on REAL images: {}/{}", correct, m.batches.feat);
+
+    // generated images per class
+    let fp_cfg = QuantConfig::fp(pipe.groups.clone());
+    let sampler = Sampler::new(&pipe.rt, &pipe.weights, fp_cfg,
+                               cfg.timesteps)?;
+    let glabels: Vec<i32> = (0..b).map(|i| (i % 8) as i32).collect();
+    let (gen, _) = sampler.sample(&glabels, &mut rng)?;
+    println!("gen img stats: min {:.3} max {:.3} mean {:.3}",
+             gen.iter().fold(f32::INFINITY, |a, &v| a.min(v)),
+             gen.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v)),
+             gen.iter().sum::<f32>() / gen.len() as f32);
+    let mut padded = gen.clone();
+    padded.resize(m.batches.feat * il, 0.0);
+    let genb = pipe.rt.upload(&Tensor::new(
+        vec![m.batches.feat, m.model.img_size, m.model.img_size,
+             m.model.channels], padded))?;
+    let mut gin: Vec<&xla::PjRtBuffer> = cbufs.iter().collect();
+    gin.push(&genb);
+    let logits = &pipe.rt.run_buffers("classifier", &gin)?[0];
+    let mut hits = 0;
+    for i in 0..b {
+        let p = softmax(&logits.data[i * nc..(i + 1) * nc]);
+        let am = p.iter().enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        print!("{am}");
+        if am == glabels[i] as usize { hits += 1; }
+    }
+    println!("  <- argmax classes of generated (labels {glabels:?})");
+    println!("generated matched {}/{}", hits, b);
+    Ok(())
+}

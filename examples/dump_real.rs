@@ -1,0 +1,27 @@
+//! Diagnostic: dump rust-rendered synthetic images (one per class,
+//! repeated) as raw f32 LE to /tmp/rust_real.bin for cross-checking
+//! against the python generator/classifier.
+
+use tq_dit::data::SynthDataset;
+use tq_dit::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let ds = SynthDataset::new(16, 3, 8);
+    let mut rng = Rng::new(0);
+    let n = 64;
+    let il = ds.image_len();
+    let mut out = Vec::with_capacity(n * il);
+    let mut labels = Vec::new();
+    for i in 0..n {
+        let k = i % 8;
+        labels.push(k as u8);
+        let mut img = vec![0.0f32; il];
+        ds.render(k, &mut rng, &mut img);
+        out.extend_from_slice(&img);
+    }
+    let bytes: Vec<u8> = out.iter().flat_map(|v| v.to_le_bytes()).collect();
+    std::fs::write("/tmp/rust_real.bin", &bytes)?;
+    std::fs::write("/tmp/rust_real_labels.bin", &labels)?;
+    println!("wrote {} images", n);
+    Ok(())
+}

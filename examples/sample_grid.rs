@@ -1,0 +1,47 @@
+//! Fig. 6 reproduction — sample grids for visual comparison:
+//! TQ-DiT vs PTQ4DiT at the requested bit-width, plus an FP reference
+//! grid, written as PPM images.
+//!
+//! Run: cargo run --release --example sample_grid -- --wbits 8 --abits 8
+//! Outputs fig6_<method>_w<k>a<k>.ppm in --out-dir (default .).
+
+use std::path::Path;
+
+use tq_dit::coordinator::pipeline::{Method, Pipeline};
+use tq_dit::coordinator::QuantConfig;
+use tq_dit::metrics::images::write_grid_ppm;
+use tq_dit::util::cli::Args;
+use tq_dit::util::config::RunConfig;
+use tq_dit::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let cfg = RunConfig::from_args(&args)?;
+    let out_dir = args.str_or("out-dir", ".").to_string();
+    let rows = args.usize("rows", 4);
+    let cols = args.usize("cols", 8);
+    let n = rows * cols;
+
+    let pipe = Pipeline::new(cfg.clone())?;
+    let m = &pipe.rt.manifest.model;
+
+    // FP reference grid
+    let fp = QuantConfig::fp(pipe.groups.clone());
+    let imgs = pipe.sample_grid(&fp, n, cfg.seed ^ 0x9b1d)?;
+    let p = Path::new(&out_dir).join("fig6_fp.ppm");
+    write_grid_ppm(&p, &imgs, m.img_size, m.img_size, rows, cols)?;
+    println!("wrote {}", p.display());
+
+    for method in [Method::Ptq4Dit, Method::TqDit] {
+        let mut rng = Rng::new(cfg.seed ^ 0x5eed);
+        let (qc, _) = pipe.calibrate(method, &mut rng)?;
+        let imgs = pipe.sample_grid(&qc, n, cfg.seed ^ 0x9b1d)?;
+        let p = Path::new(&out_dir).join(format!(
+            "fig6_{}_w{}a{}.ppm", method.name(), cfg.wbits, cfg.abits));
+        write_grid_ppm(&p, &imgs, m.img_size, m.img_size, rows, cols)?;
+        println!("wrote {}", p.display());
+    }
+    println!("\npaper shape (Fig. 6): TQ-DiT grids stay sharp at W8A8 and \
+              preserve detail at W6A6 where PTQ4DiT degrades.");
+    Ok(())
+}

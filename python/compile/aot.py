@@ -1,0 +1,324 @@
+"""AOT exporter: python runs ONCE here; rust owns everything after.
+
+Produces in ``artifacts/``:
+
+  dit_fp_sample.hlo.txt   FP forward,   batch = SAMPLE_BATCH
+  dit_fp_calib.hlo.txt    FP forward,   batch = CALIB_BATCH
+  dit_quant.hlo.txt       quant forward (pallas kernels), SAMPLE_BATCH
+  dit_quant_calib.hlo.txt quant forward, CALIB_BATCH
+  dit_capture.hlo.txt     FP forward + per-layer inputs + ∂L/∂z (Fisher)
+  train_step.hlo.txt      fwd+bwd+Adam in one XLA computation
+  feature_net.hlo.txt     FID/sFID features (weights baked in)
+  classifier.hlo.txt      IS classifier (trained here, baked in)
+  weights.bin             pretrained DiT weights (f32 LE, param_order)
+  fid_ref.bin             reference FID/sFID gaussian stats
+  manifest.json           shapes, layouts, batch sizes — rust's map
+
+HLO *text* is the interchange format (NOT serialized protos): jax ≥ 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import features as feat_mod
+from . import train as train_mod
+from .config import (CALIB_BATCH, DIFFUSION, MODEL, SAMPLE_BATCH,
+                     TRAIN_BATCH, build_layers, qparam_layout)
+from .model import forward, forward_aux, layer_z_shapes, param_specs
+from .qmodel import forward_quant
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def export(fn, specs, path: str) -> None:
+    t0 = time.time()
+    text = to_hlo_text(jax.jit(fn).lower(*specs))
+    if "constant({...})" in text:
+        raise RuntimeError(
+            f"{path}: large constant elided by as_hlo_text — pass the "
+            "offending array as a runtime parameter instead of a closure")
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"[aot] wrote {path} ({len(text)/1e6:.2f} MB, "
+          f"{time.time()-t0:.1f}s)")
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--train-steps", type=int,
+                    default=int(os.environ.get("TQDIT_TRAIN_STEPS", "2000")))
+    ap.add_argument("--clf-steps", type=int,
+                    default=int(os.environ.get("TQDIT_CLF_STEPS", "400")))
+    ap.add_argument("--reuse-weights", action="store_true",
+                    default=os.environ.get("TQDIT_REUSE_WEIGHTS") == "1",
+                    help="skip pretraining if weights.bin already exists")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cfg, dc = MODEL, DIFFUSION
+    specs = param_specs(cfg)
+    pnames = [n for n, _ in specs]
+    npar = len(pnames)
+    _, qp_len = qparam_layout(cfg)
+    abar = jnp.asarray(train_mod.alpha_bars(dc), jnp.float32)
+
+    # ---- 1. pretrain the scaled-down DiT --------------------------------
+    wpath = os.path.join(args.out, "weights.bin")
+    expected_bytes = 4 * sum(int(np.prod(s)) for _, s in specs)
+    if (args.reuse_weights and os.path.exists(wpath)
+            and os.path.getsize(wpath) == expected_bytes):
+        print("[aot] reusing existing weights.bin (--reuse-weights)")
+        raw = np.fromfile(wpath, np.float32)
+        flat, off = [], 0
+        for _, shape in specs:
+            n = int(np.prod(shape))
+            flat.append(jnp.asarray(raw[off:off + n].reshape(shape)))
+            off += n
+        params = train_mod.unflatten_params(flat, cfg)
+    else:
+        print(f"[aot] pretraining DiT ({args.train_steps} steps)...")
+        params = train_mod.pretrain(cfg, dc, args.train_steps, TRAIN_BATCH)
+        flat = train_mod.flatten_params(params, cfg)
+        with open(wpath, "wb") as f:
+            for arr in flat:
+                f.write(np.asarray(arr, np.float32).tobytes())
+
+    # ---- 2. forward artifacts -------------------------------------------
+    pspecs = [f32(*shape) for _, shape in specs]
+
+    def fp_fn(*a):
+        p = dict(zip(pnames, a[:npar]))
+        x, t, y = a[npar], a[npar + 1], a[npar + 2]
+        return (forward(p, x, t, y, cfg),)
+
+    def quant_fn(*a):
+        p = dict(zip(pnames, a[:npar]))
+        x, t, y, qp = a[npar], a[npar + 1], a[npar + 2], a[npar + 3]
+        return (forward_quant(p, x, t, y, qp, cfg),)
+
+    for tag, B in (("sample", SAMPLE_BATCH), ("calib", CALIB_BATCH)):
+        io = [f32(B, cfg.img_size, cfg.img_size, cfg.channels),
+              i32(B), i32(B)]
+        export(fp_fn, pspecs + io,
+               os.path.join(args.out, f"dit_fp_{tag}.hlo.txt"))
+        name = "dit_quant.hlo.txt" if tag == "sample" \
+            else "dit_quant_calib.hlo.txt"
+        export(quant_fn, pspecs + io + [f32(qp_len)],
+               os.path.join(args.out, name))
+
+    # ---- 3. capture artifact (Fisher ingredients) ------------------------
+    B = CALIB_BATCH
+    zshapes = layer_z_shapes(cfg, B)
+    layers = build_layers(cfg)
+    cap_order = []          # (manifest name, source) after eps_pred
+    for layer in layers:
+        if layer.ltype == "linear":
+            cap_order.append((layer.sites[0].name, ("in", layer.sites[0].name)))
+        else:
+            cap_order.append((layer.sites[0].name, ("in", layer.sites[0].name)))
+            cap_order.append((layer.sites[1].name, ("in", layer.sites[1].name)))
+        cap_order.append((layer.name + ".grad", ("grad", layer.name)))
+
+    def capture_fn(*a):
+        p = dict(zip(pnames, a[:npar]))
+        x, t, y, eps_true = a[npar], a[npar + 1], a[npar + 2], a[npar + 3]
+        deltas0 = {k: jnp.zeros(s, jnp.float32) for k, s in zshapes.items()}
+
+        def loss_of(d):
+            pred, _ = forward_aux(p, x, t, y, cfg, deltas=d)
+            return jnp.mean((pred - eps_true) ** 2)
+
+        grads = jax.grad(loss_of)(deltas0)
+        pred, aux = forward_aux(p, x, t, y, cfg, collect=True)
+        outs = [pred]
+        for _, (kind, key) in cap_order:
+            outs.append(aux["in"][key] if kind == "in" else grads[key])
+        return tuple(outs)
+
+    io = [f32(B, cfg.img_size, cfg.img_size, cfg.channels), i32(B), i32(B),
+          f32(B, cfg.img_size, cfg.img_size, cfg.channels)]
+    export(capture_fn, pspecs + io,
+           os.path.join(args.out, "dit_capture.hlo.txt"))
+
+    # ---- 4. train-step artifact ------------------------------------------
+    # NOTE: everything a lowered fn closes over as a LARGE array constant
+    # (>8 elements or so) is elided to `constant({...})` by as_hlo_text
+    # and silently lost — so ᾱ and the metric-net weights are runtime
+    # PARAMETERS, exactly like the DiT weights.
+    TB = TRAIN_BATCH
+
+    def train_fn(*a):
+        p = dict(zip(pnames, a[:npar]))
+        m = dict(zip(pnames, a[npar:2 * npar]))
+        v = dict(zip(pnames, a[2 * npar:3 * npar]))
+        step = a[3 * npar]
+        x0, t, y, eps, abar_in = a[3 * npar + 1:3 * npar + 6]
+        new_p, new_m, new_v, loss = train_mod.train_step(
+            p, m, v, step, x0, t, y, eps, abar_in, cfg)
+        return tuple([new_p[k] for k in pnames]
+                     + [new_m[k] for k in pnames]
+                     + [new_v[k] for k in pnames] + [loss])
+
+    io = [i32(), f32(TB, cfg.img_size, cfg.img_size, cfg.channels),
+          i32(TB), i32(TB),
+          f32(TB, cfg.img_size, cfg.img_size, cfg.channels),
+          f32(dc.train_steps)]
+    export(train_fn, pspecs * 3 + io,
+           os.path.join(args.out, "train_step.hlo.txt"))
+
+    # ---- 5. metric networks (weights as runtime params) -------------------
+    FB = feat_mod.NUM_FEAT_BATCH
+    fparams = feat_mod.feature_params()
+    fnames = feat_mod.FEAT_PARAM_ORDER
+
+    def feat_fn(*a):
+        fp = dict(zip(fnames, a[:len(fnames)]))
+        return feat_mod.feature_net(fp, a[len(fnames)])
+
+    fspecs = [f32(*fparams[k].shape) for k in fnames]
+    export(feat_fn,
+           fspecs + [f32(FB, cfg.img_size, cfg.img_size, cfg.channels)],
+           os.path.join(args.out, "feature_net.hlo.txt"))
+
+    print(f"[aot] training IS classifier ({args.clf_steps} steps)...")
+    cparams, acc = feat_mod.train_classifier(cfg, steps=args.clf_steps)
+    cnames = feat_mod.CLF_PARAM_ORDER
+
+    def clf_fn(*a):
+        cp = dict(zip(cnames, a[:len(cnames)]))
+        return (feat_mod.classifier_logits(cp, a[len(cnames)]),)
+
+    cspecs = [f32(*cparams[k].shape) for k in cnames]
+    export(clf_fn,
+           cspecs + [f32(FB, cfg.img_size, cfg.img_size, cfg.channels)],
+           os.path.join(args.out, "classifier.hlo.txt"))
+
+    with open(os.path.join(args.out, "metric_weights.bin"), "wb") as f:
+        for k in fnames:
+            f.write(np.asarray(fparams[k], np.float32).tobytes())
+        for k in cnames:
+            f.write(np.asarray(cparams[k], np.float32).tobytes())
+
+    # ---- 6. reference FID stats -------------------------------------------
+    print("[aot] computing reference FID stats...")
+    mu_f, cov_f, mu_s, cov_s = feat_mod.reference_stats(cfg)
+    with open(os.path.join(args.out, "fid_ref.bin"), "wb") as f:
+        for arr in (mu_f, cov_f, mu_s, cov_s):
+            f.write(np.asarray(arr, np.float32).tobytes())
+
+    # ---- 7. manifest -------------------------------------------------------
+    offsets, _ = qparam_layout(cfg)
+    manifest = {
+        "model": {
+            "img_size": cfg.img_size, "channels": cfg.channels,
+            "patch": cfg.patch, "dim": cfg.dim, "depth": cfg.depth,
+            "heads": cfg.heads, "num_classes": cfg.num_classes,
+            "mlp_ratio": cfg.mlp_ratio, "freq_dim": cfg.freq_dim,
+            "tokens": cfg.tokens, "head_dim": cfg.head_dim,
+            "patch_dim": cfg.patch_dim,
+        },
+        "diffusion": {
+            "train_steps": dc.train_steps,
+            "beta_start": dc.beta_start, "beta_end": dc.beta_end,
+        },
+        "params": [{"name": n, "shape": list(s)} for n, s in specs],
+        "layers": [
+            {
+                "name": l.name, "ltype": l.ltype, "weight": l.weight,
+                "sites": [
+                    {"name": s.name, "kind": s.kind, "tgq": s.tgq,
+                     "qp_offset": offsets[s.name]}
+                    for s in l.sites
+                ],
+            }
+            for l in layers
+        ],
+        "qp_len": qp_len,
+        "batches": {"calib": CALIB_BATCH, "sample": SAMPLE_BATCH,
+                    "train": TRAIN_BATCH, "feat": FB},
+        "capture_outputs": [
+            {"name": name,
+             "shape": list(np.shape(np.empty(
+                 zshapes[src] if kind == "grad" else _in_shape(
+                     src, cfg, B)))) }
+            for name, (kind, src) in cap_order
+        ],
+        "feat_dim": feat_mod.FEAT_DIM,
+        "spat_dim": feat_mod.SPAT_DIM,
+        "classifier_acc": acc,
+        "metric_params": {
+            "feature": [{"name": k, "shape": list(fparams[k].shape)}
+                        for k in fnames],
+            "classifier": [{"name": k, "shape": list(cparams[k].shape)}
+                           for k in cnames],
+        },
+        "metric_weights": "metric_weights.bin",
+        "artifacts": {
+            "dit_fp_sample": "dit_fp_sample.hlo.txt",
+            "dit_fp_calib": "dit_fp_calib.hlo.txt",
+            "dit_quant": "dit_quant.hlo.txt",
+            "dit_quant_calib": "dit_quant_calib.hlo.txt",
+            "dit_capture": "dit_capture.hlo.txt",
+            "train_step": "train_step.hlo.txt",
+            "feature_net": "feature_net.hlo.txt",
+            "classifier": "classifier.hlo.txt",
+        },
+        "weights": "weights.bin",
+        "fid_ref": "fid_ref.bin",
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print("[aot] manifest.json written — artifacts complete")
+
+
+def _in_shape(site: str, cfg, B):
+    """Shape of a captured site input tensor."""
+    D, H, M = cfg.dim, cfg.heads, cfg.mlp_dim
+    N, hd = cfg.tokens, cfg.head_dim
+    if site == "patch_embed.x":
+        return (B, N, cfg.patch_dim)
+    if site == "final.x":
+        return (B, N, D)
+    parts = site.split(".")
+    kind = parts[1] + "." + parts[2]
+    table = {
+        "adaln.x": (B, D),
+        "qkv.x": (B, N, D),
+        "qk.a": (B, H, N, hd),
+        "qk.b": (B, H, N, hd),
+        "av.a": (B, H, N, N),
+        "av.b": (B, H, N, hd),
+        "proj.x": (B, N, D),
+        "fc1.x": (B, N, D),
+        "fc2.x": (B, N, M),
+    }
+    return table[kind]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,150 @@
+"""Model / diffusion / quantization-site configuration for TQ-DiT.
+
+This module is the single source of truth for the scaled-down DiT used in
+the reproduction (the paper uses DiT-XL-2 on ImageNet; see DESIGN.md §1
+for the substitution rationale). Everything the Rust coordinator needs is
+serialized into ``artifacts/manifest.json`` by ``aot.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Scaled-down DiT (same topology as DiT-XL-2, smaller dims)."""
+
+    img_size: int = 16          # pixel-space "latent" resolution
+    channels: int = 3
+    patch: int = 2              # DiT-XL-*2* → patch size 2
+    dim: int = 96               # hidden width
+    depth: int = 3              # number of DiT blocks
+    heads: int = 4
+    num_classes: int = 8
+    mlp_ratio: int = 4
+    freq_dim: int = 96          # sinusoidal timestep-embedding width
+
+    @property
+    def tokens(self) -> int:
+        side = self.img_size // self.patch
+        return side * side
+
+    @property
+    def head_dim(self) -> int:
+        assert self.dim % self.heads == 0
+        return self.dim // self.heads
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch * self.patch * self.channels
+
+    @property
+    def mlp_dim(self) -> int:
+        return self.dim * self.mlp_ratio
+
+
+@dataclasses.dataclass(frozen=True)
+class DiffusionConfig:
+    """DDPM with a linear beta schedule.
+
+    The model is trained on ``t ∈ [0, T)`` with T = ``train_steps``; the
+    paper's T=250 and T=100 samplers are obtained by running the full
+    schedule (250) or a strided respacing (100) — see rust ``sched::ddpm``.
+    """
+
+    train_steps: int = 250
+    beta_start: float = 1e-4
+    beta_end: float = 0.02
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSite:
+    """One activation quantization site.
+
+    ``kind`` ∈ {"uniform", "mrq_softmax", "mrq_gelu"}. Every site owns a
+    stride-4 slot in the flat ``qparams`` runtime input:
+
+      uniform:     [s, z, n_levels, _]          (bypass when s <= 0)
+      mrq_softmax: [s1, half_levels, _, _]      (s2 = 1/half_levels fixed)
+      mrq_gelu:    [s1, s2, half_levels, _]     (R1 negative / R2 positive)
+    """
+
+    name: str
+    kind: str
+    tgq: bool = False           # per-time-group parameters (post-softmax)
+
+
+@dataclasses.dataclass(frozen=True)
+class Layer:
+    """A quantizable compute layer (linear or matmul).
+
+    Linear layers own one activation site (their input X) plus a
+    host-side weight-quantization handle; MatMul layers own two
+    activation sites (A and B).
+    """
+
+    name: str
+    ltype: str                  # "linear" | "matmul"
+    sites: List[QuantSite]
+    weight: str = ""            # param name of the weight (linear only)
+
+
+QP_STRIDE = 4
+
+
+def build_layers(cfg: ModelConfig) -> List[Layer]:
+    """Enumerate quantizable layers in execution order.
+
+    Mirrors DESIGN.md §4. The post-GELU site is the X input of fc2; the
+    post-softmax site is the A input of the AV MatMul (MRQ + TGQ).
+    """
+    layers: List[Layer] = [
+        Layer("patch_embed", "linear",
+              [QuantSite("patch_embed.x", "uniform")], "patch_embed.w"),
+    ]
+    for b in range(cfg.depth):
+        p = f"blk{b}"
+        layers += [
+            Layer(f"{p}.adaln", "linear",
+                  [QuantSite(f"{p}.adaln.x", "uniform")], f"{p}.adaln.w"),
+            Layer(f"{p}.qkv", "linear",
+                  [QuantSite(f"{p}.qkv.x", "uniform")], f"{p}.qkv.w"),
+            Layer(f"{p}.qk", "matmul",
+                  [QuantSite(f"{p}.qk.a", "uniform"),
+                   QuantSite(f"{p}.qk.b", "uniform")]),
+            Layer(f"{p}.av", "matmul",
+                  [QuantSite(f"{p}.av.a", "mrq_softmax", tgq=True),
+                   QuantSite(f"{p}.av.b", "uniform")]),
+            Layer(f"{p}.proj", "linear",
+                  [QuantSite(f"{p}.proj.x", "uniform")], f"{p}.proj.w"),
+            Layer(f"{p}.fc1", "linear",
+                  [QuantSite(f"{p}.fc1.x", "uniform")], f"{p}.fc1.w"),
+            Layer(f"{p}.fc2", "linear",
+                  [QuantSite(f"{p}.fc2.x", "mrq_gelu")], f"{p}.fc2.w"),
+        ]
+    layers.append(
+        Layer("final", "linear",
+              [QuantSite("final.x", "uniform")], "final.w"))
+    return layers
+
+
+def qparam_layout(cfg: ModelConfig):
+    """Map each site name to its offset in the flat qparams vector."""
+    offsets = {}
+    off = 0
+    for layer in build_layers(cfg):
+        for site in layer.sites:
+            offsets[site.name] = off
+            off += QP_STRIDE
+    return offsets, off
+
+
+# Batch sizes baked into the AOT artifacts (fixed shapes).
+CALIB_BATCH = 8        # dit_capture / dit_fp_calib
+SAMPLE_BATCH = 16      # dit_fp / dit_quant (sampling path)
+TRAIN_BATCH = 64       # train_step
+
+MODEL = ModelConfig()
+DIFFUSION = DiffusionConfig()

@@ -1,0 +1,67 @@
+"""Synthetic class-conditional dataset (the ImageNet substitute).
+
+8 procedural pattern classes over 16x16x3 images in [-1, 1]. The same
+generator is implemented in rust (``data::synth``) with identical class
+parameterization so calibration tuples built on the rust side come from
+the same distribution the model was trained on (DESIGN.md §1).
+
+Class parameterization (k = 0..C-1):
+  * even k  → gaussian blob at a class-dependent position, class hue
+  * odd  k  → sinusoidal stripes with class-dependent frequency/angle
+Both get a small amount of additive noise.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .config import ModelConfig
+
+# Deterministic per-class geometry/hue tables (shared with rust).
+_PHI = 0.61803398875
+
+
+def class_params(k: int, num_classes: int):
+    """Deterministic class geometry — mirrored in rust data/synth.rs."""
+    u = (k * _PHI) % 1.0
+    cx = 0.25 + 0.5 * u
+    cy = 0.25 + 0.5 * ((u + 0.37) % 1.0)
+    sigma = 0.12 + 0.10 * ((k * 2654435761) % 97) / 97.0
+    hue = np.array([
+        0.5 + 0.5 * np.cos(2 * np.pi * (u + 0.00)),
+        0.5 + 0.5 * np.cos(2 * np.pi * (u + 1 / 3)),
+        0.5 + 0.5 * np.cos(2 * np.pi * (u + 2 / 3)),
+    ])
+    freq = 1.0 + (k % 4)
+    angle = np.pi * u
+    return cx, cy, sigma, hue, freq, angle
+
+
+def make_batch(rng: np.random.Generator, labels: np.ndarray,
+               cfg: ModelConfig) -> np.ndarray:
+    """Generate a batch of images (B, H, W, C) in [-1, 1] for labels."""
+    B = labels.shape[0]
+    H = W = cfg.img_size
+    ys, xs = np.meshgrid(
+        np.linspace(0.0, 1.0, H), np.linspace(0.0, 1.0, W), indexing="ij")
+    out = np.zeros((B, H, W, cfg.channels), dtype=np.float32)
+    for i in range(B):
+        k = int(labels[i])
+        cx, cy, sigma, hue, freq, angle = class_params(k, cfg.num_classes)
+        if k % 2 == 0:
+            d2 = (xs - cx) ** 2 + (ys - cy) ** 2
+            base = np.exp(-d2 / (2.0 * sigma * sigma))
+        else:
+            proj = np.cos(angle) * xs + np.sin(angle) * ys
+            base = 0.5 + 0.5 * np.sin(2.0 * np.pi * freq * proj)
+        img = base[..., None] * hue[None, None, :]
+        img = 2.0 * img - 1.0
+        img += 0.05 * rng.standard_normal(img.shape)
+        out[i] = np.clip(img, -1.0, 1.0)
+    return out.astype(np.float32)
+
+
+def sample_batch(rng: np.random.Generator, batch: int, cfg: ModelConfig):
+    """Random labels + images."""
+    labels = rng.integers(0, cfg.num_classes, size=(batch,))
+    return make_batch(rng, labels, cfg), labels.astype(np.int32)

@@ -1,0 +1,160 @@
+"""Metric networks: FID/sFID feature extractor + IS classifier.
+
+InceptionV3 substitute (DESIGN.md §1):
+
+* ``feature_net`` — a small *fixed random* CNN (random-feature FID is a
+  standard proxy). Returns (feat, spat): pooled features (B, 64) for FID
+  and a flattened mid-layer spatial map (B, 192) for sFID.
+* ``classifier``  — a small CNN *trained* on the synthetic classes at
+  artifact-build time; its softmax drives the Inception Score.
+
+Both are exported with weights baked in as constants, so the rust side
+only feeds images.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from .config import ModelConfig
+
+FEAT_DIM = 64
+SPAT_DIM = 192     # 4 x 4 x 12
+NUM_FEAT_BATCH = 64
+
+# Canonical parameter orders shared with the rust metric-weights loader
+# (aot.py writes metric_weights.bin in this order, f32 LE).
+FEAT_PARAM_ORDER = ["c1", "c2", "c3"]
+CLF_PARAM_ORDER = ["c1", "c2", "d", "b"]
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _avgpool2(x):
+    return jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID") / 4.0
+
+
+# --------------------------------------------------------------------------
+# FID / sFID feature net (fixed random weights)
+# --------------------------------------------------------------------------
+
+def feature_params(seed: int = 7) -> Dict[str, jnp.ndarray]:
+    rng = np.random.default_rng(seed)
+
+    def w(shape, fan_in):
+        return jnp.asarray(
+            rng.standard_normal(shape) / np.sqrt(fan_in), jnp.float32)
+
+    return {
+        "c1": w((3, 3, 3, 16), 27),
+        "c2": w((3, 3, 16, 12), 144),
+        "c3": w((3, 3, 12, 64), 108),
+    }
+
+
+def feature_net(fp: Dict[str, jnp.ndarray],
+                img: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """img (B,16,16,3) in [-1,1] → (feat (B,64), spat (B,192))."""
+    h = jax.nn.relu(_conv(img, fp["c1"]))      # (B,16,16,16)
+    h = _avgpool2(h)                           # (B, 8, 8,16)
+    s = jax.nn.relu(_conv(h, fp["c2"]))        # (B, 8, 8,12)
+    sp = _avgpool2(s)                          # (B, 4, 4,12)
+    spat = sp.reshape(sp.shape[0], SPAT_DIM)
+    f = jax.nn.relu(_conv(s, fp["c3"]))        # (B, 8, 8,64)
+    feat = jnp.mean(f, axis=(1, 2))            # (B,64)
+    return feat, spat
+
+
+# --------------------------------------------------------------------------
+# IS classifier (trained briefly on the synthetic classes)
+# --------------------------------------------------------------------------
+
+def classifier_init(cfg: ModelConfig, seed: int = 11):
+    rng = np.random.default_rng(seed)
+
+    def w(shape, fan_in):
+        return jnp.asarray(
+            rng.standard_normal(shape) / np.sqrt(fan_in), jnp.float32)
+
+    return {
+        "c1": w((3, 3, 3, 16), 27),
+        "c2": w((3, 3, 16, 32), 144),
+        "d": w((4 * 4 * 32, cfg.num_classes), 4 * 4 * 32),
+        "b": jnp.zeros((cfg.num_classes,), jnp.float32),
+    }
+
+
+def classifier_logits(cp, img: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.relu(_conv(img, cp["c1"], stride=2))   # (B,8,8,16)
+    h = jax.nn.relu(_conv(h, cp["c2"], stride=2))     # (B,4,4,32)
+    h = h.reshape(h.shape[0], -1)
+    return h @ cp["d"] + cp["b"]
+
+
+def train_classifier(cfg: ModelConfig, steps: int = 400, batch: int = 128,
+                     lr: float = 1e-3, seed: int = 13):
+    """Quick Adam training; returns params and final accuracy."""
+    rng = np.random.default_rng(seed)
+    cp = classifier_init(cfg)
+    m = {k: jnp.zeros_like(v) for k, v in cp.items()}
+    v = {k: jnp.zeros_like(val) for k, val in cp.items()}
+
+    def loss_fn(cp, img, y):
+        logits = classifier_logits(cp, img)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(logp[jnp.arange(y.shape[0]), y])
+
+    @jax.jit
+    def step_fn(cp, m, v, step, img, y):
+        loss, g = jax.value_and_grad(loss_fn)(cp, img, y)
+        sf = step.astype(jnp.float32) + 1.0
+        out_p, out_m, out_v = {}, {}, {}
+        for k in cp:
+            out_m[k] = 0.9 * m[k] + 0.1 * g[k]
+            out_v[k] = 0.999 * v[k] + 0.001 * g[k] * g[k]
+            mh = out_m[k] / (1 - 0.9 ** sf)
+            vh = out_v[k] / (1 - 0.999 ** sf)
+            out_p[k] = cp[k] - lr * mh / (jnp.sqrt(vh) + 1e-8)
+        return out_p, out_m, out_v, loss
+
+    for s in range(steps):
+        img, y = data_mod.sample_batch(rng, batch, cfg)
+        cp, m, v, loss = step_fn(cp, m, v, jnp.asarray(s, jnp.int32),
+                                 jnp.asarray(img), jnp.asarray(y))
+    img, y = data_mod.sample_batch(rng, 512, cfg)
+    acc = float(jnp.mean(
+        jnp.argmax(classifier_logits(cp, jnp.asarray(img)), -1) == y))
+    print(f"[classifier] final loss {float(loss):.4f} acc {acc:.3f}")
+    return cp, acc
+
+
+# --------------------------------------------------------------------------
+# reference FID statistics over the synthetic data distribution
+# --------------------------------------------------------------------------
+
+def reference_stats(cfg: ModelConfig, n: int = 4096, seed: int = 17):
+    """(mu_f, cov_f, mu_s, cov_s) over `n` real synthetic images."""
+    rng = np.random.default_rng(seed)
+    fp = feature_params()
+    fnet = jax.jit(lambda im: feature_net(fp, im))
+    feats, spats = [], []
+    bs = 256
+    for _ in range(n // bs):
+        img, _ = data_mod.sample_batch(rng, bs, cfg)
+        f, s = fnet(jnp.asarray(img))
+        feats.append(np.asarray(f))
+        spats.append(np.asarray(s))
+    F = np.concatenate(feats)
+    S = np.concatenate(spats)
+    return (F.mean(0), np.cov(F, rowvar=False),
+            S.mean(0), np.cov(S, rowvar=False))

@@ -1,0 +1,10 @@
+"""Pallas kernels (L1) + pure-jnp oracles.
+
+All kernels run with interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls); see DESIGN.md §2 for the TPU mapping.
+"""
+from .quant import fakequant_uniform
+from .mrq import mrq_softmax, mrq_gelu
+from .qmatmul import qmatmul
+
+__all__ = ["fakequant_uniform", "mrq_softmax", "mrq_gelu", "qmatmul"]

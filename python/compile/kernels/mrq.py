@@ -1,0 +1,88 @@
+"""L1 pallas kernels: multi-region quantization (paper §III-C), fused.
+
+Two kernels:
+
+* ``mrq_softmax`` — row softmax fused with the two-region post-softmax
+  fake-quant. The paper quantizes *after* softmax; fusing the quant as a
+  softmax epilogue saves one HBM round-trip of the (rows × N) attention
+  matrix — the TPU rethink of the paper's GPU post-hoc quant pass.
+  R1 = [0, 2^{k-1}·s1) step s1 (calibrated), R2 = [2^{k-1}·s1, 1] step
+  s2 = 1/2^{k-1} (fixed), exactly the twin-uniform design the paper
+  adapts from PTQ4ViT.
+
+* ``mrq_gelu`` — tanh-GELU fused with the two-region (negative/positive)
+  fake-quant: R1 = [-2^{k-1}·s1, 0] step s1, R2 = [0, 2^{k-1}·s2) step s2.
+
+Both are row-tiled over VMEM-sized blocks; softmax keeps the full
+reduction axis inside one block (N = tokens is small for DiT patches).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .quant import _pick_rows
+
+
+def _mrq_softmax_kernel(x_ref, qp_ref, o_ref):
+    x = x_ref[...]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+
+    s1, half = qp_ref[0, 0], qp_ref[0, 1]
+    safe1 = jnp.where(s1 > 0, s1, 1.0)
+    s2 = 1.0 / jnp.where(half > 0, half, 1.0)
+    boundary = half * s1
+    q1 = jnp.clip(jnp.round(p / safe1), 0.0, half - 1.0) * s1
+    q2 = jnp.clip(jnp.round(p / s2), 0.0, half) * s2
+    y = jnp.where(p < boundary, q1, q2)
+    o_ref[...] = jnp.where(s1 > 0, y, p)
+
+
+def _mrq_gelu_kernel(x_ref, qp_ref, o_ref):
+    x = x_ref[...]
+    c = 0.7978845608028654  # sqrt(2/pi)
+    g = 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x ** 3)))
+
+    s1, s2, half = qp_ref[0, 0], qp_ref[0, 1], qp_ref[0, 2]
+    safe1 = jnp.where(s1 > 0, s1, 1.0)
+    safe2 = jnp.where(s2 > 0, s2, 1.0)
+    q1 = jnp.clip(jnp.round(g / safe1), -half, 0.0) * s1
+    q2 = jnp.clip(jnp.round(g / safe2), 0.0, half - 1.0) * s2
+    y = jnp.where(g < 0, q1, q2)
+    o_ref[...] = jnp.where(s1 > 0, y, g)
+
+
+def _rowwise(kernel, x: jnp.ndarray, qp: jnp.ndarray) -> jnp.ndarray:
+    shape = x.shape
+    cols = shape[-1]
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, cols)
+    br = _pick_rows(rows)
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((rows, cols), x.dtype),
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, cols), lambda i: (i, 0)),
+            pl.BlockSpec((1, 4), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        interpret=True,
+    )(x2, qp.reshape(1, 4))
+    return out.reshape(shape)
+
+
+def mrq_softmax(logits: jnp.ndarray, qp: jnp.ndarray) -> jnp.ndarray:
+    """Softmax over the last axis + multi-region fake-quant (fused)."""
+    return _rowwise(_mrq_softmax_kernel, logits, qp)
+
+
+def mrq_gelu(x: jnp.ndarray, qp: jnp.ndarray) -> jnp.ndarray:
+    """tanh-GELU + two-region fake-quant (fused)."""
+    return _rowwise(_mrq_gelu_kernel, x, qp)

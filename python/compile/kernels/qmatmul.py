@@ -1,0 +1,58 @@
+"""L1 pallas kernel: batched fake-quantized matmul (the MatMul hot-spot).
+
+Computes ``fq(A) @ fq(B)`` for A: (G, M, K), B: (G, K, N) where G is a
+flattened batch×heads dimension. TPU mapping (DESIGN.md §2): grid over
+(G, M-tiles); each step fake-quantizes its A tile and the full-K B panel
+in VMEM (VPU elementwise) and runs the f32 ``jnp.dot`` accumulation that
+maps onto the MXU systolic array. For DiT attention shapes (K = head_dim
+or tokens, both small) the K axis stays resident, so there is no
+K-loop carry; the M-tile size bounds VMEM use.
+
+Uniform-slot encoding as in ``quant.py``; ``s <= 0`` bypasses the quant
+(used for the AV matmul whose A input was already MRQ-quantized inside
+the fused softmax kernel).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .quant import _pick_rows
+
+
+def _fq(x, s, z, levels):
+    safe = jnp.where(s > 0, s, 1.0)
+    q = jnp.clip(jnp.round(x / safe) + z, 0.0, levels)
+    return jnp.where(s > 0, (q - z) * s, x)
+
+
+def _qmm_kernel(a_ref, b_ref, qpa_ref, qpb_ref, o_ref):
+    a = a_ref[0]                       # (bm, K)
+    b = b_ref[0]                       # (K, N)
+    aq = _fq(a, qpa_ref[0, 0], qpa_ref[0, 1], qpa_ref[0, 2])
+    bq = _fq(b, qpb_ref[0, 0], qpb_ref[0, 1], qpb_ref[0, 2])
+    o_ref[0] = jnp.dot(aq, bq, preferred_element_type=jnp.float32)
+
+
+def qmatmul(a: jnp.ndarray, b: jnp.ndarray, qpa: jnp.ndarray,
+            qpb: jnp.ndarray) -> jnp.ndarray:
+    """Batched quantized matmul: (G, M, K) x (G, K, N) → (G, M, N)."""
+    G, M, K = a.shape
+    _, _, N = b.shape
+    bm = _pick_rows(M)
+    out = pl.pallas_call(
+        _qmm_kernel,
+        out_shape=jax.ShapeDtypeStruct((G, M, N), jnp.float32),
+        grid=(G, M // bm),
+        in_specs=[
+            pl.BlockSpec((1, bm, K), lambda g, i: (g, i, 0)),
+            pl.BlockSpec((1, K, N), lambda g, i: (g, 0, 0)),
+            pl.BlockSpec((1, 4), lambda g, i: (0, 0)),
+            pl.BlockSpec((1, 4), lambda g, i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, N), lambda g, i: (g, i, 0)),
+        interpret=True,
+    )(a, b, qpa.reshape(1, 4), qpb.reshape(1, 4))
+    return out

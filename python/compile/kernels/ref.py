@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for the pallas kernels — the correctness ground truth.
+
+Every pallas kernel in this package has an exact jnp twin here; pytest
+(``python/tests/test_kernels.py``) sweeps shapes/params with hypothesis
+and asserts allclose. The quantized model also has a kernel-free
+reference path (``qmodel.forward_quant_ref``) built from these.
+
+Quantization-parameter encoding (stride-4 slots, see config.QuantSite):
+  uniform:     qp = [s, z, n_levels, _]        bypass when s <= 0
+  mrq_softmax: qp = [s1, half_levels, _, _]    s2 = 1/half_levels fixed
+  mrq_gelu:    qp = [s1, s2, half_levels, _]   R1 negative / R2 positive
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def fakequant_uniform_ref(x: jnp.ndarray, qp: jnp.ndarray) -> jnp.ndarray:
+    """Uniform asymmetric fake-quant, eq. (5) of the paper."""
+    s, z, levels = qp[0], qp[1], qp[2]
+    q = jnp.clip(jnp.round(x / jnp.where(s > 0, s, 1.0)) + z, 0.0, levels)
+    y = (q - z) * s
+    return jnp.where(s > 0, y, x)
+
+
+def mrq_softmax_ref(logits: jnp.ndarray, qp: jnp.ndarray) -> jnp.ndarray:
+    """Softmax over the last axis fused with multi-region fake-quant.
+
+    Region split (paper §III-C): R1 = [0, 2^{k-1}·s1) with step s1,
+    R2 = [2^{k-1}·s1, 1] with fixed step s2 = 1/2^{k-1}.
+    """
+    p = jax.nn.softmax(logits, axis=-1)
+    s1, half = qp[0], qp[1]
+    s2 = 1.0 / jnp.where(half > 0, half, 1.0)
+    boundary = half * s1
+    q1 = jnp.clip(jnp.round(p / jnp.where(s1 > 0, s1, 1.0)), 0.0,
+                  half - 1.0) * s1
+    q2 = jnp.clip(jnp.round(p / s2), 0.0, half) * s2
+    y = jnp.where(p < boundary, q1, q2)
+    return jnp.where(s1 > 0, y, p)
+
+
+def gelu_ref(x: jnp.ndarray) -> jnp.ndarray:
+    c = math.sqrt(2.0 / math.pi)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x ** 3)))
+
+
+def mrq_gelu_ref(x: jnp.ndarray, qp: jnp.ndarray) -> jnp.ndarray:
+    """tanh-GELU fused with two-region fake-quant.
+
+    R1 = [-2^{k-1}·s1, 0] (negative tail, step s1);
+    R2 = [0, 2^{k-1}·s2)  (positive side, step s2).
+    """
+    g = gelu_ref(x)
+    s1, s2, half = qp[0], qp[1], qp[2]
+    q1 = jnp.clip(jnp.round(g / jnp.where(s1 > 0, s1, 1.0)),
+                  -half, 0.0) * s1
+    q2 = jnp.clip(jnp.round(g / jnp.where(s2 > 0, s2, 1.0)),
+                  0.0, half - 1.0) * s2
+    y = jnp.where(g < 0, q1, q2)
+    return jnp.where(s1 > 0, y, g)
+
+
+def qmatmul_ref(a: jnp.ndarray, b: jnp.ndarray, qpa: jnp.ndarray,
+                qpb: jnp.ndarray) -> jnp.ndarray:
+    """Batched fake-quantized matmul: fq(a) @ fq(b), (G,M,K)x(G,K,N)."""
+    aq = fakequant_uniform_ref(a, qpa)
+    bq = fakequant_uniform_ref(b, qpb)
+    return jnp.einsum("gmk,gkn->gmn", aq, bq)

@@ -1,0 +1,258 @@
+"""L2: full-precision DiT in JAX (differentiable; train + Fisher capture).
+
+Same topology as DiT [Peebles & Xie 2023]: patchify → N adaLN-Zero
+transformer blocks (MHSA + pointwise-FF with GELU) conditioned on
+(timestep, class) → final adaLN linear → unpatchify, predicting the
+noise ε. The quantized variant (``qmodel.py``) reuses the exact same
+parameter tree and layer enumeration so quantization sites line up.
+
+Parameters are a flat ``{name: array}`` dict; ``param_order`` fixes the
+flattened ordering that the AOT artifacts and the rust ``weights.bin``
+loader share.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+Params = Dict[str, jnp.ndarray]
+
+
+# --------------------------------------------------------------------------
+# parameter tree
+# --------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """(name, shape) list in the canonical flat order."""
+    D, F, M = cfg.dim, cfg.freq_dim, cfg.mlp_dim
+    specs: List[Tuple[str, Tuple[int, ...]]] = [
+        ("patch_embed.w", (cfg.patch_dim, D)),
+        ("patch_embed.b", (D,)),
+        ("t_mlp.w1", (F, D)),
+        ("t_mlp.b1", (D,)),
+        ("t_mlp.w2", (D, D)),
+        ("t_mlp.b2", (D,)),
+        ("y_embed.w", (cfg.num_classes, D)),
+        ("pos_embed", (cfg.tokens, D)),
+    ]
+    for b in range(cfg.depth):
+        p = f"blk{b}"
+        specs += [
+            (f"{p}.adaln.w", (D, 6 * D)),
+            (f"{p}.adaln.b", (6 * D,)),
+            (f"{p}.qkv.w", (D, 3 * D)),
+            (f"{p}.qkv.b", (3 * D,)),
+            (f"{p}.proj.w", (D, D)),
+            (f"{p}.proj.b", (D,)),
+            (f"{p}.fc1.w", (D, M)),
+            (f"{p}.fc1.b", (M,)),
+            (f"{p}.fc2.w", (M, D)),
+            (f"{p}.fc2.b", (D,)),
+        ]
+    specs += [
+        ("final.adaln.w", (D, 2 * D)),
+        ("final.adaln.b", (2 * D,)),
+        ("final.w", (D, cfg.patch_dim)),
+        ("final.b", (cfg.patch_dim,)),
+    ]
+    return specs
+
+
+def param_order(cfg: ModelConfig) -> List[str]:
+    return [n for n, _ in param_specs(cfg)]
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Params:
+    """Xavier-uniform linears; adaLN-Zero (modulation weights start at 0)."""
+    params: Params = {}
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(".b") or name.endswith("b1") or name.endswith("b2"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif "adaln.w" in name:
+            # adaLN-Zero: zero-init modulation so each block starts as
+            # identity (gates are 0) — matches the DiT paper.
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif name in ("pos_embed", "y_embed.w"):
+            params[name] = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+        else:
+            fan_in, fan_out = shape[0], shape[-1]
+            lim = math.sqrt(6.0 / (fan_in + fan_out))
+            params[name] = jax.random.uniform(
+                sub, shape, jnp.float32, -lim, lim)
+    return params
+
+
+# --------------------------------------------------------------------------
+# building blocks (pure jnp — differentiable)
+# --------------------------------------------------------------------------
+
+def timestep_embedding(t: jnp.ndarray, freq_dim: int,
+                       max_period: float = 10_000.0) -> jnp.ndarray:
+    """Sinusoidal timestep embedding (DDPM / DiT convention)."""
+    half = freq_dim // 2
+    freqs = jnp.exp(
+        -math.log(max_period) * jnp.arange(half, dtype=jnp.float32) / half)
+    args = t.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+
+
+def layer_norm(x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """LayerNorm without learned affine (adaLN supplies modulation)."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps)
+
+
+def gelu(x: jnp.ndarray) -> jnp.ndarray:
+    """tanh-approximated GELU (matches the pallas kernel)."""
+    c = math.sqrt(2.0 / math.pi)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x ** 3)))
+
+
+def silu(x: jnp.ndarray) -> jnp.ndarray:
+    return x * jax.nn.sigmoid(x)
+
+
+def patchify(x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """(B, H, W, C) → (B, N, patch_dim)."""
+    B = x.shape[0]
+    P, S = cfg.patch, cfg.img_size // cfg.patch
+    x = x.reshape(B, S, P, S, P, cfg.channels)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(B, S * S, cfg.patch_dim)
+
+
+def unpatchify(tok: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """(B, N, patch_dim) → (B, H, W, C)."""
+    B = tok.shape[0]
+    P, S = cfg.patch, cfg.img_size // cfg.patch
+    x = tok.reshape(B, S, S, P, P, cfg.channels)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(B, cfg.img_size, cfg.img_size, cfg.channels)
+
+
+# --------------------------------------------------------------------------
+# forward pass with optional capture / delta injection (for Fisher)
+# --------------------------------------------------------------------------
+
+def forward_aux(params: Params, x: jnp.ndarray, t: jnp.ndarray,
+                y: jnp.ndarray, cfg: ModelConfig,
+                deltas: Optional[Params] = None,
+                collect: bool = False):
+    """FP forward.
+
+    ``deltas`` — optional {layer_name: tensor} added to each quantizable
+    layer's pre-activation output z; ``jax.grad`` w.r.t. these at zero
+    yields ∂L/∂z, the diagonal-Fisher ingredient of eq. (15)/(16).
+
+    ``collect=True`` additionally returns each quantizable layer's
+    inputs (X for linears; A, B for matmuls) so the rust coordinator can
+    evaluate the HO objective host-side.
+
+    Returns (eps_pred, aux) where aux = {"in": {site_name: tensor}}.
+    """
+    B = x.shape[0]
+    D, H = cfg.dim, cfg.heads
+    hd, N = cfg.head_dim, cfg.tokens
+    aux_in: Dict[str, jnp.ndarray] = {}
+
+    def dz(name: str, z: jnp.ndarray) -> jnp.ndarray:
+        if deltas is not None and name in deltas:
+            z = z + deltas[name]
+        return z
+
+    def cap(name: str, v: jnp.ndarray) -> None:
+        if collect:
+            aux_in[name] = v
+
+    # --- embeddings -------------------------------------------------------
+    ptok = patchify(x, cfg)
+    cap("patch_embed.x", ptok)
+    tok = dz("patch_embed",
+             ptok @ params["patch_embed.w"] + params["patch_embed.b"])
+    tok = tok + params["pos_embed"][None]
+
+    temb = timestep_embedding(t, cfg.freq_dim)
+    c = silu(temb @ params["t_mlp.w1"] + params["t_mlp.b1"])
+    c = c @ params["t_mlp.w2"] + params["t_mlp.b2"]
+    c = c + params["y_embed.w"][y]
+
+    # --- DiT blocks -------------------------------------------------------
+    for b in range(cfg.depth):
+        p = f"blk{b}"
+        cvec = silu(c)
+        cap(f"{p}.adaln.x", cvec)
+        mod = dz(f"{p}.adaln",
+                 cvec @ params[f"{p}.adaln.w"] + params[f"{p}.adaln.b"])
+        sh1, sc1, g1, sh2, sc2, g2 = jnp.split(mod, 6, axis=-1)
+
+        # MHSA
+        h = layer_norm(tok) * (1.0 + sc1[:, None, :]) + sh1[:, None, :]
+        cap(f"{p}.qkv.x", h)
+        qkv = dz(f"{p}.qkv", h @ params[f"{p}.qkv.w"] + params[f"{p}.qkv.b"])
+        qkv = qkv.reshape(B, N, 3, H, hd).transpose(2, 0, 3, 1, 4)
+        q, k, v = qkv[0], qkv[1], qkv[2]          # (B, H, N, hd)
+        cap(f"{p}.qk.a", q)
+        cap(f"{p}.qk.b", k)
+        att = dz(f"{p}.qk", jnp.einsum("bhnd,bhmd->bhnm", q, k))
+        att = att / math.sqrt(hd)
+        sm = jax.nn.softmax(att, axis=-1)
+        cap(f"{p}.av.a", sm)
+        cap(f"{p}.av.b", v)
+        o = dz(f"{p}.av", jnp.einsum("bhnm,bhmd->bhnd", sm, v))
+        o = o.transpose(0, 2, 1, 3).reshape(B, N, D)
+        cap(f"{p}.proj.x", o)
+        o = dz(f"{p}.proj", o @ params[f"{p}.proj.w"] + params[f"{p}.proj.b"])
+        tok = tok + g1[:, None, :] * o
+
+        # pointwise feed-forward
+        h2 = layer_norm(tok) * (1.0 + sc2[:, None, :]) + sh2[:, None, :]
+        cap(f"{p}.fc1.x", h2)
+        u = dz(f"{p}.fc1", h2 @ params[f"{p}.fc1.w"] + params[f"{p}.fc1.b"])
+        g = gelu(u)
+        cap(f"{p}.fc2.x", g)
+        m = dz(f"{p}.fc2", g @ params[f"{p}.fc2.w"] + params[f"{p}.fc2.b"])
+        tok = tok + g2[:, None, :] * m
+
+    # --- final layer ------------------------------------------------------
+    fmod = silu(c) @ params["final.adaln.w"] + params["final.adaln.b"]
+    fsh, fsc = jnp.split(fmod, 2, axis=-1)
+    h = layer_norm(tok) * (1.0 + fsc[:, None, :]) + fsh[:, None, :]
+    cap("final.x", h)
+    out = dz("final", h @ params["final.w"] + params["final.b"])
+    eps = unpatchify(out, cfg)
+    return eps, {"in": aux_in}
+
+
+def forward(params: Params, x: jnp.ndarray, t: jnp.ndarray,
+            y: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Plain FP forward: predicted noise ε_θ(x_t, t, y)."""
+    eps, _ = forward_aux(params, x, t, y, cfg)
+    return eps
+
+
+def layer_z_shapes(cfg: ModelConfig, batch: int) -> Dict[str, Tuple[int, ...]]:
+    """Pre-activation output shapes per quantizable layer (for deltas)."""
+    D, H, M = cfg.dim, cfg.heads, cfg.mlp_dim
+    N, hd = cfg.tokens, cfg.head_dim
+    shapes: Dict[str, Tuple[int, ...]] = {
+        "patch_embed": (batch, N, D),
+        "final": (batch, N, cfg.patch_dim),
+    }
+    for b in range(cfg.depth):
+        p = f"blk{b}"
+        shapes[f"{p}.adaln"] = (batch, 6 * D)
+        shapes[f"{p}.qkv"] = (batch, N, 3 * D)
+        shapes[f"{p}.qk"] = (batch, H, N, N)
+        shapes[f"{p}.av"] = (batch, H, N, hd)
+        shapes[f"{p}.proj"] = (batch, N, D)
+        shapes[f"{p}.fc1"] = (batch, N, M)
+        shapes[f"{p}.fc2"] = (batch, N, D)
+    return shapes

@@ -1,0 +1,114 @@
+"""L2: quantized DiT forward — quantization parameters are RUNTIME inputs.
+
+The quantized forward mirrors ``model.forward`` exactly, but every
+quantization site (config.build_layers) applies fake-quant driven by a
+flat f32 ``qparams`` vector whose layout is ``config.qparam_layout``.
+``s <= 0`` in a slot bypasses that site (full precision), so a single
+AOT-compiled executable serves FP, any uniform/MRQ configuration, every
+bit-width, and every TGQ time-group — the rust coordinator just swaps
+the vector between calls. Weights arrive already fake-quantized (weight
+quantization is host-side in rust; see DESIGN.md §3).
+
+Two interchangeable op sets:
+  * ``PALLAS_OPS`` — the pallas kernels (what the shipped artifact uses)
+  * ``REF_OPS``    — pure-jnp oracles (pytest equivalence target)
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, NamedTuple
+
+import jax.numpy as jnp
+
+from .config import ModelConfig, QP_STRIDE, qparam_layout
+from .kernels import fakequant_uniform, mrq_gelu, mrq_softmax, qmatmul
+from .kernels import ref as kref
+from .model import (Params, layer_norm, patchify, silu, timestep_embedding,
+                    unpatchify)
+
+
+class QuantOps(NamedTuple):
+    fakequant: Callable
+    mrq_softmax: Callable
+    mrq_gelu: Callable
+    qmatmul: Callable
+
+
+PALLAS_OPS = QuantOps(fakequant_uniform, mrq_softmax, mrq_gelu, qmatmul)
+REF_OPS = QuantOps(kref.fakequant_uniform_ref, kref.mrq_softmax_ref,
+                   kref.mrq_gelu_ref, kref.qmatmul_ref)
+
+
+def forward_quant(params: Params, x: jnp.ndarray, t: jnp.ndarray,
+                  y: jnp.ndarray, qparams: jnp.ndarray, cfg: ModelConfig,
+                  ops: QuantOps = PALLAS_OPS) -> jnp.ndarray:
+    """Quantized ε_θ(x_t, t, y; Δ). ``qparams``: (qp_len,) f32."""
+    B = x.shape[0]
+    D, H = cfg.dim, cfg.heads
+    hd, N = cfg.head_dim, cfg.tokens
+    offsets, _ = qparam_layout(cfg)
+
+    def qp(site: str) -> jnp.ndarray:
+        off = offsets[site]
+        return jnp.asarray(qparams[off:off + QP_STRIDE])
+
+    bypass = jnp.zeros((QP_STRIDE,), jnp.float32)
+
+    # --- embeddings (t/y-embedding MLPs stay FP — see DESIGN.md §4) ------
+    ptok = ops.fakequant(patchify(x, cfg), qp("patch_embed.x"))
+    tok = ptok @ params["patch_embed.w"] + params["patch_embed.b"]
+    tok = tok + params["pos_embed"][None]
+
+    temb = timestep_embedding(t, cfg.freq_dim)
+    c = silu(temb @ params["t_mlp.w1"] + params["t_mlp.b1"])
+    c = c @ params["t_mlp.w2"] + params["t_mlp.b2"]
+    c = c + params["y_embed.w"][y]
+
+    # --- DiT blocks -------------------------------------------------------
+    for b in range(cfg.depth):
+        p = f"blk{b}"
+        cvec = ops.fakequant(silu(c), qp(f"{p}.adaln.x"))
+        mod = cvec @ params[f"{p}.adaln.w"] + params[f"{p}.adaln.b"]
+        sh1, sc1, g1, sh2, sc2, g2 = jnp.split(mod, 6, axis=-1)
+
+        # MHSA: QK^T and AV are MatMul layers (paper Alg. 1 line 23);
+        # post-softmax is the MRQ+TGQ site, fused into the softmax kernel.
+        h = layer_norm(tok) * (1.0 + sc1[:, None, :]) + sh1[:, None, :]
+        hq = ops.fakequant(h, qp(f"{p}.qkv.x"))
+        qkv = hq @ params[f"{p}.qkv.w"] + params[f"{p}.qkv.b"]
+        qkv = qkv.reshape(B, N, 3, H, hd).transpose(2, 0, 3, 1, 4)
+        q, k, v = qkv[0], qkv[1], qkv[2]                  # (B, H, N, hd)
+
+        att = ops.qmatmul(q.reshape(B * H, N, hd),
+                          k.transpose(0, 1, 3, 2).reshape(B * H, hd, N),
+                          qp(f"{p}.qk.a"), qp(f"{p}.qk.b"))
+        att = att / math.sqrt(hd)
+        sm = ops.mrq_softmax(att, qp(f"{p}.av.a"))        # fused MRQ+TGQ
+        o = ops.qmatmul(sm, v.reshape(B * H, N, hd),
+                        bypass, qp(f"{p}.av.b"))
+        o = o.reshape(B, H, N, hd).transpose(0, 2, 1, 3).reshape(B, N, D)
+        oq = ops.fakequant(o, qp(f"{p}.proj.x"))
+        o = oq @ params[f"{p}.proj.w"] + params[f"{p}.proj.b"]
+        tok = tok + g1[:, None, :] * o
+
+        # pointwise feed-forward; fc2's input site IS the post-GELU MRQ.
+        h2 = layer_norm(tok) * (1.0 + sc2[:, None, :]) + sh2[:, None, :]
+        h2q = ops.fakequant(h2, qp(f"{p}.fc1.x"))
+        u = h2q @ params[f"{p}.fc1.w"] + params[f"{p}.fc1.b"]
+        g = ops.mrq_gelu(u, qp(f"{p}.fc2.x"))             # fused GELU+MRQ
+        m = g @ params[f"{p}.fc2.w"] + params[f"{p}.fc2.b"]
+        tok = tok + g2[:, None, :] * m
+
+    # --- final layer ------------------------------------------------------
+    fmod = silu(c) @ params["final.adaln.w"] + params["final.adaln.b"]
+    fsh, fsc = jnp.split(fmod, 2, axis=-1)
+    h = layer_norm(tok) * (1.0 + fsc[:, None, :]) + fsh[:, None, :]
+    hq = ops.fakequant(h, qp("final.x"))
+    out = hq @ params["final.w"] + params["final.b"]
+    return unpatchify(out, cfg)
+
+
+def forward_quant_ref(params: Params, x, t, y, qparams, cfg: ModelConfig):
+    """Kernel-free reference path (oracles only) for pytest equivalence."""
+    return forward_quant(params, x, t, y, qparams, cfg, ops=REF_OPS)

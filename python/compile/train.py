@@ -1,0 +1,108 @@
+"""Training utilities: DDPM loss, Adam, train step, build-time pretraining.
+
+``train_step`` is also AOT-exported (``train_step.hlo.txt``) so the rust
+example ``train_from_rust.rs`` can continue training the model through
+PJRT with no python on the path — the loss-curve E2E driver.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from .config import DiffusionConfig, ModelConfig
+from .model import Params, forward, init_params, param_order
+
+Adam = Tuple[Params, Params]   # (m, v)
+
+
+# --------------------------------------------------------------------------
+# diffusion schedule (mirrored in rust sched/ddpm.rs)
+# --------------------------------------------------------------------------
+
+def betas(dc: DiffusionConfig) -> np.ndarray:
+    return np.linspace(dc.beta_start, dc.beta_end, dc.train_steps,
+                       dtype=np.float64)
+
+
+def alpha_bars(dc: DiffusionConfig) -> np.ndarray:
+    return np.cumprod(1.0 - betas(dc))
+
+
+def q_sample(x0: jnp.ndarray, t: jnp.ndarray, eps: jnp.ndarray,
+             abar: jnp.ndarray) -> jnp.ndarray:
+    """Forward diffusion x_t = √ᾱ_t x₀ + √(1-ᾱ_t) ε (eq. 1 iterated)."""
+    a = abar[t].astype(jnp.float32)[:, None, None, None]
+    return jnp.sqrt(a) * x0 + jnp.sqrt(1.0 - a) * eps
+
+
+def loss_fn(params: Params, x0, t, y, eps, abar, cfg: ModelConfig):
+    """DDPM noise-prediction MSE, eq. (11)."""
+    xt = q_sample(x0, t, eps, abar)
+    pred = forward(params, xt, t, y, cfg)
+    return jnp.mean((pred - eps) ** 2)
+
+
+# --------------------------------------------------------------------------
+# Adam (no optax offline — hand-rolled, mirrored by the rust driver)
+# --------------------------------------------------------------------------
+
+def adam_init(params: Params) -> Adam:
+    z = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return z, {k: jnp.zeros_like(v) for k, v in params.items()}
+
+
+def train_step(params: Params, m: Params, v: Params, step: jnp.ndarray,
+               x0, t, y, eps, abar, cfg: ModelConfig,
+               lr: float = 2e-3, b1: float = 0.9, b2: float = 0.999,
+               eps_adam: float = 1e-8):
+    """One Adam step on the DDPM loss. Returns (params, m, v, loss)."""
+    loss, grads = jax.value_and_grad(loss_fn)(params, x0, t, y, eps, abar,
+                                              cfg)
+    stepf = step.astype(jnp.float32) + 1.0
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        g = grads[k]
+        new_m[k] = b1 * m[k] + (1.0 - b1) * g
+        new_v[k] = b2 * v[k] + (1.0 - b2) * g * g
+        mhat = new_m[k] / (1.0 - b1 ** stepf)
+        vhat = new_v[k] / (1.0 - b2 ** stepf)
+        new_p[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + eps_adam)
+    return new_p, new_m, new_v, loss
+
+
+def pretrain(cfg: ModelConfig, dc: DiffusionConfig, steps: int,
+             batch: int, seed: int = 0, log_every: int = 200) -> Params:
+    """Build-time pretraining of the scaled-down DiT on synthetic data."""
+    rng = np.random.default_rng(seed)
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    m, v = adam_init(params)
+    abar = jnp.asarray(alpha_bars(dc), jnp.float32)
+
+    jit_step = jax.jit(
+        lambda p, m_, v_, s, x0, t, y, e: train_step(
+            p, m_, v_, s, x0, t, y, e, abar, cfg))
+
+    for step in range(steps):
+        x0, y = data_mod.sample_batch(rng, batch, cfg)
+        t = rng.integers(0, dc.train_steps, size=(batch,))
+        eps = rng.standard_normal(x0.shape).astype(np.float32)
+        params, m, v, loss = jit_step(
+            params, m, v, jnp.asarray(step, jnp.int32),
+            jnp.asarray(x0), jnp.asarray(t, jnp.int32),
+            jnp.asarray(y), jnp.asarray(eps))
+        if step % log_every == 0 or step == steps - 1:
+            print(f"[pretrain] step {step:5d} loss {float(loss):.4f}")
+    return params
+
+
+def flatten_params(params: Params, cfg: ModelConfig) -> List[jnp.ndarray]:
+    return [params[k] for k in param_order(cfg)]
+
+
+def unflatten_params(flat: List[jnp.ndarray], cfg: ModelConfig) -> Params:
+    return dict(zip(param_order(cfg), flat))

@@ -1,0 +1,138 @@
+"""AOT contract tests: manifest layout vs the rust loader's assumptions,
+HLO-text lowering sanity, and (when artifacts exist) on-disk consistency.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.config import (CALIB_BATCH, MODEL, QP_STRIDE, build_layers,
+                            qparam_layout)
+from compile.model import param_specs
+
+jax.config.update("jax_platform_name", "cpu")
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_hlo_text_export_roundtrip(tmp_path):
+    """A tiny jitted fn lowers to parseable HLO text via the same path
+    aot.py uses for the real artifacts."""
+    def f(a, b):
+        return (jnp.dot(a, b) + 1.0,)
+
+    spec = [jax.ShapeDtypeStruct((4, 4), jnp.float32)] * 2
+    text = aot.to_hlo_text(jax.jit(f).lower(*spec))
+    assert "HloModule" in text
+    assert "f32[4,4]" in text
+    p = tmp_path / "t.hlo.txt"
+    p.write_text(text)
+    assert p.stat().st_size > 100
+
+
+def test_in_shape_covers_every_site():
+    layers = build_layers(MODEL)
+    for layer in layers:
+        for site in layer.sites:
+            shape = aot._in_shape(site.name, MODEL, CALIB_BATCH)
+            assert all(d > 0 for d in shape), site.name
+
+
+def test_in_shape_matches_model_dims():
+    B = CALIB_BATCH
+    assert aot._in_shape("patch_embed.x", MODEL, B) == \
+        (B, MODEL.tokens, MODEL.patch_dim)
+    assert aot._in_shape("blk0.qk.a", MODEL, B) == \
+        (B, MODEL.heads, MODEL.tokens, MODEL.head_dim)
+    assert aot._in_shape("blk1.av.a", MODEL, B) == \
+        (B, MODEL.heads, MODEL.tokens, MODEL.tokens)
+    assert aot._in_shape("blk2.fc2.x", MODEL, B) == \
+        (B, MODEL.tokens, MODEL.mlp_dim)
+
+
+def test_mrq_sites_are_where_the_paper_puts_them():
+    layers = build_layers(MODEL)
+    softmax_sites = [s for l in layers for s in l.sites
+                     if s.kind == "mrq_softmax"]
+    gelu_sites = [s for l in layers for s in l.sites if s.kind == "mrq_gelu"]
+    assert len(softmax_sites) == MODEL.depth
+    assert len(gelu_sites) == MODEL.depth
+    assert all(s.tgq for s in softmax_sites)       # TGQ on post-softmax
+    assert not any(s.tgq for s in gelu_sites)      # not on post-GELU
+    assert all(".av.a" in s.name for s in softmax_sites)
+    assert all(".fc2.x" in s.name for s in gelu_sites)
+
+
+# ---------------------------------------------------------------------------
+# on-disk artifact consistency (skipped until `make artifacts` has run)
+# ---------------------------------------------------------------------------
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built")
+
+
+@needs_artifacts
+def test_manifest_matches_config():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["model"]["dim"] == MODEL.dim
+    assert man["model"]["depth"] == MODEL.depth
+    assert man["model"]["tokens"] == MODEL.tokens
+    offsets, qp_len = qparam_layout(MODEL)
+    assert man["qp_len"] == qp_len
+    man_sites = {s["name"]: s["qp_offset"]
+                 for l in man["layers"] for s in l["sites"]}
+    assert man_sites == offsets
+
+
+@needs_artifacts
+def test_weights_bin_size_matches_specs():
+    size = os.path.getsize(os.path.join(ART, "weights.bin"))
+    total = sum(int(np.prod(s)) for _, s in param_specs(MODEL))
+    assert size == total * 4
+
+
+@needs_artifacts
+def test_all_artifacts_exist_and_nonempty():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    for name, fname in man["artifacts"].items():
+        p = os.path.join(ART, fname)
+        assert os.path.exists(p), name
+        assert os.path.getsize(p) > 1000, name
+        with open(p) as fh:
+            head = fh.read(200)
+        assert "HloModule" in head, name
+
+
+@needs_artifacts
+def test_fid_ref_size():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    fd, sd = man["feat_dim"], man["spat_dim"]
+    size = os.path.getsize(os.path.join(ART, man["fid_ref"]))
+    assert size == (fd + fd * fd + sd + sd * sd) * 4
+
+
+@needs_artifacts
+def test_capture_output_count():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    layers = build_layers(MODEL)
+    expect = sum(
+        (1 if l.ltype == "linear" else 2) + 1 for l in layers)
+    assert len(man["capture_outputs"]) == expect
+
+
+@needs_artifacts
+def test_qp_offsets_stride_aligned():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    offs = sorted(s["qp_offset"] for l in man["layers"] for s in l["sites"])
+    assert offs == list(range(0, man["qp_len"], QP_STRIDE))

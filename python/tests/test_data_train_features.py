@@ -1,0 +1,150 @@
+"""Synthetic dataset, training utilities and metric networks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import data as data_mod
+from compile import features as feat_mod
+from compile import train as train_mod
+from compile.config import DIFFUSION, MODEL
+from compile.model import init_params
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = MODEL
+DC = DIFFUSION
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def test_images_in_range_and_shaped():
+    rng = np.random.default_rng(0)
+    img, y = data_mod.sample_batch(rng, 16, CFG)
+    assert img.shape == (16, CFG.img_size, CFG.img_size, CFG.channels)
+    assert img.min() >= -1.0 and img.max() <= 1.0
+    assert y.shape == (16,)
+    assert y.min() >= 0 and y.max() < CFG.num_classes
+
+
+def test_class_params_deterministic_and_distinct():
+    p1 = data_mod.class_params(3, CFG.num_classes)
+    p2 = data_mod.class_params(3, CFG.num_classes)
+    assert np.allclose(p1[3], p2[3])
+    # different classes → different geometry
+    q = data_mod.class_params(4, CFG.num_classes)
+    assert not np.allclose(p1[3], q[3]) or p1[0] != q[0]
+
+
+def test_classes_are_visually_distinct():
+    """Mean images of different classes differ a lot more than two mean
+    images of the same class — the IS classifier's learnability basis."""
+    rng = np.random.default_rng(1)
+    means = []
+    for k in range(4):
+        labels = np.full((32,), k)
+        img = data_mod.make_batch(rng, labels, CFG)
+        means.append(img.mean(axis=0))
+    for i in range(4):
+        for j in range(i + 1, 4):
+            d = np.abs(means[i] - means[j]).mean()
+            assert d > 0.05, f"classes {i},{j} too similar ({d})"
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+def test_alpha_bars_monotone():
+    ab = train_mod.alpha_bars(DC)
+    assert ab.shape == (DC.train_steps,)
+    assert np.all(np.diff(ab) < 0)
+    assert 0 < ab[-1] < ab[0] < 1
+
+
+def test_q_sample_endpoints():
+    rng = np.random.default_rng(2)
+    x0 = jnp.asarray(rng.standard_normal((2, 16, 16, 3)), jnp.float32)
+    eps = jnp.asarray(rng.standard_normal((2, 16, 16, 3)), jnp.float32)
+    abar = jnp.asarray(train_mod.alpha_bars(DC), jnp.float32)
+    x_lo = train_mod.q_sample(x0, jnp.asarray([0, 0]), eps, abar)
+    # t=0: nearly clean signal
+    assert float(jnp.mean((x_lo - x0) ** 2)) < 0.05
+    x_hi = train_mod.q_sample(x0, jnp.asarray([DC.train_steps - 1] * 2),
+                              eps, abar)
+    # t=T-1: mostly noise
+    assert float(jnp.mean((x_hi - eps) ** 2)) < 0.5
+
+
+def test_train_step_reduces_loss():
+    params = init_params(jax.random.PRNGKey(0), CFG)
+    m, v = train_mod.adam_init(params)
+    abar = jnp.asarray(train_mod.alpha_bars(DC), jnp.float32)
+    rng = np.random.default_rng(3)
+
+    losses = []
+    step_fn = jax.jit(lambda p, mm, vv, s, x0, t, y, e: train_mod.train_step(
+        p, mm, vv, s, x0, t, y, e, abar, CFG))
+    # fixed batch → loss must drop when repeatedly stepped on it
+    x0, y = data_mod.sample_batch(rng, 32, CFG)
+    t = rng.integers(0, DC.train_steps, size=(32,))
+    eps = rng.standard_normal(x0.shape).astype(np.float32)
+    args = (jnp.asarray(x0), jnp.asarray(t, jnp.int32), jnp.asarray(y),
+            jnp.asarray(eps))
+    for s in range(20):
+        params, m, v, loss = step_fn(params, m, v,
+                                     jnp.asarray(s, jnp.int32), *args)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.9, losses[:3] + losses[-3:]
+
+
+def test_flatten_roundtrip():
+    params = init_params(jax.random.PRNGKey(1), CFG)
+    flat = train_mod.flatten_params(params, CFG)
+    back = train_mod.unflatten_params(flat, CFG)
+    assert set(back.keys()) == set(params.keys())
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(params[k]))
+
+
+# ---------------------------------------------------------------------------
+# features
+# ---------------------------------------------------------------------------
+
+def test_feature_net_shapes():
+    fp = feat_mod.feature_params()
+    rng = np.random.default_rng(4)
+    img = jnp.asarray(rng.uniform(-1, 1, (8, 16, 16, 3)), jnp.float32)
+    f, s = feat_mod.feature_net(fp, img)
+    assert f.shape == (8, feat_mod.FEAT_DIM)
+    assert s.shape == (8, feat_mod.SPAT_DIM)
+    assert bool(jnp.all(jnp.isfinite(f)))
+
+
+def test_feature_net_separates_distributions():
+    """Real synthetic images vs pure noise produce distinct feature
+    means — FID's discriminative basis on this substrate."""
+    fp = feat_mod.feature_params()
+    rng = np.random.default_rng(5)
+    real, _ = data_mod.sample_batch(rng, 64, CFG)
+    noise = rng.uniform(-1, 1, real.shape).astype(np.float32)
+    f_real, _ = feat_mod.feature_net(fp, jnp.asarray(real))
+    f_noise, _ = feat_mod.feature_net(fp, jnp.asarray(noise))
+    d = float(jnp.linalg.norm(jnp.mean(f_real, 0) - jnp.mean(f_noise, 0)))
+    assert d > 0.1, d
+
+
+def test_classifier_trains_above_chance():
+    cp, acc = feat_mod.train_classifier(CFG, steps=60, batch=64)
+    assert acc > 2.0 / CFG.num_classes, acc
+
+
+def test_classifier_logits_shape():
+    cp = feat_mod.classifier_init(CFG)
+    rng = np.random.default_rng(6)
+    img = jnp.asarray(rng.uniform(-1, 1, (5, 16, 16, 3)), jnp.float32)
+    logits = feat_mod.classifier_logits(cp, img)
+    assert logits.shape == (5, CFG.num_classes)

@@ -1,0 +1,227 @@
+"""L1 correctness: every pallas kernel against its pure-jnp oracle.
+
+Hypothesis sweeps shapes, dtypes-range and quantization parameters;
+assert_allclose against ``kernels.ref``. This is the build-time gate —
+the AOT artifact embeds the pallas lowering, so equality here certifies
+the whole quantized model graph (test_qmodel covers the composition).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (fakequant_uniform, mrq_gelu, mrq_softmax,
+                             qmatmul)
+from compile.kernels import ref
+from compile.kernels.quant import _pick_rows
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def uniform_qp(bits: int, lo: float, hi: float) -> np.ndarray:
+    levels = float(2 ** bits - 1)
+    s = max(hi - lo, 1e-6) / levels
+    z = round(-lo / s)
+    return np.array([s, z, levels, 0.0], np.float32)
+
+
+def softmax_qp(bits: int, s1: float) -> np.ndarray:
+    half = float(2 ** (bits - 1))
+    return np.array([s1, half, 0.0, 0.0], np.float32)
+
+
+def gelu_qp(bits: int, s1: float, s2: float) -> np.ndarray:
+    half = float(2 ** (bits - 1))
+    return np.array([s1, s2, half, 0.0], np.float32)
+
+
+BYPASS = np.zeros(4, np.float32)
+
+dims = st.integers(min_value=1, max_value=33)
+bits = st.sampled_from([4, 6, 8])
+seeds = st.integers(min_value=0, max_value=2 ** 31 - 1)
+
+
+# ---------------------------------------------------------------------------
+# fakequant_uniform
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(r=dims, c=dims, b=bits, seed=seeds)
+def test_fakequant_matches_ref(r, c, b, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((r, c)), jnp.float32)
+    qp = uniform_qp(b, float(x.min()), float(x.max()))
+    got = fakequant_uniform(x, jnp.asarray(qp))
+    want = ref.fakequant_uniform_ref(x, jnp.asarray(qp))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(r=dims, c=dims, seed=seeds)
+def test_fakequant_bypass_is_identity(r, c, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((r, c)), jnp.float32)
+    got = fakequant_uniform(x, jnp.asarray(BYPASS))
+    np.testing.assert_allclose(got, x, rtol=0, atol=0)
+
+
+def test_fakequant_3d_shape_preserved():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((2, 5, 7)), jnp.float32)
+    qp = uniform_qp(8, -3.0, 3.0)
+    got = fakequant_uniform(x, jnp.asarray(qp))
+    assert got.shape == x.shape
+    want = ref.fakequant_uniform_ref(x, jnp.asarray(qp))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=bits, seed=seeds)
+def test_fakequant_error_bounded_by_half_step(b, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-1, 1, size=(16, 16)), jnp.float32)
+    qp = uniform_qp(b, -1.0, 1.0)
+    got = np.asarray(fakequant_uniform(x, jnp.asarray(qp)))
+    assert np.max(np.abs(got - np.asarray(x))) <= qp[0] * 0.5 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# mrq_softmax
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(r=dims, c=dims, b=bits, seed=seeds,
+       s1=st.floats(min_value=1e-5, max_value=0.05))
+def test_mrq_softmax_matches_ref(r, c, b, seed, s1):
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(4.0 * rng.standard_normal((r, c)), jnp.float32)
+    qp = jnp.asarray(softmax_qp(b, s1))
+    got = mrq_softmax(logits, qp)
+    want = ref.mrq_softmax_ref(logits, qp)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(r=dims, c=dims, seed=seeds)
+def test_mrq_softmax_bypass_is_plain_softmax(r, c, seed):
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.standard_normal((r, c)), jnp.float32)
+    got = mrq_softmax(logits, jnp.asarray(BYPASS))
+    want = jax.nn.softmax(logits, axis=-1)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_mrq_softmax_output_in_unit_interval():
+    rng = np.random.default_rng(3)
+    logits = jnp.asarray(8 * rng.standard_normal((32, 17)), jnp.float32)
+    qp = jnp.asarray(softmax_qp(6, 0.001))
+    got = np.asarray(mrq_softmax(logits, qp))
+    assert got.min() >= 0.0 and got.max() <= 1.0 + 1e-6
+
+
+def test_mrq_softmax_4d_attention_shape():
+    rng = np.random.default_rng(4)
+    logits = jnp.asarray(rng.standard_normal((2, 4, 8, 8)), jnp.float32)
+    qp = jnp.asarray(softmax_qp(8, 0.003))
+    got = mrq_softmax(logits, qp)
+    want = ref.mrq_softmax_ref(logits, qp)
+    assert got.shape == (2, 4, 8, 8)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# mrq_gelu
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(r=dims, c=dims, b=bits, seed=seeds,
+       s1=st.floats(min_value=1e-4, max_value=0.05),
+       s2=st.floats(min_value=1e-3, max_value=0.2))
+def test_mrq_gelu_matches_ref(r, c, b, seed, s1, s2):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(3.0 * rng.standard_normal((r, c)), jnp.float32)
+    qp = jnp.asarray(gelu_qp(b, s1, s2))
+    got = mrq_gelu(x, qp)
+    want = ref.mrq_gelu_ref(x, qp)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(r=dims, c=dims, seed=seeds)
+def test_mrq_gelu_bypass_is_plain_gelu(r, c, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((r, c)), jnp.float32)
+    got = mrq_gelu(x, jnp.asarray(np.zeros(4, np.float32)))
+    want = ref.gelu_ref(x)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_mrq_gelu_preserves_sign_regions():
+    x = jnp.asarray(np.linspace(-4, 4, 97, dtype=np.float32).reshape(1, -1))
+    qp = jnp.asarray(gelu_qp(8, 0.005, 0.05))
+    got = np.asarray(mrq_gelu(x, qp))[0]
+    g = np.asarray(ref.gelu_ref(x))[0]
+    assert np.all(got[g < 0] <= 0.0 + 1e-7)
+    assert np.all(got[g >= 0] >= 0.0 - 1e-7)
+
+
+# ---------------------------------------------------------------------------
+# qmatmul
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(g=st.integers(1, 4), m=dims, k=st.integers(1, 16),
+       n=st.integers(1, 16), b=bits, seed=seeds)
+def test_qmatmul_matches_ref(g, m, k, n, b, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((g, m, k)), jnp.float32)
+    bb = jnp.asarray(rng.standard_normal((g, k, n)), jnp.float32)
+    qpa = jnp.asarray(uniform_qp(b, -3.0, 3.0))
+    qpb = jnp.asarray(uniform_qp(b, -3.0, 3.0))
+    got = qmatmul(a, bb, qpa, qpb)
+    want = ref.qmatmul_ref(a, bb, qpa, qpb)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_qmatmul_bypass_equals_plain_matmul():
+    rng = np.random.default_rng(9)
+    a = jnp.asarray(rng.standard_normal((3, 8, 5)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((3, 5, 7)), jnp.float32)
+    byp = jnp.asarray(BYPASS)
+    got = qmatmul(a, b, byp, byp)
+    want = jnp.einsum("gmk,gkn->gmn", a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_qmatmul_mixed_bypass():
+    # A bypassed (already MRQ-quantized upstream), B quantized — the AV
+    # configuration in the quantized model.
+    rng = np.random.default_rng(10)
+    a = jnp.asarray(rng.uniform(0, 1, (2, 6, 6)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((2, 6, 4)), jnp.float32)
+    qpb = jnp.asarray(uniform_qp(8, -3.0, 3.0))
+    got = qmatmul(a, b, jnp.asarray(BYPASS), qpb)
+    want = jnp.einsum("gmk,gkn->gmn", a,
+                      ref.fakequant_uniform_ref(b, qpb))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# block-shape helper
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(rows=st.integers(1, 4096))
+def test_pick_rows_divides_and_bounds(rows):
+    br = _pick_rows(rows)
+    assert rows % br == 0
+    assert 1 <= br <= 256
+
+
+def test_pick_rows_prefers_large_blocks():
+    assert _pick_rows(1024) == 256
+    assert _pick_rows(256) == 256
+    assert _pick_rows(17) == 17   # prime ≤ 256 → itself

@@ -1,0 +1,43 @@
+//! Shared scaffolding for the bench targets (`harness = false`).
+//!
+//! Every table/figure bench regenerates its experiment end-to-end and
+//! prints the paper-shaped rows plus phase timings. Sizes default to a
+//! CPU-friendly working set; set `TQDIT_BENCH_FULL=1` for paper-sized
+//! runs (T=250/100, n=32 per group, 256+ eval images), or override the
+//! individual `TQDIT_BENCH_*` vars.
+
+use tq_dit::util::config::RunConfig;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+pub fn full() -> bool {
+    std::env::var("TQDIT_BENCH_FULL").as_deref() == Ok("1")
+}
+
+/// Bench-sized run configuration (or paper-sized under `full()`).
+pub fn bench_config() -> RunConfig {
+    let mut cfg = RunConfig::default();
+    if full() {
+        cfg.timesteps = env_usize("TQDIT_BENCH_T", 250);
+        cfg.calib_per_group = env_usize("TQDIT_BENCH_CALIB", 32);
+        cfg.eval_images = env_usize("TQDIT_BENCH_EVAL", 256);
+    } else {
+        cfg.timesteps = env_usize("TQDIT_BENCH_T", 40);
+        cfg.calib_per_group = env_usize("TQDIT_BENCH_CALIB", 6);
+        cfg.eval_images = env_usize("TQDIT_BENCH_EVAL", 40);
+        cfg.candidates = env_usize("TQDIT_BENCH_CANDIDATES", 24);
+    }
+    cfg
+}
+
+pub fn banner(what: &str, cfg: &RunConfig) {
+    println!("=== {what} ===");
+    println!(
+        "config: T={} G={} n/group={} R={} candidates={} eval={} {}",
+        cfg.timesteps, cfg.groups, cfg.calib_per_group, cfg.rounds,
+        cfg.candidates, cfg.eval_images,
+        if full() { "(paper-sized)" } else { "(bench-sized; TQDIT_BENCH_FULL=1 for paper scale)" }
+    );
+}

@@ -1,0 +1,53 @@
+//! Fig. 1 regenerator: the headline FID/IS bar chart — every method at
+//! W8A8 and W6A6 (T=250 in the paper; bench-sized T by default), as
+//! console bars.
+
+#[path = "common.rs"]
+mod common;
+
+use tq_dit::coordinator::pipeline::{Method, Pipeline};
+use tq_dit::coordinator::QuantConfig;
+use tq_dit::util::rng::Rng;
+
+fn bar(v: f64, max: f64, width: usize) -> String {
+    let n = ((v / max.max(1e-9)) * width as f64).round() as usize;
+    "#".repeat(n.min(width))
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = common::bench_config();
+    common::banner("Fig. 1: headline FID/IS comparison", &cfg);
+
+    let mut rows: Vec<(String, f64, f64)> = Vec::new();
+    {
+        let pipe = Pipeline::new(cfg.clone())?;
+        let fp = QuantConfig::fp(pipe.groups.clone());
+        let r = pipe.evaluate(&fp, cfg.eval_images, cfg.seed ^ 0xe7a1)?;
+        rows.push(("FP".into(), r.fid, r.is_score));
+    }
+    for (w, a) in [(8u32, 8u32), (6, 6)] {
+        cfg.wbits = w;
+        cfg.abits = a;
+        let pipe = Pipeline::new(cfg.clone())?;
+        for method in Method::ALL_QUANT {
+            let mut rng = Rng::new(cfg.seed ^ 0x5eed);
+            let (qc, _) = pipe.calibrate(method, &mut rng)?;
+            let r = pipe.evaluate(&qc, cfg.eval_images, cfg.seed ^ 0xe7a1)?;
+            rows.push((format!("{} W{w}A{a}", method.name()), r.fid,
+                       r.is_score));
+        }
+    }
+
+    let fid_max = rows.iter().map(|r| r.1).fold(0.0, f64::max);
+    let is_max = rows.iter().map(|r| r.2).fold(0.0, f64::max);
+    println!("\n{:<24} {:>8}  FID bars (lower better)", "method", "FID");
+    for (name, fid, _) in &rows {
+        println!("{name:<24} {fid:>8.3}  {}", bar(*fid, fid_max, 40));
+    }
+    println!("\n{:<24} {:>8}  IS bars (higher better)", "method", "IS");
+    for (name, _, is) in &rows {
+        println!("{name:<24} {is:>8.3}  {}", bar(*is, is_max, 40));
+    }
+    println!("\npaper shape: TQ-DiT bars closest to FP at both widths.");
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Fig. 2 regenerator: post-softmax / post-GELU value distributions in
+//! DiT blocks — the asymmetry that motivates MRQ — as console
+//! histograms (CSV via `examples/distributions.rs`).
+
+#[path = "common.rs"]
+mod common;
+
+use tq_dit::coordinator::pipeline::Pipeline;
+use tq_dit::tensor::stats::Histogram;
+use tq_dit::util::rng::Rng;
+
+fn render(h: &Histogram, label: &str, rows: usize) {
+    println!("\n{label} ({} samples, {} under / {} over range):", h.count,
+             h.underflow, h.overflow);
+    let d = h.densities();
+    let step = d.len().div_ceil(rows);
+    let dmax = d.iter().map(|x| x.1).fold(0.0, f64::max);
+    for chunk in d.chunks(step) {
+        let c = chunk[chunk.len() / 2].0;
+        let v: f64 = chunk.iter().map(|x| x.1).sum::<f64>()
+            / chunk.len() as f64;
+        let n = ((v / dmax.max(1e-12)) * 50.0).round() as usize;
+        println!("{c:>8.3} | {}", "#".repeat(n.min(50)));
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = common::bench_config();
+    cfg.calib_per_group = cfg.calib_per_group.max(8);
+    common::banner("Fig. 2: activation distributions (softmax / GELU)",
+                   &cfg);
+    let pipe = Pipeline::new(cfg.clone())?;
+    let mut rng = Rng::new(cfg.seed);
+    let t0 = std::time::Instant::now();
+    let (_, ev) = pipe.grouped_evidence(&mut rng)?;
+    println!("capture: {:.1}s over {} batches", t0.elapsed().as_secs_f64(),
+             ev.batches_run);
+
+    render(&ev.softmax_hist, "Fig. 2a post-softmax", 16);
+    render(&ev.gelu_hist, "Fig. 2b post-GELU", 16);
+
+    let sm = &ev.softmax_hist;
+    let below = sm.bins[..sm.bins.len() / 8].iter().sum::<u64>() as f64
+        / sm.count.max(1) as f64;
+    println!("\npaper shape: post-softmax mass concentrated near 0 \
+              (ours: {:.1}% below 0.125) and post-GELU negatively skewed \
+              with a bounded tail.", 100.0 * below);
+    Ok(())
+}

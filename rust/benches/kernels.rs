@@ -1,0 +1,95 @@
+//! Micro-benchmarks of the host-side hot paths: fake-quant application,
+//! the HO objective, candidate search, qparams packing, and the FID
+//! linear algebra. These are the L3 components the §Perf pass tunes.
+
+#[path = "common.rs"]
+mod common;
+
+use tq_dit::quant::search::{argmin_candidates, uniform_candidates, Problem};
+use tq_dit::quant::{MrqGelu, MrqSoftmax, SiteParams, UniformQ};
+use tq_dit::tensor::linalg::trace_sqrt_product;
+use tq_dit::tensor::Tensor;
+use tq_dit::util::bench::Bench;
+use tq_dit::util::rng::Rng;
+
+fn main() {
+    let b = Bench::default();
+    let mut rng = Rng::new(7);
+
+    // --- fake-quant throughput (1M elements) ---------------------------
+    let data = rng.normal_vec(1 << 20);
+    let uq = UniformQ::from_minmax(-3.0, 3.0, 8);
+    let mut buf = data.clone();
+    let r = b.run("uniform_fakequant/1M", || {
+        buf.copy_from_slice(&data);
+        uq.fakequant_slice(&mut buf);
+    });
+    println!("  -> {:.2} Gelem/s", r.per_sec(1 << 20) / 1e9);
+
+    let ms = MrqSoftmax::new(1.0 / 1024.0, 8);
+    let probs: Vec<f32> = data.iter().map(|v| (v.abs() * 0.1).min(1.0))
+        .collect();
+    let r = b.run("mrq_softmax_fakequant/1M", || {
+        buf.copy_from_slice(&probs);
+        ms.fakequant_slice(&mut buf);
+    });
+    println!("  -> {:.2} Gelem/s", r.per_sec(1 << 20) / 1e9);
+
+    let mg = MrqGelu::new(0.002, 0.03, 8);
+    let r = b.run("mrq_gelu_fakequant/1M", || {
+        buf.copy_from_slice(&data);
+        mg.fakequant_slice(&mut buf);
+    });
+    println!("  -> {:.2} Gelem/s", r.per_sec(1 << 20) / 1e9);
+
+    // --- HO objective over a realistic layer problem --------------------
+    let a: Vec<Tensor> = (0..12)
+        .map(|_| Tensor::new(vec![64, 96], rng.normal_vec(64 * 96)))
+        .collect();
+    let w = Tensor::new(vec![96, 384], rng.normal_vec(96 * 384));
+    let fish: Vec<Tensor> = (0..12)
+        .map(|_| Tensor::new(vec![64, 384], rng.normal_vec(64 * 384)))
+        .collect();
+    let prob = Problem::new(a, vec![w; 12], Some(fish));
+    let qa = SiteParams::Uniform(UniformQ::from_minmax(-3.0, 3.0, 8));
+    let qb = SiteParams::Uniform(UniformQ::from_minmax(-0.3, 0.3, 8));
+    b.run("ho_objective/fc1-style(12x64x96x384)", || {
+        std::hint::black_box(prob.eval(&qa, &qb));
+    });
+
+    // --- candidate search (parallel argmin) -----------------------------
+    let cands = uniform_candidates(-3.0, 3.0, 8, 48);
+    b.run("argmin_candidates/48xfc1", || {
+        std::hint::black_box(argmin_candidates(&cands,
+                                               |c| prob.eval(c, &qb)));
+    });
+
+    // --- FID linear algebra ---------------------------------------------
+    for d in [64usize, 192] {
+        let mut c1 = vec![0.0f64; d * d];
+        let mut c2 = vec![0.0f64; d * d];
+        for i in 0..d {
+            for j in 0..d {
+                let v = ((i * 31 + j * 17) % 13) as f64 / 13.0;
+                c1[i * d + j] += v;
+                c1[j * d + i] += v;
+                c2[i * d + j] += 1.0 - v;
+                c2[j * d + i] += 1.0 - v;
+            }
+            c1[i * d + i] += d as f64;
+            c2[i * d + i] += d as f64;
+        }
+        b.run(&format!("trace_sqrt_product/{d}d"), || {
+            std::hint::black_box(trace_sqrt_product(&c1, &c2, d));
+        });
+    }
+
+    // --- host matmul kernel ----------------------------------------------
+    let x = Tensor::new(vec![512, 96], rng.normal_vec(512 * 96));
+    let w2 = Tensor::new(vec![96, 384], rng.normal_vec(96 * 384));
+    let r = b.run("host_matmul/512x96x384", || {
+        std::hint::black_box(x.matmul(&w2));
+    });
+    let flops = 2.0 * 512.0 * 96.0 * 384.0;
+    println!("  -> {:.2} GFLOP/s", flops / r.mean_s / 1e9);
+}

@@ -1,0 +1,90 @@
+//! PJRT runtime benches: artifact compile time, per-step execute
+//! latency (the sampler's budget), upload overheads, and end-to-end
+//! sampling throughput — FP vs quantized path.
+
+#[path = "common.rs"]
+mod common;
+
+use tq_dit::coordinator::pipeline::{Method, Pipeline};
+use tq_dit::coordinator::QuantConfig;
+use tq_dit::sampler::Sampler;
+use tq_dit::tensor::Tensor;
+use tq_dit::util::bench::Bench;
+use tq_dit::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = common::bench_config();
+    cfg.timesteps = 50;
+    cfg.calib_per_group = 4;
+    common::banner("runtime: PJRT execute/upload/sampling", &cfg);
+    let pipe = Pipeline::new(cfg.clone())?;
+    let m = pipe.rt.manifest.clone();
+    let bch = Bench::default();
+    let mut rng = Rng::new(3);
+
+    // compile (cold) timings are logged by Runtime; warm execute below.
+    let b = m.batches.sample;
+    let il = m.model.img_size * m.model.img_size * m.model.channels;
+    let wbufs = pipe.rt.upload_all(&pipe.weights.tensors)?;
+    let x = Tensor::new(vec![b, m.model.img_size, m.model.img_size,
+                             m.model.channels],
+                        rng.normal_vec(b * il));
+    let t = vec![25i32; b];
+    let y = vec![0i32; b];
+
+    // upload micro-bench
+    bch.run("upload/x(16x16x16x3)", || {
+        std::hint::black_box(pipe.rt.upload(&x).unwrap());
+    });
+
+    // FP forward execute
+    let xb = pipe.rt.upload(&x)?;
+    let tb = pipe.rt.upload_i32(&t, &[b])?;
+    let yb = pipe.rt.upload_i32(&y, &[b])?;
+    let r = bch.run("execute/dit_fp_sample", || {
+        let mut inputs: Vec<&xla::PjRtBuffer> = wbufs.iter().collect();
+        inputs.extend([&xb, &tb, &yb]);
+        std::hint::black_box(
+            pipe.rt.run_buffers("dit_fp_sample", &inputs).unwrap());
+    });
+    println!("  -> {:.1} img/s single-batch", r.per_sec(b));
+
+    // quantized forward execute (pallas-lowered graph)
+    let qp = Tensor::new(vec![m.qp_len], vec![0.0; m.qp_len]);
+    let qpb = pipe.rt.upload(&qp)?;
+    let r = bch.run("execute/dit_quant(bypass)", || {
+        let mut inputs: Vec<&xla::PjRtBuffer> = wbufs.iter().collect();
+        inputs.extend([&xb, &tb, &yb, &qpb]);
+        std::hint::black_box(
+            pipe.rt.run_buffers("dit_quant", &inputs).unwrap());
+    });
+    println!("  -> {:.1} img/s single-batch", r.per_sec(b));
+
+    // end-to-end sampling throughput: FP vs calibrated TQ-DiT
+    let fp = QuantConfig::fp(pipe.groups.clone());
+    let sampler = Sampler::new(&pipe.rt, &pipe.weights, fp, cfg.timesteps)?;
+    let labels: Vec<i32> = (0..b).map(|i| (i % 8) as i32).collect();
+    let quick = Bench { warmup: 1, iters: 3, max_total_s: 120.0 };
+    let r = quick.run("sample/fp(T=50,batch=16)", || {
+        std::hint::black_box(sampler.sample(&labels, &mut rng).unwrap());
+    });
+    println!("  -> {:.2} img/s end-to-end", r.per_sec(b));
+
+    let mut crng = Rng::new(cfg.seed ^ 0x5eed);
+    let (qc, _) = pipe.calibrate(Method::TqDit, &mut crng)?;
+    let sampler_q = Sampler::new(&pipe.rt, &pipe.weights, qc,
+                                 cfg.timesteps)?;
+    let r = quick.run("sample/tq-dit(T=50,batch=16)", || {
+        std::hint::black_box(sampler_q.sample(&labels, &mut rng).unwrap());
+    });
+    println!("  -> {:.2} img/s end-to-end", r.per_sec(b));
+
+    // per-artifact exec stats (observability)
+    println!("\nper-artifact cumulative exec stats:");
+    for (name, st) in pipe.rt.stats() {
+        println!("  {name:<18} {:>6} calls  {:>9.3}s total  {:>8.2}ms/call",
+                 st.calls, st.total_s,
+                 1e3 * st.total_s / st.calls.max(1) as f64);
+    }
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! Table I regenerator: FID/sFID/IS at T=250 (bench-sized T by default)
+//! for FP + Q-Diffusion + PTQD + PTQ4DiT + TQ-DiT, at W8A8 and W6A6.
+
+#[path = "common.rs"]
+mod common;
+
+use tq_dit::coordinator::pipeline::{Method, Pipeline};
+use tq_dit::coordinator::QuantConfig;
+use tq_dit::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = common::bench_config();
+    if common::full() {
+        cfg.timesteps = 250;
+    }
+    common::banner("Table I: T=250 quality comparison", &cfg);
+
+    for (w, a) in [(8u32, 8u32), (6, 6)] {
+        cfg.wbits = w;
+        cfg.abits = a;
+        println!("\n-- W{w}A{a} --");
+        println!("{:<22} {:>9} {:>9} {:>8} {:>9}", "method", "FID", "sFID",
+                 "IS", "calib(s)");
+        let pipe = Pipeline::new(cfg.clone())?;
+        let fp = QuantConfig::fp(pipe.groups.clone());
+        let t0 = std::time::Instant::now();
+        let r = pipe.evaluate(&fp, cfg.eval_images, cfg.seed ^ 0xe7a1)?;
+        println!("{:<22} {:>9.3} {:>9.3} {:>8.3} {:>9}  (eval {:.1}s)",
+                 "FP (32/32)", r.fid, r.sfid, r.is_score, "-",
+                 t0.elapsed().as_secs_f64());
+        for method in Method::ALL_QUANT {
+            let mut rng = Rng::new(cfg.seed ^ 0x5eed);
+            let (qc, cost) = pipe.calibrate(method, &mut rng)?;
+            let row = pipe.evaluate(&qc, cfg.eval_images,
+                                    cfg.seed ^ 0xe7a1)?;
+            println!("{:<22} {:>9.3} {:>9.3} {:>8.3} {:>9.1}",
+                     method.name(), row.fid, row.sfid, row.is_score,
+                     cost.wall_s);
+        }
+    }
+    println!("\npaper shape: all ≈ FP at W8A8 (TQ-DiT closest: 4.91 vs \
+              4.62 FP); at W6A6 baselines blow up (28.9/17.6/20.5 FID) \
+              while TQ-DiT holds 8.58.");
+    Ok(())
+}

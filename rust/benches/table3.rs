@@ -1,0 +1,42 @@
+//! Table III regenerator: W6A6 ablation — Baseline (uniform+MSE) →
+//! +HO → +HO+MRQ → +HO+MRQ+TGQ (full TQ-DiT).
+
+#[path = "common.rs"]
+mod common;
+
+use tq_dit::coordinator::pipeline::{Method, Pipeline};
+use tq_dit::coordinator::QuantConfig;
+use tq_dit::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = common::bench_config();
+    cfg.wbits = 6;
+    cfg.abits = 6;
+    common::banner("Table III: component ablation @ W6A6", &cfg);
+    println!("{:<24} {:>9} {:>9} {:>8}", "config", "FID", "sFID", "IS");
+
+    let mut pipe = Pipeline::new(cfg.clone())?;
+    let fp = QuantConfig::fp(pipe.groups.clone());
+    let r = pipe.evaluate(&fp, cfg.eval_images, cfg.seed ^ 0xe7a1)?;
+    println!("{:<24} {:>9.3} {:>9.3} {:>8.3}", "FP", r.fid, r.sfid,
+             r.is_score);
+
+    for (label, ho, mrq, tgq) in [
+        ("Baseline", false, false, false),
+        ("+ HO", true, false, false),
+        ("+ HO + MRQ", true, true, false),
+        ("+ HO + MRQ + TGQ", true, true, true),
+    ] {
+        pipe.cfg.use_ho = ho;
+        pipe.cfg.use_mrq = mrq;
+        pipe.cfg.use_tgq = tgq;
+        let mut rng = Rng::new(cfg.seed ^ 0x5eed);
+        let (qc, _) = pipe.calibrate(Method::TqDit, &mut rng)?;
+        let row = pipe.evaluate(&qc, cfg.eval_images, cfg.seed ^ 0xe7a1)?;
+        println!("{:<24} {:>9.3} {:>9.3} {:>8.3}", label, row.fid, row.sfid,
+                 row.is_score);
+    }
+    println!("\npaper shape: monotone FID improvement 28.86 → 22.47 → \
+              9.31 → 8.58 (ours should order the same way).");
+    Ok(())
+}

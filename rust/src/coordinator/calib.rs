@@ -1,0 +1,182 @@
+//! Phase 1 — calibration-dataset construction with time grouping.
+//!
+//! Timesteps {0..T−1} are split into G contiguous groups (eq. 9); from
+//! each group n tuples (x_t, t, y) are drawn (eq. 10) by forward
+//! diffusion of synthetic x₀ with known ε (the construction implied by
+//! the task loss, eq. 11 — this keeps ∂L/∂z non-degenerate for the
+//! Fisher capture in Phase 2).
+//!
+//! When the sampler is respaced (T=100 over a 250-step training
+//! schedule), group membership is decided on the *original* timestep
+//! axis and tuples are drawn from the sampler's actual step set, so the
+//! calibrated parameters line up with the timesteps the sampler will
+//! actually visit.
+
+use crate::data::SynthDataset;
+use crate::sched::{DdpmSchedule, TimeGroups};
+use crate::util::rng::Rng;
+
+/// One calibration tuple (paper Alg. 1, Phase 1).
+#[derive(Clone, Debug)]
+pub struct CalibTuple {
+    /// Noised input x_t (flat NHWC pixels).
+    pub x_t: Vec<f32>,
+    /// Original (training-schedule) timestep index.
+    pub t: usize,
+    /// Class label.
+    pub y: i32,
+    /// The known noise ε used to build x_t (the regression target).
+    pub eps: Vec<f32>,
+    /// Time-group index of t.
+    pub group: usize,
+}
+
+/// The grouped calibration dataset 𝒟_cal^TG.
+#[derive(Clone, Debug)]
+pub struct CalibSet {
+    pub tuples: Vec<CalibTuple>,
+    pub groups: TimeGroups,
+    /// Tuples per group (n in the paper).
+    pub per_group: usize,
+}
+
+impl CalibSet {
+    /// Build with time grouping: n tuples per group, G groups.
+    pub fn build(ds: &SynthDataset, sched: &DdpmSchedule, tg: &TimeGroups,
+                 per_group: usize, rng: &mut Rng) -> CalibSet {
+        let il = ds.image_len();
+        let mut tuples = Vec::with_capacity(per_group * tg.groups);
+        for g in 0..tg.groups {
+            // timesteps of this group that the sampler actually visits
+            let (lo, hi) = tg.range_of(g);
+            let visited: Vec<usize> = sched
+                .steps
+                .iter()
+                .copied()
+                .filter(|&t| t >= lo && t <= hi)
+                .collect();
+            assert!(
+                !visited.is_empty(),
+                "group {g} covers no sampler steps (T_sample too small?)"
+            );
+            for _ in 0..per_group {
+                let t = visited[rng.below(visited.len())];
+                let y = rng.below(ds.num_classes) as i32;
+                let mut x0 = vec![0.0f32; il];
+                ds.render(y as usize, rng, &mut x0);
+                let eps = rng.normal_vec(il);
+                let mut x_t = vec![0.0f32; il];
+                sched.q_sample(&x0, t, &eps, &mut x_t);
+                tuples.push(CalibTuple { x_t, t, y, eps, group: g });
+            }
+        }
+        CalibSet { tuples, groups: tg.clone(), per_group }
+    }
+
+    /// Build WITHOUT grouping (baselines): n_total tuples with t drawn
+    /// uniformly over the sampler's step set.
+    pub fn build_ungrouped(ds: &SynthDataset, sched: &DdpmSchedule,
+                           tg: &TimeGroups, n_total: usize, rng: &mut Rng)
+                           -> CalibSet {
+        let il = ds.image_len();
+        let mut tuples = Vec::with_capacity(n_total);
+        for _ in 0..n_total {
+            let t = sched.steps[rng.below(sched.steps.len())];
+            let y = rng.below(ds.num_classes) as i32;
+            let mut x0 = vec![0.0f32; il];
+            ds.render(y as usize, rng, &mut x0);
+            let eps = rng.normal_vec(il);
+            let mut x_t = vec![0.0f32; il];
+            sched.q_sample(&x0, t, &eps, &mut x_t);
+            tuples.push(CalibTuple { x_t, t, y, eps, group: tg.group_of(t) });
+        }
+        CalibSet { tuples, groups: tg.clone(), per_group: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tuples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tuples.is_empty()
+    }
+
+    /// Indices of tuples in time group g.
+    pub fn group_indices(&self, g: usize) -> Vec<usize> {
+        self.tuples
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.group == g)
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture(t_sample: usize, per_group: usize) -> CalibSet {
+        let ds = SynthDataset::new(16, 3, 8);
+        let sched = DdpmSchedule::new(250, 1e-4, 0.02, t_sample);
+        let tg = TimeGroups::new(250, 10);
+        let mut rng = Rng::new(7);
+        CalibSet::build(&ds, &sched, &tg, per_group, &mut rng)
+    }
+
+    #[test]
+    fn paper_sizing_holds() {
+        // n=4 per group, G=10 → 40 tuples (paper uses n=32; small here)
+        let cs = fixture(250, 4);
+        assert_eq!(cs.len(), 40);
+        for g in 0..10 {
+            assert_eq!(cs.group_indices(g).len(), 4);
+        }
+    }
+
+    #[test]
+    fn tuples_respect_group_ranges() {
+        let cs = fixture(250, 4);
+        for tup in &cs.tuples {
+            let (lo, hi) = cs.groups.range_of(tup.group);
+            assert!(tup.t >= lo && tup.t <= hi);
+        }
+    }
+
+    #[test]
+    fn respaced_sampler_only_uses_visited_steps() {
+        let cs = fixture(100, 4);
+        let sched = DdpmSchedule::new(250, 1e-4, 0.02, 100);
+        for tup in &cs.tuples {
+            assert!(sched.steps.contains(&tup.t), "t={} not visited", tup.t);
+        }
+    }
+
+    #[test]
+    fn xt_is_noised_x0() {
+        let cs = fixture(250, 2);
+        // high-t tuples should look like ~unit-variance noise
+        let high = cs
+            .tuples
+            .iter()
+            .filter(|t| t.t > 230)
+            .next()
+            .expect("some high-t tuple");
+        let var: f32 = high.x_t.iter().map(|v| v * v).sum::<f32>()
+            / high.x_t.len() as f32;
+        assert!(var > 0.5 && var < 2.0, "var {var}");
+    }
+
+    #[test]
+    fn ungrouped_assigns_consistent_groups() {
+        let ds = SynthDataset::new(16, 3, 8);
+        let sched = DdpmSchedule::new(250, 1e-4, 0.02, 250);
+        let tg = TimeGroups::new(250, 10);
+        let mut rng = Rng::new(9);
+        let cs = CalibSet::build_ungrouped(&ds, &sched, &tg, 64, &mut rng);
+        assert_eq!(cs.len(), 64);
+        for tup in &cs.tuples {
+            assert_eq!(tup.group, tg.group_of(tup.t));
+        }
+    }
+}

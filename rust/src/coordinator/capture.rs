@@ -1,0 +1,391 @@
+//! Phase 2 — layer-wise forward/backward over the calibration set.
+//!
+//! Runs the `dit_capture` artifact (FP forward + ∂L/∂z per quantizable
+//! layer, L the DDPM noise-MSE of eq. 11) over the calibration tuples
+//! and streams the evidence the Phase-3 search needs into bounded
+//! per-(layer, time-group) reservoirs:
+//!
+//! * the layer's operand matrices (X for linears; A and B for MatMuls),
+//!   decomposed into the 2-D sub-matrices the host-side HO objective
+//!   multiplies (`quant::search::Problem`);
+//! * the matching ∂L/∂z matrices (diagonal-Fisher ingredients, eq. 15);
+//! * side products for the Fig. 2/3 reproductions: post-softmax /
+//!   post-GELU value histograms and the per-timestep post-softmax
+//!   channel-magnitude maxima.
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::calib::CalibSet;
+use crate::model::WeightStore;
+use crate::runtime::{Runtime, SiteKind};
+use crate::tensor::stats::Histogram;
+use crate::tensor::Tensor;
+
+/// Evidence reservoir for one quantizable layer.
+#[derive(Clone, Debug, Default)]
+pub struct LayerEvidence {
+    /// "linear" | "matmul".
+    pub ltype: String,
+    /// Per time group: captured 2-D A operands (X for linears).
+    pub a: Vec<Vec<Tensor>>,
+    /// Per time group: captured 2-D B operands (MatMul layers only;
+    /// linears take B = the weight matrix from the [`WeightStore`]).
+    pub b: Vec<Vec<Tensor>>,
+    /// Per time group: 2-D ∂L/∂z matching z = A·B row/col-wise.
+    pub fisher: Vec<Vec<Tensor>>,
+}
+
+impl LayerEvidence {
+    pub fn new(ltype: &str, groups: usize) -> LayerEvidence {
+        LayerEvidence {
+            ltype: ltype.to_string(),
+            a: vec![Vec::new(); groups],
+            b: vec![Vec::new(); groups],
+            fisher: vec![Vec::new(); groups],
+        }
+    }
+
+    /// Total A matrices stored across groups.
+    pub fn n_mats(&self) -> usize {
+        self.a.iter().map(|g| g.len()).sum()
+    }
+
+    /// Approximate resident bytes (Table IV memory accounting).
+    pub fn bytes(&self) -> usize {
+        let f = |v: &Vec<Vec<Tensor>>| -> usize {
+            v.iter()
+                .flat_map(|g| g.iter())
+                .map(|t| t.len() * 4)
+                .sum::<usize>()
+        };
+        f(&self.a) + f(&self.b) + f(&self.fisher)
+    }
+}
+
+/// Everything Phase 3 needs, plus the Fig. 2/3 side channels.
+#[derive(Clone, Debug)]
+pub struct Evidence {
+    pub layers: HashMap<String, LayerEvidence>,
+    pub groups: usize,
+    /// Post-softmax value histogram over all blocks (Fig. 2a).
+    pub softmax_hist: Histogram,
+    /// Post-GELU value histogram over all blocks (Fig. 2b).
+    pub gelu_hist: Histogram,
+    /// (timestep, max |post-softmax| over channels) per batch (Fig. 3).
+    pub softmax_max_by_t: Vec<(usize, f32)>,
+    /// Total capture-artifact executions (cost accounting).
+    pub batches_run: usize,
+}
+
+impl Evidence {
+    pub fn layer(&self, name: &str) -> &LayerEvidence {
+        self.layers
+            .get(name)
+            .unwrap_or_else(|| panic!("no evidence for layer `{name}`"))
+    }
+
+    /// Total resident evidence bytes (Table IV memory accounting).
+    pub fn bytes(&self) -> usize {
+        self.layers.values().map(|l| l.bytes()).sum()
+    }
+}
+
+/// Reservoir caps; the TQ-DiT calibrator keeps these small (that is its
+/// Table-IV efficiency edge), the PTQ4DiT-style baseline inflates them.
+#[derive(Clone, Copy, Debug)]
+pub struct CaptureOpts {
+    /// Max stored (A, B, fisher) triples per (layer, group) for MatMul
+    /// layers (each calib batch yields B·H candidate matrices).
+    pub max_mats_matmul: usize,
+    /// Max stored triples per (layer, group) for linear layers (one per
+    /// calib batch).
+    pub max_mats_linear: usize,
+    /// Max token rows kept per linear evidence matrix. The HO objective
+    /// is an expectation over rows, so strided row subsampling is an
+    /// unbiased cost cut (§Perf: 8× faster candidate evals at <1% loss
+    /// change on this model).
+    pub max_rows_linear: usize,
+}
+
+impl Default for CaptureOpts {
+    fn default() -> Self {
+        CaptureOpts {
+            max_mats_matmul: 12,
+            max_mats_linear: 6,
+            max_rows_linear: 64,
+        }
+    }
+}
+
+/// Run Phase 2: capture evidence over the whole calibration set.
+///
+/// Weights stay FP here — the capture artifact measures the *original*
+/// model (eq. 16 compares quantized outputs against these references).
+pub fn run_capture(rt: &Runtime, weights: &WeightStore, calib: &CalibSet,
+                   opts: CaptureOpts) -> Result<Evidence> {
+    let m = rt.manifest.clone();
+    let bsz = m.batches.calib;
+    let img = m.model.img_size;
+    let ch = m.model.channels;
+    let il = img * img * ch;
+    let groups = calib.groups.groups;
+
+    let mut ev = Evidence {
+        layers: m
+            .layers
+            .iter()
+            .map(|l| (l.name.clone(), LayerEvidence::new(&l.ltype, groups)))
+            .collect(),
+        groups,
+        softmax_hist: Histogram::new(0.0, 1.0, 64),
+        gelu_hist: Histogram::new(-1.0, 6.0, 64),
+        softmax_max_by_t: Vec::new(),
+        batches_run: 0,
+    };
+
+    let pbufs = rt.upload_all(&weights.tensors)?;
+
+    // batch the tuples; tuples are grouped contiguously so a batch is
+    // (nearly always) single-group — the tail pads by repetition.
+    let n = calib.len();
+    let mut start = 0usize;
+    while start < n {
+        let idx: Vec<usize> =
+            (0..bsz).map(|i| (start + i).min(n - 1)).collect();
+        let real = (n - start).min(bsz);
+        let mut x = vec![0.0f32; bsz * il];
+        let mut eps = vec![0.0f32; bsz * il];
+        let mut t = vec![0i32; bsz];
+        let mut y = vec![0i32; bsz];
+        for (bi, &ti) in idx.iter().enumerate() {
+            let tup = &calib.tuples[ti];
+            x[bi * il..(bi + 1) * il].copy_from_slice(&tup.x_t);
+            eps[bi * il..(bi + 1) * il].copy_from_slice(&tup.eps);
+            t[bi] = tup.t as i32;
+            y[bi] = tup.y;
+        }
+        let xb = rt.upload(&Tensor::new(vec![bsz, img, img, ch], x))?;
+        let tb = rt.upload_i32(&t, &[bsz])?;
+        let yb = rt.upload_i32(&y, &[bsz])?;
+        let eb = rt.upload(&Tensor::new(vec![bsz, img, img, ch], eps))?;
+        let mut inputs: Vec<&xla::PjRtBuffer> = pbufs.iter().collect();
+        inputs.extend([&xb, &tb, &yb, &eb]);
+        let outs = rt
+            .run_buffers("dit_capture", &inputs)
+            .context("dit_capture execution")?;
+        ev.batches_run += 1;
+
+        // outs[0] = eps_pred; rest in manifest.capture_outputs order.
+        let by_name: HashMap<&str, &Tensor> = m
+            .capture_outputs
+            .iter()
+            .enumerate()
+            .map(|(i, (name, _))| (name.as_str(), &outs[i + 1]))
+            .collect();
+
+        for layer in &m.layers {
+            let grad = *by_name
+                .get(format!("{}.grad", layer.name).as_str())
+                .with_context(|| format!("missing grad for {}", layer.name))?;
+            let le = ev.layers.get_mut(&layer.name).unwrap();
+            if layer.ltype == "linear" {
+                let xsite = *by_name.get(layer.sites[0].name.as_str()).unwrap();
+                ingest_linear(le, &calib.tuples, &idx[..real], xsite, grad,
+                              opts.max_mats_linear, opts.max_rows_linear);
+            } else {
+                let a = *by_name.get(layer.sites[0].name.as_str()).unwrap();
+                let b = *by_name.get(layer.sites[1].name.as_str()).unwrap();
+                ingest_matmul(le, &calib.tuples, &idx[..real], a, b, grad,
+                              layer.sites[0].kind == SiteKind::MrqSoftmax,
+                              opts.max_mats_matmul);
+            }
+            // Fig. 2/3 side channels from the MRQ sites
+            match layer.sites[0].kind {
+                SiteKind::MrqSoftmax => {
+                    let a = *by_name.get(layer.sites[0].name.as_str()).unwrap();
+                    let per = a.len() / bsz;
+                    for (bi, &ti) in idx.iter().enumerate().take(real) {
+                        let vals = &a.data[bi * per..(bi + 1) * per];
+                        let mx = vals.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                        ev.softmax_max_by_t.push((calib.tuples[ti].t, mx));
+                        // subsample the histogram to bound cost
+                        for &v in vals.iter().step_by(7) {
+                            ev.softmax_hist.push(v);
+                        }
+                    }
+                }
+                _ => {}
+            }
+            if layer.sites[0].kind == SiteKind::MrqGelu {
+                let g = *by_name.get(layer.sites[0].name.as_str()).unwrap();
+                for &v in g.data.iter().step_by(11) {
+                    ev.gelu_hist.push(v);
+                }
+            }
+        }
+        start += real;
+    }
+    Ok(ev)
+}
+
+/// Linear layer: X (B, ..., K) → one 2-D (rows, K) matrix per batch;
+/// grad likewise. Stored per time group of each sample — a batch can mix
+/// groups at the tail, so rows are bucketed sample-wise. Rows are
+/// stride-subsampled down to `max_rows` per stored matrix (unbiased for
+/// the HO expectation; see `CaptureOpts::max_rows_linear`).
+fn ingest_linear(le: &mut LayerEvidence, tuples: &[crate::coordinator::calib::CalibTuple],
+                 idx: &[usize], xsite: &Tensor, grad: &Tensor, cap: usize,
+                 max_rows: usize) {
+    let bsz_rows = xsite.rows();
+    let rows_per_sample = bsz_rows / xsite.shape[0];
+    let k = xsite.cols();
+    let out = grad.cols();
+    debug_assert_eq!(grad.rows() / grad.shape[0], rows_per_sample);
+    // bucket samples by group
+    let mut by_group: HashMap<usize, Vec<usize>> = HashMap::new();
+    for (bi, &ti) in idx.iter().enumerate() {
+        by_group.entry(tuples[ti].group).or_default().push(bi);
+    }
+    for (g, bis) in by_group {
+        if le.a[g].len() >= cap {
+            continue;
+        }
+        let total_rows = bis.len() * rows_per_sample;
+        let stride = total_rows.div_ceil(max_rows.max(1)).max(1);
+        let mut xm = Vec::new();
+        let mut gm = Vec::new();
+        let mut rows = 0usize;
+        let mut r_global = 0usize;
+        for &bi in &bis {
+            for r in 0..rows_per_sample {
+                if r_global % stride == 0 {
+                    let xs = (bi * rows_per_sample + r) * k;
+                    xm.extend_from_slice(&xsite.data[xs..xs + k]);
+                    let gs = (bi * rows_per_sample + r) * out;
+                    gm.extend_from_slice(&grad.data[gs..gs + out]);
+                    rows += 1;
+                }
+                r_global += 1;
+            }
+        }
+        le.a[g].push(Tensor::new(vec![rows, k], xm));
+        le.fisher[g].push(Tensor::new(vec![rows, out], gm));
+    }
+}
+
+/// MatMul layer: operands (B, H, N, d)-style → per-(sample, head) 2-D
+/// matrices. For QKᵀ the B operand arrives as K (B, H, N, d) and is
+/// transposed here so stored pairs satisfy z = A·B directly.
+#[allow(clippy::too_many_arguments)]
+fn ingest_matmul(le: &mut LayerEvidence, tuples: &[crate::coordinator::calib::CalibTuple],
+                 idx: &[usize], a: &Tensor, b: &Tensor, grad: &Tensor,
+                 a_is_softmax: bool, cap: usize) {
+    let bsz = a.shape[0];
+    let heads = a.shape[1];
+    let (an, ak) = (a.shape[2], a.shape[3]);
+    let (bn, bk) = (b.shape[2], b.shape[3]);
+    let (gn, gk) = (grad.shape[2], grad.shape[3]);
+    let _ = bsz;
+    for (bi, &ti) in idx.iter().enumerate() {
+        let g = tuples[ti].group;
+        for h in 0..heads {
+            if le.a[g].len() >= cap {
+                break;
+            }
+            let off_a = (bi * heads + h) * an * ak;
+            let am = Tensor::new(vec![an, ak],
+                                 a.data[off_a..off_a + an * ak].to_vec());
+            let off_b = (bi * heads + h) * bn * bk;
+            let bm_raw = Tensor::new(vec![bn, bk],
+                                     b.data[off_b..off_b + bn * bk].to_vec());
+            // AV: A (N,N) softmax probs · B = V (N, hd) — already aligned.
+            // QKᵀ: A = Q (N, hd), captured B = K (N, hd) → use Kᵀ (hd, N).
+            let bm = if a_is_softmax { bm_raw } else { bm_raw.t() };
+            debug_assert_eq!(ak, bm.shape[0], "operand alignment");
+            let off_g = (bi * heads + h) * gn * gk;
+            let gm = Tensor::new(vec![gn, gk],
+                                 grad.data[off_g..off_g + gn * gk].to_vec());
+            le.a[g].push(am);
+            le.b[g].push(bm);
+            le.fisher[g].push(gm);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evidence_caps_respected() {
+        let mut le = LayerEvidence::new("matmul", 2);
+        let tuples: Vec<crate::coordinator::calib::CalibTuple> = (0..4)
+            .map(|i| crate::coordinator::calib::CalibTuple {
+                x_t: vec![],
+                t: i,
+                y: 0,
+                eps: vec![],
+                group: 0,
+            })
+            .collect();
+        let idx: Vec<usize> = (0..4).collect();
+        // (B=4, H=2, N=3, d=3) operands
+        let a = Tensor::zeros(vec![4, 2, 3, 3]);
+        let b = Tensor::zeros(vec![4, 2, 3, 3]);
+        let grad = Tensor::zeros(vec![4, 2, 3, 3]);
+        ingest_matmul(&mut le, &tuples, &idx, &a, &b, &grad, true, 5);
+        // 4 samples × 2 heads = 8 candidates, capped at 5
+        assert_eq!(le.a[0].len(), 5);
+        assert_eq!(le.b[0].len(), 5);
+        assert_eq!(le.fisher[0].len(), 5);
+        assert_eq!(le.a[1].len(), 0);
+    }
+
+    #[test]
+    fn qk_operand_is_transposed() {
+        let mut le = LayerEvidence::new("matmul", 1);
+        let tuples = vec![crate::coordinator::calib::CalibTuple {
+            x_t: vec![],
+            t: 0,
+            y: 0,
+            eps: vec![],
+            group: 0,
+        }];
+        // Q (1,1,2,3), K (1,1,2,3) → stored B must be (3,2)
+        let a = Tensor::zeros(vec![1, 1, 2, 3]);
+        let b = Tensor::new(vec![1, 1, 2, 3],
+                            vec![1., 2., 3., 4., 5., 6.]);
+        let grad = Tensor::zeros(vec![1, 1, 2, 2]);
+        ingest_matmul(&mut le, &tuples, &[0], &a, &b, &grad, false, 8);
+        assert_eq!(le.b[0][0].shape, vec![3, 2]);
+        // Kᵀ column 0 is K row 0
+        assert_eq!(le.b[0][0].data, vec![1., 4., 2., 5., 3., 6.]);
+    }
+
+    #[test]
+    fn linear_rows_bucketed_by_group() {
+        let mut le = LayerEvidence::new("linear", 2);
+        let tuples: Vec<crate::coordinator::calib::CalibTuple> = [0usize, 1]
+            .iter()
+            .map(|&g| crate::coordinator::calib::CalibTuple {
+                x_t: vec![],
+                t: 0,
+                y: 0,
+                eps: vec![],
+                group: g,
+            })
+            .collect();
+        // X (B=2, N=3, K=2), grad (2, 3, 4)
+        let x = Tensor::new(vec![2, 3, 2], (0..12).map(|v| v as f32).collect());
+        let grad = Tensor::zeros(vec![2, 3, 4]);
+        ingest_linear(&mut le, &tuples, &[0, 1], &x, &grad, 4, 1024);
+        assert_eq!(le.a[0].len(), 1);
+        assert_eq!(le.a[1].len(), 1);
+        assert_eq!(le.a[0][0].shape, vec![3, 2]);
+        // group-0 matrix holds sample 0's rows
+        assert_eq!(le.a[0][0].data, (0..6).map(|v| v as f32).collect::<Vec<_>>());
+        assert_eq!(le.a[1][0].data, (6..12).map(|v| v as f32).collect::<Vec<_>>());
+    }
+}

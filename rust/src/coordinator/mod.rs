@@ -1,0 +1,28 @@
+//! L3 coordinator — the paper's system contribution.
+//!
+//! Algorithm 1 (Time-Aware Quantization) split into its three phases:
+//!
+//! * [`calib`]    — Phase 1: calibration-set construction with time
+//!   grouping (eq. 9/10).
+//! * [`capture`]  — Phase 2: layer-wise forward/backward over the
+//!   calibration set via the `dit_capture` artifact; streams per-layer
+//!   evidence (inputs + Fisher diagonals) into bounded reservoirs.
+//! * [`quantize`] — Phase 3: time-aware quantization — alternating
+//!   HO rounds for linear/matmul layers, MRQ for post-GELU /
+//!   post-softmax, TGQ for the post-softmax sites (eq. 12–17).
+//!
+//! [`baselines`] re-implements the three comparison calibrators
+//! (Q-Diffusion, PTQD, PTQ4DiT — simplified per DESIGN.md §1);
+//! [`store`] holds the resulting [`store::QuantConfig`] and packs the
+//! runtime qparams vectors; [`pipeline`] wires everything into the
+//! calibrate→quantize→sample→evaluate flows the tables use.
+
+pub mod baselines;
+pub mod calib;
+pub mod capture;
+pub mod pipeline;
+pub mod quantize;
+pub mod report;
+pub mod store;
+
+pub use store::QuantConfig;

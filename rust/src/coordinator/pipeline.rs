@@ -1,0 +1,264 @@
+//! End-to-end pipelines: calibrate → quantize → sample → evaluate.
+//!
+//! This is the module the tables, figures and examples drive. One
+//! [`Pipeline`] owns the PJRT runtime, the FP weights and the run
+//! configuration; [`Pipeline::calibrate`] produces a [`QuantConfig`]
+//! (plus the Table-IV cost counters) for any [`Method`], and
+//! [`Pipeline::evaluate`] turns a config into a Table-I/II row.
+
+use anyhow::Result;
+
+use crate::coordinator::baselines;
+use crate::coordinator::calib::CalibSet;
+use crate::coordinator::capture::{run_capture, CaptureOpts, Evidence};
+use crate::coordinator::quantize::{quantize, QuantizeOpts};
+use crate::coordinator::QuantConfig;
+use crate::data::SynthDataset;
+use crate::metrics::{EvalRow, Evaluator};
+use crate::model::WeightStore;
+use crate::runtime::Runtime;
+use crate::sampler::Sampler;
+use crate::sched::{DdpmSchedule, TimeGroups};
+use crate::util::config::RunConfig;
+use crate::util::meminfo::MemProbe;
+use crate::util::rng::Rng;
+
+/// The five columns of Tables I/II.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Fp,
+    QDiffusion,
+    Ptqd,
+    Ptq4Dit,
+    TqDit,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Fp => "fp",
+            Method::QDiffusion => "q-diffusion",
+            Method::Ptqd => "ptqd",
+            Method::Ptq4Dit => "ptq4dit",
+            Method::TqDit => "tq-dit",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Method> {
+        Some(match s {
+            "fp" => Method::Fp,
+            "q-diffusion" | "qdiff" => Method::QDiffusion,
+            "ptqd" => Method::Ptqd,
+            "ptq4dit" => Method::Ptq4Dit,
+            "tq-dit" | "tqdit" => Method::TqDit,
+            _ => return None,
+        })
+    }
+
+    pub const ALL_QUANT: [Method; 4] = [
+        Method::QDiffusion,
+        Method::Ptqd,
+        Method::Ptq4Dit,
+        Method::TqDit,
+    ];
+}
+
+/// Calibration cost (Table IV): wall-clock, peak-RSS delta, evidence
+/// bytes and objective evaluations.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CalibCost {
+    pub wall_s: f64,
+    pub peak_rss_delta: u64,
+    pub evidence_bytes: usize,
+    pub evals: u64,
+    pub capture_batches: usize,
+}
+
+impl CalibCost {
+    pub fn print(&self, label: &str) {
+        println!(
+            "{label:<14} calib {:>7.2}s  mem {:>10}  evidence {:>10}  \
+             {:>8} evals  {:>4} capture batches",
+            self.wall_s,
+            crate::util::meminfo::fmt_bytes(self.peak_rss_delta),
+            crate::util::meminfo::fmt_bytes(self.evidence_bytes as u64),
+            self.evals,
+            self.capture_batches,
+        );
+    }
+}
+
+/// Owns everything an experiment needs.
+pub struct Pipeline {
+    pub rt: Runtime,
+    pub weights: WeightStore,
+    pub cfg: RunConfig,
+    pub ds: SynthDataset,
+    pub groups: TimeGroups,
+}
+
+impl Pipeline {
+    pub fn new(cfg: RunConfig) -> Result<Pipeline> {
+        let rt = Runtime::load(std::path::Path::new(&cfg.artifacts))?;
+        let weights = WeightStore::load(&rt.manifest)?;
+        let m = &rt.manifest.model;
+        let ds = SynthDataset::new(m.img_size, m.channels, m.num_classes);
+        let groups =
+            TimeGroups::new(rt.manifest.diffusion.train_steps, cfg.groups);
+        Ok(Pipeline { rt, weights, cfg, ds, groups })
+    }
+
+    pub fn schedule(&self) -> DdpmSchedule {
+        let d = &self.rt.manifest.diffusion;
+        DdpmSchedule::new(d.train_steps, d.beta_start, d.beta_end,
+                          self.cfg.timesteps)
+    }
+
+    /// Phase 1+2 for the time-grouped (TQ-DiT) path.
+    pub fn grouped_evidence(&self, rng: &mut Rng)
+                            -> Result<(CalibSet, Evidence)> {
+        let sched = self.schedule();
+        let calib = CalibSet::build(&self.ds, &sched, &self.groups,
+                                    self.cfg.calib_per_group, rng);
+        let ev = run_capture(&self.rt, &self.weights, &calib,
+                             CaptureOpts::default())?;
+        Ok((calib, ev))
+    }
+
+    /// Phase 1+2 for the ungrouped baselines; `scale` multiplies the
+    /// calibration-set size (PTQ4DiT uses a large set — its Table IV
+    /// cost — while Q-Diffusion/PTQD match TQ-DiT's total).
+    pub fn ungrouped_evidence(&self, scale: usize, caps: CaptureOpts,
+                              rng: &mut Rng) -> Result<(CalibSet, Evidence)> {
+        let sched = self.schedule();
+        let total = self.cfg.calib_per_group * self.cfg.groups * scale;
+        let calib = CalibSet::build_ungrouped(&self.ds, &sched, &self.groups,
+                                              total, rng);
+        let ev = run_capture(&self.rt, &self.weights, &calib, caps)?;
+        Ok((calib, ev))
+    }
+
+    /// Calibrate with `method`, measuring Table-IV costs.
+    pub fn calibrate(&self, method: Method, rng: &mut Rng)
+                     -> Result<(QuantConfig, CalibCost)> {
+        let probe = MemProbe::start();
+        let t0 = std::time::Instant::now();
+        let c = &self.cfg;
+        let (qc, evals, ev_bytes, batches) = match method {
+            Method::Fp => {
+                return Ok((QuantConfig::fp(self.groups.clone()),
+                           CalibCost::default()))
+            }
+            Method::TqDit => {
+                let (_, ev) = self.grouped_evidence(rng)?;
+                let opts = QuantizeOpts {
+                    wbits: c.wbits,
+                    abits: c.abits,
+                    rounds: c.rounds,
+                    candidates: c.candidates,
+                    use_ho: c.use_ho,
+                    use_mrq: c.use_mrq,
+                    use_tgq: c.use_tgq,
+                    coarse_fine: true,
+                    max_merged_mats: 24,
+                };
+                let (qc, cost) = quantize(&self.rt.manifest, &self.weights,
+                                          &ev, &self.groups, "tq-dit",
+                                          opts)?;
+                (qc, cost.evals, ev.bytes(), ev.batches_run)
+            }
+            Method::QDiffusion => {
+                let (_, ev) =
+                    self.ungrouped_evidence(1, CaptureOpts::default(), rng)?;
+                let (qc, cost) = baselines::q_diffusion(
+                    &self.rt.manifest, &self.weights, &ev, &self.groups,
+                    c.wbits, c.abits, c.rounds, c.candidates)?;
+                (qc, cost.evals, ev.bytes(), ev.batches_run)
+            }
+            Method::Ptqd => {
+                let (calib, ev) =
+                    self.ungrouped_evidence(1, CaptureOpts::default(), rng)?;
+                let (qc, cost) = baselines::ptqd(
+                    &self.rt, &self.weights, &ev, &calib, &self.groups,
+                    c.wbits, c.abits, c.rounds, c.candidates)?;
+                (qc, cost.evals, ev.bytes(), ev.batches_run)
+            }
+            Method::Ptq4Dit => {
+                // salience pass over a 4× calibration set with inflated
+                // evidence reservoirs and flat 2× candidate grids.
+                let caps = CaptureOpts {
+                    max_mats_matmul: 16,
+                    max_mats_linear: 8,
+                    // 3× the rows TQ-DiT keeps — the salience pass wants
+                    // a denser view of the token distribution. Together
+                    // with the 4× calib set and flat 2× grids this puts
+                    // its calibration cost ~an order of magnitude above
+                    // TQ-DiT's, the Table IV regime.
+                    max_rows_linear: 192,
+                };
+                let (_, ev) = self.ungrouped_evidence(4, caps, rng)?;
+                let (qc, cost) = baselines::ptq4dit(
+                    &self.rt.manifest, &self.weights, &ev, &self.groups,
+                    c.wbits, c.abits, c.rounds, c.candidates * 2)?;
+                (qc, cost.evals, ev.bytes(), ev.batches_run)
+            }
+        };
+        let cost = CalibCost {
+            wall_s: t0.elapsed().as_secs_f64(),
+            peak_rss_delta: probe.finish().rss_delta,
+            evidence_bytes: ev_bytes,
+            evals,
+            capture_batches: batches,
+        };
+        Ok((qc, cost))
+    }
+
+    /// Sample `n` images under `qc` and score FID/sFID/IS.
+    pub fn evaluate(&self, qc: &QuantConfig, n: usize, seed: u64)
+                    -> Result<EvalRow> {
+        let sampler = Sampler::new(&self.rt, &self.weights, qc.clone(),
+                                   self.cfg.timesteps)?;
+        let mut eval = Evaluator::new(&self.rt)?;
+        let mut rng = Rng::new(seed);
+        sampler.generate(n, self.ds.num_classes, &mut rng,
+                         |imgs, _| eval.push_images(imgs))?;
+        eval.finish()
+    }
+
+    /// Sample a grid of images (Fig. 6) under `qc`.
+    pub fn sample_grid(&self, qc: &QuantConfig, n: usize, seed: u64)
+                       -> Result<Vec<f32>> {
+        let sampler = Sampler::new(&self.rt, &self.weights, qc.clone(),
+                                   self.cfg.timesteps)?;
+        let mut rng = Rng::new(seed);
+        let mut out = Vec::with_capacity(n * sampler.img_len());
+        sampler.generate(n, self.ds.num_classes, &mut rng, |imgs, _| {
+            out.extend_from_slice(imgs);
+            Ok(())
+        })?;
+        Ok(out)
+    }
+
+    /// One full table row: calibrate + evaluate.
+    pub fn table_cell(&self, method: Method, n_eval: usize)
+                      -> Result<(EvalRow, CalibCost)> {
+        let mut rng = Rng::new(self.cfg.seed ^ 0x5eed);
+        let (qc, cost) = self.calibrate(method, &mut rng)?;
+        let row = self.evaluate(&qc, n_eval, self.cfg.seed ^ 0xe7a1)?;
+        Ok((row, cost))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_names_roundtrip() {
+        for m in [Method::Fp, Method::QDiffusion, Method::Ptqd,
+                  Method::Ptq4Dit, Method::TqDit] {
+            assert_eq!(Method::parse(m.name()), Some(m));
+        }
+        assert_eq!(Method::parse("nope"), None);
+    }
+}

@@ -1,0 +1,286 @@
+//! Quantization-error attribution: which sites/layers eat the error
+//! budget under a calibrated config.
+//!
+//! For every layer the captured evidence lets us score the chosen
+//! parameters with the same HO objective the search used (eq. 16/17) —
+//! both in absolute terms and relative to the layer's FP output power.
+//! The report is the practical debugging tool behind Table III: it
+//! shows the post-softmax/post-GELU sites dominating the baseline's
+//! loss and the MRQ/TGQ variants reclaiming it.
+
+use crate::coordinator::capture::Evidence;
+use crate::coordinator::store::QuantConfig;
+use crate::model::WeightStore;
+use crate::quant::ho::quant_loss;
+use crate::quant::SiteParams;
+use crate::runtime::Manifest;
+
+/// Error attribution for one layer under one config.
+#[derive(Clone, Debug)]
+pub struct LayerReport {
+    pub layer: String,
+    pub ltype: String,
+    /// HO (Fisher-weighted) quantization loss, summed over evidence.
+    pub ho_loss: f64,
+    /// Plain squared error (no Fisher weighting).
+    pub mse_loss: f64,
+    /// Σ z_fp² over the same evidence — normalizer for `relative()`.
+    pub fp_power: f64,
+    /// Evidence matrices scored.
+    pub n_mats: usize,
+}
+
+impl LayerReport {
+    /// MSE loss relative to the FP output power (scale-free).
+    pub fn relative(&self) -> f64 {
+        self.mse_loss / self.fp_power.max(1e-30)
+    }
+}
+
+/// Score every layer of `qc` against the captured evidence.
+///
+/// TGQ sites are scored per group with that group's overlay (exactly
+/// what the sampler applies); everything else uses the group-shared
+/// parameters. Weights are fake-quantized with the config's weight
+/// quantizers, mirroring the runtime path.
+pub fn error_report(manifest: &Manifest, weights: &WeightStore,
+                    ev: &Evidence, qc: &QuantConfig) -> Vec<LayerReport> {
+    let wq = weights.fakequant(&qc.weights);
+    let mut out = Vec::with_capacity(manifest.layers.len());
+    for layer in &manifest.layers {
+        let le = ev.layer(&layer.name);
+        let mut rep = LayerReport {
+            layer: layer.name.clone(),
+            ltype: layer.ltype.clone(),
+            ho_loss: 0.0,
+            mse_loss: 0.0,
+            fp_power: 0.0,
+            n_mats: 0,
+        };
+        for g in 0..le.a.len() {
+            // effective params for this group
+            let pa = qc.site_for_group(&layer.sites[0].name, g);
+            let pb = if layer.ltype == "matmul" {
+                qc.site_for_group(&layer.sites[1].name, g)
+            } else {
+                SiteParams::Bypass // weight quant applied via `wq`
+            };
+            for (i, am) in le.a[g].iter().enumerate() {
+                let bm_fp = if layer.ltype == "linear" {
+                    weights.get(&layer.weight).unwrap().clone()
+                } else {
+                    le.b[g][i].clone()
+                };
+                let bm_q = if layer.ltype == "linear" {
+                    wq.get(&layer.weight).unwrap().clone()
+                } else {
+                    le.b[g][i].clone()
+                };
+                let z_fp = am.matmul(&bm_fp);
+                let mut aq = am.clone();
+                pa.apply(&mut aq.data);
+                let mut bq = bm_q;
+                pb.apply(&mut bq.data);
+                let z_q = aq.matmul(&bq);
+                let grad = le.fisher[g].get(i).map(|f| f.data.as_slice());
+                rep.ho_loss += quant_loss(&z_fp.data, &z_q.data, grad);
+                rep.mse_loss += quant_loss(&z_fp.data, &z_q.data, None);
+                rep.fp_power += z_fp
+                    .data
+                    .iter()
+                    .map(|&v| (v as f64) * v as f64)
+                    .sum::<f64>();
+                rep.n_mats += 1;
+            }
+        }
+        out.push(rep);
+    }
+    out
+}
+
+/// Pretty-print a report, worst layers first.
+pub fn print_report(mut reps: Vec<LayerReport>, label: &str) {
+    reps.sort_by(|a, b| b.relative().partial_cmp(&a.relative()).unwrap());
+    println!("== per-layer quantization error ({label}) ==");
+    println!("{:<18} {:<7} {:>12} {:>12} {:>10}", "layer", "type",
+             "HO loss", "rel. MSE", "evidence");
+    for r in &reps {
+        println!("{:<18} {:<7} {:>12.4e} {:>12.4e} {:>10}", r.layer,
+                 r.ltype, r.ho_loss, r.relative(), r.n_mats);
+    }
+    let total: f64 = reps.iter().map(|r| r.ho_loss).sum();
+    println!("{:<26} {:>12.4e}", "total HO loss", total);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::capture::LayerEvidence;
+    use crate::quant::UniformQ;
+    use crate::runtime::artifacts::{Batches, DiffusionMeta, LayerMeta,
+                                    ModelMeta, SiteKind, SiteMeta};
+    use crate::sched::TimeGroups;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+    use std::collections::BTreeMap;
+
+    fn toy_manifest() -> Manifest {
+        Manifest {
+            dir: std::env::temp_dir(),
+            model: ModelMeta {
+                img_size: 4, channels: 3, patch: 2, dim: 4, depth: 1,
+                heads: 1, num_classes: 2, mlp_ratio: 2, freq_dim: 4,
+                tokens: 4, head_dim: 4, patch_dim: 12,
+            },
+            diffusion: DiffusionMeta {
+                train_steps: 10, beta_start: 1e-4, beta_end: 0.02,
+            },
+            params: vec![("l0.w".into(), vec![4, 6])],
+            layers: vec![
+                LayerMeta {
+                    name: "l0".into(),
+                    ltype: "linear".into(),
+                    weight: "l0.w".into(),
+                    sites: vec![SiteMeta {
+                        name: "l0.x".into(),
+                        kind: SiteKind::Uniform,
+                        tgq: false,
+                        qp_offset: 0,
+                    }],
+                },
+                LayerMeta {
+                    name: "m0".into(),
+                    ltype: "matmul".into(),
+                    weight: String::new(),
+                    sites: vec![
+                        SiteMeta { name: "m0.a".into(),
+                                   kind: SiteKind::MrqSoftmax,
+                                   tgq: true, qp_offset: 4 },
+                        SiteMeta { name: "m0.b".into(),
+                                   kind: SiteKind::Uniform,
+                                   tgq: false, qp_offset: 8 },
+                    ],
+                },
+            ],
+            qp_len: 12,
+            batches: Batches { calib: 1, sample: 1, train: 1, feat: 1 },
+            capture_outputs: vec![],
+            feat_dim: 1,
+            spat_dim: 1,
+            classifier_acc: 0.0,
+            feat_params: vec![],
+            clf_params: vec![],
+            artifacts: BTreeMap::new(),
+            weights_file: "w.bin".into(),
+            metric_weights_file: "mw.bin".into(),
+            fid_ref_file: "f.bin".into(),
+        }
+    }
+
+    fn toy_evidence(groups: usize) -> Evidence {
+        let mut rng = Rng::new(1);
+        let mut linear = LayerEvidence::new("linear", groups);
+        let mut matmul = LayerEvidence::new("matmul", groups);
+        for g in 0..groups {
+            linear.a[g].push(Tensor::new(vec![5, 4], rng.normal_vec(20)));
+            linear.fisher[g].push(Tensor::new(vec![5, 6],
+                                              rng.normal_vec(30)));
+            matmul.a[g].push(Tensor::new(
+                vec![3, 3],
+                rng.normal_vec(9).iter().map(|v| (v.abs() * 0.1).min(1.0))
+                    .collect()));
+            matmul.b[g].push(Tensor::new(vec![3, 2], rng.normal_vec(6)));
+            matmul.fisher[g].push(Tensor::new(vec![3, 2],
+                                              rng.normal_vec(6)));
+        }
+        let mut layers = std::collections::HashMap::new();
+        layers.insert("l0".to_string(), linear);
+        layers.insert("m0".to_string(), matmul);
+        Evidence {
+            layers,
+            groups,
+            softmax_hist: crate::tensor::stats::Histogram::new(0.0, 1.0, 8),
+            gelu_hist: crate::tensor::stats::Histogram::new(-1.0, 1.0, 8),
+            softmax_max_by_t: vec![],
+            batches_run: groups,
+        }
+    }
+
+    fn toy_weights(man: &Manifest, rng: &mut Rng) -> WeightStore {
+        WeightStore::from_tensors(man, vec![
+            Tensor::new(vec![4, 6], rng.normal_vec(24)),
+        ])
+    }
+
+    #[test]
+    fn fp_config_reports_zero_error() {
+        let man = toy_manifest();
+        let mut rng = Rng::new(2);
+        let ws = toy_weights(&man, &mut rng);
+        let ev = toy_evidence(2);
+        let qc = QuantConfig::fp(TimeGroups::new(10, 2));
+        let reps = error_report(&man, &ws, &ev, &qc);
+        assert_eq!(reps.len(), 2);
+        for r in &reps {
+            assert_eq!(r.ho_loss, 0.0, "{}", r.layer);
+            assert_eq!(r.mse_loss, 0.0);
+            assert!(r.fp_power > 0.0);
+            assert_eq!(r.n_mats, 2);
+        }
+    }
+
+    #[test]
+    fn coarser_bits_report_more_error() {
+        let man = toy_manifest();
+        let mut rng = Rng::new(3);
+        let ws = toy_weights(&man, &mut rng);
+        let ev = toy_evidence(2);
+        let tg = TimeGroups::new(10, 2);
+
+        let mk = |bits: u32| {
+            let mut qc = QuantConfig::new("t", bits, bits, tg.clone());
+            qc.weights.insert("l0.w".into(),
+                              UniformQ::from_minmax(-3.0, 3.0, bits));
+            qc.sites.insert("l0.x".into(), SiteParams::Uniform(
+                UniformQ::from_minmax(-3.0, 3.0, bits)));
+            qc.sites.insert("m0.a".into(), SiteParams::Uniform(
+                UniformQ::from_minmax(0.0, 1.0, bits)));
+            qc.sites.insert("m0.b".into(), SiteParams::Uniform(
+                UniformQ::from_minmax(-3.0, 3.0, bits)));
+            qc
+        };
+        let r8: f64 = error_report(&man, &ws, &ev, &mk(8)).iter()
+            .map(|r| r.mse_loss).sum();
+        let r4: f64 = error_report(&man, &ws, &ev, &mk(4)).iter()
+            .map(|r| r.mse_loss).sum();
+        assert!(r8 > 0.0);
+        assert!(r4 > r8 * 2.0, "r4 {r4} r8 {r8}");
+    }
+
+    #[test]
+    fn tgq_overlay_is_scored_per_group() {
+        let man = toy_manifest();
+        let mut rng = Rng::new(4);
+        let ws = toy_weights(&man, &mut rng);
+        let ev = toy_evidence(2);
+        let tg = TimeGroups::new(10, 2);
+        let mut qc = QuantConfig::new("t", 8, 8, tg);
+        // group 0: ludicrously coarse; group 1: fine — per-group scoring
+        // must land between all-coarse and all-fine.
+        qc.tgq.insert("m0.a".into(), vec![
+            SiteParams::Uniform(UniformQ::from_minmax(0.0, 1.0, 1)),
+            SiteParams::Uniform(UniformQ::from_minmax(0.0, 1.0, 8)),
+        ]);
+        let mixed: f64 = error_report(&man, &ws, &ev, &qc)
+            .iter().find(|r| r.layer == "m0").unwrap().mse_loss;
+
+        let mut coarse = QuantConfig::new("t", 8, 8,
+                                          TimeGroups::new(10, 2));
+        coarse.sites.insert("m0.a".into(), SiteParams::Uniform(
+            UniformQ::from_minmax(0.0, 1.0, 1)));
+        let all_coarse: f64 = error_report(&man, &ws, &ev, &coarse)
+            .iter().find(|r| r.layer == "m0").unwrap().mse_loss;
+        assert!(mixed < all_coarse);
+        assert!(mixed > 0.0);
+    }
+}

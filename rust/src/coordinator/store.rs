@@ -1,0 +1,167 @@
+//! Quantization configuration store + runtime qparams packing.
+//!
+//! A [`QuantConfig`] is the complete output of any calibrator: per-site
+//! activation parameters (with per-time-group overlays for TGQ sites),
+//! per-weight quantizers, and optional PTQD-style output correction.
+//! `qparams_for_group` packs the flat f32 vector the `dit_quant`
+//! artifact consumes; the sampler swaps vectors at group boundaries.
+
+use std::collections::HashMap;
+
+use crate::quant::{SiteParams, UniformQ, QP_STRIDE};
+use crate::runtime::Manifest;
+use crate::sched::TimeGroups;
+
+/// PTQD-style quantization-noise correction statistics (per time group).
+#[derive(Clone, Copy, Debug)]
+pub struct NoiseCorrection {
+    /// Correlated part: ε̂ ≈ ρ·ε_fp → divide by ρ.
+    pub rho: f32,
+    /// Mean residual bias to subtract.
+    pub bias: f32,
+    /// Residual (uncorrelated) variance to remove from σ².
+    pub resid_var: f32,
+}
+
+impl Default for NoiseCorrection {
+    fn default() -> Self {
+        NoiseCorrection { rho: 1.0, bias: 0.0, resid_var: 0.0 }
+    }
+}
+
+/// Complete quantization decision for one (method, bit-width) run.
+#[derive(Clone, Debug)]
+pub struct QuantConfig {
+    /// Human-readable calibrator name ("tq-dit", "q-diffusion", ...).
+    pub method: String,
+    pub wbits: u32,
+    pub abits: u32,
+    /// Activation params per site (group-independent sites).
+    pub sites: HashMap<String, SiteParams>,
+    /// TGQ overlays: site → per-group params (len = groups).
+    pub tgq: HashMap<String, Vec<SiteParams>>,
+    /// Weight quantizers by param name (host-side fake-quant).
+    pub weights: HashMap<String, UniformQ>,
+    /// Time grouping used for the TGQ overlays.
+    pub groups: TimeGroups,
+    /// PTQD sampler correction per time group (identity by default).
+    pub correction: Vec<NoiseCorrection>,
+}
+
+impl QuantConfig {
+    /// Full-precision passthrough (every slot bypassed).
+    pub fn fp(groups: TimeGroups) -> QuantConfig {
+        QuantConfig {
+            method: "fp".into(),
+            wbits: 32,
+            abits: 32,
+            sites: HashMap::new(),
+            tgq: HashMap::new(),
+            weights: HashMap::new(),
+            groups: groups.clone(),
+            correction: vec![NoiseCorrection::default(); groups.groups],
+        }
+    }
+
+    pub fn new(method: &str, wbits: u32, abits: u32, groups: TimeGroups)
+               -> QuantConfig {
+        QuantConfig {
+            method: method.into(),
+            wbits,
+            abits,
+            sites: HashMap::new(),
+            tgq: HashMap::new(),
+            weights: HashMap::new(),
+            groups: groups.clone(),
+            correction: vec![NoiseCorrection::default(); groups.groups],
+        }
+    }
+
+    /// Site params effective for time group `g`.
+    pub fn site_for_group(&self, site: &str, g: usize) -> SiteParams {
+        if let Some(per_group) = self.tgq.get(site) {
+            return per_group[g.min(per_group.len() - 1)];
+        }
+        self.sites.get(site).copied().unwrap_or(SiteParams::Bypass)
+    }
+
+    /// Pack the flat qparams vector for time group `g`.
+    pub fn qparams_for_group(&self, manifest: &Manifest, g: usize)
+                             -> Vec<f32> {
+        let mut v = vec![0.0f32; manifest.qp_len];
+        for layer in &manifest.layers {
+            for site in &layer.sites {
+                let p = self.site_for_group(&site.name, g);
+                p.encode(&mut v[site.qp_offset..site.qp_offset + QP_STRIDE]);
+            }
+        }
+        v
+    }
+
+    /// All per-group qparams vectors (precomputed for the sampler).
+    pub fn qparams_all_groups(&self, manifest: &Manifest) -> Vec<Vec<f32>> {
+        (0..self.groups.groups)
+            .map(|g| self.qparams_for_group(manifest, g))
+            .collect()
+    }
+
+    /// Correction for the group containing training timestep `t`.
+    pub fn correction_for_t(&self, t: usize) -> NoiseCorrection {
+        let g = self.groups.group_of(t.min(self.groups.t_total - 1));
+        self.correction[g.min(self.correction.len() - 1)]
+    }
+
+    /// True if any TGQ overlay differs across groups (sampler fast-path
+    /// check: no overlay → one packed vector for the whole trajectory).
+    pub fn has_tgq(&self) -> bool {
+        !self.tgq.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::MrqSoftmax;
+
+    fn groups() -> TimeGroups {
+        TimeGroups::new(250, 10)
+    }
+
+    #[test]
+    fn fp_config_is_all_bypass() {
+        let c = QuantConfig::fp(groups());
+        assert_eq!(c.site_for_group("anything", 3), SiteParams::Bypass);
+        assert!(!c.has_tgq());
+    }
+
+    #[test]
+    fn tgq_overlay_wins_over_base_site() {
+        let mut c = QuantConfig::new("tq-dit", 8, 8, groups());
+        c.sites.insert(
+            "blk0.av.a".into(),
+            SiteParams::MrqSoftmax(MrqSoftmax::new(0.9, 8)),
+        );
+        let per_group: Vec<SiteParams> = (0..10)
+            .map(|g| {
+                SiteParams::MrqSoftmax(MrqSoftmax::new(1e-3 * (g + 1) as f32, 8))
+            })
+            .collect();
+        c.tgq.insert("blk0.av.a".into(), per_group);
+        match c.site_for_group("blk0.av.a", 4) {
+            SiteParams::MrqSoftmax(m) => {
+                assert!((m.s1 - 5e-3).abs() < 1e-9)
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(c.has_tgq());
+    }
+
+    #[test]
+    fn correction_defaults_are_identity() {
+        let c = QuantConfig::new("ptqd", 8, 8, groups());
+        let nc = c.correction_for_t(200);
+        assert_eq!(nc.rho, 1.0);
+        assert_eq!(nc.bias, 0.0);
+        assert_eq!(nc.resid_var, 0.0);
+    }
+}

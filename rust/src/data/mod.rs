@@ -1,0 +1,5 @@
+//! Synthetic dataset substrate.
+
+pub mod synth;
+
+pub use synth::SynthDataset;

@@ -1,0 +1,185 @@
+//! Synthetic class-conditional dataset — rust mirror of
+//! `python/compile/data.py` (same class parameterization; the model was
+//! trained on the python generator, the rust generator feeds calibration
+//! and the train-from-rust driver; see DESIGN.md §1).
+
+use crate::util::rng::Rng;
+
+const PHI: f64 = 0.618_033_988_75;
+
+/// Deterministic per-class geometry/hue (mirrors `data.class_params`).
+#[derive(Clone, Copy, Debug)]
+pub struct ClassParams {
+    pub cx: f32,
+    pub cy: f32,
+    pub sigma: f32,
+    pub hue: [f32; 3],
+    pub freq: f32,
+    pub angle: f32,
+}
+
+pub fn class_params(k: usize) -> ClassParams {
+    let u = (k as f64 * PHI) % 1.0;
+    let cx = 0.25 + 0.5 * u;
+    let cy = 0.25 + 0.5 * ((u + 0.37) % 1.0);
+    let sigma = 0.12 + 0.10 * ((k as u64 * 2_654_435_761) % 97) as f64 / 97.0;
+    let hue = [
+        0.5 + 0.5 * (2.0 * std::f64::consts::PI * u).cos(),
+        0.5 + 0.5 * (2.0 * std::f64::consts::PI * (u + 1.0 / 3.0)).cos(),
+        0.5 + 0.5 * (2.0 * std::f64::consts::PI * (u + 2.0 / 3.0)).cos(),
+    ];
+    let freq = 1.0 + (k % 4) as f64;
+    let angle = std::f64::consts::PI * u;
+    ClassParams {
+        cx: cx as f32,
+        cy: cy as f32,
+        sigma: sigma as f32,
+        hue: [hue[0] as f32, hue[1] as f32, hue[2] as f32],
+        freq: freq as f32,
+        angle: angle as f32,
+    }
+}
+
+/// Generator for (image, label) batches in [-1, 1], NHWC.
+#[derive(Clone, Debug)]
+pub struct SynthDataset {
+    pub img_size: usize,
+    pub channels: usize,
+    pub num_classes: usize,
+}
+
+impl SynthDataset {
+    pub fn new(img_size: usize, channels: usize, num_classes: usize)
+               -> SynthDataset {
+        assert_eq!(channels, 3, "generator is RGB");
+        SynthDataset { img_size, channels, num_classes }
+    }
+
+    /// Pixels per image.
+    pub fn image_len(&self) -> usize {
+        self.img_size * self.img_size * self.channels
+    }
+
+    /// Render one image for class `k` into `out` (len = image_len).
+    pub fn render(&self, k: usize, rng: &mut Rng, out: &mut [f32]) {
+        assert_eq!(out.len(), self.image_len());
+        let h = self.img_size;
+        let p = class_params(k);
+        for yi in 0..h {
+            let y = yi as f32 / (h - 1) as f32;
+            for xi in 0..h {
+                let x = xi as f32 / (h - 1) as f32;
+                let base = if k % 2 == 0 {
+                    let d2 = (x - p.cx) * (x - p.cx) + (y - p.cy) * (y - p.cy);
+                    (-d2 / (2.0 * p.sigma * p.sigma)).exp()
+                } else {
+                    let proj = p.angle.cos() * x + p.angle.sin() * y;
+                    0.5 + 0.5
+                        * (2.0 * std::f32::consts::PI * p.freq * proj).sin()
+                };
+                for c in 0..3 {
+                    let v = 2.0 * (base * p.hue[c]) - 1.0
+                        + 0.05 * rng.normal() as f32;
+                    out[(yi * h + xi) * 3 + c] = v.clamp(-1.0, 1.0);
+                }
+            }
+        }
+    }
+
+    /// Batch of `n` random-class images: (flat pixels, labels).
+    pub fn sample_batch(&self, n: usize, rng: &mut Rng)
+                        -> (Vec<f32>, Vec<i32>) {
+        let mut imgs = vec![0.0f32; n * self.image_len()];
+        let mut labels = Vec::with_capacity(n);
+        let il = self.image_len();
+        for i in 0..n {
+            let k = rng.below(self.num_classes);
+            labels.push(k as i32);
+            self.render(k, rng, &mut imgs[i * il..(i + 1) * il]);
+        }
+        (imgs, labels)
+    }
+
+    /// Batch with the given labels.
+    pub fn batch_for_labels(&self, labels: &[i32], rng: &mut Rng)
+                            -> Vec<f32> {
+        let il = self.image_len();
+        let mut imgs = vec![0.0f32; labels.len() * il];
+        for (i, &k) in labels.iter().enumerate() {
+            self.render(k as usize, rng, &mut imgs[i * il..(i + 1) * il]);
+        }
+        imgs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ds() -> SynthDataset {
+        SynthDataset::new(16, 3, 8)
+    }
+
+    #[test]
+    fn pixels_in_range() {
+        let mut rng = Rng::new(1);
+        let (imgs, labels) = ds().sample_batch(16, &mut rng);
+        assert_eq!(imgs.len(), 16 * 16 * 16 * 3);
+        assert_eq!(labels.len(), 16);
+        assert!(imgs.iter().all(|&v| (-1.0..=1.0).contains(&v)));
+        assert!(labels.iter().all(|&l| (0..8).contains(&l)));
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // mean image distance between two different classes exceeds the
+        // within-class noise floor by a wide margin.
+        let d = ds();
+        let mut rng = Rng::new(2);
+        let il = d.image_len();
+        let mut a1 = vec![0.0; il];
+        let mut a2 = vec![0.0; il];
+        let mut b = vec![0.0; il];
+        d.render(0, &mut rng, &mut a1);
+        d.render(0, &mut rng, &mut a2);
+        d.render(3, &mut rng, &mut b);
+        let within: f32 =
+            a1.iter().zip(&a2).map(|(x, y)| (x - y).abs()).sum::<f32>()
+                / il as f32;
+        let between: f32 =
+            a1.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum::<f32>()
+                / il as f32;
+        assert!(between > 4.0 * within, "between {between} within {within}");
+    }
+
+    #[test]
+    fn class_params_match_python_formulas() {
+        // spot values computed from data.py's formulas
+        let p0 = class_params(0);
+        assert!((p0.cx - 0.25).abs() < 1e-6);
+        assert!((p0.hue[0] - 1.0).abs() < 1e-6);
+        let p1 = class_params(1);
+        assert!((p1.cx - (0.25 + 0.5 * PHI as f32)).abs() < 1e-6);
+        assert!((p1.freq - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn batch_for_labels_is_class_consistent() {
+        let d = ds();
+        let mut rng = Rng::new(3);
+        let labels = vec![2i32, 2, 5];
+        let imgs = d.batch_for_labels(&labels, &mut rng);
+        let il = d.image_len();
+        let d01: f32 = imgs[..il]
+            .iter()
+            .zip(&imgs[il..2 * il])
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        let d02: f32 = imgs[..il]
+            .iter()
+            .zip(&imgs[2 * il..])
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(d01 < d02);
+    }
+}

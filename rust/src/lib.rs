@@ -1,0 +1,40 @@
+//! # TQ-DiT — Efficient Time-Aware Quantization for Diffusion Transformers
+//!
+//! Rust coordinator (L3) of the three-layer reproduction described in
+//! `DESIGN.md`. Python/JAX/Pallas exist only at build time (`make
+//! artifacts`); this crate loads the AOT-lowered HLO-text artifacts via
+//! the PJRT C API and owns everything on the request path: calibration
+//! (Algorithm 1), quantization-parameter search (HO / MRQ / TGQ),
+//! baselines, DDPM sampling with per-time-group parameter switching, a
+//! batched generation service, and the FID/sFID/IS evaluation harness.
+//!
+//! Module map (bottom-up):
+//!
+//! * [`util`] — from-scratch substrates (no crates offline): PRNG,
+//!   JSON parsing, CLI, config files, thread pool, bench harness,
+//!   mini property-testing framework, RSS probes.
+//! * [`tensor`] — host tensors + linear algebra (Jacobi eigendecomposition
+//!   → matrix square root for FID).
+//! * [`quant`] — the paper's quantization math: uniform asymmetric
+//!   quant (eq. 5), multi-region quant (§III-C), Hessian-guided
+//!   objective (eq. 14–17), candidate search.
+//! * [`sched`] — DDPM schedules, respacing, time-grouping (eq. 9).
+//! * [`runtime`] — PJRT client wrapper, artifact manifest, executables.
+//! * [`model`] — weight store + host-side weight fake-quantization.
+//! * [`coordinator`] — Algorithm 1 phases 1–3, baselines, pipelines.
+//! * [`sampler`] — ancestral DDPM sampling loop (TGQ-aware).
+//! * [`serve`] — request queue + dynamic batcher (generation service).
+//! * [`metrics`] — FID / sFID / Inception Score, image writers.
+//! * [`data`] — synthetic dataset (mirror of `python/compile/data.py`).
+
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod sampler;
+pub mod sched;
+pub mod serve;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,289 @@
+//! `tq-dit` — the leader binary: every experiment of the paper behind
+//! one CLI, driving the AOT artifacts through the PJRT runtime.
+//!
+//! Subcommands:
+//!   table          Table I/II rows (FP + any set of calibrators)
+//!   ablation       Table III (Baseline / +HO / +MRQ / +TGQ)
+//!   efficiency     Table IV (calibration time + memory vs PTQ4DiT)
+//!   distributions  Fig. 2/3 CSVs (activation pathologies)
+//!   grid           Fig. 6 sample grids (PPM)
+//!   sample         generate images with one method, write PPMs
+//!   serve          batched generation service demo
+//!   stats          artifact/manifest inventory + exec stats
+//!
+//! Common flags: --artifacts DIR --wbits K --abits K --timesteps T
+//!   --groups G --calib-per-group N --rounds R --candidates C
+//!   --eval-images N --seed S --ho BOOL --mrq BOOL --tgq BOOL
+//!   --config FILE (TOML-subset, overridden by CLI flags)
+
+use anyhow::{bail, Result};
+
+use tq_dit::coordinator::pipeline::{Method, Pipeline};
+use tq_dit::coordinator::QuantConfig;
+use tq_dit::metrics::images::{write_grid_ppm, write_ppm};
+use tq_dit::serve::{GenRequest, GenServer};
+use tq_dit::util::cli::Args;
+use tq_dit::util::config::RunConfig;
+use tq_dit::util::logging;
+use tq_dit::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = if argv.first().map(|s| !s.starts_with("--")).unwrap_or(false) {
+        argv.remove(0)
+    } else {
+        "help".to_string()
+    };
+    let args = Args::parse(argv);
+    if args.flag("verbose") {
+        logging::set_level(logging::Level::Debug);
+    }
+    let cfg = RunConfig::from_args(&args)?;
+
+    match cmd.as_str() {
+        "table" => cmd_table(cfg, &args),
+        "ablation" => cmd_ablation(cfg),
+        "efficiency" => cmd_efficiency(cfg),
+        "distributions" => cmd_distributions(cfg, &args),
+        "grid" => cmd_grid(cfg, &args),
+        "sample" => cmd_sample(cfg, &args),
+        "serve" => cmd_serve(cfg, &args),
+        "report" => cmd_report(cfg, &args),
+        "stats" => cmd_stats(cfg),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown subcommand `{other}` (try `tq-dit help`)"),
+    }
+}
+
+const HELP: &str = "\
+tq-dit — Time-Aware Quantization for Diffusion Transformers
+
+USAGE: tq-dit <subcommand> [--flags]
+
+SUBCOMMANDS
+  table          Table I/II rows (use --methods a,b,c and --timesteps)
+  ablation       Table III ablation at the configured bit-width
+  efficiency     Table IV calibration-cost comparison
+  distributions  Fig. 2/3 activation-distribution CSVs (--out-dir)
+  grid           Fig. 6 sample grids as PPM (--out-dir, --rows, --cols)
+  sample         generate images with --method, write PPMs (--out-dir)
+  serve          batched generation service demo (--requests)
+  report         per-layer quantization-error attribution (--method)
+  stats          manifest inventory
+
+FLAGS (all subcommands)
+  --artifacts DIR       AOT artifact directory  [artifacts]
+  --wbits K --abits K   weight/activation bits  [8/8]
+  --timesteps T         sampler steps           [250]
+  --groups G            TGQ time groups         [10]
+  --calib-per-group N   calib samples per group [32]
+  --rounds R            alternating HO rounds   [3]
+  --candidates C        scale candidates per 1-D search [80]
+  --eval-images N       images per FID/IS cell  [256]
+  --ho/--mrq/--tgq B    ablation toggles        [true]
+  --seed S --verbose --config FILE
+";
+
+fn cmd_table(cfg: RunConfig, args: &Args) -> Result<()> {
+    let methods: Vec<Method> = args
+        .str_or("methods", "q-diffusion,ptqd,ptq4dit,tq-dit")
+        .split(',')
+        .filter_map(Method::parse)
+        .collect();
+    println!("== T={} W{}A{} ({} eval images) ==", cfg.timesteps, cfg.wbits,
+             cfg.abits, cfg.eval_images);
+    println!("{:<22} {:>9} {:>9} {:>8} {:>9}", "method", "FID", "sFID",
+             "IS", "calib(s)");
+    let pipe = Pipeline::new(cfg.clone())?;
+    let fp = QuantConfig::fp(pipe.groups.clone());
+    let r = pipe.evaluate(&fp, cfg.eval_images, cfg.seed ^ 0xe7a1)?;
+    println!("{:<22} {:>9.3} {:>9.3} {:>8.3} {:>9}", "FP (32/32)", r.fid,
+             r.sfid, r.is_score, "-");
+    for method in methods {
+        let mut rng = Rng::new(cfg.seed ^ 0x5eed);
+        let (qc, cost) = pipe.calibrate(method, &mut rng)?;
+        let row = pipe.evaluate(&qc, cfg.eval_images, cfg.seed ^ 0xe7a1)?;
+        println!("{:<22} {:>9.3} {:>9.3} {:>8.3} {:>9.1}",
+                 format!("{} ({}/{})", method.name(), cfg.wbits, cfg.abits),
+                 row.fid, row.sfid, row.is_score, cost.wall_s);
+    }
+    Ok(())
+}
+
+fn cmd_ablation(cfg: RunConfig) -> Result<()> {
+    println!("== ablation (W{}A{}, T={}) ==", cfg.wbits, cfg.abits,
+             cfg.timesteps);
+    println!("{:<24} {:>9} {:>9} {:>8}", "config", "FID", "sFID", "IS");
+    let mut pipe = Pipeline::new(cfg.clone())?;
+    let fp = QuantConfig::fp(pipe.groups.clone());
+    let r = pipe.evaluate(&fp, cfg.eval_images, cfg.seed ^ 0xe7a1)?;
+    println!("{:<24} {:>9.3} {:>9.3} {:>8.3}", "FP", r.fid, r.sfid,
+             r.is_score);
+    for (label, ho, mrq, tgq) in [
+        ("Baseline", false, false, false),
+        ("+ HO", true, false, false),
+        ("+ HO + MRQ", true, true, false),
+        ("+ HO + MRQ + TGQ", true, true, true),
+    ] {
+        pipe.cfg.use_ho = ho;
+        pipe.cfg.use_mrq = mrq;
+        pipe.cfg.use_tgq = tgq;
+        let mut rng = Rng::new(cfg.seed ^ 0x5eed);
+        let (qc, _) = pipe.calibrate(Method::TqDit, &mut rng)?;
+        let row = pipe.evaluate(&qc, cfg.eval_images, cfg.seed ^ 0xe7a1)?;
+        println!("{:<24} {:>9.3} {:>9.3} {:>8.3}", label, row.fid, row.sfid,
+                 row.is_score);
+    }
+    Ok(())
+}
+
+fn cmd_efficiency(cfg: RunConfig) -> Result<()> {
+    let pipe = Pipeline::new(cfg.clone())?;
+    for method in [Method::Ptq4Dit, Method::TqDit] {
+        let mut rng = Rng::new(cfg.seed ^ 0x5eed);
+        let (_, cost) = pipe.calibrate(method, &mut rng)?;
+        cost.print(method.name());
+    }
+    Ok(())
+}
+
+fn cmd_distributions(cfg: RunConfig, args: &Args) -> Result<()> {
+    use std::io::Write;
+    let out_dir = args.str_or("out-dir", ".").to_string();
+    let pipe = Pipeline::new(cfg.clone())?;
+    let mut rng = Rng::new(cfg.seed);
+    let (_, ev) = pipe.grouped_evidence(&mut rng)?;
+    for (name, hist) in [("fig2a_softmax_hist.csv", &ev.softmax_hist),
+                         ("fig2b_gelu_hist.csv", &ev.gelu_hist)] {
+        let p = std::path::Path::new(&out_dir).join(name);
+        let mut f = std::fs::File::create(&p)?;
+        writeln!(f, "center,density")?;
+        for (c, d) in hist.densities() {
+            writeln!(f, "{c},{d}")?;
+        }
+        println!("wrote {}", p.display());
+    }
+    let p = std::path::Path::new(&out_dir).join("fig3_softmax_max_by_t.csv");
+    let mut rows = ev.softmax_max_by_t.clone();
+    rows.sort_by_key(|r| r.0);
+    let mut f = std::fs::File::create(&p)?;
+    writeln!(f, "timestep,max_softmax")?;
+    for (t, m) in rows {
+        writeln!(f, "{t},{m}")?;
+    }
+    println!("wrote {}", p.display());
+    Ok(())
+}
+
+fn cmd_grid(cfg: RunConfig, args: &Args) -> Result<()> {
+    let out_dir = args.str_or("out-dir", ".").to_string();
+    let rows = args.usize("rows", 4);
+    let cols = args.usize("cols", 8);
+    let pipe = Pipeline::new(cfg.clone())?;
+    let m = pipe.rt.manifest.model.clone();
+    let fp = QuantConfig::fp(pipe.groups.clone());
+    let imgs = pipe.sample_grid(&fp, rows * cols, cfg.seed ^ 0x9b1d)?;
+    let p = std::path::Path::new(&out_dir).join("fig6_fp.ppm");
+    write_grid_ppm(&p, &imgs, m.img_size, m.img_size, rows, cols)?;
+    println!("wrote {}", p.display());
+    for method in [Method::Ptq4Dit, Method::TqDit] {
+        let mut rng = Rng::new(cfg.seed ^ 0x5eed);
+        let (qc, _) = pipe.calibrate(method, &mut rng)?;
+        let imgs = pipe.sample_grid(&qc, rows * cols, cfg.seed ^ 0x9b1d)?;
+        let p = std::path::Path::new(&out_dir).join(format!(
+            "fig6_{}_w{}a{}.ppm", method.name(), cfg.wbits, cfg.abits));
+        write_grid_ppm(&p, &imgs, m.img_size, m.img_size, rows, cols)?;
+        println!("wrote {}", p.display());
+    }
+    Ok(())
+}
+
+fn cmd_sample(cfg: RunConfig, args: &Args) -> Result<()> {
+    let out_dir = args.str_or("out-dir", ".").to_string();
+    let n = args.usize("n", 8);
+    let method = Method::parse(args.str_or("method", "tq-dit"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --method"))?;
+    let pipe = Pipeline::new(cfg.clone())?;
+    let m = pipe.rt.manifest.model.clone();
+    let qc = if method == Method::Fp {
+        QuantConfig::fp(pipe.groups.clone())
+    } else {
+        let mut rng = Rng::new(cfg.seed ^ 0x5eed);
+        pipe.calibrate(method, &mut rng)?.0
+    };
+    let imgs = pipe.sample_grid(&qc, n, cfg.seed ^ 0x9b1d)?;
+    let il = m.img_size * m.img_size * m.channels;
+    for i in 0..n {
+        let p = std::path::Path::new(&out_dir)
+            .join(format!("sample_{}_{i:03}.ppm", method.name()));
+        write_ppm(&p, &imgs[i * il..(i + 1) * il], m.img_size, m.img_size)?;
+    }
+    println!("wrote {n} samples to {out_dir}");
+    Ok(())
+}
+
+fn cmd_serve(cfg: RunConfig, args: &Args) -> Result<()> {
+    let n_req = args.usize("requests", 6);
+    let method = Method::parse(args.str_or("method", "tq-dit"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --method"))?;
+    let server = GenServer::start(cfg, method);
+    let mut handles = Vec::new();
+    for i in 0..n_req {
+        let req = GenRequest { class: (i % 8) as i32, n: 3 + (i * 5) % 11 };
+        handles.push((i, server.submit(req)));
+    }
+    for (i, (id, rx)) in handles {
+        let resp = rx.recv()?;
+        println!("req {i} (id {id}): {} px in {:.2}s", resp.images.len(),
+                 resp.latency_s);
+    }
+    server.shutdown().print();
+    Ok(())
+}
+
+fn cmd_report(cfg: RunConfig, args: &Args) -> Result<()> {
+    let method = Method::parse(args.str_or("method", "tq-dit"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --method"))?;
+    let pipe = Pipeline::new(cfg.clone())?;
+    let mut rng = Rng::new(cfg.seed ^ 0x5eed);
+    let (qc, _) = pipe.calibrate(method, &mut rng)?;
+    // fresh evidence (held-out seed) so the report is not scored on the
+    // same tuples the search optimized
+    let mut rng2 = Rng::new(cfg.seed ^ 0x4e1d);
+    let (_, ev) = {
+        let mut p2 = Pipeline::new(cfg.clone())?;
+        p2.cfg.calib_per_group = (cfg.calib_per_group / 2).max(2);
+        p2.grouped_evidence(&mut rng2)?
+    };
+    let reps = tq_dit::coordinator::report::error_report(
+        &pipe.rt.manifest, &pipe.weights, &ev, &qc);
+    tq_dit::coordinator::report::print_report(
+        reps, &format!("{} W{}A{}", method.name(), cfg.wbits, cfg.abits));
+    Ok(())
+}
+
+fn cmd_stats(cfg: RunConfig) -> Result<()> {
+    let pipe = Pipeline::new(cfg)?;
+    let m = &pipe.rt.manifest;
+    println!("model: dim={} depth={} heads={} tokens={} classes={}",
+             m.model.dim, m.model.depth, m.model.heads, m.model.tokens,
+             m.model.num_classes);
+    println!("diffusion: T_train={} beta=[{}, {}]", m.diffusion.train_steps,
+             m.diffusion.beta_start, m.diffusion.beta_end);
+    println!("params: {} tensors, {} elements", m.n_params(),
+             pipe.weights.n_elements());
+    println!("quant sites: {} ({} qp floats)", m.sites().len(), m.qp_len);
+    println!("classifier acc (build time): {:.3}", m.classifier_acc);
+    println!("artifacts:");
+    for (name, file) in &m.artifacts {
+        let size = std::fs::metadata(m.dir.join(file))
+            .map(|md| md.len())
+            .unwrap_or(0);
+        println!("  {name:<18} {file:<26} {:>9}",
+                 tq_dit::util::meminfo::fmt_bytes(size));
+    }
+    Ok(())
+}

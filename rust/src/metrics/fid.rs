@@ -1,0 +1,131 @@
+//! Fréchet Inception Distance (paper metric [29]) and its spatial
+//! variant sFID [30], over the substitute feature network's Gaussians.
+//!
+//! FID(𝒩₁, 𝒩₂) = ‖μ₁ − μ₂‖² + tr(Σ₁ + Σ₂ − 2·(Σ₁Σ₂)^{1/2}).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::Manifest;
+use crate::tensor::linalg::trace_sqrt_product;
+
+/// Reference Gaussian statistics computed by `aot.py` over the real
+/// synthetic-data distribution (`fid_ref.bin`: mu_f, cov_f, mu_s, cov_s
+/// as f32 LE in that order).
+#[derive(Clone, Debug)]
+pub struct RefStats {
+    pub mu_f: Vec<f64>,
+    pub cov_f: Vec<f64>,
+    pub mu_s: Vec<f64>,
+    pub cov_s: Vec<f64>,
+}
+
+impl RefStats {
+    pub fn load(manifest: &Manifest) -> Result<RefStats> {
+        let path = manifest.dir.join(&manifest.fid_ref_file);
+        Self::load_file(&path, manifest.feat_dim, manifest.spat_dim)
+    }
+
+    pub fn load_file(path: &Path, feat_dim: usize, spat_dim: usize)
+                     -> Result<RefStats> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let expected =
+            (feat_dim + feat_dim * feat_dim + spat_dim + spat_dim * spat_dim)
+                * 4;
+        if bytes.len() != expected {
+            bail!("fid_ref.bin: {} bytes, expected {}", bytes.len(), expected);
+        }
+        let mut vals = bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]) as f64);
+        let mut take = |n: usize| -> Vec<f64> {
+            (0..n).map(|_| vals.next().unwrap()).collect()
+        };
+        Ok(RefStats {
+            mu_f: take(feat_dim),
+            cov_f: take(feat_dim * feat_dim),
+            mu_s: take(spat_dim),
+            cov_s: take(spat_dim * spat_dim),
+        })
+    }
+}
+
+/// Fréchet distance between two Gaussians (μ, Σ row-major d×d).
+pub fn frechet_distance(mu1: &[f64], cov1: &[f64], mu2: &[f64],
+                        cov2: &[f64], d: usize) -> f64 {
+    assert_eq!(mu1.len(), d);
+    assert_eq!(mu2.len(), d);
+    assert_eq!(cov1.len(), d * d);
+    assert_eq!(cov2.len(), d * d);
+    let mut diff2 = 0.0f64;
+    for i in 0..d {
+        let dd = mu1[i] - mu2[i];
+        diff2 += dd * dd;
+    }
+    let tr1: f64 = (0..d).map(|i| cov1[i * d + i]).sum();
+    let tr2: f64 = (0..d).map(|i| cov2[i * d + i]).sum();
+    let cross = trace_sqrt_product(cov1, cov2, d);
+    // numerical noise can push the estimate a hair below zero
+    (diff2 + tr1 + tr2 - 2.0 * cross).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn eye(d: usize, s: f64) -> Vec<f64> {
+        let mut m = vec![0.0; d * d];
+        for i in 0..d {
+            m[i * d + i] = s;
+        }
+        m
+    }
+
+    #[test]
+    fn identical_gaussians_have_zero_fid() {
+        let mu = vec![0.3, -1.0, 2.0];
+        let cov = eye(3, 2.0);
+        let f = frechet_distance(&mu, &cov, &mu, &cov, 3);
+        assert!(f.abs() < 1e-9, "{f}");
+    }
+
+    #[test]
+    fn mean_shift_adds_squared_distance() {
+        let cov = eye(2, 1.0);
+        let f = frechet_distance(&[0.0, 0.0], &cov, &[3.0, 4.0], &cov, 2);
+        assert!((f - 25.0).abs() < 1e-8, "{f}");
+    }
+
+    #[test]
+    fn isotropic_scale_formula() {
+        // Σ₁ = a·I, Σ₂ = b·I → FID = d·(√a − √b)²
+        let d = 4;
+        let f = frechet_distance(
+            &vec![0.0; d], &eye(d, 4.0), &vec![0.0; d], &eye(d, 1.0), d);
+        let expect = d as f64 * (2.0 - 1.0f64).powi(2);
+        assert!((f - expect).abs() < 1e-8, "{f} vs {expect}");
+    }
+
+    #[test]
+    fn fid_is_symmetric() {
+        let c1 = vec![2.0, 0.3, 0.3, 1.0];
+        let c2 = vec![1.0, -0.1, -0.1, 3.0];
+        let a = frechet_distance(&[0., 1.], &c1, &[1., 0.], &c2, 2);
+        let b = frechet_distance(&[1., 0.], &c2, &[0., 1.], &c1, 2);
+        assert!((a - b).abs() < 1e-8);
+        assert!(a > 0.0);
+    }
+
+    #[test]
+    fn wider_distribution_increases_fid() {
+        let d = 3;
+        let base = eye(d, 1.0);
+        let f1 = frechet_distance(&vec![0.0; d], &eye(d, 1.2), &vec![0.0; d],
+                                  &base, d);
+        let f2 = frechet_distance(&vec![0.0; d], &eye(d, 3.0), &vec![0.0; d],
+                                  &base, d);
+        assert!(f2 > f1);
+    }
+}

@@ -1,0 +1,100 @@
+//! Image output: [-1, 1] float NHWC → binary PPM, plus the Fig. 6-style
+//! sample-grid assembler.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Map a [-1, 1] float to a u8 pixel.
+pub fn to_u8(v: f32) -> u8 {
+    (((v.clamp(-1.0, 1.0) + 1.0) * 0.5) * 255.0).round() as u8
+}
+
+/// Write one (H, W, C) image as binary PPM (P6). C must be 3.
+pub fn write_ppm(path: &Path, img: &[f32], h: usize, w: usize) -> Result<()> {
+    assert_eq!(img.len(), h * w * 3, "PPM writer needs 3 channels");
+    let mut buf = Vec::with_capacity(32 + h * w * 3);
+    write!(buf, "P6\n{w} {h}\n255\n")?;
+    buf.extend(img.iter().map(|&v| to_u8(v)));
+    std::fs::write(path, &buf)
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+/// Assemble n images (each H×W×3, flat, row-major batch) into a
+/// rows×cols grid with a 1-px black border, returning (grid, GH, GW).
+pub fn make_grid(images: &[f32], h: usize, w: usize, rows: usize,
+                 cols: usize) -> (Vec<f32>, usize, usize) {
+    let il = h * w * 3;
+    let n = images.len() / il;
+    let (gh, gw) = (rows * (h + 1) + 1, cols * (w + 1) + 1);
+    let mut grid = vec![-1.0f32; gh * gw * 3];
+    for idx in 0..n.min(rows * cols) {
+        let (r, c) = (idx / cols, idx % cols);
+        let (y0, x0) = (1 + r * (h + 1), 1 + c * (w + 1));
+        let img = &images[idx * il..(idx + 1) * il];
+        for y in 0..h {
+            for x in 0..w {
+                let src = (y * w + x) * 3;
+                let dst = ((y0 + y) * gw + (x0 + x)) * 3;
+                grid[dst..dst + 3].copy_from_slice(&img[src..src + 3]);
+            }
+        }
+    }
+    (grid, gh, gw)
+}
+
+/// Write a grid of images straight to a PPM file.
+pub fn write_grid_ppm(path: &Path, images: &[f32], h: usize, w: usize,
+                      rows: usize, cols: usize) -> Result<()> {
+    let (grid, gh, gw) = make_grid(images, h, w, rows, cols);
+    write_ppm(path, &grid, gh, gw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pixel_mapping_endpoints() {
+        assert_eq!(to_u8(-1.0), 0);
+        assert_eq!(to_u8(1.0), 255);
+        assert_eq!(to_u8(0.0), 128);
+        // out-of-range clamps
+        assert_eq!(to_u8(-5.0), 0);
+        assert_eq!(to_u8(5.0), 255);
+    }
+
+    #[test]
+    fn grid_dimensions() {
+        let imgs = vec![0.0f32; 4 * 2 * 2 * 3]; // 4 images of 2x2
+        let (grid, gh, gw) = make_grid(&imgs, 2, 2, 2, 2);
+        assert_eq!((gh, gw), (7, 7));
+        assert_eq!(grid.len(), 7 * 7 * 3);
+    }
+
+    #[test]
+    fn grid_places_image_content() {
+        // one all-white 2x2 image in a 1x1 grid
+        let imgs = vec![1.0f32; 2 * 2 * 3];
+        let (grid, gh, gw) = make_grid(&imgs, 2, 2, 1, 1);
+        assert_eq!((gh, gw), (4, 4));
+        // border is black (-1), interior pixel (1,1) is white
+        assert_eq!(grid[0], -1.0);
+        let inner = (1 * gw + 1) * 3;
+        assert_eq!(grid[inner], 1.0);
+    }
+
+    #[test]
+    fn ppm_roundtrip_header() {
+        let dir = std::env::temp_dir().join("tqdit_ppm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.ppm");
+        write_ppm(&p, &vec![0.0f32; 2 * 3 * 3], 2, 3).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert!(bytes.starts_with(b"P6\n3 2\n255\n"));
+        assert_eq!(bytes.len(), 11 + 18);
+        std::fs::remove_file(&p).ok();
+    }
+}

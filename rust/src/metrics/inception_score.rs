@@ -1,0 +1,89 @@
+//! Inception Score (paper metric [31]) over the trained substitute
+//! classifier's per-image class posteriors.
+//!
+//! IS = exp( E_x[ KL(p(y|x) ‖ p(y)) ] ) with p(y) the marginal over the
+//! evaluated set. Higher is better (confident AND diverse predictions).
+
+/// Compute IS from per-image probability rows (each sums to 1).
+pub fn inception_score(probs: &[Vec<f32>]) -> f64 {
+    if probs.is_empty() {
+        return 0.0;
+    }
+    let k = probs[0].len();
+    // marginal p(y)
+    let mut marg = vec![0.0f64; k];
+    for p in probs {
+        debug_assert_eq!(p.len(), k);
+        for (m, &v) in marg.iter_mut().zip(p) {
+            *m += v as f64;
+        }
+    }
+    for m in marg.iter_mut() {
+        *m /= probs.len() as f64;
+    }
+    // mean KL(p(y|x) || p(y))
+    let mut kl_sum = 0.0f64;
+    for p in probs {
+        let mut kl = 0.0f64;
+        for (j, &v) in p.iter().enumerate() {
+            let v = v as f64;
+            if v > 1e-12 && marg[j] > 1e-12 {
+                kl += v * (v / marg[j]).ln();
+            }
+        }
+        kl_sum += kl;
+    }
+    (kl_sum / probs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_predictions_score_one() {
+        // every image: uniform posterior → KL to uniform marginal = 0
+        let probs = vec![vec![0.25f32; 4]; 10];
+        assert!((inception_score(&probs) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn confident_diverse_predictions_score_k() {
+        // each image is a confident one-hot, classes balanced → IS = k
+        let k = 4;
+        let probs: Vec<Vec<f32>> = (0..16)
+            .map(|i| {
+                let mut p = vec![0.0f32; k];
+                p[i % k] = 1.0;
+                p
+            })
+            .collect();
+        assert!((inception_score(&probs) - k as f64).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mode_collapse_scores_one() {
+        // all images confidently the SAME class → marginal == posterior
+        let probs: Vec<Vec<f32>> = (0..16)
+            .map(|_| vec![1.0f32, 0.0, 0.0, 0.0])
+            .collect();
+        assert!((inception_score(&probs) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn is_bounded_by_class_count() {
+        // arbitrary mixtures never exceed k
+        let probs = vec![
+            vec![0.7f32, 0.1, 0.1, 0.1],
+            vec![0.1, 0.7, 0.1, 0.1],
+            vec![0.25, 0.25, 0.25, 0.25],
+        ];
+        let is = inception_score(&probs);
+        assert!(is >= 1.0 - 1e-9 && is <= 4.0 + 1e-9, "{is}");
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        assert_eq!(inception_score(&[]), 0.0);
+    }
+}

@@ -1,0 +1,188 @@
+//! Evaluation metrics — FID, sFID, Inception Score — plus image writers.
+//!
+//! The paper evaluates every (method, bit-width) cell with FID [29],
+//! sFID [30] and IS [31]. Feature extraction runs through the AOT
+//! `feature_net` / `classifier` artifacts (InceptionV3 substitutes, see
+//! DESIGN.md §1); the Fréchet distance itself is host-side f64 math on
+//! the accumulated Gaussian statistics.
+
+pub mod fid;
+pub mod images;
+pub mod inception_score;
+
+pub use fid::{frechet_distance, RefStats};
+pub use inception_score::inception_score;
+
+use anyhow::Result;
+
+use crate::runtime::Runtime;
+use crate::tensor::stats::GaussStats;
+use crate::tensor::Tensor;
+
+/// One evaluation row (a Table I/II cell).
+#[derive(Clone, Copy, Debug)]
+pub struct EvalRow {
+    pub fid: f64,
+    pub sfid: f64,
+    pub is_score: f64,
+    /// Images evaluated.
+    pub n: usize,
+}
+
+impl EvalRow {
+    pub fn print(&self, label: &str) {
+        println!(
+            "{label:<28} FID {:>8.3}  sFID {:>8.3}  IS {:>7.3}  (n={})",
+            self.fid, self.sfid, self.is_score, self.n
+        );
+    }
+}
+
+/// Streaming evaluator: feed generated image batches, finish into an
+/// [`EvalRow`]. Feature batches are padded to the artifact's fixed batch
+/// size and the padding rows discarded.
+pub struct Evaluator<'a> {
+    rt: &'a Runtime,
+    refs: RefStats,
+    feat: GaussStats,
+    spat: GaussStats,
+    /// Per-image class probabilities (for IS).
+    probs: Vec<Vec<f32>>,
+    /// Metric-net weights, resident on device (feature net; classifier).
+    feat_bufs: Vec<xla::PjRtBuffer>,
+    clf_bufs: Vec<xla::PjRtBuffer>,
+    img_len: usize,
+    feat_batch: usize,
+    /// Buffered images not yet featurized.
+    pending: Vec<f32>,
+    pending_n: usize,
+}
+
+impl<'a> Evaluator<'a> {
+    pub fn new(rt: &'a Runtime) -> Result<Evaluator<'a>> {
+        let m = &rt.manifest;
+        let refs = RefStats::load(m)?;
+        let (fw, cw) = m.load_metric_weights()?;
+        let feat_bufs = rt.upload_all(&fw)?;
+        let clf_bufs = rt.upload_all(&cw)?;
+        let img_len = m.model.img_size * m.model.img_size * m.model.channels;
+        Ok(Evaluator {
+            rt,
+            feat: GaussStats::new(m.feat_dim),
+            spat: GaussStats::new(m.spat_dim),
+            refs,
+            probs: Vec::new(),
+            feat_bufs,
+            clf_bufs,
+            img_len,
+            feat_batch: m.batches.feat,
+            pending: Vec::new(),
+            pending_n: 0,
+        })
+    }
+
+    /// Add generated images, flat (n, H, W, C) in [-1, 1].
+    pub fn push_images(&mut self, images: &[f32]) -> Result<()> {
+        assert_eq!(images.len() % self.img_len, 0);
+        self.pending.extend_from_slice(images);
+        self.pending_n += images.len() / self.img_len;
+        while self.pending_n >= self.feat_batch {
+            self.flush_one_batch(self.feat_batch)?;
+        }
+        Ok(())
+    }
+
+    fn flush_one_batch(&mut self, real: usize) -> Result<()> {
+        let m = &self.rt.manifest;
+        let fb = self.feat_batch;
+        let mut data = self.pending[..real * self.img_len].to_vec();
+        // pad to the fixed artifact batch by repeating the first image
+        data.resize(fb * self.img_len, 0.0);
+        if real < fb {
+            for i in real..fb {
+                let (src, dst) = data.split_at_mut(i * self.img_len);
+                dst[..self.img_len].copy_from_slice(&src[..self.img_len]);
+            }
+        }
+        let img = Tensor::new(
+            vec![fb, m.model.img_size, m.model.img_size, m.model.channels],
+            data,
+        );
+        let imgb = self.rt.upload(&img)?;
+        let mut fin: Vec<&xla::PjRtBuffer> = self.feat_bufs.iter().collect();
+        fin.push(&imgb);
+        let feats = self.rt.run_buffers("feature_net", &fin)?;
+        // feature_net returns (feat (FB, feat_dim), spat (FB, spat_dim))
+        let f = &feats[0];
+        let s = &feats[1];
+        for i in 0..real {
+            self.feat.push(&f.data[i * m.feat_dim..(i + 1) * m.feat_dim]);
+            self.spat.push(&s.data[i * m.spat_dim..(i + 1) * m.spat_dim]);
+        }
+        let mut cin: Vec<&xla::PjRtBuffer> = self.clf_bufs.iter().collect();
+        cin.push(&imgb);
+        let logits = self.rt.run_buffers("classifier", &cin)?;
+        let l = &logits[0];
+        let nc = l.cols();
+        for i in 0..real {
+            let row = &l.data[i * nc..(i + 1) * nc];
+            self.probs.push(softmax(row));
+        }
+        // drop consumed images
+        self.pending.drain(..real * self.img_len);
+        self.pending_n -= real;
+        Ok(())
+    }
+
+    /// Finalize: flush the tail, compute FID/sFID/IS.
+    pub fn finish(mut self) -> Result<EvalRow> {
+        while self.pending_n > 0 {
+            let real = self.pending_n.min(self.feat_batch);
+            self.flush_one_batch(real)?;
+        }
+        let n = self.feat.count;
+        anyhow::ensure!(n > 1, "need at least 2 images to evaluate");
+        let fid = frechet_distance(
+            &self.feat.mean(),
+            &self.feat.cov(),
+            &self.refs.mu_f,
+            &self.refs.cov_f,
+            self.feat.dim,
+        );
+        let sfid = frechet_distance(
+            &self.spat.mean(),
+            &self.spat.cov(),
+            &self.refs.mu_s,
+            &self.refs.cov_s,
+            self.spat.dim,
+        );
+        let is_score = inception_score(&self.probs);
+        Ok(EvalRow { fid, sfid, is_score, n })
+    }
+}
+
+/// Numerically-stable softmax of one logit row.
+pub fn softmax(logits: &[f32]) -> Vec<f32> {
+    let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let exp: Vec<f32> = logits.iter().map(|&x| (x - m).exp()).collect();
+    let s: f32 = exp.iter().sum();
+    exp.iter().map(|&e| e / s).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn softmax_handles_large_logits() {
+        let p = softmax(&[1000.0, 1000.0]);
+        assert!((p[0] - 0.5).abs() < 1e-6);
+    }
+}

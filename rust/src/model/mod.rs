@@ -1,0 +1,5 @@
+//! Model-side host state: weight store + weight fake-quantization.
+
+pub mod weights;
+
+pub use weights::WeightStore;

@@ -1,0 +1,215 @@
+//! Weight store: loads `weights.bin` (f32 LE, canonical flat order from
+//! the manifest) and performs host-side weight fake-quantization —
+//! weights are runtime inputs to every artifact, so weight quantization
+//! never requires recompiling (DESIGN.md §3).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::quant::UniformQ;
+use crate::runtime::Manifest;
+use crate::tensor::Tensor;
+
+/// All model parameters, in canonical order + by-name index.
+#[derive(Clone, Debug)]
+pub struct WeightStore {
+    /// Tensors in the manifest's flat parameter order.
+    pub tensors: Vec<Tensor>,
+    index: HashMap<String, usize>,
+}
+
+impl WeightStore {
+    /// Load from `weights.bin` next to the manifest.
+    pub fn load(manifest: &Manifest) -> Result<WeightStore> {
+        let path = manifest.dir.join(&manifest.weights_file);
+        Self::load_file(&path, manifest)
+    }
+
+    pub fn load_file(path: &Path, manifest: &Manifest) -> Result<WeightStore> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let expected: usize = manifest
+            .params
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>())
+            .sum();
+        if bytes.len() != expected * 4 {
+            bail!(
+                "weights.bin: {} bytes, expected {} ({} f32)",
+                bytes.len(),
+                expected * 4,
+                expected
+            );
+        }
+        let mut tensors = Vec::with_capacity(manifest.params.len());
+        let mut index = HashMap::new();
+        let mut off = 0usize;
+        for (i, (name, shape)) in manifest.params.iter().enumerate() {
+            let n: usize = shape.iter().product();
+            let data: Vec<f32> = bytes[off..off + n * 4]
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            off += n * 4;
+            tensors.push(Tensor::new(shape.clone(), data));
+            index.insert(name.clone(), i);
+        }
+        Ok(WeightStore { tensors, index })
+    }
+
+    /// Build from in-memory tensors (tests / train-from-rust driver).
+    pub fn from_tensors(manifest: &Manifest, tensors: Vec<Tensor>)
+                        -> WeightStore {
+        assert_eq!(tensors.len(), manifest.params.len());
+        let index = manifest
+            .params
+            .iter()
+            .enumerate()
+            .map(|(i, (n, _))| (n.clone(), i))
+            .collect();
+        WeightStore { tensors, index }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.index.get(name).map(|&i| &self.tensors[i])
+    }
+
+    pub fn position(&self, name: &str) -> Option<usize> {
+        self.index.get(name).copied()
+    }
+
+    /// Total parameter count.
+    pub fn n_elements(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// Clone with the named weights fake-quantized using the provided
+    /// per-weight quantizers (weight names → params). Non-listed tensors
+    /// (biases, embeddings, pos_embed) stay full precision.
+    pub fn fakequant(&self, wq: &HashMap<String, UniformQ>) -> WeightStore {
+        let mut out = self.clone();
+        for (name, q) in wq {
+            if let Some(&i) = out.index.get(name.as_str()) {
+                q.fakequant_slice(&mut out.tensors[i].data);
+            }
+        }
+        out
+    }
+
+    /// Serialize back to the weights.bin layout (train-from-rust driver).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.n_elements() * 4);
+        for t in &self.tensors {
+            for v in &t.data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::{Batches, DiffusionMeta, ModelMeta};
+    use std::collections::BTreeMap;
+
+    /// Minimal 2-param manifest for loader tests.
+    fn toy_manifest(dir: &Path) -> Manifest {
+        Manifest {
+            dir: dir.to_path_buf(),
+            model: ModelMeta {
+                img_size: 4, channels: 3, patch: 2, dim: 4, depth: 1,
+                heads: 1, num_classes: 2, mlp_ratio: 2, freq_dim: 4,
+                tokens: 4, head_dim: 4, patch_dim: 12,
+            },
+            diffusion: DiffusionMeta {
+                train_steps: 10, beta_start: 1e-4, beta_end: 0.02,
+            },
+            params: vec![
+                ("w1".into(), vec![2, 3]),
+                ("b1".into(), vec![3]),
+            ],
+            layers: vec![],
+            qp_len: 0,
+            batches: Batches { calib: 1, sample: 1, train: 1, feat: 1 },
+            capture_outputs: vec![],
+            feat_dim: 1,
+            spat_dim: 1,
+            classifier_acc: 0.0,
+            feat_params: vec![],
+            clf_params: vec![],
+            artifacts: BTreeMap::new(),
+            weights_file: "weights.bin".into(),
+            metric_weights_file: "metric_weights.bin".into(),
+            fid_ref_file: "fid_ref.bin".into(),
+        }
+    }
+
+    #[test]
+    fn roundtrip_through_bytes() {
+        let dir = std::env::temp_dir();
+        let man = toy_manifest(&dir);
+        let ws = WeightStore::from_tensors(&man, vec![
+            Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]),
+            Tensor::new(vec![3], vec![-1., 0., 1.]),
+        ]);
+        let bytes = ws.to_bytes();
+        assert_eq!(bytes.len(), 9 * 4);
+        let tmp = dir.join("tqdit_weights_test.bin");
+        std::fs::write(&tmp, &bytes).unwrap();
+        let back = WeightStore::load_file(&tmp, &man).unwrap();
+        assert_eq!(back.get("w1").unwrap().data, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(back.get("b1").unwrap().data, vec![-1., 0., 1.]);
+        assert_eq!(back.position("b1"), Some(1));
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn load_rejects_size_mismatch() {
+        let dir = std::env::temp_dir();
+        let man = toy_manifest(&dir);
+        let tmp = dir.join("tqdit_weights_bad.bin");
+        std::fs::write(&tmp, [0u8; 12]).unwrap();
+        assert!(WeightStore::load_file(&tmp, &man).is_err());
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn fakequant_touches_only_listed_weights() {
+        let dir = std::env::temp_dir();
+        let man = toy_manifest(&dir);
+        let ws = WeightStore::from_tensors(&man, vec![
+            Tensor::new(vec![2, 3], vec![0.11, 0.52, -0.97, 0.33, 0.7, -0.2]),
+            Tensor::new(vec![3], vec![0.123, -0.456, 0.789]),
+        ]);
+        let mut wq = HashMap::new();
+        wq.insert("w1".to_string(), UniformQ::from_minmax(-1.0, 1.0, 4));
+        let q = ws.fakequant(&wq);
+        // w1 changed (4-bit grid), b1 untouched
+        assert_ne!(q.get("w1").unwrap().data, ws.get("w1").unwrap().data);
+        assert_eq!(q.get("b1").unwrap().data, ws.get("b1").unwrap().data);
+        // quantized values lie on the 4-bit grid
+        let g = UniformQ::from_minmax(-1.0, 1.0, 4);
+        for &v in &q.get("w1").unwrap().data {
+            assert!((g.fakequant(v) - v).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn unknown_weight_names_are_ignored() {
+        let dir = std::env::temp_dir();
+        let man = toy_manifest(&dir);
+        let ws = WeightStore::from_tensors(&man, vec![
+            Tensor::zeros(vec![2, 3]),
+            Tensor::zeros(vec![3]),
+        ]);
+        let mut wq = HashMap::new();
+        wq.insert("nonexistent".to_string(),
+                  UniformQ::from_minmax(-1.0, 1.0, 8));
+        let q = ws.fakequant(&wq); // must not panic
+        assert_eq!(q.n_elements(), 9);
+    }
+}

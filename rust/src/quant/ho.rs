@@ -1,0 +1,81 @@
+//! Hessian-guided objective (paper §III-B, eq. 14–17).
+//!
+//! The pre-activation Hessian is approximated by the diagonal Fisher
+//! information matrix: `H ≈ diag((∂L/∂z)²)` with L the DDPM noise-MSE
+//! (eq. 11). The quantization loss for a layer is then
+//! `Σᵢ gᵢ² · (z_fp,i − z_q,i)²` — squared gradients captured once by the
+//! `dit_capture` artifact and reused across every candidate evaluation.
+
+/// Fisher-weighted (HO) or plain (MSE-baseline) sum of squared errors.
+///
+/// `grad` holds ∂L/∂z (NOT pre-squared); pass `None` for the plain MSE
+/// objective used by the ablation baseline (Table III row 1).
+pub fn quant_loss(z_fp: &[f32], z_q: &[f32], grad: Option<&[f32]>) -> f64 {
+    debug_assert_eq!(z_fp.len(), z_q.len());
+    match grad {
+        Some(g) => {
+            debug_assert_eq!(g.len(), z_fp.len());
+            let mut acc = 0.0f64;
+            for i in 0..z_fp.len() {
+                let d = (z_fp[i] - z_q[i]) as f64;
+                let w = g[i] as f64;
+                acc += w * w * d * d;
+            }
+            acc
+        }
+        None => {
+            let mut acc = 0.0f64;
+            for i in 0..z_fp.len() {
+                let d = (z_fp[i] - z_q[i]) as f64;
+                acc += d * d;
+            }
+            acc
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_error_is_zero_loss() {
+        let z = [1.0f32, -2.0, 3.0];
+        assert_eq!(quant_loss(&z, &z, None), 0.0);
+        assert_eq!(quant_loss(&z, &z, Some(&[1.0, 1.0, 1.0])), 0.0);
+    }
+
+    #[test]
+    fn unit_weights_equal_mse_sum() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [1.5f32, 2.0, 2.0];
+        let plain = quant_loss(&a, &b, None);
+        let unit = quant_loss(&a, &b, Some(&[1.0, 1.0, 1.0]));
+        assert!((plain - unit).abs() < 1e-12);
+        assert!((plain - (0.25 + 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fisher_emphasizes_high_gradient_outputs() {
+        let z_fp = [0.0f32, 0.0];
+        // same absolute error on both coords
+        let z_q = [0.1f32, 0.1];
+        // coord 0 has 10x the gradient → its error dominates
+        let g = [10.0f32, 1.0];
+        let loss = quant_loss(&z_fp, &z_q, Some(&g));
+        let expected = 100.0 * 0.01 + 1.0 * 0.01;
+        assert!((loss - expected as f64).abs() < 1e-6);
+        // a candidate that fixes coord 0 wins even if coord 1 worsens
+        let fix0 = quant_loss(&z_fp, &[0.0, 0.3], Some(&g));
+        assert!(fix0 < loss);
+    }
+
+    #[test]
+    fn grad_sign_irrelevant() {
+        let a = [1.0f32];
+        let b = [2.0f32];
+        let l1 = quant_loss(&a, &b, Some(&[3.0]));
+        let l2 = quant_loss(&a, &b, Some(&[-3.0]));
+        assert_eq!(l1, l2);
+    }
+}

@@ -1,0 +1,102 @@
+//! The paper's quantization math, host-side.
+//!
+//! * [`uniform`] — uniform asymmetric quantization (paper eq. 5/6) and
+//!   min–max initialization.
+//! * [`mrq`] — multi-region quantization for post-softmax / post-GELU
+//!   distributions (paper §III-C).
+//! * [`ho`] — Hessian-guided objective: diagonal-Fisher-weighted output
+//!   error (paper eq. 14–17).
+//! * [`search`] — candidate-scale grids + alternating W/X optimization
+//!   (Algorithm 1 phase 3).
+//!
+//! These operate on host tensors; the AOT model applies the *same*
+//! arithmetic in-graph (pallas kernels), with parameters fed at runtime.
+
+pub mod ho;
+pub mod mrq;
+pub mod search;
+pub mod uniform;
+
+pub use mrq::{MrqGelu, MrqSoftmax};
+pub use uniform::UniformQ;
+
+/// Stride of one site slot in the flat qparams vector (matches
+/// `python/compile/config.py::QP_STRIDE`).
+pub const QP_STRIDE: usize = 4;
+
+/// A site's quantization parameters, in every paper variant.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SiteParams {
+    /// Full precision (bypass slot: s = 0).
+    Bypass,
+    Uniform(UniformQ),
+    MrqSoftmax(MrqSoftmax),
+    MrqGelu(MrqGelu),
+}
+
+impl SiteParams {
+    /// Encode into a stride-4 qparams slot (layout shared with L2).
+    pub fn encode(&self, slot: &mut [f32]) {
+        assert!(slot.len() >= QP_STRIDE);
+        slot[..QP_STRIDE].fill(0.0);
+        match self {
+            SiteParams::Bypass => {}
+            SiteParams::Uniform(u) => {
+                slot[0] = u.s;
+                slot[1] = u.z;
+                slot[2] = u.levels;
+            }
+            SiteParams::MrqSoftmax(m) => {
+                slot[0] = m.s1;
+                slot[1] = m.half;
+            }
+            SiteParams::MrqGelu(m) => {
+                slot[0] = m.s1;
+                slot[1] = m.s2;
+                slot[2] = m.half;
+            }
+        }
+    }
+
+    /// Apply fake-quant to a slice (host mirror of the pallas kernels).
+    pub fn apply(&self, x: &mut [f32]) {
+        match self {
+            SiteParams::Bypass => {}
+            SiteParams::Uniform(u) => u.fakequant_slice(x),
+            SiteParams::MrqSoftmax(m) => m.fakequant_slice(x),
+            SiteParams::MrqGelu(m) => m.fakequant_slice(x),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_layout() {
+        let mut slot = [9.0f32; 4];
+        SiteParams::Bypass.encode(&mut slot);
+        assert_eq!(slot, [0.0; 4]);
+
+        SiteParams::Uniform(UniformQ { s: 0.5, z: 3.0, levels: 255.0 })
+            .encode(&mut slot);
+        assert_eq!(slot, [0.5, 3.0, 255.0, 0.0]);
+
+        SiteParams::MrqSoftmax(MrqSoftmax { s1: 0.01, half: 128.0 })
+            .encode(&mut slot);
+        assert_eq!(slot, [0.01, 128.0, 0.0, 0.0]);
+
+        SiteParams::MrqGelu(MrqGelu { s1: 0.02, s2: 0.03, half: 32.0 })
+            .encode(&mut slot);
+        assert_eq!(slot, [0.02, 0.03, 32.0, 0.0]);
+    }
+
+    #[test]
+    fn bypass_is_identity() {
+        let mut x = vec![0.1, -0.7, 3.0];
+        let orig = x.clone();
+        SiteParams::Bypass.apply(&mut x);
+        assert_eq!(x, orig);
+    }
+}

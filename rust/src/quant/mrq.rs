@@ -1,0 +1,200 @@
+//! Multi-region quantization (paper §III-C), host mirror of the fused
+//! pallas kernels (`kernels/mrq.py`).
+//!
+//! Post-softmax: values concentrate near 0 in [0, 1]. Two regions —
+//! R1 = [0, 2^{k-1}·s1) quantized with the calibrated step s1 (2^{k-1}
+//! levels), R2 = [2^{k-1}·s1, 1] with the *fixed* step s2 = 1/2^{k-1}.
+//!
+//! Post-GELU: negative tail vs positive body. R1 = [−2^{k-1}·s1, 0] with
+//! step s1, R2 = [0, 2^{k-1}·s2) with step s2, calibrated independently.
+
+/// Twin-uniform post-softmax quantizer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MrqSoftmax {
+    /// Calibrated small-value step.
+    pub s1: f32,
+    /// 2^{k-1} as f32.
+    pub half: f32,
+}
+
+impl MrqSoftmax {
+    pub fn new(s1: f32, bits: u32) -> MrqSoftmax {
+        MrqSoftmax { s1, half: (1u64 << (bits - 1)) as f32 }
+    }
+
+    /// Default s1 so R1 covers [0, 1/2^{k-1}) — the PTQ4ViT-style init.
+    pub fn default_for_bits(bits: u32) -> MrqSoftmax {
+        let half = (1u64 << (bits - 1)) as f32;
+        MrqSoftmax { s1: 1.0 / (half * half), half }
+    }
+
+    pub fn s2(&self) -> f32 {
+        1.0 / self.half
+    }
+
+    pub fn boundary(&self) -> f32 {
+        self.half * self.s1
+    }
+
+    pub fn fakequant(&self, p: f32) -> f32 {
+        if self.s1 <= 0.0 {
+            return p;
+        }
+        if p < self.boundary() {
+            (p / self.s1).round().clamp(0.0, self.half - 1.0) * self.s1
+        } else {
+            let s2 = self.s2();
+            (p / s2).round().clamp(0.0, self.half) * s2
+        }
+    }
+
+    pub fn fakequant_slice(&self, x: &mut [f32]) {
+        if self.s1 <= 0.0 {
+            return;
+        }
+        for v in x.iter_mut() {
+            *v = self.fakequant(*v);
+        }
+    }
+}
+
+/// Two-region post-GELU quantizer (negative / positive).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MrqGelu {
+    /// Negative-region step.
+    pub s1: f32,
+    /// Positive-region step.
+    pub s2: f32,
+    /// 2^{k-1} as f32.
+    pub half: f32,
+}
+
+impl MrqGelu {
+    pub fn new(s1: f32, s2: f32, bits: u32) -> MrqGelu {
+        MrqGelu { s1, s2, half: (1u64 << (bits - 1)) as f32 }
+    }
+
+    /// Min–max init: negative tail of GELU is bounded by ≈ −0.17·|x|…
+    /// use the observed extremes per region.
+    pub fn from_tensor(data: &[f32], bits: u32) -> MrqGelu {
+        let half = (1u64 << (bits - 1)) as f32;
+        let mut neg_min = 0.0f32;
+        let mut pos_max = 0.0f32;
+        for &x in data {
+            if x < neg_min {
+                neg_min = x;
+            }
+            if x > pos_max {
+                pos_max = x;
+            }
+        }
+        // positive grid tops out at level half−1, negative at −half
+        let s1 = (-neg_min).max(1e-8) / half;
+        let s2 = pos_max.max(1e-8) / (half - 1.0);
+        MrqGelu { s1, s2, half }
+    }
+
+    pub fn fakequant(&self, g: f32) -> f32 {
+        if self.s1 <= 0.0 {
+            return g;
+        }
+        if g < 0.0 {
+            (g / self.s1).round().clamp(-self.half, 0.0) * self.s1
+        } else {
+            (g / self.s2).round().clamp(0.0, self.half - 1.0) * self.s2
+        }
+    }
+
+    pub fn fakequant_slice(&self, x: &mut [f32]) {
+        if self.s1 <= 0.0 {
+            return;
+        }
+        for v in x.iter_mut() {
+            *v = self.fakequant(*v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_small_values_use_fine_grid() {
+        let m = MrqSoftmax::new(1.0 / 1024.0, 8); // s1 << s2 = 1/128
+        // a tiny probability keeps sub-s2 resolution
+        let p = 0.002f32;
+        let err = (m.fakequant(p) - p).abs();
+        assert!(err <= m.s1 * 0.5 + 1e-7);
+        // a large probability snaps to the coarse fixed grid
+        let p2 = 0.9f32;
+        let err2 = (m.fakequant(p2) - p2).abs();
+        assert!(err2 <= m.s2() * 0.5 + 1e-7);
+    }
+
+    #[test]
+    fn softmax_one_representable() {
+        let m = MrqSoftmax::default_for_bits(8);
+        assert!((m.fakequant(1.0) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_regions_partition_unit_interval() {
+        let m = MrqSoftmax::new(0.001, 8);
+        let b = m.boundary();
+        assert!(b > 0.0 && b < 1.0);
+        // continuity-ish: both sides of the boundary stay within coarse step
+        let just_below = m.fakequant(b - 1e-4);
+        let just_above = m.fakequant(b + 1e-4);
+        assert!((just_above - just_below).abs() <= m.s2() + m.s1);
+    }
+
+    #[test]
+    fn softmax_monotone_nondecreasing() {
+        let m = MrqSoftmax::new(0.0005, 6);
+        let mut prev = -1.0f32;
+        let mut p = 0.0f32;
+        while p <= 1.0 {
+            let q = m.fakequant(p);
+            assert!(q >= prev - 1e-6, "non-monotone at {p}");
+            prev = q;
+            p += 0.001;
+        }
+    }
+
+    #[test]
+    fn gelu_preserves_sign_regions() {
+        let m = MrqGelu::new(0.002, 0.02, 8);
+        assert!(m.fakequant(-0.15) <= 0.0);
+        assert!(m.fakequant(0.5) >= 0.0);
+        assert_eq!(m.fakequant(0.0), 0.0);
+    }
+
+    #[test]
+    fn gelu_from_tensor_covers_extremes() {
+        let data = [-0.17f32, 0.0, 1.4, 3.0, -0.05];
+        let m = MrqGelu::from_tensor(&data, 8);
+        // extremes representable to within half a step
+        assert!((m.fakequant(3.0) - 3.0).abs() <= m.s2 * 0.5 + 1e-6);
+        assert!((m.fakequant(-0.17) + 0.17).abs() <= m.s1 * 0.5 + 1e-6);
+    }
+
+    #[test]
+    fn gelu_negative_region_finer_than_positive() {
+        // the GELU negative tail is narrow → s1 ends up smaller
+        let data: Vec<f32> = (-300..3000).map(|i| {
+            let x = i as f32 * 0.01;
+            crate::tensor::gelu_scalar(x)
+        }).collect();
+        let m = MrqGelu::from_tensor(&data, 8);
+        assert!(m.s1 < m.s2);
+    }
+
+    #[test]
+    fn bypass_identity() {
+        let m = MrqSoftmax { s1: 0.0, half: 0.0 };
+        assert_eq!(m.fakequant(0.37), 0.37);
+        let g = MrqGelu { s1: 0.0, s2: 0.0, half: 0.0 };
+        assert_eq!(g.fakequant(-0.1), -0.1);
+    }
+}

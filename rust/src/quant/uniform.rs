@@ -1,0 +1,150 @@
+//! Uniform asymmetric quantization — paper eq. (5)/(6).
+//!
+//! `x̂ = s · (clip(⌊x/s⌉ + z, 0, 2^k − 1) − z)`; `s` from the value range
+//! and `z` the zero-point. Must match `kernels/quant.py` and
+//! `kernels/ref.py` bit-for-bit in f32 (tested both here and in the
+//! cross-language integration tests).
+
+/// Uniform asymmetric quantizer parameters for bit-width k.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct UniformQ {
+    pub s: f32,
+    pub z: f32,
+    /// 2^k − 1 as f32 (shared encoding with the qparams vector).
+    pub levels: f32,
+}
+
+impl UniformQ {
+    /// Min–max initialization (the classic PTQ starting point).
+    pub fn from_minmax(min: f32, max: f32, bits: u32) -> UniformQ {
+        let levels = ((1u64 << bits) - 1) as f32;
+        let range = (max - min).max(1e-8);
+        let s = range / levels;
+        let z = (-min / s).round();
+        UniformQ { s, z, levels }
+    }
+
+    /// Initialize from the extreme values of a tensor.
+    pub fn from_tensor(data: &[f32], bits: u32) -> UniformQ {
+        let mut mn = f32::INFINITY;
+        let mut mx = f32::NEG_INFINITY;
+        for &x in data {
+            mn = mn.min(x);
+            mx = mx.max(x);
+        }
+        if !mn.is_finite() || !mx.is_finite() {
+            return UniformQ { s: 0.0, z: 0.0, levels: 0.0 };
+        }
+        Self::from_minmax(mn, mx, bits)
+    }
+
+    /// Same range scaled by `c` around its midpoint (candidate grids).
+    pub fn scaled(&self, c: f32) -> UniformQ {
+        UniformQ { s: self.s * c, z: self.z, levels: self.levels }
+    }
+
+    pub fn fakequant(&self, x: f32) -> f32 {
+        if self.s <= 0.0 {
+            return x;
+        }
+        let q = (x / self.s).round() + self.z;
+        let q = q.clamp(0.0, self.levels);
+        (q - self.z) * self.s
+    }
+
+    pub fn fakequant_slice(&self, x: &mut [f32]) {
+        if self.s <= 0.0 {
+            return;
+        }
+        for v in x.iter_mut() {
+            let q = (*v / self.s).round() + self.z;
+            *v = (q.clamp(0.0, self.levels) - self.z) * self.s;
+        }
+    }
+
+    /// Fake-quant into a fresh vector.
+    pub fn fakequant_vec(&self, x: &[f32]) -> Vec<f32> {
+        let mut out = x.to_vec();
+        self.fakequant_slice(&mut out);
+        out
+    }
+
+    /// Representable range [lo, hi] of the grid.
+    pub fn range(&self) -> (f32, f32) {
+        ((0.0 - self.z) * self.s, (self.levels - self.z) * self.s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_on_grid_points_is_exact() {
+        let q = UniformQ::from_minmax(-1.0, 1.0, 8);
+        for i in 0..=255 {
+            let x = (i as f32 - q.z) * q.s;
+            assert!((q.fakequant(x) - x).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        let q = UniformQ::from_minmax(0.0, 1.0, 8);
+        let (lo, hi) = q.range();
+        assert!(q.fakequant(2.0) <= hi + 1e-6);
+        assert!(q.fakequant(-2.0) >= lo - 1e-6);
+    }
+
+    #[test]
+    fn error_bounded_by_half_step() {
+        let q = UniformQ::from_minmax(-2.0, 2.0, 8);
+        let mut x = -2.0f32;
+        while x <= 2.0 {
+            let e = (q.fakequant(x) - x).abs();
+            assert!(e <= q.s * 0.5 + 1e-6, "x={x} err={e}");
+            x += 0.013;
+        }
+    }
+
+    #[test]
+    fn lower_bits_coarser() {
+        let q8 = UniformQ::from_minmax(-1.0, 1.0, 8);
+        let q4 = UniformQ::from_minmax(-1.0, 1.0, 4);
+        assert!(q4.s > q8.s);
+        // mean abs error over a sweep is larger at 4 bits
+        let xs: Vec<f32> = (0..1000).map(|i| -1.0 + 0.002 * i as f32).collect();
+        let e8: f32 = xs.iter().map(|&x| (q8.fakequant(x) - x).abs()).sum();
+        let e4: f32 = xs.iter().map(|&x| (q4.fakequant(x) - x).abs()).sum();
+        assert!(e4 > e8);
+    }
+
+    #[test]
+    fn zero_maps_near_zero() {
+        // asymmetric range — zero point keeps 0 representable
+        let q = UniformQ::from_minmax(-0.3, 0.9, 8);
+        assert!(q.fakequant(0.0).abs() <= q.s * 0.5 + 1e-6);
+    }
+
+    #[test]
+    fn from_tensor_covers_data() {
+        let data = [-0.5f32, 0.1, 0.9, 0.3];
+        let q = UniformQ::from_tensor(&data, 8);
+        let (lo, hi) = q.range();
+        assert!(lo <= -0.5 + q.s && hi >= 0.9 - q.s);
+    }
+
+    #[test]
+    fn degenerate_tensor_safe() {
+        let q = UniformQ::from_tensor(&[0.5; 8], 8);
+        // constant tensor: tiny range, still finite behaviour
+        assert!(q.s > 0.0);
+        assert!(q.fakequant(0.5).is_finite());
+    }
+
+    #[test]
+    fn bypass_identity() {
+        let q = UniformQ { s: 0.0, z: 0.0, levels: 0.0 };
+        assert_eq!(q.fakequant(1.234), 1.234);
+    }
+}

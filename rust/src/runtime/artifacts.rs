@@ -1,0 +1,426 @@
+//! Typed view of `artifacts/manifest.json` — the contract between the
+//! python build path and the rust request path.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Model hyperparameters (mirror of `python/compile/config.ModelConfig`).
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub img_size: usize,
+    pub channels: usize,
+    pub patch: usize,
+    pub dim: usize,
+    pub depth: usize,
+    pub heads: usize,
+    pub num_classes: usize,
+    pub mlp_ratio: usize,
+    pub freq_dim: usize,
+    pub tokens: usize,
+    pub head_dim: usize,
+    pub patch_dim: usize,
+}
+
+/// Diffusion-schedule hyperparameters baked at training time.
+#[derive(Clone, Debug)]
+pub struct DiffusionMeta {
+    pub train_steps: usize,
+    pub beta_start: f64,
+    pub beta_end: f64,
+}
+
+/// Kind of a quantization site (see DESIGN.md §4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SiteKind {
+    Uniform,
+    MrqSoftmax,
+    MrqGelu,
+}
+
+/// One activation quantization site.
+#[derive(Clone, Debug)]
+pub struct SiteMeta {
+    pub name: String,
+    pub kind: SiteKind,
+    pub tgq: bool,
+    pub qp_offset: usize,
+}
+
+/// One quantizable layer (linear or matmul).
+#[derive(Clone, Debug)]
+pub struct LayerMeta {
+    pub name: String,
+    /// "linear" | "matmul"
+    pub ltype: String,
+    /// Weight param name (linear layers only, else empty).
+    pub weight: String,
+    pub sites: Vec<SiteMeta>,
+}
+
+/// Fixed batch sizes the artifacts were lowered with.
+#[derive(Clone, Copy, Debug)]
+pub struct Batches {
+    pub calib: usize,
+    pub sample: usize,
+    pub train: usize,
+    pub feat: usize,
+}
+
+/// Parsed manifest + artifact directory handle.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelMeta,
+    pub diffusion: DiffusionMeta,
+    /// (name, shape) in the canonical flat parameter order.
+    pub params: Vec<(String, Vec<usize>)>,
+    pub layers: Vec<LayerMeta>,
+    pub qp_len: usize,
+    pub batches: Batches,
+    /// (name, shape) of `dit_capture` outputs after eps_pred.
+    pub capture_outputs: Vec<(String, Vec<usize>)>,
+    pub feat_dim: usize,
+    pub spat_dim: usize,
+    pub classifier_acc: f64,
+    /// (name, shape) of the FID/sFID feature-net parameters, in the
+    /// order they appear in `metric_weights.bin`.
+    pub feat_params: Vec<(String, Vec<usize>)>,
+    /// (name, shape) of the IS-classifier parameters (after feat's).
+    pub clf_params: Vec<(String, Vec<usize>)>,
+    /// Logical artifact name → file name.
+    pub artifacts: BTreeMap<String, String>,
+    pub weights_file: String,
+    pub metric_weights_file: String,
+    pub fid_ref_file: String,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing manifest: {e}"))?;
+
+        let m = j.req("model");
+        let model = ModelMeta {
+            img_size: m.req("img_size").as_usize().unwrap(),
+            channels: m.req("channels").as_usize().unwrap(),
+            patch: m.req("patch").as_usize().unwrap(),
+            dim: m.req("dim").as_usize().unwrap(),
+            depth: m.req("depth").as_usize().unwrap(),
+            heads: m.req("heads").as_usize().unwrap(),
+            num_classes: m.req("num_classes").as_usize().unwrap(),
+            mlp_ratio: m.req("mlp_ratio").as_usize().unwrap(),
+            freq_dim: m.req("freq_dim").as_usize().unwrap(),
+            tokens: m.req("tokens").as_usize().unwrap(),
+            head_dim: m.req("head_dim").as_usize().unwrap(),
+            patch_dim: m.req("patch_dim").as_usize().unwrap(),
+        };
+        let d = j.req("diffusion");
+        let diffusion = DiffusionMeta {
+            train_steps: d.req("train_steps").as_usize().unwrap(),
+            beta_start: d.req("beta_start").as_f64().unwrap(),
+            beta_end: d.req("beta_end").as_f64().unwrap(),
+        };
+
+        let params = j
+            .req("params")
+            .as_arr()
+            .context("params array")?
+            .iter()
+            .map(|p| {
+                Ok((
+                    p.req("name").as_str().unwrap().to_string(),
+                    p.req("shape").as_shape().context("param shape")?,
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let layers = j
+            .req("layers")
+            .as_arr()
+            .context("layers array")?
+            .iter()
+            .map(parse_layer)
+            .collect::<Result<Vec<_>>>()?;
+
+        let b = j.req("batches");
+        let batches = Batches {
+            calib: b.req("calib").as_usize().unwrap(),
+            sample: b.req("sample").as_usize().unwrap(),
+            train: b.req("train").as_usize().unwrap(),
+            feat: b.req("feat").as_usize().unwrap(),
+        };
+
+        let capture_outputs = j
+            .req("capture_outputs")
+            .as_arr()
+            .context("capture_outputs")?
+            .iter()
+            .map(|c| {
+                Ok((
+                    c.req("name").as_str().unwrap().to_string(),
+                    c.req("shape").as_shape().context("capture shape")?,
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut artifacts = BTreeMap::new();
+        if let Json::Obj(map) = j.req("artifacts") {
+            for (k, v) in map {
+                artifacts.insert(
+                    k.clone(),
+                    v.as_str().context("artifact path")?.to_string(),
+                );
+            }
+        } else {
+            bail!("artifacts must be an object");
+        }
+
+        let parse_specs = |node: &Json| -> Result<Vec<(String, Vec<usize>)>> {
+            node.as_arr()
+                .context("metric param array")?
+                .iter()
+                .map(|p| {
+                    Ok((
+                        p.req("name").as_str().unwrap().to_string(),
+                        p.req("shape").as_shape().context("param shape")?,
+                    ))
+                })
+                .collect()
+        };
+        let mp = j.req("metric_params");
+        let feat_params = parse_specs(mp.req("feature"))?;
+        let clf_params = parse_specs(mp.req("classifier"))?;
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            model,
+            diffusion,
+            params,
+            layers,
+            qp_len: j.req("qp_len").as_usize().unwrap(),
+            batches,
+            capture_outputs,
+            feat_dim: j.req("feat_dim").as_usize().unwrap(),
+            spat_dim: j.req("spat_dim").as_usize().unwrap(),
+            classifier_acc: j.req("classifier_acc").as_f64().unwrap_or(0.0),
+            feat_params,
+            clf_params,
+            artifacts,
+            weights_file: j.req("weights").as_str().unwrap().to_string(),
+            metric_weights_file: j
+                .req("metric_weights")
+                .as_str()
+                .unwrap()
+                .to_string(),
+            fid_ref_file: j.req("fid_ref").as_str().unwrap().to_string(),
+        })
+    }
+
+    /// Load `metric_weights.bin`: (feature-net tensors, classifier
+    /// tensors) in canonical order.
+    pub fn load_metric_weights(&self)
+                               -> Result<(Vec<crate::tensor::Tensor>,
+                                          Vec<crate::tensor::Tensor>)> {
+        let path = self.dir.join(&self.metric_weights_file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let expected: usize = self
+            .feat_params
+            .iter()
+            .chain(&self.clf_params)
+            .map(|(_, s)| s.iter().product::<usize>())
+            .sum();
+        if bytes.len() != expected * 4 {
+            bail!("metric_weights.bin: {} bytes, expected {}", bytes.len(),
+                  expected * 4);
+        }
+        let mut off = 0usize;
+        let mut take = |shape: &Vec<usize>| {
+            let n: usize = shape.iter().product();
+            let data: Vec<f32> = bytes[off..off + n * 4]
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            off += n * 4;
+            crate::tensor::Tensor::new(shape.clone(), data)
+        };
+        let feat = self.feat_params.iter().map(|(_, s)| take(s)).collect();
+        let clf = self.clf_params.iter().map(|(_, s)| take(s)).collect();
+        Ok((feat, clf))
+    }
+
+    /// Absolute path of a logical artifact.
+    pub fn artifact_path(&self, name: &str) -> Result<PathBuf> {
+        let file = self
+            .artifacts
+            .get(name)
+            .with_context(|| format!("unknown artifact `{name}`"))?;
+        Ok(self.dir.join(file))
+    }
+
+    /// Number of flat parameters.
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Index of the capture output `name` (position AFTER eps_pred).
+    pub fn capture_index(&self, name: &str) -> Option<usize> {
+        self.capture_outputs.iter().position(|(n, _)| n == name)
+    }
+
+    /// Look up a layer by name.
+    pub fn layer(&self, name: &str) -> Option<&LayerMeta> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+
+    /// All sites flattened in qp-offset order.
+    pub fn sites(&self) -> Vec<&SiteMeta> {
+        let mut s: Vec<&SiteMeta> =
+            self.layers.iter().flat_map(|l| l.sites.iter()).collect();
+        s.sort_by_key(|x| x.qp_offset);
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TOY: &str = r#"{
+      "model": {"img_size": 8, "channels": 3, "patch": 2, "dim": 8,
+                "depth": 1, "heads": 2, "num_classes": 4, "mlp_ratio": 2,
+                "freq_dim": 8, "tokens": 16, "head_dim": 4,
+                "patch_dim": 12},
+      "diffusion": {"train_steps": 50, "beta_start": 0.0001,
+                    "beta_end": 0.02},
+      "params": [{"name": "w", "shape": [2, 3]},
+                 {"name": "b", "shape": [3]}],
+      "layers": [
+        {"name": "l0", "ltype": "linear", "weight": "w",
+         "sites": [{"name": "l0.x", "kind": "uniform", "tgq": false,
+                    "qp_offset": 0}]},
+        {"name": "m0", "ltype": "matmul", "weight": "",
+         "sites": [{"name": "m0.a", "kind": "mrq_softmax", "tgq": true,
+                    "qp_offset": 4},
+                   {"name": "m0.b", "kind": "uniform", "tgq": false,
+                    "qp_offset": 8}]}
+      ],
+      "qp_len": 12,
+      "batches": {"calib": 2, "sample": 4, "train": 8, "feat": 16},
+      "capture_outputs": [{"name": "l0.x", "shape": [2, 5]},
+                          {"name": "l0.grad", "shape": [2, 3]}],
+      "feat_dim": 7,
+      "spat_dim": 9,
+      "classifier_acc": 0.875,
+      "metric_params": {
+        "feature": [{"name": "c1", "shape": [3, 3, 3, 4]}],
+        "classifier": [{"name": "d", "shape": [4, 2]}]
+      },
+      "metric_weights": "metric_weights.bin",
+      "artifacts": {"dit_fp_sample": "dit_fp_sample.hlo.txt"},
+      "weights": "weights.bin",
+      "fid_ref": "fid_ref.bin"
+    }"#;
+
+    fn write_toy() -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("tqdit_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), TOY).unwrap();
+        dir
+    }
+
+    #[test]
+    fn parses_toy_manifest_end_to_end() {
+        let dir = write_toy();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.dim, 8);
+        assert_eq!(m.diffusion.train_steps, 50);
+        assert_eq!(m.params, vec![("w".to_string(), vec![2, 3]),
+                                  ("b".to_string(), vec![3])]);
+        assert_eq!(m.qp_len, 12);
+        assert_eq!(m.batches.feat, 16);
+        assert_eq!(m.feat_params.len(), 1);
+        assert_eq!(m.clf_params[0].1, vec![4, 2]);
+        assert!((m.classifier_acc - 0.875).abs() < 1e-12);
+        // site parsing
+        let sites = m.sites();
+        assert_eq!(sites.len(), 3);
+        assert_eq!(sites[1].kind, SiteKind::MrqSoftmax);
+        assert!(sites[1].tgq);
+        // lookups
+        assert!(m.layer("m0").is_some());
+        assert_eq!(m.capture_index("l0.grad"), Some(1));
+        assert!(m.artifact_path("dit_fp_sample").unwrap()
+            .ends_with("dit_fp_sample.hlo.txt"));
+        assert!(m.artifact_path("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_metric_weights_checks_size() {
+        let dir = write_toy();
+        let m = Manifest::load(&dir).unwrap();
+        // expected: 3*3*3*4 + 4*2 = 116 f32 = 464 bytes
+        std::fs::write(dir.join("metric_weights.bin"), vec![0u8; 464])
+            .unwrap();
+        let (f, c) = m.load_metric_weights().unwrap();
+        assert_eq!(f[0].shape, vec![3, 3, 3, 4]);
+        assert_eq!(c[0].shape, vec![4, 2]);
+        std::fs::write(dir.join("metric_weights.bin"), vec![0u8; 100])
+            .unwrap();
+        assert!(m.load_metric_weights().is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_unknown_site_kind() {
+        let dir = std::env::temp_dir()
+            .join(format!("tqdit_manifest_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"),
+                       TOY.replace("mrq_softmax", "mystery")).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+fn parse_layer(l: &Json) -> Result<LayerMeta> {
+    let sites = l
+        .req("sites")
+        .as_arr()
+        .context("sites")?
+        .iter()
+        .map(|s| {
+            let kind = match s.req("kind").as_str().unwrap() {
+                "uniform" => SiteKind::Uniform,
+                "mrq_softmax" => SiteKind::MrqSoftmax,
+                "mrq_gelu" => SiteKind::MrqGelu,
+                other => bail!("unknown site kind `{other}`"),
+            };
+            Ok(SiteMeta {
+                name: s.req("name").as_str().unwrap().to_string(),
+                kind,
+                tgq: s.req("tgq").as_bool().unwrap_or(false),
+                qp_offset: s.req("qp_offset").as_usize().unwrap(),
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(LayerMeta {
+        name: l.req("name").as_str().unwrap().to_string(),
+        ltype: l.req("ltype").as_str().unwrap().to_string(),
+        weight: l
+            .req("weight")
+            .as_str()
+            .unwrap_or_default()
+            .to_string(),
+        sites,
+    })
+}

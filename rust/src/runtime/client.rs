@@ -1,0 +1,188 @@
+//! PJRT CPU client wrapper: compile HLO-text artifacts once, execute
+//! with host tensors, get host tensors back.
+//!
+//! The hot path keeps model weights resident as device buffers
+//! (`execute_b`), so each sampler step uploads only the small dynamic
+//! inputs (x_t, t, y, qparams) — see EXPERIMENTS.md §Perf for the
+//! before/after of that change.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::artifacts::Manifest;
+use crate::tensor::Tensor;
+
+/// Execution statistics per artifact (observability for the §Perf pass).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_s: f64,
+}
+
+/// PJRT runtime handle. Not `Sync` — PJRT calls stay on one thread while
+/// host-side math parallelizes underneath (see `util::threadpool`).
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    executables: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    stats: RefCell<HashMap<String, ExecStats>>,
+}
+
+impl Runtime {
+    /// Create the CPU client and parse the manifest.
+    pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            executables: RefCell::new(HashMap::new()),
+            stats: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Compile (or fetch the cached) executable for a logical artifact.
+    pub fn executable(&self, name: &str)
+                      -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.executables.borrow().get(name) {
+            return Ok(Rc::clone(e));
+        }
+        let path = self.manifest.artifact_path(name)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path utf-8")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse HLO {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+        crate::info!("compiled artifact `{name}` in {:.2}s",
+                     t0.elapsed().as_secs_f64());
+        let rc = Rc::new(exe);
+        self.executables
+            .borrow_mut()
+            .insert(name.to_string(), Rc::clone(&rc));
+        Ok(rc)
+    }
+
+    /// Execute with literal inputs; outputs as host tensors (the
+    /// artifact returns one tuple — we decompose it).
+    pub fn run(&self, name: &str, inputs: &[xla::Literal])
+               -> Result<Vec<Tensor>> {
+        let exe = self.executable(name)?;
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
+        let out = Self::decompose(&result[0][0])?;
+        self.note(name, t0.elapsed().as_secs_f64());
+        Ok(out)
+    }
+
+    /// Execute with pre-uploaded device buffers (weights stay resident).
+    pub fn run_buffers(&self, name: &str, inputs: &[&xla::PjRtBuffer])
+                       -> Result<Vec<Tensor>> {
+        let exe = self.executable(name)?;
+        let t0 = Instant::now();
+        let result = exe
+            .execute_b(inputs)
+            .map_err(|e| anyhow::anyhow!("execute_b {name}: {e:?}"))?;
+        let out = Self::decompose(&result[0][0])?;
+        self.note(name, t0.elapsed().as_secs_f64());
+        Ok(out)
+    }
+
+    /// Upload a host tensor once; reuse the buffer across calls.
+    pub fn upload(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        let dims: Vec<usize> = t.shape.clone();
+        self.client
+            .buffer_from_host_buffer(&t.data, &dims, None)
+            .map_err(|e| anyhow::anyhow!("upload: {e:?}"))
+    }
+
+    pub fn upload_i32(&self, data: &[i32], shape: &[usize])
+                      -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, shape, None)
+            .map_err(|e| anyhow::anyhow!("upload i32: {e:?}"))
+    }
+
+    /// Upload a set of tensors once (e.g. the model weights) so the hot
+    /// path reuses resident device buffers across calls.
+    pub fn upload_all(&self, tensors: &[Tensor]) -> Result<Vec<xla::PjRtBuffer>> {
+        tensors.iter().map(|t| self.upload(t)).collect()
+    }
+
+    fn decompose(buf: &xla::PjRtBuffer) -> Result<Vec<Tensor>> {
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("tuple decompose: {e:?}"))?;
+        parts.iter().map(literal_to_tensor).collect()
+    }
+
+    fn note(&self, name: &str, secs: f64) {
+        let mut stats = self.stats.borrow_mut();
+        let e = stats.entry(name.to_string()).or_default();
+        e.calls += 1;
+        e.total_s += secs;
+    }
+
+    /// Snapshot of per-artifact execution stats.
+    pub fn stats(&self) -> Vec<(String, ExecStats)> {
+        let mut v: Vec<(String, ExecStats)> = self
+            .stats
+            .borrow()
+            .iter()
+            .map(|(k, s)| (k.clone(), *s))
+            .collect();
+        v.sort_by(|a, b| b.1.total_s.partial_cmp(&a.1.total_s).unwrap());
+        v
+    }
+}
+
+/// Host tensor → literal (f32).
+pub fn lit_f32(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(&t.data)
+        .reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("reshape literal: {e:?}"))
+}
+
+/// i32 slice → literal of the given shape.
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("reshape literal: {e:?}"))
+}
+
+/// Literal → host tensor (f32; int literals are converted).
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| anyhow::anyhow!("literal shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data: Vec<f32> = match lit.to_vec::<f32>() {
+        Ok(v) => v,
+        Err(_) => {
+            let converted = lit
+                .convert(xla::PrimitiveType::F32)
+                .map_err(|e| anyhow::anyhow!("convert literal: {e:?}"))?;
+            converted
+                .to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("literal data: {e:?}"))?
+        }
+    };
+    Ok(Tensor::new(dims, data))
+}

@@ -1,0 +1,7 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute many.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{LayerMeta, Manifest, SiteKind, SiteMeta};
+pub use client::Runtime;

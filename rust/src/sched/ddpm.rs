@@ -1,0 +1,211 @@
+//! DDPM schedule (eq. 1–4) + strided respacing for the T=100 sampler.
+//!
+//! Mirrors `python/compile/train.py::betas/alpha_bars` (the model was
+//! trained against that schedule). The T=100 entries in Table II come
+//! from respacing the 250-step schedule: pick 100 evenly spaced original
+//! timesteps and recompute betas from the ᾱ ratios — the model is always
+//! conditioned on *original* timestep indices.
+
+/// Precomputed DDPM quantities over a (possibly respaced) step sequence.
+#[derive(Clone, Debug)]
+pub struct DdpmSchedule {
+    /// Original-model timestep index per sampler step, descending
+    /// (`steps[0]` is the most-noised step the sampler starts at).
+    pub steps: Vec<usize>,
+    /// β per sampler step (respaced).
+    pub betas: Vec<f64>,
+    /// ᾱ per sampler step.
+    pub alpha_bars: Vec<f64>,
+    /// ᾱ of the *previous* sampler step (1.0 at the end of the chain).
+    pub alpha_bars_prev: Vec<f64>,
+    /// Training-schedule ᾱ over all T_train steps (forward process).
+    pub train_alpha_bars: Vec<f64>,
+}
+
+impl DdpmSchedule {
+    /// Linear β schedule over `t_train` steps, respaced to `t_sample`.
+    pub fn new(t_train: usize, beta_start: f64, beta_end: f64,
+               t_sample: usize) -> DdpmSchedule {
+        assert!(t_sample >= 1 && t_sample <= t_train);
+        // training schedule
+        let train_betas: Vec<f64> = (0..t_train)
+            .map(|i| {
+                beta_start
+                    + (beta_end - beta_start) * i as f64
+                        / (t_train - 1).max(1) as f64
+            })
+            .collect();
+        let mut train_abar = Vec::with_capacity(t_train);
+        let mut acc = 1.0f64;
+        for b in &train_betas {
+            acc *= 1.0 - b;
+            train_abar.push(acc);
+        }
+
+        // evenly spaced subset of original indices, ascending
+        let use_steps: Vec<usize> = if t_sample == t_train {
+            (0..t_train).collect()
+        } else {
+            (0..t_sample)
+                .map(|i| i * t_train / t_sample)
+                .collect()
+        };
+
+        // respaced betas from ᾱ ratios
+        let mut betas = Vec::with_capacity(t_sample);
+        let mut abars = Vec::with_capacity(t_sample);
+        let mut abars_prev = Vec::with_capacity(t_sample);
+        let mut prev = 1.0f64;
+        for &s in &use_steps {
+            let ab = train_abar[s];
+            betas.push(1.0 - ab / prev);
+            abars.push(ab);
+            abars_prev.push(prev);
+            prev = ab;
+        }
+
+        // sampler iterates descending
+        let steps: Vec<usize> = use_steps.into_iter().rev().collect();
+        betas.reverse();
+        abars.reverse();
+        abars_prev.reverse();
+
+        DdpmSchedule {
+            steps,
+            betas,
+            alpha_bars: abars,
+            alpha_bars_prev: abars_prev,
+            train_alpha_bars: train_abar,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    /// Forward diffusion: x_t = √ᾱ_t·x₀ + √(1−ᾱ_t)·ε for an *original*
+    /// training timestep index (calibration-set construction, eq. 11).
+    pub fn q_sample(&self, x0: &[f32], t: usize, eps: &[f32],
+                    out: &mut [f32]) {
+        let ab = self.train_alpha_bars[t];
+        let (ca, ce) = (ab.sqrt() as f32, (1.0 - ab).sqrt() as f32);
+        for i in 0..x0.len() {
+            out[i] = ca * x0[i] + ce * eps[i];
+        }
+    }
+
+    /// One reverse (ancestral) step at sampler index `i`, in place:
+    /// μ = (x − β/√(1−ᾱ)·ε̂)/√α, then add σ·z for non-final steps
+    /// (eq. 3/4, fixed variance σ² = β̃).
+    pub fn reverse_step(&self, i: usize, x: &mut [f32], eps_hat: &[f32],
+                        noise: Option<&[f32]>) {
+        let beta = self.betas[i];
+        let ab = self.alpha_bars[i];
+        let ab_prev = self.alpha_bars_prev[i];
+        let alpha = 1.0 - beta;
+        let c_eps = (beta / (1.0 - ab).sqrt()) as f32;
+        let c_x = (1.0 / alpha.sqrt()) as f32;
+        // posterior variance β̃ = β·(1−ᾱ_prev)/(1−ᾱ)
+        let var = beta * (1.0 - ab_prev) / (1.0 - ab);
+        let sigma = var.max(0.0).sqrt() as f32;
+        for j in 0..x.len() {
+            x[j] = c_x * (x[j] - c_eps * eps_hat[j]);
+        }
+        if let Some(z) = noise {
+            for j in 0..x.len() {
+                x[j] += sigma * z[j];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched(t: usize) -> DdpmSchedule {
+        DdpmSchedule::new(250, 1e-4, 0.02, t)
+    }
+
+    #[test]
+    fn full_schedule_matches_training() {
+        let s = sched(250);
+        assert_eq!(s.len(), 250);
+        assert_eq!(s.steps[0], 249);
+        assert_eq!(*s.steps.last().unwrap(), 0);
+        // respaced betas == training betas when not respaced
+        assert!((s.betas.last().unwrap() - 1e-4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn alpha_bars_monotone_decreasing_in_t() {
+        let s = sched(250);
+        // sampler order is descending t → ᾱ ascending along the vec
+        for i in 1..s.len() {
+            assert!(s.alpha_bars[i] > s.alpha_bars[i - 1]);
+        }
+        assert!(s.alpha_bars[0] > 0.0 && s.alpha_bars[0] < 1.0);
+    }
+
+    #[test]
+    fn respaced_100_consistent() {
+        let s = sched(100);
+        assert_eq!(s.len(), 100);
+        // every respaced ᾱ appears in the training schedule
+        for (i, &step) in s.steps.iter().enumerate() {
+            assert!((s.alpha_bars[i] - s.train_alpha_bars[step]).abs()
+                < 1e-15);
+        }
+        // β̃ stays a valid probability-ish quantity
+        for &b in &s.betas {
+            assert!(b > 0.0 && b < 1.0);
+        }
+    }
+
+    #[test]
+    fn q_sample_limits() {
+        let s = sched(250);
+        let x0 = vec![1.0f32; 4];
+        let eps = vec![0.5f32; 4];
+        let mut out = vec![0.0f32; 4];
+        s.q_sample(&x0, 0, &eps, &mut out);
+        // t=0: nearly clean
+        assert!((out[0] - 1.0).abs() < 0.05);
+        s.q_sample(&x0, 249, &eps, &mut out);
+        // t=T-1: mostly noise
+        let ab = s.train_alpha_bars[249];
+        assert!(ab < 0.1);
+        assert!((out[0] - (ab.sqrt() as f32 + (1.0 - ab).sqrt() as f32 * 0.5))
+            .abs() < 1e-6);
+    }
+
+    #[test]
+    fn reverse_step_denoises_perfect_prediction() {
+        // at the final sampler step (t = 0), a perfect ε̂ recovers x₀
+        // almost exactly: x₋ = (x_t − β/√(1−ᾱ)·ε)/√α ≈ x₀.
+        let s = sched(250);
+        let x0 = vec![0.8f32; 8];
+        let eps = vec![0.3f32; 8];
+        let i_last = s.len() - 1;
+        let t = s.steps[i_last]; // == 0
+        let mut xt = vec![0.0f32; 8];
+        s.q_sample(&x0, t, &eps, &mut xt);
+        s.reverse_step(i_last, &mut xt, &eps, None);
+        for (a, b) in xt.iter().zip(&x0) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn final_step_has_zero_variance_path() {
+        let s = sched(250);
+        let i_last = s.len() - 1; // t = 0
+        assert_eq!(s.steps[i_last], 0);
+        // ᾱ_prev at the final step is 1 → posterior variance ≈ β·0
+        assert!((s.alpha_bars_prev[i_last] - 1.0).abs() < 1e-12);
+    }
+}

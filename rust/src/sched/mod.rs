@@ -1,0 +1,7 @@
+//! Diffusion scheduling substrate.
+
+pub mod ddpm;
+pub mod timegroups;
+
+pub use ddpm::DdpmSchedule;
+pub use timegroups::TimeGroups;

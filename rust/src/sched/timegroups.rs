@@ -1,0 +1,115 @@
+//! Time grouping (paper eq. 9): timesteps {0..T−1} split into G
+//! contiguous groups; TGQ assigns each group its own post-softmax
+//! quantization parameters, and the sampler looks up the group for the
+//! current timestep to select the qparams overlay.
+
+/// Contiguous partition of {0..T−1} into G groups,
+/// 𝒢ᵢ = [ (i−1)T/G, iT/G − 1 ] (paper indexing i ∈ 1..G; ours 0-based).
+#[derive(Clone, Debug)]
+pub struct TimeGroups {
+    pub t_total: usize,
+    pub groups: usize,
+}
+
+impl TimeGroups {
+    pub fn new(t_total: usize, groups: usize) -> TimeGroups {
+        assert!(groups >= 1 && groups <= t_total,
+                "need 1 <= G={groups} <= T={t_total}");
+        TimeGroups { t_total, groups }
+    }
+
+    /// Group index for timestep t (eq. 9): the i with
+    /// ⌊iT/G⌋ ≤ t < ⌊(i+1)T/G⌋ (consistent with [`Self::range_of`] for
+    /// non-divisible T).
+    pub fn group_of(&self, t: usize) -> usize {
+        assert!(t < self.t_total, "t={t} out of range T={}", self.t_total);
+        let (tt, g) = (self.t_total, self.groups);
+        let mut i = (t * g / tt).min(g - 1);
+        while t < i * tt / g {
+            i -= 1;
+        }
+        while i + 1 < g && t >= (i + 1) * tt / g {
+            i += 1;
+        }
+        i
+    }
+
+    /// Inclusive timestep range [lo, hi] of group i.
+    pub fn range_of(&self, i: usize) -> (usize, usize) {
+        assert!(i < self.groups);
+        let lo = i * self.t_total / self.groups;
+        let hi = ((i + 1) * self.t_total / self.groups).min(self.t_total) - 1;
+        (lo, hi)
+    }
+
+    /// All timesteps of group i.
+    pub fn members(&self, i: usize) -> Vec<usize> {
+        let (lo, hi) = self.range_of(i);
+        (lo..=hi).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults_partition_cleanly() {
+        let tg = TimeGroups::new(250, 10);
+        assert_eq!(tg.range_of(0), (0, 24));
+        assert_eq!(tg.range_of(9), (225, 249));
+    }
+
+    #[test]
+    fn groups_partition_without_gaps_or_overlap() {
+        for (t, g) in [(250usize, 10usize), (100, 10), (97, 7), (10, 10),
+                       (100, 3)] {
+            let tg = TimeGroups::new(t, g);
+            let mut covered = vec![0u32; t];
+            for i in 0..g {
+                for m in tg.members(i) {
+                    covered[m] += 1;
+                }
+            }
+            assert!(covered.iter().all(|&c| c == 1), "T={t} G={g}");
+        }
+    }
+
+    #[test]
+    fn group_of_agrees_with_ranges() {
+        for (t, g) in [(250usize, 10usize), (100, 10), (97, 7)] {
+            let tg = TimeGroups::new(t, g);
+            for i in 0..g {
+                for m in tg.members(i) {
+                    assert_eq!(tg.group_of(m), i, "t={m} T={t} G={g}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn group_of_monotone_in_t() {
+        let tg = TimeGroups::new(250, 10);
+        let mut prev = 0;
+        for t in 0..250 {
+            let gidx = tg.group_of(t);
+            assert!(gidx >= prev);
+            prev = gidx;
+        }
+        assert_eq!(prev, 9);
+    }
+
+    #[test]
+    fn single_group_degenerates_to_global() {
+        let tg = TimeGroups::new(100, 1);
+        for t in 0..100 {
+            assert_eq!(tg.group_of(t), 0);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_more_groups_than_steps() {
+        TimeGroups::new(5, 6);
+    }
+}

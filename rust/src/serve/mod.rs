@@ -1,0 +1,15 @@
+//! Batched generation service: request queue + dynamic batcher + a
+//! worker loop that drives the sampler.
+//!
+//! The PJRT runtime is not `Send` (executables are `Rc`), so the server
+//! constructs runtime + sampler *inside* its worker thread and talks to
+//! clients over channels. The [`batcher`] itself is a pure data
+//! structure (unit- and property-tested without a runtime): it splits
+//! requests into image slots, fills fixed-size artifact batches FIFO,
+//! and never starves a request.
+
+pub mod batcher;
+pub mod server;
+
+pub use batcher::{Batcher, Slot};
+pub use server::{GenRequest, GenResponse, GenServer, ServerStats};

@@ -1,0 +1,210 @@
+//! Generation server: a worker thread owns the (non-`Send`) PJRT
+//! runtime and sampler; clients submit [`GenRequest`]s over a channel
+//! and receive [`GenResponse`]s with their images and latency.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::pipeline::{Method, Pipeline};
+use crate::sampler::Sampler;
+use crate::serve::batcher::Batcher;
+use crate::util::config::RunConfig;
+use crate::util::rng::Rng;
+
+/// A client request: n images of one class.
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub class: i32,
+    pub n: usize,
+}
+
+/// The server's reply.
+#[derive(Clone, Debug)]
+pub struct GenResponse {
+    pub id: u64,
+    /// Flat (n, H, W, C) pixels in ≈[-1, 1].
+    pub images: Vec<f32>,
+    /// Queue + compute time for the whole request.
+    pub latency_s: f64,
+}
+
+/// Aggregate server statistics (reported on shutdown).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServerStats {
+    pub requests: u64,
+    pub images: u64,
+    pub batches: u64,
+    /// Occupied slots / dispatched capacity.
+    pub batch_fill: f64,
+    pub wall_s: f64,
+}
+
+impl ServerStats {
+    pub fn print(&self) {
+        let thr = self.images as f64 / self.wall_s.max(1e-9);
+        println!(
+            "served {} requests / {} images in {:.2}s  \
+             ({:.2} img/s, {} batches, fill {:.0}%)",
+            self.requests, self.images, self.wall_s, thr, self.batches,
+            self.batch_fill * 100.0
+        );
+    }
+}
+
+enum Msg {
+    Submit(u64, GenRequest, Sender<GenResponse>),
+    Shutdown(Sender<ServerStats>),
+}
+
+/// Handle to the generation service.
+pub struct GenServer {
+    tx: Sender<Msg>,
+    next_id: std::cell::Cell<u64>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl GenServer {
+    /// Start the worker: it builds the pipeline, calibrates `method`
+    /// once, then serves batches until shutdown.
+    pub fn start(cfg: RunConfig, method: Method) -> GenServer {
+        let (tx, rx) = channel::<Msg>();
+        let worker = std::thread::spawn(move || {
+            if let Err(e) = worker_loop(cfg, method, rx) {
+                eprintln!("[serve] worker failed: {e:#}");
+            }
+        });
+        GenServer {
+            tx,
+            next_id: std::cell::Cell::new(0),
+            worker: Some(worker),
+        }
+    }
+
+    /// Submit a request; returns (id, receiver for the response).
+    pub fn submit(&self, req: GenRequest)
+                  -> (u64, Receiver<GenResponse>) {
+        let id = self.next_id.get();
+        self.next_id.set(id + 1);
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Msg::Submit(id, req, rtx))
+            .expect("server worker alive");
+        (id, rrx)
+    }
+
+    /// Stop the worker and collect aggregate statistics.
+    pub fn shutdown(mut self) -> ServerStats {
+        let (stx, srx) = channel();
+        let _ = self.tx.send(Msg::Shutdown(stx));
+        let stats = srx.recv().unwrap_or_default();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        stats
+    }
+}
+
+struct PendingReq {
+    tx: Sender<GenResponse>,
+    images: Vec<f32>,
+    remaining: usize,
+    t0: Instant,
+}
+
+fn worker_loop(cfg: RunConfig, method: Method, rx: Receiver<Msg>)
+               -> Result<()> {
+    let pipe = Pipeline::new(cfg)?;
+    let mut rng = Rng::new(pipe.cfg.seed ^ 0x5e12e);
+    let (qc, _) = pipe.calibrate(method, &mut rng)?;
+    let sampler = Sampler::new(&pipe.rt, &pipe.weights, qc,
+                               pipe.cfg.timesteps)?;
+    let b = sampler.batch();
+    let il = sampler.img_len();
+
+    let mut batcher = Batcher::new();
+    let mut pending: HashMap<u64, PendingReq> = HashMap::new();
+    let mut stats = ServerStats::default();
+    let mut fill_sum = 0.0f64;
+    let t_start = Instant::now();
+    let mut open = true;
+    let mut shutdown_tx: Option<Sender<ServerStats>> = None;
+
+    while open || !batcher.is_empty() {
+        // drain the mailbox; block only when there is no work queued
+        loop {
+            let msg = if batcher.is_empty() && open {
+                match rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => {
+                        open = false;
+                        break;
+                    }
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(m) => m,
+                    Err(_) => break,
+                }
+            };
+            match msg {
+                Msg::Submit(id, req, tx) => {
+                    stats.requests += 1;
+                    batcher.push_request(id, req.class, req.n);
+                    pending.insert(id, PendingReq {
+                        tx,
+                        images: Vec::with_capacity(req.n * il),
+                        remaining: req.n,
+                        t0: Instant::now(),
+                    });
+                }
+                Msg::Shutdown(tx) => {
+                    open = false;
+                    shutdown_tx = Some(tx);
+                }
+            }
+        }
+
+        let slots = batcher.pop_batch(b);
+        if slots.is_empty() {
+            continue;
+        }
+        // pad labels to the fixed artifact batch with class 0
+        let mut labels = vec![0i32; b];
+        for (i, s) in slots.iter().enumerate() {
+            labels[i] = s.class;
+        }
+        let (imgs, _) = sampler.sample(&labels, &mut rng)?;
+        stats.batches += 1;
+        fill_sum += slots.len() as f64 / b as f64;
+
+        for (i, s) in slots.iter().enumerate() {
+            let req = pending.get_mut(&s.req_id).expect("pending entry");
+            req.images.extend_from_slice(&imgs[i * il..(i + 1) * il]);
+            req.remaining -= 1;
+            stats.images += 1;
+            if req.remaining == 0 {
+                let done = pending.remove(&s.req_id).unwrap();
+                let _ = done.tx.send(GenResponse {
+                    id: s.req_id,
+                    images: done.images,
+                    latency_s: done.t0.elapsed().as_secs_f64(),
+                });
+            }
+        }
+    }
+
+    stats.wall_s = t_start.elapsed().as_secs_f64();
+    stats.batch_fill = if stats.batches > 0 {
+        fill_sum / stats.batches as f64
+    } else {
+        0.0
+    };
+    if let Some(tx) = shutdown_tx {
+        let _ = tx.send(stats);
+    }
+    Ok(())
+}

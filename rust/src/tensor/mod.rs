@@ -1,0 +1,315 @@
+//! Host tensor substrate: row-major f32 tensors + the ops the
+//! coordinator needs (matmul for HO objectives, softmax/GELU mirrors of
+//! the kernels, reductions, quant helpers live in [`crate::quant`]).
+
+pub mod linalg;
+pub mod stats;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} vs data len {}",
+            shape,
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: Vec<usize>, v: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![v; n] }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Last-axis length.
+    pub fn cols(&self) -> usize {
+        *self.shape.last().expect("rank >= 1")
+    }
+
+    /// Product of all axes but the last.
+    pub fn rows(&self) -> usize {
+        self.len() / self.cols()
+    }
+
+    pub fn reshape(mut self, shape: Vec<usize>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape;
+        self
+    }
+
+    // ---- elementwise -----------------------------------------------------
+
+    pub fn map<F: Fn(f32) -> f32>(&self, f: F) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn zip<F: Fn(f32, f32) -> f32>(&self, other: &Tensor, f: F) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a - b)
+    }
+
+    pub fn mul(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a * b)
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    // ---- reductions --------------------------------------------------------
+
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|&x| x as f64).sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.sum() / self.len() as f64
+    }
+
+    pub fn min(&self) -> f32 {
+        self.data.iter().copied().fold(f32::INFINITY, f32::min)
+    }
+
+    pub fn max(&self) -> f32 {
+        self.data.iter().copied().fold(f32::NEG_INFINITY, f32::max)
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Mean squared difference — the raw MSE calibration objective.
+    pub fn mse(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| {
+                let d = (a - b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            / self.len() as f64
+    }
+
+    // ---- linear algebra -----------------------------------------------------
+
+    /// 2-D matmul: (m, k) x (k, n) → (m, n).
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(other.rank(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (other.shape[0], other.shape[1]);
+        assert_eq!(k, k2, "matmul inner dims: {k} vs {k2}");
+        let mut out = vec![0.0f32; m * n];
+        matmul_into(&self.data, &other.data, &mut out, m, k, n);
+        Tensor::new(vec![m, n], out)
+    }
+
+    /// Matmul where `self` is (..., k) flattened to rows: (R, k) x (k, n).
+    pub fn matmul_flat(&self, w: &Tensor) -> Tensor {
+        let k = self.cols();
+        assert_eq!(w.rank(), 2);
+        assert_eq!(w.shape[0], k);
+        let r = self.rows();
+        let n = w.shape[1];
+        let mut out = vec![0.0f32; r * n];
+        matmul_into(&self.data, &w.data, &mut out, r, k, n);
+        let mut shape = self.shape.clone();
+        *shape.last_mut().unwrap() = n;
+        Tensor::new(shape, out)
+    }
+
+    /// 2-D transpose.
+    pub fn t(&self) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor::new(vec![n, m], out)
+    }
+
+    /// Row softmax over the last axis.
+    pub fn softmax_lastdim(&self) -> Tensor {
+        let cols = self.cols();
+        let mut out = self.data.clone();
+        for row in out.chunks_mut(cols) {
+            let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut s = 0.0f32;
+            for v in row.iter_mut() {
+                *v = (*v - m).exp();
+                s += *v;
+            }
+            for v in row.iter_mut() {
+                *v /= s;
+            }
+        }
+        Tensor { shape: self.shape.clone(), data: out }
+    }
+
+    /// tanh-approximated GELU (matches the pallas kernel / jnp oracle).
+    pub fn gelu(&self) -> Tensor {
+        self.map(gelu_scalar)
+    }
+}
+
+/// Cache-friendly (ikj-order) matmul kernel shared by the tensor ops.
+pub fn matmul_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+pub fn gelu_scalar(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let i = Tensor::new(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(a.matmul(&i), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = Tensor::new(vec![3, 2], vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_flat_keeps_leading_shape() {
+        let x = Tensor::zeros(vec![2, 4, 3]);
+        let w = Tensor::zeros(vec![3, 5]);
+        assert_eq!(x.matmul_flat(&w).shape, vec![2, 4, 5]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(a.t().t(), a);
+        assert_eq!(a.t().shape, vec![3, 2]);
+        assert_eq!(a.t().data, vec![1., 4., 2., 5., 3., 6.]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let x = Tensor::new(vec![2, 4], vec![0.1, 1.0, -2.0, 3.0, 0., 0., 0., 0.]);
+        let s = x.softmax_lastdim();
+        for row in s.data.chunks(4) {
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+            assert!(row.iter().all(|&p| p >= 0.0));
+        }
+        // uniform logits → uniform probs
+        assert!((s.data[4] - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_stable_for_large_logits() {
+        let x = Tensor::new(vec![1, 3], vec![1000.0, 1000.0, 1000.0]);
+        let s = x.softmax_lastdim();
+        assert!(s.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn gelu_known_values() {
+        assert!((gelu_scalar(0.0)).abs() < 1e-7);
+        assert!((gelu_scalar(100.0) - 100.0).abs() < 1e-3);
+        assert!(gelu_scalar(-100.0).abs() < 1e-3);
+        // gelu(1) ≈ 0.8412
+        assert!((gelu_scalar(1.0) - 0.8412).abs() < 1e-3);
+        // minimum region is negative
+        assert!(gelu_scalar(-0.5) < 0.0);
+    }
+
+    #[test]
+    fn mse_and_reductions() {
+        let a = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]);
+        let b = Tensor::new(vec![3], vec![1.0, 2.0, 5.0]);
+        assert!((a.mse(&b) - 4.0 / 3.0).abs() < 1e-9);
+        assert_eq!(a.min(), 1.0);
+        assert_eq!(a.max(), 3.0);
+        assert_eq!(b.abs_max(), 5.0);
+        assert!((a.mean() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::new(vec![2, 2], vec![1.0]);
+    }
+}

@@ -1,0 +1,173 @@
+//! Gaussian feature statistics (mean / covariance) + histogram helper.
+//!
+//! Feeds the FID/sFID metric ([`crate::metrics::fid`]) and the Fig. 2/3
+//! distribution reproductions.
+
+/// Online accumulator for mean and covariance of d-dim feature vectors.
+#[derive(Clone, Debug)]
+pub struct GaussStats {
+    pub dim: usize,
+    pub count: usize,
+    sum: Vec<f64>,
+    /// Upper-triangular-inclusive sum of outer products (full d×d kept).
+    outer: Vec<f64>,
+}
+
+impl GaussStats {
+    pub fn new(dim: usize) -> GaussStats {
+        GaussStats { dim, count: 0, sum: vec![0.0; dim], outer: vec![0.0; dim * dim] }
+    }
+
+    /// Add one feature vector.
+    pub fn push(&mut self, x: &[f32]) {
+        assert_eq!(x.len(), self.dim);
+        self.count += 1;
+        for i in 0..self.dim {
+            self.sum[i] += x[i] as f64;
+        }
+        for i in 0..self.dim {
+            let xi = x[i] as f64;
+            let row = &mut self.outer[i * self.dim..(i + 1) * self.dim];
+            for (j, slot) in row.iter_mut().enumerate() {
+                *slot += xi * x[j] as f64;
+            }
+        }
+    }
+
+    /// Add a batch laid out as (n, dim) row-major.
+    pub fn push_batch(&mut self, data: &[f32]) {
+        assert_eq!(data.len() % self.dim, 0);
+        for row in data.chunks(self.dim) {
+            self.push(row);
+        }
+    }
+
+    pub fn mean(&self) -> Vec<f64> {
+        assert!(self.count > 0);
+        self.sum.iter().map(|s| s / self.count as f64).collect()
+    }
+
+    /// Sample covariance (n−1 denominator, matching `np.cov`).
+    pub fn cov(&self) -> Vec<f64> {
+        assert!(self.count > 1, "need ≥2 samples for covariance");
+        let n = self.count as f64;
+        let mu = self.mean();
+        let d = self.dim;
+        let mut cov = vec![0.0f64; d * d];
+        for i in 0..d {
+            for j in 0..d {
+                let e_xy = self.outer[i * d + j] / n;
+                cov[i * d + j] = (e_xy - mu[i] * mu[j]) * n / (n - 1.0);
+            }
+        }
+        cov
+    }
+}
+
+/// Fixed-range histogram (Fig. 2 reproduction).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f32,
+    pub hi: f32,
+    pub bins: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+    pub count: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f32, hi: f32, nbins: usize) -> Histogram {
+        assert!(hi > lo && nbins > 0);
+        Histogram { lo, hi, bins: vec![0; nbins], underflow: 0, overflow: 0, count: 0 }
+    }
+
+    pub fn push(&mut self, x: f32) {
+        self.count += 1;
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let f = (x - self.lo) / (self.hi - self.lo);
+            let n = self.bins.len();
+            let idx = ((f * n as f32) as usize).min(n - 1);
+            self.bins[idx] += 1;
+        }
+    }
+
+    pub fn push_all(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.push(x);
+        }
+    }
+
+    /// Bin centers + normalized densities, as (center, density) rows.
+    pub fn densities(&self) -> Vec<(f32, f64)> {
+        let w = (self.hi - self.lo) / self.bins.len() as f32;
+        let total = self.count.max(1) as f64;
+        self.bins
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| {
+                let center = self.lo + w * (i as f32 + 0.5);
+                (center, c as f64 / total / w as f64)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_cov_known() {
+        let mut s = GaussStats::new(2);
+        // points: (0,0), (2,0), (0,2), (2,2) → mean (1,1), cov diag 4/3
+        for p in [[0.0, 0.0], [2.0, 0.0], [0.0, 2.0], [2.0, 2.0]] {
+            s.push(&p);
+        }
+        let mu = s.mean();
+        assert!((mu[0] - 1.0).abs() < 1e-12 && (mu[1] - 1.0).abs() < 1e-12);
+        let cov = s.cov();
+        assert!((cov[0] - 4.0 / 3.0).abs() < 1e-9);
+        assert!((cov[3] - 4.0 / 3.0).abs() < 1e-9);
+        assert!(cov[1].abs() < 1e-9); // independent axes
+    }
+
+    #[test]
+    fn push_batch_equals_push() {
+        let mut a = GaussStats::new(3);
+        let mut b = GaussStats::new(3);
+        let data = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        a.push_batch(&data);
+        b.push(&data[0..3]);
+        b.push(&data[3..6]);
+        assert_eq!(a.mean(), b.mean());
+        assert_eq!(a.cov(), b.cov());
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let mut h = Histogram::new(0.0, 1.0, 10);
+        h.push_all(&[-0.5, 0.05, 0.15, 0.95, 1.5]);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.bins[0], 1);
+        assert_eq!(h.bins[1], 1);
+        assert_eq!(h.bins[9], 1);
+        assert_eq!(h.count, 5);
+    }
+
+    #[test]
+    fn histogram_density_integrates_to_coverage() {
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        h.push_all(&[0.1, 0.3, 0.6, 0.9]);
+        let total: f64 = h
+            .densities()
+            .iter()
+            .map(|(_, d)| d * 0.25)
+            .sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+}

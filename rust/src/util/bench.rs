@@ -1,0 +1,139 @@
+//! Micro-benchmark harness (no `criterion` offline).
+//!
+//! Warmup + timed iterations with mean / p50 / p95 / min, printed in a
+//! stable machine-grepable format. `cargo bench` targets use
+//! `harness = false` and drive this directly; the same harness times the
+//! end-to-end table reproductions.
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "bench {:<40} iters {:>4}  mean {:>10}  p50 {:>10}  p95 {:>10}  min {:>10}",
+            self.name,
+            self.iters,
+            fmt_dur(self.mean_s),
+            fmt_dur(self.p50_s),
+            fmt_dur(self.p95_s),
+            fmt_dur(self.min_s),
+        );
+    }
+
+    /// Throughput helper: items per second at the mean.
+    pub fn per_sec(&self, items: usize) -> f64 {
+        items as f64 / self.mean_s
+    }
+}
+
+pub fn fmt_dur(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// Benchmark runner with warmup and configurable iteration budget.
+pub struct Bench {
+    pub warmup: usize,
+    pub iters: usize,
+    /// Hard wall-clock budget; iterations stop early past this.
+    pub max_total_s: f64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: 2, iters: 10, max_total_s: 60.0 }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Bench {
+        Bench { warmup: 1, iters: 5, max_total_s: 30.0 }
+    }
+
+    /// Time `f` and report. `f` should do one logical unit of work.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        let start = Instant::now();
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+            if start.elapsed().as_secs_f64() > self.max_total_s {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: n,
+            mean_s: mean,
+            p50_s: samples[n / 2],
+            p95_s: samples[(n * 95 / 100).min(n - 1)],
+            min_s: samples[0],
+        };
+        res.report();
+        res
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_expected_iterations() {
+        let mut count = 0usize;
+        let b = Bench { warmup: 2, iters: 5, max_total_s: 60.0 };
+        let r = b.run("noop", || count += 1);
+        assert_eq!(count, 7); // warmup + timed
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_s >= 0.0);
+    }
+
+    #[test]
+    fn respects_time_budget() {
+        let b = Bench { warmup: 0, iters: 1000, max_total_s: 0.05 };
+        let r = b.run("sleepy", || {
+            std::thread::sleep(std::time::Duration::from_millis(10))
+        });
+        assert!(r.iters < 1000);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let b = Bench { warmup: 0, iters: 20, max_total_s: 60.0 };
+        let r = b.run("noop", || {});
+        assert!(r.min_s <= r.p50_s && r.p50_s <= r.p95_s);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert!(fmt_dur(2e-9).ends_with("ns"));
+        assert!(fmt_dur(2e-6).ends_with("µs"));
+        assert!(fmt_dur(2e-3).ends_with("ms"));
+        assert!(fmt_dur(2.0).ends_with('s'));
+    }
+}

@@ -1,0 +1,135 @@
+//! Mini property-testing framework (no `proptest` offline).
+//!
+//! `Gen` wraps the deterministic [`Rng`](super::rng::Rng); properties run
+//! for N cases and failures report the seed + a greedy shrink over a
+//! caller-provided shrink function. Used by the coordinator invariant
+//! tests (routing, batching, quant packing).
+
+use super::rng::Rng;
+
+/// Case generator handle passed into properties.
+pub struct Gen<'a> {
+    pub rng: &'a mut Rng,
+}
+
+impl<'a> Gen<'a> {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform_range(lo, hi)
+    }
+
+    pub fn f32_normal(&mut self) -> f32 {
+        self.rng.normal() as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_normal(&mut self, len: usize) -> Vec<f32> {
+        self.rng.normal_vec(len)
+    }
+
+    pub fn choose<'b, T>(&mut self, items: &'b [T]) -> &'b T {
+        &items[self.rng.below(items.len())]
+    }
+}
+
+/// Outcome of a property check over one generated case.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` for `cases` random cases; panic with seed on failure.
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> PropResult,
+{
+    let base_seed = 0xC0FFEE_u64;
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let mut g = Gen { rng: &mut rng };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property `{name}` failed on case {case} (seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Greedy shrink helper: repeatedly applies `shrink` while `fails` holds.
+pub fn shrink_to_minimal<T, S, P>(mut value: T, shrink: S, fails: P) -> T
+where
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> bool,
+{
+    loop {
+        let mut advanced = false;
+        for cand in shrink(&value) {
+            if fails(&cand) {
+                value = cand;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            return value;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("adds", 50, |g| {
+            count += 1;
+            let a = g.usize_in(0, 100);
+            let b = g.usize_in(0, 100);
+            if a + b >= a {
+                Ok(())
+            } else {
+                Err("overflow".into())
+            }
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always_fails` failed")]
+    fn failing_property_panics_with_seed() {
+        check("always_fails", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn shrink_finds_minimal() {
+        // fails for any n >= 13; shrink by decrement.
+        let min = shrink_to_minimal(
+            100usize,
+            |&n| if n > 0 { vec![n - 1] } else { vec![] },
+            |&n| n >= 13,
+        );
+        assert_eq!(min, 13);
+    }
+
+    #[test]
+    fn gen_ranges() {
+        let mut rng = Rng::new(1);
+        let mut g = Gen { rng: &mut rng };
+        for _ in 0..1000 {
+            let v = g.usize_in(3, 9);
+            assert!((3..=9).contains(&v));
+            let f = g.f32_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! Tiny CLI argument parser (no `clap` offline).
+//!
+//! Grammar: `tq-dit <subcommand> [--flag] [--key value]... [positional]...`
+//! Flags may be written `--key value` or `--key=value`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand + options + positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (after argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    // bare flag
+                    out.options.insert(stripped.to_string(), "true".into());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse the real process args.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("--{key} expects an integer, got `{v}`")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("--{key} expects an integer, got `{v}`")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("--{key} expects a number, got `{v}`")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = p(&["table", "--t", "250", "--bits=8", "extra"]);
+        assert_eq!(a.subcommand.as_deref(), Some("table"));
+        assert_eq!(a.usize("t", 0), 250);
+        assert_eq!(a.usize("bits", 0), 8);
+        assert_eq!(a.positional, vec!["extra".to_string()]);
+    }
+
+    #[test]
+    fn bare_flags() {
+        let a = p(&["run", "--verbose", "--n", "4"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.usize("n", 0), 4);
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = p(&["x"]);
+        assert_eq!(a.usize("missing", 7), 7);
+        assert_eq!(a.f64("missing", 1.5), 1.5);
+        assert_eq!(a.str_or("missing", "d"), "d");
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = p(&["cmd", "--a", "--b", "2"]);
+        assert!(a.flag("a"));
+        assert_eq!(a.usize("b", 0), 2);
+    }
+}

@@ -1,0 +1,225 @@
+//! Run configuration: a TOML-subset file format + typed config structs.
+//!
+//! No `serde`/`toml` offline, so we parse a pragmatic subset —
+//! `[section]` headers, `key = value` with string/int/float/bool values,
+//! `#` comments — which covers everything the launcher needs. Any CLI
+//! option `--key value` overrides the file (section-qualified keys use
+//! `section.key`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::cli::Args;
+
+/// Flat `section.key → raw string value` map.
+#[derive(Clone, Debug, Default)]
+pub struct RawConfig {
+    pub values: BTreeMap<String, String>,
+}
+
+impl RawConfig {
+    pub fn parse(text: &str) -> Result<RawConfig> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = match raw.find('#') {
+                Some(i) => &raw[..i],
+                None => raw,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: bad section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{}.{}", section, k.trim())
+            };
+            let mut val = v.trim().to_string();
+            if (val.starts_with('"') && val.ends_with('"') && val.len() >= 2)
+                || (val.starts_with('\'') && val.ends_with('\'') && val.len() >= 2)
+            {
+                val = val[1..val.len() - 1].to_string();
+            }
+            if values.insert(key.clone(), val).is_some() {
+                bail!("line {}: duplicate key `{}`", lineno + 1, key);
+            }
+        }
+        Ok(RawConfig { values })
+    }
+
+    pub fn load(path: &Path) -> Result<RawConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Overlay CLI options (CLI wins).
+    pub fn overlay(&mut self, args: &Args) {
+        for (k, v) in &args.options {
+            self.values.insert(k.clone(), v.clone());
+        }
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.values
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("config `{key}`: not an int")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.values
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("config `{key}`: not a float")))
+            .unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        self.values
+            .get(key)
+            .map(|v| matches!(v.as_str(), "true" | "1" | "yes"))
+            .unwrap_or(default)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.values.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+}
+
+/// Everything the quantization pipeline needs; built from file + CLI.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Directory with AOT artifacts (manifest.json etc.).
+    pub artifacts: String,
+    /// Weight / activation bit-width (paper: 8 or 6).
+    pub wbits: u32,
+    pub abits: u32,
+    /// Sampler steps T (paper: 250 or 100).
+    pub timesteps: usize,
+    /// Time groups G (paper: 10).
+    pub groups: usize,
+    /// Calibration samples per group n (paper: 32).
+    pub calib_per_group: usize,
+    /// Alternating optimization rounds R (paper: 3).
+    pub rounds: usize,
+    /// Candidate grid size for scale search.
+    pub candidates: usize,
+    /// Images to generate for FID/IS evaluation.
+    pub eval_images: usize,
+    /// RNG seed.
+    pub seed: u64,
+    /// Feature toggles (ablation, Table III).
+    pub use_ho: bool,
+    pub use_mrq: bool,
+    pub use_tgq: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            artifacts: "artifacts".into(),
+            wbits: 8,
+            abits: 8,
+            timesteps: 250,
+            groups: 10,
+            calib_per_group: 32,
+            rounds: 3,
+            candidates: 80,
+            eval_images: 256,
+            seed: 0,
+            use_ho: true,
+            use_mrq: true,
+            use_tgq: true,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn from_raw(raw: &RawConfig) -> RunConfig {
+        let d = RunConfig::default();
+        RunConfig {
+            artifacts: raw.str_or("artifacts", &d.artifacts),
+            wbits: raw.usize("wbits", d.wbits as usize) as u32,
+            abits: raw.usize("abits", d.abits as usize) as u32,
+            timesteps: raw.usize("timesteps", d.timesteps),
+            groups: raw.usize("groups", d.groups),
+            calib_per_group: raw.usize("calib-per-group", d.calib_per_group),
+            rounds: raw.usize("rounds", d.rounds),
+            candidates: raw.usize("candidates", d.candidates),
+            eval_images: raw.usize("eval-images", d.eval_images),
+            seed: raw.usize("seed", d.seed as usize) as u64,
+            use_ho: raw.bool("ho", d.use_ho),
+            use_mrq: raw.bool("mrq", d.use_mrq),
+            use_tgq: raw.bool("tgq", d.use_tgq),
+        }
+    }
+
+    /// file (optional `--config path`) + CLI overlay.
+    pub fn from_args(args: &Args) -> Result<RunConfig> {
+        let mut raw = match args.get("config") {
+            Some(p) => RawConfig::load(Path::new(p))?,
+            None => RawConfig::default(),
+        };
+        raw.overlay(args);
+        Ok(RunConfig::from_raw(&raw))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let text = r#"
+# top comment
+wbits = 6
+[eval]
+images = 128   # inline comment
+name = "full run"
+"#;
+        let c = RawConfig::parse(text).unwrap();
+        assert_eq!(c.usize("wbits", 0), 6);
+        assert_eq!(c.usize("eval.images", 0), 128);
+        assert_eq!(c.str_or("eval.name", ""), "full run");
+    }
+
+    #[test]
+    fn rejects_duplicates_and_bad_lines() {
+        assert!(RawConfig::parse("a = 1\na = 2").is_err());
+        assert!(RawConfig::parse("nonsense").is_err());
+        assert!(RawConfig::parse("[open").is_err());
+    }
+
+    #[test]
+    fn cli_overlay_wins() {
+        let mut c = RawConfig::parse("wbits = 8").unwrap();
+        let args = super::super::cli::Args::parse(
+            ["--wbits", "6"].iter().map(|s| s.to_string()),
+        );
+        c.overlay(&args);
+        assert_eq!(c.usize("wbits", 0), 6);
+    }
+
+    #[test]
+    fn runconfig_defaults_match_paper() {
+        let d = RunConfig::default();
+        assert_eq!(d.groups, 10);
+        assert_eq!(d.calib_per_group, 32);
+        assert_eq!(d.rounds, 3);
+        assert_eq!(d.timesteps, 250);
+    }
+}

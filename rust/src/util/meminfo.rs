@@ -1,0 +1,106 @@
+//! Process memory probes via `/proc/self/status` (Table IV substrate).
+//!
+//! The paper reports calibration GPU memory; on this CPU testbed the
+//! analogous quantity is peak resident set size (VmHWM) attributable to
+//! the calibration phase. `MemProbe` snapshots VmHWM around a region.
+
+/// Parse a `VmXXX:  1234 kB`-style line value in bytes.
+fn parse_kb_line(line: &str) -> Option<u64> {
+    let mut parts = line.split_whitespace();
+    let _label = parts.next()?;
+    let value: u64 = parts.next()?.parse().ok()?;
+    Some(value * 1024)
+}
+
+/// Current resident set size in bytes (VmRSS).
+pub fn current_rss() -> Option<u64> {
+    let text = std::fs::read_to_string("/proc/self/status").ok()?;
+    text.lines()
+        .find(|l| l.starts_with("VmRSS:"))
+        .and_then(parse_kb_line)
+}
+
+/// Peak resident set size in bytes (VmHWM).
+pub fn peak_rss() -> Option<u64> {
+    let text = std::fs::read_to_string("/proc/self/status").ok()?;
+    text.lines()
+        .find(|l| l.starts_with("VmHWM:"))
+        .and_then(parse_kb_line)
+}
+
+/// Region-scoped memory probe: RSS growth + wall time.
+pub struct MemProbe {
+    rss_before: u64,
+    peak_before: u64,
+    start: std::time::Instant,
+}
+
+/// What a probed region cost.
+#[derive(Clone, Copy, Debug)]
+pub struct RegionCost {
+    /// RSS delta across the region (bytes; ≥ 0).
+    pub rss_delta: u64,
+    /// Peak RSS observed during the region (bytes).
+    pub peak: u64,
+    pub wall_s: f64,
+}
+
+impl MemProbe {
+    pub fn start() -> MemProbe {
+        MemProbe {
+            rss_before: current_rss().unwrap_or(0),
+            peak_before: peak_rss().unwrap_or(0),
+            start: std::time::Instant::now(),
+        }
+    }
+
+    pub fn finish(self) -> RegionCost {
+        let rss_after = current_rss().unwrap_or(0);
+        let peak_after = peak_rss().unwrap_or(0);
+        RegionCost {
+            rss_delta: rss_after.saturating_sub(self.rss_before),
+            peak: peak_after.max(self.peak_before),
+            wall_s: self.start.elapsed().as_secs_f64(),
+        }
+    }
+}
+
+pub fn fmt_bytes(b: u64) -> String {
+    if b >= 1 << 30 {
+        format!("{:.2} GiB", b as f64 / (1u64 << 30) as f64)
+    } else if b >= 1 << 20 {
+        format!("{:.2} MiB", b as f64 / (1u64 << 20) as f64)
+    } else {
+        format!("{:.1} KiB", b as f64 / 1024.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probes_read_proc() {
+        // Linux-only environment per the brief.
+        assert!(current_rss().unwrap() > 0);
+        assert!(peak_rss().unwrap() >= current_rss().unwrap());
+    }
+
+    #[test]
+    fn region_cost_tracks_allocation() {
+        let probe = MemProbe::start();
+        let v: Vec<u8> = vec![1; 32 << 20]; // 32 MiB
+        std::hint::black_box(&v);
+        let cost = probe.finish();
+        drop(v);
+        assert!(cost.wall_s >= 0.0);
+        assert!(cost.peak > 0);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_bytes(512), "0.5 KiB");
+        assert!(fmt_bytes(3 << 20).contains("MiB"));
+        assert!(fmt_bytes(3 << 30).contains("GiB"));
+    }
+}

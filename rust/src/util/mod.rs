@@ -1,0 +1,16 @@
+//! From-scratch substrates.
+//!
+//! The offline vendored registry only provides the `xla` crate's own
+//! dependency closure, so the usual ecosystem crates (rand, serde, clap,
+//! tokio, criterion, proptest) are unavailable — each gets a small,
+//! well-tested replacement here (see DESIGN.md §1, substitution table).
+
+pub mod bench;
+pub mod check;
+pub mod cli;
+pub mod config;
+pub mod json;
+pub mod logging;
+pub mod meminfo;
+pub mod rng;
+pub mod threadpool;

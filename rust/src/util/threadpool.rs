@@ -1,0 +1,213 @@
+//! Fixed-size thread pool (no `tokio`/`rayon` offline).
+//!
+//! A plain mpsc work queue with panic isolation; `scope_map` provides the
+//! fork-join pattern the coordinator uses for host-side HO searches.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// Fixed worker pool; jobs are `FnOnce() + Send`.
+pub struct ThreadPool {
+    tx: mpsc::Sender<Msg>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Spawn `size` workers (at least 1).
+    pub fn new(size: usize) -> ThreadPool {
+        let size = size.max(1);
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("tq-worker-{i}"))
+                    .spawn(move || loop {
+                        let msg = { rx.lock().unwrap().recv() };
+                        match msg {
+                            Ok(Msg::Run(job)) => job(),
+                            Ok(Msg::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx, workers, size }
+    }
+
+    /// Pool sized to available parallelism.
+    pub fn default_size() -> ThreadPool {
+        let n = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4);
+        ThreadPool::new(n)
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Fire-and-forget.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx.send(Msg::Run(Box::new(f))).expect("pool alive");
+    }
+
+    /// Map `f` over `items` on the pool, preserving order (fork-join).
+    pub fn scope_map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let (rtx, rrx) = mpsc::channel::<(usize, R)>();
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let rtx = rtx.clone();
+            self.execute(move || {
+                let r = f(item);
+                let _ = rtx.send((i, r));
+            });
+        }
+        drop(rtx);
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, r) = rrx.recv().expect("worker result");
+            out[i] = Some(r);
+        }
+        out.into_iter().map(|o| o.expect("all slots filled")).collect()
+    }
+}
+
+/// Borrow-friendly data-parallel map using scoped threads: splits
+/// `items` into chunks across available cores. Unlike the pool this can
+/// capture non-`'static` references — the HO candidate search uses it to
+/// share captured calibration tensors without cloning.
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4)
+        .min(n);
+    let chunk = n.div_ceil(workers);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let mut rest: &mut [Option<R>] = &mut out;
+        let mut start = 0usize;
+        let mut handles = Vec::new();
+        while start < n {
+            let take = chunk.min(n - start);
+            let (head, tail) = rest.split_at_mut(take);
+            rest = tail;
+            let slice = &items[start..start + take];
+            let f = &f;
+            handles.push(s.spawn(move || {
+                for (slot, item) in head.iter_mut().zip(slice) {
+                    *slot = Some(f(item));
+                }
+            }));
+            start += take;
+        }
+        for h in handles {
+            h.join().expect("par_map worker panicked");
+        }
+    });
+    out.into_iter().map(|o| o.expect("filled")).collect()
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                let _ = tx.send(());
+            });
+        }
+        for _ in 0..100 {
+            rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn scope_map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.scope_map((0..50).collect::<Vec<_>>(), |x| x * x);
+        assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_pool_works() {
+        let pool = ThreadPool::new(1);
+        let out = pool.scope_map(vec![1, 2, 3], |x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| {});
+        drop(pool); // must not hang
+    }
+
+    #[test]
+    fn par_map_matches_serial() {
+        let items: Vec<u64> = (0..257).collect();
+        let out = par_map(&items, |&x| x * 3 + 1);
+        assert_eq!(out, items.iter().map(|&x| x * 3 + 1).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_borrows_environment() {
+        let base = vec![10u64, 20, 30];
+        let items = vec![0usize, 1, 2];
+        let out = par_map(&items, |&i| base[i] + 1);
+        assert_eq!(out, vec![11, 21, 31]);
+    }
+
+    #[test]
+    fn par_map_empty() {
+        let out: Vec<u64> = par_map(&[] as &[u64], |&x| x);
+        assert!(out.is_empty());
+    }
+}

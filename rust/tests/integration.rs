@@ -1,0 +1,484 @@
+//! Integration tests over the real AOT artifacts + PJRT runtime.
+//!
+//! These exercise the cross-language contract end to end: manifest ↔
+//! loader, python-lowered HLO ↔ rust execution, bypass-qparams ↔ FP
+//! equivalence, capture ↔ quantize ↔ sampler composition.
+//!
+//! They require `make artifacts` to have run; each test skips (with a
+//! note) when the artifacts are absent so `cargo test` stays green on a
+//! fresh checkout.
+
+use std::path::{Path, PathBuf};
+
+use tq_dit::coordinator::calib::CalibSet;
+use tq_dit::coordinator::capture::{run_capture, CaptureOpts};
+use tq_dit::coordinator::pipeline::{Method, Pipeline};
+use tq_dit::coordinator::quantize::{quantize, QuantizeOpts};
+use tq_dit::coordinator::QuantConfig;
+use tq_dit::data::SynthDataset;
+use tq_dit::metrics::Evaluator;
+use tq_dit::model::WeightStore;
+use tq_dit::quant::QP_STRIDE;
+use tq_dit::runtime::Runtime;
+use tq_dit::sampler::Sampler;
+use tq_dit::sched::{DdpmSchedule, TimeGroups};
+use tq_dit::tensor::Tensor;
+use tq_dit::util::config::RunConfig;
+use tq_dit::util::rng::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("[skip] artifacts not built — run `make artifacts`");
+        None
+    }
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(p) => p,
+            None => return,
+        }
+    };
+}
+
+fn small_cfg(dir: &Path) -> RunConfig {
+    RunConfig {
+        artifacts: dir.to_str().unwrap().to_string(),
+        timesteps: 25,
+        groups: 5,
+        calib_per_group: 4,
+        rounds: 1,
+        candidates: 16,
+        eval_images: 16,
+        ..RunConfig::default()
+    }
+}
+
+#[test]
+fn manifest_layout_invariants() {
+    let dir = require_artifacts!();
+    let rt = Runtime::load(&dir).unwrap();
+    let m = &rt.manifest;
+    // qp slots: stride-4, contiguous, one per site
+    let sites = m.sites();
+    assert_eq!(m.qp_len, sites.len() * QP_STRIDE);
+    for (i, s) in sites.iter().enumerate() {
+        assert_eq!(s.qp_offset, i * QP_STRIDE, "site {}", s.name);
+    }
+    // every linear layer's weight exists in params
+    for l in &m.layers {
+        if l.ltype == "linear" {
+            assert!(m.params.iter().any(|(n, _)| n == &l.weight),
+                    "missing weight {}", l.weight);
+        }
+    }
+    // capture outputs: every site input + every layer grad
+    for l in &m.layers {
+        assert!(m.capture_index(&format!("{}.grad", l.name)).is_some());
+        for s in &l.sites {
+            assert!(m.capture_index(&s.name).is_some(), "{}", s.name);
+        }
+    }
+}
+
+#[test]
+fn weights_and_metric_weights_load() {
+    let dir = require_artifacts!();
+    let rt = Runtime::load(&dir).unwrap();
+    let ws = WeightStore::load(&rt.manifest).unwrap();
+    assert_eq!(ws.tensors.len(), rt.manifest.n_params());
+    assert!(ws.n_elements() > 100_000);
+    // all finite
+    for t in &ws.tensors {
+        assert!(t.data.iter().all(|v| v.is_finite()));
+    }
+    let (fw, cw) = rt.manifest.load_metric_weights().unwrap();
+    assert_eq!(fw.len(), rt.manifest.feat_params.len());
+    assert_eq!(cw.len(), rt.manifest.clf_params.len());
+}
+
+#[test]
+fn bypass_qparams_match_fp_forward() {
+    let dir = require_artifacts!();
+    let rt = Runtime::load(&dir).unwrap();
+    let m = rt.manifest.clone();
+    let ws = WeightStore::load(&m).unwrap();
+    let mut rng = Rng::new(11);
+    let b = m.batches.calib;
+    let il = m.model.img_size * m.model.img_size * m.model.channels;
+    let x = Tensor::new(vec![b, m.model.img_size, m.model.img_size,
+                             m.model.channels],
+                        rng.normal_vec(b * il));
+    let t: Vec<i32> = (0..b).map(|_| rng.below(250) as i32).collect();
+    let y: Vec<i32> = (0..b).map(|_| rng.below(8) as i32).collect();
+
+    let wb = rt.upload_all(&ws.tensors).unwrap();
+    let xb = rt.upload(&x).unwrap();
+    let tb = rt.upload_i32(&t, &[b]).unwrap();
+    let yb = rt.upload_i32(&y, &[b]).unwrap();
+    let mut fp_in: Vec<&xla::PjRtBuffer> = wb.iter().collect();
+    fp_in.extend([&xb, &tb, &yb]);
+    let fp = &rt.run_buffers("dit_fp_calib", &fp_in).unwrap()[0];
+
+    let qp = Tensor::new(vec![m.qp_len], vec![0.0; m.qp_len]);
+    let qpb = rt.upload(&qp).unwrap();
+    let mut q_in: Vec<&xla::PjRtBuffer> = wb.iter().collect();
+    q_in.extend([&xb, &tb, &yb, &qpb]);
+    let q = &rt.run_buffers("dit_quant_calib", &q_in).unwrap()[0];
+
+    assert_eq!(fp.shape, q.shape);
+    assert!(fp.mse(q) < 1e-9, "bypass path diverged: {}", fp.mse(q));
+}
+
+#[test]
+fn quantized_qparams_perturb_forward() {
+    let dir = require_artifacts!();
+    let rt = Runtime::load(&dir).unwrap();
+    let m = rt.manifest.clone();
+    let ws = WeightStore::load(&m).unwrap();
+    let mut rng = Rng::new(13);
+    let b = m.batches.calib;
+    let il = m.model.img_size * m.model.img_size * m.model.channels;
+    let x = Tensor::new(vec![b, m.model.img_size, m.model.img_size,
+                             m.model.channels],
+                        rng.normal_vec(b * il));
+    let t = vec![100i32; b];
+    let y = vec![1i32; b];
+    let wb = rt.upload_all(&ws.tensors).unwrap();
+    let xb = rt.upload(&x).unwrap();
+    let tb = rt.upload_i32(&t, &[b]).unwrap();
+    let yb = rt.upload_i32(&y, &[b]).unwrap();
+
+    // crude uniform 4-bit on every uniform site via min-max defaults
+    let mut qp = vec![0.0f32; m.qp_len];
+    for s in rt.manifest.sites() {
+        if s.kind == tq_dit::runtime::SiteKind::Uniform {
+            qp[s.qp_offset] = 0.5;
+            qp[s.qp_offset + 1] = 8.0;
+            qp[s.qp_offset + 2] = 15.0;
+        }
+    }
+    let qpb = rt.upload(&Tensor::new(vec![m.qp_len], qp)).unwrap();
+    let mut q_in: Vec<&xla::PjRtBuffer> = wb.iter().collect();
+    q_in.extend([&xb, &tb, &yb, &qpb]);
+    let q = &rt.run_buffers("dit_quant_calib", &q_in).unwrap()[0];
+
+    let byp = rt.upload(&Tensor::new(vec![m.qp_len],
+                                     vec![0.0; m.qp_len])).unwrap();
+    let mut b_in: Vec<&xla::PjRtBuffer> = wb.iter().collect();
+    b_in.extend([&xb, &tb, &yb, &byp]);
+    let fp = &rt.run_buffers("dit_quant_calib", &b_in).unwrap()[0];
+    let mse = fp.mse(q);
+    assert!(mse > 1e-6, "4-bit qparams had no effect (mse {mse})");
+    assert!(q.data.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn capture_covers_every_layer_and_group() {
+    let dir = require_artifacts!();
+    let rt = Runtime::load(&dir).unwrap();
+    let ws = WeightStore::load(&rt.manifest).unwrap();
+    let ds = SynthDataset::new(rt.manifest.model.img_size,
+                               rt.manifest.model.channels,
+                               rt.manifest.model.num_classes);
+    let d = &rt.manifest.diffusion;
+    let sched = DdpmSchedule::new(d.train_steps, d.beta_start, d.beta_end,
+                                  d.train_steps);
+    let tg = TimeGroups::new(d.train_steps, 5);
+    let mut rng = Rng::new(3);
+    let calib = CalibSet::build(&ds, &sched, &tg, 8, &mut rng);
+    let ev = run_capture(&rt, &ws, &calib, CaptureOpts::default()).unwrap();
+
+    assert_eq!(ev.layers.len(), rt.manifest.layers.len());
+    for l in &rt.manifest.layers {
+        let le = ev.layer(&l.name);
+        assert_eq!(le.a.len(), 5);
+        for g in 0..5 {
+            assert!(!le.a[g].is_empty(), "layer {} group {g} empty", l.name);
+            assert_eq!(le.a[g].len(), le.fisher[g].len());
+            if l.ltype == "matmul" {
+                assert_eq!(le.a[g].len(), le.b[g].len());
+                // stored pairs must be matmul-compatible
+                let (am, bm) = (&le.a[g][0], &le.b[g][0]);
+                assert_eq!(am.cols(), bm.shape[0], "layer {}", l.name);
+            }
+        }
+    }
+    // Fig. 2/3 side channels populated
+    assert!(ev.softmax_hist.count > 1000);
+    assert!(ev.gelu_hist.count > 1000);
+    assert_eq!(ev.softmax_max_by_t.len(),
+               calib.len() * rt.manifest.model.depth);
+    // post-softmax values live in [0, 1] — underflow impossible
+    assert_eq!(ev.softmax_hist.underflow, 0);
+}
+
+#[test]
+fn quantize_emits_params_for_every_site() {
+    let dir = require_artifacts!();
+    let rt = Runtime::load(&dir).unwrap();
+    let ws = WeightStore::load(&rt.manifest).unwrap();
+    let ds = SynthDataset::new(16, 3, 8);
+    let d = &rt.manifest.diffusion;
+    let sched = DdpmSchedule::new(d.train_steps, d.beta_start, d.beta_end,
+                                  d.train_steps);
+    let tg = TimeGroups::new(d.train_steps, 5);
+    let mut rng = Rng::new(5);
+    let calib = CalibSet::build(&ds, &sched, &tg, 4, &mut rng);
+    let ev = run_capture(&rt, &ws, &calib, CaptureOpts::default()).unwrap();
+    let opts = QuantizeOpts {
+        rounds: 1,
+        candidates: 12,
+        ..QuantizeOpts::default()
+    };
+    let (qc, cost) = quantize(&rt.manifest, &ws, &ev, &tg, "tq-dit", opts)
+        .unwrap();
+
+    // every site got params; every linear weight got a quantizer
+    for l in &rt.manifest.layers {
+        for s in &l.sites {
+            assert!(qc.sites.contains_key(&s.name), "{}", s.name);
+        }
+        if l.ltype == "linear" {
+            assert!(qc.weights.contains_key(&l.weight), "{}", l.weight);
+        }
+    }
+    // TGQ overlays exactly on the tgq sites, with one entry per group
+    let tgq_sites: Vec<_> = rt.manifest.sites().iter()
+        .filter(|s| s.tgq).map(|s| s.name.clone()).collect();
+    assert_eq!(qc.tgq.len(), tgq_sites.len());
+    for s in &tgq_sites {
+        assert_eq!(qc.tgq[s].len(), 5);
+    }
+    assert!(cost.evals > 0);
+
+    // packing: every uniform slot has s > 0 (nothing left bypassed)
+    let v = qc.qparams_for_group(&rt.manifest, 0);
+    for s in rt.manifest.sites() {
+        assert!(v[s.qp_offset] > 0.0, "site {} left bypassed", s.name);
+    }
+}
+
+#[test]
+fn sampler_is_deterministic_and_seed_sensitive() {
+    let dir = require_artifacts!();
+    let cfg = small_cfg(&dir);
+    let pipe = Pipeline::new(cfg.clone()).unwrap();
+    let fp = QuantConfig::fp(pipe.groups.clone());
+    let sampler = Sampler::new(&pipe.rt, &pipe.weights, fp,
+                               cfg.timesteps).unwrap();
+    let labels = vec![0i32; sampler.batch()];
+    let (a, st) = sampler.sample(&labels, &mut Rng::new(42)).unwrap();
+    let (b, _) = sampler.sample(&labels, &mut Rng::new(42)).unwrap();
+    assert_eq!(a, b, "same seed must reproduce exactly");
+    let (c, _) = sampler.sample(&labels, &mut Rng::new(43)).unwrap();
+    assert_ne!(a, c, "different seed must differ");
+    assert_eq!(st.steps, cfg.timesteps);
+    assert_eq!(st.qp_swaps, 0, "FP path packs no qparams");
+}
+
+#[test]
+fn tgq_sampler_swaps_once_per_group() {
+    let dir = require_artifacts!();
+    let cfg = small_cfg(&dir);
+    let pipe = Pipeline::new(cfg.clone()).unwrap();
+    let mut qc = QuantConfig::new("tq-dit", 8, 8, pipe.groups.clone());
+    // minimal TGQ overlay on one site so the sampler takes the swap path
+    let site = rt_first_tgq_site(&pipe);
+    let per_group: Vec<_> = (0..pipe.groups.groups)
+        .map(|g| tq_dit::quant::SiteParams::MrqSoftmax(
+            tq_dit::quant::MrqSoftmax::new(1e-4 * (g + 1) as f32, 8)))
+        .collect();
+    qc.tgq.insert(site, per_group);
+    let sampler = Sampler::new(&pipe.rt, &pipe.weights, qc,
+                               cfg.timesteps).unwrap();
+    let labels = vec![0i32; sampler.batch()];
+    let (_, st) = sampler.sample(&labels, &mut Rng::new(1)).unwrap();
+    // descending trajectory crosses each group exactly once
+    assert_eq!(st.qp_swaps, pipe.groups.groups);
+}
+
+fn rt_first_tgq_site(pipe: &Pipeline) -> String {
+    pipe.rt
+        .manifest
+        .sites()
+        .iter()
+        .find(|s| s.tgq)
+        .expect("a tgq site")
+        .name
+        .clone()
+}
+
+#[test]
+fn evaluator_separates_real_from_noise() {
+    let dir = require_artifacts!();
+    let cfg = small_cfg(&dir);
+    let pipe = Pipeline::new(cfg).unwrap();
+    let m = &pipe.rt.manifest;
+    let il = m.model.img_size * m.model.img_size * m.model.channels;
+    let n = m.batches.feat;
+    let mut rng = Rng::new(9);
+
+    // real synthetic images → tiny FID, confident IS
+    let mut ev_real = Evaluator::new(&pipe.rt).unwrap();
+    let mut imgs = vec![0.0f32; n * il];
+    for i in 0..n {
+        let mut tmp = vec![0.0f32; il];
+        pipe.ds.render(i % 8, &mut rng, &mut tmp);
+        imgs[i * il..(i + 1) * il].copy_from_slice(&tmp);
+    }
+    ev_real.push_images(&imgs).unwrap();
+    let real = ev_real.finish().unwrap();
+
+    // uniform noise images → far-off FID
+    let mut ev_noise = Evaluator::new(&pipe.rt).unwrap();
+    let noise: Vec<f32> = (0..n * il)
+        .map(|_| rng.uniform_range(-1.0, 1.0))
+        .collect();
+    ev_noise.push_images(&noise).unwrap();
+    let bad = ev_noise.finish().unwrap();
+
+    assert!(real.fid < bad.fid * 0.1,
+            "real {:.4} vs noise {:.4}", real.fid, bad.fid);
+    assert!(real.sfid < bad.sfid, "{} vs {}", real.sfid, bad.sfid);
+    assert!(real.is_score > 4.0, "IS on real: {}", real.is_score);
+}
+
+#[test]
+fn evaluator_handles_ragged_tail_batches() {
+    let dir = require_artifacts!();
+    let cfg = small_cfg(&dir);
+    let pipe = Pipeline::new(cfg).unwrap();
+    let m = &pipe.rt.manifest;
+    let il = m.model.img_size * m.model.img_size * m.model.channels;
+    let mut rng = Rng::new(10);
+    let mut ev = Evaluator::new(&pipe.rt).unwrap();
+    // push 3, then 70, then 1 — forces pad + multi-flush + tail
+    for n in [3usize, 70, 1] {
+        let mut imgs = vec![0.0f32; n * il];
+        for i in 0..n {
+            let mut tmp = vec![0.0f32; il];
+            pipe.ds.render(i % 8, &mut rng, &mut tmp);
+            imgs[i * il..(i + 1) * il].copy_from_slice(&tmp);
+        }
+        ev.push_images(&imgs).unwrap();
+    }
+    let row = ev.finish().unwrap();
+    assert_eq!(row.n, 74);
+    assert!(row.fid.is_finite() && row.is_score.is_finite());
+}
+
+#[test]
+fn fp_pipeline_cell_is_cheap_and_scores_well() {
+    let dir = require_artifacts!();
+    let cfg = small_cfg(&dir);
+    let pipe = Pipeline::new(cfg.clone()).unwrap();
+    let (qc, cost) = pipe
+        .calibrate(Method::Fp, &mut Rng::new(0))
+        .unwrap();
+    assert_eq!(cost.evals, 0);
+    let row = pipe.evaluate(&qc, 16, 3).unwrap();
+    assert_eq!(row.n, 16);
+    assert!(row.fid.is_finite());
+    // trained model beats noise by a wide margin (noise FID is >100x)
+    assert!(row.fid < 50.0, "FP FID {}", row.fid);
+}
+
+#[test]
+fn serve_end_to_end_fp() {
+    let dir = require_artifacts!();
+    let mut cfg = small_cfg(&dir);
+    cfg.timesteps = 10;
+    let server = tq_dit::serve::GenServer::start(cfg, Method::Fp);
+    let (id0, rx0) = server.submit(tq_dit::serve::GenRequest {
+        class: 2,
+        n: 5,
+    });
+    let (id1, rx1) = server.submit(tq_dit::serve::GenRequest {
+        class: 7,
+        n: 20, // spans two fixed-size batches
+    });
+    let r0 = rx0.recv().unwrap();
+    let r1 = rx1.recv().unwrap();
+    assert_eq!(r0.id, id0);
+    assert_eq!(r1.id, id1);
+    assert_eq!(r0.images.len(), 5 * 16 * 16 * 3);
+    assert_eq!(r1.images.len(), 20 * 16 * 16 * 3);
+    assert!(r0.images.iter().all(|v| v.is_finite()));
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, 2);
+    assert_eq!(stats.images, 25);
+    assert!(stats.batches >= 2);
+}
+
+#[test]
+fn train_step_artifact_reduces_loss_from_scratch() {
+    // the loss-curve path: drive train_step with *re-initialized* params
+    // (zeros for adaLN etc. would need init logic; instead perturb the
+    // trained weights heavily and verify the loss drops back).
+    let dir = require_artifacts!();
+    let cfg = small_cfg(&dir);
+    let pipe = Pipeline::new(cfg).unwrap();
+    let m = pipe.rt.manifest.clone();
+    let npar = m.n_params();
+    let tb = m.batches.train;
+    let il = m.model.img_size * m.model.img_size * m.model.channels;
+    let mut rng = Rng::new(21);
+
+    let mut params = pipe.weights.tensors.clone();
+    for t in params.iter_mut() {
+        for v in t.data.iter_mut() {
+            *v += 0.05 * rng.normal() as f32; // heavy perturbation
+        }
+    }
+    let mut mstate: Vec<Tensor> =
+        params.iter().map(|t| Tensor::zeros(t.shape.clone())).collect();
+    let mut vstate = mstate.clone();
+    let d = &m.diffusion;
+    let sched = DdpmSchedule::new(d.train_steps, d.beta_start, d.beta_end,
+                                  d.train_steps);
+    let abar = Tensor::new(
+        vec![d.train_steps],
+        sched.train_alpha_bars.iter().map(|&v| v as f32).collect(),
+    );
+
+    let mut losses = Vec::new();
+    for step in 0..8 {
+        let (x0, y) = pipe.ds.sample_batch(tb, &mut rng);
+        let t: Vec<i32> =
+            (0..tb).map(|_| rng.below(d.train_steps) as i32).collect();
+        let eps = rng.normal_vec(tb * il);
+        let mut bufs = Vec::new();
+        for tsr in params.iter().chain(&mstate).chain(&vstate) {
+            bufs.push(pipe.rt.upload(tsr).unwrap());
+        }
+        bufs.push(pipe.rt.upload_i32(&[step as i32], &[]).unwrap());
+        bufs.push(pipe.rt.upload(&Tensor::new(
+            vec![tb, m.model.img_size, m.model.img_size, m.model.channels],
+            x0)).unwrap());
+        bufs.push(pipe.rt.upload_i32(&t, &[tb]).unwrap());
+        bufs.push(pipe.rt.upload_i32(&y, &[tb]).unwrap());
+        bufs.push(pipe.rt.upload(&Tensor::new(
+            vec![tb, m.model.img_size, m.model.img_size, m.model.channels],
+            eps)).unwrap());
+        bufs.push(pipe.rt.upload(&abar).unwrap());
+        let inputs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        let outs = pipe.rt.run_buffers("train_step", &inputs).unwrap();
+        for (dst, src) in params.iter_mut().zip(&outs[..npar]) {
+            *dst = src.clone();
+        }
+        for (dst, src) in mstate.iter_mut().zip(&outs[npar..2 * npar]) {
+            *dst = src.clone();
+        }
+        for (dst, src) in vstate.iter_mut().zip(&outs[2 * npar..3 * npar]) {
+            *dst = src.clone();
+        }
+        losses.push(outs[3 * npar].data[0]);
+    }
+    assert!(losses.last().unwrap() < &losses[0],
+            "loss did not drop: {losses:?}");
+}
