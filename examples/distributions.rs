@@ -19,7 +19,7 @@ use tq_dit::util::rng::Rng;
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let mut cfg = RunConfig::from_args(&args)?;
-    cfg.calib_per_group = args.usize("calib-per-group", 16);
+    cfg.calib_per_group = args.usize("calib-per-group", 16)?;
     let out_dir = args.str_or("out-dir", ".").to_string();
 
     let pipe = Pipeline::new(cfg.clone())?;

@@ -16,9 +16,9 @@ fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let mut cfg = RunConfig::from_args(&args)?;
     // quickstart-sized run: fewer sampler steps + calibration samples
-    cfg.timesteps = args.usize("timesteps", 50);
-    cfg.calib_per_group = args.usize("calib-per-group", 8);
-    cfg.eval_images = args.usize("eval-images", 32);
+    cfg.timesteps = args.usize("timesteps", 50)?;
+    cfg.calib_per_group = args.usize("calib-per-group", 8)?;
+    cfg.eval_images = args.usize("eval-images", 32)?;
 
     println!("== TQ-DiT quickstart (W{}A{}, T={}) ==", cfg.wbits, cfg.abits,
              cfg.timesteps);

@@ -18,8 +18,8 @@ fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let cfg = RunConfig::from_args(&args)?;
     let out_dir = args.str_or("out-dir", ".").to_string();
-    let rows = args.usize("rows", 4);
-    let cols = args.usize("cols", 8);
+    let rows = args.usize("rows", 4)?;
+    let cols = args.usize("cols", 8)?;
     let n = rows * cols;
 
     let pipe = Pipeline::new(cfg.clone())?;

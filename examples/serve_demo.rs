@@ -1,9 +1,16 @@
-//! Generation-service demo: the dynamic batcher + worker loop serving
-//! mixed-size requests through the quantized sampler, reporting
-//! per-request latency and aggregate throughput.
+//! Sharded generation-service demo: several client threads firing
+//! mixed-size requests at a multi-worker server, which calibrates the
+//! quantization config once, shares it across worker shards, and packs
+//! the fixed-size artifact batches from one FIFO queue.
+//!
+//! Reports per-request latency, then the aggregate + per-worker stats
+//! (throughput, fill, padding, queue depth, p50/p95 latency).
 //!
 //! Run: cargo run --release --example serve_demo -- \
-//!        --timesteps 50 --calib-per-group 8 --requests 6
+//!        --timesteps 50 --calib-per-group 8 \
+//!        --clients 3 --requests 4 --workers 2
+
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use tq_dit::coordinator::pipeline::Method;
 use tq_dit::serve::{GenRequest, GenServer};
@@ -13,31 +20,68 @@ use tq_dit::util::config::RunConfig;
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let mut cfg = RunConfig::from_args(&args)?;
-    cfg.timesteps = args.usize("timesteps", 50);
-    cfg.calib_per_group = args.usize("calib-per-group", 8);
-    let n_req = args.usize("requests", 6);
+    cfg.timesteps = args.usize("timesteps", 50)?;
+    cfg.calib_per_group = args.usize("calib-per-group", 8)?;
+    let clients = args.usize("clients", 3)?.max(1);
+    let n_req = args.usize("requests", 4)?;
+    let workers = args.usize("workers", 2)?.max(1);
     let method = Method::parse(args.str_or("method", "tq-dit"))
-        .expect("unknown --method");
+        .ok_or_else(|| anyhow::anyhow!("unknown --method"))?;
 
-    println!("== serve demo: {} requests via {} (W{}A{}, T={}) ==", n_req,
-             method.name(), cfg.wbits, cfg.abits, cfg.timesteps);
-    let server = GenServer::start(cfg, method);
+    println!(
+        "== serve demo: {clients} clients x {n_req} requests via {} on \
+         {workers} workers (W{}A{}, T={}) ==",
+        method.name(), cfg.wbits, cfg.abits, cfg.timesteps
+    );
+    let server = GenServer::with_workers(cfg, method, workers);
 
-    // mixed request sizes across classes, all in flight at once
-    let mut handles = Vec::new();
-    for i in 0..n_req {
-        let req = GenRequest { class: (i % 8) as i32, n: 3 + (i * 5) % 11 };
-        println!("submit req {i}: class {} x{}", req.class, req.n);
-        handles.push((i, req.n, server.submit(req)));
-    }
-    for (i, n, (id, rx)) in handles {
-        let resp = rx.recv()?;
-        assert_eq!(resp.id, id);
-        println!("req {i}: {n} images in {:.2}s ({} px)", resp.latency_s,
-                 resp.images.len());
-    }
+    // mixed request sizes across classes, all clients submitting
+    // concurrently against the shared handle
+    let failures = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let server = &server;
+            let failures = &failures;
+            s.spawn(move || {
+                for i in 0..n_req {
+                    let req = GenRequest {
+                        class: ((c + i) % 8) as i32,
+                        n: 1 + (c * 7 + i * 5) % 11,
+                    };
+                    let n = req.n;
+                    match server.submit(req) {
+                        Ok((id, rx)) => match rx.recv() {
+                            Ok(Ok(resp)) => println!(
+                                "client {c} req {i} (id {id}): {n} images \
+                                 in {:.2}s ({} px)",
+                                resp.latency_s, resp.images.len()
+                            ),
+                            Ok(Err(e)) => {
+                                failures.fetch_add(1, Ordering::Relaxed);
+                                eprintln!("client {c} req {i}: {e}");
+                            }
+                            Err(_) => {
+                                failures.fetch_add(1, Ordering::Relaxed);
+                                eprintln!(
+                                    "client {c} req {i}: channel closed"
+                                );
+                            }
+                        },
+                        Err(e) => {
+                            failures.fetch_add(1, Ordering::Relaxed);
+                            eprintln!("client {c} req {i}: rejected: {e}");
+                        }
+                    }
+                }
+            });
+        }
+    });
 
     let stats = server.shutdown();
     stats.print();
+    let failed = failures.load(Ordering::Relaxed);
+    if failed > 0 {
+        anyhow::bail!("{failed} request(s) failed");
+    }
     Ok(())
 }

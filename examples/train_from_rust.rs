@@ -18,7 +18,7 @@ use tq_dit::util::rng::Rng;
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let cfg = RunConfig::from_args(&args)?;
-    let steps = args.usize("steps", 60);
+    let steps = args.usize("steps", 60)?;
 
     let pipe = Pipeline::new(cfg.clone())?;
     let m = pipe.rt.manifest.clone();

@@ -8,6 +8,7 @@ mod common;
 use tq_dit::coordinator::pipeline::{Method, Pipeline};
 use tq_dit::coordinator::QuantConfig;
 use tq_dit::sampler::Sampler;
+use tq_dit::serve::{GenRequest, GenServer};
 use tq_dit::tensor::Tensor;
 use tq_dit::util::bench::Bench;
 use tq_dit::util::rng::Rng;
@@ -85,6 +86,49 @@ fn main() -> anyhow::Result<()> {
         println!("  {name:<18} {:>6} calls  {:>9.3}s total  {:>8.2}ms/call",
                  st.calls, st.total_s,
                  1e3 * st.total_s / st.calls.max(1) as f64);
+    }
+
+    // sharded generation service: aggregate throughput at 1/2/4 workers
+    // on a fixed mixed-size synthetic workload (FP path, so worker
+    // startup cost is pipeline build only)
+    drop(sampler_q);
+    drop(sampler);
+    drop((xb, tb, yb, qpb, wbufs));
+    drop(pipe);
+    println!("\nsharded serve scaling (FP, T={}):", cfg.timesteps);
+    let n_req = 12usize;
+    let mut base_thr = 0.0f64;
+    for &w in &[1usize, 2, 4] {
+        let server = GenServer::with_workers(cfg.clone(), Method::Fp, w);
+        // keep worker startup (pipeline build) out of the steady-state
+        // throughput window; a dead worker ends the wait
+        while server.ready_workers() < server.live_workers() {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        let t0 = std::time::Instant::now();
+        let mut rxs = Vec::with_capacity(n_req);
+        for i in 0..n_req {
+            let req = GenRequest {
+                class: (i % 8) as i32,
+                n: 4 + (i * 3) % 9,
+            };
+            rxs.push(server.submit(req)?);
+        }
+        let mut images = 0usize;
+        for (_, rx) in rxs {
+            images += rx.recv()??.images.len() / il;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let thr = images as f64 / wall;
+        if w == 1 {
+            base_thr = thr;
+        }
+        println!(
+            "  workers={w}: {images} imgs in {wall:.2}s  {thr:.2} img/s  \
+             ({:.2}x vs 1 worker)",
+            thr / base_thr.max(1e-9)
+        );
+        server.shutdown().print();
     }
     Ok(())
 }

@@ -5,6 +5,11 @@
 //! configuration; [`Pipeline::calibrate`] produces a [`QuantConfig`]
 //! (plus the Table-IV cost counters) for any [`Method`], and
 //! [`Pipeline::evaluate`] turns a config into a Table-I/II row.
+//!
+//! Construction and calibration are deliberately split: a `QuantConfig`
+//! is plain (cloneable, `Send`) data, so the serve layer calibrates on
+//! one pipeline and rebuilds samplers from the shared config on every
+//! worker thread via [`Pipeline::sampler`].
 
 use anyhow::Result;
 
@@ -213,11 +218,19 @@ impl Pipeline {
         Ok((qc, cost))
     }
 
+    /// Build a sampler for an already-calibrated config. This is the
+    /// second half of the calibrate/serve split: serve workers calibrate
+    /// *once*, clone the resulting [`QuantConfig`] across threads, and
+    /// each builds its own sampler here without re-running calibration.
+    pub fn sampler(&self, qc: &QuantConfig) -> Result<Sampler<'_>> {
+        Sampler::new(&self.rt, &self.weights, qc.clone(),
+                     self.cfg.timesteps)
+    }
+
     /// Sample `n` images under `qc` and score FID/sFID/IS.
     pub fn evaluate(&self, qc: &QuantConfig, n: usize, seed: u64)
                     -> Result<EvalRow> {
-        let sampler = Sampler::new(&self.rt, &self.weights, qc.clone(),
-                                   self.cfg.timesteps)?;
+        let sampler = self.sampler(qc)?;
         let mut eval = Evaluator::new(&self.rt)?;
         let mut rng = Rng::new(seed);
         sampler.generate(n, self.ds.num_classes, &mut rng,
@@ -228,8 +241,7 @@ impl Pipeline {
     /// Sample a grid of images (Fig. 6) under `qc`.
     pub fn sample_grid(&self, qc: &QuantConfig, n: usize, seed: u64)
                        -> Result<Vec<f32>> {
-        let sampler = Sampler::new(&self.rt, &self.weights, qc.clone(),
-                                   self.cfg.timesteps)?;
+        let sampler = self.sampler(qc)?;
         let mut rng = Rng::new(seed);
         let mut out = Vec::with_capacity(n * sampler.img_len());
         sampler.generate(n, self.ds.num_classes, &mut rng, |imgs, _| {

@@ -23,7 +23,8 @@
 //! * [`model`] — weight store + host-side weight fake-quantization.
 //! * [`coordinator`] — Algorithm 1 phases 1–3, baselines, pipelines.
 //! * [`sampler`] — ancestral DDPM sampling loop (TGQ-aware).
-//! * [`serve`] — request queue + dynamic batcher (generation service).
+//! * [`serve`] — sharded generation service: dynamic batcher + a
+//!   multi-worker router with typed error propagation.
 //! * [`metrics`] — FID / sFID / Inception Score, image writers.
 //! * [`data`] — synthetic dataset (mirror of `python/compile/data.py`).
 

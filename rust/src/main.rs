@@ -8,7 +8,7 @@
 //!   distributions  Fig. 2/3 CSVs (activation pathologies)
 //!   grid           Fig. 6 sample grids (PPM)
 //!   sample         generate images with one method, write PPMs
-//!   serve          batched generation service demo
+//!   serve          sharded generation service demo
 //!   stats          artifact/manifest inventory + exec stats
 //!
 //! Common flags: --artifacts DIR --wbits K --abits K --timesteps T
@@ -70,7 +70,7 @@ SUBCOMMANDS
   distributions  Fig. 2/3 activation-distribution CSVs (--out-dir)
   grid           Fig. 6 sample grids as PPM (--out-dir, --rows, --cols)
   sample         generate images with --method, write PPMs (--out-dir)
-  serve          batched generation service demo (--requests)
+  serve          sharded generation service demo (--requests, --workers)
   report         per-layer quantization-error attribution (--method)
   stats          manifest inventory
 
@@ -180,8 +180,8 @@ fn cmd_distributions(cfg: RunConfig, args: &Args) -> Result<()> {
 
 fn cmd_grid(cfg: RunConfig, args: &Args) -> Result<()> {
     let out_dir = args.str_or("out-dir", ".").to_string();
-    let rows = args.usize("rows", 4);
-    let cols = args.usize("cols", 8);
+    let rows = args.usize("rows", 4)?;
+    let cols = args.usize("cols", 8)?;
     let pipe = Pipeline::new(cfg.clone())?;
     let m = pipe.rt.manifest.model.clone();
     let fp = QuantConfig::fp(pipe.groups.clone());
@@ -203,7 +203,7 @@ fn cmd_grid(cfg: RunConfig, args: &Args) -> Result<()> {
 
 fn cmd_sample(cfg: RunConfig, args: &Args) -> Result<()> {
     let out_dir = args.str_or("out-dir", ".").to_string();
-    let n = args.usize("n", 8);
+    let n = args.usize("n", 8)?;
     let method = Method::parse(args.str_or("method", "tq-dit"))
         .ok_or_else(|| anyhow::anyhow!("unknown --method"))?;
     let pipe = Pipeline::new(cfg.clone())?;
@@ -226,19 +226,22 @@ fn cmd_sample(cfg: RunConfig, args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(cfg: RunConfig, args: &Args) -> Result<()> {
-    let n_req = args.usize("requests", 6);
+    let n_req = args.usize("requests", 6)?;
+    let workers = args.usize("workers", 1)?;
     let method = Method::parse(args.str_or("method", "tq-dit"))
         .ok_or_else(|| anyhow::anyhow!("unknown --method"))?;
-    let server = GenServer::start(cfg, method);
+    let server = GenServer::with_workers(cfg, method, workers);
     let mut handles = Vec::new();
     for i in 0..n_req {
         let req = GenRequest { class: (i % 8) as i32, n: 3 + (i * 5) % 11 };
-        handles.push((i, server.submit(req)));
+        handles.push((i, server.submit(req)?));
     }
     for (i, (id, rx)) in handles {
-        let resp = rx.recv()?;
-        println!("req {i} (id {id}): {} px in {:.2}s", resp.images.len(),
-                 resp.latency_s);
+        match rx.recv()? {
+            Ok(resp) => println!("req {i} (id {id}): {} px in {:.2}s",
+                                 resp.images.len(), resp.latency_s),
+            Err(e) => println!("req {i} (id {id}): failed: {e}"),
+        }
     }
     server.shutdown().print();
     Ok(())

@@ -58,6 +58,22 @@ impl Batcher {
     pub fn counters(&self) -> (u64, u64) {
         (self.enqueued, self.dispatched)
     }
+
+    /// Remove every queued slot belonging to `req_id` (the request
+    /// failed elsewhere); returns how many slots were purged. Purged
+    /// slots count as neither enqueued-anew nor dispatched.
+    pub fn drop_request(&mut self, req_id: u64) -> usize {
+        let before = self.queue.len();
+        self.queue.retain(|s| s.req_id != req_id);
+        before - self.queue.len()
+    }
+
+    /// Drop all queued slots (service aborting); returns the count.
+    pub fn clear(&mut self) -> usize {
+        let n = self.queue.len();
+        self.queue.clear();
+        n
+    }
 }
 
 #[cfg(test)]
@@ -102,6 +118,29 @@ mod tests {
         b.pop_batch(3);
         assert_eq!(b.counters(), (5, 3));
         assert_eq!(b.pending(), 2);
+    }
+
+    #[test]
+    fn drop_request_purges_only_that_request() {
+        let mut b = Batcher::new();
+        b.push_request(1, 3, 4);
+        b.push_request(2, 5, 2);
+        b.push_request(3, 7, 3);
+        assert_eq!(b.drop_request(2), 2);
+        assert_eq!(b.pending(), 7);
+        let rest = b.pop_batch(16);
+        assert!(rest.iter().all(|s| s.req_id != 2));
+        assert_eq!(rest.len(), 7);
+        assert_eq!(b.drop_request(99), 0);
+    }
+
+    #[test]
+    fn clear_empties_the_queue() {
+        let mut b = Batcher::new();
+        b.push_request(1, 0, 5);
+        assert_eq!(b.clear(), 5);
+        assert!(b.is_empty());
+        assert!(b.pop_batch(4).is_empty());
     }
 
     #[test]

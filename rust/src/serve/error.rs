@@ -1,0 +1,85 @@
+//! Typed serve-layer errors.
+//!
+//! Every failure mode a client can observe is a [`ServeError`] variant:
+//! rejected submits (shutdown, backpressure, dead service) surface as
+//! `Err` from `submit`, and in-flight failures (a worker dying mid-batch,
+//! the whole service going down with queued work) are *sent* to the
+//! waiting client over its response channel — clients never hang on a
+//! channel whose producer has died, and the process never panics on a
+//! dead worker.
+
+use std::fmt;
+
+/// Client-visible generation-service failure.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The server is shutting down (or already shut down); the request
+    /// was not accepted.
+    ShuttingDown,
+    /// Backpressure: accepting the request would exceed the queue cap.
+    /// Transient — retry once the queue drains.
+    QueueFull { queued: usize, cap: usize },
+    /// The request alone exceeds the queue cap, so it can *never* be
+    /// accepted (unlike `QueueFull`, retrying is pointless).
+    RequestTooLarge { n: usize, cap: usize },
+    /// A worker thread failed before it could serve (pipeline build or
+    /// calibration error).
+    WorkerInitFailed { worker: usize, cause: String },
+    /// A worker failed while generating the batch containing this
+    /// request.
+    WorkerFailed { worker: usize, cause: String },
+    /// Every worker has exited; `cause` carries the first recorded
+    /// failure (or a generic note when workers exited cleanly).
+    AllWorkersDead { cause: String },
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::ShuttingDown => {
+                write!(f, "generation server is shutting down")
+            }
+            ServeError::QueueFull { queued, cap } => {
+                write!(f, "generation queue full ({queued} slots queued, \
+                           cap {cap})")
+            }
+            ServeError::RequestTooLarge { n, cap } => {
+                write!(f, "request for {n} images exceeds the queue cap \
+                           {cap} and can never be served whole")
+            }
+            ServeError::WorkerInitFailed { worker, cause } => {
+                write!(f, "worker {worker} failed to initialize: {cause}")
+            }
+            ServeError::WorkerFailed { worker, cause } => {
+                write!(f, "worker {worker} failed while generating: {cause}")
+            }
+            ServeError::AllWorkersDead { cause } => {
+                write!(f, "no live generation workers ({cause})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_worker_and_cause() {
+        let e = ServeError::WorkerFailed {
+            worker: 3,
+            cause: "execute dit_quant: OOM".into(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("worker 3"), "{s}");
+        assert!(s.contains("OOM"), "{s}");
+    }
+
+    #[test]
+    fn queue_full_reports_both_numbers() {
+        let s = ServeError::QueueFull { queued: 99, cap: 64 }.to_string();
+        assert!(s.contains("99") && s.contains("64"), "{s}");
+    }
+}

@@ -1,15 +1,43 @@
-//! Batched generation service: request queue + dynamic batcher + a
-//! worker loop that drives the sampler.
+//! Sharded generation service: request queue + dynamic batcher + a
+//! router that fans batches out to N sampler-owning worker threads.
 //!
-//! The PJRT runtime is not `Send` (executables are `Rc`), so the server
-//! constructs runtime + sampler *inside* its worker thread and talks to
-//! clients over channels. The [`batcher`] itself is a pure data
-//! structure (unit- and property-tested without a runtime): it splits
-//! requests into image slots, fills fixed-size artifact batches FIFO,
-//! and never starves a request.
+//! # Threading model
+//!
+//! The PJRT runtime is not `Send` (executables are `Rc`), so nothing
+//! runtime-shaped ever crosses a thread boundary. Instead:
+//!
+//! * **Clients** hold a [`GenServer`] (or raw [`router::Router`])
+//!   handle, which is `Sync` — any number of client threads submit
+//!   through one shared reference. `submit` assigns ids from an atomic
+//!   counter and returns a per-request response channel; it *returns*
+//!   typed [`ServeError`]s (shutdown, backpressure, dead service)
+//!   rather than panicking.
+//! * **Workers** are long-lived threads that each build their own
+//!   pipeline + sampler *inside* the thread ([`router::WorkerBody`]),
+//!   then loop: lock the shared state, pop the oldest batch from the
+//!   FIFO [`Batcher`], unlock, generate, re-lock and route results back
+//!   to the waiting clients. Whichever worker is idle takes the next
+//!   batch (work-stealing), so one slow shard never stalls the queue.
+//! * **Calibration** runs once, not per worker: the first pipeline to
+//!   come up calibrates and publishes the `QuantConfig`; the other
+//!   workers clone the shared qparams (see [`server`]).
+//!
+//! Worker failures propagate as [`ServeError`]s on the affected
+//! clients' channels — no hangs, no process panics — and the service
+//! keeps serving on the surviving workers. The [`batcher`] itself is a
+//! pure data structure (unit- and property-tested without a runtime):
+//! it splits requests into image slots, fills fixed-size artifact
+//! batches FIFO, and never starves a request.
 
 pub mod batcher;
+pub mod error;
+pub mod router;
 pub mod server;
 
 pub use batcher::{Batcher, Slot};
-pub use server::{GenRequest, GenResponse, GenServer, ServerStats};
+pub use error::ServeError;
+pub use router::{
+    GenBackend, GenRequest, GenResponse, GenResult, Router, RouterOpts,
+    ServerStats, WorkerBody, WorkerHandle, WorkerStats,
+};
+pub use server::GenServer;

@@ -1,0 +1,1019 @@
+//! Multi-worker generation router: N worker threads pulling fixed-size
+//! batches off one shared FIFO [`Batcher`].
+//!
+//! # Threading model
+//!
+//! The PJRT runtime is not `Send`, so a worker's backend (runtime +
+//! sampler) must be *built inside* the worker's own thread; the router
+//! only ever moves plain data across threads. Dispatch is work-stealing
+//! by construction: every worker, when idle, locks the shared state and
+//! pops the next batch off the FIFO queue — whichever worker is free
+//! takes the oldest work, and a slow worker never blocks a fast one.
+//!
+//! # Failure semantics
+//!
+//! * A worker that fails to initialize marks itself dead; the service
+//!   keeps running on the survivors.
+//! * A worker whose `generate` call fails sends a typed
+//!   [`ServeError::WorkerFailed`] to every client with images in that
+//!   batch, removes their remaining queued slots, and exits.
+//! * When the *last* worker exits with requests still queued, every
+//!   waiting client receives [`ServeError::AllWorkersDead`] and later
+//!   submits are rejected with the same cause. Clients never hang and
+//!   the process never panics on a dead worker.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::serve::batcher::{Batcher, Slot};
+use crate::serve::error::ServeError;
+use crate::util::bench::percentile;
+
+/// A client request: n images of one class.
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub class: i32,
+    pub n: usize,
+}
+
+/// The server's reply.
+#[derive(Clone, Debug)]
+pub struct GenResponse {
+    pub id: u64,
+    /// Flat (n, H, W, C) pixels in ≈[-1, 1].
+    pub images: Vec<f32>,
+    /// Queue + compute time for the whole request.
+    pub latency_s: f64,
+}
+
+/// What a client's response channel yields.
+pub type GenResult = std::result::Result<GenResponse, ServeError>;
+
+/// Per-worker counters (reported inside [`ServerStats`]).
+#[derive(Clone, Debug, Default)]
+pub struct WorkerStats {
+    pub worker: usize,
+    pub batches: u64,
+    /// Real (non-padding) image slots computed.
+    pub images: u64,
+    /// Class-0 padding slots burned to fill the fixed artifact batch.
+    pub padded_slots: u64,
+    /// Wall-clock spent inside `generate`.
+    pub busy_s: f64,
+    /// The backend was built and entered service at some point
+    /// (false means the worker never got past initialization).
+    pub ready: bool,
+    /// True if the worker exited on an error (init or generate).
+    pub failed: bool,
+}
+
+/// Aggregate server statistics (reported on shutdown).
+#[derive(Clone, Debug, Default)]
+pub struct ServerStats {
+    pub requests: u64,
+    /// Real images delivered (excludes padding).
+    pub images: u64,
+    pub batches: u64,
+    /// Occupied slots / dispatched capacity.
+    pub batch_fill: f64,
+    /// Padding slots across all workers (wasted capacity).
+    pub padded_slots: u64,
+    /// Requests that received a [`ServeError`] instead of images.
+    pub failed_requests: u64,
+    /// Completed responses whose client had hung up its receiver.
+    pub dropped_responses: u64,
+    pub wall_s: f64,
+    /// Queue depth observed at each batch dispatch.
+    pub queue_depth_avg: f64,
+    pub queue_depth_max: usize,
+    /// Per-request latency percentiles (queue + compute).
+    pub latency_p50_s: f64,
+    pub latency_p95_s: f64,
+    pub workers: Vec<WorkerStats>,
+}
+
+impl ServerStats {
+    pub fn throughput(&self) -> f64 {
+        self.images as f64 / self.wall_s.max(1e-9)
+    }
+
+    pub fn print(&self) {
+        println!(
+            "served {} requests / {} images in {:.2}s  \
+             ({:.2} img/s, {} batches, fill {:.0}%, {} padded slots)",
+            self.requests, self.images, self.wall_s, self.throughput(),
+            self.batches, self.batch_fill * 100.0, self.padded_slots
+        );
+        println!(
+            "latency p50 {:.3}s p95 {:.3}s  queue depth avg {:.1} max {}  \
+             failed {}  dropped {}",
+            self.latency_p50_s, self.latency_p95_s, self.queue_depth_avg,
+            self.queue_depth_max, self.failed_requests,
+            self.dropped_responses
+        );
+        for w in &self.workers {
+            println!(
+                "  worker {}: {:>4} batches  {:>5} images  {:>4} padded  \
+                 busy {:.2}s{}",
+                w.worker, w.batches, w.images, w.padded_slots, w.busy_s,
+                if w.failed { "  (failed)" } else { "" }
+            );
+        }
+    }
+}
+
+/// A per-worker generation backend. Backends are built inside the
+/// worker's own thread (PJRT runtimes are not `Send`), so implementations
+/// need not be `Send`.
+pub trait GenBackend {
+    /// Fixed batch size the backend computes per call.
+    fn batch(&self) -> usize;
+    /// Flat length of one image (H·W·C).
+    fn img_len(&self) -> usize;
+    /// Generate one batch for `labels` (`labels.len() == batch()`).
+    fn generate(&mut self, labels: &[i32]) -> Result<Vec<f32>>;
+}
+
+/// Handed to each worker body on its own thread; [`WorkerHandle::serve`]
+/// runs the dispatch loop with the backend the body built.
+pub struct WorkerHandle {
+    idx: usize,
+    shared: Arc<Shared>,
+}
+
+impl WorkerHandle {
+    /// This worker's index (stable, 0-based).
+    pub fn index(&self) -> usize {
+        self.idx
+    }
+
+    /// Run the dispatch loop with this worker's backend until shutdown
+    /// (or until the backend fails a batch).
+    pub fn serve(&self, backend: &mut dyn GenBackend) {
+        worker_loop(self.idx, backend, &self.shared);
+    }
+}
+
+/// Per-worker setup run on the worker's thread: build a backend on the
+/// stack (runtime, sampler, rng, ...) and hand it to
+/// [`WorkerHandle::serve`], which runs the dispatch loop until shutdown.
+/// Returning `Err` *before* calling `serve` marks the worker
+/// init-failed; the router keeps serving on the surviving workers.
+pub type WorkerBody = dyn Fn(WorkerHandle) -> Result<()> + Send + Sync;
+
+/// Router tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct RouterOpts {
+    /// Worker threads (min 1).
+    pub workers: usize,
+    /// Backpressure: reject submits once this many image slots are
+    /// queued (does not count slots already being computed).
+    pub max_queue: usize,
+}
+
+impl Default for RouterOpts {
+    fn default() -> Self {
+        RouterOpts { workers: 1, max_queue: 16384 }
+    }
+}
+
+struct PendingReq {
+    tx: Sender<GenResult>,
+    /// Total images requested.
+    n: usize,
+    /// Lazily sized to n·img_len on first delivery; slots may complete
+    /// out of order across workers, so each is written at `index`.
+    images: Vec<f32>,
+    remaining: usize,
+    t0: Instant,
+}
+
+struct RouterState {
+    open: bool,
+    /// Workers that have not yet exited (includes ones still
+    /// initializing, so early submits queue instead of failing).
+    alive: usize,
+    /// Workers whose backend is built and serving (readiness signal for
+    /// benchmarks that want to time steady-state throughput only).
+    ready: usize,
+    batcher: Batcher,
+    pending: HashMap<u64, PendingReq>,
+    first_error: Option<ServeError>,
+    requests: u64,
+    failed_requests: u64,
+    dropped_responses: u64,
+    fill_sum: f64,
+    latencies: Vec<f64>,
+    queue_depth_max: usize,
+    depth_sum: f64,
+    depth_samples: u64,
+    workers: Vec<WorkerStats>,
+}
+
+impl RouterState {
+    fn new(workers: usize) -> RouterState {
+        RouterState {
+            open: true,
+            alive: workers,
+            ready: 0,
+            batcher: Batcher::new(),
+            pending: HashMap::new(),
+            first_error: None,
+            requests: 0,
+            failed_requests: 0,
+            dropped_responses: 0,
+            fill_sum: 0.0,
+            latencies: Vec::new(),
+            queue_depth_max: 0,
+            depth_sum: 0.0,
+            depth_samples: 0,
+            workers: (0..workers)
+                .map(|worker| WorkerStats { worker, ..WorkerStats::default() })
+                .collect(),
+        }
+    }
+
+    /// Route one computed batch back to its pending requests.
+    fn deliver(&mut self, idx: usize, slots: &[Slot], imgs: &[f32],
+               il: usize, cap: usize, busy_s: f64) {
+        self.workers[idx].batches += 1;
+        self.workers[idx].padded_slots += (cap - slots.len()) as u64;
+        self.workers[idx].busy_s += busy_s;
+        self.fill_sum += slots.len() as f64 / cap.max(1) as f64;
+        for (i, s) in slots.iter().enumerate() {
+            // a missing entry means the request already failed elsewhere
+            let Some(p) = self.pending.get_mut(&s.req_id) else { continue };
+            if p.images.is_empty() {
+                p.images = vec![0.0; p.n * il];
+            }
+            p.images[s.index * il..(s.index + 1) * il]
+                .copy_from_slice(&imgs[i * il..(i + 1) * il]);
+            p.remaining -= 1;
+            // counted here, not per batch: slots computed for requests
+            // that already failed elsewhere are not delivered images
+            self.workers[idx].images += 1;
+            if p.remaining == 0 {
+                let done = self.pending.remove(&s.req_id).unwrap();
+                let latency_s = done.t0.elapsed().as_secs_f64();
+                self.latencies.push(latency_s);
+                let resp = GenResponse {
+                    id: s.req_id,
+                    images: done.images,
+                    latency_s,
+                };
+                if done.tx.send(Ok(resp)).is_err() {
+                    // client hung up its receiver: drop cleanly
+                    self.dropped_responses += 1;
+                }
+            }
+        }
+    }
+
+    /// Fail every request with a slot in this batch; purge their queued
+    /// remainder so other workers don't burn capacity on them.
+    fn fail_batch(&mut self, idx: usize, slots: &[Slot], cause: &str) {
+        self.workers[idx].failed = true;
+        for s in slots {
+            if let Some(p) = self.pending.remove(&s.req_id) {
+                self.failed_requests += 1;
+                self.batcher.drop_request(s.req_id);
+                let _ = p.tx.send(Err(ServeError::WorkerFailed {
+                    worker: idx,
+                    cause: cause.to_string(),
+                }));
+            }
+        }
+        if self.first_error.is_none() {
+            self.first_error = Some(ServeError::WorkerFailed {
+                worker: idx,
+                cause: cause.to_string(),
+            });
+        }
+    }
+
+    fn note_depth(&mut self) {
+        let depth = self.batcher.pending();
+        self.queue_depth_max = self.queue_depth_max.max(depth);
+        self.depth_sum += depth as f64;
+        self.depth_samples += 1;
+    }
+
+    /// Fail and remove every pending request with a clone of `err`.
+    fn fail_all_pending(&mut self, err: &ServeError) {
+        let stranded: Vec<PendingReq> =
+            self.pending.drain().map(|(_, p)| p).collect();
+        self.failed_requests += stranded.len() as u64;
+        for p in stranded {
+            let _ = p.tx.send(Err(err.clone()));
+        }
+    }
+
+    /// Cause attached to dead-service errors: the first recorded
+    /// failure, or a generic note when workers exited cleanly.
+    fn dead_cause(&self) -> String {
+        self.first_error
+            .as_ref()
+            .map(|e| e.to_string())
+            .unwrap_or_else(|| "all workers exited".into())
+    }
+}
+
+struct Shared {
+    state: Mutex<RouterState>,
+    /// Signaled on submit, shutdown, and worker exit.
+    work_ready: Condvar,
+}
+
+impl Shared {
+    /// Lock the state, recovering from poisoning: a worker that
+    /// panicked mid-update must not turn every later `submit` into a
+    /// panic — the counters may be slightly stale, but clients keep
+    /// getting typed errors instead.
+    fn lock(&self) -> std::sync::MutexGuard<'_, RouterState> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Worker bookkeeping on thread exit; if this was the last worker,
+    /// fail everything still queued so no client hangs.
+    fn worker_exited(&self, idx: usize, init_err: Option<String>) {
+        let mut st = self.lock();
+        st.workers[idx].failed |= init_err.is_some();
+        st.alive -= 1;
+        if st.workers[idx].ready {
+            // no longer serving (the per-worker flag stays set as the
+            // historical "came up" marker)
+            st.ready -= 1;
+        }
+        if let Some(cause) = init_err {
+            eprintln!("[serve] worker {idx} failed: {cause}");
+            if st.first_error.is_none() {
+                st.first_error =
+                    Some(ServeError::WorkerInitFailed { worker: idx, cause });
+            }
+        }
+        if st.alive == 0 && !st.pending.is_empty() {
+            let err = ServeError::AllWorkersDead { cause: st.dead_cause() };
+            st.batcher.clear();
+            st.fail_all_pending(&err);
+        }
+        drop(st);
+        self.work_ready.notify_all();
+    }
+}
+
+/// Handle to the sharded generation service. `Sync`: any number of
+/// client threads may `submit` through one shared reference.
+pub struct Router {
+    shared: Arc<Shared>,
+    next_id: AtomicU64,
+    handles: Vec<JoinHandle<()>>,
+    t_start: Instant,
+    max_queue: usize,
+}
+
+impl Router {
+    /// Spawn `opts.workers` threads, each running `body` to build its
+    /// backend and then serving batches until shutdown.
+    pub fn start(opts: RouterOpts, body: Arc<WorkerBody>) -> Router {
+        let workers = opts.workers.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(RouterState::new(workers)),
+            work_ready: Condvar::new(),
+        });
+        let mut handles = Vec::with_capacity(workers);
+        for idx in 0..workers {
+            let shared = Arc::clone(&shared);
+            let body = Arc::clone(&body);
+            let h = std::thread::Builder::new()
+                .name(format!("gen-worker-{idx}"))
+                .spawn(move || {
+                    let handle = WorkerHandle {
+                        idx,
+                        shared: Arc::clone(&shared),
+                    };
+                    // a panicking body must still be recorded as a dead
+                    // worker, or waiting clients would hang forever
+                    let err = match std::panic::catch_unwind(
+                        std::panic::AssertUnwindSafe(|| body(handle)),
+                    ) {
+                        Ok(Ok(())) => None,
+                        Ok(Err(e)) => Some(format!("{e:#}")),
+                        Err(p) => Some(panic_message(&p)),
+                    };
+                    shared.worker_exited(idx, err);
+                })
+                .expect("spawn gen worker");
+            handles.push(h);
+        }
+        Router {
+            shared,
+            next_id: AtomicU64::new(0),
+            handles,
+            t_start: Instant::now(),
+            max_queue: opts.max_queue,
+        }
+    }
+
+    /// Submit a request; returns (id, receiver yielding the response or
+    /// a typed error). Rejects (instead of queuing forever) when the
+    /// service is shutting down, dead, or over its queue cap.
+    pub fn submit(&self, req: GenRequest)
+                  -> std::result::Result<(u64, Receiver<GenResult>),
+                                         ServeError> {
+        let mut st = self.shared.lock();
+        if !st.open {
+            return Err(ServeError::ShuttingDown);
+        }
+        if st.alive == 0 {
+            return Err(ServeError::AllWorkersDead {
+                cause: st.dead_cause(),
+            });
+        }
+        if req.n > self.max_queue {
+            // could never fit even in an empty queue — not transient
+            return Err(ServeError::RequestTooLarge {
+                n: req.n,
+                cap: self.max_queue,
+            });
+        }
+        let queued = st.batcher.pending();
+        if queued + req.n > self.max_queue {
+            return Err(ServeError::QueueFull {
+                queued,
+                cap: self.max_queue,
+            });
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        st.requests += 1;
+        let (tx, rx) = channel();
+        if req.n == 0 {
+            // nothing to compute: complete immediately
+            let _ = tx.send(Ok(GenResponse {
+                id,
+                images: Vec::new(),
+                latency_s: 0.0,
+            }));
+            return Ok((id, rx));
+        }
+        st.pending.insert(id, PendingReq {
+            tx,
+            n: req.n,
+            images: Vec::new(),
+            remaining: req.n,
+            t0: Instant::now(),
+        });
+        st.batcher.push_request(id, req.class, req.n);
+        drop(st);
+        self.shared.work_ready.notify_all();
+        Ok((id, rx))
+    }
+
+    /// Image slots currently queued (not yet picked up by a worker).
+    pub fn queue_depth(&self) -> usize {
+        self.shared.lock().batcher.pending()
+    }
+
+    /// Workers that have not exited.
+    pub fn live_workers(&self) -> usize {
+        self.shared.lock().alive
+    }
+
+    /// Workers whose backend is built and currently serving (exited
+    /// workers no longer count). Benchmarks wait until
+    /// `ready_workers() == live_workers()` before timing so startup
+    /// cost stays out of steady-state numbers.
+    pub fn ready_workers(&self) -> usize {
+        self.shared.lock().ready
+    }
+
+    /// Stop accepting requests, drain the queue, join the workers and
+    /// return aggregate + per-worker statistics.
+    pub fn shutdown(mut self) -> ServerStats {
+        {
+            let mut st = self.shared.lock();
+            st.open = false;
+        }
+        self.shared.work_ready.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        let mut st = self.shared.lock();
+        // belt & braces: nothing should survive the drain, but never
+        // strand a client if it does
+        if !st.pending.is_empty() {
+            st.fail_all_pending(&ServeError::ShuttingDown);
+        }
+        let mut lat = std::mem::take(&mut st.latencies);
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let batches: u64 = st.workers.iter().map(|w| w.batches).sum();
+        let images: u64 = st.workers.iter().map(|w| w.images).sum();
+        let padded: u64 = st.workers.iter().map(|w| w.padded_slots).sum();
+        ServerStats {
+            requests: st.requests,
+            images,
+            batches,
+            batch_fill: if batches > 0 {
+                st.fill_sum / batches as f64
+            } else {
+                0.0
+            },
+            padded_slots: padded,
+            failed_requests: st.failed_requests,
+            dropped_responses: st.dropped_responses,
+            wall_s: self.t_start.elapsed().as_secs_f64(),
+            queue_depth_avg: if st.depth_samples > 0 {
+                st.depth_sum / st.depth_samples as f64
+            } else {
+                0.0
+            },
+            queue_depth_max: st.queue_depth_max,
+            latency_p50_s: percentile(&lat, 0.50),
+            latency_p95_s: percentile(&lat, 0.95),
+            workers: st.workers.clone(),
+        }
+    }
+}
+
+impl Drop for Router {
+    /// A router dropped without `shutdown` still stops and joins its
+    /// workers (draining the queue first) so no thread spins forever.
+    fn drop(&mut self) {
+        self.shared.lock().open = false;
+        self.shared.work_ready.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Best-effort panic payload → message.
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        format!("worker panicked: {s}")
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        format!("worker panicked: {s}")
+    } else {
+        "worker panicked".to_string()
+    }
+}
+
+/// The dispatch loop every worker runs: pop the oldest batch, pad it to
+/// the fixed artifact size, generate, route results (or typed errors)
+/// back. Returns on shutdown-with-empty-queue or after a generate
+/// failure (the worker is assumed poisoned).
+fn worker_loop(idx: usize, backend: &mut dyn GenBackend, shared: &Shared) {
+    let cap = backend.batch().max(1);
+    let il = backend.img_len();
+    {
+        let mut st = shared.lock();
+        st.ready += 1;
+        st.workers[idx].ready = true;
+    }
+    loop {
+        let slots = {
+            let mut st = shared.lock();
+            loop {
+                if !st.batcher.is_empty() {
+                    st.note_depth();
+                    break;
+                }
+                if !st.open {
+                    return;
+                }
+                st = shared
+                    .work_ready
+                    .wait(st)
+                    .unwrap_or_else(|p| p.into_inner());
+            }
+            st.batcher.pop_batch(cap)
+        };
+        debug_assert!(!slots.is_empty());
+
+        // pad the fixed artifact batch with class-0 slots
+        let mut labels = vec![0i32; cap];
+        for (i, s) in slots.iter().enumerate() {
+            labels[i] = s.class;
+        }
+        let t0 = Instant::now();
+        // a panicking backend fails its batch like an `Err` (then the
+        // panic resumes and the worker is recorded dead) — the clients
+        // in this batch must never be stranded
+        let result = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| backend.generate(&labels)),
+        );
+        let busy_s = t0.elapsed().as_secs_f64();
+
+        let mut st = shared.lock();
+        match result {
+            Ok(Ok(imgs)) => st.deliver(idx, &slots, &imgs, il, cap, busy_s),
+            Ok(Err(e)) => {
+                st.fail_batch(idx, &slots, &format!("{e:#}"));
+                return;
+            }
+            Err(p) => {
+                st.fail_batch(idx, &slots, &panic_message(&p));
+                drop(st);
+                std::panic::resume_unwind(p);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::mpsc;
+    use std::time::Duration;
+
+    /// Backend whose pixels all equal the slot's class label, so tests
+    /// can verify slot→request routing end to end.
+    struct MockBackend {
+        batch: usize,
+        il: usize,
+        calls: usize,
+        fail_after: Option<usize>,
+        panic_after: Option<usize>,
+        log: Option<Arc<Mutex<Vec<i32>>>>,
+    }
+
+    impl MockBackend {
+        fn new(batch: usize, il: usize) -> MockBackend {
+            MockBackend {
+                batch,
+                il,
+                calls: 0,
+                fail_after: None,
+                panic_after: None,
+                log: None,
+            }
+        }
+    }
+
+    impl GenBackend for MockBackend {
+        fn batch(&self) -> usize {
+            self.batch
+        }
+        fn img_len(&self) -> usize {
+            self.il
+        }
+        fn generate(&mut self, labels: &[i32]) -> Result<Vec<f32>> {
+            assert_eq!(labels.len(), self.batch);
+            if let Some(after) = self.fail_after {
+                if self.calls >= after {
+                    anyhow::bail!("injected failure on call {}", self.calls);
+                }
+            }
+            if let Some(after) = self.panic_after {
+                if self.calls >= after {
+                    panic!("injected panic on call {}", self.calls);
+                }
+            }
+            self.calls += 1;
+            if let Some(log) = &self.log {
+                log.lock().unwrap().extend_from_slice(labels);
+            }
+            Ok(labels
+                .iter()
+                .flat_map(|&c| std::iter::repeat(c as f32).take(self.il))
+                .collect())
+        }
+    }
+
+    fn mock_router(workers: usize, batch: usize, il: usize) -> Router {
+        let body: Arc<WorkerBody> = Arc::new(move |h: WorkerHandle| -> Result<()> {
+            let mut b = MockBackend::new(batch, il);
+            h.serve(&mut b);
+            Ok(())
+        });
+        Router::start(RouterOpts { workers, ..RouterOpts::default() }, body)
+    }
+
+    #[test]
+    fn single_worker_serves_one_request() {
+        let router = mock_router(1, 4, 3);
+        let (id, rx) = router.submit(GenRequest { class: 5, n: 2 }).unwrap();
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.id, id);
+        assert_eq!(resp.images.len(), 2 * 3);
+        assert!(resp.images.iter().all(|&v| v == 5.0));
+        let stats = router.shutdown();
+        assert_eq!(stats.requests, 1);
+        assert_eq!(stats.images, 2);
+        assert_eq!(stats.failed_requests, 0);
+    }
+
+    #[test]
+    fn zero_image_request_completes_immediately() {
+        let router = mock_router(1, 4, 3);
+        let (id, rx) = router.submit(GenRequest { class: 1, n: 0 }).unwrap();
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.id, id);
+        assert!(resp.images.is_empty());
+        let stats = router.shutdown();
+        assert_eq!(stats.requests, 1);
+        assert_eq!(stats.images, 0);
+    }
+
+    #[test]
+    fn concurrent_clients_get_exact_pixels_back() {
+        let router = mock_router(4, 4, 3);
+        let expected = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for c in 0..6usize {
+                let router = &router;
+                let expected = &expected;
+                s.spawn(move || {
+                    for i in 0..5usize {
+                        let class = ((c + i) % 7) as i32;
+                        let n = 1 + (c * 3 + i) % 9;
+                        expected.fetch_add(n, Ordering::Relaxed);
+                        let (_, rx) = router
+                            .submit(GenRequest { class, n })
+                            .unwrap();
+                        let resp = rx.recv().unwrap().unwrap();
+                        assert_eq!(resp.images.len(), n * 3);
+                        assert!(
+                            resp.images.iter().all(|&v| v == class as f32),
+                            "cross-request pixel mixup for class {class}"
+                        );
+                        assert!(resp.latency_s >= 0.0);
+                    }
+                });
+            }
+        });
+        let stats = router.shutdown();
+        assert_eq!(stats.requests, 30);
+        assert_eq!(stats.failed_requests, 0);
+        assert_eq!(stats.images as usize,
+                   expected.load(Ordering::Relaxed));
+        assert_eq!(stats.workers.len(), 4);
+    }
+
+    #[test]
+    fn fifo_order_holds_per_worker() {
+        // batch=1 and one worker: dispatch order must equal submit order
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let log2 = Arc::clone(&log);
+        let body: Arc<WorkerBody> = Arc::new(move |h: WorkerHandle| -> Result<()> {
+            let mut b = MockBackend::new(1, 2);
+            b.log = Some(Arc::clone(&log2));
+            h.serve(&mut b);
+            Ok(())
+        });
+        let router =
+            Router::start(RouterOpts { workers: 1, ..Default::default() },
+                          body);
+        let mut rxs = Vec::new();
+        for class in 10..20 {
+            rxs.push(router.submit(GenRequest { class, n: 1 }).unwrap().1);
+        }
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        router.shutdown();
+        let seen = log.lock().unwrap().clone();
+        assert_eq!(seen, (10..20).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn shutdown_drains_queued_requests() {
+        let router = mock_router(2, 3, 2);
+        let mut rxs = Vec::new();
+        let mut total = 0usize;
+        for i in 0..10usize {
+            let n = 1 + i % 5;
+            total += n;
+            rxs.push(
+                router
+                    .submit(GenRequest { class: i as i32, n })
+                    .unwrap()
+                    .1,
+            );
+        }
+        // shut down immediately: the queue must still drain
+        let stats = router.shutdown();
+        for rx in rxs {
+            assert!(rx.recv().unwrap().is_ok());
+        }
+        assert_eq!(stats.images as usize, total);
+        assert_eq!(stats.failed_requests, 0);
+    }
+
+    #[test]
+    fn padding_is_accounted_separately_from_real_work() {
+        let router = mock_router(1, 8, 2);
+        let (_, rx) = router.submit(GenRequest { class: 2, n: 3 }).unwrap();
+        rx.recv().unwrap().unwrap();
+        let stats = router.shutdown();
+        assert_eq!(stats.images, 3);
+        assert_eq!(stats.batches, 1);
+        assert_eq!(stats.padded_slots, 5);
+        assert!((stats.batch_fill - 3.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hung_up_client_is_dropped_cleanly() {
+        let router = mock_router(1, 2, 2);
+        let (_, rx) = router.submit(GenRequest { class: 1, n: 1 }).unwrap();
+        drop(rx); // client goes away before its response lands
+        let (_, rx2) = router.submit(GenRequest { class: 2, n: 1 }).unwrap();
+        rx2.recv().unwrap().unwrap();
+        let stats = router.shutdown();
+        assert_eq!(stats.dropped_responses, 1);
+        assert_eq!(stats.images, 2);
+        assert_eq!(stats.failed_requests, 0);
+    }
+
+    #[test]
+    fn generate_failure_propagates_and_kills_no_client() {
+        let body: Arc<WorkerBody> = Arc::new(|h: WorkerHandle| -> Result<()> {
+            let mut b = MockBackend::new(4, 2);
+            b.fail_after = Some(0);
+            h.serve(&mut b);
+            Ok(())
+        });
+        let router =
+            Router::start(RouterOpts { workers: 1, ..Default::default() },
+                          body);
+        let (_, rx) = router.submit(GenRequest { class: 3, n: 2 }).unwrap();
+        match rx.recv().unwrap() {
+            Err(ServeError::WorkerFailed { worker: 0, cause }) => {
+                assert!(cause.contains("injected failure"), "{cause}");
+            }
+            other => panic!("expected WorkerFailed, got {other:?}"),
+        }
+        // the lone worker is dead: submits must fail fast, not hang
+        loop {
+            match router.submit(GenRequest { class: 0, n: 1 }) {
+                Err(ServeError::AllWorkersDead { .. }) => break,
+                Err(other) => panic!("unexpected reject: {other}"),
+                Ok((_, rx2)) => {
+                    // raced the dying worker; the request must still fail
+                    assert!(rx2.recv().unwrap().is_err());
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        }
+        let stats = router.shutdown();
+        assert!(stats.failed_requests >= 1);
+        assert!(stats.workers[0].failed);
+    }
+
+    #[test]
+    fn init_failure_surfaces_typed_errors_not_hangs() {
+        let body: Arc<WorkerBody> = Arc::new(|h: WorkerHandle| -> Result<()> {
+            anyhow::bail!("worker {}: artifacts missing", h.index())
+        });
+        let router =
+            Router::start(RouterOpts { workers: 2, ..Default::default() },
+                          body);
+        loop {
+            match router.submit(GenRequest { class: 0, n: 1 }) {
+                Err(ServeError::AllWorkersDead { cause }) => {
+                    assert!(cause.contains("artifacts missing"), "{cause}");
+                    break;
+                }
+                Err(other) => panic!("unexpected reject: {other}"),
+                Ok((_, rx)) => {
+                    // submitted before the workers finished dying: the
+                    // queued request must be failed, not stranded
+                    assert!(rx.recv().unwrap().is_err());
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        }
+        let stats = router.shutdown();
+        assert!(stats.workers.iter().all(|w| w.failed));
+    }
+
+    #[test]
+    fn one_dead_worker_does_not_stop_the_service() {
+        let fails = Arc::new(AtomicUsize::new(0));
+        let fails2 = Arc::clone(&fails);
+        let body: Arc<WorkerBody> = Arc::new(move |h: WorkerHandle| -> Result<()> {
+            if h.index() == 0 {
+                fails2.fetch_add(1, Ordering::Relaxed);
+                anyhow::bail!("worker 0 init exploded");
+            }
+            let mut b = MockBackend::new(2, 2);
+            h.serve(&mut b);
+            Ok(())
+        });
+        let router =
+            Router::start(RouterOpts { workers: 2, ..Default::default() },
+                          body);
+        for class in 0..8 {
+            let (_, rx) =
+                router.submit(GenRequest { class, n: 2 }).unwrap();
+            let resp = rx.recv().unwrap().unwrap();
+            assert!(resp.images.iter().all(|&v| v == class as f32));
+        }
+        let stats = router.shutdown();
+        assert_eq!(stats.images, 16);
+        assert_eq!(fails.load(Ordering::Relaxed), 1);
+        assert!(stats.workers[0].failed && !stats.workers[1].failed);
+    }
+
+    #[test]
+    fn backpressure_rejects_when_queue_full() {
+        // gate the worker so the queue fills deterministically
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        let gate = Arc::new(Mutex::new(Some(gate_rx)));
+        let body: Arc<WorkerBody> = Arc::new(move |h: WorkerHandle| -> Result<()> {
+            let rx = gate.lock().unwrap().take().expect("one worker");
+            let _ = rx.recv();
+            let mut b = MockBackend::new(4, 2);
+            h.serve(&mut b);
+            Ok(())
+        });
+        let router = Router::start(
+            RouterOpts { workers: 1, max_queue: 8 },
+            body,
+        );
+        // a request bigger than the cap can never fit: distinct error
+        let err = router.submit(GenRequest { class: 0, n: 9 }).unwrap_err();
+        assert!(matches!(err, ServeError::RequestTooLarge { n: 9, cap: 8 }));
+        let (_, rx1) = router.submit(GenRequest { class: 1, n: 8 }).unwrap();
+        let err = router.submit(GenRequest { class: 2, n: 1 }).unwrap_err();
+        assert!(matches!(err, ServeError::QueueFull { queued: 8, cap: 8 }));
+        gate_tx.send(()).unwrap();
+        assert!(rx1.recv().unwrap().is_ok());
+        let stats = router.shutdown();
+        assert_eq!(stats.images, 8);
+    }
+
+    #[test]
+    fn panicking_backend_fails_clients_with_typed_errors() {
+        let body: Arc<WorkerBody> =
+            Arc::new(|h: WorkerHandle| -> Result<()> {
+                let mut b = MockBackend::new(2, 2);
+                b.panic_after = Some(0);
+                h.serve(&mut b);
+                Ok(())
+            });
+        let router =
+            Router::start(RouterOpts { workers: 1, ..Default::default() },
+                          body);
+        let (_, rx) = router.submit(GenRequest { class: 1, n: 1 }).unwrap();
+        match rx.recv().unwrap() {
+            Err(ServeError::WorkerFailed { cause, .. }) => {
+                assert!(cause.contains("panic"), "{cause}");
+            }
+            other => panic!("expected WorkerFailed, got {other:?}"),
+        }
+        // the dead worker must be recorded — no hangs on later submits
+        loop {
+            match router.submit(GenRequest { class: 0, n: 1 }) {
+                Err(_) => break,
+                Ok((_, rx2)) => {
+                    assert!(rx2.recv().unwrap().is_err());
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        }
+        let stats = router.shutdown();
+        assert!(stats.workers[0].failed);
+    }
+
+    #[test]
+    fn panicking_worker_body_is_recorded_dead() {
+        let body: Arc<WorkerBody> =
+            Arc::new(|_h: WorkerHandle| -> Result<()> {
+                panic!("init panic");
+            });
+        let router =
+            Router::start(RouterOpts { workers: 1, ..Default::default() },
+                          body);
+        loop {
+            match router.submit(GenRequest { class: 0, n: 1 }) {
+                Err(ServeError::AllWorkersDead { cause }) => {
+                    assert!(cause.contains("panic"), "{cause}");
+                    break;
+                }
+                Err(other) => panic!("unexpected reject: {other}"),
+                Ok((_, rx)) => {
+                    assert!(rx.recv().unwrap().is_err());
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        }
+        router.shutdown();
+    }
+
+    #[test]
+    fn empty_shutdown_reports_zero_stats() {
+        let router = mock_router(2, 4, 2);
+        let stats = router.shutdown();
+        assert_eq!(stats.requests, 0);
+        assert_eq!(stats.batches, 0);
+        assert_eq!(stats.batch_fill, 0.0);
+        assert_eq!(stats.latency_p50_s, 0.0);
+    }
+}

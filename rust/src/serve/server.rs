@@ -1,210 +1,194 @@
-//! Generation server: a worker thread owns the (non-`Send`) PJRT
-//! runtime and sampler; clients submit [`GenRequest`]s over a channel
-//! and receive [`GenResponse`]s with their images and latency.
+//! Pipeline-backed generation service: [`GenServer`] wires the
+//! multi-worker [`Router`] to the real PJRT sampling stack.
+//!
+//! Each worker thread builds its own [`Pipeline`] (the PJRT runtime is
+//! not `Send`), but the expensive quantization calibration runs exactly
+//! once: the first worker to finish constructing its pipeline calibrates
+//! and publishes the resulting [`QuantConfig`] through a [`CalibCell`];
+//! every other worker blocks on the cell and clones the shared qparams
+//! instead of recalibrating. Worker sampling RNGs are derived from the
+//! run seed and the worker index so shards produce distinct images.
 
-use std::collections::HashMap;
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::thread::JoinHandle;
-use std::time::Instant;
+use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::Result;
 
 use crate::coordinator::pipeline::{Method, Pipeline};
+use crate::coordinator::QuantConfig;
 use crate::sampler::Sampler;
-use crate::serve::batcher::Batcher;
+use crate::serve::router::{
+    GenBackend, GenRequest, GenResult, Router, RouterOpts, ServerStats,
+    WorkerBody, WorkerHandle,
+};
+use crate::serve::ServeError;
 use crate::util::config::RunConfig;
 use crate::util::rng::Rng;
 
-/// A client request: n images of one class.
-#[derive(Clone, Debug)]
-pub struct GenRequest {
-    pub class: i32,
-    pub n: usize,
+/// Calibrate-once cell shared by the worker threads: the first caller
+/// runs calibration, everyone else blocks for the published result
+/// (success *or* failure — a failed calibration fails every worker with
+/// the same typed cause instead of hanging the stragglers).
+struct CalibCell {
+    state: Mutex<CalibState>,
+    ready: Condvar,
 }
 
-/// The server's reply.
-#[derive(Clone, Debug)]
-pub struct GenResponse {
-    pub id: u64,
-    /// Flat (n, H, W, C) pixels in ≈[-1, 1].
-    pub images: Vec<f32>,
-    /// Queue + compute time for the whole request.
-    pub latency_s: f64,
+enum CalibState {
+    Empty,
+    Running,
+    Done(std::result::Result<QuantConfig, String>),
 }
 
-/// Aggregate server statistics (reported on shutdown).
-#[derive(Clone, Copy, Debug, Default)]
-pub struct ServerStats {
-    pub requests: u64,
-    pub images: u64,
-    pub batches: u64,
-    /// Occupied slots / dispatched capacity.
-    pub batch_fill: f64,
-    pub wall_s: f64,
-}
+impl CalibCell {
+    fn new() -> CalibCell {
+        CalibCell { state: Mutex::new(CalibState::Empty),
+                    ready: Condvar::new() }
+    }
 
-impl ServerStats {
-    pub fn print(&self) {
-        let thr = self.images as f64 / self.wall_s.max(1e-9);
-        println!(
-            "served {} requests / {} images in {:.2}s  \
-             ({:.2} img/s, {} batches, fill {:.0}%)",
-            self.requests, self.images, self.wall_s, thr, self.batches,
-            self.batch_fill * 100.0
-        );
+    fn get_or_calibrate(&self, pipe: &Pipeline, method: Method)
+                        -> Result<QuantConfig> {
+        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        loop {
+            let claim = match *st {
+                CalibState::Done(ref res) => {
+                    return res.clone().map_err(|e| {
+                        anyhow::anyhow!("shared calibration failed: {e}")
+                    });
+                }
+                CalibState::Running => false,
+                CalibState::Empty => true,
+            };
+            if !claim {
+                st = self.ready.wait(st).unwrap_or_else(|p| p.into_inner());
+                continue;
+            }
+            // claim the calibration slot, run it unlocked, publish.
+            // The guard publishes a failure if calibration *panics*, so
+            // sibling workers blocked above never wait forever.
+            *st = CalibState::Running;
+            drop(st);
+            let guard = CalibPanicGuard { cell: self };
+            let mut rng = Rng::new(pipe.cfg.seed ^ 0x5e12e);
+            let res = pipe
+                .calibrate(method, &mut rng)
+                .map(|(qc, _)| qc)
+                .map_err(|e| format!("{e:#}"));
+            self.publish(res.clone());
+            std::mem::forget(guard);
+            return res
+                .map_err(|e| anyhow::anyhow!("calibration failed: {e}"));
+        }
+    }
+
+    fn publish(&self, res: std::result::Result<QuantConfig, String>) {
+        let mut st =
+            self.state.lock().unwrap_or_else(|p| p.into_inner());
+        *st = CalibState::Done(res);
+        drop(st);
+        self.ready.notify_all();
     }
 }
 
-enum Msg {
-    Submit(u64, GenRequest, Sender<GenResponse>),
-    Shutdown(Sender<ServerStats>),
+/// Unwinding out of the claimed calibration (a panic inside the
+/// pipeline) publishes a failure instead of leaving the cell `Running`.
+struct CalibPanicGuard<'a> {
+    cell: &'a CalibCell,
 }
 
-/// Handle to the generation service.
+impl Drop for CalibPanicGuard<'_> {
+    fn drop(&mut self) {
+        self.cell.publish(Err("calibration panicked".into()));
+    }
+}
+
+/// [`GenBackend`] over the real sampler; one per worker thread.
+struct SamplerBackend<'a> {
+    sampler: Sampler<'a>,
+    rng: Rng,
+}
+
+impl<'a> GenBackend for SamplerBackend<'a> {
+    fn batch(&self) -> usize {
+        self.sampler.batch()
+    }
+
+    fn img_len(&self) -> usize {
+        self.sampler.img_len()
+    }
+
+    fn generate(&mut self, labels: &[i32]) -> Result<Vec<f32>> {
+        let (imgs, _) = self.sampler.sample(labels, &mut self.rng)?;
+        Ok(imgs)
+    }
+}
+
+/// Handle to the generation service (a [`Router`] whose workers drive
+/// the quantized sampler).
 pub struct GenServer {
-    tx: Sender<Msg>,
-    next_id: std::cell::Cell<u64>,
-    worker: Option<JoinHandle<()>>,
+    router: Router,
 }
 
 impl GenServer {
-    /// Start the worker: it builds the pipeline, calibrates `method`
-    /// once, then serves batches until shutdown.
+    /// Single-worker service (the original API shape).
     pub fn start(cfg: RunConfig, method: Method) -> GenServer {
-        let (tx, rx) = channel::<Msg>();
-        let worker = std::thread::spawn(move || {
-            if let Err(e) = worker_loop(cfg, method, rx) {
-                eprintln!("[serve] worker failed: {e:#}");
-            }
+        GenServer::with_workers(cfg, method, 1)
+    }
+
+    /// Sharded service: `workers` threads, each owning a pipeline +
+    /// sampler, sharing one calibration pass.
+    pub fn with_workers(cfg: RunConfig, method: Method, workers: usize)
+                        -> GenServer {
+        let calib = Arc::new(CalibCell::new());
+        let body: Arc<WorkerBody> = Arc::new(move |h: WorkerHandle| -> Result<()> {
+            let pipe = Pipeline::new(cfg.clone())?;
+            let qc = calib.get_or_calibrate(&pipe, method)?;
+            let sampler = pipe.sampler(&qc)?;
+            // distinct from the calibration stream (0x5e12e) for every
+            // worker, including index 0
+            let mut backend = SamplerBackend {
+                sampler,
+                rng: Rng::new(pipe.cfg.seed
+                              ^ 0x9e3779b97f4a7c15u64
+                                    .wrapping_mul(h.index() as u64 + 1)),
+            };
+            h.serve(&mut backend);
+            Ok(())
         });
         GenServer {
-            tx,
-            next_id: std::cell::Cell::new(0),
-            worker: Some(worker),
+            router: Router::start(
+                RouterOpts { workers, ..RouterOpts::default() },
+                body,
+            ),
         }
     }
 
-    /// Submit a request; returns (id, receiver for the response).
+    /// Submit a request; returns (id, receiver for the typed result).
+    /// Errors instead of panicking when the service cannot take it.
     pub fn submit(&self, req: GenRequest)
-                  -> (u64, Receiver<GenResponse>) {
-        let id = self.next_id.get();
-        self.next_id.set(id + 1);
-        let (rtx, rrx) = channel();
-        self.tx
-            .send(Msg::Submit(id, req, rtx))
-            .expect("server worker alive");
-        (id, rrx)
+                  -> std::result::Result<
+                      (u64, std::sync::mpsc::Receiver<GenResult>),
+                      ServeError,
+                  > {
+        self.router.submit(req)
     }
 
-    /// Stop the worker and collect aggregate statistics.
-    pub fn shutdown(mut self) -> ServerStats {
-        let (stx, srx) = channel();
-        let _ = self.tx.send(Msg::Shutdown(stx));
-        let stats = srx.recv().unwrap_or_default();
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
-        stats
-    }
-}
-
-struct PendingReq {
-    tx: Sender<GenResponse>,
-    images: Vec<f32>,
-    remaining: usize,
-    t0: Instant,
-}
-
-fn worker_loop(cfg: RunConfig, method: Method, rx: Receiver<Msg>)
-               -> Result<()> {
-    let pipe = Pipeline::new(cfg)?;
-    let mut rng = Rng::new(pipe.cfg.seed ^ 0x5e12e);
-    let (qc, _) = pipe.calibrate(method, &mut rng)?;
-    let sampler = Sampler::new(&pipe.rt, &pipe.weights, qc,
-                               pipe.cfg.timesteps)?;
-    let b = sampler.batch();
-    let il = sampler.img_len();
-
-    let mut batcher = Batcher::new();
-    let mut pending: HashMap<u64, PendingReq> = HashMap::new();
-    let mut stats = ServerStats::default();
-    let mut fill_sum = 0.0f64;
-    let t_start = Instant::now();
-    let mut open = true;
-    let mut shutdown_tx: Option<Sender<ServerStats>> = None;
-
-    while open || !batcher.is_empty() {
-        // drain the mailbox; block only when there is no work queued
-        loop {
-            let msg = if batcher.is_empty() && open {
-                match rx.recv() {
-                    Ok(m) => m,
-                    Err(_) => {
-                        open = false;
-                        break;
-                    }
-                }
-            } else {
-                match rx.try_recv() {
-                    Ok(m) => m,
-                    Err(_) => break,
-                }
-            };
-            match msg {
-                Msg::Submit(id, req, tx) => {
-                    stats.requests += 1;
-                    batcher.push_request(id, req.class, req.n);
-                    pending.insert(id, PendingReq {
-                        tx,
-                        images: Vec::with_capacity(req.n * il),
-                        remaining: req.n,
-                        t0: Instant::now(),
-                    });
-                }
-                Msg::Shutdown(tx) => {
-                    open = false;
-                    shutdown_tx = Some(tx);
-                }
-            }
-        }
-
-        let slots = batcher.pop_batch(b);
-        if slots.is_empty() {
-            continue;
-        }
-        // pad labels to the fixed artifact batch with class 0
-        let mut labels = vec![0i32; b];
-        for (i, s) in slots.iter().enumerate() {
-            labels[i] = s.class;
-        }
-        let (imgs, _) = sampler.sample(&labels, &mut rng)?;
-        stats.batches += 1;
-        fill_sum += slots.len() as f64 / b as f64;
-
-        for (i, s) in slots.iter().enumerate() {
-            let req = pending.get_mut(&s.req_id).expect("pending entry");
-            req.images.extend_from_slice(&imgs[i * il..(i + 1) * il]);
-            req.remaining -= 1;
-            stats.images += 1;
-            if req.remaining == 0 {
-                let done = pending.remove(&s.req_id).unwrap();
-                let _ = done.tx.send(GenResponse {
-                    id: s.req_id,
-                    images: done.images,
-                    latency_s: done.t0.elapsed().as_secs_f64(),
-                });
-            }
-        }
+    /// Image slots queued but not yet picked up by a worker.
+    pub fn queue_depth(&self) -> usize {
+        self.router.queue_depth()
     }
 
-    stats.wall_s = t_start.elapsed().as_secs_f64();
-    stats.batch_fill = if stats.batches > 0 {
-        fill_sum / stats.batches as f64
-    } else {
-        0.0
-    };
-    if let Some(tx) = shutdown_tx {
-        let _ = tx.send(stats);
+    /// Workers that have not exited.
+    pub fn live_workers(&self) -> usize {
+        self.router.live_workers()
     }
-    Ok(())
+
+    /// Workers whose pipeline + sampler are built and serving.
+    pub fn ready_workers(&self) -> usize {
+        self.router.ready_workers()
+    }
+
+    /// Stop the workers, drain the queue and collect statistics.
+    pub fn shutdown(self) -> ServerStats {
+        self.router.shutdown()
+    }
 }

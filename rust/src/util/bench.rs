@@ -37,6 +37,16 @@ impl BenchResult {
     }
 }
 
+/// p-th percentile (p in 0..=1) of an ascending-sorted slice; 0.0 when
+/// empty. Shared by the bench harness and the serve-layer latency stats.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p.clamp(0.0, 1.0)).round();
+    sorted[(idx as usize).min(sorted.len() - 1)]
+}
+
 pub fn fmt_dur(s: f64) -> String {
     if s < 1e-6 {
         format!("{:.1}ns", s * 1e9)
@@ -90,8 +100,8 @@ impl Bench {
             name: name.to_string(),
             iters: n,
             mean_s: mean,
-            p50_s: samples[n / 2],
-            p95_s: samples[(n * 95 / 100).min(n - 1)],
+            p50_s: percentile(&samples, 0.50),
+            p95_s: percentile(&samples, 0.95),
             min_s: samples[0],
         };
         res.report();
@@ -102,6 +112,17 @@ impl Bench {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn percentile_picks_expected_samples() {
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[3.0], 0.95), 3.0);
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 1.0), 100.0);
+        assert!((percentile(&v, 0.5) - 50.0).abs() <= 1.0);
+        assert!((percentile(&v, 0.95) - 95.0).abs() <= 1.0);
+    }
 
     #[test]
     fn runs_expected_iterations() {

@@ -1,9 +1,13 @@
 //! Tiny CLI argument parser (no `clap` offline).
 //!
 //! Grammar: `tq-dit <subcommand> [--flag] [--key value]... [positional]...`
-//! Flags may be written `--key value` or `--key=value`.
+//! Flags may be written `--key value` or `--key=value`. Typed accessors
+//! return `Result` with the offending key/value in the message —
+//! malformed input is a user error, never a panic.
 
 use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
 
 /// Parsed command line: subcommand + options + positionals.
 #[derive(Clone, Debug, Default)]
@@ -55,34 +59,31 @@ impl Args {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
 
-    pub fn usize(&self, key: &str, default: usize) -> usize {
-        self.get(key)
-            .map(|v| {
-                v.parse().unwrap_or_else(|_| {
-                    panic!("--{key} expects an integer, got `{v}`")
-                })
-            })
-            .unwrap_or(default)
+    pub fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| {
+                format!("--{key} expects an integer, got `{v}`")
+            }),
+        }
     }
 
-    pub fn u64(&self, key: &str, default: u64) -> u64 {
-        self.get(key)
-            .map(|v| {
-                v.parse().unwrap_or_else(|_| {
-                    panic!("--{key} expects an integer, got `{v}`")
-                })
-            })
-            .unwrap_or(default)
+    pub fn u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| {
+                format!("--{key} expects an integer, got `{v}`")
+            }),
+        }
     }
 
-    pub fn f64(&self, key: &str, default: f64) -> f64 {
-        self.get(key)
-            .map(|v| {
-                v.parse().unwrap_or_else(|_| {
-                    panic!("--{key} expects a number, got `{v}`")
-                })
-            })
-            .unwrap_or(default)
+    pub fn f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| {
+                format!("--{key} expects a number, got `{v}`")
+            }),
+        }
     }
 
     pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
@@ -102,8 +103,8 @@ mod tests {
     fn subcommand_and_options() {
         let a = p(&["table", "--t", "250", "--bits=8", "extra"]);
         assert_eq!(a.subcommand.as_deref(), Some("table"));
-        assert_eq!(a.usize("t", 0), 250);
-        assert_eq!(a.usize("bits", 0), 8);
+        assert_eq!(a.usize("t", 0).unwrap(), 250);
+        assert_eq!(a.usize("bits", 0).unwrap(), 8);
         assert_eq!(a.positional, vec!["extra".to_string()]);
     }
 
@@ -111,15 +112,15 @@ mod tests {
     fn bare_flags() {
         let a = p(&["run", "--verbose", "--n", "4"]);
         assert!(a.flag("verbose"));
-        assert_eq!(a.usize("n", 0), 4);
+        assert_eq!(a.usize("n", 0).unwrap(), 4);
         assert!(!a.flag("quiet"));
     }
 
     #[test]
     fn defaults() {
         let a = p(&["x"]);
-        assert_eq!(a.usize("missing", 7), 7);
-        assert_eq!(a.f64("missing", 1.5), 1.5);
+        assert_eq!(a.usize("missing", 7).unwrap(), 7);
+        assert_eq!(a.f64("missing", 1.5).unwrap(), 1.5);
         assert_eq!(a.str_or("missing", "d"), "d");
     }
 
@@ -127,6 +128,17 @@ mod tests {
     fn flag_followed_by_flag() {
         let a = p(&["cmd", "--a", "--b", "2"]);
         assert!(a.flag("a"));
-        assert_eq!(a.usize("b", 0), 2);
+        assert_eq!(a.usize("b", 0).unwrap(), 2);
+    }
+
+    #[test]
+    fn malformed_values_error_with_key_and_value() {
+        let a = p(&["x", "--n", "abc", "--rate", "fast"]);
+        let e = a.usize("n", 0).unwrap_err().to_string();
+        assert!(e.contains("--n") && e.contains("abc"), "{e}");
+        let e = a.u64("n", 0).unwrap_err().to_string();
+        assert!(e.contains("--n"), "{e}");
+        let e = a.f64("rate", 0.0).unwrap_err().to_string();
+        assert!(e.contains("--rate") && e.contains("fast"), "{e}");
     }
 }

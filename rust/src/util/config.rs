@@ -73,25 +73,33 @@ impl RawConfig {
         }
     }
 
-    pub fn usize(&self, key: &str, default: usize) -> usize {
-        self.values
-            .get(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("config `{key}`: not an int")))
-            .unwrap_or(default)
+    pub fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| {
+                format!("config `{key}`: expected an integer, got `{v}`")
+            }),
+        }
     }
 
-    pub fn f64(&self, key: &str, default: f64) -> f64 {
-        self.values
-            .get(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("config `{key}`: not a float")))
-            .unwrap_or(default)
+    pub fn f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| {
+                format!("config `{key}`: expected a float, got `{v}`")
+            }),
+        }
     }
 
-    pub fn bool(&self, key: &str, default: bool) -> bool {
-        self.values
-            .get(key)
-            .map(|v| matches!(v.as_str(), "true" | "1" | "yes"))
-            .unwrap_or(default)
+    pub fn bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.values.get(key).map(|s| s.as_str()) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => {
+                bail!("config `{key}`: expected a boolean, got `{v}`")
+            }
+        }
     }
 
     pub fn str_or(&self, key: &str, default: &str) -> String {
@@ -148,23 +156,24 @@ impl Default for RunConfig {
 }
 
 impl RunConfig {
-    pub fn from_raw(raw: &RawConfig) -> RunConfig {
+    pub fn from_raw(raw: &RawConfig) -> Result<RunConfig> {
         let d = RunConfig::default();
-        RunConfig {
+        Ok(RunConfig {
             artifacts: raw.str_or("artifacts", &d.artifacts),
-            wbits: raw.usize("wbits", d.wbits as usize) as u32,
-            abits: raw.usize("abits", d.abits as usize) as u32,
-            timesteps: raw.usize("timesteps", d.timesteps),
-            groups: raw.usize("groups", d.groups),
-            calib_per_group: raw.usize("calib-per-group", d.calib_per_group),
-            rounds: raw.usize("rounds", d.rounds),
-            candidates: raw.usize("candidates", d.candidates),
-            eval_images: raw.usize("eval-images", d.eval_images),
-            seed: raw.usize("seed", d.seed as usize) as u64,
-            use_ho: raw.bool("ho", d.use_ho),
-            use_mrq: raw.bool("mrq", d.use_mrq),
-            use_tgq: raw.bool("tgq", d.use_tgq),
-        }
+            wbits: raw.usize("wbits", d.wbits as usize)? as u32,
+            abits: raw.usize("abits", d.abits as usize)? as u32,
+            timesteps: raw.usize("timesteps", d.timesteps)?,
+            groups: raw.usize("groups", d.groups)?,
+            calib_per_group: raw
+                .usize("calib-per-group", d.calib_per_group)?,
+            rounds: raw.usize("rounds", d.rounds)?,
+            candidates: raw.usize("candidates", d.candidates)?,
+            eval_images: raw.usize("eval-images", d.eval_images)?,
+            seed: raw.usize("seed", d.seed as usize)? as u64,
+            use_ho: raw.bool("ho", d.use_ho)?,
+            use_mrq: raw.bool("mrq", d.use_mrq)?,
+            use_tgq: raw.bool("tgq", d.use_tgq)?,
+        })
     }
 
     /// file (optional `--config path`) + CLI overlay.
@@ -174,7 +183,7 @@ impl RunConfig {
             None => RawConfig::default(),
         };
         raw.overlay(args);
-        Ok(RunConfig::from_raw(&raw))
+        RunConfig::from_raw(&raw)
     }
 }
 
@@ -192,8 +201,8 @@ images = 128   # inline comment
 name = "full run"
 "#;
         let c = RawConfig::parse(text).unwrap();
-        assert_eq!(c.usize("wbits", 0), 6);
-        assert_eq!(c.usize("eval.images", 0), 128);
+        assert_eq!(c.usize("wbits", 0).unwrap(), 6);
+        assert_eq!(c.usize("eval.images", 0).unwrap(), 128);
         assert_eq!(c.str_or("eval.name", ""), "full run");
     }
 
@@ -211,7 +220,30 @@ name = "full run"
             ["--wbits", "6"].iter().map(|s| s.to_string()),
         );
         c.overlay(&args);
-        assert_eq!(c.usize("wbits", 0), 6);
+        assert_eq!(c.usize("wbits", 0).unwrap(), 6);
+    }
+
+    #[test]
+    fn malformed_values_error_with_key_and_value() {
+        let c = RawConfig::parse("wbits = eight\nrate = slow\nho = maybe")
+            .unwrap();
+        let e = c.usize("wbits", 0).unwrap_err().to_string();
+        assert!(e.contains("wbits") && e.contains("eight"), "{e}");
+        let e = c.f64("rate", 0.0).unwrap_err().to_string();
+        assert!(e.contains("rate") && e.contains("slow"), "{e}");
+        let e = c.bool("ho", true).unwrap_err().to_string();
+        assert!(e.contains("ho") && e.contains("maybe"), "{e}");
+        // malformed file-level values surface through RunConfig too
+        assert!(RunConfig::from_raw(&c).is_err());
+    }
+
+    #[test]
+    fn bool_accepts_both_polarities() {
+        let c = RawConfig::parse("a = true\nb = no\nc = 0").unwrap();
+        assert!(c.bool("a", false).unwrap());
+        assert!(!c.bool("b", true).unwrap());
+        assert!(!c.bool("c", true).unwrap());
+        assert!(c.bool("missing", true).unwrap());
     }
 
     #[test]

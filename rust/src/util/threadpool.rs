@@ -35,7 +35,14 @@ impl ThreadPool {
                     .spawn(move || loop {
                         let msg = { rx.lock().unwrap().recv() };
                         match msg {
-                            Ok(Msg::Run(job)) => job(),
+                            Ok(Msg::Run(job)) => {
+                                // panic isolation: a panicking job must
+                                // not take the worker (and with it the
+                                // whole pool) down
+                                let _ = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(job),
+                                );
+                            }
                             Ok(Msg::Shutdown) | Err(_) => break,
                         }
                     })
@@ -181,6 +188,15 @@ mod tests {
         let pool = ThreadPool::new(1);
         let out = pool.scope_map(vec![1, 2, 3], |x| x + 1);
         assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn panicking_job_does_not_kill_the_pool() {
+        let pool = ThreadPool::new(1);
+        pool.execute(|| panic!("boom"));
+        // the lone worker must survive to run subsequent jobs
+        let out = pool.scope_map(vec![1, 2, 3], |x| x * 2);
+        assert_eq!(out, vec![2, 4, 6]);
     }
 
     #[test]

@@ -394,16 +394,17 @@ fn serve_end_to_end_fp() {
     let mut cfg = small_cfg(&dir);
     cfg.timesteps = 10;
     let server = tq_dit::serve::GenServer::start(cfg, Method::Fp);
-    let (id0, rx0) = server.submit(tq_dit::serve::GenRequest {
-        class: 2,
-        n: 5,
-    });
-    let (id1, rx1) = server.submit(tq_dit::serve::GenRequest {
-        class: 7,
-        n: 20, // spans two fixed-size batches
-    });
-    let r0 = rx0.recv().unwrap();
-    let r1 = rx1.recv().unwrap();
+    let (id0, rx0) = server
+        .submit(tq_dit::serve::GenRequest { class: 2, n: 5 })
+        .unwrap();
+    let (id1, rx1) = server
+        .submit(tq_dit::serve::GenRequest {
+            class: 7,
+            n: 20, // spans two fixed-size batches
+        })
+        .unwrap();
+    let r0 = rx0.recv().unwrap().unwrap();
+    let r1 = rx1.recv().unwrap().unwrap();
     assert_eq!(r0.id, id0);
     assert_eq!(r1.id, id1);
     assert_eq!(r0.images.len(), 5 * 16 * 16 * 3);
@@ -413,6 +414,83 @@ fn serve_end_to_end_fp() {
     assert_eq!(stats.requests, 2);
     assert_eq!(stats.images, 25);
     assert!(stats.batches >= 2);
+    assert_eq!(stats.failed_requests, 0);
+}
+
+#[test]
+fn serve_sharded_concurrent_load() {
+    // multiple client threads against a 2-worker shard: every request
+    // must come back with exactly n·img_len finite pixels, and the
+    // drain-on-shutdown accounting must balance.
+    let dir = require_artifacts!();
+    let mut cfg = small_cfg(&dir);
+    cfg.timesteps = 5;
+    let server = tq_dit::serve::GenServer::with_workers(cfg, Method::Fp, 2);
+    let il = 16 * 16 * 3;
+    let total = std::sync::atomic::AtomicU64::new(0);
+    std::thread::scope(|s| {
+        for c in 0..3usize {
+            let server = &server;
+            let total = &total;
+            s.spawn(move || {
+                for i in 0..4usize {
+                    let n = 1 + (c * 5 + i * 3) % 7;
+                    total.fetch_add(n as u64,
+                                    std::sync::atomic::Ordering::Relaxed);
+                    let (_, rx) = server
+                        .submit(tq_dit::serve::GenRequest {
+                            class: ((c + i) % 8) as i32,
+                            n,
+                        })
+                        .unwrap();
+                    let resp = rx.recv().unwrap().unwrap();
+                    assert_eq!(resp.images.len(), n * il);
+                    assert!(resp.images.iter().all(|v| v.is_finite()));
+                    assert!(resp.latency_s >= 0.0);
+                }
+            });
+        }
+    });
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, 12);
+    assert_eq!(stats.images,
+               total.load(std::sync::atomic::Ordering::Relaxed));
+    assert_eq!(stats.failed_requests, 0);
+    assert_eq!(stats.workers.len(), 2);
+    // the calibrate-once path and padding accounting both ran
+    let dispatched: u64 = stats.images + stats.padded_slots;
+    assert_eq!(dispatched % stats.batches.max(1), 0,
+               "padding must fill whole fixed-size batches");
+}
+
+#[test]
+fn serve_submit_after_worker_failure_errors_not_panics() {
+    // no artifacts needed — this *relies* on the pipeline build failing.
+    // The old server panicked the client on `.expect("server worker
+    // alive")`; now every path must produce a typed error.
+    let cfg = RunConfig {
+        artifacts: "/nonexistent/tq-dit-missing-artifacts".into(),
+        ..RunConfig::default()
+    };
+    let server = tq_dit::serve::GenServer::start(cfg, Method::Fp);
+    loop {
+        match server.submit(tq_dit::serve::GenRequest { class: 0, n: 1 }) {
+            Err(e) => {
+                // rejected up front once the worker's death was recorded
+                assert!(!e.to_string().is_empty());
+                break;
+            }
+            Ok((_, rx)) => {
+                // accepted before the worker died: the queued request
+                // must still fail with a typed error, never hang
+                assert!(rx.recv().unwrap().is_err());
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+        }
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.images, 0);
+    assert!(stats.workers[0].failed);
 }
 
 #[test]
