@@ -130,5 +130,50 @@ fn main() -> anyhow::Result<()> {
         );
         server.shutdown().print();
     }
+
+    // persistent calibration cache: server cold start, cold vs warm.
+    // The first start runs the full MRQ/TGQ pipeline and persists the
+    // config; the second loads it and must reach ready in a fraction
+    // of the time (restart costs seconds, not a recalibration).
+    let cache_dir = std::env::temp_dir().join(format!(
+        "tqdit_bench_calib_cache_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&cache_dir);
+    let mut ccfg = cfg.clone();
+    ccfg.timesteps = 20;
+    ccfg.groups = 5;
+    ccfg.calib_per_group = 2;
+    ccfg.rounds = 1;
+    ccfg.candidates = 12;
+    ccfg.calib_cache = Some(cache_dir.to_string_lossy().into_owned());
+    println!("\ncalibration cache: tq-dit server cold start, cold vs warm:");
+    let mut cold_ready_s = 0.0f64;
+    for label in ["cold", "warm"] {
+        let t0 = std::time::Instant::now();
+        let server =
+            GenServer::with_workers(ccfg.clone(), Method::TqDit, 1);
+        while server.ready_workers() < 1 && server.live_workers() > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        let ready_s = t0.elapsed().as_secs_f64();
+        let stats = server.shutdown();
+        let outcome = if stats.calib_cache_hits > 0 { "hit" } else { "miss" };
+        if label == "cold" {
+            cold_ready_s = ready_s;
+            println!(
+                "  {label}: ready in {ready_s:.2}s  (calib {:.0} ms, \
+                 cache {outcome}, {} quantize runs so far)",
+                stats.calib_cold_start_ms,
+                tq_dit::coordinator::quantize::quantize_runs()
+            );
+        } else {
+            println!(
+                "  {label}: ready in {ready_s:.2}s  (calib {:.0} ms, \
+                 cache {outcome}, {:.1}x faster cold start)",
+                stats.calib_cold_start_ms,
+                cold_ready_s / ready_s.max(1e-9)
+            );
+        }
+    }
+    let _ = std::fs::remove_dir_all(&cache_dir);
     Ok(())
 }

@@ -1,0 +1,449 @@
+//! Persistent calibration cache: content-addressed `QuantConfig`
+//! storage so a server cold-start (or repeated CLI run) skips the full
+//! MRQ/TGQ calibration pipeline when nothing that feeds it has changed.
+//!
+//! # Keying and staleness
+//!
+//! A cached entry is valid only for the exact calibration inputs that
+//! produced it. The [`CacheKey`] therefore covers the *content* hash of
+//! the artifacts (manifest + weights bytes — not paths or mtimes), the
+//! method name, bit-widths, sampler steps T, time groups G, the
+//! calibration-set sizing (n per group, rounds, candidate grid), the
+//! ablation toggles and the calibration seed. The entry file name is a
+//! 64-bit FNV-1a hash of the canonical (sorted-key) JSON encoding of
+//! the key, prefixed with the format version — any input change, format
+//! change, or artifact rebuild addresses a different file, so a stale
+//! entry is simply never found.
+//!
+//! # Crash-proofness guarantees
+//!
+//! * **Atomic publish:** [`CalibCache::store`] writes to a
+//!   process-unique temp file in the cache directory and `rename`s it
+//!   into place. Readers see either the complete old entry, the
+//!   complete new entry, or nothing — never a torn write, even if the
+//!   process dies mid-store.
+//! * **Load never panics and never lies:** [`CalibCache::load`]
+//!   re-verifies the embedded format version and the *full* embedded
+//!   key (defending against file-name hash collisions and
+//!   hand-copied/renamed entries, including a wrong artifacts hash),
+//!   then runs the strict [`QuantConfig::from_json`] validator.
+//!   Corrupted, truncated, version-skewed or mismatched entries log a
+//!   warning and return `None`; the caller falls back to fresh
+//!   calibration. A config calibrated for different artifacts is never
+//!   served.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::store::{str_field, usize_field};
+use crate::coordinator::QuantConfig;
+use crate::runtime::Manifest;
+use crate::util::config::RunConfig;
+use crate::util::json::Json;
+
+/// Bumped whenever the entry format or the semantics of any keyed
+/// input change; older entries are ignored (and re-written on the next
+/// calibration), never misread.
+pub const CACHE_VERSION: u32 = 1;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a over `bytes`, continuing from `h` (seed with [`FNV_OFFSET`]).
+fn fnv1a_update(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// 64-bit FNV-1a content hash.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    fnv1a_update(FNV_OFFSET, bytes)
+}
+
+/// Content hash of the calibration-relevant artifact files (manifest +
+/// model weights). Errors only if a file vanished since the manifest
+/// loaded; callers treat that as "cache unusable", not a failure.
+pub fn artifacts_fingerprint(manifest: &Manifest) -> Result<u64> {
+    let mut h = FNV_OFFSET;
+    for file in ["manifest.json", manifest.weights_file.as_str()] {
+        let path = manifest.dir.join(file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("hashing {}", path.display()))?;
+        h = fnv1a_update(h, file.as_bytes());
+        h = fnv1a_update(h, &bytes);
+    }
+    Ok(h)
+}
+
+/// Everything a calibration result is a pure function of.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CacheKey {
+    /// Content hash of the artifacts (see [`artifacts_fingerprint`]).
+    pub artifacts_hash: u64,
+    pub method: String,
+    pub wbits: u32,
+    pub abits: u32,
+    /// Sampler steps T (calibration tuples are drawn from the respaced
+    /// step set).
+    pub timesteps: usize,
+    /// Time groups G.
+    pub groups: usize,
+    /// Calibration sizing: n per group, alternating rounds, candidate
+    /// grid size.
+    pub calib_per_group: usize,
+    pub rounds: usize,
+    pub candidates: usize,
+    /// Ablation toggles (Table III) change the emitted config.
+    pub use_ho: bool,
+    pub use_mrq: bool,
+    pub use_tgq: bool,
+    /// Calibration RNG stream seed.
+    pub seed: u64,
+}
+
+impl CacheKey {
+    pub fn from_config(cfg: &RunConfig, method: &str, artifacts_hash: u64)
+                       -> CacheKey {
+        CacheKey {
+            artifacts_hash,
+            method: method.to_string(),
+            wbits: cfg.wbits,
+            abits: cfg.abits,
+            timesteps: cfg.timesteps,
+            groups: cfg.groups,
+            calib_per_group: cfg.calib_per_group,
+            rounds: cfg.rounds,
+            candidates: cfg.candidates,
+            use_ho: cfg.use_ho,
+            use_mrq: cfg.use_mrq,
+            use_tgq: cfg.use_tgq,
+            seed: cfg.seed,
+        }
+    }
+
+    /// Canonical JSON encoding (sorted keys). u64 fields are encoded as
+    /// strings — JSON numbers are f64 and would lose bits above 2^53.
+    fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("artifacts_hash".into(),
+                 Json::Str(format!("{:016x}", self.artifacts_hash)));
+        m.insert("method".into(), Json::Str(self.method.clone()));
+        m.insert("wbits".into(), Json::Num(self.wbits as f64));
+        m.insert("abits".into(), Json::Num(self.abits as f64));
+        m.insert("timesteps".into(), Json::Num(self.timesteps as f64));
+        m.insert("groups".into(), Json::Num(self.groups as f64));
+        m.insert("calib_per_group".into(),
+                 Json::Num(self.calib_per_group as f64));
+        m.insert("rounds".into(), Json::Num(self.rounds as f64));
+        m.insert("candidates".into(), Json::Num(self.candidates as f64));
+        m.insert("use_ho".into(), Json::Bool(self.use_ho));
+        m.insert("use_mrq".into(), Json::Bool(self.use_mrq));
+        m.insert("use_tgq".into(), Json::Bool(self.use_tgq));
+        m.insert("seed".into(), Json::Str(self.seed.to_string()));
+        Json::Obj(m)
+    }
+
+    fn from_json(j: &Json) -> Result<CacheKey> {
+        let hash_hex = str_field(j, "artifacts_hash")?;
+        let artifacts_hash = u64::from_str_radix(hash_hex, 16)
+            .with_context(|| format!("bad artifacts_hash `{hash_hex}`"))?;
+        let seed_str = str_field(j, "seed")?;
+        let seed = seed_str
+            .parse::<u64>()
+            .with_context(|| format!("bad seed `{seed_str}`"))?;
+        let bool_field = |key: &str| -> Result<bool> {
+            j.get(key)
+                .with_context(|| format!("missing field `{key}`"))?
+                .as_bool()
+                .with_context(|| format!("field `{key}`: expected a bool"))
+        };
+        Ok(CacheKey {
+            artifacts_hash,
+            method: str_field(j, "method")?.to_string(),
+            wbits: usize_field(j, "wbits")? as u32,
+            abits: usize_field(j, "abits")? as u32,
+            timesteps: usize_field(j, "timesteps")?,
+            groups: usize_field(j, "groups")?,
+            calib_per_group: usize_field(j, "calib_per_group")?,
+            rounds: usize_field(j, "rounds")?,
+            candidates: usize_field(j, "candidates")?,
+            use_ho: bool_field("use_ho")?,
+            use_mrq: bool_field("use_mrq")?,
+            use_tgq: bool_field("use_tgq")?,
+            seed,
+        })
+    }
+
+    /// Content-addressed entry file name.
+    pub fn file_name(&self) -> String {
+        format!("calib-v{}-{:016x}.json", CACHE_VERSION,
+                fnv1a(self.to_json().dump().as_bytes()))
+    }
+}
+
+/// Handle to one on-disk cache directory.
+#[derive(Clone, Debug)]
+pub struct CalibCache {
+    dir: PathBuf,
+}
+
+impl CalibCache {
+    /// No I/O happens here; the directory is created lazily on the
+    /// first [`Self::store`].
+    pub fn new(dir: impl Into<PathBuf>) -> CalibCache {
+        CalibCache { dir: dir.into() }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Entry path for `key` (exists or not).
+    pub fn path_for(&self, key: &CacheKey) -> PathBuf {
+        self.dir.join(key.file_name())
+    }
+
+    /// Load the config cached for `key`. Any failure — missing entry,
+    /// unreadable file, corrupt JSON, version or key mismatch, invalid
+    /// config — returns `None` (logging the reason unless the entry
+    /// simply doesn't exist), so callers always have the fresh-
+    /// calibration fallback. Never panics.
+    pub fn load(&self, key: &CacheKey) -> Option<QuantConfig> {
+        let path = self.path_for(key);
+        if !path.exists() {
+            return None;
+        }
+        match load_entry(&path, key) {
+            Ok(qc) => Some(qc),
+            Err(e) => {
+                crate::warn_log!(
+                    "calib cache: ignoring {}: {e:#}; falling back to \
+                     fresh calibration",
+                    path.display()
+                );
+                None
+            }
+        }
+    }
+
+    /// Atomically persist `qc` under `key` (write temp + rename).
+    pub fn store(&self, key: &CacheKey, qc: &QuantConfig) -> Result<()> {
+        std::fs::create_dir_all(&self.dir).with_context(|| {
+            format!("creating calib cache dir {}", self.dir.display())
+        })?;
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("version".into(), Json::Num(CACHE_VERSION as f64));
+        m.insert("key".into(), key.to_json());
+        m.insert("config".into(), qc.to_json());
+        let text = Json::Obj(m).dump();
+        let path = self.path_for(key);
+        // pid + in-process sequence number: two threads (or processes)
+        // storing the same key never share a temp file
+        static TMP_SEQ: std::sync::atomic::AtomicU64 =
+            std::sync::atomic::AtomicU64::new(0);
+        let tmp = self.dir.join(format!(
+            "{}.tmp.{}.{}",
+            key.file_name(),
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+        ));
+        let publish = std::fs::write(&tmp, &text)
+            .with_context(|| format!("writing {}", tmp.display()))
+            .and_then(|()| {
+                std::fs::rename(&tmp, &path).with_context(|| {
+                    format!("publishing {}", path.display())
+                })
+            });
+        if publish.is_err() {
+            // clean up the orphan (failed write or failed rename) so
+            // retries under disk pressure can't accumulate temp files
+            let _ = std::fs::remove_file(&tmp);
+        }
+        publish
+    }
+}
+
+fn load_entry(path: &Path, key: &CacheKey) -> Result<QuantConfig> {
+    let text = std::fs::read_to_string(path).context("reading entry")?;
+    let j = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("corrupt entry: {e}"))?;
+    let version = usize_field(&j, "version")? as u32;
+    if version != CACHE_VERSION {
+        bail!("version {version} != supported {CACHE_VERSION}");
+    }
+    let stored = CacheKey::from_json(
+        j.get("key").context("missing `key` header")?,
+    )?;
+    if stored != *key {
+        // defends file-name collisions and copied/renamed entries; the
+        // artifacts_hash arm is what makes a config calibrated against
+        // different artifacts unservable
+        bail!(
+            "stale key: entry was calibrated for artifacts {:016x} \
+             (method {}), requested {:016x} (method {})",
+            stored.artifacts_hash, stored.method,
+            key.artifacts_hash, key.method
+        );
+    }
+    let qc = QuantConfig::from_json(
+        j.get("config").context("missing `config`")?,
+    )
+    .context("invalid cached config")?;
+    if qc.groups.groups != key.groups {
+        bail!("cached config has G={}, key says G={}", qc.groups.groups,
+              key.groups);
+    }
+    Ok(qc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{MrqSoftmax, SiteParams, UniformQ};
+    use crate::sched::TimeGroups;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("tqdit_calib_cache_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn test_key(hash: u64) -> CacheKey {
+        let cfg = RunConfig { groups: 5, timesteps: 25,
+                              ..RunConfig::default() };
+        CacheKey::from_config(&cfg, "tq-dit", hash)
+    }
+
+    fn test_config() -> QuantConfig {
+        let mut c = QuantConfig::new("tq-dit", 8, 8,
+                                     TimeGroups::new(25, 5));
+        c.sites.insert(
+            "blk0.x".into(),
+            SiteParams::Uniform(UniformQ { s: 0.03, z: 4.0, levels: 255.0 }),
+        );
+        c.tgq.insert(
+            "blk0.av.a".into(),
+            (0..5)
+                .map(|g| SiteParams::MrqSoftmax(
+                    MrqSoftmax::new(1e-4 * (g + 1) as f32, 8)))
+                .collect(),
+        );
+        c.weights.insert("w0".into(),
+                         UniformQ { s: 0.01, z: 128.0, levels: 255.0 });
+        c
+    }
+
+    #[test]
+    fn store_then_load_roundtrips() {
+        let dir = tmp_dir("roundtrip");
+        let cache = CalibCache::new(&dir);
+        let key = test_key(0xdead_beef);
+        assert!(cache.load(&key).is_none(), "empty cache must miss");
+        let qc = test_config();
+        cache.store(&key, &qc).unwrap();
+        assert_eq!(cache.load(&key), Some(qc));
+        // no temp files left behind
+        let stray: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter(|e| {
+                e.as_ref().unwrap().path().to_string_lossy().contains(".tmp.")
+            })
+            .collect();
+        assert!(stray.is_empty(), "{stray:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupted_entry_falls_back() {
+        let dir = tmp_dir("corrupt");
+        let cache = CalibCache::new(&dir);
+        let key = test_key(1);
+        cache.store(&key, &test_config()).unwrap();
+        std::fs::write(cache.path_for(&key), b"{not json at all").unwrap();
+        assert_eq!(cache.load(&key), None);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_entry_falls_back() {
+        let dir = tmp_dir("trunc");
+        let cache = CalibCache::new(&dir);
+        let key = test_key(2);
+        cache.store(&key, &test_config()).unwrap();
+        let path = cache.path_for(&key);
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &text[..text.len() / 2]).unwrap();
+        assert_eq!(cache.load(&key), None);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn version_mismatch_falls_back() {
+        let dir = tmp_dir("version");
+        let cache = CalibCache::new(&dir);
+        let key = test_key(3);
+        cache.store(&key, &test_config()).unwrap();
+        let path = cache.path_for(&key);
+        let text = std::fs::read_to_string(&path)
+            .unwrap()
+            .replace("\"version\":1", "\"version\":99");
+        std::fs::write(&path, text).unwrap();
+        assert_eq!(cache.load(&key), None);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn wrong_artifacts_hash_falls_back() {
+        let dir = tmp_dir("wronghash");
+        let cache = CalibCache::new(&dir);
+        let key_a = test_key(0xaaaa);
+        let key_b = test_key(0xbbbb);
+        cache.store(&key_a, &test_config()).unwrap();
+        // different artifacts address a different file: clean miss
+        assert_eq!(cache.load(&key_b), None);
+        // even a hand-copied entry (simulating a file-name collision)
+        // is rejected by the embedded-key check
+        std::fs::copy(cache.path_for(&key_a), cache.path_for(&key_b))
+            .unwrap();
+        assert_eq!(cache.load(&key_b), None);
+        assert!(cache.load(&key_a).is_some(), "original stays valid");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sizing_and_toggles_address_distinct_entries() {
+        let base = test_key(7);
+        for variant in [
+            CacheKey { wbits: 6, ..base.clone() },
+            CacheKey { timesteps: 100, ..base.clone() },
+            CacheKey { groups: 10, ..base.clone() },
+            CacheKey { calib_per_group: 64, ..base.clone() },
+            CacheKey { use_tgq: false, ..base.clone() },
+            CacheKey { seed: 1, ..base.clone() },
+            CacheKey { method: "ptqd".into(), ..base.clone() },
+        ] {
+            assert_ne!(variant.file_name(), base.file_name(), "{variant:?}");
+        }
+    }
+
+    #[test]
+    fn key_json_roundtrips_u64_exactly() {
+        let key = CacheKey { artifacts_hash: u64::MAX - 3,
+                             seed: (1u64 << 60) + 7,
+                             ..test_key(0) };
+        let back = CacheKey::from_json(&Json::parse(
+            &key.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back, key);
+    }
+
+    #[test]
+    fn missing_directory_is_a_clean_miss() {
+        let cache = CalibCache::new("/nonexistent/tqdit/calib/cache");
+        assert_eq!(cache.load(&test_key(9)), None);
+    }
+}

@@ -12,6 +12,8 @@
 //! calibrated parameters line up with the timesteps the sampler will
 //! actually visit.
 
+use anyhow::{bail, Result};
+
 use crate::data::SynthDataset;
 use crate::sched::{DdpmSchedule, TimeGroups};
 use crate::util::rng::Rng;
@@ -36,14 +38,20 @@ pub struct CalibTuple {
 pub struct CalibSet {
     pub tuples: Vec<CalibTuple>,
     pub groups: TimeGroups,
-    /// Tuples per group (n in the paper).
-    pub per_group: usize,
+    /// Tuples per group (n in the paper) for grouped sets, where
+    /// `len() == per_group × G` holds; `None` for ungrouped (baseline)
+    /// sets whose sizes are not a multiple of G.
+    pub per_group: Option<usize>,
 }
 
 impl CalibSet {
     /// Build with time grouping: n tuples per group, G groups.
+    ///
+    /// Errors (instead of panicking — this runs inside serve workers)
+    /// when some time group covers none of the sampler's respaced
+    /// steps, e.g. G > T_sample.
     pub fn build(ds: &SynthDataset, sched: &DdpmSchedule, tg: &TimeGroups,
-                 per_group: usize, rng: &mut Rng) -> CalibSet {
+                 per_group: usize, rng: &mut Rng) -> Result<CalibSet> {
         let il = ds.image_len();
         let mut tuples = Vec::with_capacity(per_group * tg.groups);
         for g in 0..tg.groups {
@@ -55,10 +63,14 @@ impl CalibSet {
                 .copied()
                 .filter(|&t| t >= lo && t <= hi)
                 .collect();
-            assert!(
-                !visited.is_empty(),
-                "group {g} covers no sampler steps (T_sample too small?)"
-            );
+            if visited.is_empty() {
+                bail!(
+                    "time group {g} (t in [{lo}, {hi}]) covers no sampler \
+                     steps: {} respaced steps over T={} cannot populate \
+                     G={} groups — lower --groups or raise --timesteps",
+                    sched.steps.len(), tg.t_total, tg.groups
+                );
+            }
             for _ in 0..per_group {
                 let t = visited[rng.below(visited.len())];
                 let y = rng.below(ds.num_classes) as i32;
@@ -70,14 +82,18 @@ impl CalibSet {
                 tuples.push(CalibTuple { x_t, t, y, eps, group: g });
             }
         }
-        CalibSet { tuples, groups: tg.clone(), per_group }
+        Ok(CalibSet { tuples, groups: tg.clone(),
+                      per_group: Some(per_group) })
     }
 
     /// Build WITHOUT grouping (baselines): n_total tuples with t drawn
     /// uniformly over the sampler's step set.
     pub fn build_ungrouped(ds: &SynthDataset, sched: &DdpmSchedule,
                            tg: &TimeGroups, n_total: usize, rng: &mut Rng)
-                           -> CalibSet {
+                           -> Result<CalibSet> {
+        if sched.steps.is_empty() {
+            bail!("sampler schedule has no steps");
+        }
         let il = ds.image_len();
         let mut tuples = Vec::with_capacity(n_total);
         for _ in 0..n_total {
@@ -90,7 +106,7 @@ impl CalibSet {
             sched.q_sample(&x0, t, &eps, &mut x_t);
             tuples.push(CalibTuple { x_t, t, y, eps, group: tg.group_of(t) });
         }
-        CalibSet { tuples, groups: tg.clone(), per_group: 0 }
+        Ok(CalibSet { tuples, groups: tg.clone(), per_group: None })
     }
 
     pub fn len(&self) -> usize {
@@ -121,7 +137,7 @@ mod tests {
         let sched = DdpmSchedule::new(250, 1e-4, 0.02, t_sample);
         let tg = TimeGroups::new(250, 10);
         let mut rng = Rng::new(7);
-        CalibSet::build(&ds, &sched, &tg, per_group, &mut rng)
+        CalibSet::build(&ds, &sched, &tg, per_group, &mut rng).unwrap()
     }
 
     #[test]
@@ -129,9 +145,24 @@ mod tests {
         // n=4 per group, G=10 → 40 tuples (paper uses n=32; small here)
         let cs = fixture(250, 4);
         assert_eq!(cs.len(), 40);
+        assert_eq!(cs.len(), cs.per_group.unwrap() * cs.groups.groups);
         for g in 0..10 {
             assert_eq!(cs.group_indices(g).len(), 4);
         }
+    }
+
+    #[test]
+    fn empty_group_errors_instead_of_panicking() {
+        // 5 respaced sampler steps cannot populate 10 contiguous groups
+        let ds = SynthDataset::new(16, 3, 8);
+        let sched = DdpmSchedule::new(250, 1e-4, 0.02, 5);
+        let tg = TimeGroups::new(250, 10);
+        let mut rng = Rng::new(1);
+        let err = CalibSet::build(&ds, &sched, &tg, 2, &mut rng)
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("covers no sampler steps"), "{msg}");
+        assert!(msg.contains("G=10"), "{msg}");
     }
 
     #[test]
@@ -173,8 +204,11 @@ mod tests {
         let sched = DdpmSchedule::new(250, 1e-4, 0.02, 250);
         let tg = TimeGroups::new(250, 10);
         let mut rng = Rng::new(9);
-        let cs = CalibSet::build_ungrouped(&ds, &sched, &tg, 64, &mut rng);
+        let cs = CalibSet::build_ungrouped(&ds, &sched, &tg, 64, &mut rng)
+            .unwrap();
         assert_eq!(cs.len(), 64);
+        // ungrouped sizing is honest: no fictitious per_group value
+        assert_eq!(cs.per_group, None);
         for tup in &cs.tuples {
             assert_eq!(tup.group, tg.group_of(tup.t));
         }

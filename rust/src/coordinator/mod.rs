@@ -14,10 +14,13 @@
 //! [`baselines`] re-implements the three comparison calibrators
 //! (Q-Diffusion, PTQD, PTQ4DiT — simplified per DESIGN.md §1);
 //! [`store`] holds the resulting [`store::QuantConfig`] and packs the
-//! runtime qparams vectors; [`pipeline`] wires everything into the
+//! runtime qparams vectors; [`cache`] persists calibrated configs to
+//! disk (content-addressed by artifacts + settings) so cold starts
+//! skip Phases 1–3 entirely; [`pipeline`] wires everything into the
 //! calibrate→quantize→sample→evaluate flows the tables use.
 
 pub mod baselines;
+pub mod cache;
 pub mod calib;
 pub mod capture;
 pub mod pipeline;
@@ -25,4 +28,5 @@ pub mod quantize;
 pub mod report;
 pub mod store;
 
+pub use cache::{CacheKey, CalibCache};
 pub use store::QuantConfig;

@@ -14,6 +14,8 @@
 use anyhow::Result;
 
 use crate::coordinator::baselines;
+use crate::coordinator::cache::{artifacts_fingerprint, CacheKey,
+                                CalibCache};
 use crate::coordinator::calib::CalibSet;
 use crate::coordinator::capture::{run_capture, CaptureOpts, Evidence};
 use crate::coordinator::quantize::{quantize, QuantizeOpts};
@@ -124,7 +126,7 @@ impl Pipeline {
                             -> Result<(CalibSet, Evidence)> {
         let sched = self.schedule();
         let calib = CalibSet::build(&self.ds, &sched, &self.groups,
-                                    self.cfg.calib_per_group, rng);
+                                    self.cfg.calib_per_group, rng)?;
         let ev = run_capture(&self.rt, &self.weights, &calib,
                              CaptureOpts::default())?;
         Ok((calib, ev))
@@ -138,7 +140,7 @@ impl Pipeline {
         let sched = self.schedule();
         let total = self.cfg.calib_per_group * self.cfg.groups * scale;
         let calib = CalibSet::build_ungrouped(&self.ds, &sched, &self.groups,
-                                              total, rng);
+                                              total, rng)?;
         let ev = run_capture(&self.rt, &self.weights, &calib, caps)?;
         Ok((calib, ev))
     }
@@ -216,6 +218,69 @@ impl Pipeline {
             capture_batches: batches,
         };
         Ok((qc, cost))
+    }
+
+    /// The persistent calibration cache configured for this run
+    /// (`None` when disabled via `--no-calib-cache`).
+    pub fn calib_cache(&self) -> Option<CalibCache> {
+        self.cfg.calib_cache.as_ref().map(CalibCache::new)
+    }
+
+    /// Content-addressed cache key for `method` under the current
+    /// config + artifacts. `None` for FP (calibration is free) or when
+    /// the artifact files cannot be hashed.
+    pub fn cache_key(&self, method: Method) -> Option<CacheKey> {
+        if method == Method::Fp {
+            return None;
+        }
+        match artifacts_fingerprint(&self.rt.manifest) {
+            Ok(h) => {
+                Some(CacheKey::from_config(&self.cfg, method.name(), h))
+            }
+            Err(e) => {
+                crate::warn_log!(
+                    "calib cache disabled for this run: {e:#}");
+                None
+            }
+        }
+    }
+
+    /// Cache-aware [`Self::calibrate`]: load → on miss calibrate →
+    /// persist. The third element reports the cache outcome:
+    /// `Some(true)` hit (the [`CalibCost`] is zero — nothing was
+    /// computed), `Some(false)` miss, `None` cache not consulted
+    /// (disabled, unhashable artifacts, or FP). Cache load failures of
+    /// any kind degrade to fresh calibration; store failures are
+    /// logged and otherwise ignored.
+    ///
+    /// The calibration RNG stream is fixed here (`seed ^ 0x5eed`, the
+    /// same stream the table/CLI paths use) rather than taken from the
+    /// caller: the cached config is keyed as a pure function of
+    /// (artifacts, settings), so every consumer must calibrate from the
+    /// same stream or a warm cache would alias differently-seeded runs.
+    pub fn calibrate_cached(&self, method: Method)
+                            -> Result<(QuantConfig, CalibCost,
+                                       Option<bool>)> {
+        let cache = self.calib_cache();
+        let key = if cache.is_some() { self.cache_key(method) } else { None };
+        let consulted = cache.is_some() && key.is_some();
+        if let (Some(cache), Some(key)) = (&cache, &key) {
+            if let Some(qc) = cache.load(key) {
+                crate::info!(
+                    "calibration cache hit for {} (skipping phases 1-3)",
+                    method.name()
+                );
+                return Ok((qc, CalibCost::default(), Some(true)));
+            }
+        }
+        let mut rng = Rng::new(self.cfg.seed ^ 0x5eed);
+        let (qc, cost) = self.calibrate(method, &mut rng)?;
+        if let (Some(cache), Some(key)) = (&cache, &key) {
+            if let Err(e) = cache.store(key, &qc) {
+                crate::warn_log!("calib cache store failed: {e:#}");
+            }
+        }
+        Ok((qc, cost, if consulted { Some(false) } else { None }))
     }
 
     /// Build a sampler for an already-calibrated config. This is the

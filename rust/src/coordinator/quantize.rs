@@ -70,10 +70,21 @@ pub struct SearchCost {
     pub layers: u64,
 }
 
+/// Process-wide count of full Phase-3 runs — observability for the
+/// calibration cache: tests assert a warm cache keeps this flat.
+static QUANTIZE_RUNS: std::sync::atomic::AtomicU64 =
+    std::sync::atomic::AtomicU64::new(0);
+
+/// How many times [`quantize`] has run in this process.
+pub fn quantize_runs() -> u64 {
+    QUANTIZE_RUNS.load(std::sync::atomic::Ordering::Relaxed)
+}
+
 /// Run Phase 3 and produce the full [`QuantConfig`].
 pub fn quantize(manifest: &Manifest, weights: &WeightStore, ev: &Evidence,
                 groups: &TimeGroups, method: &str, opts: QuantizeOpts)
                 -> Result<(QuantConfig, SearchCost)> {
+    QUANTIZE_RUNS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     let mut qc = QuantConfig::new(method, opts.wbits, opts.abits,
                                   groups.clone());
     let mut cost = SearchCost::default();

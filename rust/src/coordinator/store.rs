@@ -5,15 +5,27 @@
 //! per-weight quantizers, and optional PTQD-style output correction.
 //! `qparams_for_group` packs the flat f32 vector the `dit_quant`
 //! artifact consumes; the sampler swaps vectors at group boundaries.
+//!
+//! [`QuantConfig::to_json`]/[`QuantConfig::from_json`] give the full
+//! round-trip serde the persistent calibration cache
+//! ([`crate::coordinator::cache`]) relies on: every qparam survives the
+//! cycle bit-for-bit (f32 → f64 widening is exact and [`Json::dump`]
+//! is shortest-roundtrip), and `from_json` validates structure —
+//! finite numbers, known site kinds, a coherent time grouping, overlay
+//! and correction lengths — returning typed errors (never panicking)
+//! so a corrupt cache entry degrades into fresh calibration.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
-use crate::quant::{SiteParams, UniformQ, QP_STRIDE};
+use anyhow::{bail, Context, Result};
+
+use crate::quant::{MrqGelu, MrqSoftmax, SiteParams, UniformQ, QP_STRIDE};
 use crate::runtime::Manifest;
 use crate::sched::TimeGroups;
+use crate::util::json::Json;
 
 /// PTQD-style quantization-noise correction statistics (per time group).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct NoiseCorrection {
     /// Correlated part: ε̂ ≈ ρ·ε_fp → divide by ρ.
     pub rho: f32,
@@ -30,7 +42,7 @@ impl Default for NoiseCorrection {
 }
 
 /// Complete quantization decision for one (method, bit-width) run.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct QuantConfig {
     /// Human-readable calibrator name ("tq-dit", "q-diffusion", ...).
     pub method: String,
@@ -116,6 +128,257 @@ impl QuantConfig {
     pub fn has_tgq(&self) -> bool {
         !self.tgq.is_empty()
     }
+
+    // -- serde (persistent calibration cache) ----------------------------
+
+    /// Serialize the complete config. Sorted-map output keeps the text
+    /// canonical: equal configs dump to byte-identical JSON.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("method".into(), Json::Str(self.method.clone()));
+        m.insert("wbits".into(), Json::Num(self.wbits as f64));
+        m.insert("abits".into(), Json::Num(self.abits as f64));
+        m.insert("groups".into(), time_groups_to_json(&self.groups));
+        m.insert(
+            "sites".into(),
+            Json::Obj(
+                self.sites
+                    .iter()
+                    .map(|(k, p)| (k.clone(), site_params_to_json(p)))
+                    .collect(),
+            ),
+        );
+        m.insert(
+            "tgq".into(),
+            Json::Obj(
+                self.tgq
+                    .iter()
+                    .map(|(k, v)| {
+                        (k.clone(),
+                         Json::Arr(v.iter()
+                             .map(site_params_to_json)
+                             .collect()))
+                    })
+                    .collect(),
+            ),
+        );
+        m.insert(
+            "weights".into(),
+            Json::Obj(
+                self.weights
+                    .iter()
+                    .map(|(k, u)| (k.clone(), uniform_to_json(u)))
+                    .collect(),
+            ),
+        );
+        m.insert(
+            "correction".into(),
+            Json::Arr(self.correction
+                .iter()
+                .map(correction_to_json)
+                .collect()),
+        );
+        Json::Obj(m)
+    }
+
+    /// Parse a config serialized by [`Self::to_json`]. Validates every
+    /// structural invariant the runtime later relies on; any violation
+    /// is a typed error, never a panic.
+    pub fn from_json(j: &Json) -> Result<QuantConfig> {
+        let groups = time_groups_from_json(
+            j.get("groups").context("missing `groups`")?,
+        )?;
+        let mut sites = HashMap::new();
+        for (name, p) in obj_entries(j, "sites")? {
+            sites.insert(
+                name.clone(),
+                site_params_from_json(p)
+                    .with_context(|| format!("site `{name}`"))?,
+            );
+        }
+        let mut tgq = HashMap::new();
+        for (name, arr) in obj_entries(j, "tgq")? {
+            let v = arr
+                .as_arr()
+                .with_context(|| format!("tgq `{name}`: expected array"))?
+                .iter()
+                .map(site_params_from_json)
+                .collect::<Result<Vec<_>>>()
+                .with_context(|| format!("tgq `{name}`"))?;
+            if v.len() != groups.groups {
+                bail!("tgq `{name}`: {} overlay entries for {} groups",
+                      v.len(), groups.groups);
+            }
+            tgq.insert(name.clone(), v);
+        }
+        let mut weights = HashMap::new();
+        for (name, u) in obj_entries(j, "weights")? {
+            weights.insert(
+                name.clone(),
+                uniform_from_json(u)
+                    .with_context(|| format!("weight `{name}`"))?,
+            );
+        }
+        let correction = j
+            .get("correction")
+            .and_then(Json::as_arr)
+            .context("missing `correction` array")?
+            .iter()
+            .map(correction_from_json)
+            .collect::<Result<Vec<_>>>()?;
+        if correction.len() != groups.groups {
+            bail!("correction length {} != groups {}", correction.len(),
+                  groups.groups);
+        }
+        Ok(QuantConfig {
+            method: str_field(j, "method")?.to_string(),
+            wbits: usize_field(j, "wbits")? as u32,
+            abits: usize_field(j, "abits")? as u32,
+            sites,
+            tgq,
+            weights,
+            groups,
+            correction,
+        })
+    }
+}
+
+// -- serde helpers (shared by QuantConfig and the cache header) ----------
+
+fn num(v: f32) -> Json {
+    Json::Num(v as f64)
+}
+
+fn f32_field(j: &Json, key: &str) -> Result<f32> {
+    let v = j
+        .get(key)
+        .with_context(|| format!("missing field `{key}`"))?
+        .as_f64()
+        .with_context(|| format!("field `{key}`: expected a number"))?;
+    let narrowed = v as f32;
+    // check finiteness *after* narrowing: a finite f64 like 1e39
+    // overflows f32 to infinity
+    if !narrowed.is_finite() {
+        bail!("field `{key}`: non-finite value (read {v})");
+    }
+    Ok(narrowed)
+}
+
+pub(crate) fn usize_field(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)
+        .with_context(|| format!("missing field `{key}`"))?
+        .as_exact_usize()
+        .with_context(|| format!("field `{key}`: expected an integer"))
+}
+
+pub(crate) fn str_field<'a>(j: &'a Json, key: &str) -> Result<&'a str> {
+    j.get(key)
+        .with_context(|| format!("missing field `{key}`"))?
+        .as_str()
+        .with_context(|| format!("field `{key}`: expected a string"))
+}
+
+fn obj_entries<'a>(j: &'a Json, key: &str)
+                   -> Result<&'a BTreeMap<String, Json>> {
+    match j.get(key) {
+        Some(Json::Obj(m)) => Ok(m),
+        Some(_) => bail!("field `{key}`: expected an object"),
+        None => bail!("missing field `{key}`"),
+    }
+}
+
+fn time_groups_to_json(tg: &TimeGroups) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("t_total".into(), Json::Num(tg.t_total as f64));
+    m.insert("groups".into(), Json::Num(tg.groups as f64));
+    Json::Obj(m)
+}
+
+fn time_groups_from_json(j: &Json) -> Result<TimeGroups> {
+    let t_total = usize_field(j, "t_total")?;
+    let groups = usize_field(j, "groups")?;
+    // validate before TimeGroups::new — its assert must never fire on
+    // untrusted cache bytes
+    if groups < 1 || groups > t_total {
+        bail!("invalid time grouping: G={groups}, T={t_total}");
+    }
+    Ok(TimeGroups::new(t_total, groups))
+}
+
+fn uniform_to_json(u: &UniformQ) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("s".into(), num(u.s));
+    m.insert("z".into(), num(u.z));
+    m.insert("levels".into(), num(u.levels));
+    Json::Obj(m)
+}
+
+fn uniform_from_json(j: &Json) -> Result<UniformQ> {
+    Ok(UniformQ {
+        s: f32_field(j, "s")?,
+        z: f32_field(j, "z")?,
+        levels: f32_field(j, "levels")?,
+    })
+}
+
+fn site_params_to_json(p: &SiteParams) -> Json {
+    let mut m = BTreeMap::new();
+    match p {
+        SiteParams::Bypass => {
+            m.insert("kind".into(), Json::Str("bypass".into()));
+        }
+        SiteParams::Uniform(u) => {
+            m.insert("kind".into(), Json::Str("uniform".into()));
+            m.insert("s".into(), num(u.s));
+            m.insert("z".into(), num(u.z));
+            m.insert("levels".into(), num(u.levels));
+        }
+        SiteParams::MrqSoftmax(q) => {
+            m.insert("kind".into(), Json::Str("mrq_softmax".into()));
+            m.insert("s1".into(), num(q.s1));
+            m.insert("half".into(), num(q.half));
+        }
+        SiteParams::MrqGelu(q) => {
+            m.insert("kind".into(), Json::Str("mrq_gelu".into()));
+            m.insert("s1".into(), num(q.s1));
+            m.insert("s2".into(), num(q.s2));
+            m.insert("half".into(), num(q.half));
+        }
+    }
+    Json::Obj(m)
+}
+
+fn site_params_from_json(j: &Json) -> Result<SiteParams> {
+    Ok(match str_field(j, "kind")? {
+        "bypass" => SiteParams::Bypass,
+        "uniform" => SiteParams::Uniform(uniform_from_json(j)?),
+        "mrq_softmax" => SiteParams::MrqSoftmax(MrqSoftmax {
+            s1: f32_field(j, "s1")?,
+            half: f32_field(j, "half")?,
+        }),
+        "mrq_gelu" => SiteParams::MrqGelu(MrqGelu {
+            s1: f32_field(j, "s1")?,
+            s2: f32_field(j, "s2")?,
+            half: f32_field(j, "half")?,
+        }),
+        other => bail!("unknown site-params kind `{other}`"),
+    })
+}
+
+fn correction_to_json(nc: &NoiseCorrection) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("rho".into(), num(nc.rho));
+    m.insert("bias".into(), num(nc.bias));
+    m.insert("resid_var".into(), num(nc.resid_var));
+    Json::Obj(m)
+}
+
+fn correction_from_json(j: &Json) -> Result<NoiseCorrection> {
+    Ok(NoiseCorrection {
+        rho: f32_field(j, "rho")?,
+        bias: f32_field(j, "bias")?,
+        resid_var: f32_field(j, "resid_var")?,
+    })
 }
 
 #[cfg(test)]
@@ -163,5 +426,151 @@ mod tests {
         assert_eq!(nc.rho, 1.0);
         assert_eq!(nc.bias, 0.0);
         assert_eq!(nc.resid_var, 0.0);
+    }
+
+    // -- serde ----------------------------------------------------------
+
+    fn random_site(g: &mut crate::util::check::Gen) -> SiteParams {
+        match g.usize_in(0, 3) {
+            0 => SiteParams::Bypass,
+            1 => SiteParams::Uniform(UniformQ {
+                s: g.f32_in(1e-5, 2.0),
+                z: g.usize_in(0, 255) as f32,
+                levels: 255.0,
+            }),
+            2 => SiteParams::MrqSoftmax(MrqSoftmax::new(
+                g.f32_in(1e-6, 0.1), 8)),
+            _ => SiteParams::MrqGelu(MrqGelu::new(
+                g.f32_in(1e-5, 0.5), g.f32_in(1e-5, 0.5), 8)),
+        }
+    }
+
+    /// Serialize → parse → identical qparams for every site/group.
+    #[test]
+    fn quant_config_serde_roundtrip_property() {
+        crate::util::check::check("quant_config_serde_roundtrip", 40, |g| {
+            let t_total = g.usize_in(10, 300);
+            let n_groups = g.usize_in(1, t_total.min(12));
+            let mut c = QuantConfig::new(
+                "tq-dit", 8, 6, TimeGroups::new(t_total, n_groups));
+            for i in 0..g.usize_in(0, 6) {
+                c.sites.insert(format!("blk{i}.x"), random_site(g));
+            }
+            for i in 0..g.usize_in(0, 3) {
+                let overlay: Vec<SiteParams> =
+                    (0..n_groups).map(|_| random_site(g)).collect();
+                c.tgq.insert(format!("blk{i}.av.a"), overlay);
+            }
+            for i in 0..g.usize_in(0, 4) {
+                c.weights.insert(
+                    format!("w{i}"),
+                    UniformQ {
+                        s: g.f32_in(1e-5, 1.0),
+                        z: g.usize_in(0, 255) as f32,
+                        levels: 255.0,
+                    },
+                );
+            }
+            for nc in c.correction.iter_mut() {
+                nc.rho = g.f32_in(0.5, 1.5);
+                nc.bias = g.f32_normal() * 1e-2;
+                nc.resid_var = g.f32_in(0.0, 1e-2);
+            }
+            let text = c.to_json().dump();
+            let parsed = crate::util::json::Json::parse(&text)
+                .map_err(|e| e.to_string())?;
+            let back = QuantConfig::from_json(&parsed)
+                .map_err(|e| format!("{e:#}"))?;
+            if back != c {
+                return Err(format!(
+                    "roundtrip mismatch:\n  orig {c:?}\n  back {back:?}"
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    fn reparse(c: &QuantConfig) -> Json {
+        crate::util::json::Json::parse(&c.to_json().dump()).unwrap()
+    }
+
+    #[test]
+    fn serde_rejects_corrupt_structures() {
+        let mut c = QuantConfig::new("tq-dit", 8, 8, groups());
+        c.sites.insert(
+            "a".into(),
+            SiteParams::MrqSoftmax(MrqSoftmax::new(0.01, 8)),
+        );
+        let good = reparse(&c);
+
+        // baseline: the untampered dump parses
+        assert!(QuantConfig::from_json(&good).is_ok());
+
+        // non-finite qparam (serialized as null) is rejected, not read
+        let mut bad = c.clone();
+        if let Some(SiteParams::MrqSoftmax(m)) = bad.sites.get_mut("a") {
+            m.s1 = f32::NAN;
+        }
+        let e = QuantConfig::from_json(&reparse(&bad)).unwrap_err();
+        assert!(format!("{e:#}").contains("s1"), "{e:#}");
+
+        // incoherent time grouping must not trip TimeGroups::new's assert
+        let text = c.to_json().dump().replace(
+            "\"groups\":{\"groups\":10,\"t_total\":250}",
+            "\"groups\":{\"groups\":10,\"t_total\":3}",
+        );
+        let j = crate::util::json::Json::parse(&text).unwrap();
+        let e = QuantConfig::from_json(&j).unwrap_err();
+        assert!(format!("{e:#}").contains("grouping"), "{e:#}");
+
+        // empty TGQ overlay would panic site_for_group later: reject now
+        let mut bad = c.clone();
+        bad.tgq.insert("a".into(), Vec::new());
+        assert!(QuantConfig::from_json(&reparse(&bad)).is_err());
+
+        // a truncated overlay would silently serve the wrong group's
+        // qparams via the site_for_group clamp: reject at load time
+        let mut bad = c.clone();
+        bad.tgq.insert(
+            "a".into(),
+            vec![SiteParams::MrqSoftmax(MrqSoftmax::new(0.01, 8)); 3],
+        );
+        let e = QuantConfig::from_json(&reparse(&bad)).unwrap_err();
+        assert!(format!("{e:#}").contains("overlay"), "{e:#}");
+
+        // correction length must match the group count
+        let mut bad = c.clone();
+        bad.correction.pop();
+        assert!(QuantConfig::from_json(&reparse(&bad)).is_err());
+
+        // unknown site kind
+        let text = c.to_json().dump().replace("mrq_softmax", "mystery");
+        let j = crate::util::json::Json::parse(&text).unwrap();
+        assert!(QuantConfig::from_json(&j).is_err());
+
+        // a finite f64 that overflows f32 must be rejected, not read
+        // back as an infinite quantizer scale
+        let j = crate::util::json::Json::parse(
+            r#"{"kind":"uniform","s":1e39,"z":0,"levels":255}"#,
+        )
+        .unwrap();
+        assert!(site_params_from_json(&j).is_err());
+
+        // truncated text fails at the parser, not with a panic
+        let text = c.to_json().dump();
+        assert!(Json::parse(&text[..text.len() / 2]).is_err());
+    }
+
+    #[test]
+    fn serde_dump_is_canonical() {
+        let mut a = QuantConfig::new("tq-dit", 8, 8, groups());
+        a.weights.insert("w.b".into(),
+                         UniformQ { s: 0.5, z: 1.0, levels: 255.0 });
+        a.weights.insert("w.a".into(),
+                         UniformQ { s: 0.25, z: 0.0, levels: 255.0 });
+        let b = a.clone();
+        // HashMap iteration order may differ between equal configs; the
+        // sorted dump must not
+        assert_eq!(a.to_json().dump(), b.to_json().dump());
     }
 }

@@ -14,6 +14,7 @@
 //! Common flags: --artifacts DIR --wbits K --abits K --timesteps T
 //!   --groups G --calib-per-group N --rounds R --candidates C
 //!   --eval-images N --seed S --ho BOOL --mrq BOOL --tgq BOOL
+//!   --calib-cache DIR --no-calib-cache
 //!   --config FILE (TOML-subset, overridden by CLI flags)
 
 use anyhow::{bail, Result};
@@ -84,6 +85,9 @@ FLAGS (all subcommands)
   --candidates C        scale candidates per 1-D search [80]
   --eval-images N       images per FID/IS cell  [256]
   --ho/--mrq/--tgq B    ablation toggles        [true]
+  --calib-cache DIR     persistent calibration cache (serve/sample/
+                        report skip recalibration)   [calib-cache]
+  --no-calib-cache      disable calibration-cache load and store
   --seed S --verbose --config FILE
 ";
 
@@ -211,8 +215,7 @@ fn cmd_sample(cfg: RunConfig, args: &Args) -> Result<()> {
     let qc = if method == Method::Fp {
         QuantConfig::fp(pipe.groups.clone())
     } else {
-        let mut rng = Rng::new(cfg.seed ^ 0x5eed);
-        pipe.calibrate(method, &mut rng)?.0
+        pipe.calibrate_cached(method)?.0
     };
     let imgs = pipe.sample_grid(&qc, n, cfg.seed ^ 0x9b1d)?;
     let il = m.img_size * m.img_size * m.channels;
@@ -251,8 +254,7 @@ fn cmd_report(cfg: RunConfig, args: &Args) -> Result<()> {
     let method = Method::parse(args.str_or("method", "tq-dit"))
         .ok_or_else(|| anyhow::anyhow!("unknown --method"))?;
     let pipe = Pipeline::new(cfg.clone())?;
-    let mut rng = Rng::new(cfg.seed ^ 0x5eed);
-    let (qc, _) = pipe.calibrate(method, &mut rng)?;
+    let (qc, _, _) = pipe.calibrate_cached(method)?;
     // fresh evidence (held-out seed) so the report is not scored on the
     // same tuples the search optimized
     let mut rng2 = Rng::new(cfg.seed ^ 0x4e1d);

@@ -1,5 +1,10 @@
 //! Typed view of `artifacts/manifest.json` — the contract between the
 //! python build path and the rust request path.
+//!
+//! Parsing is fully fallible: a malformed or truncated manifest yields
+//! an error naming the offending key (with its JSON path) and the file,
+//! never a panic — the serve layer turns these into typed
+//! `WorkerInitFailed` causes instead of dead worker threads.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -103,100 +108,83 @@ impl Manifest {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {}", path.display()))?;
-        let j = Json::parse(&text)
-            .map_err(|e| anyhow::anyhow!("parsing manifest: {e}"))?;
+        Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing manifest: {e}"))
+            .and_then(|j| Manifest::parse_json(&j, dir))
+            .with_context(|| {
+                format!("malformed manifest {}", path.display())
+            })
+    }
 
-        let m = j.req("model");
+    /// Parse an already-loaded manifest document. Every missing or
+    /// mis-typed field errors with its dotted key path.
+    fn parse_json(j: &Json, dir: &Path) -> Result<Manifest> {
+        let m = req(j, "", "model")?;
         let model = ModelMeta {
-            img_size: m.req("img_size").as_usize().unwrap(),
-            channels: m.req("channels").as_usize().unwrap(),
-            patch: m.req("patch").as_usize().unwrap(),
-            dim: m.req("dim").as_usize().unwrap(),
-            depth: m.req("depth").as_usize().unwrap(),
-            heads: m.req("heads").as_usize().unwrap(),
-            num_classes: m.req("num_classes").as_usize().unwrap(),
-            mlp_ratio: m.req("mlp_ratio").as_usize().unwrap(),
-            freq_dim: m.req("freq_dim").as_usize().unwrap(),
-            tokens: m.req("tokens").as_usize().unwrap(),
-            head_dim: m.req("head_dim").as_usize().unwrap(),
-            patch_dim: m.req("patch_dim").as_usize().unwrap(),
+            img_size: req_usize(m, "model.", "img_size")?,
+            channels: req_usize(m, "model.", "channels")?,
+            patch: req_usize(m, "model.", "patch")?,
+            dim: req_usize(m, "model.", "dim")?,
+            depth: req_usize(m, "model.", "depth")?,
+            heads: req_usize(m, "model.", "heads")?,
+            num_classes: req_usize(m, "model.", "num_classes")?,
+            mlp_ratio: req_usize(m, "model.", "mlp_ratio")?,
+            freq_dim: req_usize(m, "model.", "freq_dim")?,
+            tokens: req_usize(m, "model.", "tokens")?,
+            head_dim: req_usize(m, "model.", "head_dim")?,
+            patch_dim: req_usize(m, "model.", "patch_dim")?,
         };
-        let d = j.req("diffusion");
+        let d = req(j, "", "diffusion")?;
         let diffusion = DiffusionMeta {
-            train_steps: d.req("train_steps").as_usize().unwrap(),
-            beta_start: d.req("beta_start").as_f64().unwrap(),
-            beta_end: d.req("beta_end").as_f64().unwrap(),
+            train_steps: req_usize(d, "diffusion.", "train_steps")?,
+            beta_start: req_f64(d, "diffusion.", "beta_start")?,
+            beta_end: req_f64(d, "diffusion.", "beta_end")?,
         };
 
-        let params = j
-            .req("params")
+        let params = parse_specs(req(j, "", "params")?, "params")?;
+
+        let layers = req(j, "", "layers")?
             .as_arr()
-            .context("params array")?
+            .context("key `layers`: expected an array")?
             .iter()
-            .map(|p| {
-                Ok((
-                    p.req("name").as_str().unwrap().to_string(),
-                    p.req("shape").as_shape().context("param shape")?,
-                ))
-            })
+            .enumerate()
+            .map(|(i, l)| parse_layer(l, i))
             .collect::<Result<Vec<_>>>()?;
 
-        let layers = j
-            .req("layers")
-            .as_arr()
-            .context("layers array")?
-            .iter()
-            .map(parse_layer)
-            .collect::<Result<Vec<_>>>()?;
-
-        let b = j.req("batches");
+        let b = req(j, "", "batches")?;
         let batches = Batches {
-            calib: b.req("calib").as_usize().unwrap(),
-            sample: b.req("sample").as_usize().unwrap(),
-            train: b.req("train").as_usize().unwrap(),
-            feat: b.req("feat").as_usize().unwrap(),
+            calib: req_usize(b, "batches.", "calib")?,
+            sample: req_usize(b, "batches.", "sample")?,
+            train: req_usize(b, "batches.", "train")?,
+            feat: req_usize(b, "batches.", "feat")?,
         };
 
-        let capture_outputs = j
-            .req("capture_outputs")
-            .as_arr()
-            .context("capture_outputs")?
-            .iter()
-            .map(|c| {
-                Ok((
-                    c.req("name").as_str().unwrap().to_string(),
-                    c.req("shape").as_shape().context("capture shape")?,
-                ))
-            })
-            .collect::<Result<Vec<_>>>()?;
+        let capture_outputs =
+            parse_specs(req(j, "", "capture_outputs")?, "capture_outputs")?;
 
         let mut artifacts = BTreeMap::new();
-        if let Json::Obj(map) = j.req("artifacts") {
+        if let Json::Obj(map) = req(j, "", "artifacts")? {
             for (k, v) in map {
                 artifacts.insert(
                     k.clone(),
-                    v.as_str().context("artifact path")?.to_string(),
+                    v.as_str()
+                        .with_context(|| {
+                            format!("key `artifacts.{k}`: expected a string")
+                        })?
+                        .to_string(),
                 );
             }
         } else {
-            bail!("artifacts must be an object");
+            bail!("key `artifacts`: expected an object");
         }
 
-        let parse_specs = |node: &Json| -> Result<Vec<(String, Vec<usize>)>> {
-            node.as_arr()
-                .context("metric param array")?
-                .iter()
-                .map(|p| {
-                    Ok((
-                        p.req("name").as_str().unwrap().to_string(),
-                        p.req("shape").as_shape().context("param shape")?,
-                    ))
-                })
-                .collect()
-        };
-        let mp = j.req("metric_params");
-        let feat_params = parse_specs(mp.req("feature"))?;
-        let clf_params = parse_specs(mp.req("classifier"))?;
+        let mp = req(j, "", "metric_params")?;
+        let feat_params = parse_specs(req(mp, "metric_params.", "feature")?,
+                                      "metric_params.feature")?;
+        let clf_params = parse_specs(
+            req(mp, "metric_params.", "classifier")?,
+            "metric_params.classifier",
+        )?;
 
         Ok(Manifest {
             dir: dir.to_path_buf(),
@@ -204,22 +192,23 @@ impl Manifest {
             diffusion,
             params,
             layers,
-            qp_len: j.req("qp_len").as_usize().unwrap(),
+            qp_len: req_usize(j, "", "qp_len")?,
             batches,
             capture_outputs,
-            feat_dim: j.req("feat_dim").as_usize().unwrap(),
-            spat_dim: j.req("spat_dim").as_usize().unwrap(),
-            classifier_acc: j.req("classifier_acc").as_f64().unwrap_or(0.0),
+            feat_dim: req_usize(j, "", "feat_dim")?,
+            spat_dim: req_usize(j, "", "spat_dim")?,
+            // optional: older builds predate the classifier report
+            classifier_acc: j
+                .get("classifier_acc")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0),
             feat_params,
             clf_params,
             artifacts,
-            weights_file: j.req("weights").as_str().unwrap().to_string(),
-            metric_weights_file: j
-                .req("metric_weights")
-                .as_str()
-                .unwrap()
+            weights_file: req_str(j, "", "weights")?.to_string(),
+            metric_weights_file: req_str(j, "", "metric_weights")?
                 .to_string(),
-            fid_ref_file: j.req("fid_ref").as_str().unwrap().to_string(),
+            fid_ref_file: req_str(j, "", "fid_ref")?.to_string(),
         })
     }
 
@@ -390,37 +379,149 @@ mod tests {
         assert!(Manifest::load(&dir).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
+
+    /// Write a tampered TOY manifest and return the load error text.
+    fn load_error(tag: &str, from: &str, to: &str) -> String {
+        let dir = std::env::temp_dir().join(format!(
+            "tqdit_manifest_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let text = TOY.replace(from, to);
+        assert_ne!(text, TOY, "tamper pattern `{from}` did not match");
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        let err = Manifest::load(&dir).unwrap_err();
+        std::fs::remove_dir_all(&dir).ok();
+        format!("{err:#}")
+    }
+
+    #[test]
+    fn missing_field_errors_name_key_and_file() {
+        let e = load_error("nodepth", "\"depth\": 1,", "");
+        assert!(e.contains("model.depth"), "{e}");
+        assert!(e.contains("manifest.json"), "{e}");
+
+        let e = load_error("noqplen", "\"qp_len\": 12,", "");
+        assert!(e.contains("qp_len"), "{e}");
+
+        let e = load_error("nosteps", "\"train_steps\": 50,", "");
+        assert!(e.contains("diffusion.train_steps"), "{e}");
+
+        let e = load_error("noweights", "\"weights\": \"weights.bin\",", "");
+        assert!(e.contains("`weights`"), "{e}");
+    }
+
+    #[test]
+    fn wrong_type_errors_name_key_not_panic() {
+        let e = load_error("strqplen", "\"qp_len\": 12", "\"qp_len\": \"x\"");
+        assert!(e.contains("qp_len") && e.contains("integer"), "{e}");
+
+        let e = load_error("badshape", "\"shape\": [2, 3]",
+                           "\"shape\": \"oops\"");
+        assert!(e.contains("shape"), "{e}");
+
+        let e = load_error("badsite", "\"qp_offset\": 0}", "\"qp_offset\": 0,
+                            \"name\": 7}");
+        assert!(e.contains("sites[0].name"), "{e}");
+    }
+
+    #[test]
+    fn truncated_manifest_errors_cleanly() {
+        let dir = std::env::temp_dir().join(format!(
+            "tqdit_manifest_trunc_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"),
+                       &TOY[..TOY.len() / 2]).unwrap();
+        let e = format!("{:#}", Manifest::load(&dir).unwrap_err());
+        assert!(e.contains("parsing manifest"), "{e}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
 }
 
-fn parse_layer(l: &Json) -> Result<LayerMeta> {
-    let sites = l
-        .req("sites")
-        .as_arr()
-        .context("sites")?
+// -- fallible field access (errors name the dotted key path) -------------
+
+fn req<'a>(j: &'a Json, ctx: &str, key: &str) -> Result<&'a Json> {
+    j.get(key)
+        .ok_or_else(|| anyhow::anyhow!("missing key `{ctx}{key}`"))
+}
+
+fn req_usize(j: &Json, ctx: &str, key: &str) -> Result<usize> {
+    req(j, ctx, key)?.as_exact_usize().ok_or_else(|| {
+        anyhow::anyhow!("key `{ctx}{key}`: expected an integer")
+    })
+}
+
+fn req_f64(j: &Json, ctx: &str, key: &str) -> Result<f64> {
+    req(j, ctx, key)?.as_f64().ok_or_else(|| {
+        anyhow::anyhow!("key `{ctx}{key}`: expected a number")
+    })
+}
+
+fn req_str<'a>(j: &'a Json, ctx: &str, key: &str) -> Result<&'a str> {
+    req(j, ctx, key)?.as_str().ok_or_else(|| {
+        anyhow::anyhow!("key `{ctx}{key}`: expected a string")
+    })
+}
+
+fn req_shape(j: &Json, ctx: &str, key: &str) -> Result<Vec<usize>> {
+    req(j, ctx, key)?.as_shape().ok_or_else(|| {
+        anyhow::anyhow!("key `{ctx}{key}`: expected an integer array")
+    })
+}
+
+/// Parse an array of `{"name": ..., "shape": [...]}` specs.
+fn parse_specs(node: &Json, ctx: &str) -> Result<Vec<(String, Vec<usize>)>> {
+    node.as_arr()
+        .with_context(|| format!("key `{ctx}`: expected an array"))?
         .iter()
-        .map(|s| {
-            let kind = match s.req("kind").as_str().unwrap() {
+        .enumerate()
+        .map(|(i, p)| {
+            let ctx = format!("{ctx}[{i}].");
+            Ok((
+                req_str(p, &ctx, "name")?.to_string(),
+                req_shape(p, &ctx, "shape")?,
+            ))
+        })
+        .collect()
+}
+
+fn parse_layer(l: &Json, idx: usize) -> Result<LayerMeta> {
+    let lctx = format!("layers[{idx}].");
+    let sites = req(l, &lctx, "sites")?
+        .as_arr()
+        .with_context(|| format!("key `{lctx}sites`: expected an array"))?
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            let sctx = format!("{lctx}sites[{i}].");
+            let kind = match req_str(s, &sctx, "kind")? {
                 "uniform" => SiteKind::Uniform,
                 "mrq_softmax" => SiteKind::MrqSoftmax,
                 "mrq_gelu" => SiteKind::MrqGelu,
-                other => bail!("unknown site kind `{other}`"),
+                other => {
+                    bail!("key `{sctx}kind`: unknown site kind `{other}`")
+                }
             };
             Ok(SiteMeta {
-                name: s.req("name").as_str().unwrap().to_string(),
+                name: req_str(s, &sctx, "name")?.to_string(),
                 kind,
-                tgq: s.req("tgq").as_bool().unwrap_or(false),
-                qp_offset: s.req("qp_offset").as_usize().unwrap(),
+                // optional: non-TGQ sites may omit the flag
+                tgq: s.get("tgq").and_then(Json::as_bool).unwrap_or(false),
+                qp_offset: req_usize(s, &sctx, "qp_offset")?,
             })
         })
         .collect::<Result<Vec<_>>>()?;
     Ok(LayerMeta {
-        name: l.req("name").as_str().unwrap().to_string(),
-        ltype: l.req("ltype").as_str().unwrap().to_string(),
-        weight: l
-            .req("weight")
-            .as_str()
-            .unwrap_or_default()
-            .to_string(),
+        name: req_str(l, &lctx, "name")?.to_string(),
+        ltype: req_str(l, &lctx, "ltype")?.to_string(),
+        // matmul layers carry no weight param; tolerate an absent key
+        weight: match l.get("weight") {
+            None => String::new(),
+            Some(v) => v
+                .as_str()
+                .with_context(|| {
+                    format!("key `{lctx}weight`: expected a string")
+                })?
+                .to_string(),
+        },
         sites,
     })
 }

@@ -5,7 +5,7 @@
 
 /// Contiguous partition of {0..T−1} into G groups,
 /// 𝒢ᵢ = [ (i−1)T/G, iT/G − 1 ] (paper indexing i ∈ 1..G; ours 0-based).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct TimeGroups {
     pub t_total: usize,
     pub groups: usize,

@@ -19,8 +19,11 @@
 //!   to the waiting clients. Whichever worker is idle takes the next
 //!   batch (work-stealing), so one slow shard never stalls the queue.
 //! * **Calibration** runs once, not per worker: the first pipeline to
-//!   come up calibrates and publishes the `QuantConfig`; the other
-//!   workers clone the shared qparams (see [`server`]).
+//!   come up resolves the `QuantConfig` — loading it from the
+//!   persistent calibration cache when warm, calibrating (and
+//!   persisting) otherwise — and publishes it; the other workers clone
+//!   the shared qparams (see [`server`] and
+//!   [`crate::coordinator::cache`]).
 //!
 //! Worker failures propagate as [`ServeError`]s on the affected
 //! clients' channels — no hangs, no process panics — and the service

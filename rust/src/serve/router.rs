@@ -95,6 +95,13 @@ pub struct ServerStats {
     /// Per-request latency percentiles (queue + compute).
     pub latency_p50_s: f64,
     pub latency_p95_s: f64,
+    /// Persistent-calibration-cache outcome for this run (filled in by
+    /// the serve layer; both zero when calibration never resolved).
+    pub calib_cache_hits: u64,
+    pub calib_cache_misses: u64,
+    /// Wall-clock of the one shared calibration resolution — cache
+    /// load on a hit, the full MRQ/TGQ pipeline on a miss.
+    pub calib_cold_start_ms: f64,
     pub workers: Vec<WorkerStats>,
 }
 
@@ -117,6 +124,13 @@ impl ServerStats {
             self.queue_depth_max, self.failed_requests,
             self.dropped_responses
         );
+        if self.calib_cache_hits + self.calib_cache_misses > 0 {
+            println!(
+                "calibration: cache {} ({:.0} ms cold start)",
+                if self.calib_cache_hits > 0 { "hit" } else { "miss" },
+                self.calib_cold_start_ms
+            );
+        }
         for w in &self.workers {
             println!(
                 "  worker {}: {:>4} batches  {:>5} images  {:>4} padded  \
@@ -194,6 +208,10 @@ struct PendingReq {
     t0: Instant,
 }
 
+/// Completed-request latencies kept for shutdown percentiles — bounded
+/// so a long-lived server doesn't grow memory per request.
+const LATENCY_WINDOW: usize = 65536;
+
 struct RouterState {
     open: bool,
     /// Workers that have not yet exited (includes ones still
@@ -209,7 +227,9 @@ struct RouterState {
     failed_requests: u64,
     dropped_responses: u64,
     fill_sum: f64,
+    /// Ring of the most recent [`LATENCY_WINDOW`] request latencies.
     latencies: Vec<f64>,
+    latency_count: u64,
     queue_depth_max: usize,
     depth_sum: f64,
     depth_samples: u64,
@@ -230,6 +250,7 @@ impl RouterState {
             dropped_responses: 0,
             fill_sum: 0.0,
             latencies: Vec::new(),
+            latency_count: 0,
             queue_depth_max: 0,
             depth_sum: 0.0,
             depth_samples: 0,
@@ -261,7 +282,14 @@ impl RouterState {
             if p.remaining == 0 {
                 let done = self.pending.remove(&s.req_id).unwrap();
                 let latency_s = done.t0.elapsed().as_secs_f64();
-                self.latencies.push(latency_s);
+                if self.latencies.len() < LATENCY_WINDOW {
+                    self.latencies.push(latency_s);
+                } else {
+                    let slot = (self.latency_count
+                                % LATENCY_WINDOW as u64) as usize;
+                    self.latencies[slot] = latency_s;
+                }
+                self.latency_count += 1;
                 let resp = GenResponse {
                     id: s.req_id,
                     images: done.images,
@@ -535,6 +563,9 @@ impl Router {
             queue_depth_max: st.queue_depth_max,
             latency_p50_s: percentile(&lat, 0.50),
             latency_p95_s: percentile(&lat, 0.95),
+            calib_cache_hits: 0,
+            calib_cache_misses: 0,
+            calib_cold_start_ms: 0.0,
             workers: st.workers.clone(),
         }
     }
@@ -611,7 +642,19 @@ fn worker_loop(idx: usize, backend: &mut dyn GenBackend, shared: &Shared) {
 
         let mut st = shared.lock();
         match result {
-            Ok(Ok(imgs)) => st.deliver(idx, &slots, &imgs, il, cap, busy_s),
+            // a backend returning a short/oversized buffer would panic
+            // copy_from_slice mid-delivery and strand the whole batch;
+            // treat the broken contract like a generate failure instead
+            Ok(Ok(imgs)) if imgs.len() == cap * il => {
+                st.deliver(idx, &slots, &imgs, il, cap, busy_s)
+            }
+            Ok(Ok(imgs)) => {
+                st.fail_batch(idx, &slots, &format!(
+                    "backend returned {} pixels for a {cap}-slot batch \
+                     (expected {})",
+                    imgs.len(), cap * il));
+                return;
+            }
             Ok(Err(e)) => {
                 st.fail_batch(idx, &slots, &format!("{e:#}"));
                 return;
@@ -640,6 +683,9 @@ mod tests {
         calls: usize,
         fail_after: Option<usize>,
         panic_after: Option<usize>,
+        /// Return a buffer one pixel short from this call on (contract
+        /// violation).
+        short_after: Option<usize>,
         log: Option<Arc<Mutex<Vec<i32>>>>,
     }
 
@@ -651,6 +697,7 @@ mod tests {
                 calls: 0,
                 fail_after: None,
                 panic_after: None,
+                short_after: None,
                 log: None,
             }
         }
@@ -673,6 +720,12 @@ mod tests {
             if let Some(after) = self.panic_after {
                 if self.calls >= after {
                     panic!("injected panic on call {}", self.calls);
+                }
+            }
+            if let Some(after) = self.short_after {
+                if self.calls >= after {
+                    self.calls += 1;
+                    return Ok(vec![0.0; self.batch * self.il - 1]);
                 }
             }
             self.calls += 1;
@@ -980,6 +1033,31 @@ mod tests {
         }
         let stats = router.shutdown();
         assert!(stats.workers[0].failed);
+    }
+
+    #[test]
+    fn short_backend_buffer_fails_batch_with_typed_error() {
+        // a buffer-length contract violation must become a typed error,
+        // not a copy_from_slice panic that strands the batch's clients
+        let body: Arc<WorkerBody> = Arc::new(|h: WorkerHandle| -> Result<()> {
+            let mut b = MockBackend::new(4, 2);
+            b.short_after = Some(0);
+            h.serve(&mut b);
+            Ok(())
+        });
+        let router =
+            Router::start(RouterOpts { workers: 1, ..Default::default() },
+                          body);
+        let (_, rx) = router.submit(GenRequest { class: 1, n: 2 }).unwrap();
+        match rx.recv().unwrap() {
+            Err(ServeError::WorkerFailed { cause, .. }) => {
+                assert!(cause.contains("pixels"), "{cause}");
+            }
+            other => panic!("expected WorkerFailed, got {other:?}"),
+        }
+        let stats = router.shutdown();
+        assert!(stats.workers[0].failed);
+        assert_eq!(stats.images, 0);
     }
 
     #[test]

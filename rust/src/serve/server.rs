@@ -3,13 +3,19 @@
 //!
 //! Each worker thread builds its own [`Pipeline`] (the PJRT runtime is
 //! not `Send`), but the expensive quantization calibration runs exactly
-//! once: the first worker to finish constructing its pipeline calibrates
-//! and publishes the resulting [`QuantConfig`] through a [`CalibCell`];
-//! every other worker blocks on the cell and clones the shared qparams
-//! instead of recalibrating. Worker sampling RNGs are derived from the
-//! run seed and the worker index so shards produce distinct images.
+//! once: the first worker to finish constructing its pipeline resolves
+//! the shared [`QuantConfig`] through a [`CalibCell`] — consulting the
+//! persistent calibration cache first (`Pipeline::calibrate_cached`),
+//! so a warm cold-start skips the MRQ/TGQ pipeline entirely — and
+//! every other worker blocks on the cell and clones the published
+//! qparams instead of recalibrating. The cell records whether the
+//! config came from cache and how long resolution took; [`GenServer`]
+//! surfaces both through [`ServerStats`]. Worker sampling RNGs are
+//! derived from the run seed and the worker index so shards produce
+//! distinct images.
 
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
 use anyhow::Result;
 
@@ -24,13 +30,25 @@ use crate::serve::ServeError;
 use crate::util::config::RunConfig;
 use crate::util::rng::Rng;
 
+/// How the one shared calibration was resolved (for [`ServerStats`]).
+#[derive(Clone, Copy, Debug)]
+struct CalibRecord {
+    /// `Some(true)` loaded from the persistent cache, `Some(false)`
+    /// consulted but missed, `None` cache not consulted (disabled/FP).
+    cache: Option<bool>,
+    /// Wall-clock of the resolution (cache load or full calibration).
+    cold_start_ms: f64,
+}
+
 /// Calibrate-once cell shared by the worker threads: the first caller
-/// runs calibration, everyone else blocks for the published result
-/// (success *or* failure — a failed calibration fails every worker with
-/// the same typed cause instead of hanging the stragglers).
+/// resolves the config (cache load or fresh calibration), everyone else
+/// blocks for the published result (success *or* failure — a failed
+/// calibration fails every worker with the same typed cause instead of
+/// hanging the stragglers).
 struct CalibCell {
     state: Mutex<CalibState>,
     ready: Condvar,
+    record: Mutex<Option<CalibRecord>>,
 }
 
 enum CalibState {
@@ -41,12 +59,31 @@ enum CalibState {
 
 impl CalibCell {
     fn new() -> CalibCell {
-        CalibCell { state: Mutex::new(CalibState::Empty),
-                    ready: Condvar::new() }
+        CalibCell {
+            state: Mutex::new(CalibState::Empty),
+            ready: Condvar::new(),
+            record: Mutex::new(None),
+        }
     }
 
+    /// Resolve via `Pipeline::calibrate_cached`: warm cache → no
+    /// calibration work at all; miss/corrupt/stale → fresh + persist.
     fn get_or_calibrate(&self, pipe: &Pipeline, method: Method)
                         -> Result<QuantConfig> {
+        self.get_or_init(|| match pipe.calibrate_cached(method) {
+            Ok((qc, _, outcome)) => (Ok(qc), outcome),
+            Err(e) => (Err(format!("{e:#}")), None),
+        })
+    }
+
+    /// Run `f` in exactly one caller; every other caller blocks for the
+    /// published result. `f` returns (result, cache outcome); resolution
+    /// wall-clock is measured here and recorded alongside the outcome.
+    fn get_or_init<F>(&self, f: F) -> Result<QuantConfig>
+    where
+        F: FnOnce() -> (std::result::Result<QuantConfig, String>,
+                        Option<bool>),
+    {
         let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
         loop {
             let claim = match *st {
@@ -63,21 +100,28 @@ impl CalibCell {
                 continue;
             }
             // claim the calibration slot, run it unlocked, publish.
-            // The guard publishes a failure if calibration *panics*, so
+            // The guard publishes a failure if resolution *panics*, so
             // sibling workers blocked above never wait forever.
             *st = CalibState::Running;
             drop(st);
             let guard = CalibPanicGuard { cell: self };
-            let mut rng = Rng::new(pipe.cfg.seed ^ 0x5e12e);
-            let res = pipe
-                .calibrate(method, &mut rng)
-                .map(|(qc, _)| qc)
-                .map_err(|e| format!("{e:#}"));
+            let t0 = Instant::now();
+            let (res, cache) = f();
+            *self.record.lock().unwrap_or_else(|p| p.into_inner()) =
+                Some(CalibRecord {
+                    cache,
+                    cold_start_ms: t0.elapsed().as_secs_f64() * 1e3,
+                });
             self.publish(res.clone());
             std::mem::forget(guard);
             return res
                 .map_err(|e| anyhow::anyhow!("calibration failed: {e}"));
         }
+    }
+
+    /// The resolution record, once some caller has resolved.
+    fn record(&self) -> Option<CalibRecord> {
+        *self.record.lock().unwrap_or_else(|p| p.into_inner())
     }
 
     fn publish(&self, res: std::result::Result<QuantConfig, String>) {
@@ -126,6 +170,7 @@ impl<'a> GenBackend for SamplerBackend<'a> {
 /// the quantized sampler).
 pub struct GenServer {
     router: Router,
+    calib: Arc<CalibCell>,
 }
 
 impl GenServer {
@@ -135,15 +180,17 @@ impl GenServer {
     }
 
     /// Sharded service: `workers` threads, each owning a pipeline +
-    /// sampler, sharing one calibration pass.
+    /// sampler, sharing one calibration pass (cache-backed: a warm
+    /// persistent cache makes cold-start skip calibration entirely).
     pub fn with_workers(cfg: RunConfig, method: Method, workers: usize)
                         -> GenServer {
         let calib = Arc::new(CalibCell::new());
+        let calib2 = Arc::clone(&calib);
         let body: Arc<WorkerBody> = Arc::new(move |h: WorkerHandle| -> Result<()> {
             let pipe = Pipeline::new(cfg.clone())?;
-            let qc = calib.get_or_calibrate(&pipe, method)?;
+            let qc = calib2.get_or_calibrate(&pipe, method)?;
             let sampler = pipe.sampler(&qc)?;
-            // distinct from the calibration stream (0x5e12e) for every
+            // distinct from the calibration stream (0x5eed) for every
             // worker, including index 0
             let mut backend = SamplerBackend {
                 sampler,
@@ -159,6 +206,7 @@ impl GenServer {
                 RouterOpts { workers, ..RouterOpts::default() },
                 body,
             ),
+            calib,
         }
     }
 
@@ -187,8 +235,153 @@ impl GenServer {
         self.router.ready_workers()
     }
 
-    /// Stop the workers, drain the queue and collect statistics.
+    /// Stop the workers, drain the queue and collect statistics
+    /// (including the calibration-cache outcome for this run).
     pub fn shutdown(self) -> ServerStats {
-        self.router.shutdown()
+        let mut stats = self.router.shutdown();
+        if let Some(rec) = self.calib.record() {
+            match rec.cache {
+                Some(true) => stats.calib_cache_hits = 1,
+                Some(false) => stats.calib_cache_misses = 1,
+                // cache disabled / not applicable: report neither, so
+                // stats never claim a cache was consulted
+                None => {}
+            }
+            stats.calib_cold_start_ms = rec.cold_start_ms;
+        }
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    use crate::coordinator::cache::{CacheKey, CalibCache};
+    use crate::quant::{SiteParams, UniformQ};
+    use crate::sched::TimeGroups;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "tqdit_cell_cache_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn test_key() -> CacheKey {
+        CacheKey::from_config(&RunConfig::default(), "tq-dit", 0x7e57)
+    }
+
+    fn cached_config() -> QuantConfig {
+        let mut c = QuantConfig::new("tq-dit", 8, 8,
+                                     TimeGroups::new(250, 10));
+        c.sites.insert(
+            "blk0.x".into(),
+            SiteParams::Uniform(UniformQ { s: 0.125, z: 2.0,
+                                           levels: 255.0 }),
+        );
+        c
+    }
+
+    fn fresh_config() -> QuantConfig {
+        QuantConfig::new("tq-dit", 8, 8, TimeGroups::new(250, 10))
+    }
+
+    /// The `GenServer` resolution flow against a counting calibration
+    /// hook: a warm cache must produce a ready config without invoking
+    /// the (mock) quantization pipeline at all.
+    #[test]
+    fn warm_cache_resolves_without_calibrating() {
+        let dir = tmp_dir("warm");
+        let cache = CalibCache::new(&dir);
+        let key = test_key();
+        cache.store(&key, &cached_config()).unwrap();
+
+        let calibrations = AtomicUsize::new(0);
+        let cell = CalibCell::new();
+        let qc = cell
+            .get_or_init(|| {
+                if let Some(qc) = cache.load(&key) {
+                    return (Ok(qc), Some(true));
+                }
+                calibrations.fetch_add(1, Ordering::Relaxed);
+                (Ok(fresh_config()), Some(false))
+            })
+            .unwrap();
+        assert_eq!(calibrations.load(Ordering::Relaxed), 0,
+                   "warm cache must skip calibration");
+        assert_eq!(qc, cached_config());
+        let rec = cell.record().unwrap();
+        assert_eq!(rec.cache, Some(true));
+        assert!(rec.cold_start_ms >= 0.0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A corrupted cache entry must fall back to fresh calibration and
+    /// serve its result — never a panic, never a half-read config.
+    #[test]
+    fn corrupt_cache_falls_back_to_fresh_calibration() {
+        let dir = tmp_dir("corrupt");
+        let cache = CalibCache::new(&dir);
+        let key = test_key();
+        cache.store(&key, &cached_config()).unwrap();
+        std::fs::write(cache.path_for(&key), b"}{ torn write").unwrap();
+
+        let calibrations = AtomicUsize::new(0);
+        let cell = CalibCell::new();
+        let qc = cell
+            .get_or_init(|| {
+                if let Some(qc) = cache.load(&key) {
+                    return (Ok(qc), Some(true));
+                }
+                calibrations.fetch_add(1, Ordering::Relaxed);
+                let qc = fresh_config();
+                cache.store(&key, &qc).unwrap();
+                (Ok(qc), Some(false))
+            })
+            .unwrap();
+        assert_eq!(calibrations.load(Ordering::Relaxed), 1);
+        assert_eq!(qc, fresh_config(), "must serve the fresh result");
+        assert_eq!(cell.record().unwrap().cache, Some(false));
+        // the fallback repaired the entry for the next cold start
+        assert_eq!(cache.load(&key), Some(fresh_config()));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Later callers get the published result without re-resolving.
+    #[test]
+    fn cell_publishes_one_resolution_to_all_callers() {
+        let cell = CalibCell::new();
+        let calls = AtomicUsize::new(0);
+        let first = cell
+            .get_or_init(|| {
+                calls.fetch_add(1, Ordering::Relaxed);
+                (Ok(fresh_config()), None)
+            })
+            .unwrap();
+        let second = cell
+            .get_or_init(|| {
+                calls.fetch_add(1, Ordering::Relaxed);
+                (Ok(cached_config()), Some(true))
+            })
+            .unwrap();
+        assert_eq!(calls.load(Ordering::Relaxed), 1);
+        assert_eq!(first, second);
+    }
+
+    /// A failed resolution is shared as the same typed cause.
+    #[test]
+    fn cell_shares_failure_with_all_callers() {
+        let cell = CalibCell::new();
+        let e1 = cell
+            .get_or_init(|| (Err("no artifacts".into()), None))
+            .unwrap_err();
+        assert!(e1.to_string().contains("no artifacts"), "{e1}");
+        let e2 = cell
+            .get_or_init(|| panic!("must not re-run"))
+            .unwrap_err();
+        assert!(e2.to_string().contains("no artifacts"), "{e2}");
     }
 }

@@ -132,6 +132,19 @@ mod tests {
     }
 
     #[test]
+    fn calib_cache_flags_parse() {
+        // `--calib-cache DIR` takes a value; `--no-calib-cache` is a
+        // bare flag — both flow through the config overlay unchanged
+        let a = p(&["serve", "--calib-cache", "/tmp/cc",
+                    "--no-calib-cache"]);
+        assert_eq!(a.get("calib-cache"), Some("/tmp/cc"));
+        assert!(a.flag("no-calib-cache"));
+        let a = p(&["serve", "--calib-cache=.cache/calib"]);
+        assert_eq!(a.get("calib-cache"), Some(".cache/calib"));
+        assert!(!a.flag("no-calib-cache"));
+    }
+
+    #[test]
     fn malformed_values_error_with_key_and_value() {
         let a = p(&["x", "--n", "abc", "--rate", "fast"]);
         let e = a.usize("n", 0).unwrap_err().to_string();

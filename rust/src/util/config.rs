@@ -133,6 +133,9 @@ pub struct RunConfig {
     pub use_ho: bool,
     pub use_mrq: bool,
     pub use_tgq: bool,
+    /// Persistent calibration-cache directory (`--calib-cache DIR`);
+    /// `None` (`--no-calib-cache`) disables load *and* store.
+    pub calib_cache: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -151,6 +154,7 @@ impl Default for RunConfig {
             use_ho: true,
             use_mrq: true,
             use_tgq: true,
+            calib_cache: Some("calib-cache".into()),
         }
     }
 }
@@ -158,7 +162,15 @@ impl Default for RunConfig {
 impl RunConfig {
     pub fn from_raw(raw: &RawConfig) -> Result<RunConfig> {
         let d = RunConfig::default();
-        Ok(RunConfig {
+        let calib_cache = if raw.bool("no-calib-cache", false)? {
+            None
+        } else {
+            Some(raw.str_or(
+                "calib-cache",
+                d.calib_cache.as_deref().unwrap_or("calib-cache"),
+            ))
+        };
+        let cfg = RunConfig {
             artifacts: raw.str_or("artifacts", &d.artifacts),
             wbits: raw.usize("wbits", d.wbits as usize)? as u32,
             abits: raw.usize("abits", d.abits as usize)? as u32,
@@ -173,7 +185,31 @@ impl RunConfig {
             use_ho: raw.bool("ho", d.use_ho)?,
             use_mrq: raw.bool("mrq", d.use_mrq)?,
             use_tgq: raw.bool("tgq", d.use_tgq)?,
-        })
+            calib_cache,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Cross-field checks that would otherwise surface as panics deep
+    /// in calibration: every time group must be able to cover at least
+    /// one sampler step.
+    pub fn validate(&self) -> Result<()> {
+        if self.timesteps == 0 {
+            bail!("config `timesteps`: must be at least 1");
+        }
+        if self.groups == 0 {
+            bail!("config `groups`: must be at least 1");
+        }
+        if self.groups > self.timesteps {
+            bail!(
+                "config: groups (G={}) exceeds sampler timesteps (T={}) — \
+                 some time group would cover no sampler steps; lower \
+                 `groups` or raise `timesteps`",
+                self.groups, self.timesteps
+            );
+        }
+        Ok(())
     }
 
     /// file (optional `--config path`) + CLI overlay.
@@ -253,5 +289,37 @@ name = "full run"
         assert_eq!(d.calib_per_group, 32);
         assert_eq!(d.rounds, 3);
         assert_eq!(d.timesteps, 250);
+    }
+
+    #[test]
+    fn rejects_groupings_no_sampler_respacing_can_satisfy() {
+        // G > T: some group would cover no sampler step — caught at
+        // config-parse time, not as a worker panic mid-calibration
+        let c = RawConfig::parse("groups = 20\ntimesteps = 10").unwrap();
+        let e = RunConfig::from_raw(&c).unwrap_err().to_string();
+        assert!(e.contains("G=20") && e.contains("T=10"), "{e}");
+        for bad in ["groups = 0", "timesteps = 0"] {
+            let c = RawConfig::parse(bad).unwrap();
+            assert!(RunConfig::from_raw(&c).is_err(), "{bad}");
+        }
+        // boundary: G == T is fine (one step per group)
+        let c = RawConfig::parse("groups = 10\ntimesteps = 10").unwrap();
+        assert!(RunConfig::from_raw(&c).is_ok());
+    }
+
+    #[test]
+    fn calib_cache_flags() {
+        // default: enabled at the conventional directory
+        let c = RawConfig::parse("").unwrap();
+        let cfg = RunConfig::from_raw(&c).unwrap();
+        assert_eq!(cfg.calib_cache.as_deref(), Some("calib-cache"));
+        // --calib-cache DIR overrides the location
+        let c = RawConfig::parse("calib-cache = /tmp/tqdit-cc").unwrap();
+        let cfg = RunConfig::from_raw(&c).unwrap();
+        assert_eq!(cfg.calib_cache.as_deref(), Some("/tmp/tqdit-cc"));
+        // --no-calib-cache disables it (bare CLI flags parse as "true")
+        let c = RawConfig::parse("no-calib-cache = true").unwrap();
+        let cfg = RunConfig::from_raw(&c).unwrap();
+        assert_eq!(cfg.calib_cache, None);
     }
 }

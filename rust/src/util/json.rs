@@ -1,7 +1,14 @@
-//! Minimal JSON parser (no `serde` offline) — reads `manifest.json`.
+//! Minimal JSON parser + serializer (no `serde` offline) — reads
+//! `manifest.json` and persists calibration-cache entries.
 //!
 //! Supports the full JSON value grammar (objects, arrays, strings with
 //! escapes, numbers, bools, null). Error messages carry byte offsets.
+//! [`Json::dump`] emits compact text that parses back to an identical
+//! value: floats use Rust's shortest-roundtrip `Display`, so every
+//! finite `f64` (and every `f32` widened to `f64`) survives a
+//! serialize → parse cycle bit-for-bit. Non-finite numbers are not
+//! representable in JSON and serialize as `null`; typed readers then
+//! reject the field instead of silently reading garbage.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -44,6 +51,54 @@ impl Json {
         Ok(v)
     }
 
+    /// Serialize to compact JSON text (see module docs for the
+    /// round-trip and non-finite-number guarantees).
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::Num(x) => {
+                if x.is_finite() {
+                    // Display is shortest-roundtrip and never uses
+                    // exponent notation, both of which JSON needs
+                    out.push_str(&x.to_string());
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => write_string(s, out),
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, item) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_string(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
     // -- typed accessors ---------------------------------------------------
 
     pub fn get(&self, key: &str) -> Option<&Json> {
@@ -53,13 +108,6 @@ impl Json {
         }
     }
 
-    /// Object field lookup that panics with a useful message — manifest
-    /// fields are trusted build outputs, so missing keys are bugs.
-    pub fn req(&self, key: &str) -> &Json {
-        self.get(key)
-            .unwrap_or_else(|| panic!("manifest: missing key `{key}`"))
-    }
-
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -67,8 +115,23 @@ impl Json {
         }
     }
 
+    /// Lossy cast (fraction truncated, negatives saturate) — legacy
+    /// accessor; strict loaders should use [`Self::as_exact_usize`].
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|x| x as usize)
+    }
+
+    /// Integer-valued number → usize. `None` for fractional or
+    /// negative values, and from 2^53 up (the first value where f64
+    /// can no longer distinguish adjacent integers) — the accessor
+    /// validating loaders use so corruption errors instead of silently
+    /// truncating.
+    pub fn as_exact_usize(&self) -> Option<usize> {
+        let x = self.as_f64()?;
+        if x.fract() != 0.0 || x < 0.0 || x >= 9_007_199_254_740_992.0 {
+            return None;
+        }
+        Some(x as usize)
     }
 
     pub fn as_str(&self) -> Option<&str> {
@@ -92,13 +155,32 @@ impl Json {
         }
     }
 
-    /// Array of numbers → Vec<usize> (shapes).
+    /// Array of whole numbers → Vec<usize> (shapes).
     pub fn as_shape(&self) -> Option<Vec<usize>> {
         self.as_arr()?
             .iter()
-            .map(|v| v.as_usize())
+            .map(|v| v.as_exact_usize())
             .collect::<Option<Vec<_>>>()
     }
+}
+
+/// Write `s` as a JSON string literal, escaping per RFC 8259.
+fn write_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 struct Parser<'a> {
@@ -303,15 +385,35 @@ mod tests {
     fn nested() {
         let v = Json::parse(r#"{"a": [1, 2, {"b": "x"}], "c": false}"#)
             .unwrap();
-        assert_eq!(v.req("c").as_bool(), Some(false));
-        let arr = v.req("a").as_arr().unwrap();
-        assert_eq!(arr[2].req("b").as_str(), Some("x"));
+        assert_eq!(v.get("c").unwrap().as_bool(), Some(false));
+        let arr = v.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(arr[2].get("b").unwrap().as_str(), Some("x"));
     }
 
     #[test]
     fn shapes() {
         let v = Json::parse("[8, 64, 96]").unwrap();
         assert_eq!(v.as_shape(), Some(vec![8, 64, 96]));
+        // fractional / negative dims are corruption, not shapes
+        assert_eq!(Json::parse("[8, 2.5]").unwrap().as_shape(), None);
+        assert_eq!(Json::parse("[-1]").unwrap().as_shape(), None);
+    }
+
+    #[test]
+    fn exact_usize_rejects_non_integers() {
+        assert_eq!(Json::Num(8.0).as_exact_usize(), Some(8));
+        assert_eq!(Json::Num(0.0).as_exact_usize(), Some(0));
+        assert_eq!(Json::Num(8.7).as_exact_usize(), None);
+        assert_eq!(Json::Num(-1.0).as_exact_usize(), None);
+        assert_eq!(Json::Num(1e300).as_exact_usize(), None);
+        // 2^53 itself is ambiguous (2^53 + 1 parses to the same f64)
+        assert_eq!(Json::Num(9_007_199_254_740_992.0).as_exact_usize(),
+                   None);
+        assert_eq!(Json::Num(9_007_199_254_740_991.0).as_exact_usize(),
+                   Some(9_007_199_254_740_991));
+        assert_eq!(Json::Str("8".into()).as_exact_usize(), None);
+        // the lossy legacy accessor still truncates
+        assert_eq!(Json::Num(8.7).as_usize(), Some(8));
     }
 
     #[test]
@@ -333,6 +435,63 @@ mod tests {
     #[test]
     fn whitespace_tolerant() {
         let v = Json::parse(" {\n \"k\" :\t[ ] } ").unwrap();
-        assert_eq!(v.req("k").as_arr().unwrap().len(), 0);
+        assert_eq!(v.get("k").unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn dump_parse_roundtrip_nested() {
+        let v = Json::parse(
+            r#"{"a": [1, -2.5, {"b": "x\ny", "c": null}], "d": true,
+                "e": "", "f": [[], {}]}"#,
+        )
+        .unwrap();
+        assert_eq!(Json::parse(&v.dump()).unwrap(), v);
+    }
+
+    #[test]
+    fn dump_escapes_strings() {
+        let v = Json::Str("a\"b\\c\nd\te\u{8}f".into());
+        let text = v.dump();
+        assert_eq!(Json::parse(&text).unwrap(), v);
+        assert!(text.contains("\\\"") && text.contains("\\\\"));
+        assert!(text.contains("\\n") && text.contains("\\u0008"));
+    }
+
+    #[test]
+    fn dump_floats_roundtrip_exactly() {
+        for x in [0.0f64, -0.0, 0.1, 1.5e-8, 12345678.9, -3.0,
+                  f32::MAX as f64, 1.0e21, (0.1f32 + 0.2f32) as f64] {
+            let text = Json::Num(x).dump();
+            assert!(!text.contains('e') && !text.contains('E'), "{text}");
+            match Json::parse(&text).unwrap() {
+                Json::Num(y) => assert_eq!(
+                    x.to_bits(), y.to_bits(), "{x} -> {text} -> {y}"
+                ),
+                other => panic!("{other:?}"),
+            }
+        }
+        // f32 widened to f64 survives the cycle bit-for-bit
+        for f in [0.1f32, 1e-7, 255.0, -17.125, f32::MIN_POSITIVE] {
+            let text = Json::Num(f as f64).dump();
+            let back = Json::parse(&text).unwrap().as_f64().unwrap() as f32;
+            assert_eq!(f.to_bits(), back.to_bits(), "{f} via {text}");
+        }
+    }
+
+    #[test]
+    fn dump_nonfinite_as_null() {
+        assert_eq!(Json::Num(f64::NAN).dump(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).dump(), "null");
+        assert_eq!(Json::parse(&Json::Num(f64::NAN).dump()).unwrap(),
+                   Json::Null);
+    }
+
+    #[test]
+    fn dump_preserves_object_keys() {
+        let v = Json::parse(r#"{"z": 1, "a": 2, "m": 3}"#).unwrap();
+        let text = v.dump();
+        // BTreeMap ordering makes the output canonical (sorted keys) —
+        // the cache relies on this for content addressing
+        assert_eq!(text, r#"{"a":2,"m":3,"z":1}"#);
     }
 }

@@ -54,6 +54,9 @@ fn small_cfg(dir: &Path) -> RunConfig {
         rounds: 1,
         candidates: 16,
         eval_images: 16,
+        // isolation: no shared on-disk cache between tests/runs — the
+        // cache-specific test below opts in with its own temp dir
+        calib_cache: None,
         ..RunConfig::default()
     }
 }
@@ -190,7 +193,7 @@ fn capture_covers_every_layer_and_group() {
                                   d.train_steps);
     let tg = TimeGroups::new(d.train_steps, 5);
     let mut rng = Rng::new(3);
-    let calib = CalibSet::build(&ds, &sched, &tg, 8, &mut rng);
+    let calib = CalibSet::build(&ds, &sched, &tg, 8, &mut rng).unwrap();
     let ev = run_capture(&rt, &ws, &calib, CaptureOpts::default()).unwrap();
 
     assert_eq!(ev.layers.len(), rt.manifest.layers.len());
@@ -228,7 +231,7 @@ fn quantize_emits_params_for_every_site() {
                                   d.train_steps);
     let tg = TimeGroups::new(d.train_steps, 5);
     let mut rng = Rng::new(5);
-    let calib = CalibSet::build(&ds, &sched, &tg, 4, &mut rng);
+    let calib = CalibSet::build(&ds, &sched, &tg, 4, &mut rng).unwrap();
     let ev = run_capture(&rt, &ws, &calib, CaptureOpts::default()).unwrap();
     let opts = QuantizeOpts {
         rounds: 1,
@@ -461,6 +464,64 @@ fn serve_sharded_concurrent_load() {
     let dispatched: u64 = stats.images + stats.padded_slots;
     assert_eq!(dispatched % stats.batches.max(1), 0,
                "padding must fill whole fixed-size batches");
+}
+
+#[test]
+fn serve_warm_calib_cache_cold_start_skips_calibration() {
+    // Cold start populates the persistent cache; a second server with
+    // the same config + artifacts must come up on a cache hit and
+    // produce *identical* images — the round-tripped QuantConfig is
+    // bit-for-bit the one fresh calibration produced (the no-quantize
+    // guarantee itself is asserted by the counting-hook unit test in
+    // serve::server; quantize_runs() is process-global and other tests
+    // in this binary run concurrently).
+    let dir = require_artifacts!();
+    let mut cfg = small_cfg(&dir);
+    cfg.timesteps = 10;
+    cfg.groups = 5;
+    cfg.calib_per_group = 2;
+    cfg.candidates = 8;
+    let cache_dir = std::env::temp_dir().join(format!(
+        "tqdit_itest_calib_cache_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&cache_dir);
+    cfg.calib_cache = Some(cache_dir.to_str().unwrap().to_string());
+
+    let run = |cfg: &RunConfig| {
+        let server = tq_dit::serve::GenServer::with_workers(
+            cfg.clone(), Method::TqDit, 1);
+        let (_, rx) = server
+            .submit(tq_dit::serve::GenRequest { class: 3, n: 2 })
+            .unwrap();
+        let images = rx.recv().unwrap().unwrap().images;
+        (images, server.shutdown())
+    };
+
+    let (cold_images, cold) = run(&cfg);
+    assert_eq!(cold.calib_cache_misses, 1, "first start must miss");
+    assert_eq!(cold.calib_cache_hits, 0);
+    assert!(cold.calib_cold_start_ms > 0.0);
+
+    let (warm_images, warm) = run(&cfg);
+    assert_eq!(warm.calib_cache_hits, 1, "second start must hit");
+    assert_eq!(warm.calib_cache_misses, 0);
+    assert_eq!(cold_images, warm_images,
+               "cached config must reproduce fresh calibration exactly");
+
+    // a corrupted entry degrades to a miss (fresh calibration), with
+    // identical output and no panic anywhere in the load path
+    let pipe = Pipeline::new(cfg.clone()).unwrap();
+    let key = pipe.cache_key(Method::TqDit).unwrap();
+    let cache = pipe.calib_cache().unwrap();
+    let entry = cache.path_for(&key);
+    assert!(entry.exists());
+    std::fs::write(&entry, b"\x00\xffnot json").unwrap();
+    drop(pipe);
+    let (repaired_images, repaired) = run(&cfg);
+    assert_eq!(repaired.calib_cache_misses, 1);
+    assert_eq!(repaired_images, cold_images,
+               "fallback recalibration must match the original");
+
+    let _ = std::fs::remove_dir_all(&cache_dir);
 }
 
 #[test]
