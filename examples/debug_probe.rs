@@ -19,7 +19,7 @@ fn main() -> anyhow::Result<()> {
     cfg.calib_per_group = 4;
     let pipe = Pipeline::new(cfg.clone())?;
     let m = pipe.rt.manifest.clone();
-    let b = m.batches.sample;
+    let b = m.batches.sample_max();
     let il = m.model.img_size * m.model.img_size * m.model.channels;
     let mut rng = Rng::new(1);
 

@@ -1,21 +1,45 @@
 //! Sharded generation-service demo: several client threads firing
-//! mixed-size requests at a multi-worker server, which calibrates the
-//! quantization config once, shares it across worker shards, and packs
-//! the fixed-size artifact batches from one FIFO queue.
+//! requests at a multi-worker server, which calibrates the quantization
+//! config once, shares it across worker shards, and packs batches from
+//! one FIFO queue under the deadline-aware ladder policy.
 //!
-//! Reports per-request latency, then the aggregate + per-worker stats
-//! (throughput, fill, padding, queue depth, p50/p95 latency).
+//! Scenarios (`--scenario`) exercise both ends of the batch ladder:
+//!
+//! * `mixed`   — the classic mixed-size concurrent load (default)
+//! * `trickle` — 1 image per request, sparse arrivals: small rungs
+//!               keep latency low and padding near zero
+//! * `burst`   — mixed 1–16 images per request, all at once: the big
+//!               rungs fill while stragglers ride the small ones
+//!
+//! Reports per-request latency, then the aggregate + per-worker +
+//! per-rung stats (throughput, fill, padding, queue depth, p50/p95).
 //!
 //! Run: cargo run --release --example serve_demo -- \
 //!        --timesteps 50 --calib-per-group 8 \
-//!        --clients 3 --requests 4 --workers 2
+//!        --clients 3 --requests 4 --workers 2 \
+//!        --scenario trickle --linger-ms 5 --batch-ladder 1,4,16
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
 
 use tq_dit::coordinator::pipeline::Method;
 use tq_dit::serve::{GenRequest, GenServer};
 use tq_dit::util::cli::Args;
 use tq_dit::util::config::RunConfig;
+
+/// Request size + arrival spacing per scenario.
+fn shape_request(scenario: &str, client: usize, i: usize)
+                 -> (usize, Duration) {
+    match scenario {
+        // one image per request, spaced out: the ladder's small rungs
+        // should carry all of it without padding
+        "trickle" => (1, Duration::from_millis(30)),
+        // mixed 1–16 images, no spacing: fills the big rungs
+        "burst" => (1 + (client * 7 + i * 5) % 16, Duration::ZERO),
+        // the classic demo load
+        _ => (1 + (client * 7 + i * 5) % 11, Duration::ZERO),
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
@@ -25,30 +49,40 @@ fn main() -> anyhow::Result<()> {
     let clients = args.usize("clients", 3)?.max(1);
     let n_req = args.usize("requests", 4)?;
     let workers = args.usize("workers", 2)?.max(1);
+    let scenario = args.str_or("scenario", "mixed").to_string();
+    if !["mixed", "trickle", "burst"].contains(&scenario.as_str()) {
+        anyhow::bail!("unknown --scenario `{scenario}` \
+                       (mixed|trickle|burst)");
+    }
     let method = Method::parse(args.str_or("method", "tq-dit"))
         .ok_or_else(|| anyhow::anyhow!("unknown --method"))?;
 
     println!(
-        "== serve demo: {clients} clients x {n_req} requests via {} on \
-         {workers} workers (W{}A{}, T={}) ==",
-        method.name(), cfg.wbits, cfg.abits, cfg.timesteps
+        "== serve demo [{scenario}]: {clients} clients x {n_req} requests \
+         via {} on {workers} workers (W{}A{}, T={}, linger {} ms, \
+         ladder {}) ==",
+        method.name(), cfg.wbits, cfg.abits, cfg.timesteps, cfg.linger_ms,
+        cfg.batch_ladder
+            .as_ref()
+            .map(|l| format!("{l:?}"))
+            .unwrap_or_else(|| "manifest".into()),
     );
     let server = GenServer::with_workers(cfg, method, workers);
 
-    // mixed request sizes across classes, all clients submitting
-    // concurrently against the shared handle
+    // all clients submitting concurrently against the shared handle
     let failures = AtomicUsize::new(0);
     std::thread::scope(|s| {
         for c in 0..clients {
             let server = &server;
             let failures = &failures;
+            let scenario = scenario.as_str();
             s.spawn(move || {
                 for i in 0..n_req {
-                    let req = GenRequest {
-                        class: ((c + i) % 8) as i32,
-                        n: 1 + (c * 7 + i * 5) % 11,
-                    };
-                    let n = req.n;
+                    let (n, gap) = shape_request(scenario, c, i);
+                    if !gap.is_zero() {
+                        std::thread::sleep(gap);
+                    }
+                    let req = GenRequest { class: ((c + i) % 8) as i32, n };
                     match server.submit(req) {
                         Ok((id, rx)) => match rx.recv() {
                             Ok(Ok(resp)) => println!(

@@ -2,9 +2,11 @@
 
 Produces in ``artifacts/``:
 
-  dit_fp_sample.hlo.txt   FP forward,   batch = SAMPLE_BATCH
+  dit_fp_sample.hlo.txt   FP forward, one per SAMPLE_LADDER rung (the
+                          largest rung unsuffixed, smaller rungs @b{B})
   dit_fp_calib.hlo.txt    FP forward,   batch = CALIB_BATCH
-  dit_quant.hlo.txt       quant forward (pallas kernels), SAMPLE_BATCH
+  dit_quant.hlo.txt       quant forward (pallas kernels), per rung as
+                          above
   dit_quant_calib.hlo.txt quant forward, CALIB_BATCH
   dit_capture.hlo.txt     FP forward + per-layer inputs + ∂L/∂z (Fisher)
   train_step.hlo.txt      fwd+bwd+Adam in one XLA computation
@@ -33,7 +35,7 @@ from jax._src.lib import xla_client as xc
 
 from . import features as feat_mod
 from . import train as train_mod
-from .config import (CALIB_BATCH, DIFFUSION, MODEL, SAMPLE_BATCH,
+from .config import (CALIB_BATCH, DIFFUSION, MODEL, SAMPLE_LADDER,
                      TRAIN_BATCH, build_layers, qparam_layout)
 from .model import forward, forward_aux, layer_z_shapes, param_specs
 from .qmodel import forward_quant
@@ -121,15 +123,35 @@ def main() -> None:
         x, t, y, qp = a[npar], a[npar + 1], a[npar + 2], a[npar + 3]
         return (forward_quant(p, x, t, y, qp, cfg),)
 
-    for tag, B in (("sample", SAMPLE_BATCH), ("calib", CALIB_BATCH)):
+    # sampling graphs, lowered once per ladder rung: the largest rung
+    # keeps the classic unsuffixed names, smaller rungs get @b{B}
+    # suffixes (rust resolves them via Manifest::sample_artifact)
+    sample_artifacts = {}
+    for B in SAMPLE_LADDER:
         io = [f32(B, cfg.img_size, cfg.img_size, cfg.channels),
               i32(B), i32(B)]
+        # rust resolves the unsuffixed names to the *largest* rung of
+        # the (sorted) ladder, so key the suffix off max(), not off
+        # position — a reordered SAMPLE_LADDER must not silently ship a
+        # batch-mismatched unsuffixed executable
+        suffix = "" if B == max(SAMPLE_LADDER) else f"@b{B}"
+        fp_name = f"dit_fp_sample{suffix}"
+        q_name = f"dit_quant{suffix}"
         export(fp_fn, pspecs + io,
-               os.path.join(args.out, f"dit_fp_{tag}.hlo.txt"))
-        name = "dit_quant.hlo.txt" if tag == "sample" \
-            else "dit_quant_calib.hlo.txt"
+               os.path.join(args.out, f"{fp_name}.hlo.txt"))
         export(quant_fn, pspecs + io + [f32(qp_len)],
-               os.path.join(args.out, name))
+               os.path.join(args.out, f"{q_name}.hlo.txt"))
+        sample_artifacts[fp_name] = f"{fp_name}.hlo.txt"
+        sample_artifacts[q_name] = f"{q_name}.hlo.txt"
+
+    # calibration-batch graphs (single rung)
+    B = CALIB_BATCH
+    io = [f32(B, cfg.img_size, cfg.img_size, cfg.channels),
+          i32(B), i32(B)]
+    export(fp_fn, pspecs + io,
+           os.path.join(args.out, "dit_fp_calib.hlo.txt"))
+    export(quant_fn, pspecs + io + [f32(qp_len)],
+           os.path.join(args.out, "dit_quant_calib.hlo.txt"))
 
     # ---- 3. capture artifact (Fisher ingredients) ------------------------
     B = CALIB_BATCH
@@ -259,7 +281,8 @@ def main() -> None:
             for l in layers
         ],
         "qp_len": qp_len,
-        "batches": {"calib": CALIB_BATCH, "sample": SAMPLE_BATCH,
+        "batches": {"calib": CALIB_BATCH,
+                    "sample": list(SAMPLE_LADDER),
                     "train": TRAIN_BATCH, "feat": FB},
         "capture_outputs": [
             {"name": name,
@@ -279,9 +302,8 @@ def main() -> None:
         },
         "metric_weights": "metric_weights.bin",
         "artifacts": {
-            "dit_fp_sample": "dit_fp_sample.hlo.txt",
+            **sample_artifacts,
             "dit_fp_calib": "dit_fp_calib.hlo.txt",
-            "dit_quant": "dit_quant.hlo.txt",
             "dit_quant_calib": "dit_quant_calib.hlo.txt",
             "dit_capture": "dit_capture.hlo.txt",
             "train_step": "train_step.hlo.txt",

@@ -143,7 +143,13 @@ def qparam_layout(cfg: ModelConfig):
 
 # Batch sizes baked into the AOT artifacts (fixed shapes).
 CALIB_BATCH = 8        # dit_capture / dit_fp_calib
-SAMPLE_BATCH = 16      # dit_fp / dit_quant (sampling path)
+# Sampling-path batch ladder: the fp/quant sampling graphs are lowered
+# once per rung so the serve layer can dispatch trickle traffic on
+# small batches instead of padding the full one. Ascending; the largest
+# rung keeps the classic unsuffixed artifact names, smaller rungs get
+# `@b{B}` suffixes (see rust/src/runtime/artifacts.rs).
+SAMPLE_LADDER = (1, 4, 16)
+SAMPLE_BATCH = SAMPLE_LADDER[-1]   # dit_fp / dit_quant (sampling path)
 TRAIN_BATCH = 64       # train_step
 
 MODEL = ModelConfig()

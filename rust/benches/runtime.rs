@@ -1,19 +1,38 @@
 //! PJRT runtime benches: artifact compile time, per-step execute
-//! latency (the sampler's budget), upload overheads, and end-to-end
-//! sampling throughput — FP vs quantized path.
+//! latency (the sampler's budget), upload overheads, end-to-end
+//! sampling throughput — FP vs quantized path — and the serve stack's
+//! adaptive-batching policy (ladder vs fixed under trickle / steady /
+//! burst load).
+//!
+//! `TQDIT_BENCH_SMOKE=1` runs only the mock-backend adaptive-batching
+//! section (no AOT artifacts, no PJRT) — the CI smoke gate.
 
 #[path = "common.rs"]
 mod common;
 
+use std::sync::Arc;
+use std::time::Duration;
+
 use tq_dit::coordinator::pipeline::{Method, Pipeline};
 use tq_dit::coordinator::QuantConfig;
 use tq_dit::sampler::Sampler;
-use tq_dit::serve::{GenRequest, GenServer};
+use tq_dit::serve::{
+    GenBackend, GenRequest, GenServer, Router, RouterOpts, ServerStats,
+    WorkerBody, WorkerHandle,
+};
 use tq_dit::tensor::Tensor;
 use tq_dit::util::bench::Bench;
 use tq_dit::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
+    let smoke = std::env::var("TQDIT_BENCH_SMOKE").as_deref() == Ok("1");
+    if !smoke {
+        pjrt_benches()?;
+    }
+    adaptive_batching_bench()
+}
+
+fn pjrt_benches() -> anyhow::Result<()> {
     let mut cfg = common::bench_config();
     cfg.timesteps = 50;
     cfg.calib_per_group = 4;
@@ -24,7 +43,7 @@ fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(3);
 
     // compile (cold) timings are logged by Runtime; warm execute below.
-    let b = m.batches.sample;
+    let b = m.batches.sample_max();
     let il = m.model.img_size * m.model.img_size * m.model.channels;
     let wbufs = pipe.rt.upload_all(&pipe.weights.tensors)?;
     let x = Tensor::new(vec![b, m.model.img_size, m.model.img_size,
@@ -175,5 +194,133 @@ fn main() -> anyhow::Result<()> {
         }
     }
     let _ = std::fs::remove_dir_all(&cache_dir);
+    Ok(())
+}
+
+// ---- adaptive batching: ladder vs fixed under shaped load --------------
+
+/// Mock backend whose per-call cost is proportional to the dispatched
+/// rung, so padded slots burn wall-clock exactly like real compute
+/// would (per-step execute time dominates the low-bit serve cost).
+struct ShapedBackend {
+    rungs: Vec<usize>,
+    il: usize,
+    cost_per_slot: Duration,
+}
+
+impl GenBackend for ShapedBackend {
+    fn rungs(&self) -> Vec<usize> {
+        self.rungs.clone()
+    }
+    fn img_len(&self) -> usize {
+        self.il
+    }
+    fn generate(&mut self, labels: &[i32]) -> anyhow::Result<Vec<f32>> {
+        std::thread::sleep(self.cost_per_slot * labels.len() as u32);
+        Ok(vec![0.0; labels.len() * self.il])
+    }
+}
+
+/// Drive one scenario against one ladder; returns the shutdown stats.
+fn drive_scenario(rungs: Vec<usize>, linger: Duration, scenario: &str)
+                  -> anyhow::Result<ServerStats> {
+    let il = 4usize;
+    let body: Arc<WorkerBody> =
+        Arc::new(move |h: WorkerHandle| -> anyhow::Result<()> {
+            let mut b = ShapedBackend {
+                rungs: rungs.clone(),
+                il,
+                cost_per_slot: Duration::from_millis(1),
+            };
+            h.serve(&mut b)
+        });
+    let router = Router::start(
+        RouterOpts { workers: 1, linger, ..RouterOpts::default() },
+        body,
+    );
+    match scenario {
+        // sparse singles: each request waited out before the next, the
+        // inter-arrival gap far exceeding the service time
+        "trickle" => {
+            for i in 0..24usize {
+                let (_, rx) = router
+                    .submit(GenRequest { class: (i % 8) as i32, n: 1 })?;
+                rx.recv()??;
+            }
+        }
+        // full-batch requests back to back: the top rung stays filled
+        "steady" => {
+            let rxs = (0..6usize)
+                .map(|i| {
+                    router.submit(GenRequest { class: (i % 8) as i32,
+                                               n: 16 })
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            for (_, rx) in rxs {
+                rx.recv()??;
+            }
+        }
+        // mixed 1–16 img requests all at once
+        _ => {
+            let rxs = (1..=16usize)
+                .map(|n| {
+                    router.submit(GenRequest { class: (n % 8) as i32, n })
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            for (_, rx) in rxs {
+                rx.recv()??;
+            }
+        }
+    }
+    Ok(router.shutdown())
+}
+
+/// Ladder-vs-fixed comparison on a mock backend (no artifacts needed):
+/// padded-slot waste and p95 latency at trickle / steady / burst load.
+fn adaptive_batching_bench() -> anyhow::Result<()> {
+    println!(
+        "\nadaptive batching (mock backend, 1 ms/slot, linger 2 ms): \
+         ladder [1,2,4,8,16] vs fixed [16]"
+    );
+    let linger = Duration::from_millis(2);
+    let ladder = vec![1usize, 2, 4, 8, 16];
+    let fixed = vec![16usize];
+    for scenario in ["trickle", "steady", "burst"] {
+        let mut padded = Vec::new();
+        for (label, rungs) in
+            [("fixed ", fixed.clone()), ("ladder", ladder.clone())]
+        {
+            let stats = drive_scenario(rungs, linger, scenario)?;
+            println!(
+                "  {scenario:<8} {label}: {:>3} batches  {:>4} images  \
+                 {:>4} padded  fill {:>3.0}%  p50 {:.3}s  p95 {:.3}s",
+                stats.batches, stats.images, stats.padded_slots,
+                stats.batch_fill * 100.0, stats.latency_p50_s,
+                stats.latency_p95_s
+            );
+            for r in &stats.rungs {
+                println!(
+                    "           rung {:>3}: {:>3} batches  {:>4} images  \
+                     {:>4} padded  fill {:>3.0}%",
+                    r.rung, r.batches, r.images, r.padded_slots,
+                    r.fill() * 100.0
+                );
+            }
+            padded.push(stats.padded_slots);
+        }
+        if scenario == "trickle" {
+            // the regression gate behind the whole feature: trickle
+            // traffic on the ladder must waste strictly fewer slots
+            anyhow::ensure!(
+                padded[1] < padded[0],
+                "trickle: ladder padded {} >= fixed padded {}",
+                padded[1], padded[0]
+            );
+            println!(
+                "  trickle padded slots: fixed {} -> ladder {}",
+                padded[0], padded[1]
+            );
+        }
+    }
     Ok(())
 }

@@ -283,13 +283,26 @@ impl Pipeline {
         Ok((qc, cost, if consulted { Some(false) } else { None }))
     }
 
-    /// Build a sampler for an already-calibrated config. This is the
-    /// second half of the calibrate/serve split: serve workers calibrate
-    /// *once*, clone the resulting [`QuantConfig`] across threads, and
-    /// each builds its own sampler here without re-running calibration.
+    /// Build a sampler for an already-calibrated config at the largest
+    /// lowered batch rung. This is the second half of the
+    /// calibrate/serve split: serve workers calibrate *once*, clone the
+    /// resulting [`QuantConfig`] across threads, and each builds its
+    /// own sampler here without re-running calibration.
     pub fn sampler(&self, qc: &QuantConfig) -> Result<Sampler<'_>> {
         Sampler::new(&self.rt, &self.weights, qc.clone(),
                      self.cfg.timesteps)
+    }
+
+    /// Build one sampler per lowered batch rung (optionally restricted
+    /// to `rungs`), sharing a single resident upload of the quantized
+    /// weights. Serve workers hold the whole ladder so the router's
+    /// batch policy can dispatch trickle traffic on small rungs and
+    /// bursts on the full batch.
+    pub fn sampler_ladder(&self, qc: &QuantConfig,
+                          rungs: Option<&[usize]>)
+                          -> Result<Vec<Sampler<'_>>> {
+        Sampler::ladder(&self.rt, &self.weights, qc, self.cfg.timesteps,
+                        rungs)
     }
 
     /// Sample `n` images under `qc` and score FID/sFID/IS.

@@ -163,7 +163,8 @@ mod tests {
                 },
             ],
             qp_len: 12,
-            batches: Batches { calib: 1, sample: 1, train: 1, feat: 1 },
+            batches: Batches { calib: 1, sample: vec![1], train: 1,
+                               feat: 1 },
             capture_outputs: vec![],
             feat_dim: 1,
             spat_dim: 1,

@@ -24,7 +24,8 @@
 //! * [`coordinator`] — Algorithm 1 phases 1–3, baselines, pipelines.
 //! * [`sampler`] — ancestral DDPM sampling loop (TGQ-aware).
 //! * [`serve`] — sharded generation service: dynamic batcher + a
-//!   multi-worker router with typed error propagation.
+//!   deadline-aware batch-ladder policy + a multi-worker router with
+//!   typed error propagation.
 //! * [`metrics`] — FID / sFID / Inception Score, image writers.
 //! * [`data`] — synthetic dataset (mirror of `python/compile/data.py`).
 

@@ -15,6 +15,7 @@
 //!   --groups G --calib-per-group N --rounds R --candidates C
 //!   --eval-images N --seed S --ho BOOL --mrq BOOL --tgq BOOL
 //!   --calib-cache DIR --no-calib-cache
+//!   --batch-ladder A,B,C --linger-ms N (serve batch policy)
 //!   --config FILE (TOML-subset, overridden by CLI flags)
 
 use anyhow::{bail, Result};
@@ -88,6 +89,10 @@ FLAGS (all subcommands)
   --calib-cache DIR     persistent calibration cache (serve/sample/
                         report skip recalibration)   [calib-cache]
   --no-calib-cache      disable calibration-cache load and store
+  --batch-ladder A,B,C  serve: restrict workers to these lowered batch
+                        rungs                   [all manifest rungs]
+  --linger-ms N         serve: deadline before a partial batch rung
+                        dispatches padded       [0 = immediately]
   --seed S --verbose --config FILE
 ";
 

@@ -67,12 +67,24 @@ pub struct LayerMeta {
 }
 
 /// Fixed batch sizes the artifacts were lowered with.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct Batches {
     pub calib: usize,
-    pub sample: usize,
+    /// Batch ladder for the sampling graphs: every batch dim the
+    /// sample/quant artifacts were lowered at, sorted ascending and
+    /// deduped. A scalar `batches.sample` (the pre-ladder manifest
+    /// format) parses as a one-rung ladder.
+    pub sample: Vec<usize>,
     pub train: usize,
     pub feat: usize,
+}
+
+impl Batches {
+    /// Largest lowered sampling batch — the classic single batch dim,
+    /// and the rung the unsuffixed sample artifacts are lowered at.
+    pub fn sample_max(&self) -> usize {
+        *self.sample.last().expect("ladder validated non-empty")
+    }
 }
 
 /// Parsed manifest + artifact directory handle.
@@ -154,7 +166,8 @@ impl Manifest {
         let b = req(j, "", "batches")?;
         let batches = Batches {
             calib: req_usize(b, "batches.", "calib")?,
-            sample: req_usize(b, "batches.", "sample")?,
+            sample: parse_ladder(req(b, "batches.", "sample")?,
+                                 "batches.sample")?,
             train: req_usize(b, "batches.", "train")?,
             feat: req_usize(b, "batches.", "feat")?,
         };
@@ -243,6 +256,34 @@ impl Manifest {
         let feat = self.feat_params.iter().map(|(_, s)| take(s)).collect();
         let clf = self.clf_params.iter().map(|(_, s)| take(s)).collect();
         Ok((feat, clf))
+    }
+
+    /// Logical artifact name for the sampling graph `base`
+    /// (`"dit_fp_sample"` or `"dit_quant"`) lowered at batch dim
+    /// `rung`. The largest rung keeps the unsuffixed name (the
+    /// pre-ladder convention, so scalar manifests resolve unchanged);
+    /// every smaller rung is `{base}@b{rung}` and must be present in
+    /// the artifacts map.
+    pub fn sample_artifact(&self, base: &str, rung: usize)
+                           -> Result<String> {
+        if !self.batches.sample.contains(&rung) {
+            bail!(
+                "batch {rung} is not a lowered sample rung (manifest \
+                 `batches.sample` ladder is {:?})",
+                self.batches.sample
+            );
+        }
+        if rung == self.batches.sample_max() {
+            return Ok(base.to_string());
+        }
+        let name = format!("{base}@b{rung}");
+        if !self.artifacts.contains_key(&name) {
+            bail!(
+                "artifact `{name}` (batch-{rung} lowering of `{base}`) \
+                 is missing from the manifest artifacts map"
+            );
+        }
+        Ok(name)
     }
 
     /// Absolute path of a logical artifact.
@@ -336,6 +377,13 @@ mod tests {
                                   ("b".to_string(), vec![3])]);
         assert_eq!(m.qp_len, 12);
         assert_eq!(m.batches.feat, 16);
+        // scalar `batches.sample` parses as a one-rung ladder whose only
+        // rung resolves to the unsuffixed artifact names
+        assert_eq!(m.batches.sample, vec![4]);
+        assert_eq!(m.batches.sample_max(), 4);
+        assert_eq!(m.sample_artifact("dit_fp_sample", 4).unwrap(),
+                   "dit_fp_sample");
+        assert!(m.sample_artifact("dit_fp_sample", 2).is_err());
         assert_eq!(m.feat_params.len(), 1);
         assert_eq!(m.clf_params[0].1, vec![4, 2]);
         assert!((m.classifier_acc - 0.875).abs() < 1e-12);
@@ -367,6 +415,55 @@ mod tests {
             .unwrap();
         assert!(m.load_metric_weights().is_err());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn ladder_manifest_parses_sorted_and_resolves_per_rung() {
+        let dir = std::env::temp_dir().join(format!(
+            "tqdit_manifest_ladder_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let text = TOY
+            .replace("\"sample\": 4", "\"sample\": [4, 1, 2, 2]")
+            .replace(
+                "\"dit_fp_sample\": \"dit_fp_sample.hlo.txt\"",
+                "\"dit_fp_sample\": \"dit_fp_sample.hlo.txt\",
+                 \"dit_fp_sample@b1\": \"dit_fp_sample@b1.hlo.txt\",
+                 \"dit_fp_sample@b2\": \"dit_fp_sample@b2.hlo.txt\"",
+            );
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        // sorted ascending, deduped
+        assert_eq!(m.batches.sample, vec![1, 2, 4]);
+        assert_eq!(m.batches.sample_max(), 4);
+        // largest rung keeps the unsuffixed name; smaller rungs resolve
+        // to their @b names from the artifacts map
+        assert_eq!(m.sample_artifact("dit_fp_sample", 4).unwrap(),
+                   "dit_fp_sample");
+        assert_eq!(m.sample_artifact("dit_fp_sample", 1).unwrap(),
+                   "dit_fp_sample@b1");
+        assert_eq!(m.sample_artifact("dit_fp_sample", 2).unwrap(),
+                   "dit_fp_sample@b2");
+        // a rung outside the ladder is a typed error naming the ladder
+        let e = format!("{:#}",
+                        m.sample_artifact("dit_fp_sample", 8).unwrap_err());
+        assert!(e.contains("[1, 2, 4]"), "{e}");
+        // a lowered rung whose artifact entry is missing names the key
+        let e = format!("{:#}",
+                        m.sample_artifact("dit_quant", 2).unwrap_err());
+        assert!(e.contains("dit_quant@b2"), "{e}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn malformed_ladders_error_with_key() {
+        for (tag, bad) in [("empty", "\"sample\": []"),
+                           ("zero", "\"sample\": [0, 4]"),
+                           ("strrung", "\"sample\": [4, \"x\"]"),
+                           ("type", "\"sample\": true")] {
+            let e = load_error(&format!("ladder_{tag}"), "\"sample\": 4",
+                               bad);
+            assert!(e.contains("batches.sample"), "{tag}: {e}");
+        }
     }
 
     #[test]
@@ -459,6 +556,35 @@ fn req_str<'a>(j: &'a Json, ctx: &str, key: &str) -> Result<&'a str> {
     req(j, ctx, key)?.as_str().ok_or_else(|| {
         anyhow::anyhow!("key `{ctx}{key}`: expected a string")
     })
+}
+
+/// Parse a batch ladder: either a positive integer (one-rung ladder,
+/// the pre-ladder manifest format) or a non-empty array of positive
+/// integers. Returned sorted ascending and deduped.
+fn parse_ladder(j: &Json, key: &str) -> Result<Vec<usize>> {
+    let mut rungs: Vec<usize> = if let Some(n) = j.as_exact_usize() {
+        vec![n]
+    } else if let Some(arr) = j.as_arr() {
+        arr.iter()
+            .enumerate()
+            .map(|(i, v)| {
+                v.as_exact_usize().with_context(|| {
+                    format!("key `{key}[{i}]`: expected an integer")
+                })
+            })
+            .collect::<Result<Vec<_>>>()?
+    } else {
+        bail!("key `{key}`: expected an integer or an integer array");
+    };
+    if rungs.is_empty() {
+        bail!("key `{key}`: batch ladder needs at least one rung");
+    }
+    if rungs.contains(&0) {
+        bail!("key `{key}`: batch ladder rungs must be positive");
+    }
+    rungs.sort_unstable();
+    rungs.dedup();
+    Ok(rungs)
 }
 
 fn req_shape(j: &Json, ctx: &str, key: &str) -> Result<Vec<usize>> {

@@ -73,6 +73,16 @@ impl Runtime {
         Ok(rc)
     }
 
+    /// Compile (or fetch) the executable for the sampling graph `base`
+    /// lowered at batch dim `rung`, resolving the per-rung artifact
+    /// name (`{base}@b{rung}`, unsuffixed for the largest rung) through
+    /// the manifest's batch ladder.
+    pub fn executable_for_rung(&self, base: &str, rung: usize)
+                               -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        let name = self.manifest.sample_artifact(base, rung)?;
+        self.executable(&name)
+    }
+
     /// Execute with literal inputs; outputs as host tensors (the
     /// artifact returns one tuple — we decompose it).
     pub fn run(&self, name: &str, inputs: &[xla::Literal])

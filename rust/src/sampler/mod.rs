@@ -6,11 +6,20 @@
 //! TGQ configs swap the packed qparams vector whenever the trajectory
 //! crosses a time-group boundary (the vectors are precomputed).
 //!
+//! One sampler drives one *rung* of the manifest's batch ladder — the
+//! batch dim its artifact was lowered with. [`Sampler::new`] builds the
+//! largest rung (the classic full batch); [`Sampler::ladder`] builds
+//! every lowered rung at once, sharing a single resident upload of the
+//! quantized weights across the rungs so a multi-rung serve worker
+//! costs no more device memory than a fixed-batch one.
+//!
 //! PTQD configs additionally apply the noise correction: the correlated
 //! part of the quantization error is divided out of ε̂ and the residual
 //! variance is removed from the ancestral σ².
 
-use anyhow::Result;
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
 
 use crate::coordinator::QuantConfig;
 use crate::model::WeightStore;
@@ -28,34 +37,112 @@ pub struct SampleStats {
     pub host_s: f64,
 }
 
-/// A compiled-and-resident sampling context for one [`QuantConfig`].
+/// A compiled-and-resident sampling context for one [`QuantConfig`] at
+/// one batch-ladder rung.
 pub struct Sampler<'a> {
     rt: &'a Runtime,
     pub sched: DdpmSchedule,
     qc: QuantConfig,
-    /// Weight buffers (fake-quantized) resident on device.
-    wbufs: Vec<xla::PjRtBuffer>,
+    /// Weight buffers (fake-quantized) resident on device — shared
+    /// across the rungs of a ladder.
+    wbufs: Rc<Vec<xla::PjRtBuffer>>,
     /// Precomputed per-group qparams vectors (empty for the FP path).
     qvecs: Vec<Tensor>,
-    /// Artifact name for the forward pass.
-    artifact: &'static str,
+    /// Resolved artifact name for this rung's forward pass.
+    artifact: String,
     img_len: usize,
     batch: usize,
 }
 
 impl<'a> Sampler<'a> {
-    /// Build from a calibrated config; `weights` are the FP weights (the
-    /// sampler applies the config's weight fake-quantization itself).
+    /// Build from a calibrated config at the *largest* lowered rung
+    /// (the classic full artifact batch); `weights` are the FP weights
+    /// (the sampler applies the config's weight fake-quantization
+    /// itself). See [`Self::for_batch`] / [`Self::ladder`] for the
+    /// smaller rungs.
     pub fn new(rt: &'a Runtime, weights: &WeightStore, qc: QuantConfig,
                timesteps: usize) -> Result<Sampler<'a>> {
+        let rung = rt.manifest.batches.sample_max();
+        Sampler::for_batch(rt, weights, qc, timesteps, rung)
+    }
+
+    /// Build for one specific ladder rung, quantizing + uploading the
+    /// weights for this sampler alone.
+    pub fn for_batch(rt: &'a Runtime, weights: &WeightStore,
+                     qc: QuantConfig, timesteps: usize, batch: usize)
+                     -> Result<Sampler<'a>> {
+        let wbufs = Rc::new(Sampler::upload_weights(rt, weights, &qc)?);
+        Sampler::with_shared(rt, wbufs, qc, timesteps, batch)
+    }
+
+    /// Build a sampler per lowered rung (ascending), sharing one
+    /// resident upload of the quantized weights across all of them.
+    /// `restrict` narrows serving to a subset of the lowered rungs; a
+    /// requested rung the artifacts were never lowered at is a typed
+    /// error naming the manifest ladder.
+    pub fn ladder(rt: &'a Runtime, weights: &WeightStore,
+                  qc: &QuantConfig, timesteps: usize,
+                  restrict: Option<&[usize]>)
+                  -> Result<Vec<Sampler<'a>>> {
+        let lowered = &rt.manifest.batches.sample;
+        let rungs: Vec<usize> = match restrict {
+            None => lowered.clone(),
+            Some(want) => {
+                let mut v = want.to_vec();
+                v.sort_unstable();
+                v.dedup();
+                if v.is_empty() {
+                    bail!("batch ladder restriction is empty");
+                }
+                for r in &v {
+                    if !lowered.contains(r) {
+                        bail!(
+                            "batch rung {r} was not lowered (manifest \
+                             `batches.sample` ladder is {lowered:?})"
+                        );
+                    }
+                }
+                v
+            }
+        };
+        let wbufs = Rc::new(Sampler::upload_weights(rt, weights, qc)?);
+        rungs
+            .into_iter()
+            .map(|b| {
+                Sampler::with_shared(rt, Rc::clone(&wbufs), qc.clone(),
+                                     timesteps, b)
+            })
+            .collect()
+    }
+
+    /// Fake-quantize (non-FP) and upload the weights once.
+    fn upload_weights(rt: &Runtime, weights: &WeightStore,
+                      qc: &QuantConfig) -> Result<Vec<xla::PjRtBuffer>> {
+        let ws = if qc.method == "fp" {
+            weights.clone()
+        } else {
+            weights.fakequant(&qc.weights)
+        };
+        rt.upload_all(&ws.tensors)
+    }
+
+    /// Assemble a rung around already-resident weight buffers.
+    fn with_shared(rt: &'a Runtime, wbufs: Rc<Vec<xla::PjRtBuffer>>,
+                   qc: QuantConfig, timesteps: usize, batch: usize)
+                   -> Result<Sampler<'a>> {
         let m = &rt.manifest;
         let d = &m.diffusion;
         let sched = DdpmSchedule::new(d.train_steps, d.beta_start, d.beta_end,
                                       timesteps);
         let fp = qc.method == "fp";
-        let artifact = if fp { "dit_fp_sample" } else { "dit_quant" };
-        let ws = if fp { weights.clone() } else { weights.fakequant(&qc.weights) };
-        let wbufs = rt.upload_all(&ws.tensors)?;
+        let base = if fp { "dit_fp_sample" } else { "dit_quant" };
+        let artifact = m.sample_artifact(base, batch)?;
+        // compile this rung's executable now rather than on the first
+        // dispatch: a serve worker pays compilation before it marks
+        // itself ready, and a missing/corrupt rung artifact surfaces
+        // here as a typed construction error instead of failing the
+        // first client batch
+        rt.executable_for_rung(base, batch)?;
         let qvecs: Vec<Tensor> = if fp {
             Vec::new()
         } else {
@@ -72,11 +159,11 @@ impl<'a> Sampler<'a> {
             qvecs,
             artifact,
             img_len: m.model.img_size * m.model.img_size * m.model.channels,
-            batch: m.batches.sample,
+            batch,
         })
     }
 
-    /// Fixed batch size the artifact was lowered with.
+    /// Batch size this rung's artifact was lowered with.
     pub fn batch(&self) -> usize {
         self.batch
     }
@@ -130,7 +217,7 @@ impl<'a> Sampler<'a> {
             if let Some(q) = &qpb {
                 inputs.push(q);
             }
-            let outs = self.rt.run_buffers(self.artifact, &inputs)?;
+            let outs = self.rt.run_buffers(&self.artifact, &inputs)?;
             stats.exec_s += t_exec.elapsed().as_secs_f64();
             let mut eps_hat = outs[0].data.clone();
 

@@ -1,9 +1,12 @@
 //! Dynamic batcher: expands generation requests into per-image slots
-//! and packs fixed-size batches FIFO (the sampling artifacts are
-//! lowered with a fixed batch dimension, so the batcher's job is to
-//! keep those slots full under mixed request sizes).
+//! and hands them out FIFO. The batcher is a pure queue — *which* rung
+//! of the lowered batch ladder a pop targets, and whether to linger
+//! for more fill first, is decided by [`crate::serve::policy`]; the
+//! batcher only tracks slots, their arrival times (for the linger
+//! deadline), and conservation counters.
 
 use std::collections::VecDeque;
+use std::time::{Duration, Instant};
 
 /// One image's worth of pending work.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -16,12 +19,22 @@ pub struct Slot {
     pub index: usize,
 }
 
-/// FIFO slot queue with fixed-batch packing.
+/// Lifetime slot-flow counters. Conservation invariant:
+/// `enqueued == dispatched + purged + pending` at every quiescent
+/// point (pending being the live queue length).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BatcherCounters {
+    pub enqueued: u64,
+    pub dispatched: u64,
+    /// Slots removed without dispatch (`drop_request` / `clear`).
+    pub purged: u64,
+}
+
+/// FIFO slot queue with arrival-time tracking.
 #[derive(Debug, Default)]
 pub struct Batcher {
-    queue: VecDeque<Slot>,
-    enqueued: u64,
-    dispatched: u64,
+    queue: VecDeque<(Slot, Instant)>,
+    counters: BatcherCounters,
 }
 
 impl Batcher {
@@ -31,9 +44,16 @@ impl Batcher {
 
     /// Expand a request for `n` images of `class` into slots.
     pub fn push_request(&mut self, req_id: u64, class: i32, n: usize) {
+        self.push_request_at(req_id, class, n, Instant::now());
+    }
+
+    /// [`Self::push_request`] with an explicit arrival instant (tests
+    /// drive the linger deadline with a mock clock, no sleeps).
+    pub fn push_request_at(&mut self, req_id: u64, class: i32, n: usize,
+                           at: Instant) {
         for index in 0..n {
-            self.queue.push_back(Slot { req_id, class, index });
-            self.enqueued += 1;
+            self.queue.push_back((Slot { req_id, class, index }, at));
+            self.counters.enqueued += 1;
         }
     }
 
@@ -46,32 +66,46 @@ impl Batcher {
         self.queue.is_empty()
     }
 
-    /// Take up to `max_batch` slots FIFO. Returns an empty vec when idle.
-    pub fn pop_batch(&mut self, max_batch: usize) -> Vec<Slot> {
-        let take = self.queue.len().min(max_batch);
-        let batch: Vec<Slot> = self.queue.drain(..take).collect();
-        self.dispatched += batch.len() as u64;
+    /// How long the oldest queued slot has been waiting as of `now`
+    /// (`None` when idle; saturates to zero if `now` races behind the
+    /// arrival stamp).
+    pub fn oldest_wait(&self, now: Instant) -> Option<Duration> {
+        self.queue
+            .front()
+            .map(|(_, at)| now.saturating_duration_since(*at))
+    }
+
+    /// Take up to `n` slots FIFO (the policy's `take`). Returns an
+    /// empty vec when idle.
+    pub fn take(&mut self, n: usize) -> Vec<Slot> {
+        let take = self.queue.len().min(n);
+        let batch: Vec<Slot> =
+            self.queue.drain(..take).map(|(s, _)| s).collect();
+        self.counters.dispatched += batch.len() as u64;
         batch
     }
 
-    /// (enqueued, dispatched) lifetime counters.
-    pub fn counters(&self) -> (u64, u64) {
-        (self.enqueued, self.dispatched)
+    /// Lifetime flow counters (see [`BatcherCounters`]).
+    pub fn counters(&self) -> BatcherCounters {
+        self.counters
     }
 
     /// Remove every queued slot belonging to `req_id` (the request
     /// failed elsewhere); returns how many slots were purged. Purged
-    /// slots count as neither enqueued-anew nor dispatched.
+    /// slots count toward `counters().purged`, keeping conservation.
     pub fn drop_request(&mut self, req_id: u64) -> usize {
         let before = self.queue.len();
-        self.queue.retain(|s| s.req_id != req_id);
-        before - self.queue.len()
+        self.queue.retain(|(s, _)| s.req_id != req_id);
+        let purged = before - self.queue.len();
+        self.counters.purged += purged as u64;
+        purged
     }
 
     /// Drop all queued slots (service aborting); returns the count.
     pub fn clear(&mut self) -> usize {
         let n = self.queue.len();
         self.queue.clear();
+        self.counters.purged += n as u64;
         n
     }
 }
@@ -86,7 +120,7 @@ mod tests {
         let mut b = Batcher::new();
         b.push_request(1, 3, 2);
         b.push_request(2, 5, 1);
-        let batch = b.pop_batch(8);
+        let batch = b.take(8);
         assert_eq!(
             batch,
             vec![
@@ -102,22 +136,42 @@ mod tests {
     fn splits_large_request_across_batches() {
         let mut b = Batcher::new();
         b.push_request(7, 0, 10);
-        let b1 = b.pop_batch(4);
-        let b2 = b.pop_batch(4);
-        let b3 = b.pop_batch(4);
+        let b1 = b.take(4);
+        let b2 = b.take(4);
+        let b3 = b.take(4);
         assert_eq!((b1.len(), b2.len(), b3.len()), (4, 4, 2));
         assert_eq!(b1[0].index, 0);
         assert_eq!(b3[1].index, 9);
-        assert!(b.pop_batch(4).is_empty());
+        assert!(b.take(4).is_empty());
     }
 
     #[test]
     fn counters_track_flow() {
         let mut b = Batcher::new();
         b.push_request(1, 0, 5);
-        b.pop_batch(3);
-        assert_eq!(b.counters(), (5, 3));
+        b.take(3);
+        assert_eq!(
+            b.counters(),
+            BatcherCounters { enqueued: 5, dispatched: 3, purged: 0 }
+        );
         assert_eq!(b.pending(), 2);
+    }
+
+    #[test]
+    fn oldest_wait_tracks_the_head_slot() {
+        let t0 = Instant::now();
+        let mut b = Batcher::new();
+        assert_eq!(b.oldest_wait(t0), None);
+        b.push_request_at(1, 0, 2, t0);
+        b.push_request_at(2, 0, 1, t0 + Duration::from_millis(40));
+        let now = t0 + Duration::from_millis(100);
+        assert_eq!(b.oldest_wait(now), Some(Duration::from_millis(100)));
+        b.take(2); // head is now the younger request
+        assert_eq!(b.oldest_wait(now), Some(Duration::from_millis(60)));
+        // a `now` racing behind the arrival stamp saturates to zero
+        assert_eq!(b.oldest_wait(t0), Some(Duration::ZERO));
+        b.take(1);
+        assert_eq!(b.oldest_wait(now), None);
     }
 
     #[test]
@@ -128,19 +182,27 @@ mod tests {
         b.push_request(3, 7, 3);
         assert_eq!(b.drop_request(2), 2);
         assert_eq!(b.pending(), 7);
-        let rest = b.pop_batch(16);
+        let rest = b.take(16);
         assert!(rest.iter().all(|s| s.req_id != 2));
         assert_eq!(rest.len(), 7);
         assert_eq!(b.drop_request(99), 0);
+        assert_eq!(
+            b.counters(),
+            BatcherCounters { enqueued: 9, dispatched: 7, purged: 2 }
+        );
     }
 
     #[test]
-    fn clear_empties_the_queue() {
+    fn clear_empties_the_queue_and_counts_purged() {
         let mut b = Batcher::new();
         b.push_request(1, 0, 5);
         assert_eq!(b.clear(), 5);
         assert!(b.is_empty());
-        assert!(b.pop_batch(4).is_empty());
+        assert!(b.take(4).is_empty());
+        assert_eq!(
+            b.counters(),
+            BatcherCounters { enqueued: 5, dispatched: 0, purged: 5 }
+        );
     }
 
     #[test]
@@ -157,7 +219,7 @@ mod tests {
             let cap = g.usize_in(1, 16);
             let mut seen = Vec::new();
             loop {
-                let batch = b.pop_batch(cap);
+                let batch = b.take(cap);
                 if batch.is_empty() {
                     break;
                 }
@@ -176,6 +238,47 @@ mod tests {
     }
 
     #[test]
+    fn prop_counters_conserve_through_purges() {
+        // the PR-3 accounting fix: slots purged by drop_request/clear
+        // no longer leave `enqueued` permanently ahead — at every
+        // quiescent point enqueued == dispatched + purged + pending
+        check("batcher counter conservation", 300, |g: &mut Gen| {
+            let mut b = Batcher::new();
+            let mut next_req = 0u64;
+            for _ in 0..g.usize_in(1, 40) {
+                match g.usize_in(0, 3) {
+                    0 => {
+                        b.push_request(next_req, 0, g.usize_in(0, 10));
+                        next_req += 1;
+                    }
+                    1 => {
+                        b.take(g.usize_in(1, 8));
+                    }
+                    2 => {
+                        // sometimes a live request, sometimes a miss
+                        let id = g.usize_in(0, (next_req as usize).max(1))
+                            as u64;
+                        b.drop_request(id);
+                    }
+                    _ => {
+                        if g.usize_in(0, 9) == 0 {
+                            b.clear();
+                        }
+                    }
+                }
+                let c = b.counters();
+                assert_eq!(
+                    c.enqueued,
+                    c.dispatched + c.purged + b.pending() as u64,
+                    "conservation broke: {c:?} pending {}",
+                    b.pending()
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn prop_fifo_never_starves() {
         check("older requests always dispatch first", 100, |g: &mut Gen| {
             let mut b = Batcher::new();
@@ -184,7 +287,7 @@ mod tests {
             }
             let mut last_req = 0u64;
             while !b.is_empty() {
-                for s in b.pop_batch(g.usize_in(1, 4)) {
+                for s in b.take(g.usize_in(1, 4)) {
                     assert!(s.req_id >= last_req);
                     last_req = s.req_id;
                 }

@@ -1,5 +1,38 @@
 //! Sharded generation service: request queue + dynamic batcher + a
-//! router that fans batches out to N sampler-owning worker threads.
+//! deadline-aware batch policy + a router that fans rung-sized batches
+//! out to N sampler-owning worker threads.
+//!
+//! # Architecture (batcher → policy → router → worker)
+//!
+//! ```text
+//! clients ──submit──▶ Batcher (FIFO slots, arrival times, counters)
+//!                        │
+//!            BatchPolicy.plan(ladder, pending, oldest_wait, draining)
+//!                        │            │
+//!                 Dispatch{rung,take} Wait{remaining}
+//!                        │            └─ park on condvar ≤ remaining
+//!                        ▼
+//!        worker: pad take→rung, generate on the rung's executable,
+//!                deliver (per-rung stats) or fail (typed errors)
+//! ```
+//!
+//! * **[`Batcher`]** is a pure FIFO of per-image slots. It knows
+//!   nothing about batch sizes; it tracks arrival times (for the
+//!   linger deadline) and conservation counters
+//!   (`enqueued == dispatched + purged + pending`).
+//! * **[`policy`]** owns the *batch ladder*: the sampling artifacts are
+//!   lowered at several batch dims (`Manifest::batches.sample`), and
+//!   [`BatchPolicy`] decides per dispatch whether to run now — on the
+//!   smallest rung covering the queue, never padding when an exact
+//!   rung fits — or linger up to a deadline for more fill. A one-rung
+//!   ladder with zero linger reproduces the classic fixed-batch
+//!   behavior exactly.
+//! * **[`router`]** runs the worker threads. Every idle worker locks
+//!   the shared state, consults the policy, and either pops its batch
+//!   (work-stealing: whichever worker is free takes the oldest work)
+//!   or parks on the condvar with the linger deadline as timeout.
+//!   Per-rung batch/padding/latency accounting lands in
+//!   [`WorkerStats`]/[`ServerStats`].
 //!
 //! # Threading model
 //!
@@ -13,11 +46,10 @@
 //!   typed [`ServeError`]s (shutdown, backpressure, dead service)
 //!   rather than panicking.
 //! * **Workers** are long-lived threads that each build their own
-//!   pipeline + sampler *inside* the thread ([`router::WorkerBody`]),
-//!   then loop: lock the shared state, pop the oldest batch from the
-//!   FIFO [`Batcher`], unlock, generate, re-lock and route results back
-//!   to the waiting clients. Whichever worker is idle takes the next
-//!   batch (work-stealing), so one slow shard never stalls the queue.
+//!   pipeline + sampler *ladder* inside the thread
+//!   ([`router::WorkerBody`]) — one sampler per served rung, all
+//!   sharing a single resident upload of the quantized weights — then
+//!   loop on the policy-driven dispatch above.
 //! * **Calibration** runs once, not per worker: the first pipeline to
 //!   come up resolves the `QuantConfig` — loading it from the
 //!   persistent calibration cache when warm, calibrating (and
@@ -25,22 +57,29 @@
 //!   the shared qparams (see [`server`] and
 //!   [`crate::coordinator::cache`]).
 //!
+//! # Failure propagation
+//!
 //! Worker failures propagate as [`ServeError`]s on the affected
 //! clients' channels — no hangs, no process panics — and the service
-//! keeps serving on the surviving workers. The [`batcher`] itself is a
-//! pure data structure (unit- and property-tested without a runtime):
-//! it splits requests into image slots, fills fixed-size artifact
-//! batches FIFO, and never starves a request.
+//! keeps serving on the surviving workers. An invalid backend ladder
+//! fails the worker at init (before it marks ready); a worker dying
+//! mid-rung fails exactly the requests with slots in that batch and
+//! purges their queued remainder. When the last worker exits, every
+//! queued client receives a typed `AllWorkersDead` with the first
+//! recorded cause. The [`batcher`] and [`policy`] are pure data
+//! structures (unit- and property-tested without a runtime).
 
 pub mod batcher;
 pub mod error;
+pub mod policy;
 pub mod router;
 pub mod server;
 
-pub use batcher::{Batcher, Slot};
+pub use batcher::{Batcher, BatcherCounters, Slot};
 pub use error::ServeError;
+pub use policy::{BatchPlan, BatchPolicy, Ladder};
 pub use router::{
     GenBackend, GenRequest, GenResponse, GenResult, Router, RouterOpts,
-    ServerStats, WorkerBody, WorkerHandle, WorkerStats,
+    RungStats, ServerStats, WorkerBody, WorkerHandle, WorkerStats,
 };
 pub use server::GenServer;

@@ -1,0 +1,285 @@
+//! Deadline-aware batch planning over a ladder of lowered batch dims.
+//!
+//! The sampling artifacts are lowered at a *ladder* of batch sizes
+//! (`Manifest::batches.sample`); the policy decides, for the current
+//! queue, whether to dispatch now — and on which rung — or hold for
+//! more fill. The rule:
+//!
+//! * queue ≥ largest rung → dispatch the largest rung, full (a burst
+//!   always fills the big batch);
+//! * queue exactly matches a rung → dispatch it now, zero padding
+//!   (trickle traffic rides the small rungs at low latency);
+//! * otherwise hold until the oldest queued slot has lingered past the
+//!   configured deadline, then dispatch the *whole* queue on the
+//!   smallest rung that covers it, padding the shortfall. One covering
+//!   dispatch is chosen over decomposing the queue into exact smaller
+//!   rungs: per-dispatch overhead (buffer uploads, lock round-trips)
+//!   is paid once, and padding never exceeds what the fixed-batch
+//!   dispatcher would burn for the same queue (property-tested below).
+//!
+//! With a one-rung ladder and a zero linger this degenerates to the
+//! classic fixed-batch `pop_batch(max_batch)` behavior, which keeps
+//! scalar-manifest deployments byte-identical.
+//!
+//! The policy is a pure function of (ladder, queue depth, oldest wait,
+//! draining) — no clocks, no locks — so every property below is tested
+//! deterministically, with durations as plain values.
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+/// Validated batch ladder: the batch dims a backend can execute,
+/// sorted ascending and deduped, never empty.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Ladder {
+    rungs: Vec<usize>,
+}
+
+impl Ladder {
+    pub fn new(mut rungs: Vec<usize>) -> Result<Ladder> {
+        rungs.sort_unstable();
+        rungs.dedup();
+        if rungs.is_empty() {
+            bail!("batch ladder must have at least one rung");
+        }
+        if rungs[0] == 0 {
+            bail!("batch ladder rungs must be positive");
+        }
+        Ok(Ladder { rungs })
+    }
+
+    /// Ascending rung sizes.
+    pub fn rungs(&self) -> &[usize] {
+        &self.rungs
+    }
+
+    /// Largest rung (the classic full artifact batch).
+    pub fn max(&self) -> usize {
+        *self.rungs.last().unwrap()
+    }
+
+    /// Smallest rung that covers `n` slots, or the largest rung when
+    /// none does (`n` then spans several dispatches).
+    pub fn rung_for(&self, n: usize) -> usize {
+        *self
+            .rungs
+            .iter()
+            .find(|&&r| r >= n)
+            .unwrap_or_else(|| self.rungs.last().unwrap())
+    }
+
+    /// Whether some rung holds exactly `n` slots (zero padding).
+    pub fn has_exact(&self, n: usize) -> bool {
+        self.rungs.binary_search(&n).is_ok()
+    }
+}
+
+/// What the policy decided for the head of the queue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchPlan {
+    /// Pop `take` slots now and run them on a `rung`-slot artifact
+    /// (padding `rung - take` slots, zero unless the deadline forced a
+    /// partial rung).
+    Dispatch { rung: usize, take: usize },
+    /// Hold for more fill; re-consult the policy once `remaining` has
+    /// elapsed (the oldest slot's linger deadline) or new work arrives.
+    Wait { remaining: Duration },
+}
+
+/// Dispatch policy: how long a partially-filled rung may wait for more
+/// slots before it is dispatched padded.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BatchPolicy {
+    /// Linger deadline. Zero means dispatch immediately (the classic
+    /// greedy batcher).
+    pub linger: Duration,
+}
+
+impl BatchPolicy {
+    pub fn new(linger: Duration) -> BatchPolicy {
+        BatchPolicy { linger }
+    }
+
+    /// Decide for a non-empty queue. `pending` is the queued slot
+    /// count, `oldest_wait` how long the head slot has been queued, and
+    /// `draining` disables lingering (shutdown: flush everything now).
+    pub fn plan(&self, ladder: &Ladder, pending: usize,
+                oldest_wait: Duration, draining: bool) -> BatchPlan {
+        debug_assert!(pending > 0, "plan() needs a non-empty queue");
+        let max = ladder.max();
+        if pending >= max {
+            // a full largest rung never waits and never pads
+            return BatchPlan::Dispatch { rung: max, take: max };
+        }
+        if ladder.has_exact(pending) {
+            // an exact fit pads nothing; waiting could only grow the
+            // queue into a padded bigger rung, so go now
+            return BatchPlan::Dispatch { rung: pending, take: pending };
+        }
+        if draining || oldest_wait >= self.linger {
+            // deadline passed: smallest rung covering the queue
+            return BatchPlan::Dispatch {
+                rung: ladder.rung_for(pending),
+                take: pending,
+            };
+        }
+        BatchPlan::Wait { remaining: self.linger - oldest_wait }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{check, Gen};
+
+    fn ms(n: u64) -> Duration {
+        Duration::from_millis(n)
+    }
+
+    #[test]
+    fn ladder_sorts_dedups_and_rejects_junk() {
+        let l = Ladder::new(vec![8, 1, 4, 4]).unwrap();
+        assert_eq!(l.rungs(), &[1, 4, 8]);
+        assert_eq!(l.max(), 8);
+        assert!(Ladder::new(vec![]).is_err());
+        assert!(Ladder::new(vec![0, 2]).is_err());
+    }
+
+    #[test]
+    fn rung_for_picks_smallest_cover() {
+        let l = Ladder::new(vec![1, 2, 4, 8]).unwrap();
+        assert_eq!(l.rung_for(1), 1);
+        assert_eq!(l.rung_for(3), 4);
+        assert_eq!(l.rung_for(8), 8);
+        assert_eq!(l.rung_for(100), 8);
+        assert!(l.has_exact(2));
+        assert!(!l.has_exact(3));
+    }
+
+    #[test]
+    fn zero_linger_one_rung_matches_fixed_batch() {
+        // the backward-compat contract: scalar manifest + --linger-ms 0
+        // behaves exactly like the old pop_batch(max_batch)
+        let l = Ladder::new(vec![4]).unwrap();
+        let p = BatchPolicy::new(ms(0));
+        for pending in 1..=9usize {
+            let plan = p.plan(&l, pending, ms(0), false);
+            let take = pending.min(4);
+            assert_eq!(plan, BatchPlan::Dispatch { rung: 4, take },
+                       "pending={pending}");
+        }
+    }
+
+    #[test]
+    fn full_and_exact_fits_never_wait() {
+        let l = Ladder::new(vec![1, 2, 8]).unwrap();
+        let p = BatchPolicy::new(ms(1000));
+        // burst fills the big rung immediately
+        assert_eq!(p.plan(&l, 20, ms(0), false),
+                   BatchPlan::Dispatch { rung: 8, take: 8 });
+        // exact small rungs dispatch with zero padding, zero linger
+        assert_eq!(p.plan(&l, 1, ms(0), false),
+                   BatchPlan::Dispatch { rung: 1, take: 1 });
+        assert_eq!(p.plan(&l, 2, ms(0), false),
+                   BatchPlan::Dispatch { rung: 2, take: 2 });
+    }
+
+    #[test]
+    fn partial_rung_lingers_until_the_deadline() {
+        let l = Ladder::new(vec![2, 8]).unwrap();
+        let p = BatchPolicy::new(ms(50));
+        // 3 slots: no exact rung, below max — hold, reporting time left
+        assert_eq!(p.plan(&l, 3, ms(10), false),
+                   BatchPlan::Wait { remaining: ms(40) });
+        // deadline reached: smallest covering rung, padded
+        assert_eq!(p.plan(&l, 3, ms(50), false),
+                   BatchPlan::Dispatch { rung: 8, take: 3 });
+        assert_eq!(p.plan(&l, 3, ms(90), false),
+                   BatchPlan::Dispatch { rung: 8, take: 3 });
+        // draining flushes immediately regardless of the deadline
+        assert_eq!(p.plan(&l, 3, ms(0), true),
+                   BatchPlan::Dispatch { rung: 8, take: 3 });
+    }
+
+    #[test]
+    fn prop_rung_selection_is_sound() {
+        // the three satellite properties, against random ladders:
+        //  1. never a rung smaller than the take when a larger exists
+        //  2. never padded when an exact rung exists (or queue >= max)
+        //  3. padded dispatches only at/after the linger deadline
+        check("policy rung selection", 500, |g: &mut Gen| {
+            let n_rungs = g.usize_in(1, 5);
+            let rungs: Vec<usize> =
+                (0..n_rungs).map(|_| g.usize_in(1, 32)).collect();
+            let ladder = Ladder::new(rungs).unwrap();
+            let linger = ms(g.usize_in(0, 100) as u64);
+            let policy = BatchPolicy::new(linger);
+            let pending = g.usize_in(1, 64);
+            let waited = ms(g.usize_in(0, 200) as u64);
+            let draining = g.bool();
+            match policy.plan(&ladder, pending, waited, draining) {
+                BatchPlan::Dispatch { rung, take } => {
+                    assert!(ladder.rungs().contains(&rung));
+                    assert!(take <= rung, "take {take} > rung {rung}");
+                    assert!(take <= pending);
+                    // (1) smallest covering rung — no larger rung
+                    // would be needed, no smaller rung would fit
+                    assert_eq!(rung, ladder.rung_for(take));
+                    // (2) exact fits and full batches never pad
+                    if ladder.has_exact(pending) || pending >= ladder.max()
+                    {
+                        assert_eq!(take, rung, "padded an exact fit");
+                    }
+                    // (3) padding waits out the deadline
+                    if take < rung {
+                        assert!(draining || waited >= linger,
+                                "padded before the deadline");
+                    }
+                }
+                BatchPlan::Wait { remaining } => {
+                    assert!(!draining, "waited while draining");
+                    assert!(waited < linger);
+                    assert_eq!(remaining, linger - waited);
+                    assert!(pending < ladder.max());
+                    assert!(!ladder.has_exact(pending));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_ladder_never_pads_more_than_fixed() {
+        // dispatching a whole queue through the policy pads no more
+        // than the fixed largest-rung batcher would for the same queue
+        check("ladder padding <= fixed padding", 300, |g: &mut Gen| {
+            let mut rungs: Vec<usize> =
+                (0..g.usize_in(1, 4)).map(|_| g.usize_in(1, 16)).collect();
+            let max = g.usize_in(1, 16).max(*rungs.iter().max().unwrap());
+            rungs.push(max);
+            let ladder = Ladder::new(rungs).unwrap();
+            let policy = BatchPolicy::new(ms(0));
+            let mut pending = g.usize_in(1, 100);
+            let total = pending;
+            let mut padded = 0usize;
+            while pending > 0 {
+                match policy.plan(&ladder, pending, ms(0), false) {
+                    BatchPlan::Dispatch { rung, take } => {
+                        padded += rung - take;
+                        pending -= take;
+                    }
+                    BatchPlan::Wait { .. } => unreachable!("linger 0"),
+                }
+            }
+            let fixed_padded = (max - total % max) % max;
+            assert!(
+                padded <= fixed_padded,
+                "ladder {:?} padded {padded} > fixed {fixed_padded} \
+                 for {total} slots",
+                ladder.rungs()
+            );
+            Ok(())
+        });
+    }
+}

@@ -1,5 +1,6 @@
-//! Multi-worker generation router: N worker threads pulling fixed-size
-//! batches off one shared FIFO [`Batcher`].
+//! Multi-worker generation router: N worker threads pulling batches off
+//! one shared FIFO [`Batcher`], each sized by the deadline-aware
+//! [`BatchPolicy`] over the backend's lowered batch ladder.
 //!
 //! # Threading model
 //!
@@ -7,8 +8,12 @@
 //! sampler) must be *built inside* the worker's own thread; the router
 //! only ever moves plain data across threads. Dispatch is work-stealing
 //! by construction: every worker, when idle, locks the shared state and
-//! pops the next batch off the FIFO queue — whichever worker is free
-//! takes the oldest work, and a slow worker never blocks a fast one.
+//! consults the policy — whichever worker is free takes the oldest
+//! work, and a slow worker never blocks a fast one. A policy `Wait`
+//! (partial rung inside its linger window) parks the worker on the
+//! condvar with the deadline as timeout, so a trickle request is
+//! dispatched the moment its deadline expires, new work arrives, or
+//! shutdown begins — never later.
 //!
 //! # Failure semantics
 //!
@@ -27,12 +32,13 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::serve::batcher::{Batcher, Slot};
 use crate::serve::error::ServeError;
+use crate::serve::policy::{BatchPlan, BatchPolicy, Ladder};
 use crate::util::bench::percentile;
 
 /// A client request: n images of one class.
@@ -55,6 +61,48 @@ pub struct GenResponse {
 /// What a client's response channel yields.
 pub type GenResult = std::result::Result<GenResponse, ServeError>;
 
+/// Per-rung dispatch counters: batches have different capacities once
+/// the ladder is live, so padding and fill are only meaningful sliced
+/// by the rung they were dispatched on.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RungStats {
+    /// Lowered batch dim of this rung.
+    pub rung: usize,
+    pub batches: u64,
+    /// Real (non-padding) image slots computed on this rung.
+    pub images: u64,
+    /// Class-0 padding slots burned on this rung.
+    pub padded_slots: u64,
+    /// Wall-clock spent inside `generate` on this rung.
+    pub busy_s: f64,
+}
+
+impl RungStats {
+    /// Mean fill of this rung's dispatches: occupied slots over
+    /// dispatched capacity (occupied includes slots later dropped by a
+    /// failing request — they were computed either way).
+    pub fn fill(&self) -> f64 {
+        let cap = (self.rung as u64 * self.batches) as f64;
+        if cap == 0.0 {
+            0.0
+        } else {
+            (cap - self.padded_slots as f64) / cap
+        }
+    }
+}
+
+/// Find or insert the stats slot for `rung`, kept sorted ascending.
+fn rung_entry(rungs: &mut Vec<RungStats>, rung: usize) -> &mut RungStats {
+    let i = match rungs.binary_search_by_key(&rung, |r| r.rung) {
+        Ok(i) => i,
+        Err(i) => {
+            rungs.insert(i, RungStats { rung, ..RungStats::default() });
+            i
+        }
+    };
+    &mut rungs[i]
+}
+
 /// Per-worker counters (reported inside [`ServerStats`]).
 #[derive(Clone, Debug, Default)]
 pub struct WorkerStats {
@@ -62,10 +110,12 @@ pub struct WorkerStats {
     pub batches: u64,
     /// Real (non-padding) image slots computed.
     pub images: u64,
-    /// Class-0 padding slots burned to fill the fixed artifact batch.
+    /// Class-0 padding slots burned to fill dispatched rungs.
     pub padded_slots: u64,
     /// Wall-clock spent inside `generate`.
     pub busy_s: f64,
+    /// The same counters sliced per dispatched ladder rung (ascending).
+    pub rungs: Vec<RungStats>,
     /// The backend was built and entered service at some point
     /// (false means the worker never got past initialization).
     pub ready: bool,
@@ -80,7 +130,8 @@ pub struct ServerStats {
     /// Real images delivered (excludes padding).
     pub images: u64,
     pub batches: u64,
-    /// Occupied slots / dispatched capacity.
+    /// Mean per-dispatch fill, each batch normalized by its *own*
+    /// rung's capacity (batches of different rungs weigh equally).
     pub batch_fill: f64,
     /// Padding slots across all workers (wasted capacity).
     pub padded_slots: u64,
@@ -102,6 +153,9 @@ pub struct ServerStats {
     /// Wall-clock of the one shared calibration resolution — cache
     /// load on a hit, the full MRQ/TGQ pipeline on a miss.
     pub calib_cold_start_ms: f64,
+    /// Dispatch counters sliced by ladder rung, aggregated over the
+    /// workers (ascending by rung).
+    pub rungs: Vec<RungStats>,
     pub workers: Vec<WorkerStats>,
 }
 
@@ -131,6 +185,14 @@ impl ServerStats {
                 self.calib_cold_start_ms
             );
         }
+        for r in &self.rungs {
+            println!(
+                "  rung {:>4}: {:>4} batches  {:>5} images  {:>4} padded  \
+                 fill {:>3.0}%  busy {:.2}s",
+                r.rung, r.batches, r.images, r.padded_slots,
+                r.fill() * 100.0, r.busy_s
+            );
+        }
         for w in &self.workers {
             println!(
                 "  worker {}: {:>4} batches  {:>5} images  {:>4} padded  \
@@ -146,11 +208,15 @@ impl ServerStats {
 /// worker's own thread (PJRT runtimes are not `Send`), so implementations
 /// need not be `Send`.
 pub trait GenBackend {
-    /// Fixed batch size the backend computes per call.
-    fn batch(&self) -> usize;
+    /// Lowered batch dims this backend can execute (the batch ladder).
+    /// Order and duplicates don't matter — the router validates and
+    /// sorts; an empty or zero-rung ladder fails the worker's init.
+    fn rungs(&self) -> Vec<usize>;
     /// Flat length of one image (H·W·C).
     fn img_len(&self) -> usize;
-    /// Generate one batch for `labels` (`labels.len() == batch()`).
+    /// Generate one batch for `labels`; `labels.len()` is always one
+    /// of [`Self::rungs`] (the policy-chosen rung, padded with class-0
+    /// slots).
     fn generate(&mut self, labels: &[i32]) -> Result<Vec<f32>>;
 }
 
@@ -168,9 +234,12 @@ impl WorkerHandle {
     }
 
     /// Run the dispatch loop with this worker's backend until shutdown
-    /// (or until the backend fails a batch).
-    pub fn serve(&self, backend: &mut dyn GenBackend) {
-        worker_loop(self.idx, backend, &self.shared);
+    /// (or until the backend fails a batch). `Err` only when the
+    /// backend's ladder is invalid (caught before serving starts);
+    /// generate failures are routed to the affected clients and return
+    /// `Ok` after recording the worker dead.
+    pub fn serve(&self, backend: &mut dyn GenBackend) -> Result<()> {
+        worker_loop(self.idx, backend, &self.shared)
     }
 }
 
@@ -189,11 +258,20 @@ pub struct RouterOpts {
     /// Backpressure: reject submits once this many image slots are
     /// queued (does not count slots already being computed).
     pub max_queue: usize,
+    /// How long a partially-filled ladder rung may linger for more
+    /// slots before dispatching padded. Zero (the default) dispatches
+    /// immediately — with a one-rung ladder that is exactly the
+    /// pre-ladder fixed-batch behavior.
+    pub linger: Duration,
 }
 
 impl Default for RouterOpts {
     fn default() -> Self {
-        RouterOpts { workers: 1, max_queue: 16384 }
+        RouterOpts {
+            workers: 1,
+            max_queue: 16384,
+            linger: Duration::ZERO,
+        }
     }
 }
 
@@ -260,13 +338,14 @@ impl RouterState {
         }
     }
 
-    /// Route one computed batch back to its pending requests.
+    /// Route one computed batch (dispatched on a `rung`-slot artifact)
+    /// back to its pending requests.
     fn deliver(&mut self, idx: usize, slots: &[Slot], imgs: &[f32],
-               il: usize, cap: usize, busy_s: f64) {
-        self.workers[idx].batches += 1;
-        self.workers[idx].padded_slots += (cap - slots.len()) as u64;
-        self.workers[idx].busy_s += busy_s;
-        self.fill_sum += slots.len() as f64 / cap.max(1) as f64;
+               il: usize, rung: usize, busy_s: f64) {
+        self.fill_sum += slots.len() as f64 / rung.max(1) as f64;
+        // counted per delivered slot, not per batch: slots computed for
+        // requests that already failed elsewhere are not images
+        let mut delivered = 0u64;
         for (i, s) in slots.iter().enumerate() {
             // a missing entry means the request already failed elsewhere
             let Some(p) = self.pending.get_mut(&s.req_id) else { continue };
@@ -276,9 +355,7 @@ impl RouterState {
             p.images[s.index * il..(s.index + 1) * il]
                 .copy_from_slice(&imgs[i * il..(i + 1) * il]);
             p.remaining -= 1;
-            // counted here, not per batch: slots computed for requests
-            // that already failed elsewhere are not delivered images
-            self.workers[idx].images += 1;
+            delivered += 1;
             if p.remaining == 0 {
                 let done = self.pending.remove(&s.req_id).unwrap();
                 let latency_s = done.t0.elapsed().as_secs_f64();
@@ -301,6 +378,17 @@ impl RouterState {
                 }
             }
         }
+        let padded = (rung - slots.len()) as u64;
+        let w = &mut self.workers[idx];
+        w.batches += 1;
+        w.padded_slots += padded;
+        w.busy_s += busy_s;
+        w.images += delivered;
+        let r = rung_entry(&mut w.rungs, rung);
+        r.batches += 1;
+        r.padded_slots += padded;
+        r.busy_s += busy_s;
+        r.images += delivered;
     }
 
     /// Fail every request with a slot in this batch; purge their queued
@@ -354,8 +442,11 @@ impl RouterState {
 
 struct Shared {
     state: Mutex<RouterState>,
-    /// Signaled on submit, shutdown, and worker exit.
+    /// Signaled on submit, shutdown, and worker exit (lingering
+    /// workers additionally wake on their own deadline timeout).
     work_ready: Condvar,
+    /// Deadline-aware dispatch policy every worker consults.
+    policy: BatchPolicy,
 }
 
 impl Shared {
@@ -413,6 +504,7 @@ impl Router {
         let shared = Arc::new(Shared {
             state: Mutex::new(RouterState::new(workers)),
             work_ready: Condvar::new(),
+            policy: BatchPolicy::new(opts.linger),
         });
         let mut handles = Vec::with_capacity(workers);
         for idx in 0..workers {
@@ -542,6 +634,16 @@ impl Router {
         let batches: u64 = st.workers.iter().map(|w| w.batches).sum();
         let images: u64 = st.workers.iter().map(|w| w.images).sum();
         let padded: u64 = st.workers.iter().map(|w| w.padded_slots).sum();
+        let mut rungs: Vec<RungStats> = Vec::new();
+        for w in &st.workers {
+            for r in &w.rungs {
+                let e = rung_entry(&mut rungs, r.rung);
+                e.batches += r.batches;
+                e.images += r.images;
+                e.padded_slots += r.padded_slots;
+                e.busy_s += r.busy_s;
+            }
+        }
         ServerStats {
             requests: st.requests,
             images,
@@ -566,6 +668,7 @@ impl Router {
             calib_cache_hits: 0,
             calib_cache_misses: 0,
             calib_cold_start_ms: 0.0,
+            rungs,
             workers: st.workers.clone(),
         }
     }
@@ -594,12 +697,16 @@ fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
     }
 }
 
-/// The dispatch loop every worker runs: pop the oldest batch, pad it to
-/// the fixed artifact size, generate, route results (or typed errors)
-/// back. Returns on shutdown-with-empty-queue or after a generate
-/// failure (the worker is assumed poisoned).
-fn worker_loop(idx: usize, backend: &mut dyn GenBackend, shared: &Shared) {
-    let cap = backend.batch().max(1);
+/// The dispatch loop every worker runs: consult the batch policy for
+/// the oldest work (wait for fill, or pop now and pad to the chosen
+/// ladder rung), generate, route results (or typed errors) back.
+/// Returns on shutdown-with-empty-queue or after a generate failure
+/// (the worker is assumed poisoned); `Err` only for an invalid backend
+/// ladder, surfaced before the worker ever marks itself ready.
+fn worker_loop(idx: usize, backend: &mut dyn GenBackend, shared: &Shared)
+               -> Result<()> {
+    let ladder =
+        Ladder::new(backend.rungs()).context("backend batch ladder")?;
     let il = backend.img_len();
     {
         let mut st = shared.lock();
@@ -607,27 +714,48 @@ fn worker_loop(idx: usize, backend: &mut dyn GenBackend, shared: &Shared) {
         st.workers[idx].ready = true;
     }
     loop {
-        let slots = {
+        let (slots, rung) = {
             let mut st = shared.lock();
             loop {
-                if !st.batcher.is_empty() {
-                    st.note_depth();
-                    break;
+                if st.batcher.is_empty() {
+                    if !st.open {
+                        return Ok(());
+                    }
+                    st = shared
+                        .work_ready
+                        .wait(st)
+                        .unwrap_or_else(|p| p.into_inner());
+                    continue;
                 }
-                if !st.open {
-                    return;
+                let pending = st.batcher.pending();
+                let waited = st
+                    .batcher
+                    .oldest_wait(Instant::now())
+                    .unwrap_or_default();
+                // draining (shutdown) flushes partial rungs immediately
+                match shared.policy.plan(&ladder, pending, waited,
+                                         !st.open) {
+                    BatchPlan::Dispatch { rung, take } => {
+                        st.note_depth();
+                        break (st.batcher.take(take), rung);
+                    }
+                    BatchPlan::Wait { remaining } => {
+                        // park until the linger deadline; new submits
+                        // and shutdown notify the condvar to re-plan
+                        // earlier
+                        let (g, _) = shared
+                            .work_ready
+                            .wait_timeout(st, remaining)
+                            .unwrap_or_else(|p| p.into_inner());
+                        st = g;
+                    }
                 }
-                st = shared
-                    .work_ready
-                    .wait(st)
-                    .unwrap_or_else(|p| p.into_inner());
             }
-            st.batcher.pop_batch(cap)
         };
         debug_assert!(!slots.is_empty());
 
-        // pad the fixed artifact batch with class-0 slots
-        let mut labels = vec![0i32; cap];
+        // pad the chosen rung's artifact batch with class-0 slots
+        let mut labels = vec![0i32; rung];
         for (i, s) in slots.iter().enumerate() {
             labels[i] = s.class;
         }
@@ -645,19 +773,19 @@ fn worker_loop(idx: usize, backend: &mut dyn GenBackend, shared: &Shared) {
             // a backend returning a short/oversized buffer would panic
             // copy_from_slice mid-delivery and strand the whole batch;
             // treat the broken contract like a generate failure instead
-            Ok(Ok(imgs)) if imgs.len() == cap * il => {
-                st.deliver(idx, &slots, &imgs, il, cap, busy_s)
+            Ok(Ok(imgs)) if imgs.len() == rung * il => {
+                st.deliver(idx, &slots, &imgs, il, rung, busy_s)
             }
             Ok(Ok(imgs)) => {
                 st.fail_batch(idx, &slots, &format!(
-                    "backend returned {} pixels for a {cap}-slot batch \
+                    "backend returned {} pixels for a {rung}-slot batch \
                      (expected {})",
-                    imgs.len(), cap * il));
-                return;
+                    imgs.len(), rung * il));
+                return Ok(());
             }
             Ok(Err(e)) => {
                 st.fail_batch(idx, &slots, &format!("{e:#}"));
-                return;
+                return Ok(());
             }
             Err(p) => {
                 st.fail_batch(idx, &slots, &panic_message(&p));
@@ -678,7 +806,7 @@ mod tests {
     /// Backend whose pixels all equal the slot's class label, so tests
     /// can verify slot→request routing end to end.
     struct MockBackend {
-        batch: usize,
+        rungs: Vec<usize>,
         il: usize,
         calls: usize,
         fail_after: Option<usize>,
@@ -687,31 +815,42 @@ mod tests {
         /// violation).
         short_after: Option<usize>,
         log: Option<Arc<Mutex<Vec<i32>>>>,
+        /// Log of dispatched rung sizes (labels.len() per call).
+        rung_log: Option<Arc<Mutex<Vec<usize>>>>,
     }
 
     impl MockBackend {
         fn new(batch: usize, il: usize) -> MockBackend {
+            MockBackend::ladder(vec![batch], il)
+        }
+
+        fn ladder(rungs: Vec<usize>, il: usize) -> MockBackend {
             MockBackend {
-                batch,
+                rungs,
                 il,
                 calls: 0,
                 fail_after: None,
                 panic_after: None,
                 short_after: None,
                 log: None,
+                rung_log: None,
             }
         }
     }
 
     impl GenBackend for MockBackend {
-        fn batch(&self) -> usize {
-            self.batch
+        fn rungs(&self) -> Vec<usize> {
+            self.rungs.clone()
         }
         fn img_len(&self) -> usize {
             self.il
         }
         fn generate(&mut self, labels: &[i32]) -> Result<Vec<f32>> {
-            assert_eq!(labels.len(), self.batch);
+            assert!(
+                self.rungs.contains(&labels.len()),
+                "dispatched {} labels but the lowered rungs are {:?}",
+                labels.len(), self.rungs
+            );
             if let Some(after) = self.fail_after {
                 if self.calls >= after {
                     anyhow::bail!("injected failure on call {}", self.calls);
@@ -725,12 +864,15 @@ mod tests {
             if let Some(after) = self.short_after {
                 if self.calls >= after {
                     self.calls += 1;
-                    return Ok(vec![0.0; self.batch * self.il - 1]);
+                    return Ok(vec![0.0; labels.len() * self.il - 1]);
                 }
             }
             self.calls += 1;
             if let Some(log) = &self.log {
                 log.lock().unwrap().extend_from_slice(labels);
+            }
+            if let Some(rl) = &self.rung_log {
+                rl.lock().unwrap().push(labels.len());
             }
             Ok(labels
                 .iter()
@@ -742,10 +884,22 @@ mod tests {
     fn mock_router(workers: usize, batch: usize, il: usize) -> Router {
         let body: Arc<WorkerBody> = Arc::new(move |h: WorkerHandle| -> Result<()> {
             let mut b = MockBackend::new(batch, il);
-            h.serve(&mut b);
-            Ok(())
+            h.serve(&mut b)
         });
         Router::start(RouterOpts { workers, ..RouterOpts::default() }, body)
+    }
+
+    fn mock_ladder_router(workers: usize, rungs: Vec<usize>, il: usize,
+                          linger: Duration) -> Router {
+        let body: Arc<WorkerBody> =
+            Arc::new(move |h: WorkerHandle| -> Result<()> {
+                let mut b = MockBackend::ladder(rungs.clone(), il);
+                h.serve(&mut b)
+            });
+        Router::start(
+            RouterOpts { workers, linger, ..RouterOpts::default() },
+            body,
+        )
     }
 
     #[test]
@@ -817,8 +971,7 @@ mod tests {
         let body: Arc<WorkerBody> = Arc::new(move |h: WorkerHandle| -> Result<()> {
             let mut b = MockBackend::new(1, 2);
             b.log = Some(Arc::clone(&log2));
-            h.serve(&mut b);
-            Ok(())
+            h.serve(&mut b)
         });
         let router =
             Router::start(RouterOpts { workers: 1, ..Default::default() },
@@ -872,6 +1025,163 @@ mod tests {
     }
 
     #[test]
+    fn ladder_dispatch_picks_smallest_covering_rung() {
+        let rung_log = Arc::new(Mutex::new(Vec::new()));
+        let rl = Arc::clone(&rung_log);
+        let body: Arc<WorkerBody> =
+            Arc::new(move |h: WorkerHandle| -> Result<()> {
+                let mut b = MockBackend::ladder(vec![1, 2, 4], 3);
+                b.rung_log = Some(Arc::clone(&rl));
+                h.serve(&mut b)
+            });
+        let router =
+            Router::start(RouterOpts { workers: 1, ..Default::default() },
+                          body);
+        // serialize: wait for each response so every dispatch sees
+        // exactly one queued request of known size
+        for n in [1usize, 2, 3, 4] {
+            let (_, rx) = router.submit(GenRequest { class: 5, n }).unwrap();
+            let resp = rx.recv().unwrap().unwrap();
+            assert_eq!(resp.images.len(), n * 3);
+            assert!(resp.images.iter().all(|&v| v == 5.0));
+        }
+        let stats = router.shutdown();
+        // 1 and 2 ride their exact rungs; 3 pads the covering 4-rung;
+        // 4 fills the top rung exactly
+        assert_eq!(rung_log.lock().unwrap().clone(), vec![1, 2, 4, 4]);
+        assert_eq!(stats.images, 10);
+        assert_eq!(stats.padded_slots, 1);
+        assert_eq!(stats.rungs.len(), 3);
+        assert_eq!((stats.rungs[0].rung, stats.rungs[0].batches), (1, 1));
+        assert_eq!((stats.rungs[1].rung, stats.rungs[1].batches), (2, 1));
+        assert_eq!((stats.rungs[2].rung, stats.rungs[2].batches), (4, 2));
+        assert_eq!(stats.rungs[2].padded_slots, 1);
+        assert!((stats.rungs[2].fill() - 7.0 / 8.0).abs() < 1e-12);
+        // fill is normalized per dispatched rung: mean of 1, 1, 3/4, 1
+        assert!((stats.batch_fill - 3.75 / 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mixed_rung_split_of_one_large_request() {
+        // 7 slots over a 1/2/4 ladder, one worker: the top rung fills
+        // first, then the remainder dispatches on its covering rung
+        let router =
+            mock_ladder_router(1, vec![1, 2, 4], 2, Duration::ZERO);
+        let (_, rx) = router.submit(GenRequest { class: 3, n: 7 }).unwrap();
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.images.len(), 7 * 2);
+        assert!(resp.images.iter().all(|&v| v == 3.0));
+        let stats = router.shutdown();
+        assert_eq!(stats.batches, 2);
+        assert_eq!(stats.images, 7);
+        assert_eq!(stats.padded_slots, 1);
+    }
+
+    #[test]
+    fn linger_holds_partial_rung_until_burst_fills_it() {
+        // long linger: a 3-slot request (no exact rung) holds; a 5-slot
+        // burst completes the full top rung and releases it unpadded
+        let router = mock_ladder_router(1, vec![2, 8], 2,
+                                        Duration::from_secs(30));
+        let (_, rx_a) = router.submit(GenRequest { class: 1, n: 3 }).unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        let (_, rx_b) = router.submit(GenRequest { class: 2, n: 5 }).unwrap();
+        let resp_a = rx_a.recv().unwrap().unwrap();
+        let resp_b = rx_b.recv().unwrap().unwrap();
+        assert!(resp_a.images.iter().all(|&v| v == 1.0));
+        assert!(resp_b.images.iter().all(|&v| v == 2.0));
+        let stats = router.shutdown();
+        assert_eq!(stats.batches, 1, "one full 8-rung dispatch");
+        assert_eq!(stats.padded_slots, 0);
+        assert_eq!(stats.rungs.len(), 1);
+        assert_eq!(stats.rungs[0].rung, 8);
+    }
+
+    #[test]
+    fn linger_deadline_dispatches_padded_rung() {
+        // nothing else arrives, so the deadline pads the smallest
+        // covering rung — but never before the linger has elapsed
+        let linger = Duration::from_millis(40);
+        let router = mock_ladder_router(1, vec![4, 8], 2, linger);
+        let t0 = Instant::now();
+        let (_, rx) = router.submit(GenRequest { class: 6, n: 3 }).unwrap();
+        let resp = rx.recv().unwrap().unwrap();
+        assert!(t0.elapsed() >= linger, "dispatched before the deadline");
+        assert_eq!(resp.images.len(), 3 * 2);
+        let stats = router.shutdown();
+        assert_eq!(stats.batches, 1);
+        assert_eq!(stats.padded_slots, 1);
+        assert_eq!(stats.rungs.len(), 1);
+        assert_eq!(stats.rungs[0].rung, 4);
+    }
+
+    #[test]
+    fn shutdown_flushes_lingering_partial_rung() {
+        // draining ignores the linger deadline: shutdown must not sit
+        // out a 30s window to flush a partial rung
+        let router =
+            mock_ladder_router(1, vec![4], 2, Duration::from_secs(30));
+        let (_, rx) = router.submit(GenRequest { class: 2, n: 3 }).unwrap();
+        let stats = router.shutdown();
+        assert!(rx.recv().unwrap().is_ok());
+        assert_eq!(stats.images, 3);
+        assert_eq!(stats.padded_slots, 1);
+    }
+
+    #[test]
+    fn worker_failure_mid_rung_propagates_typed_errors() {
+        // first (full-rung) dispatch delivers; the second, smaller rung
+        // fails — its client gets a typed WorkerFailed, nothing hangs
+        let body: Arc<WorkerBody> = Arc::new(|h: WorkerHandle| -> Result<()> {
+            let mut b = MockBackend::ladder(vec![2, 4], 2);
+            b.fail_after = Some(1);
+            h.serve(&mut b)
+        });
+        let router =
+            Router::start(RouterOpts { workers: 1, ..Default::default() },
+                          body);
+        let (_, rx_a) = router.submit(GenRequest { class: 1, n: 4 }).unwrap();
+        let resp_a = rx_a.recv().unwrap().unwrap();
+        assert_eq!(resp_a.images.len(), 4 * 2);
+        let (_, rx_b) = router.submit(GenRequest { class: 2, n: 1 }).unwrap();
+        match rx_b.recv().unwrap() {
+            Err(ServeError::WorkerFailed { worker: 0, cause }) => {
+                assert!(cause.contains("injected failure"), "{cause}");
+            }
+            other => panic!("expected WorkerFailed, got {other:?}"),
+        }
+        let stats = router.shutdown();
+        assert!(stats.workers[0].failed);
+        assert_eq!(stats.images, 4);
+        assert_eq!(stats.failed_requests, 1);
+    }
+
+    #[test]
+    fn invalid_backend_ladder_fails_worker_init() {
+        let body: Arc<WorkerBody> = Arc::new(|h: WorkerHandle| -> Result<()> {
+            let mut b = MockBackend::ladder(vec![], 2);
+            h.serve(&mut b)
+        });
+        let router =
+            Router::start(RouterOpts { workers: 1, ..Default::default() },
+                          body);
+        loop {
+            match router.submit(GenRequest { class: 0, n: 1 }) {
+                Err(ServeError::AllWorkersDead { cause }) => {
+                    assert!(cause.contains("ladder"), "{cause}");
+                    break;
+                }
+                Err(other) => panic!("unexpected reject: {other}"),
+                Ok((_, rx)) => {
+                    assert!(rx.recv().unwrap().is_err());
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        }
+        router.shutdown();
+    }
+
+    #[test]
     fn hung_up_client_is_dropped_cleanly() {
         let router = mock_router(1, 2, 2);
         let (_, rx) = router.submit(GenRequest { class: 1, n: 1 }).unwrap();
@@ -889,8 +1199,7 @@ mod tests {
         let body: Arc<WorkerBody> = Arc::new(|h: WorkerHandle| -> Result<()> {
             let mut b = MockBackend::new(4, 2);
             b.fail_after = Some(0);
-            h.serve(&mut b);
-            Ok(())
+            h.serve(&mut b)
         });
         let router =
             Router::start(RouterOpts { workers: 1, ..Default::default() },
@@ -956,8 +1265,7 @@ mod tests {
                 anyhow::bail!("worker 0 init exploded");
             }
             let mut b = MockBackend::new(2, 2);
-            h.serve(&mut b);
-            Ok(())
+            h.serve(&mut b)
         });
         let router =
             Router::start(RouterOpts { workers: 2, ..Default::default() },
@@ -983,11 +1291,10 @@ mod tests {
             let rx = gate.lock().unwrap().take().expect("one worker");
             let _ = rx.recv();
             let mut b = MockBackend::new(4, 2);
-            h.serve(&mut b);
-            Ok(())
+            h.serve(&mut b)
         });
         let router = Router::start(
-            RouterOpts { workers: 1, max_queue: 8 },
+            RouterOpts { workers: 1, max_queue: 8, ..RouterOpts::default() },
             body,
         );
         // a request bigger than the cap can never fit: distinct error
@@ -1008,8 +1315,7 @@ mod tests {
             Arc::new(|h: WorkerHandle| -> Result<()> {
                 let mut b = MockBackend::new(2, 2);
                 b.panic_after = Some(0);
-                h.serve(&mut b);
-                Ok(())
+                h.serve(&mut b)
             });
         let router =
             Router::start(RouterOpts { workers: 1, ..Default::default() },
@@ -1042,8 +1348,7 @@ mod tests {
         let body: Arc<WorkerBody> = Arc::new(|h: WorkerHandle| -> Result<()> {
             let mut b = MockBackend::new(4, 2);
             b.short_after = Some(0);
-            h.serve(&mut b);
-            Ok(())
+            h.serve(&mut b)
         });
         let router =
             Router::start(RouterOpts { workers: 1, ..Default::default() },

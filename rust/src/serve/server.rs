@@ -15,7 +15,7 @@
 //! distinct images.
 
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -145,23 +145,34 @@ impl Drop for CalibPanicGuard<'_> {
     }
 }
 
-/// [`GenBackend`] over the real sampler; one per worker thread.
+/// [`GenBackend`] over the real sampler ladder; one per worker thread.
+/// Holds a sampler per served batch rung — all sharing one resident
+/// upload of the quantized weights — and routes each dispatch to the
+/// rung the batch policy planned it for.
 struct SamplerBackend<'a> {
-    sampler: Sampler<'a>,
+    samplers: Vec<Sampler<'a>>,
     rng: Rng,
 }
 
 impl<'a> GenBackend for SamplerBackend<'a> {
-    fn batch(&self) -> usize {
-        self.sampler.batch()
+    fn rungs(&self) -> Vec<usize> {
+        self.samplers.iter().map(|s| s.batch()).collect()
     }
 
     fn img_len(&self) -> usize {
-        self.sampler.img_len()
+        self.samplers[0].img_len()
     }
 
     fn generate(&mut self, labels: &[i32]) -> Result<Vec<f32>> {
-        let (imgs, _) = self.sampler.sample(labels, &mut self.rng)?;
+        let s = self
+            .samplers
+            .iter()
+            .find(|s| s.batch() == labels.len())
+            .ok_or_else(|| {
+                anyhow::anyhow!("no sampler lowered for a {}-slot batch",
+                                labels.len())
+            })?;
+        let (imgs, _) = s.sample(labels, &mut self.rng)?;
         Ok(imgs)
     }
 }
@@ -180,32 +191,37 @@ impl GenServer {
     }
 
     /// Sharded service: `workers` threads, each owning a pipeline +
-    /// sampler, sharing one calibration pass (cache-backed: a warm
-    /// persistent cache makes cold-start skip calibration entirely).
+    /// sampler ladder, sharing one calibration pass (cache-backed: a
+    /// warm persistent cache makes cold-start skip calibration
+    /// entirely). Each worker serves every batch rung the artifacts
+    /// were lowered at — narrowed by `cfg.batch_ladder`, dispatched
+    /// under the `cfg.linger_ms` deadline policy.
     pub fn with_workers(cfg: RunConfig, method: Method, workers: usize)
                         -> GenServer {
+        let opts = RouterOpts {
+            workers,
+            linger: Duration::from_millis(cfg.linger_ms),
+            ..RouterOpts::default()
+        };
         let calib = Arc::new(CalibCell::new());
         let calib2 = Arc::clone(&calib);
         let body: Arc<WorkerBody> = Arc::new(move |h: WorkerHandle| -> Result<()> {
             let pipe = Pipeline::new(cfg.clone())?;
             let qc = calib2.get_or_calibrate(&pipe, method)?;
-            let sampler = pipe.sampler(&qc)?;
+            let samplers =
+                pipe.sampler_ladder(&qc, cfg.batch_ladder.as_deref())?;
             // distinct from the calibration stream (0x5eed) for every
             // worker, including index 0
             let mut backend = SamplerBackend {
-                sampler,
+                samplers,
                 rng: Rng::new(pipe.cfg.seed
                               ^ 0x9e3779b97f4a7c15u64
                                     .wrapping_mul(h.index() as u64 + 1)),
             };
-            h.serve(&mut backend);
-            Ok(())
+            h.serve(&mut backend)
         });
         GenServer {
-            router: Router::start(
-                RouterOpts { workers, ..RouterOpts::default() },
-                body,
-            ),
+            router: Router::start(opts, body),
             calib,
         }
     }

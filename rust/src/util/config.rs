@@ -105,6 +105,30 @@ impl RawConfig {
     pub fn str_or(&self, key: &str, default: &str) -> String {
         self.values.get(key).cloned().unwrap_or_else(|| default.to_string())
     }
+
+    /// Comma-separated positive-integer list (`"1,2,4"`); `None` when
+    /// the key is absent.
+    pub fn usize_list(&self, key: &str) -> Result<Option<Vec<usize>>> {
+        let Some(v) = self.values.get(key) else { return Ok(None) };
+        let list = v
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.parse::<usize>().with_context(|| {
+                    format!(
+                        "config `{key}`: expected a comma-separated \
+                         integer list, got `{v}`"
+                    )
+                })
+            })
+            .collect::<Result<Vec<usize>>>()?;
+        if list.is_empty() {
+            bail!("config `{key}`: expected at least one integer, \
+                   got `{v}`");
+        }
+        Ok(Some(list))
+    }
 }
 
 /// Everything the quantization pipeline needs; built from file + CLI.
@@ -136,6 +160,16 @@ pub struct RunConfig {
     /// Persistent calibration-cache directory (`--calib-cache DIR`);
     /// `None` (`--no-calib-cache`) disables load *and* store.
     pub calib_cache: Option<String>,
+    /// Serve: restrict workers to these lowered batch rungs
+    /// (`--batch-ladder 1,2,4`); `None` serves every rung in the
+    /// manifest. Rungs not lowered in the artifacts fail worker init
+    /// with a typed error.
+    pub batch_ladder: Option<Vec<usize>>,
+    /// Serve: how long a partially-filled batch rung may wait for more
+    /// slots before dispatching padded (`--linger-ms N`). Zero (the
+    /// default) dispatches immediately — byte-identical to the
+    /// pre-ladder fixed-batch behavior on one-rung manifests.
+    pub linger_ms: u64,
 }
 
 impl Default for RunConfig {
@@ -155,6 +189,8 @@ impl Default for RunConfig {
             use_mrq: true,
             use_tgq: true,
             calib_cache: Some("calib-cache".into()),
+            batch_ladder: None,
+            linger_ms: 0,
         }
     }
 }
@@ -186,6 +222,19 @@ impl RunConfig {
             use_mrq: raw.bool("mrq", d.use_mrq)?,
             use_tgq: raw.bool("tgq", d.use_tgq)?,
             calib_cache,
+            batch_ladder: match raw.usize_list("batch-ladder")? {
+                None => d.batch_ladder,
+                Some(mut v) => {
+                    if v.contains(&0) {
+                        bail!("config `batch-ladder`: rungs must be \
+                               positive");
+                    }
+                    v.sort_unstable();
+                    v.dedup();
+                    Some(v)
+                }
+            },
+            linger_ms: raw.usize("linger-ms", d.linger_ms as usize)? as u64,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -305,6 +354,29 @@ name = "full run"
         // boundary: G == T is fine (one step per group)
         let c = RawConfig::parse("groups = 10\ntimesteps = 10").unwrap();
         assert!(RunConfig::from_raw(&c).is_ok());
+    }
+
+    #[test]
+    fn batch_ladder_and_linger_flags() {
+        // defaults: serve every lowered rung, dispatch immediately
+        let cfg = RunConfig::from_raw(&RawConfig::parse("").unwrap())
+            .unwrap();
+        assert_eq!(cfg.batch_ladder, None);
+        assert_eq!(cfg.linger_ms, 0);
+        // --batch-ladder 4,1,2,2 sorts + dedups
+        let c = RawConfig::parse("batch-ladder = 4,1,2,2\nlinger-ms = 15")
+            .unwrap();
+        let cfg = RunConfig::from_raw(&c).unwrap();
+        assert_eq!(cfg.batch_ladder, Some(vec![1, 2, 4]));
+        assert_eq!(cfg.linger_ms, 15);
+        // malformed values error with the key and value
+        let c = RawConfig::parse("batch-ladder = 1,x").unwrap();
+        let e = format!("{:#}", RunConfig::from_raw(&c).unwrap_err());
+        assert!(e.contains("batch-ladder") && e.contains("1,x"), "{e}");
+        let c = RawConfig::parse("batch-ladder = 0,4").unwrap();
+        assert!(RunConfig::from_raw(&c).is_err());
+        let c = RawConfig::parse("batch-ladder = ,").unwrap();
+        assert!(RunConfig::from_raw(&c).is_err());
     }
 
     #[test]

@@ -460,10 +460,18 @@ fn serve_sharded_concurrent_load() {
                total.load(std::sync::atomic::Ordering::Relaxed));
     assert_eq!(stats.failed_requests, 0);
     assert_eq!(stats.workers.len(), 2);
-    // the calibrate-once path and padding accounting both ran
+    // the calibrate-once path and padding accounting both ran; each
+    // dispatch fills exactly one lowered rung (rungs may differ in
+    // size once the manifest carries a ladder, so compare against the
+    // per-rung capacity rather than assuming one fixed batch)
     let dispatched: u64 = stats.images + stats.padded_slots;
-    assert_eq!(dispatched % stats.batches.max(1), 0,
-               "padding must fill whole fixed-size batches");
+    let capacity: u64 = stats
+        .rungs
+        .iter()
+        .map(|r| r.rung as u64 * r.batches)
+        .sum();
+    assert_eq!(dispatched, capacity,
+               "padding must fill whole lowered rungs");
 }
 
 #[test]
