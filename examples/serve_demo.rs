@@ -11,19 +11,32 @@
 //! * `burst`   — mixed 1–16 images per request, all at once: the big
 //!               rungs fill while stragglers ride the small ones
 //!
+//! `--nodes N` runs the same load through the cross-node stack
+//! instead: N loopback shard nodes (each its own GenServer behind a
+//! TCP listener on 127.0.0.1) under one cluster frontend — the demo
+//! client code is identical because both ends implement `Dispatch`.
+//! `--kill-node-after-ms T` partitions node 0 mid-load to show the
+//! re-queue path: with a surviving node every request still completes.
+//!
 //! Reports per-request latency, then the aggregate + per-worker +
-//! per-rung stats (throughput, fill, padding, queue depth, p50/p95).
+//! per-rung stats (throughput, fill, padding, queue depth, p50/p95),
+//! plus per-node stats in cluster mode.
 //!
 //! Run: cargo run --release --example serve_demo -- \
 //!        --timesteps 50 --calib-per-group 8 \
 //!        --clients 3 --requests 4 --workers 2 \
 //!        --scenario trickle --linger-ms 5 --batch-ladder 1,4,16
+//!      cargo run --release --example serve_demo -- \
+//!        --nodes 2 --workers 1 --kill-node-after-ms 500
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Duration;
 
 use tq_dit::coordinator::pipeline::Method;
-use tq_dit::serve::{GenRequest, GenServer};
+use tq_dit::serve::{
+    Cluster, ClusterOpts, Dispatch, GenRequest, GenServer, NodeOpts,
+    NodeServer,
+};
 use tq_dit::util::cli::Args;
 use tq_dit::util::config::RunConfig;
 
@@ -56,6 +69,8 @@ fn main() -> anyhow::Result<()> {
     }
     let method = Method::parse(args.str_or("method", "tq-dit"))
         .ok_or_else(|| anyhow::anyhow!("unknown --method"))?;
+    let nodes = args.usize("nodes", 0)?;
+    let kill_after_ms = args.u64("kill-node-after-ms", 0)?;
 
     println!(
         "== serve demo [{scenario}]: {clients} clients x {n_req} requests \
@@ -67,11 +82,41 @@ fn main() -> anyhow::Result<()> {
             .map(|l| format!("{l:?}"))
             .unwrap_or_else(|| "manifest".into()),
     );
-    let server = GenServer::with_workers(cfg, method, workers);
+    // local or loopback-cluster topology behind one Dispatch handle —
+    // the client code below cannot tell them apart
+    let mut node_handles: Vec<NodeServer> = Vec::new();
+    let server: Box<dyn Dispatch> = if nodes > 0 {
+        let mut addrs = Vec::new();
+        for _ in 0..nodes {
+            let gs = GenServer::with_workers(cfg.clone(), method, workers);
+            let node = NodeServer::start(Box::new(gs), "127.0.0.1:0",
+                                         NodeOpts::default())?;
+            addrs.push(node.addr().to_string());
+            node_handles.push(node);
+        }
+        println!("loopback cluster: {nodes} shard node(s) at {}",
+                 addrs.join(", "));
+        Box::new(Cluster::connect(
+            &addrs, ClusterOpts::from_run_config(&cfg))?)
+    } else {
+        Box::new(GenServer::with_workers(cfg.clone(), method, workers))
+    };
 
     // all clients submitting concurrently against the shared handle
     let failures = AtomicUsize::new(0);
     std::thread::scope(|s| {
+        if kill_after_ms > 0 {
+            if let Some(first) = node_handles.first() {
+                s.spawn(move || {
+                    std::thread::sleep(Duration::from_millis(
+                        kill_after_ms));
+                    first.sever_connections();
+                    eprintln!("[demo] partitioned node 0 — its \
+                               in-flight requests re-queue onto the \
+                               survivors");
+                });
+            }
+        }
         for c in 0..clients {
             let server = &server;
             let failures = &failures;
@@ -113,6 +158,10 @@ fn main() -> anyhow::Result<()> {
 
     let stats = server.shutdown();
     stats.print();
+    for (i, node) in node_handles.into_iter().enumerate() {
+        println!("-- node {i} --");
+        node.shutdown().print();
+    }
     let failed = failures.load(Ordering::Relaxed);
     if failed > 0 {
         anyhow::bail!("{failed} request(s) failed");

@@ -1,15 +1,18 @@
 //! PJRT runtime benches: artifact compile time, per-step execute
 //! latency (the sampler's budget), upload overheads, end-to-end
-//! sampling throughput — FP vs quantized path — and the serve stack's
+//! sampling throughput — FP vs quantized path — the serve stack's
 //! adaptive-batching policy (ladder vs fixed under trickle / steady /
-//! burst load).
+//! burst load), and the cross-node loopback cluster (2 shard nodes on
+//! 127.0.0.1, one killed mid-load).
 //!
+//! Smoke gates (no AOT artifacts, no PJRT — the CI steps):
 //! `TQDIT_BENCH_SMOKE=1` runs only the mock-backend adaptive-batching
-//! section (no AOT artifacts, no PJRT) — the CI smoke gate.
+//! section; `TQDIT_NET_SMOKE=1` only the loopback cluster section.
 
 #[path = "common.rs"]
 mod common;
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -17,7 +20,8 @@ use tq_dit::coordinator::pipeline::{Method, Pipeline};
 use tq_dit::coordinator::QuantConfig;
 use tq_dit::sampler::Sampler;
 use tq_dit::serve::{
-    GenBackend, GenRequest, GenServer, Router, RouterOpts, ServerStats,
+    Cluster, ClusterOpts, GenBackend, GenRequest, GenServer,
+    HealthPolicy, NodeOpts, NodeServer, Router, RouterOpts, ServerStats,
     WorkerBody, WorkerHandle,
 };
 use tq_dit::tensor::Tensor;
@@ -26,10 +30,18 @@ use tq_dit::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
     let smoke = std::env::var("TQDIT_BENCH_SMOKE").as_deref() == Ok("1");
-    if !smoke {
+    let net_smoke = std::env::var("TQDIT_NET_SMOKE").as_deref() == Ok("1");
+    let full = !smoke && !net_smoke;
+    if full {
         pjrt_benches()?;
     }
-    adaptive_batching_bench()
+    if full || smoke {
+        adaptive_batching_bench()?;
+    }
+    if full || net_smoke {
+        cluster_loopback_bench()?;
+    }
+    Ok(())
 }
 
 fn pjrt_benches() -> anyhow::Result<()> {
@@ -322,5 +334,157 @@ fn adaptive_batching_bench() -> anyhow::Result<()> {
             );
         }
     }
+    Ok(())
+}
+
+// ---- cross-node loopback: 2 shard nodes, one killed mid-load ----------
+
+/// A loopback shard node over a [`ShapedBackend`] router.
+fn shaped_node(rungs: Vec<usize>, il: usize, cost: Duration)
+               -> anyhow::Result<(NodeServer, String)> {
+    let body: Arc<WorkerBody> =
+        Arc::new(move |h: WorkerHandle| -> anyhow::Result<()> {
+            let mut b = ShapedBackend {
+                rungs: rungs.clone(),
+                il,
+                cost_per_slot: cost,
+            };
+            h.serve(&mut b)
+        });
+    let router = Router::start(
+        RouterOpts { workers: 1, ..RouterOpts::default() },
+        body,
+    );
+    let node = NodeServer::start(Box::new(router), "127.0.0.1:0",
+                                 NodeOpts::default())?;
+    let addr = node.addr().to_string();
+    Ok((node, addr))
+}
+
+/// The acceptance gate for the net layer: 2 loopback shard nodes under
+/// concurrent client load, one partitioned mid-flight. Every request
+/// must complete on the surviving shard or fail with a typed
+/// `ServeError` — zero hangs — and slot conservation
+/// (`enqueued == dispatched + purged + pending`) must hold both on the
+/// cluster aggregate and on the per-node shutdown stats summed.
+fn cluster_loopback_bench() -> anyhow::Result<()> {
+    println!(
+        "\ncross-node loopback (2 mock shard nodes, 5 ms/slot, kill one \
+         at 40 ms):"
+    );
+    let rungs = vec![1usize, 2, 4, 8];
+    let cost = Duration::from_millis(5);
+    let (node_a, addr_a) = shaped_node(rungs.clone(), 4, cost)?;
+    let (node_b, addr_b) = shaped_node(rungs, 4, cost)?;
+    // generous timeout: the kill is detected via the severed
+    // connection (instant), and a tight timeout would let CI
+    // scheduling stalls kill the healthy survivor too
+    let opts = ClusterOpts {
+        health: HealthPolicy {
+            heartbeat: Duration::from_millis(25),
+            timeout: Duration::from_secs(5),
+        },
+        ..ClusterOpts::default()
+    };
+    let cluster = Cluster::connect(&[addr_a, addr_b], opts)?;
+
+    let clients = 4usize;
+    let per_client = 8usize;
+    let completed = AtomicUsize::new(0);
+    let typed_failures = AtomicUsize::new(0);
+    let hangs = AtomicUsize::new(0);
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        // the partition: node A falls off the network mid-load
+        let node_a = &node_a;
+        s.spawn(move || {
+            std::thread::sleep(Duration::from_millis(40));
+            node_a.sever_connections();
+        });
+        for c in 0..clients {
+            let cluster = &cluster;
+            let completed = &completed;
+            let typed_failures = &typed_failures;
+            let hangs = &hangs;
+            s.spawn(move || {
+                for i in 0..per_client {
+                    let n = 1 + (c * 3 + i) % 8;
+                    let class = ((c + i) % 8) as i32;
+                    match cluster.submit(GenRequest { class, n }) {
+                        Ok((_, rx)) => match rx
+                            .recv_timeout(Duration::from_secs(30))
+                        {
+                            Ok(Ok(_)) => {
+                                completed.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Ok(Err(_)) => {
+                                typed_failures
+                                    .fetch_add(1, Ordering::Relaxed);
+                            }
+                            Err(_) => {
+                                hangs.fetch_add(1, Ordering::Relaxed);
+                            }
+                        },
+                        Err(_) => {
+                            typed_failures.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let agg = cluster.shutdown();
+    let stats_a = node_a.shutdown();
+    let stats_b = node_b.shutdown();
+
+    let total = clients * per_client;
+    let completed = completed.load(Ordering::Relaxed);
+    let typed_failures = typed_failures.load(Ordering::Relaxed);
+    let hangs = hangs.load(Ordering::Relaxed);
+    println!(
+        "  {total} requests in {wall:.2}s: {completed} completed, \
+         {typed_failures} typed failures, {hangs} hangs"
+    );
+    println!(
+        "  cluster: {} re-queued, {} node(s) lost, p50 {:.3}s p95 {:.3}s",
+        agg.requeued, agg.nodes_lost, agg.latency_p50_s, agg.latency_p95_s
+    );
+    println!(
+        "  node A (killed): {} slots enqueued, {} dispatched, {} purged; \
+         node B: {} enqueued, {} dispatched",
+        stats_a.enqueued, stats_a.dispatched, stats_a.purged,
+        stats_b.enqueued, stats_b.dispatched
+    );
+
+    anyhow::ensure!(hangs == 0, "{hangs} request(s) hung");
+    anyhow::ensure!(
+        completed + typed_failures == total,
+        "requests unaccounted for: {completed} + {typed_failures} != \
+         {total}"
+    );
+    anyhow::ensure!(agg.nodes_lost == 1,
+                    "expected exactly the killed node lost, got {}",
+                    agg.nodes_lost);
+    anyhow::ensure!(agg.requeued >= 1,
+                    "the killed node held no in-flight work");
+    anyhow::ensure!(stats_b.requests > 0, "survivor served nothing");
+    // conservation across the cluster: on the aggregate (surviving
+    // shards) and on the per-node shutdown stats summed (both shards,
+    // including the killed one, which drained after the partition)
+    anyhow::ensure!(
+        agg.enqueued == agg.dispatched + agg.purged + agg.pending,
+        "cluster aggregate conservation broke: {} != {} + {} + {}",
+        agg.enqueued, agg.dispatched, agg.purged, agg.pending
+    );
+    let mut summed = stats_a.clone();
+    summed.absorb(&stats_b);
+    anyhow::ensure!(
+        summed.enqueued
+            == summed.dispatched + summed.purged + summed.pending,
+        "summed per-node conservation broke: {} != {} + {} + {}",
+        summed.enqueued, summed.dispatched, summed.purged, summed.pending
+    );
+    println!("  -> all requests accounted for; conservation holds");
     Ok(())
 }

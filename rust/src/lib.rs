@@ -25,7 +25,9 @@
 //! * [`sampler`] — ancestral DDPM sampling loop (TGQ-aware).
 //! * [`serve`] — sharded generation service: dynamic batcher + a
 //!   deadline-aware batch-ladder policy + a multi-worker router with
-//!   typed error propagation.
+//!   typed error propagation, extended across hosts by `serve::net`
+//!   (wire/proto/node/cluster with health checks and re-queue on
+//!   node loss).
 //! * [`metrics`] — FID / sFID / Inception Score, image writers.
 //! * [`data`] — synthetic dataset (mirror of `python/compile/data.py`).
 

@@ -8,7 +8,10 @@
 //!   distributions  Fig. 2/3 CSVs (activation pathologies)
 //!   grid           Fig. 6 sample grids (PPM)
 //!   sample         generate images with one method, write PPMs
-//!   serve          sharded generation service demo
+//!   serve          sharded generation service demo (in-process, or a
+//!                  cluster frontend with --shards)
+//!   node           expose the generation service as a shard node
+//!                  (`--listen ADDR`) for a cluster frontend
 //!   stats          artifact/manifest inventory + exec stats
 //!
 //! Common flags: --artifacts DIR --wbits K --abits K --timesteps T
@@ -16,14 +19,21 @@
 //!   --eval-images N --seed S --ho BOOL --mrq BOOL --tgq BOOL
 //!   --calib-cache DIR --no-calib-cache
 //!   --batch-ladder A,B,C --linger-ms N (serve batch policy)
+//!   --shards A,B --heartbeat-ms N --node-timeout-ms N (cluster)
 //!   --config FILE (TOML-subset, overridden by CLI flags)
 
-use anyhow::{bail, Result};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
 
 use tq_dit::coordinator::pipeline::{Method, Pipeline};
 use tq_dit::coordinator::QuantConfig;
 use tq_dit::metrics::images::{write_grid_ppm, write_ppm};
-use tq_dit::serve::{GenRequest, GenServer};
+use tq_dit::serve::net::proto::stats_to_json;
+use tq_dit::serve::{
+    Cluster, ClusterOpts, Dispatch, GenRequest, GenServer, NodeOpts,
+    NodeServer, ServerStats,
+};
 use tq_dit::util::cli::Args;
 use tq_dit::util::config::RunConfig;
 use tq_dit::util::logging;
@@ -50,6 +60,7 @@ fn main() -> Result<()> {
         "grid" => cmd_grid(cfg, &args),
         "sample" => cmd_sample(cfg, &args),
         "serve" => cmd_serve(cfg, &args),
+        "node" => cmd_node(cfg, &args),
         "report" => cmd_report(cfg, &args),
         "stats" => cmd_stats(cfg),
         "help" | "--help" | "-h" => {
@@ -72,7 +83,10 @@ SUBCOMMANDS
   distributions  Fig. 2/3 activation-distribution CSVs (--out-dir)
   grid           Fig. 6 sample grids as PPM (--out-dir, --rows, --cols)
   sample         generate images with --method, write PPMs (--out-dir)
-  serve          sharded generation service demo (--requests, --workers)
+  serve          sharded generation service demo (--requests, --workers;
+                 with --shards A,B it is a cluster frontend instead)
+  node           serve as a shard node for a cluster frontend
+                 (--listen ADDR, --workers, --run-secs N; 0 = forever)
   report         per-layer quantization-error attribution (--method)
   stats          manifest inventory
 
@@ -93,6 +107,14 @@ FLAGS (all subcommands)
                         rungs                   [all manifest rungs]
   --linger-ms N         serve: deadline before a partial batch rung
                         dispatches padded       [0 = immediately]
+  --shards A,B          serve: dispatch across these shard nodes
+                        instead of in-process workers
+  --heartbeat-ms N      cluster: shard heartbeat cadence      [500]
+  --node-timeout-ms N   cluster: declare a shard dead after this long
+                        without a heartbeat (re-queues its work) [2500]
+  --stats-json PATH     serve/node: dump final ServerStats (local or
+                        cluster-aggregated) as canonical JSON on
+                        shutdown (node: needs a bounded --run-secs)
   --seed S --verbose --config FILE
 ";
 
@@ -233,12 +255,34 @@ fn cmd_sample(cfg: RunConfig, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `--stats-json PATH`: dump the final stats via the canonical
+/// serializer so benches and operators can diff runs.
+fn write_stats_json(path: Option<&str>, stats: &ServerStats)
+                    -> Result<()> {
+    let Some(path) = path else { return Ok(()) };
+    std::fs::write(path, stats_to_json(stats).dump())
+        .with_context(|| format!("writing stats json {path}"))?;
+    println!("wrote stats to {path}");
+    Ok(())
+}
+
 fn cmd_serve(cfg: RunConfig, args: &Args) -> Result<()> {
     let n_req = args.usize("requests", 6)?;
     let workers = args.usize("workers", 1)?;
+    let stats_json = args.get("stats-json").map(str::to_string);
     let method = Method::parse(args.str_or("method", "tq-dit"))
         .ok_or_else(|| anyhow::anyhow!("unknown --method"))?;
-    let server = GenServer::with_workers(cfg, method, workers);
+    // one driver for both topologies: the in-process server and the
+    // cluster frontend expose the same Dispatch surface
+    let server: Box<dyn Dispatch> = match cfg.shards.clone() {
+        Some(shards) => {
+            println!("serving via {} shard node(s): {}", shards.len(),
+                     shards.join(", "));
+            Box::new(Cluster::connect(
+                &shards, ClusterOpts::from_run_config(&cfg))?)
+        }
+        None => Box::new(GenServer::with_workers(cfg, method, workers)),
+    };
     let mut handles = Vec::new();
     for i in 0..n_req {
         let req = GenRequest { class: (i % 8) as i32, n: 3 + (i * 5) % 11 };
@@ -251,7 +295,40 @@ fn cmd_serve(cfg: RunConfig, args: &Args) -> Result<()> {
             Err(e) => println!("req {i} (id {id}): failed: {e}"),
         }
     }
-    server.shutdown().print();
+    let stats = server.shutdown();
+    stats.print();
+    write_stats_json(stats_json.as_deref(), &stats)?;
+    Ok(())
+}
+
+fn cmd_node(cfg: RunConfig, args: &Args) -> Result<()> {
+    let listen = args.str_or("listen", "127.0.0.1:7070").to_string();
+    let workers = args.usize("workers", 1)?;
+    let run_secs = args.u64("run-secs", 0)?;
+    let stats_json = args.get("stats-json").map(str::to_string);
+    let method = Method::parse(args.str_or("method", "tq-dit"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --method"))?;
+    let server = GenServer::with_workers(cfg, method, workers);
+    let node =
+        NodeServer::start(Box::new(server), &listen, NodeOpts::default())?;
+    println!("shard node listening on {} ({} worker(s), method {})",
+             node.addr(), workers, method.name());
+    if run_secs == 0 {
+        if stats_json.is_some() {
+            // no signal handling offline: an unbounded run ends by
+            // being killed, so the post-shutdown dump never executes
+            eprintln!("warning: --stats-json requires a bounded run \
+                       (--run-secs N); no stats will be written");
+        }
+        println!("serving until killed (--run-secs N bounds the run)");
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(Duration::from_secs(run_secs));
+    let stats = node.shutdown();
+    stats.print();
+    write_stats_json(stats_json.as_deref(), &stats)?;
     Ok(())
 }
 

@@ -1,0 +1,51 @@
+//! The submit/stats surface every generation service exposes.
+//!
+//! [`Dispatch`] is the seam between "where requests come from" and
+//! "where they run": the in-process [`Router`](crate::serve::Router)
+//! (mock or sampler-backed), the pipeline-owning
+//! [`GenServer`](crate::serve::GenServer), and the cross-node
+//! [`Cluster`](crate::serve::net::Cluster) all implement it. A shard
+//! node ([`crate::serve::net::NodeServer`]) serves *any* `Dispatch`
+//! over its TCP listener, and the CLI drives local and clustered
+//! serving through one `Box<dyn Dispatch>` — clients cannot tell (and
+//! must not care) whether their batch ran in-process or three hosts
+//! away.
+//!
+//! The contract mirrors the router's: `submit` returns typed
+//! [`ServeError`]s instead of panicking, responses (or typed
+//! failures) always arrive on the per-request channel — never a hang —
+//! and `stats` is a live snapshot that does not disturb service.
+
+use std::sync::mpsc::Receiver;
+
+use crate::serve::error::ServeError;
+use crate::serve::router::{GenRequest, GenResult, ServerStats};
+
+/// A generation service: local router, pipeline server, or remote
+/// cluster. `Send + Sync` so one boxed service can be shared across
+/// connection-handler and client threads.
+pub trait Dispatch: Send + Sync {
+    /// Submit a request; returns (request id, receiver yielding the
+    /// response or a typed error). Must reject — not queue forever —
+    /// when the service cannot take the request.
+    fn submit(&self, req: GenRequest)
+              -> Result<(u64, Receiver<GenResult>), ServeError>;
+
+    /// Image slots accepted but not yet computed (for this service's
+    /// best local estimate — a cluster sums shard reports).
+    fn queue_depth(&self) -> usize;
+
+    /// Workers (local threads or remote shard workers) not yet exited.
+    fn live_workers(&self) -> usize;
+
+    /// Workers built and currently serving.
+    fn ready_workers(&self) -> usize;
+
+    /// Live statistics snapshot; serving continues undisturbed.
+    fn stats(&self) -> ServerStats;
+
+    /// Stop accepting, drain in-flight work, and return final
+    /// statistics. (`Box<Self>` keeps the consuming shutdown
+    /// object-safe.)
+    fn shutdown(self: Box<Self>) -> ServerStats;
+}

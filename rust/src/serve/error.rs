@@ -31,6 +31,14 @@ pub enum ServeError {
     /// Every worker has exited; `cause` carries the first recorded
     /// failure (or a generic note when workers exited cleanly).
     AllWorkersDead { cause: String },
+    /// Cross-node serving: the shard node holding this request was
+    /// lost and no surviving shard remained to take it (a lost node
+    /// with survivors re-queues silently instead of surfacing this).
+    NodeLost { cause: String },
+    /// A wire-protocol violation scoped to this one request (bad
+    /// message, response channel torn down without a result) — the
+    /// connection and the rest of the service keep going.
+    Protocol { cause: String },
 }
 
 impl fmt::Display for ServeError {
@@ -55,6 +63,13 @@ impl fmt::Display for ServeError {
             }
             ServeError::AllWorkersDead { cause } => {
                 write!(f, "no live generation workers ({cause})")
+            }
+            ServeError::NodeLost { cause } => {
+                write!(f, "shard node lost with no surviving shard \
+                           ({cause})")
+            }
+            ServeError::Protocol { cause } => {
+                write!(f, "wire protocol violation: {cause}")
             }
         }
     }
@@ -81,5 +96,17 @@ mod tests {
     fn queue_full_reports_both_numbers() {
         let s = ServeError::QueueFull { queued: 99, cap: 64 }.to_string();
         assert!(s.contains("99") && s.contains("64"), "{s}");
+    }
+
+    #[test]
+    fn net_variants_name_their_cause() {
+        let s = ServeError::NodeLost {
+            cause: "shard 127.0.0.1:7070: heartbeat timeout".into(),
+        }
+        .to_string();
+        assert!(s.contains("127.0.0.1:7070"), "{s}");
+        let s = ServeError::Protocol { cause: "bad frame".into() }
+            .to_string();
+        assert!(s.contains("bad frame"), "{s}");
     }
 }

@@ -1,11 +1,18 @@
 //! Sharded generation service: request queue + dynamic batcher + a
 //! deadline-aware batch policy + a router that fans rung-sized batches
-//! out to N sampler-owning worker threads.
+//! out to N sampler-owning worker threads — locally, or across hosts
+//! through the [`net`] layer.
 //!
-//! # Architecture (batcher → policy → router → worker)
+//! # Architecture (client → cluster → wire → node → router)
 //!
 //! ```text
-//! clients ──submit──▶ Batcher (FIFO slots, arrival times, counters)
+//! clients ──submit──▶ Cluster ─ wire frames ─▶ NodeServer ─┐   (remote,
+//!    │                  (least-loaded shard,     per-conn  │  serve/net)
+//!    │                   re-queue on node loss)  handlers  │
+//!    │                                                     ▼
+//!    └──────────────── in-process (GenServer) ──────▶ Router
+//!                                                          │
+//!                     Batcher (FIFO slots, arrival times, counters)
 //!                        │
 //!            BatchPolicy.plan(ladder, pending, oldest_wait, draining)
 //!                        │            │
@@ -15,6 +22,11 @@
 //!        worker: pad take→rung, generate on the rung's executable,
 //!                deliver (per-rung stats) or fail (typed errors)
 //! ```
+//!
+//! Both entry points implement the [`Dispatch`] trait — submit /
+//! queue-depth / live stats / consuming shutdown — so everything above
+//! the router (CLI, demo, benches, shard nodes) drives a
+//! `Box<dyn Dispatch>` and cannot tell local from clustered serving.
 //!
 //! * **[`Batcher`]** is a pure FIFO of per-image slots. It knows
 //!   nothing about batch sizes; it tracks arrival times (for the
@@ -68,15 +80,24 @@
 //! queued client receives a typed `AllWorkersDead` with the first
 //! recorded cause. The [`batcher`] and [`policy`] are pure data
 //! structures (unit- and property-tested without a runtime).
+//!
+//! Across hosts the same discipline holds one level up: a lost shard
+//! node has its in-flight requests re-queued onto surviving shards by
+//! the [`net::Cluster`], and only when no shard remains do clients see
+//! a typed [`ServeError::NodeLost`] — zero hangs either way.
 
 pub mod batcher;
+pub mod dispatch;
 pub mod error;
+pub mod net;
 pub mod policy;
 pub mod router;
 pub mod server;
 
 pub use batcher::{Batcher, BatcherCounters, Slot};
+pub use dispatch::Dispatch;
 pub use error::ServeError;
+pub use net::{Cluster, ClusterOpts, HealthPolicy, NodeOpts, NodeServer};
 pub use policy::{BatchPlan, BatchPolicy, Ladder};
 pub use router::{
     GenBackend, GenRequest, GenResponse, GenResult, Router, RouterOpts,

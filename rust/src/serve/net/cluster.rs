@@ -1,0 +1,1050 @@
+//! Cluster frontend: the same submit/recv surface as a local server,
+//! dispatched across remote shard nodes.
+//!
+//! A [`Cluster`] connects to N [`NodeServer`](super::node::NodeServer)
+//! addresses and implements [`Dispatch`], so clients (and `serve_demo`,
+//! and the CLI) cannot tell it from an in-process
+//! [`GenServer`](crate::serve::GenServer):
+//!
+//! * **Placement** — each submit goes to the alive shard with the
+//!   least load: the queue depth it reported in its last heartbeat
+//!   plus the slots this frontend has in flight to it (covering the
+//!   window before the next heartbeat reflects them). See
+//!   [`Health::pick`].
+//! * **Health** — a monitor thread pings every live shard each
+//!   heartbeat interval; a shard that misses the timeout, or whose
+//!   connection errors on read or write, is declared dead (permanently
+//!   — restart the frontend to re-admit a recovered node).
+//! * **Re-queue on node loss** — the in-flight requests of a dead
+//!   shard are resubmitted to surviving shards (counted in
+//!   [`ServerStats::requeued`]), reusing the same
+//!   purge-and-repropagate semantics the router applies to a dead
+//!   worker's batch. Only when *no* shard survives does a client see
+//!   [`ServeError::NodeLost`] — otherwise node loss is invisible,
+//!   modulo latency.
+//! * **Stats** — shard nodes answer `StatsReq` with live
+//!   [`ServerStats`] snapshots; the cluster aggregates them via
+//!   [`ServerStats::absorb`] (so the batcher-conservation identity
+//!   `enqueued == dispatched + purged + pending` keeps holding over
+//!   the sum) and overlays what only it can see: cluster-level
+//!   request/failure counts, *end-to-end* latency percentiles
+//!   (queue + wire + compute, measured at the frontend), re-queues
+//!   and lost nodes.
+//!
+//! Locking: the state mutex and the per-shard writer mutexes are never
+//! held together — state decisions happen under the state lock, frame
+//! writes after it is released — so a slow TCP write can not stall
+//! submits, deliveries or the heartbeat monitor.
+
+use std::collections::HashMap;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::serve::dispatch::Dispatch;
+use crate::serve::error::ServeError;
+use crate::serve::net::health::{Health, HealthPolicy};
+use crate::serve::net::proto::Msg;
+use crate::serve::net::wire::{read_frame, write_frame, WireError};
+use crate::serve::router::{
+    GenRequest, GenResponse, GenResult, ServerStats,
+};
+use crate::util::bench::percentile;
+use crate::{debug_log, warn_log};
+
+/// Cluster tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterOpts {
+    /// Heartbeat cadence + node-loss deadline.
+    pub health: HealthPolicy,
+    /// Backpressure: reject submits once this many image slots are in
+    /// flight across all shards (mirrors the router's queue cap).
+    pub max_queue: usize,
+}
+
+impl Default for ClusterOpts {
+    fn default() -> Self {
+        ClusterOpts {
+            health: HealthPolicy::default(),
+            max_queue: 16384,
+        }
+    }
+}
+
+impl ClusterOpts {
+    /// The one place the config's millisecond knobs become a health
+    /// policy — the CLI, the demo and future callers must not each
+    /// repeat this mapping.
+    pub fn from_run_config(cfg: &crate::util::config::RunConfig)
+                           -> ClusterOpts {
+        ClusterOpts {
+            health: HealthPolicy {
+                heartbeat: Duration::from_millis(cfg.heartbeat_ms),
+                timeout: Duration::from_millis(cfg.node_timeout_ms),
+            },
+            ..ClusterOpts::default()
+        }
+    }
+}
+
+/// One outstanding request (enough to resubmit it on node loss).
+struct ClusterPending {
+    class: i32,
+    n: usize,
+    tx: Sender<GenResult>,
+    /// Shard currently responsible for it.
+    shard: usize,
+    t0: Instant,
+}
+
+struct ClusterState {
+    open: bool,
+    /// Deliberate teardown: connection drops are expected, not losses.
+    closing: bool,
+    health: Health,
+    pending: HashMap<u64, ClusterPending>,
+    /// Per-shard in-flight slot estimate (submitted minus answered).
+    inflight: Vec<usize>,
+    requests: u64,
+    failed_requests: u64,
+    requeued: u64,
+    nodes_lost: u64,
+    /// First recorded loss cause (attached to dead-cluster errors).
+    first_cause: Option<String>,
+    /// Ring of recent end-to-end latencies (completed requests only).
+    latencies: Vec<f64>,
+    latency_count: u64,
+    /// Last stats snapshot + the request seq it answered, per shard.
+    last_stats: Vec<Option<ServerStats>>,
+    stats_seen: Vec<u64>,
+    stats_want: u64,
+    ping_seq: u64,
+}
+
+struct ClusterShared {
+    addrs: Vec<String>,
+    /// Write halves; `None` once the shard is dead (or being torn
+    /// down). Never locked while holding the state mutex.
+    writers: Vec<Mutex<Option<TcpStream>>>,
+    state: Mutex<ClusterState>,
+    /// Signaled on delivery, node loss, stats arrival and teardown.
+    changed: Condvar,
+    opts: ClusterOpts,
+}
+
+impl ClusterShared {
+    fn lock(&self) -> std::sync::MutexGuard<'_, ClusterState> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+/// Handle to the cross-node generation service. `Sync` like the local
+/// router: any number of client threads submit through one reference.
+pub struct Cluster {
+    shared: Arc<ClusterShared>,
+    next_id: AtomicU64,
+    readers: Vec<JoinHandle<()>>,
+    monitor: Option<JoinHandle<()>>,
+    t_start: Instant,
+}
+
+impl Cluster {
+    /// Connect to the shard nodes. Unreachable addresses start dead
+    /// (logged); at least one must be reachable or this errors.
+    pub fn connect(addrs: &[String], opts: ClusterOpts) -> Result<Cluster> {
+        if addrs.is_empty() {
+            bail!("cluster needs at least one shard address");
+        }
+        let now = Instant::now();
+        let mut health = Health::new(addrs.len(), opts.health, now);
+        let mut writers = Vec::with_capacity(addrs.len());
+        let mut read_streams: Vec<Option<TcpStream>> =
+            Vec::with_capacity(addrs.len());
+        let mut nodes_lost = 0u64;
+        let mut first_cause = None;
+        for (i, addr) in addrs.iter().enumerate() {
+            match TcpStream::connect(addr) {
+                Ok(stream) => {
+                    let _ = stream.set_nodelay(true);
+                    // a shard that stops *reading* (wedged process,
+                    // half-open partition) must fail the write with a
+                    // typed error instead of blocking the writer mutex
+                    // — a blocked mutex would stall the heartbeat
+                    // monitor and every submit to that shard
+                    let _ = stream.set_write_timeout(
+                        Some(opts.health.timeout));
+                    match stream.try_clone() {
+                        Ok(reader) => {
+                            read_streams.push(Some(reader));
+                            writers.push(Mutex::new(Some(stream)));
+                        }
+                        Err(e) => {
+                            warn_log!("cluster: shard {addr}: clone \
+                                       failed: {e}");
+                            health.mark_dead(i);
+                            nodes_lost += 1;
+                            first_cause.get_or_insert(format!(
+                                "shard {addr}: {e}"));
+                            read_streams.push(None);
+                            writers.push(Mutex::new(None));
+                        }
+                    }
+                }
+                Err(e) => {
+                    warn_log!("cluster: shard {addr} unreachable: {e}");
+                    health.mark_dead(i);
+                    nodes_lost += 1;
+                    first_cause
+                        .get_or_insert(format!("shard {addr}: {e}"));
+                    read_streams.push(None);
+                    writers.push(Mutex::new(None));
+                }
+            }
+        }
+        if health.alive_count() == 0 {
+            bail!(
+                "no shard node reachable ({})",
+                first_cause.as_deref().unwrap_or("none configured")
+            );
+        }
+        let n = addrs.len();
+        let shared = Arc::new(ClusterShared {
+            addrs: addrs.to_vec(),
+            writers,
+            state: Mutex::new(ClusterState {
+                open: true,
+                closing: false,
+                health,
+                pending: HashMap::new(),
+                inflight: vec![0; n],
+                requests: 0,
+                failed_requests: 0,
+                requeued: 0,
+                nodes_lost,
+                first_cause,
+                latencies: Vec::new(),
+                latency_count: 0,
+                last_stats: vec![None; n],
+                stats_seen: vec![0; n],
+                stats_want: 0,
+                ping_seq: 0,
+            }),
+            changed: Condvar::new(),
+            opts,
+        });
+        let mut readers = Vec::new();
+        for (i, stream) in read_streams.into_iter().enumerate() {
+            let Some(stream) = stream else { continue };
+            let rd_shared = Arc::clone(&shared);
+            let h = std::thread::Builder::new()
+                .name(format!("tqdit-net-read-{i}"))
+                .spawn(move || reader_loop(rd_shared, i, stream))
+                .context("spawning cluster reader thread")?;
+            readers.push(h);
+        }
+        let mon_shared = Arc::clone(&shared);
+        let monitor = std::thread::Builder::new()
+            .name("tqdit-net-monitor".into())
+            .spawn(move || monitor_loop(mon_shared))
+            .context("spawning cluster monitor thread")?;
+        Ok(Cluster {
+            shared,
+            next_id: AtomicU64::new(0),
+            readers,
+            monitor: Some(monitor),
+            t_start: Instant::now(),
+        })
+    }
+
+    /// Submit a request to the least-loaded alive shard. Same contract
+    /// as the local router's `submit`; the one new failure mode is
+    /// [`ServeError::NodeLost`] when no shard remains.
+    pub fn submit(&self, req: GenRequest)
+                  -> std::result::Result<(u64, Receiver<GenResult>),
+                                         ServeError> {
+        let shard;
+        let id;
+        let rx;
+        {
+            let mut st = self.shared.lock();
+            if !st.open {
+                return Err(ServeError::ShuttingDown);
+            }
+            if st.health.alive_count() == 0 {
+                return Err(ServeError::NodeLost {
+                    cause: st
+                        .first_cause
+                        .clone()
+                        .unwrap_or_else(|| "no live shard nodes".into()),
+                });
+            }
+            if req.n > self.shared.opts.max_queue {
+                return Err(ServeError::RequestTooLarge {
+                    n: req.n,
+                    cap: self.shared.opts.max_queue,
+                });
+            }
+            let queued: usize = st.inflight.iter().sum();
+            if queued + req.n > self.shared.opts.max_queue {
+                return Err(ServeError::QueueFull {
+                    queued,
+                    cap: self.shared.opts.max_queue,
+                });
+            }
+            id = self.next_id.fetch_add(1, Ordering::Relaxed);
+            st.requests += 1;
+            let (tx, rx_) = channel();
+            rx = rx_;
+            if req.n == 0 {
+                // nothing to compute: complete immediately, no wire
+                let _ = tx.send(Ok(GenResponse {
+                    id,
+                    images: Vec::new(),
+                    latency_s: 0.0,
+                }));
+                return Ok((id, rx));
+            }
+            shard = st
+                .health
+                .pick(&st.inflight)
+                .expect("alive_count > 0 implies a pick");
+            st.pending.insert(id, ClusterPending {
+                class: req.class,
+                n: req.n,
+                tx,
+                shard,
+                t0: Instant::now(),
+            });
+            st.inflight[shard] += req.n;
+        }
+        // the wire write happens outside the state lock; on failure the
+        // lost-node path re-queues (or typed-fails) this very request
+        let msg = Msg::Submit { id, class: req.class, n: req.n };
+        if let Err(cause) = send_to_shard(&self.shared, shard, &msg) {
+            shard_lost(&self.shared, shard, &cause);
+        }
+        Ok((id, rx))
+    }
+
+    /// Slots submitted but not yet answered (local estimate).
+    pub fn queue_depth(&self) -> usize {
+        self.shared.lock().inflight.iter().sum()
+    }
+
+    /// Sum of live worker counts the alive shards last reported.
+    pub fn live_workers(&self) -> usize {
+        self.shared.lock().health.live_workers_total()
+    }
+
+    /// Sum of ready worker counts the alive shards last reported.
+    pub fn ready_workers(&self) -> usize {
+        self.shared.lock().health.ready_workers_total()
+    }
+
+    /// Shards still considered alive.
+    pub fn live_shards(&self) -> usize {
+        self.shared.lock().health.alive_count()
+    }
+
+    /// Aggregate of the latest shard snapshots + cluster-level
+    /// overlay (see module docs). The monitor refreshes shard
+    /// snapshots on the heartbeat cadence, so node-side counters are
+    /// at most one interval stale; a shard that never answered (just
+    /// connected, or dead before its first reply) contributes nothing
+    /// yet.
+    pub fn stats(&self) -> ServerStats {
+        let st = self.shared.lock();
+        aggregate(&st, self.t_start.elapsed().as_secs_f64())
+    }
+
+    /// Stop accepting, wait for in-flight requests to resolve (they
+    /// complete on their shards, or fail typed when shards die), pull
+    /// a final stats snapshot from every surviving shard, tear the
+    /// connections down and return the aggregate.
+    pub fn shutdown(mut self) -> ServerStats {
+        {
+            let mut st = self.shared.lock();
+            st.open = false;
+        }
+        // 1. drain: in-flight work either completes on a live shard or
+        // is failed typed by the lost-node path once the monitor (still
+        // running) declares its shard dead — so this loop terminates.
+        // A hard deadline bounds even a misbehaving-but-pinging shard.
+        let patience = (self.shared.opts.health.timeout * 10)
+            .max(Duration::from_secs(30));
+        let deadline = Instant::now() + patience;
+        {
+            let mut st = self.shared.lock();
+            while !st.pending.is_empty() {
+                let now = Instant::now();
+                if now >= deadline || st.health.alive_count() == 0 {
+                    break;
+                }
+                let wait =
+                    (deadline - now).min(Duration::from_millis(100));
+                let (g, _) = self
+                    .shared
+                    .changed
+                    .wait_timeout(st, wait)
+                    .unwrap_or_else(|p| p.into_inner());
+                st = g;
+            }
+            if !st.pending.is_empty() {
+                let stranded: Vec<u64> =
+                    st.pending.keys().copied().collect();
+                warn_log!("cluster: shutdown with {} request(s) still \
+                           unresolved; failing them typed",
+                          stranded.len());
+                for sid in stranded {
+                    let p = st.pending.remove(&sid).unwrap();
+                    st.inflight[p.shard] =
+                        st.inflight[p.shard].saturating_sub(p.n);
+                    st.failed_requests += 1;
+                    let _ = p.tx.send(Err(ServeError::NodeLost {
+                        cause: "cluster shut down with the request \
+                                still in flight"
+                            .into(),
+                    }));
+                }
+            }
+        }
+        // 2. final stats sweep from the survivors
+        let want = {
+            let mut st = self.shared.lock();
+            st.stats_want += 1;
+            st.stats_want
+        };
+        let survivors = self.shared.lock().health.alive_indices();
+        for i in survivors {
+            if let Err(c) = send_to_shard(&self.shared, i,
+                                          &Msg::StatsReq { seq: want }) {
+                shard_lost(&self.shared, i,
+                           &format!("stats request write failed: {c}"));
+            }
+        }
+        {
+            let stats_deadline =
+                Instant::now() + self.shared.opts.health.timeout;
+            let mut st = self.shared.lock();
+            loop {
+                let missing = st
+                    .health
+                    .alive_indices()
+                    .into_iter()
+                    .any(|i| st.stats_seen[i] < want);
+                let now = Instant::now();
+                if !missing || now >= stats_deadline {
+                    break;
+                }
+                let (g, _) = self
+                    .shared
+                    .changed
+                    .wait_timeout(st, stats_deadline - now)
+                    .unwrap_or_else(|p| p.into_inner());
+                st = g;
+            }
+        }
+        // 3. teardown: expected closes from here on
+        self.teardown();
+        let st = self.shared.lock();
+        aggregate(&st, self.t_start.elapsed().as_secs_f64())
+    }
+
+    /// Close every connection and join the reader/monitor threads
+    /// (idempotent; shared between shutdown and drop).
+    fn teardown(&mut self) {
+        {
+            let mut st = self.shared.lock();
+            st.closing = true;
+        }
+        self.shared.changed.notify_all();
+        for w in &self.shared.writers {
+            let mut g = w.lock().unwrap_or_else(|p| p.into_inner());
+            if let Some(s) = g.take() {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+        for h in self.readers.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(h) = self.monitor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Cluster {
+    /// A cluster dropped without `shutdown` still tears its threads
+    /// down; anything in flight is failed typed, never stranded.
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.lock();
+            st.open = false;
+            let stranded: Vec<u64> = st.pending.keys().copied().collect();
+            for sid in stranded {
+                let p = st.pending.remove(&sid).unwrap();
+                st.failed_requests += 1;
+                let _ = p.tx.send(Err(ServeError::ShuttingDown));
+            }
+        }
+        self.teardown();
+    }
+}
+
+impl Dispatch for Cluster {
+    fn submit(&self, req: GenRequest)
+              -> std::result::Result<(u64, Receiver<GenResult>),
+                                     ServeError> {
+        Cluster::submit(self, req)
+    }
+    fn queue_depth(&self) -> usize {
+        Cluster::queue_depth(self)
+    }
+    fn live_workers(&self) -> usize {
+        Cluster::live_workers(self)
+    }
+    fn ready_workers(&self) -> usize {
+        Cluster::ready_workers(self)
+    }
+    fn stats(&self) -> ServerStats {
+        Cluster::stats(self)
+    }
+    fn shutdown(self: Box<Self>) -> ServerStats {
+        Cluster::shutdown(*self)
+    }
+}
+
+/// Aggregate shard snapshots + cluster overlay (state lock held by the
+/// caller).
+fn aggregate(st: &ClusterState, wall_s: f64) -> ServerStats {
+    let mut agg = ServerStats::default();
+    for s in st.last_stats.iter().flatten() {
+        agg.absorb(s);
+    }
+    // what only the frontend can see: the client-facing request
+    // counts, re-queue/loss accounting, and true end-to-end latency
+    agg.requests = st.requests;
+    agg.failed_requests = st.failed_requests;
+    agg.requeued = st.requeued;
+    agg.nodes_lost = st.nodes_lost;
+    agg.wall_s = wall_s;
+    let mut lat = st.latencies.clone();
+    lat.sort_by(f64::total_cmp);
+    agg.latency_p50_s = percentile(&lat, 0.50);
+    agg.latency_p95_s = percentile(&lat, 0.95);
+    agg
+}
+
+/// Write one frame to a shard (its writer mutex only; never the state
+/// lock). `Err` carries the cause for the lost-node path.
+fn send_to_shard(shared: &ClusterShared, shard: usize, msg: &Msg)
+                 -> std::result::Result<(), String> {
+    let mut g = shared.writers[shard]
+        .lock()
+        .unwrap_or_else(|p| p.into_inner());
+    let Some(stream) = g.as_mut() else {
+        return Err("connection already closed".into());
+    };
+    write_frame(stream, &msg.encode()).map_err(|e| e.to_string())
+}
+
+/// Deliver a terminal outcome for request `id` (from whichever shard
+/// answered first — a request re-queued off a slow-but-alive shard may
+/// legitimately resolve twice; the second is logged and dropped).
+fn complete(shared: &ClusterShared, id: u64,
+            outcome: std::result::Result<Vec<f32>, ServeError>) {
+    let mut st = shared.lock();
+    let Some(p) = st.pending.remove(&id) else {
+        debug_log!("cluster: late/duplicate answer for request {id} \
+                    dropped");
+        return;
+    };
+    st.inflight[p.shard] = st.inflight[p.shard].saturating_sub(p.n);
+    let latency_s = p.t0.elapsed().as_secs_f64();
+    match outcome {
+        Ok(images) => {
+            crate::serve::router::push_latency(
+                &mut st.latencies, &mut st.latency_count, latency_s);
+            let _ = p.tx.send(Ok(GenResponse { id, images, latency_s }));
+        }
+        Err(err) => {
+            st.failed_requests += 1;
+            let _ = p.tx.send(Err(err));
+        }
+    }
+    let drained = st.pending.is_empty();
+    drop(st);
+    if drained {
+        shared.changed.notify_all();
+    }
+}
+
+/// Declare a shard dead and re-home its in-flight requests: each is
+/// resubmitted to the least-loaded survivor, or failed with a typed
+/// [`ServeError::NodeLost`] when none remains. Runs the cleanup
+/// exactly once per shard (`Health::mark_dead` gates re-entry);
+/// resubmit write failures cascade iteratively, never recursively.
+fn shard_lost(shared: &ClusterShared, shard: usize, cause: &str) {
+    let mut work: Vec<(usize, String)> =
+        vec![(shard, cause.to_string())];
+    while let Some((i, cause)) = work.pop() {
+        // close the socket first so the shard's reader thread unblocks
+        {
+            let mut g = shared.writers[i]
+                .lock()
+                .unwrap_or_else(|p| p.into_inner());
+            if let Some(s) = g.take() {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+        let mut resubmits: Vec<(usize, Msg)> = Vec::new();
+        {
+            let mut st = shared.lock();
+            if !st.health.mark_dead(i) {
+                continue; // already handled by a racing path
+            }
+            if st.closing {
+                continue; // deliberate teardown, not a loss
+            }
+            st.nodes_lost += 1;
+            // drop the dead shard's snapshot: its in-flight slots are
+            // about to be re-enqueued (and so re-counted) on the
+            // survivors, and a stale snapshot would double-count them
+            // and report phantom `pending` forever
+            st.last_stats[i] = None;
+            let full_cause =
+                format!("shard {}: {}", shared.addrs[i], cause);
+            warn_log!("cluster: node lost — {full_cause}; re-queuing \
+                       its in-flight requests");
+            if st.first_cause.is_none() {
+                st.first_cause = Some(full_cause.clone());
+            }
+            st.inflight[i] = 0;
+            let moved: Vec<u64> = st
+                .pending
+                .iter()
+                .filter(|(_, p)| p.shard == i)
+                .map(|(&id, _)| id)
+                .collect();
+            for id in moved {
+                match st.health.pick(&st.inflight) {
+                    Some(j) => {
+                        let p = st
+                            .pending
+                            .get_mut(&id)
+                            .expect("collected from pending");
+                        p.shard = j;
+                        let (class, n) = (p.class, p.n);
+                        st.inflight[j] += n;
+                        st.requeued += 1;
+                        resubmits
+                            .push((j, Msg::Submit { id, class, n }));
+                    }
+                    None => {
+                        let p = st
+                            .pending
+                            .remove(&id)
+                            .expect("collected from pending");
+                        st.failed_requests += 1;
+                        let _ = p.tx.send(Err(ServeError::NodeLost {
+                            cause: format!(
+                                "{full_cause}; no surviving shard to \
+                                 take the request"
+                            ),
+                        }));
+                    }
+                }
+            }
+        }
+        shared.changed.notify_all();
+        for (j, msg) in resubmits {
+            if let Err(c) = send_to_shard(shared, j, &msg) {
+                work.push((j, c));
+            }
+        }
+    }
+}
+
+/// Per-shard reader: pumps frames into deliveries, heartbeat records
+/// and stats snapshots until the connection dies (loss or teardown).
+fn reader_loop(shared: Arc<ClusterShared>, shard: usize,
+               mut stream: TcpStream) {
+    loop {
+        let payload = match read_frame(&mut stream) {
+            Ok(p) => p,
+            Err(WireError::Closed) => {
+                shard_lost(&shared, shard, "connection closed");
+                return;
+            }
+            Err(e) => {
+                shard_lost(&shared, shard, &e.to_string());
+                return;
+            }
+        };
+        // a bad message in a good frame degrades that message only
+        let msg = match Msg::decode(&payload) {
+            Ok(m) => m,
+            Err(e) => {
+                warn_log!("cluster: shard {}: skipping bad message: \
+                           {e:#}",
+                          shared.addrs[shard]);
+                continue;
+            }
+        };
+        match msg {
+            Msg::Response { id, images, .. } => {
+                complete(&shared, id, Ok(images));
+            }
+            Msg::ErrorResp { id, err } => {
+                complete(&shared, id, Err(err));
+            }
+            Msg::Pong { queue_depth, live_workers, ready_workers, .. } => {
+                let mut st = shared.lock();
+                st.health.pong(shard, queue_depth, live_workers,
+                               ready_workers, Instant::now());
+            }
+            Msg::Stats { seq, stats } => {
+                let mut st = shared.lock();
+                // a snapshot racing the shard's death must not
+                // resurrect the cleared entry (its slots re-count on
+                // the survivors)
+                if st.health.is_alive(shard) {
+                    st.last_stats[shard] = Some(stats);
+                    st.stats_seen[shard] =
+                        st.stats_seen[shard].max(seq);
+                }
+                drop(st);
+                shared.changed.notify_all();
+            }
+            other => {
+                warn_log!("cluster: shard {}: skipping unexpected {} \
+                           message",
+                          shared.addrs[shard], other.kind());
+            }
+        }
+    }
+}
+
+/// Heartbeat monitor: pings every alive shard each interval and
+/// declares the ones past the timeout dead. The condvar wait lets
+/// teardown interrupt a sleeping monitor immediately; spurious wakes
+/// (delivery notifications share the condvar) are cheap because pings
+/// are rate-limited to the heartbeat cadence.
+fn monitor_loop(shared: Arc<ClusterShared>) {
+    let heartbeat = shared.opts.health.heartbeat;
+    let mut last_ping: Option<Instant> = None;
+    loop {
+        {
+            let st = shared.lock();
+            if st.closing {
+                return;
+            }
+            let remaining = match last_ping {
+                None => Duration::ZERO,
+                Some(at) => heartbeat
+                    .saturating_sub(at.elapsed()),
+            };
+            if !remaining.is_zero() {
+                let (g, _) = shared
+                    .changed
+                    .wait_timeout(st, remaining)
+                    .unwrap_or_else(|p| p.into_inner());
+                if g.closing {
+                    return;
+                }
+            }
+        }
+        if let Some(at) = last_ping {
+            if at.elapsed() < heartbeat {
+                continue; // woken by a notification, not the cadence
+            }
+        }
+        last_ping = Some(Instant::now());
+        let (seq, stats_seq, alive) = {
+            let mut st = shared.lock();
+            st.ping_seq += 1;
+            // stats requests ride the heartbeat cadence so
+            // `Cluster::stats()` is never more than one interval
+            // stale; the shutdown sweep bumps the same counter, so
+            // its wait still demands a strictly fresher snapshot
+            st.stats_want += 1;
+            (st.ping_seq, st.stats_want, st.health.alive_indices())
+        };
+        for i in alive {
+            if let Err(c) =
+                send_to_shard(&shared, i, &Msg::Ping { seq })
+            {
+                shard_lost(&shared, i,
+                           &format!("heartbeat write failed: {c}"));
+                continue;
+            }
+            let _ = send_to_shard(&shared, i,
+                                  &Msg::StatsReq { seq: stats_seq });
+        }
+        let expired = {
+            let st = shared.lock();
+            st.health.expired(Instant::now())
+        };
+        for i in expired {
+            let timeout = shared.opts.health.timeout;
+            shard_lost(&shared, i,
+                       &format!("heartbeat timeout (> {timeout:?})"));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::net::testutil::mock_node;
+    use std::net::TcpListener;
+
+    /// Fast heartbeats so pongs flow promptly, but a *generous*
+    /// timeout: every death these tests exercise is detected via the
+    /// severed connection (instant), and a tight timeout would let a
+    /// loaded CI runner's scheduling stalls kill healthy mock nodes.
+    fn fast_opts() -> ClusterOpts {
+        ClusterOpts {
+            health: HealthPolicy {
+                heartbeat: Duration::from_millis(20),
+                timeout: Duration::from_secs(5),
+            },
+            ..ClusterOpts::default()
+        }
+    }
+
+    fn recv_ok(rx: &Receiver<GenResult>) -> GenResponse {
+        rx.recv_timeout(Duration::from_secs(20))
+            .expect("no hang")
+            .expect("request must succeed")
+    }
+
+    #[test]
+    fn two_nodes_serve_mixed_load_with_exact_routing() {
+        // a small per-slot delay keeps work in flight while the submit
+        // loop runs, so the in-flight placement estimate alternates
+        // shards deterministically
+        let (node_a, addr_a) =
+            mock_node(vec![1, 2, 4], 3, Duration::from_millis(2));
+        let (node_b, addr_b) =
+            mock_node(vec![1, 2, 4], 3, Duration::from_millis(2));
+        let cluster = Cluster::connect(
+            &[addr_a.to_string(), addr_b.to_string()],
+            fast_opts(),
+        )
+        .unwrap();
+        let mut rxs = Vec::new();
+        let mut total = 0usize;
+        for i in 0..12usize {
+            let n = 1 + i % 4;
+            total += n;
+            let class = (i % 7) as i32;
+            let (_, rx) =
+                cluster.submit(GenRequest { class, n }).unwrap();
+            rxs.push((class, n, rx));
+        }
+        for (class, n, rx) in rxs {
+            let resp = recv_ok(&rx);
+            assert_eq!(resp.images.len(), n * 3);
+            assert!(
+                resp.images.iter().all(|&p| p == class as f32),
+                "cross-shard pixel mixup for class {class}"
+            );
+        }
+        let agg = cluster.shutdown();
+        assert_eq!(agg.requests, 12);
+        assert_eq!(agg.failed_requests, 0);
+        assert_eq!(agg.nodes_lost, 0);
+        // node-side compute counters aggregated over both shards
+        assert_eq!(agg.images as usize, total);
+        assert_eq!(agg.pending, 0);
+        assert_eq!(agg.enqueued,
+                   agg.dispatched + agg.purged + agg.pending);
+        let st_a = node_a.shutdown();
+        let st_b = node_b.shutdown();
+        // placement spread work across both shards
+        assert!(st_a.requests > 0 && st_b.requests > 0,
+                "one shard starved: {} / {}", st_a.requests,
+                st_b.requests);
+        // cluster aggregate == sum of per-node shutdown stats for the
+        // compute counters
+        assert_eq!(st_a.images + st_b.images, agg.images);
+        let mut summed = st_a.clone();
+        summed.absorb(&st_b);
+        assert_eq!(summed.enqueued,
+                   summed.dispatched + summed.purged + summed.pending);
+    }
+
+    #[test]
+    fn severed_node_requeues_inflight_to_survivor() {
+        // slow backend holds work in flight long enough to sever under
+        // load deterministically
+        let (node_a, addr_a) =
+            mock_node(vec![1, 2, 4], 2, Duration::from_millis(20));
+        let (node_b, addr_b) =
+            mock_node(vec![1, 2, 4], 2, Duration::from_millis(20));
+        let cluster = Cluster::connect(
+            &[addr_a.to_string(), addr_b.to_string()],
+            fast_opts(),
+        )
+        .unwrap();
+        let mut rxs = Vec::new();
+        for i in 0..8usize {
+            let class = (1 + i % 5) as i32;
+            let (_, rx) =
+                cluster.submit(GenRequest { class, n: 2 }).unwrap();
+            rxs.push((class, rx));
+        }
+        // both shards now hold queued work (placement alternates on
+        // the in-flight estimate); partition shard A mid-load
+        std::thread::sleep(Duration::from_millis(5));
+        node_a.sever_connections();
+        for (class, rx) in rxs {
+            let resp = recv_ok(&rx);
+            assert_eq!(resp.images.len(), 2 * 2);
+            assert!(resp.images.iter().all(|&p| p == class as f32));
+        }
+        let agg = cluster.shutdown();
+        assert_eq!(agg.requests, 8);
+        assert_eq!(agg.failed_requests, 0, "re-queue must be invisible");
+        assert_eq!(agg.nodes_lost, 1);
+        assert!(agg.requeued >= 1,
+                "shard A held in-flight work when severed");
+        // the dead shard is out of the aggregate; the survivor's
+        // conservation identity still holds over the sum
+        assert_eq!(agg.enqueued,
+                   agg.dispatched + agg.purged + agg.pending);
+        // per-node conservation also holds on the severed node, which
+        // kept draining its dispatched work after the partition
+        let st_a = node_a.shutdown();
+        assert_eq!(st_a.enqueued,
+                   st_a.dispatched + st_a.purged + st_a.pending);
+        node_b.shutdown();
+    }
+
+    #[test]
+    fn losing_every_node_fails_typed_never_hangs() {
+        let (node, addr) =
+            mock_node(vec![4], 2, Duration::from_millis(30));
+        let cluster =
+            Cluster::connect(&[addr.to_string()], fast_opts()).unwrap();
+        let (_, rx) =
+            cluster.submit(GenRequest { class: 1, n: 4 }).unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        node.sever_connections();
+        match rx.recv_timeout(Duration::from_secs(20)).expect("no hang") {
+            Err(ServeError::NodeLost { cause }) => {
+                assert!(cause.contains(&addr.to_string()), "{cause}");
+            }
+            other => panic!("expected NodeLost, got {other:?}"),
+        }
+        // later submits fail fast with the recorded cause
+        match cluster.submit(GenRequest { class: 0, n: 1 }) {
+            Err(ServeError::NodeLost { .. }) => {}
+            other => panic!("expected NodeLost reject, got {other:?}"),
+        }
+        let agg = cluster.shutdown();
+        assert_eq!(agg.nodes_lost, 1);
+        assert_eq!(agg.failed_requests, 1);
+        node.shutdown();
+    }
+
+    #[test]
+    fn silent_shard_is_timed_out_and_its_load_rehomed() {
+        // a listener that accepts nothing: connects succeed (kernel
+        // backlog) but no pong ever comes back
+        let silent = TcpListener::bind("127.0.0.1:0").unwrap();
+        let silent_addr = silent.local_addr().unwrap();
+        let (node, addr) = mock_node(vec![1, 2, 4], 2, Duration::ZERO);
+        // this test is the one that needs expiry itself to fire, so it
+        // runs a shorter (but still stall-tolerant) timeout
+        let cluster = Cluster::connect(
+            &[silent_addr.to_string(), addr.to_string()],
+            ClusterOpts {
+                health: HealthPolicy {
+                    heartbeat: Duration::from_millis(20),
+                    timeout: Duration::from_millis(600),
+                },
+                ..ClusterOpts::default()
+            },
+        )
+        .unwrap();
+        // shard 0 (silent, reported depth 0) wins the first pick: its
+        // requests must be re-homed once the heartbeat timeout fires
+        let mut rxs = Vec::new();
+        for i in 0..4usize {
+            let class = (i % 3) as i32 + 1;
+            let (_, rx) =
+                cluster.submit(GenRequest { class, n: 1 }).unwrap();
+            rxs.push((class, rx));
+        }
+        for (class, rx) in rxs {
+            let resp = recv_ok(&rx);
+            assert!(resp.images.iter().all(|&p| p == class as f32));
+        }
+        let agg = cluster.shutdown();
+        assert_eq!(agg.requests, 4);
+        assert_eq!(agg.failed_requests, 0);
+        assert_eq!(agg.nodes_lost, 1, "the silent shard must time out");
+        assert!(agg.requeued >= 1, "the silent shard got the first pick");
+        node.shutdown();
+        drop(silent);
+    }
+
+    #[test]
+    fn cluster_backpressure_is_typed() {
+        let (node, addr) =
+            mock_node(vec![4], 2, Duration::from_millis(50));
+        let cluster = Cluster::connect(
+            &[addr.to_string()],
+            ClusterOpts { max_queue: 4, ..fast_opts() },
+        )
+        .unwrap();
+        let err =
+            cluster.submit(GenRequest { class: 0, n: 5 }).unwrap_err();
+        assert!(matches!(err,
+                         ServeError::RequestTooLarge { n: 5, cap: 4 }));
+        let (_, rx) =
+            cluster.submit(GenRequest { class: 1, n: 3 }).unwrap();
+        let err =
+            cluster.submit(GenRequest { class: 2, n: 2 }).unwrap_err();
+        assert!(matches!(err,
+                         ServeError::QueueFull { queued: 3, cap: 4 }));
+        recv_ok(&rx);
+        cluster.shutdown();
+        node.shutdown();
+    }
+
+    #[test]
+    fn zero_image_request_completes_without_wire_traffic() {
+        let (node, addr) = mock_node(vec![2], 2, Duration::ZERO);
+        let cluster =
+            Cluster::connect(&[addr.to_string()], fast_opts()).unwrap();
+        let (id, rx) =
+            cluster.submit(GenRequest { class: 1, n: 0 }).unwrap();
+        let resp = recv_ok(&rx);
+        assert_eq!(resp.id, id);
+        assert!(resp.images.is_empty());
+        cluster.shutdown();
+        node.shutdown();
+    }
+
+    #[test]
+    fn connect_to_nothing_errors() {
+        // a bound-then-dropped listener gives a port that refuses
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let err = Cluster::connect(&[addr.to_string()], fast_opts())
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("no shard node reachable"),
+                "{err:#}");
+        assert!(Cluster::connect(&[], fast_opts()).is_err());
+    }
+}

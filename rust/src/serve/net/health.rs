@@ -1,0 +1,261 @@
+//! Shard health tracking + load-aware placement.
+//!
+//! [`Health`] is the cluster dispatcher's pure bookkeeping core: which
+//! shards are alive, how recently each answered a heartbeat, and how
+//! loaded each claims to be. Everything is a function of explicit
+//! `Instant`s passed in by the caller — no clocks, no sockets, no
+//! locks — in the same spirit as [`crate::serve::policy`], so every
+//! liveness/placement property is unit-tested deterministically. The
+//! [`Cluster`](crate::serve::net::cluster::Cluster) holds a `Health`
+//! under its state mutex and feeds it pongs, errors and `now`.
+//!
+//! Liveness rule: a shard starts alive with a full grace window (its
+//! connect instant counts as a heartbeat); it dies when the caller
+//! reports a connection error ([`Health::mark_dead`]) or when its last
+//! heartbeat is older than the policy timeout ([`Health::expired`]).
+//! Death is permanent — re-admitting flapping nodes is a deliberate
+//! non-goal (restart the frontend to re-pick up a recovered shard).
+//!
+//! Placement rule ([`Health::pick`]): the alive shard minimizing
+//! *reported queue depth* (its last pong) *plus local in-flight*
+//! (slots this frontend sent it that have not come back — covers the
+//! window before the next pong reflects them), ties to the lowest
+//! index.
+
+use std::time::{Duration, Instant};
+
+/// Heartbeat cadence + liveness deadline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HealthPolicy {
+    /// How often the monitor pings each live shard.
+    pub heartbeat: Duration,
+    /// A shard whose last heartbeat (or connect) is older than this is
+    /// declared dead.
+    pub timeout: Duration,
+}
+
+impl Default for HealthPolicy {
+    fn default() -> Self {
+        HealthPolicy {
+            heartbeat: Duration::from_millis(500),
+            timeout: Duration::from_millis(2500),
+        }
+    }
+}
+
+/// Last known state of one shard.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardHealth {
+    pub alive: bool,
+    /// Last pong (or the connect instant before the first pong).
+    pub last_seen: Instant,
+    /// Queue depth the shard reported in its last pong.
+    pub queue_depth: usize,
+    pub live_workers: usize,
+    pub ready_workers: usize,
+}
+
+/// Liveness + load book for a fixed shard set.
+#[derive(Clone, Debug)]
+pub struct Health {
+    policy: HealthPolicy,
+    shards: Vec<ShardHealth>,
+}
+
+impl Health {
+    /// All `n` shards start alive with `now` as their grace heartbeat.
+    pub fn new(n: usize, policy: HealthPolicy, now: Instant) -> Health {
+        Health {
+            policy,
+            shards: (0..n)
+                .map(|_| ShardHealth {
+                    alive: true,
+                    last_seen: now,
+                    queue_depth: 0,
+                    live_workers: 0,
+                    ready_workers: 0,
+                })
+                .collect(),
+        }
+    }
+
+    pub fn policy(&self) -> HealthPolicy {
+        self.policy
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    pub fn shard(&self, i: usize) -> &ShardHealth {
+        &self.shards[i]
+    }
+
+    pub fn is_alive(&self, i: usize) -> bool {
+        self.shards[i].alive
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.shards.iter().filter(|s| s.alive).count()
+    }
+
+    /// Indices of shards currently alive (heartbeat targets).
+    pub fn alive_indices(&self) -> Vec<usize> {
+        (0..self.shards.len()).filter(|&i| self.shards[i].alive).collect()
+    }
+
+    /// Record a heartbeat reply. A pong from a shard already declared
+    /// dead is ignored (death is permanent; see module docs).
+    pub fn pong(&mut self, i: usize, queue_depth: usize,
+                live_workers: usize, ready_workers: usize, now: Instant) {
+        let s = &mut self.shards[i];
+        if !s.alive {
+            return;
+        }
+        s.last_seen = now;
+        s.queue_depth = queue_depth;
+        s.live_workers = live_workers;
+        s.ready_workers = ready_workers;
+    }
+
+    /// Declare a shard dead (connection error, heartbeat expiry).
+    /// Returns false when it already was — callers use this to make
+    /// the lost-node cleanup run exactly once per shard.
+    pub fn mark_dead(&mut self, i: usize) -> bool {
+        let s = &mut self.shards[i];
+        let was_alive = s.alive;
+        s.alive = false;
+        was_alive
+    }
+
+    /// Alive shards whose last heartbeat is older than the timeout as
+    /// of `now` (the caller then runs its lost-node path on each).
+    pub fn expired(&self, now: Instant) -> Vec<usize> {
+        (0..self.shards.len())
+            .filter(|&i| {
+                let s = &self.shards[i];
+                s.alive
+                    && now.saturating_duration_since(s.last_seen)
+                        > self.policy.timeout
+            })
+            .collect()
+    }
+
+    /// Least-loaded alive shard: minimal reported depth + local
+    /// in-flight estimate (`extra[i]`), ties to the lowest index.
+    /// `None` when every shard is dead.
+    pub fn pick(&self, extra: &[usize]) -> Option<usize> {
+        debug_assert_eq!(extra.len(), self.shards.len());
+        (0..self.shards.len())
+            .filter(|&i| self.shards[i].alive)
+            .min_by_key(|&i| self.shards[i].queue_depth + extra[i])
+    }
+
+    /// Sum of the last-reported live worker counts over alive shards.
+    pub fn live_workers_total(&self) -> usize {
+        self.shards
+            .iter()
+            .filter(|s| s.alive)
+            .map(|s| s.live_workers)
+            .sum()
+    }
+
+    /// Sum of the last-reported ready worker counts over alive shards.
+    pub fn ready_workers_total(&self) -> usize {
+        self.shards
+            .iter()
+            .filter(|s| s.alive)
+            .map(|s| s.ready_workers)
+            .sum()
+    }
+
+    /// Sum of the last-reported queue depths over alive shards.
+    pub fn depth_total(&self) -> usize {
+        self.shards
+            .iter()
+            .filter(|s| s.alive)
+            .map(|s| s.queue_depth)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy_ms(hb: u64, to: u64) -> HealthPolicy {
+        HealthPolicy {
+            heartbeat: Duration::from_millis(hb),
+            timeout: Duration::from_millis(to),
+        }
+    }
+
+    #[test]
+    fn starts_alive_with_grace_window() {
+        let t0 = Instant::now();
+        let h = Health::new(3, policy_ms(10, 50), t0);
+        assert_eq!(h.alive_count(), 3);
+        // inside the grace window nothing expires…
+        assert!(h.expired(t0 + Duration::from_millis(50)).is_empty());
+        // …one tick past it, everything silent does
+        assert_eq!(h.expired(t0 + Duration::from_millis(51)), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn pong_refreshes_only_its_shard() {
+        let t0 = Instant::now();
+        let mut h = Health::new(2, policy_ms(10, 50), t0);
+        h.pong(1, 7, 2, 2, t0 + Duration::from_millis(40));
+        assert_eq!(h.expired(t0 + Duration::from_millis(60)), vec![0]);
+        assert_eq!(h.shard(1).queue_depth, 7);
+        assert_eq!(h.live_workers_total(), 2);
+    }
+
+    #[test]
+    fn mark_dead_is_idempotent_and_permanent() {
+        let t0 = Instant::now();
+        let mut h = Health::new(2, policy_ms(10, 50), t0);
+        assert!(h.mark_dead(0), "first death reported once");
+        assert!(!h.mark_dead(0), "second report is a no-op");
+        assert_eq!(h.alive_count(), 1);
+        // a late pong from the dead shard must not resurrect it
+        h.pong(0, 0, 4, 4, t0 + Duration::from_millis(1));
+        assert!(!h.is_alive(0));
+        assert_eq!(h.alive_indices(), vec![1]);
+        // dead shards never show up as expired again
+        assert!(h.expired(t0 + Duration::from_secs(9)) == vec![1]);
+    }
+
+    #[test]
+    fn pick_minimizes_reported_plus_inflight() {
+        let t0 = Instant::now();
+        let mut h = Health::new(3, policy_ms(10, 50), t0);
+        h.pong(0, 5, 1, 1, t0);
+        h.pong(1, 2, 1, 1, t0);
+        h.pong(2, 2, 1, 1, t0);
+        // reported depth ties between 1 and 2 → lowest index
+        assert_eq!(h.pick(&[0, 0, 0]), Some(1));
+        // local in-flight breaks the tie the other way
+        assert_eq!(h.pick(&[0, 4, 0]), Some(2));
+        // and can overcome a lower reported depth
+        assert_eq!(h.pick(&[0, 4, 9]), Some(0));
+    }
+
+    #[test]
+    fn pick_skips_dead_shards_and_empty_cluster_is_none() {
+        let t0 = Instant::now();
+        let mut h = Health::new(2, policy_ms(10, 50), t0);
+        h.pong(0, 0, 1, 1, t0);
+        h.pong(1, 99, 1, 1, t0);
+        h.mark_dead(0);
+        assert_eq!(h.pick(&[0, 0]), Some(1));
+        h.mark_dead(1);
+        assert_eq!(h.pick(&[0, 0]), None);
+        assert_eq!(h.live_workers_total(), 0);
+        assert_eq!(h.depth_total(), 0);
+    }
+}

@@ -1,0 +1,57 @@
+//! Cross-node serving: the serve stack stretched over TCP.
+//!
+//! The PR 1–3 stack shards across *threads* in one process; this
+//! subsystem shards across *processes and hosts* with nothing but
+//! `std::net` and the existing thread pool — no async runtime:
+//!
+//! ```text
+//! clients ──▶ Cluster (Dispatch)                      frontend process
+//!               │  least-loaded placement (heartbeat depth + in-flight)
+//!               │  re-queue on node loss, NodeLost only when none left
+//!               ▼
+//!           wire frames (length-prefixed, versioned, checksummed)
+//!           proto messages (canonical JSON: submit/response/error/
+//!                           ping/pong/stats)
+//!               ▼
+//!           NodeServer (TCP listener)                   shard process
+//!               │  one handler thread per connection,
+//!               │  forwarder pool for responses
+//!               ▼
+//!           Dispatch (GenServer → Router → Batcher → samplers)
+//! ```
+//!
+//! Layering, bottom-up:
+//!
+//! * [`wire`] — the byte layer: framed, versioned, checksummed, every
+//!   malformed input a typed [`wire::WireError`]. Knows nothing about
+//!   messages.
+//! * [`proto`] — the message layer: [`proto::Msg`] as canonical JSON
+//!   inside frames, plus the [`ServerStats`](crate::serve::ServerStats)
+//!   / [`ServeError`](crate::serve::ServeError) serde the stats
+//!   protocol and `--stats-json` share. Knows nothing about sockets.
+//! * [`health`] — pure liveness/placement bookkeeping (heartbeat
+//!   expiry, least-loaded pick), unit-tested with explicit clocks.
+//! * [`node`] — a [`Dispatch`](crate::serve::Dispatch) service behind
+//!   a listener.
+//! * [`cluster`] — the frontend: same `Dispatch` surface, requests
+//!   spread over shard nodes, failover per [`health`].
+//!
+//! The loopback topology (nodes and cluster in one process over
+//! `127.0.0.1`) is first-class: the cluster tests, the
+//! `benches/runtime.rs` smoke section and `serve_demo --nodes N` all
+//! run it, including mid-load node kills.
+
+pub mod cluster;
+pub mod health;
+pub mod node;
+pub mod proto;
+pub mod wire;
+
+#[cfg(test)]
+pub(crate) mod testutil;
+
+pub use cluster::{Cluster, ClusterOpts};
+pub use health::{Health, HealthPolicy};
+pub use node::{NodeOpts, NodeServer};
+pub use proto::Msg;
+pub use wire::WireError;

@@ -1,0 +1,568 @@
+//! Shard-node server: any [`Dispatch`] service behind a TCP listener.
+//!
+//! A node wraps the in-process serve stack (normally a
+//! [`GenServer`](crate::serve::GenServer), a mock router in tests) and
+//! speaks the [`proto`](crate::serve::net::proto) message set over
+//! [`wire`](crate::serve::net::wire) frames:
+//!
+//! * one **accept thread** takes connections;
+//! * one **connection-handler thread per client** reads frames and
+//!   multiplexes `Submit`s straight into the shared service (whose
+//!   batcher then packs slots from *all* connections into rungs, same
+//!   as local threads would) — `Ping` and `StatsReq` are answered
+//!   inline so heartbeats stay prompt under load;
+//! * completed responses are forwarded by a small fixed
+//!   [`ThreadPool`]: each job blocks on one request's response channel
+//!   and writes the reply frame under the connection's writer mutex
+//!   (frames from concurrent requests interleave whole, never torn).
+//!
+//! Failure containment mirrors the router's ethos: a malformed
+//! *message* (valid frame, bad JSON) is logged and skipped — the
+//! connection lives on; a broken *frame stream* closes only that
+//! connection; a client hanging up drops only its own replies. The
+//! node never panics on peer bytes.
+//!
+//! Known limitation: heartbeat replies share the connection (and its
+//! writer mutex) with response frames, so on a genuinely slow link a
+//! pong can queue behind a large in-progress response — size
+//! `--node-timeout-ms` above the worst-case frame transfer time, or
+//! see ROADMAP (separate control-plane channel) for the real fix.
+//! Writes carry a timeout so a peer that stops *reading* fails typed
+//! instead of wedging the writer mutex. [`NodeServer::sever_connections`]
+//! force-closes every live connection without touching the service —
+//! the fault injection the cluster tests and the loopback bench use to
+//! simulate a network partition.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::serve::dispatch::Dispatch;
+use crate::serve::error::ServeError;
+use crate::serve::net::proto::Msg;
+use crate::serve::net::wire::{read_frame, write_frame, WireError};
+use crate::serve::router::{GenRequest, ServerStats};
+use crate::util::threadpool::ThreadPool;
+use crate::{debug_log, warn_log};
+
+/// Node tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct NodeOpts {
+    /// Response-forwarder pool size: how many completed requests can
+    /// be serialized back to clients concurrently.
+    pub forwarders: usize,
+}
+
+impl Default for NodeOpts {
+    fn default() -> Self {
+        NodeOpts { forwarders: 8 }
+    }
+}
+
+/// A client that stops *reading* must fail our writes with a typed
+/// error after this long instead of blocking the connection's writer
+/// mutex forever (which would also block the inline pong path).
+const WRITE_TIMEOUT: std::time::Duration =
+    std::time::Duration::from_secs(30);
+
+struct NodeShared {
+    svc: Box<dyn Dispatch>,
+    pool: ThreadPool,
+    /// `(conn id, stream clone)` for every live connection, kept so
+    /// shutdown (and fault injection) can force-close them and unblock
+    /// the readers. Handlers remove their own entry on exit.
+    streams: Mutex<Vec<(usize, TcpStream)>>,
+    /// Handles of the connection-handler threads (appended by the
+    /// accept thread, drained by shutdown).
+    conn_handles: Mutex<Vec<JoinHandle<()>>>,
+    closing: AtomicBool,
+}
+
+/// A serving shard node; dropped or [`NodeServer::shutdown`] stops it.
+pub struct NodeServer {
+    /// `None` only after `shutdown` consumed it (the `Drop` impl
+    /// forces fields behind options).
+    shared: Option<Arc<NodeShared>>,
+    addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl NodeServer {
+    /// Bind `listen` (e.g. `127.0.0.1:7070`; port 0 picks a free one —
+    /// read it back from [`NodeServer::addr`]) and serve `svc` until
+    /// shutdown.
+    pub fn start(svc: Box<dyn Dispatch>, listen: &str,
+                 opts: NodeOpts) -> Result<NodeServer> {
+        let listener = TcpListener::bind(listen)
+            .with_context(|| format!("binding node listener {listen}"))?;
+        let addr = listener
+            .local_addr()
+            .context("reading node listener address")?;
+        let shared = Arc::new(NodeShared {
+            svc,
+            pool: ThreadPool::new(opts.forwarders.max(1)),
+            streams: Mutex::new(Vec::new()),
+            conn_handles: Mutex::new(Vec::new()),
+            closing: AtomicBool::new(false),
+        });
+        let accept_shared = Arc::clone(&shared);
+        let accept = std::thread::Builder::new()
+            .name("tqdit-net-accept".into())
+            .spawn(move || accept_loop(accept_shared, listener))
+            .context("spawning node accept thread")?;
+        Ok(NodeServer {
+            shared: Some(shared),
+            addr,
+            accept: Some(accept),
+        })
+    }
+
+    /// The bound listen address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Force-close every live client connection *without* touching the
+    /// wrapped service — from the frontend's point of view this node
+    /// just fell off the network (fault injection for tests and the
+    /// loopback bench; the service keeps draining whatever it already
+    /// dispatched). The node still accepts new connections afterwards.
+    pub fn sever_connections(&self) {
+        let Some(shared) = self.shared.as_ref() else { return };
+        let streams: Vec<(usize, TcpStream)> = {
+            let mut g = lock(&shared.streams);
+            g.drain(..).collect()
+        };
+        for (_, s) in streams {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+    }
+
+    /// Stop the accept loop, close every connection and join the
+    /// handler threads (idempotent; shared between shutdown and drop).
+    fn stop_threads(&mut self) {
+        let Some(shared) = self.shared.as_ref() else { return };
+        shared.closing.store(true, Ordering::SeqCst);
+        // unblock the accept loop with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let streams: Vec<(usize, TcpStream)> = {
+            let mut g = lock(&shared.streams);
+            g.drain(..).collect()
+        };
+        for (_, s) in streams {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+        let handles: Vec<JoinHandle<()>> = {
+            let mut g = lock(&shared.conn_handles);
+            g.drain(..).collect()
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop accepting, close every connection, drain the wrapped
+    /// service and return its final statistics.
+    pub fn shutdown(mut self) -> ServerStats {
+        self.stop_threads();
+        let shared = self.shared.take().expect("shutdown runs once");
+        // handler threads are joined, so ours is the last reference;
+        // response forwarders never hold one
+        match Arc::try_unwrap(shared) {
+            Ok(sh) => {
+                let stats = sh.svc.shutdown();
+                // joins the forwarders: every queued reply job resolves
+                // (the drained service answered every channel) and its
+                // write fails fast on the closed sockets
+                drop(sh.pool);
+                stats
+            }
+            Err(_) => {
+                warn_log!("node: a connection handler outlived shutdown; \
+                           stats unavailable");
+                ServerStats::default()
+            }
+        }
+    }
+}
+
+impl Drop for NodeServer {
+    /// A node dropped without `shutdown` still stops its threads (the
+    /// wrapped service drains via its own drop).
+    fn drop(&mut self) {
+        self.stop_threads();
+    }
+}
+
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn accept_loop(shared: Arc<NodeShared>, listener: TcpListener) {
+    let mut next_conn = 0usize;
+    loop {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                if shared.closing.load(Ordering::SeqCst) {
+                    break; // the shutdown poke (or a raced client)
+                }
+                let _ = stream.set_nodelay(true);
+                let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+                let conn_id = next_conn;
+                next_conn += 1;
+                if let Ok(clone) = stream.try_clone() {
+                    lock(&shared.streams).push((conn_id, clone));
+                }
+                let conn_shared = Arc::clone(&shared);
+                let name = format!("tqdit-net-conn-{conn_id}");
+                match std::thread::Builder::new().name(name).spawn(
+                    move || handle_conn(conn_shared, conn_id, stream,
+                                        peer.to_string()),
+                ) {
+                    Ok(h) => {
+                        let mut g = lock(&shared.conn_handles);
+                        // reap handles of handlers that already
+                        // returned (dropping a finished handle just
+                        // detaches it) so a long-lived node doesn't
+                        // grow a handle per connection it ever served
+                        g.retain(|h| !h.is_finished());
+                        g.push(h);
+                    }
+                    Err(e) => {
+                        warn_log!("node: spawning handler for {peer} \
+                                   failed: {e}");
+                    }
+                }
+            }
+            Err(e) => {
+                if shared.closing.load(Ordering::SeqCst) {
+                    break;
+                }
+                warn_log!("node: accept failed: {e}");
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            }
+        }
+    }
+}
+
+/// Write one message under the connection's writer mutex.
+fn send(writer: &Mutex<TcpStream>, msg: &Msg) -> Result<(), WireError> {
+    let mut g = lock(writer);
+    write_frame(&mut *g, &msg.encode())
+}
+
+/// One client connection: read frames, feed the service, answer
+/// heartbeats/stats inline, hand responses to the forwarder pool.
+/// On exit the socket is shut down explicitly (stream clones held by
+/// in-flight forwarders or the registry would otherwise keep the
+/// connection half-open) and the registry entry removed.
+fn handle_conn(shared: Arc<NodeShared>, conn_id: usize,
+               stream: TcpStream, peer: String) {
+    let mut reader = match stream.try_clone() {
+        Ok(r) => r,
+        Err(e) => {
+            warn_log!("node: cloning stream for {peer} failed: {e}");
+            return;
+        }
+    };
+    let writer = Arc::new(Mutex::new(stream));
+    conn_loop(&shared, &writer, &mut reader, &peer);
+    let _ = lock(&writer).shutdown(std::net::Shutdown::Both);
+    lock(&shared.streams).retain(|(id, _)| *id != conn_id);
+}
+
+fn conn_loop(shared: &Arc<NodeShared>, writer: &Arc<Mutex<TcpStream>>,
+             reader: &mut TcpStream, peer: &str) {
+    loop {
+        let payload = match read_frame(reader) {
+            Ok(p) => p,
+            Err(WireError::Closed) => break,
+            Err(e) => {
+                if !shared.closing.load(Ordering::SeqCst) {
+                    warn_log!("node: {peer}: closing connection: {e}");
+                }
+                break;
+            }
+        };
+        // a bad *message* in a good frame degrades that message only:
+        // framing is intact, so later frames on this connection are
+        // still trustworthy
+        let msg = match Msg::decode(&payload) {
+            Ok(m) => m,
+            Err(e) => {
+                warn_log!("node: {peer}: skipping bad message: {e:#}");
+                continue;
+            }
+        };
+        match msg {
+            Msg::Submit { id, class, n } => {
+                match shared.svc.submit(GenRequest { class, n }) {
+                    Ok((_, rx)) => {
+                        let w = Arc::clone(writer);
+                        // the job blocks on this one request's channel;
+                        // a pool worker is busy for exactly as long as
+                        // the request is in flight
+                        shared.pool.execute(move || {
+                            let reply = match rx.recv() {
+                                Ok(Ok(resp)) => Msg::Response {
+                                    id,
+                                    latency_s: resp.latency_s,
+                                    images: resp.images,
+                                },
+                                Ok(Err(err)) => Msg::ErrorResp { id, err },
+                                Err(_) => Msg::ErrorResp {
+                                    id,
+                                    err: ServeError::Protocol {
+                                        cause: "response channel closed \
+                                                without a result"
+                                            .into(),
+                                    },
+                                },
+                            };
+                            if let Err(e) = send(&w, &reply) {
+                                debug_log!("node: reply for request {id} \
+                                            dropped: {e}");
+                                // a failed (possibly partial) frame
+                                // write poisons the stream framing —
+                                // close so the peer re-routes instead
+                                // of reading garbage
+                                let _ = lock(&w).shutdown(
+                                    std::net::Shutdown::Both);
+                            }
+                        });
+                    }
+                    Err(err) => {
+                        // a rejected submit (backpressure, shutdown)
+                        // answers immediately with the typed cause
+                        if send(writer, &Msg::ErrorResp { id, err })
+                            .is_err()
+                        {
+                            break;
+                        }
+                    }
+                }
+            }
+            Msg::Ping { seq } => {
+                let pong = Msg::Pong {
+                    seq,
+                    queue_depth: shared.svc.queue_depth(),
+                    live_workers: shared.svc.live_workers(),
+                    ready_workers: shared.svc.ready_workers(),
+                };
+                if send(writer, &pong).is_err() {
+                    break;
+                }
+            }
+            Msg::StatsReq { seq } => {
+                let stats = shared.svc.stats();
+                if send(writer, &Msg::Stats { seq, stats }).is_err() {
+                    break;
+                }
+            }
+            other => {
+                // node-bound traffic only; a frontend-bound message
+                // arriving here is a peer bug, not a reason to die
+                warn_log!("node: {peer}: skipping unexpected {} message",
+                          other.kind());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::net::testutil::{mock_node, read_msg, send_msg};
+    use std::time::Duration;
+
+    /// Read frames until `pred` matches (heartbeat replies may
+    /// interleave with responses on a live connection).
+    fn read_until<F: Fn(&Msg) -> bool>(stream: &mut TcpStream, pred: F)
+                                       -> Msg {
+        loop {
+            let msg = read_msg(stream);
+            if pred(&msg) {
+                return msg;
+            }
+        }
+    }
+
+    #[test]
+    fn node_serves_submit_ping_stats_over_one_socket() {
+        let (node, addr) = mock_node(vec![4], 3, Duration::ZERO);
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+
+        send_msg(&mut c, &Msg::Submit { id: 42, class: 5, n: 2 });
+        send_msg(&mut c, &Msg::Ping { seq: 9 });
+
+        // ping answered inline; the response forwarded when computed —
+        // order between them is not part of the contract
+        let pong = read_until(&mut c, |m| matches!(m, Msg::Pong { .. }));
+        match pong {
+            Msg::Pong { seq: 9, .. } => {}
+            other => panic!("wrong pong: {other:?}"),
+        }
+        let resp =
+            read_until(&mut c, |m| matches!(m, Msg::Response { .. }));
+        match resp {
+            Msg::Response { id: 42, images, .. } => {
+                assert_eq!(images.len(), 2 * 3);
+                assert!(images.iter().all(|&p| p == 5.0));
+            }
+            other => panic!("wrong response: {other:?}"),
+        }
+
+        send_msg(&mut c, &Msg::StatsReq { seq: 1 });
+        let stats = read_until(&mut c, |m| matches!(m, Msg::Stats { .. }));
+        match stats {
+            Msg::Stats { seq: 1, stats } => {
+                assert_eq!(stats.requests, 1);
+                assert_eq!(stats.enqueued,
+                           stats.dispatched + stats.purged + stats.pending);
+            }
+            other => panic!("wrong stats: {other:?}"),
+        }
+
+        let final_stats = node.shutdown();
+        assert_eq!(final_stats.requests, 1);
+        assert_eq!(final_stats.images, 2);
+    }
+
+    #[test]
+    fn concurrent_connections_share_one_service() {
+        let (node, addr) = mock_node(vec![8], 2, Duration::ZERO);
+        std::thread::scope(|s| {
+            for client in 0..3i32 {
+                s.spawn(move || {
+                    let mut c = TcpStream::connect(addr).unwrap();
+                    c.set_read_timeout(Some(Duration::from_secs(10)))
+                        .unwrap();
+                    for i in 0..4u64 {
+                        let class = client + 1;
+                        send_msg(&mut c, &Msg::Submit {
+                            id: i,
+                            class,
+                            n: 3,
+                        });
+                        match read_until(&mut c,
+                                         |m| matches!(m,
+                                                      Msg::Response { .. }
+                                                      | Msg::ErrorResp {
+                                                          ..
+                                                      })) {
+                            Msg::Response { id, images, .. } => {
+                                assert_eq!(id, i);
+                                assert!(
+                                    images.iter().all(|&p| p
+                                                      == class as f32),
+                                    "cross-connection pixel mixup"
+                                );
+                            }
+                            other => panic!("request failed: {other:?}"),
+                        }
+                    }
+                });
+            }
+        });
+        let stats = node.shutdown();
+        assert_eq!(stats.requests, 12);
+        assert_eq!(stats.images, 36);
+        assert_eq!(stats.failed_requests, 0);
+    }
+
+    #[test]
+    fn bad_message_in_good_frame_is_skipped_connection_lives() {
+        let (node, addr) = mock_node(vec![2], 2, Duration::ZERO);
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        // valid frame, garbage JSON — the node must skip it
+        write_frame(&mut c, b"{ not json").unwrap();
+        // and a well-formed submit on the same connection still works
+        send_msg(&mut c, &Msg::Submit { id: 1, class: 3, n: 1 });
+        match read_until(&mut c, |m| matches!(m, Msg::Response { .. })) {
+            Msg::Response { id: 1, images, .. } => {
+                assert_eq!(images, vec![3.0, 3.0]);
+            }
+            other => panic!("{other:?}"),
+        }
+        node.shutdown();
+    }
+
+    #[test]
+    fn wire_garbage_closes_only_that_connection() {
+        let (node, addr) = mock_node(vec![2], 2, Duration::ZERO);
+        {
+            use std::io::Write;
+            let mut bad = TcpStream::connect(addr).unwrap();
+            bad.write_all(b"XXXXXXXX not a frame XXXXXXXX").unwrap();
+            bad.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            // the node closes the broken connection
+            match read_frame(&mut bad) {
+                Err(WireError::Closed) | Err(WireError::Io(_))
+                | Err(WireError::Truncated { .. }) => {}
+                other => panic!("expected a closed stream, got {other:?}"),
+            }
+        }
+        // a fresh connection is unaffected
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        send_msg(&mut c, &Msg::Submit { id: 2, class: 1, n: 1 });
+        match read_until(&mut c, |m| matches!(m, Msg::Response { .. })) {
+            Msg::Response { id: 2, .. } => {}
+            other => panic!("{other:?}"),
+        }
+        node.shutdown();
+    }
+
+    #[test]
+    fn rejected_submit_relays_the_typed_cause() {
+        // queue cap 4: a 5-slot request can never fit
+        let (node, addr) =
+            crate::serve::net::testutil::mock_node_capped(
+                vec![2], 2, Duration::ZERO, 4);
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        send_msg(&mut c, &Msg::Submit { id: 7, class: 1, n: 5 });
+        match read_until(&mut c, |m| matches!(m, Msg::ErrorResp { .. })) {
+            Msg::ErrorResp {
+                id: 7,
+                err: ServeError::RequestTooLarge { n: 5, cap: 4 },
+            } => {}
+            other => panic!("{other:?}"),
+        }
+        node.shutdown();
+    }
+
+    #[test]
+    fn severed_connection_leaves_the_service_running() {
+        let (node, addr) = mock_node(vec![2], 2, Duration::ZERO);
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        send_msg(&mut c, &Msg::Ping { seq: 1 });
+        read_until(&mut c, |m| matches!(m, Msg::Pong { .. }));
+        node.sever_connections();
+        // our side observes the close
+        match read_frame(&mut c) {
+            Err(_) => {}
+            Ok(_) => panic!("severed connection still delivered"),
+        }
+        // the node accepts and serves new connections afterwards
+        let mut c2 = TcpStream::connect(addr).unwrap();
+        c2.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        send_msg(&mut c2, &Msg::Submit { id: 1, class: 2, n: 1 });
+        match read_until(&mut c2, |m| matches!(m, Msg::Response { .. })) {
+            Msg::Response { id: 1, images, .. } => {
+                assert_eq!(images, vec![2.0, 2.0]);
+            }
+            other => panic!("{other:?}"),
+        }
+        node.shutdown();
+    }
+}

@@ -1,0 +1,670 @@
+//! Cross-node protocol messages, serialized as canonical JSON inside
+//! [`wire`](crate::serve::net::wire) frames.
+//!
+//! One [`Msg`] enum covers both directions of a shard connection:
+//!
+//! * frontend → node: `Submit` (one generation request, carrying the
+//!   *frontend's* request id — the node echoes it back, so each
+//!   connection is its own id namespace), `Ping`, `StatsReq`;
+//! * node → frontend: `Response` / `ErrorResp` (terminal, exactly one
+//!   per submitted id), `Pong` (queue depth + worker counts, the
+//!   load-balancing signal), `Stats` (a live [`ServerStats`]
+//!   snapshot).
+//!
+//! Serde follows the `coordinator/store.rs` conventions: the canonical
+//! serializer in [`crate::util::json`] (sorted keys, shortest-roundtrip
+//! floats, so every `f32` image pixel survives the wire bit-for-bit),
+//! and decoding validates everything — counts must be whole
+//! non-negative numbers, floats finite, kinds known — returning typed
+//! errors, never panicking on peer bytes.
+
+use anyhow::{bail, Context, Result};
+
+use crate::serve::error::ServeError;
+use crate::serve::router::{RungStats, ServerStats, WorkerStats};
+use crate::util::json::Json;
+
+/// One frame's payload, either direction of a shard connection.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// Frontend → node: run `n` images of `class`; the node answers
+    /// with a `Response`/`ErrorResp` echoing `id`.
+    Submit { id: u64, class: i32, n: usize },
+    /// Node → frontend: the completed request (flat pixels, node-side
+    /// queue+compute latency).
+    Response { id: u64, latency_s: f64, images: Vec<f32> },
+    /// Node → frontend: the request failed with a typed error.
+    ErrorResp { id: u64, err: ServeError },
+    /// Frontend → node heartbeat probe.
+    Ping { seq: u64 },
+    /// Node → frontend heartbeat reply: the dispatch signal (queued
+    /// slots) plus worker liveness.
+    Pong {
+        seq: u64,
+        queue_depth: usize,
+        live_workers: usize,
+        ready_workers: usize,
+    },
+    /// Frontend → node: request a live stats snapshot.
+    StatsReq { seq: u64 },
+    /// Node → frontend: the snapshot.
+    Stats { seq: u64, stats: ServerStats },
+}
+
+impl Msg {
+    /// The message's type tag (log lines naming skipped messages).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Msg::Submit { .. } => "submit",
+            Msg::Response { .. } => "response",
+            Msg::ErrorResp { .. } => "error",
+            Msg::Ping { .. } => "ping",
+            Msg::Pong { .. } => "pong",
+            Msg::StatsReq { .. } => "stats_req",
+            Msg::Stats { .. } => "stats",
+        }
+    }
+
+    /// Canonical JSON bytes (the wire frame payload).
+    pub fn encode(&self) -> Vec<u8> {
+        self.to_json().dump().into_bytes()
+    }
+
+    /// Decode a frame payload; every malformed input is a typed error.
+    pub fn decode(bytes: &[u8]) -> Result<Msg> {
+        let text = std::str::from_utf8(bytes)
+            .context("message payload is not UTF-8")?;
+        let j = Json::parse(text).context("message payload is not JSON")?;
+        Msg::from_json(&j)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        match self {
+            Msg::Submit { id, class, n } => {
+                m.insert("type".into(), Json::Str("submit".into()));
+                m.insert("id".into(), Json::Num(*id as f64));
+                m.insert("class".into(), Json::Num(*class as f64));
+                m.insert("n".into(), Json::Num(*n as f64));
+            }
+            Msg::Response { id, latency_s, images } => {
+                m.insert("type".into(), Json::Str("response".into()));
+                m.insert("id".into(), Json::Num(*id as f64));
+                m.insert("latency_s".into(), Json::Num(*latency_s));
+                m.insert(
+                    "images".into(),
+                    Json::Arr(images
+                        .iter()
+                        .map(|&p| Json::Num(p as f64))
+                        .collect()),
+                );
+            }
+            Msg::ErrorResp { id, err } => {
+                m.insert("type".into(), Json::Str("error".into()));
+                m.insert("id".into(), Json::Num(*id as f64));
+                m.insert("err".into(), serve_error_to_json(err));
+            }
+            Msg::Ping { seq } => {
+                m.insert("type".into(), Json::Str("ping".into()));
+                m.insert("seq".into(), Json::Num(*seq as f64));
+            }
+            Msg::Pong { seq, queue_depth, live_workers, ready_workers } => {
+                m.insert("type".into(), Json::Str("pong".into()));
+                m.insert("seq".into(), Json::Num(*seq as f64));
+                m.insert("queue_depth".into(),
+                         Json::Num(*queue_depth as f64));
+                m.insert("live_workers".into(),
+                         Json::Num(*live_workers as f64));
+                m.insert("ready_workers".into(),
+                         Json::Num(*ready_workers as f64));
+            }
+            Msg::StatsReq { seq } => {
+                m.insert("type".into(), Json::Str("stats_req".into()));
+                m.insert("seq".into(), Json::Num(*seq as f64));
+            }
+            Msg::Stats { seq, stats } => {
+                m.insert("type".into(), Json::Str("stats".into()));
+                m.insert("seq".into(), Json::Num(*seq as f64));
+                m.insert("stats".into(), stats_to_json(stats));
+            }
+        }
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Msg> {
+        let ty = str_field(j, "type")?;
+        match ty {
+            "submit" => Ok(Msg::Submit {
+                id: count_field(j, "id")?,
+                class: int_field(j, "class")?
+                    .try_into()
+                    .context("submit `class` out of i32 range")?,
+                n: count_field(j, "n")? as usize,
+            }),
+            "response" => {
+                let arr = j
+                    .get("images")
+                    .and_then(Json::as_arr)
+                    .context("response missing `images` array")?;
+                let mut images = Vec::with_capacity(arr.len());
+                for (i, p) in arr.iter().enumerate() {
+                    let x = p.as_f64().with_context(|| {
+                        format!("response pixel {i} is not a finite \
+                                 number")
+                    })?;
+                    if !x.is_finite() {
+                        bail!("response pixel {i} is not finite");
+                    }
+                    images.push(x as f32);
+                }
+                Ok(Msg::Response {
+                    id: count_field(j, "id")?,
+                    latency_s: num_field(j, "latency_s")?,
+                    images,
+                })
+            }
+            "error" => Ok(Msg::ErrorResp {
+                id: count_field(j, "id")?,
+                err: serve_error_from_json(
+                    j.get("err").context("error message missing `err`")?,
+                )?,
+            }),
+            "ping" => Ok(Msg::Ping { seq: count_field(j, "seq")? }),
+            "pong" => Ok(Msg::Pong {
+                seq: count_field(j, "seq")?,
+                queue_depth: count_field(j, "queue_depth")? as usize,
+                live_workers: count_field(j, "live_workers")? as usize,
+                ready_workers: count_field(j, "ready_workers")? as usize,
+            }),
+            "stats_req" => {
+                Ok(Msg::StatsReq { seq: count_field(j, "seq")? })
+            }
+            "stats" => Ok(Msg::Stats {
+                seq: count_field(j, "seq")?,
+                stats: stats_from_json(
+                    j.get("stats")
+                        .context("stats message missing `stats`")?,
+                )?,
+            }),
+            other => bail!("unknown message type `{other}`"),
+        }
+    }
+}
+
+// -- field accessors (typed errors naming the key) -----------------------
+
+fn str_field<'a>(j: &'a Json, key: &str) -> Result<&'a str> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .with_context(|| format!("missing or non-string `{key}`"))
+}
+
+/// Finite float field.
+fn num_field(j: &Json, key: &str) -> Result<f64> {
+    let x = j
+        .get(key)
+        .and_then(Json::as_f64)
+        .with_context(|| format!("missing or non-numeric `{key}`"))?;
+    if !x.is_finite() {
+        bail!("`{key}` is not finite");
+    }
+    Ok(x)
+}
+
+/// Whole non-negative count field (u64; rejects fractions, negatives,
+/// and values f64 cannot represent exactly).
+fn count_field(j: &Json, key: &str) -> Result<u64> {
+    j.get(key)
+        .and_then(Json::as_exact_usize)
+        .map(|v| v as u64)
+        .with_context(|| {
+            format!("missing or non-count `{key}` (whole number >= 0)")
+        })
+}
+
+/// Whole (possibly negative) integer field.
+fn int_field(j: &Json, key: &str) -> Result<i64> {
+    let x = j
+        .get(key)
+        .and_then(Json::as_f64)
+        .with_context(|| format!("missing or non-numeric `{key}`"))?;
+    if !x.is_finite() || x.fract() != 0.0 || x.abs() >= 9.007_199_254_740_992e15
+    {
+        bail!("`{key}` is not an exact integer");
+    }
+    Ok(x as i64)
+}
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+// -- ServeError serde ----------------------------------------------------
+
+/// Serialize a [`ServeError`] for the wire.
+pub fn serve_error_to_json(e: &ServeError) -> Json {
+    match e {
+        ServeError::ShuttingDown => {
+            obj(vec![("kind", Json::Str("shutting_down".into()))])
+        }
+        ServeError::QueueFull { queued, cap } => obj(vec![
+            ("kind", Json::Str("queue_full".into())),
+            ("queued", Json::Num(*queued as f64)),
+            ("cap", Json::Num(*cap as f64)),
+        ]),
+        ServeError::RequestTooLarge { n, cap } => obj(vec![
+            ("kind", Json::Str("request_too_large".into())),
+            ("n", Json::Num(*n as f64)),
+            ("cap", Json::Num(*cap as f64)),
+        ]),
+        ServeError::WorkerInitFailed { worker, cause } => obj(vec![
+            ("kind", Json::Str("worker_init_failed".into())),
+            ("worker", Json::Num(*worker as f64)),
+            ("cause", Json::Str(cause.clone())),
+        ]),
+        ServeError::WorkerFailed { worker, cause } => obj(vec![
+            ("kind", Json::Str("worker_failed".into())),
+            ("worker", Json::Num(*worker as f64)),
+            ("cause", Json::Str(cause.clone())),
+        ]),
+        ServeError::AllWorkersDead { cause } => obj(vec![
+            ("kind", Json::Str("all_workers_dead".into())),
+            ("cause", Json::Str(cause.clone())),
+        ]),
+        ServeError::NodeLost { cause } => obj(vec![
+            ("kind", Json::Str("node_lost".into())),
+            ("cause", Json::Str(cause.clone())),
+        ]),
+        ServeError::Protocol { cause } => obj(vec![
+            ("kind", Json::Str("protocol".into())),
+            ("cause", Json::Str(cause.clone())),
+        ]),
+    }
+}
+
+/// Parse a wire [`ServeError`]; unknown kinds are a protocol error.
+pub fn serve_error_from_json(j: &Json) -> Result<ServeError> {
+    let kind = str_field(j, "kind")?;
+    let cause = || {
+        str_field(j, "cause").map(str::to_string)
+    };
+    Ok(match kind {
+        "shutting_down" => ServeError::ShuttingDown,
+        "queue_full" => ServeError::QueueFull {
+            queued: count_field(j, "queued")? as usize,
+            cap: count_field(j, "cap")? as usize,
+        },
+        "request_too_large" => ServeError::RequestTooLarge {
+            n: count_field(j, "n")? as usize,
+            cap: count_field(j, "cap")? as usize,
+        },
+        "worker_init_failed" => ServeError::WorkerInitFailed {
+            worker: count_field(j, "worker")? as usize,
+            cause: cause()?,
+        },
+        "worker_failed" => ServeError::WorkerFailed {
+            worker: count_field(j, "worker")? as usize,
+            cause: cause()?,
+        },
+        "all_workers_dead" => {
+            ServeError::AllWorkersDead { cause: cause()? }
+        }
+        "node_lost" => ServeError::NodeLost { cause: cause()? },
+        "protocol" => ServeError::Protocol { cause: cause()? },
+        other => bail!("unknown serve error kind `{other}`"),
+    })
+}
+
+// -- ServerStats serde ---------------------------------------------------
+
+fn rung_to_json(r: &RungStats) -> Json {
+    obj(vec![
+        ("rung", Json::Num(r.rung as f64)),
+        ("batches", Json::Num(r.batches as f64)),
+        ("images", Json::Num(r.images as f64)),
+        ("padded_slots", Json::Num(r.padded_slots as f64)),
+        ("busy_s", Json::Num(r.busy_s)),
+    ])
+}
+
+fn rung_from_json(j: &Json) -> Result<RungStats> {
+    Ok(RungStats {
+        rung: count_field(j, "rung")? as usize,
+        batches: count_field(j, "batches")?,
+        images: count_field(j, "images")?,
+        padded_slots: count_field(j, "padded_slots")?,
+        busy_s: num_field(j, "busy_s")?,
+    })
+}
+
+fn worker_to_json(w: &WorkerStats) -> Json {
+    obj(vec![
+        ("worker", Json::Num(w.worker as f64)),
+        ("batches", Json::Num(w.batches as f64)),
+        ("images", Json::Num(w.images as f64)),
+        ("padded_slots", Json::Num(w.padded_slots as f64)),
+        ("busy_s", Json::Num(w.busy_s)),
+        ("rungs", Json::Arr(w.rungs.iter().map(rung_to_json).collect())),
+        ("ready", Json::Bool(w.ready)),
+        ("failed", Json::Bool(w.failed)),
+    ])
+}
+
+fn worker_from_json(j: &Json) -> Result<WorkerStats> {
+    let rungs = j
+        .get("rungs")
+        .and_then(Json::as_arr)
+        .context("worker stats missing `rungs`")?
+        .iter()
+        .map(rung_from_json)
+        .collect::<Result<Vec<_>>>()?;
+    Ok(WorkerStats {
+        worker: count_field(j, "worker")? as usize,
+        batches: count_field(j, "batches")?,
+        images: count_field(j, "images")?,
+        padded_slots: count_field(j, "padded_slots")?,
+        busy_s: num_field(j, "busy_s")?,
+        rungs,
+        ready: j
+            .get("ready")
+            .and_then(Json::as_bool)
+            .context("worker stats missing `ready`")?,
+        failed: j
+            .get("failed")
+            .and_then(Json::as_bool)
+            .context("worker stats missing `failed`")?,
+    })
+}
+
+/// Serialize a full [`ServerStats`] (the `--stats-json` dump and the
+/// remote `Stats` message both use this).
+pub fn stats_to_json(s: &ServerStats) -> Json {
+    obj(vec![
+        ("requests", Json::Num(s.requests as f64)),
+        ("images", Json::Num(s.images as f64)),
+        ("batches", Json::Num(s.batches as f64)),
+        ("batch_fill", Json::Num(s.batch_fill)),
+        ("padded_slots", Json::Num(s.padded_slots as f64)),
+        ("failed_requests", Json::Num(s.failed_requests as f64)),
+        ("dropped_responses", Json::Num(s.dropped_responses as f64)),
+        ("wall_s", Json::Num(s.wall_s)),
+        ("queue_depth_avg", Json::Num(s.queue_depth_avg)),
+        ("queue_depth_max", Json::Num(s.queue_depth_max as f64)),
+        ("latency_p50_s", Json::Num(s.latency_p50_s)),
+        ("latency_p95_s", Json::Num(s.latency_p95_s)),
+        ("calib_cache_hits", Json::Num(s.calib_cache_hits as f64)),
+        ("calib_cache_misses", Json::Num(s.calib_cache_misses as f64)),
+        ("calib_cold_start_ms", Json::Num(s.calib_cold_start_ms)),
+        ("enqueued", Json::Num(s.enqueued as f64)),
+        ("dispatched", Json::Num(s.dispatched as f64)),
+        ("purged", Json::Num(s.purged as f64)),
+        ("pending", Json::Num(s.pending as f64)),
+        ("requeued", Json::Num(s.requeued as f64)),
+        ("nodes_lost", Json::Num(s.nodes_lost as f64)),
+        ("rungs", Json::Arr(s.rungs.iter().map(rung_to_json).collect())),
+        (
+            "workers",
+            Json::Arr(s.workers.iter().map(worker_to_json).collect()),
+        ),
+    ])
+}
+
+/// Parse a [`ServerStats`]; validates every field with typed errors.
+pub fn stats_from_json(j: &Json) -> Result<ServerStats> {
+    let rungs = j
+        .get("rungs")
+        .and_then(Json::as_arr)
+        .context("stats missing `rungs`")?
+        .iter()
+        .map(rung_from_json)
+        .collect::<Result<Vec<_>>>()?;
+    let workers = j
+        .get("workers")
+        .and_then(Json::as_arr)
+        .context("stats missing `workers`")?
+        .iter()
+        .map(worker_from_json)
+        .collect::<Result<Vec<_>>>()?;
+    Ok(ServerStats {
+        requests: count_field(j, "requests")?,
+        images: count_field(j, "images")?,
+        batches: count_field(j, "batches")?,
+        batch_fill: num_field(j, "batch_fill")?,
+        padded_slots: count_field(j, "padded_slots")?,
+        failed_requests: count_field(j, "failed_requests")?,
+        dropped_responses: count_field(j, "dropped_responses")?,
+        wall_s: num_field(j, "wall_s")?,
+        queue_depth_avg: num_field(j, "queue_depth_avg")?,
+        queue_depth_max: count_field(j, "queue_depth_max")? as usize,
+        latency_p50_s: num_field(j, "latency_p50_s")?,
+        latency_p95_s: num_field(j, "latency_p95_s")?,
+        calib_cache_hits: count_field(j, "calib_cache_hits")?,
+        calib_cache_misses: count_field(j, "calib_cache_misses")?,
+        calib_cold_start_ms: num_field(j, "calib_cold_start_ms")?,
+        enqueued: count_field(j, "enqueued")?,
+        dispatched: count_field(j, "dispatched")?,
+        purged: count_field(j, "purged")?,
+        pending: count_field(j, "pending")?,
+        requeued: count_field(j, "requeued")?,
+        nodes_lost: count_field(j, "nodes_lost")?,
+        rungs,
+        workers,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{check, Gen};
+
+    fn roundtrip(msg: &Msg) -> Msg {
+        Msg::decode(&msg.encode()).expect("decode what we encoded")
+    }
+
+    fn random_stats(g: &mut Gen) -> ServerStats {
+        let mut s = ServerStats {
+            requests: g.usize_in(0, 1000) as u64,
+            images: g.usize_in(0, 10_000) as u64,
+            batches: g.usize_in(0, 500) as u64,
+            batch_fill: g.f32_in(0.0, 1.0) as f64,
+            padded_slots: g.usize_in(0, 100) as u64,
+            failed_requests: g.usize_in(0, 10) as u64,
+            dropped_responses: g.usize_in(0, 10) as u64,
+            wall_s: g.f32_in(0.0, 100.0) as f64,
+            queue_depth_avg: g.f32_in(0.0, 50.0) as f64,
+            queue_depth_max: g.usize_in(0, 200),
+            latency_p50_s: g.f32_in(0.0, 2.0) as f64,
+            latency_p95_s: g.f32_in(0.0, 5.0) as f64,
+            calib_cache_hits: g.usize_in(0, 1) as u64,
+            calib_cache_misses: g.usize_in(0, 1) as u64,
+            calib_cold_start_ms: g.f32_in(0.0, 5e3) as f64,
+            enqueued: g.usize_in(0, 10_000) as u64,
+            dispatched: g.usize_in(0, 10_000) as u64,
+            purged: g.usize_in(0, 100) as u64,
+            pending: g.usize_in(0, 100) as u64,
+            requeued: g.usize_in(0, 20) as u64,
+            nodes_lost: g.usize_in(0, 3) as u64,
+            rungs: Vec::new(),
+            workers: Vec::new(),
+        };
+        for i in 0..g.usize_in(0, 4) {
+            s.rungs.push(RungStats {
+                rung: 1 << i,
+                batches: g.usize_in(0, 50) as u64,
+                images: g.usize_in(0, 500) as u64,
+                padded_slots: g.usize_in(0, 50) as u64,
+                busy_s: g.f32_in(0.0, 10.0) as f64,
+            });
+        }
+        for w in 0..g.usize_in(0, 3) {
+            s.workers.push(WorkerStats {
+                worker: w,
+                batches: g.usize_in(0, 50) as u64,
+                images: g.usize_in(0, 500) as u64,
+                padded_slots: g.usize_in(0, 50) as u64,
+                busy_s: g.f32_in(0.0, 10.0) as f64,
+                rungs: vec![RungStats {
+                    rung: 4,
+                    batches: g.usize_in(0, 10) as u64,
+                    images: g.usize_in(0, 40) as u64,
+                    padded_slots: g.usize_in(0, 8) as u64,
+                    busy_s: g.f32_in(0.0, 2.0) as f64,
+                }],
+                ready: g.bool(),
+                failed: g.bool(),
+            });
+        }
+        s
+    }
+
+    fn random_error(g: &mut Gen) -> ServeError {
+        match g.usize_in(0, 7) {
+            0 => ServeError::ShuttingDown,
+            1 => ServeError::QueueFull {
+                queued: g.usize_in(0, 999),
+                cap: g.usize_in(1, 999),
+            },
+            2 => ServeError::RequestTooLarge {
+                n: g.usize_in(1, 999),
+                cap: g.usize_in(1, 999),
+            },
+            3 => ServeError::WorkerInitFailed {
+                worker: g.usize_in(0, 7),
+                cause: "artifacts \"missing\"\n(line 2)".into(),
+            },
+            4 => ServeError::WorkerFailed {
+                worker: g.usize_in(0, 7),
+                cause: "execute: OOM".into(),
+            },
+            5 => ServeError::AllWorkersDead { cause: "init".into() },
+            6 => ServeError::NodeLost { cause: "timeout".into() },
+            _ => ServeError::Protocol { cause: "bad frame".into() },
+        }
+    }
+
+    #[test]
+    fn prop_messages_roundtrip() {
+        check("proto message roundtrip", 200, |g: &mut Gen| {
+            let msg = match g.usize_in(0, 6) {
+                0 => Msg::Submit {
+                    id: g.usize_in(0, 1 << 30) as u64,
+                    class: g.usize_in(0, 2000) as i32 - 1000,
+                    n: g.usize_in(0, 64),
+                },
+                1 => {
+                    let n = g.usize_in(0, 48);
+                    Msg::Response {
+                        id: g.usize_in(0, 1 << 30) as u64,
+                        latency_s: g.f32_in(0.0, 10.0) as f64,
+                        // f32 pixels must survive the wire bit-for-bit
+                        images: g.vec_normal(n),
+                    }
+                }
+                2 => Msg::ErrorResp {
+                    id: g.usize_in(0, 1 << 30) as u64,
+                    err: random_error(g),
+                },
+                3 => Msg::Ping { seq: g.usize_in(0, 1 << 20) as u64 },
+                4 => Msg::Pong {
+                    seq: g.usize_in(0, 1 << 20) as u64,
+                    queue_depth: g.usize_in(0, 4096),
+                    live_workers: g.usize_in(0, 16),
+                    ready_workers: g.usize_in(0, 16),
+                },
+                5 => Msg::StatsReq { seq: g.usize_in(0, 99) as u64 },
+                _ => Msg::Stats {
+                    seq: g.usize_in(0, 99) as u64,
+                    stats: random_stats(g),
+                },
+            };
+            let back = Msg::decode(&msg.encode())
+                .map_err(|e| format!("{e:#}"))?;
+            if back != msg {
+                return Err(format!(
+                    "roundtrip mismatch:\n  sent {msg:?}\n  got  {back:?}"
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pixels_survive_the_wire_bit_for_bit() {
+        let images = vec![0.1f32, -17.125, f32::MIN_POSITIVE, 0.0, 255.0];
+        let msg = Msg::Response { id: 7, latency_s: 0.25, images: images.clone() };
+        match roundtrip(&msg) {
+            Msg::Response { images: back, .. } => {
+                for (a, b) in images.iter().zip(&back) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn every_error_variant_roundtrips() {
+        for err in [
+            ServeError::ShuttingDown,
+            ServeError::QueueFull { queued: 9, cap: 8 },
+            ServeError::RequestTooLarge { n: 99, cap: 8 },
+            ServeError::WorkerInitFailed { worker: 1, cause: "x".into() },
+            ServeError::WorkerFailed { worker: 2, cause: "y".into() },
+            ServeError::AllWorkersDead { cause: "z".into() },
+            ServeError::NodeLost { cause: "gone".into() },
+            ServeError::Protocol { cause: "junk".into() },
+        ] {
+            let back =
+                serve_error_from_json(&serve_error_to_json(&err)).unwrap();
+            assert_eq!(back, err);
+        }
+    }
+
+    #[test]
+    fn decode_rejects_malformed_inputs_typed() {
+        // not UTF-8
+        assert!(Msg::decode(&[0xff, 0xfe, 0x00]).is_err());
+        // not JSON
+        assert!(Msg::decode(b"{not json").is_err());
+        // unknown type
+        assert!(Msg::decode(br#"{"type":"warp","id":1}"#).is_err());
+        // missing field
+        assert!(Msg::decode(br#"{"type":"submit","id":1,"n":2}"#).is_err());
+        // fractional count
+        assert!(
+            Msg::decode(br#"{"type":"ping","seq":1.5}"#).is_err()
+        );
+        // negative count
+        assert!(Msg::decode(
+            br#"{"type":"submit","id":-1,"class":0,"n":1}"#
+        )
+        .is_err());
+        // non-finite pixel (null after canonical dump)
+        assert!(Msg::decode(
+            br#"{"type":"response","id":1,"latency_s":0.1,"images":[1,null]}"#
+        )
+        .is_err());
+        // unknown error kind
+        assert!(serve_error_from_json(
+            &Json::parse(r#"{"kind":"mystery","cause":"?"}"#).unwrap()
+        )
+        .is_err());
+        // stats with a fractional counter
+        let stats =
+            ServerStats { requests: 3, ..ServerStats::default() };
+        let text = stats_to_json(&stats)
+            .dump()
+            .replace("\"requests\":3", "\"requests\":3.5");
+        assert!(stats_from_json(&Json::parse(&text).unwrap()).is_err());
+    }
+
+    #[test]
+    fn submit_class_may_be_negative() {
+        // padding uses class 0, but the protocol must not mangle
+        // negative conditioning labels
+        match roundtrip(&Msg::Submit { id: 1, class: -3, n: 2 }) {
+            Msg::Submit { class: -3, .. } => {}
+            other => panic!("{other:?}"),
+        }
+    }
+}

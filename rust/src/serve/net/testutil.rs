@@ -1,0 +1,87 @@
+//! Shared fixtures for the net-layer tests: loopback shard nodes over
+//! a mock class-valued backend (pixels all equal the slot's class, so
+//! cross-node routing is verifiable end to end), plus raw-socket
+//! message helpers.
+
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::serve::net::node::{NodeOpts, NodeServer};
+use crate::serve::net::proto::Msg;
+use crate::serve::net::wire::{read_frame, write_frame};
+use crate::serve::router::{
+    GenBackend, Router, RouterOpts, WorkerBody, WorkerHandle,
+};
+
+/// Backend whose pixels all equal the slot's class label; an optional
+/// per-slot delay simulates compute so tests can hold work in flight.
+struct ClassBackend {
+    rungs: Vec<usize>,
+    il: usize,
+    delay: Duration,
+}
+
+impl GenBackend for ClassBackend {
+    fn rungs(&self) -> Vec<usize> {
+        self.rungs.clone()
+    }
+    fn img_len(&self) -> usize {
+        self.il
+    }
+    fn generate(&mut self, labels: &[i32]) -> Result<Vec<f32>> {
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay * labels.len() as u32);
+        }
+        Ok(labels
+            .iter()
+            .flat_map(|&c| std::iter::repeat(c as f32).take(self.il))
+            .collect())
+    }
+}
+
+/// A mock single-worker router over [`ClassBackend`].
+pub(crate) fn mock_router(rungs: Vec<usize>, il: usize, delay: Duration,
+                          max_queue: usize) -> Router {
+    let body: Arc<WorkerBody> =
+        Arc::new(move |h: WorkerHandle| -> Result<()> {
+            let mut b =
+                ClassBackend { rungs: rungs.clone(), il, delay };
+            h.serve(&mut b)
+        });
+    Router::start(
+        RouterOpts { workers: 1, max_queue, ..RouterOpts::default() },
+        body,
+    )
+}
+
+/// A loopback shard node wrapping a mock router.
+pub(crate) fn mock_node(rungs: Vec<usize>, il: usize, delay: Duration)
+                        -> (NodeServer, SocketAddr) {
+    mock_node_capped(rungs, il, delay, RouterOpts::default().max_queue)
+}
+
+/// [`mock_node`] with an explicit queue cap (backpressure tests).
+pub(crate) fn mock_node_capped(rungs: Vec<usize>, il: usize,
+                               delay: Duration, max_queue: usize)
+                               -> (NodeServer, SocketAddr) {
+    let router = mock_router(rungs, il, delay, max_queue);
+    let node = NodeServer::start(Box::new(router), "127.0.0.1:0",
+                                 NodeOpts::default())
+        .expect("start loopback node");
+    let addr = node.addr();
+    (node, addr)
+}
+
+/// Write one protocol message (panics on failure — test plumbing).
+pub(crate) fn send_msg(stream: &mut TcpStream, msg: &Msg) {
+    write_frame(stream, &msg.encode()).expect("send message");
+}
+
+/// Read one protocol message (panics on failure — test plumbing).
+pub(crate) fn read_msg(stream: &mut TcpStream) -> Msg {
+    let payload = read_frame(stream).expect("read frame");
+    Msg::decode(&payload).expect("decode message")
+}

@@ -64,7 +64,7 @@ pub type GenResult = std::result::Result<GenResponse, ServeError>;
 /// Per-rung dispatch counters: batches have different capacities once
 /// the ladder is live, so padding and fill are only meaningful sliced
 /// by the rung they were dispatched on.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct RungStats {
     /// Lowered batch dim of this rung.
     pub rung: usize,
@@ -92,7 +92,8 @@ impl RungStats {
 }
 
 /// Find or insert the stats slot for `rung`, kept sorted ascending.
-fn rung_entry(rungs: &mut Vec<RungStats>, rung: usize) -> &mut RungStats {
+pub(crate) fn rung_entry(rungs: &mut Vec<RungStats>, rung: usize)
+                         -> &mut RungStats {
     let i = match rungs.binary_search_by_key(&rung, |r| r.rung) {
         Ok(i) => i,
         Err(i) => {
@@ -104,7 +105,7 @@ fn rung_entry(rungs: &mut Vec<RungStats>, rung: usize) -> &mut RungStats {
 }
 
 /// Per-worker counters (reported inside [`ServerStats`]).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct WorkerStats {
     pub worker: usize,
     pub batches: u64,
@@ -123,8 +124,10 @@ pub struct WorkerStats {
     pub failed: bool,
 }
 
-/// Aggregate server statistics (reported on shutdown).
-#[derive(Clone, Debug, Default)]
+/// Aggregate server statistics (reported on shutdown, or as a live
+/// snapshot via `stats()`/the remote stats protocol). `PartialEq` (not
+/// `Eq`: float fields) backs the wire-serde round-trip tests.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct ServerStats {
     pub requests: u64,
     /// Real images delivered (excludes padding).
@@ -153,6 +156,21 @@ pub struct ServerStats {
     /// Wall-clock of the one shared calibration resolution — cache
     /// load on a hit, the full MRQ/TGQ pipeline on a miss.
     pub calib_cold_start_ms: f64,
+    /// Lifetime slot-flow counters from the batcher. Conservation
+    /// invariant at any quiescent point (and after a drained
+    /// shutdown, where `pending` is zero):
+    /// `enqueued == dispatched + purged + pending`.
+    pub enqueued: u64,
+    pub dispatched: u64,
+    pub purged: u64,
+    /// Slots still queued when the stats were assembled (a live
+    /// snapshot may be non-zero; a drained shutdown reports zero).
+    pub pending: u64,
+    /// Cluster-level counters (zero for a purely local service):
+    /// requests re-queued onto a surviving shard after their node was
+    /// lost, and shard nodes declared dead.
+    pub requeued: u64,
+    pub nodes_lost: u64,
     /// Dispatch counters sliced by ladder rung, aggregated over the
     /// workers (ascending by rung).
     pub rungs: Vec<RungStats>,
@@ -178,6 +196,16 @@ impl ServerStats {
             self.queue_depth_max, self.failed_requests,
             self.dropped_responses
         );
+        println!(
+            "slots: {} enqueued = {} dispatched + {} purged + {} pending",
+            self.enqueued, self.dispatched, self.purged, self.pending
+        );
+        if self.requeued > 0 || self.nodes_lost > 0 {
+            println!(
+                "cluster: {} request(s) re-queued, {} node(s) lost",
+                self.requeued, self.nodes_lost
+            );
+        }
         if self.calib_cache_hits + self.calib_cache_misses > 0 {
             println!(
                 "calibration: cache {} ({:.0} ms cold start)",
@@ -200,6 +228,61 @@ impl ServerStats {
                 w.worker, w.batches, w.images, w.padded_slots, w.busy_s,
                 if w.failed { "  (failed)" } else { "" }
             );
+        }
+    }
+
+    /// Fold another service's stats into this one (cluster
+    /// aggregation, or summing per-node shutdown stats in tests).
+    ///
+    /// Counters add, so the conservation invariant
+    /// `enqueued == dispatched + purged + pending` survives the merge
+    /// whenever it holds per input. Ratios (`batch_fill`,
+    /// `queue_depth_avg`) merge weighted by batch count; `wall_s` and
+    /// the latency percentiles take the max (services ran
+    /// concurrently, and a max percentile is the conservative bound —
+    /// the cluster overwrites these with its own end-to-end
+    /// measurements). Worker rows are re-numbered so rows from
+    /// different nodes never collide.
+    pub fn absorb(&mut self, o: &ServerStats) {
+        let (b0, b1) = (self.batches as f64, o.batches as f64);
+        if b0 + b1 > 0.0 {
+            self.batch_fill =
+                (self.batch_fill * b0 + o.batch_fill * b1) / (b0 + b1);
+            self.queue_depth_avg = (self.queue_depth_avg * b0
+                                    + o.queue_depth_avg * b1)
+                / (b0 + b1);
+        }
+        self.requests += o.requests;
+        self.images += o.images;
+        self.batches += o.batches;
+        self.padded_slots += o.padded_slots;
+        self.failed_requests += o.failed_requests;
+        self.dropped_responses += o.dropped_responses;
+        self.wall_s = self.wall_s.max(o.wall_s);
+        self.queue_depth_max = self.queue_depth_max.max(o.queue_depth_max);
+        self.latency_p50_s = self.latency_p50_s.max(o.latency_p50_s);
+        self.latency_p95_s = self.latency_p95_s.max(o.latency_p95_s);
+        self.calib_cache_hits += o.calib_cache_hits;
+        self.calib_cache_misses += o.calib_cache_misses;
+        self.calib_cold_start_ms =
+            self.calib_cold_start_ms.max(o.calib_cold_start_ms);
+        self.enqueued += o.enqueued;
+        self.dispatched += o.dispatched;
+        self.purged += o.purged;
+        self.pending += o.pending;
+        self.requeued += o.requeued;
+        self.nodes_lost += o.nodes_lost;
+        for r in &o.rungs {
+            let e = rung_entry(&mut self.rungs, r.rung);
+            e.batches += r.batches;
+            e.images += r.images;
+            e.padded_slots += r.padded_slots;
+            e.busy_s += r.busy_s;
+        }
+        for w in &o.workers {
+            let mut w = w.clone();
+            w.worker = self.workers.len();
+            self.workers.push(w);
         }
     }
 }
@@ -287,8 +370,23 @@ struct PendingReq {
 }
 
 /// Completed-request latencies kept for shutdown percentiles — bounded
-/// so a long-lived server doesn't grow memory per request.
-const LATENCY_WINDOW: usize = 65536;
+/// so a long-lived server doesn't grow memory per request. The cluster
+/// dispatcher keeps its own ring at the same size.
+pub(crate) const LATENCY_WINDOW: usize = 65536;
+
+/// Record one completed-request latency in a bounded ring: grow until
+/// [`LATENCY_WINDOW`], then overwrite round-robin. Shared by the
+/// router and the cluster dispatcher so their window policies cannot
+/// drift apart.
+pub(crate) fn push_latency(window: &mut Vec<f64>, count: &mut u64,
+                           latency_s: f64) {
+    if window.len() < LATENCY_WINDOW {
+        window.push(latency_s);
+    } else {
+        window[(*count % LATENCY_WINDOW as u64) as usize] = latency_s;
+    }
+    *count += 1;
+}
 
 struct RouterState {
     open: bool,
@@ -357,16 +455,22 @@ impl RouterState {
             p.remaining -= 1;
             delivered += 1;
             if p.remaining == 0 {
-                let done = self.pending.remove(&s.req_id).unwrap();
+                // the entry was live two lines up, so `remove` cannot
+                // miss — but a protocol bug here must degrade one
+                // request, not panic the worker thread that holds the
+                // router lock
+                let Some(done) = self.pending.remove(&s.req_id) else {
+                    crate::warn_log!(
+                        "serve: request {} completed with no pending \
+                         entry (protocol bug); dropping its response",
+                        s.req_id
+                    );
+                    self.failed_requests += 1;
+                    continue;
+                };
                 let latency_s = done.t0.elapsed().as_secs_f64();
-                if self.latencies.len() < LATENCY_WINDOW {
-                    self.latencies.push(latency_s);
-                } else {
-                    let slot = (self.latency_count
-                                % LATENCY_WINDOW as u64) as usize;
-                    self.latencies[slot] = latency_s;
-                }
-                self.latency_count += 1;
+                push_latency(&mut self.latencies,
+                             &mut self.latency_count, latency_s);
                 let resp = GenResponse {
                     id: s.req_id,
                     images: done.images,
@@ -438,6 +542,78 @@ impl RouterState {
             .map(|e| e.to_string())
             .unwrap_or_else(|| "all workers exited".into())
     }
+
+    /// Build a [`ServerStats`] view of the current state (shared by
+    /// the live snapshot and the post-drain shutdown path). Returns
+    /// the cloned latency window alongside stats with *zeroed*
+    /// percentiles: the remote stats protocol calls this on every
+    /// heartbeat, so the O(n log n) sort over up to
+    /// [`LATENCY_WINDOW`] samples runs in [`finish_stats`] *after*
+    /// the state lock is released — a snapshot must not stall
+    /// submits, deliveries or the inline pong path.
+    fn assemble_stats(&self, wall_s: f64) -> (ServerStats, Vec<f64>) {
+        let lat = self.latencies.clone();
+        let batches: u64 = self.workers.iter().map(|w| w.batches).sum();
+        let images: u64 = self.workers.iter().map(|w| w.images).sum();
+        let padded: u64 =
+            self.workers.iter().map(|w| w.padded_slots).sum();
+        let mut rungs: Vec<RungStats> = Vec::new();
+        for w in &self.workers {
+            for r in &w.rungs {
+                let e = rung_entry(&mut rungs, r.rung);
+                e.batches += r.batches;
+                e.images += r.images;
+                e.padded_slots += r.padded_slots;
+                e.busy_s += r.busy_s;
+            }
+        }
+        let counters = self.batcher.counters();
+        let stats = ServerStats {
+            requests: self.requests,
+            images,
+            batches,
+            batch_fill: if batches > 0 {
+                self.fill_sum / batches as f64
+            } else {
+                0.0
+            },
+            padded_slots: padded,
+            failed_requests: self.failed_requests,
+            dropped_responses: self.dropped_responses,
+            wall_s,
+            queue_depth_avg: if self.depth_samples > 0 {
+                self.depth_sum / self.depth_samples as f64
+            } else {
+                0.0
+            },
+            queue_depth_max: self.queue_depth_max,
+            latency_p50_s: 0.0,
+            latency_p95_s: 0.0,
+            calib_cache_hits: 0,
+            calib_cache_misses: 0,
+            calib_cold_start_ms: 0.0,
+            enqueued: counters.enqueued,
+            dispatched: counters.dispatched,
+            purged: counters.purged,
+            pending: self.batcher.pending() as u64,
+            requeued: 0,
+            nodes_lost: 0,
+            rungs,
+            workers: self.workers.clone(),
+        };
+        (stats, lat)
+    }
+}
+
+/// Sort the latency window (outside any lock) and fill the
+/// percentiles; `total_cmp`, not `partial_cmp().unwrap()`, so one NaN
+/// sample (a clock anomaly) cannot panic the stats path.
+fn finish_stats(mut stats: ServerStats, mut lat: Vec<f64>)
+                -> ServerStats {
+    lat.sort_by(f64::total_cmp);
+    stats.latency_p50_s = percentile(&lat, 0.50);
+    stats.latency_p95_s = percentile(&lat, 0.95);
+    stats
 }
 
 struct Shared {
@@ -612,6 +788,18 @@ impl Router {
         self.shared.lock().ready
     }
 
+    /// Live statistics snapshot (counters so far, latency percentiles
+    /// over the completed-request window, current queue depth as
+    /// `pending`). The remote stats protocol serves this without
+    /// stopping the service.
+    pub fn stats(&self) -> ServerStats {
+        let (stats, lat) = self
+            .shared
+            .lock()
+            .assemble_stats(self.t_start.elapsed().as_secs_f64());
+        finish_stats(stats, lat)
+    }
+
     /// Stop accepting requests, drain the queue, join the workers and
     /// return aggregate + per-worker statistics.
     pub fn shutdown(mut self) -> ServerStats {
@@ -629,48 +817,33 @@ impl Router {
         if !st.pending.is_empty() {
             st.fail_all_pending(&ServeError::ShuttingDown);
         }
-        let mut lat = std::mem::take(&mut st.latencies);
-        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let batches: u64 = st.workers.iter().map(|w| w.batches).sum();
-        let images: u64 = st.workers.iter().map(|w| w.images).sum();
-        let padded: u64 = st.workers.iter().map(|w| w.padded_slots).sum();
-        let mut rungs: Vec<RungStats> = Vec::new();
-        for w in &st.workers {
-            for r in &w.rungs {
-                let e = rung_entry(&mut rungs, r.rung);
-                e.batches += r.batches;
-                e.images += r.images;
-                e.padded_slots += r.padded_slots;
-                e.busy_s += r.busy_s;
-            }
-        }
-        ServerStats {
-            requests: st.requests,
-            images,
-            batches,
-            batch_fill: if batches > 0 {
-                st.fill_sum / batches as f64
-            } else {
-                0.0
-            },
-            padded_slots: padded,
-            failed_requests: st.failed_requests,
-            dropped_responses: st.dropped_responses,
-            wall_s: self.t_start.elapsed().as_secs_f64(),
-            queue_depth_avg: if st.depth_samples > 0 {
-                st.depth_sum / st.depth_samples as f64
-            } else {
-                0.0
-            },
-            queue_depth_max: st.queue_depth_max,
-            latency_p50_s: percentile(&lat, 0.50),
-            latency_p95_s: percentile(&lat, 0.95),
-            calib_cache_hits: 0,
-            calib_cache_misses: 0,
-            calib_cold_start_ms: 0.0,
-            rungs,
-            workers: st.workers.clone(),
-        }
+        let (stats, lat) =
+            st.assemble_stats(self.t_start.elapsed().as_secs_f64());
+        drop(st);
+        finish_stats(stats, lat)
+    }
+}
+
+impl crate::serve::dispatch::Dispatch for Router {
+    fn submit(&self, req: GenRequest)
+              -> std::result::Result<(u64, Receiver<GenResult>),
+                                     ServeError> {
+        Router::submit(self, req)
+    }
+    fn queue_depth(&self) -> usize {
+        Router::queue_depth(self)
+    }
+    fn live_workers(&self) -> usize {
+        Router::live_workers(self)
+    }
+    fn ready_workers(&self) -> usize {
+        Router::ready_workers(self)
+    }
+    fn stats(&self) -> ServerStats {
+        Router::stats(self)
+    }
+    fn shutdown(self: Box<Self>) -> ServerStats {
+        Router::shutdown(*self)
     }
 }
 
@@ -1388,6 +1561,74 @@ mod tests {
             }
         }
         router.shutdown();
+    }
+
+    #[test]
+    fn stats_snapshot_and_shutdown_conserve_slots() {
+        let router = mock_router(1, 4, 3);
+        let (_, rx) = router.submit(GenRequest { class: 2, n: 6 }).unwrap();
+        rx.recv().unwrap().unwrap();
+        // live snapshot holds the conservation identity and does not
+        // stop the service
+        let snap = router.stats();
+        assert_eq!(snap.enqueued,
+                   snap.dispatched + snap.purged + snap.pending);
+        assert_eq!(snap.requests, 1);
+        let (_, rx2) = router.submit(GenRequest { class: 3, n: 2 }).unwrap();
+        rx2.recv().unwrap().unwrap();
+        let stats = router.shutdown();
+        assert_eq!(stats.pending, 0, "drained shutdown leaves no slots");
+        assert_eq!(stats.enqueued, 8);
+        assert_eq!(stats.enqueued, stats.dispatched + stats.purged);
+    }
+
+    #[test]
+    fn failed_batch_purge_shows_in_stats_counters() {
+        let body: Arc<WorkerBody> = Arc::new(|h: WorkerHandle| -> Result<()> {
+            let mut b = MockBackend::new(2, 2);
+            b.fail_after = Some(0);
+            h.serve(&mut b)
+        });
+        let router =
+            Router::start(RouterOpts { workers: 1, ..Default::default() },
+                          body);
+        let (_, rx) = router.submit(GenRequest { class: 1, n: 5 }).unwrap();
+        assert!(rx.recv().unwrap().is_err());
+        let stats = router.shutdown();
+        // 2 slots dispatched into the failing batch, 3 purged from the
+        // queue when the request failed — conservation still holds
+        assert_eq!(stats.enqueued, 5);
+        assert_eq!(stats.enqueued,
+                   stats.dispatched + stats.purged + stats.pending);
+        assert!(stats.purged >= 3, "queued remainder must be purged");
+    }
+
+    #[test]
+    fn absorb_sums_counters_and_renumbers_workers() {
+        let mut a = {
+            let router = mock_router(2, 4, 3);
+            let (_, rx) =
+                router.submit(GenRequest { class: 1, n: 5 }).unwrap();
+            rx.recv().unwrap().unwrap();
+            router.shutdown()
+        };
+        let b = {
+            let router = mock_router(1, 2, 3);
+            let (_, rx) =
+                router.submit(GenRequest { class: 2, n: 2 }).unwrap();
+            rx.recv().unwrap().unwrap();
+            router.shutdown()
+        };
+        let (ra, rb) = (a.requests, b.requests);
+        a.absorb(&b);
+        assert_eq!(a.requests, ra + rb);
+        assert_eq!(a.images, 7);
+        assert_eq!(a.enqueued, 7);
+        assert_eq!(a.enqueued, a.dispatched + a.purged + a.pending);
+        // worker rows from both services, re-numbered without collision
+        assert_eq!(a.workers.len(), 3);
+        let ids: Vec<usize> = a.workers.iter().map(|w| w.worker).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
     }
 
     #[test]

@@ -251,11 +251,10 @@ impl GenServer {
         self.router.ready_workers()
     }
 
-    /// Stop the workers, drain the queue and collect statistics
-    /// (including the calibration-cache outcome for this run).
-    pub fn shutdown(self) -> ServerStats {
-        let mut stats = self.router.shutdown();
-        if let Some(rec) = self.calib.record() {
+    /// Overlay the shared-calibration outcome onto router stats.
+    fn overlay_calib(calib: &CalibCell, mut stats: ServerStats)
+                     -> ServerStats {
+        if let Some(rec) = calib.record() {
             match rec.cache {
                 Some(true) => stats.calib_cache_hits = 1,
                 Some(false) => stats.calib_cache_misses = 1,
@@ -266,6 +265,44 @@ impl GenServer {
             stats.calib_cold_start_ms = rec.cold_start_ms;
         }
         stats
+    }
+
+    /// Live statistics snapshot (the remote stats protocol serves this
+    /// without stopping the service).
+    pub fn stats(&self) -> ServerStats {
+        GenServer::overlay_calib(&self.calib, self.router.stats())
+    }
+
+    /// Stop the workers, drain the queue and collect statistics
+    /// (including the calibration-cache outcome for this run).
+    pub fn shutdown(self) -> ServerStats {
+        let GenServer { router, calib } = self;
+        GenServer::overlay_calib(&calib, router.shutdown())
+    }
+}
+
+impl crate::serve::dispatch::Dispatch for GenServer {
+    fn submit(&self, req: GenRequest)
+              -> std::result::Result<
+                  (u64, std::sync::mpsc::Receiver<GenResult>),
+                  ServeError,
+              > {
+        GenServer::submit(self, req)
+    }
+    fn queue_depth(&self) -> usize {
+        GenServer::queue_depth(self)
+    }
+    fn live_workers(&self) -> usize {
+        GenServer::live_workers(self)
+    }
+    fn ready_workers(&self) -> usize {
+        GenServer::ready_workers(self)
+    }
+    fn stats(&self) -> ServerStats {
+        GenServer::stats(self)
+    }
+    fn shutdown(self: Box<Self>) -> ServerStats {
+        GenServer::shutdown(*self)
     }
 }
 

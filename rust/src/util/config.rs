@@ -129,6 +129,24 @@ impl RawConfig {
         }
         Ok(Some(list))
     }
+
+    /// Comma-separated string list (`"host:7070,host:7071"`); `None`
+    /// when the key is absent, an error when it is present but holds
+    /// no entries.
+    pub fn str_list(&self, key: &str) -> Result<Option<Vec<String>>> {
+        let Some(v) = self.values.get(key) else { return Ok(None) };
+        let list: Vec<String> = v
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(str::to_string)
+            .collect();
+        if list.is_empty() {
+            bail!("config `{key}`: expected at least one entry, \
+                   got `{v}`");
+        }
+        Ok(Some(list))
+    }
 }
 
 /// Everything the quantization pipeline needs; built from file + CLI.
@@ -170,6 +188,16 @@ pub struct RunConfig {
     /// default) dispatches immediately — byte-identical to the
     /// pre-ladder fixed-batch behavior on one-rung manifests.
     pub linger_ms: u64,
+    /// Serve: shard-node addresses (`--shards host:7070,host:7071`).
+    /// `None` serves in-process; `Some` makes `serve` a cluster
+    /// frontend dispatching over the net layer.
+    pub shards: Option<Vec<String>>,
+    /// Cluster heartbeat cadence (`--heartbeat-ms N`).
+    pub heartbeat_ms: u64,
+    /// Cluster node-loss deadline (`--node-timeout-ms N`): a shard
+    /// whose last heartbeat is older than this is declared dead and
+    /// its in-flight requests re-queued. Must exceed the heartbeat.
+    pub node_timeout_ms: u64,
 }
 
 impl Default for RunConfig {
@@ -191,6 +219,9 @@ impl Default for RunConfig {
             calib_cache: Some("calib-cache".into()),
             batch_ladder: None,
             linger_ms: 0,
+            shards: None,
+            heartbeat_ms: 500,
+            node_timeout_ms: 2500,
         }
     }
 }
@@ -235,6 +266,13 @@ impl RunConfig {
                 }
             },
             linger_ms: raw.usize("linger-ms", d.linger_ms as usize)? as u64,
+            shards: raw.str_list("shards")?,
+            heartbeat_ms: raw
+                .usize("heartbeat-ms", d.heartbeat_ms as usize)?
+                as u64,
+            node_timeout_ms: raw
+                .usize("node-timeout-ms", d.node_timeout_ms as usize)?
+                as u64,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -256,6 +294,17 @@ impl RunConfig {
                  some time group would cover no sampler steps; lower \
                  `groups` or raise `timesteps`",
                 self.groups, self.timesteps
+            );
+        }
+        if self.heartbeat_ms == 0 {
+            bail!("config `heartbeat-ms`: must be at least 1");
+        }
+        if self.node_timeout_ms <= self.heartbeat_ms {
+            bail!(
+                "config: node-timeout-ms ({}) must exceed heartbeat-ms \
+                 ({}) — a timeout within one heartbeat declares every \
+                 healthy node dead",
+                self.node_timeout_ms, self.heartbeat_ms
             );
         }
         Ok(())
@@ -376,6 +425,41 @@ name = "full run"
         let c = RawConfig::parse("batch-ladder = 0,4").unwrap();
         assert!(RunConfig::from_raw(&c).is_err());
         let c = RawConfig::parse("batch-ladder = ,").unwrap();
+        assert!(RunConfig::from_raw(&c).is_err());
+    }
+
+    #[test]
+    fn shards_and_health_flags() {
+        // defaults: in-process serving, paper-agnostic net timings
+        let cfg = RunConfig::from_raw(&RawConfig::parse("").unwrap())
+            .unwrap();
+        assert_eq!(cfg.shards, None);
+        assert_eq!(cfg.heartbeat_ms, 500);
+        assert_eq!(cfg.node_timeout_ms, 2500);
+        // --shards splits, trims, and keeps order
+        let c = RawConfig::parse(
+            "shards = 10.0.0.1:7070, 10.0.0.2:7070\nheartbeat-ms = 100\n\
+             node-timeout-ms = 900",
+        )
+        .unwrap();
+        let cfg = RunConfig::from_raw(&c).unwrap();
+        assert_eq!(
+            cfg.shards.as_deref(),
+            Some(&["10.0.0.1:7070".to_string(),
+                   "10.0.0.2:7070".to_string()][..])
+        );
+        assert_eq!((cfg.heartbeat_ms, cfg.node_timeout_ms), (100, 900));
+        // an empty shard list is a config error, not "no shards"
+        let c = RawConfig::parse("shards = ,").unwrap();
+        let e = format!("{:#}", RunConfig::from_raw(&c).unwrap_err());
+        assert!(e.contains("shards"), "{e}");
+        // a timeout within one heartbeat would kill every healthy node
+        let c = RawConfig::parse("heartbeat-ms = 500\n\
+                                  node-timeout-ms = 500")
+            .unwrap();
+        let e = format!("{:#}", RunConfig::from_raw(&c).unwrap_err());
+        assert!(e.contains("node-timeout-ms"), "{e}");
+        let c = RawConfig::parse("heartbeat-ms = 0").unwrap();
         assert!(RunConfig::from_raw(&c).is_err());
     }
 
