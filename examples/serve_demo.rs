@@ -15,8 +15,18 @@
 //! instead: N loopback shard nodes (each its own GenServer behind a
 //! TCP listener on 127.0.0.1) under one cluster frontend — the demo
 //! client code is identical because both ends implement `Dispatch`.
+//! Each shard gets a dedicated control connection (disable with
+//! `--control-plane false` to see the pre-isolation topology), so a
+//! node busy streaming responses is never mistaken for a dead one.
 //! `--kill-node-after-ms T` partitions node 0 mid-load to show the
-//! re-queue path: with a surviving node every request still completes.
+//! re-queue path: with a surviving node every request still completes,
+//! and since node 0 keeps listening, the frontend re-dials it
+//! (`--reconnect-ms`), probes it (`--readmit-pongs`) and re-admits it
+//! — the demo prints the moment it is placed back in rotation.
+//! `--restart-node-after-ms T` is the harsher flap: node 0 is shut
+//! down entirely (listener gone) and a fresh node is started on the
+//! same address T ms later; the frontend must re-admit the stranger
+//! without restarting.
 //!
 //! Reports per-request latency, then the aggregate + per-worker +
 //! per-rung stats (throughput, fill, padding, queue depth, p50/p95),
@@ -27,10 +37,12 @@
 //!        --clients 3 --requests 4 --workers 2 \
 //!        --scenario trickle --linger-ms 5 --batch-ladder 1,4,16
 //!      cargo run --release --example serve_demo -- \
-//!        --nodes 2 --workers 1 --kill-node-after-ms 500
+//!        --nodes 2 --workers 1 --kill-node-after-ms 500 \
+//!        --reconnect-ms 200 --readmit-pongs 2
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::time::Duration;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 use tq_dit::coordinator::pipeline::Method;
 use tq_dit::serve::{
@@ -54,6 +66,30 @@ fn shape_request(scenario: &str, client: usize, i: usize)
     }
 }
 
+/// Local server or cluster frontend behind one dispatch surface — kept
+/// as an enum (not a `Box<dyn Dispatch>`) so the fault-injection
+/// thread can watch cluster-only signals like `live_shards`.
+enum Service {
+    Local(GenServer),
+    Cluster(Cluster),
+}
+
+impl Service {
+    fn dispatch(&self) -> &dyn Dispatch {
+        match self {
+            Service::Local(s) => s,
+            Service::Cluster(c) => c,
+        }
+    }
+
+    fn shutdown(self) -> tq_dit::serve::ServerStats {
+        match self {
+            Service::Local(s) => s.shutdown(),
+            Service::Cluster(c) => c.shutdown(),
+        }
+    }
+}
+
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let mut cfg = RunConfig::from_args(&args)?;
@@ -71,6 +107,10 @@ fn main() -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("unknown --method"))?;
     let nodes = args.usize("nodes", 0)?;
     let kill_after_ms = args.u64("kill-node-after-ms", 0)?;
+    let restart_after_ms = args.u64("restart-node-after-ms", 0)?;
+    if restart_after_ms > 0 && nodes == 0 {
+        anyhow::bail!("--restart-node-after-ms needs --nodes N");
+    }
 
     println!(
         "== serve demo [{scenario}]: {clients} clients x {n_req} requests \
@@ -82,40 +122,114 @@ fn main() -> anyhow::Result<()> {
             .map(|l| format!("{l:?}"))
             .unwrap_or_else(|| "manifest".into()),
     );
-    // local or loopback-cluster topology behind one Dispatch handle —
+    // local or loopback-cluster topology behind one dispatch surface —
     // the client code below cannot tell them apart
-    let mut node_handles: Vec<NodeServer> = Vec::new();
-    let server: Box<dyn Dispatch> = if nodes > 0 {
+    let node_handles: Mutex<Vec<NodeServer>> = Mutex::new(Vec::new());
+    let mut node0_addr = String::new();
+    let server: Service = if nodes > 0 {
         let mut addrs = Vec::new();
         for _ in 0..nodes {
             let gs = GenServer::with_workers(cfg.clone(), method, workers);
             let node = NodeServer::start(Box::new(gs), "127.0.0.1:0",
                                          NodeOpts::default())?;
             addrs.push(node.addr().to_string());
-            node_handles.push(node);
+            node_handles.lock().unwrap().push(node);
         }
-        println!("loopback cluster: {nodes} shard node(s) at {}",
-                 addrs.join(", "));
-        Box::new(Cluster::connect(
+        node0_addr = addrs[0].clone();
+        println!("loopback cluster: {nodes} shard node(s) at {} \
+                  (control plane {})",
+                 addrs.join(", "),
+                 if cfg.control_plane { "isolated" } else { "shared" });
+        Service::Cluster(Cluster::connect(
             &addrs, ClusterOpts::from_run_config(&cfg))?)
     } else {
-        Box::new(GenServer::with_workers(cfg.clone(), method, workers))
+        Service::Local(GenServer::with_workers(cfg.clone(), method,
+                                               workers))
     };
 
     // all clients submitting concurrently against the shared handle
     let failures = AtomicUsize::new(0);
     std::thread::scope(|s| {
-        if kill_after_ms > 0 {
-            if let Some(first) = node_handles.first() {
-                s.spawn(move || {
-                    std::thread::sleep(Duration::from_millis(
-                        kill_after_ms));
-                    first.sever_connections();
+        // fault injection: partition (sever) or fully restart node 0
+        // mid-load, then watch the frontend heal
+        if (kill_after_ms > 0 || restart_after_ms > 0) && nodes > 0 {
+            let server = &server;
+            let node_handles = &node_handles;
+            let node0_addr = node0_addr.clone();
+            let cfg = cfg.clone();
+            s.spawn(move || {
+                let Service::Cluster(cluster) = server else { return };
+                let delay = kill_after_ms.max(restart_after_ms);
+                std::thread::sleep(Duration::from_millis(delay));
+                // death detection is asynchronous, so healing is
+                // observed via the re-admission counter (a transient
+                // live_shards dip could be missed entirely)
+                let readmitted_before = cluster.nodes_readmitted();
+                if restart_after_ms > 0 {
+                    // full death: drain + drop the node, listener gone
+                    let node0 = node_handles.lock().unwrap().remove(0);
+                    node0.shutdown();
+                    eprintln!("[demo] node 0 shut down — its in-flight \
+                               requests re-queue onto the survivors");
+                } else {
+                    if let Some(first) =
+                        node_handles.lock().unwrap().first()
+                    {
+                        first.sever_connections();
+                    }
                     eprintln!("[demo] partitioned node 0 — its \
                                in-flight requests re-queue onto the \
                                survivors");
-                });
-            }
+                }
+                let t_dead = Instant::now();
+                if restart_after_ms > 0 {
+                    // bring a fresh node up on the same address (bind
+                    // can briefly race the old listener's close);
+                    // bounded like the bench's rebind loop so a stolen
+                    // port cannot hang the demo forever
+                    let bind_deadline =
+                        Instant::now() + Duration::from_secs(15);
+                    loop {
+                        let gs = GenServer::with_workers(cfg.clone(),
+                                                         method,
+                                                         workers);
+                        match NodeServer::start(Box::new(gs),
+                                                &node0_addr,
+                                                NodeOpts::default()) {
+                            Ok(node) => {
+                                eprintln!("[demo] restarted node 0 on \
+                                           {node0_addr}");
+                                node_handles.lock().unwrap().push(node);
+                                break;
+                            }
+                            Err(e) if Instant::now() > bind_deadline => {
+                                eprintln!("[demo] giving up re-binding \
+                                           {node0_addr}: {e}");
+                                return;
+                            }
+                            Err(e) => {
+                                eprintln!("[demo] re-bind pending: {e}");
+                                std::thread::sleep(
+                                    Duration::from_millis(100));
+                            }
+                        }
+                    }
+                }
+                // the frontend heals on its own: reconnect → probation
+                // → K pongs → re-admitted into placement
+                let deadline = Instant::now() + Duration::from_secs(30);
+                while cluster.nodes_readmitted() == readmitted_before {
+                    if Instant::now() > deadline {
+                        eprintln!("[demo] node 0 NOT re-admitted \
+                                   within 30 s");
+                        return;
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                eprintln!("[demo] node 0 re-admitted {} ms after its \
+                           death — no frontend restart",
+                          t_dead.elapsed().as_millis());
+            });
         }
         for c in 0..clients {
             let server = &server;
@@ -128,7 +242,7 @@ fn main() -> anyhow::Result<()> {
                         std::thread::sleep(gap);
                     }
                     let req = GenRequest { class: ((c + i) % 8) as i32, n };
-                    match server.submit(req) {
+                    match server.dispatch().submit(req) {
                         Ok((id, rx)) => match rx.recv() {
                             Ok(Ok(resp)) => println!(
                                 "client {c} req {i} (id {id}): {n} images \
@@ -158,7 +272,10 @@ fn main() -> anyhow::Result<()> {
 
     let stats = server.shutdown();
     stats.print();
-    for (i, node) in node_handles.into_iter().enumerate() {
+    for (i, node) in node_handles.into_inner().unwrap()
+        .into_iter()
+        .enumerate()
+    {
         println!("-- node {i} --");
         node.shutdown().print();
     }

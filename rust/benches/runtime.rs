@@ -3,11 +3,14 @@
 //! sampling throughput — FP vs quantized path — the serve stack's
 //! adaptive-batching policy (ladder vs fixed under trickle / steady /
 //! burst load), and the cross-node loopback cluster (2 shard nodes on
-//! 127.0.0.1, one killed mid-load).
+//! 127.0.0.1): one killed mid-load permanently, then the elasticity
+//! run — control-plane liveness under ~10 MiB responses (zero false
+//! node-deaths) and a kill-then-restart that must end in re-admission
+//! with conservation intact across the flap.
 //!
 //! Smoke gates (no AOT artifacts, no PJRT — the CI steps):
 //! `TQDIT_BENCH_SMOKE=1` runs only the mock-backend adaptive-batching
-//! section; `TQDIT_NET_SMOKE=1` only the loopback cluster section.
+//! section; `TQDIT_NET_SMOKE=1` only the loopback cluster sections.
 
 #[path = "common.rs"]
 mod common;
@@ -40,6 +43,8 @@ fn main() -> anyhow::Result<()> {
     }
     if full || net_smoke {
         cluster_loopback_bench()?;
+        cluster_liveness_bench()?;
+        cluster_flap_bench()?;
     }
     Ok(())
 }
@@ -339,9 +344,12 @@ fn adaptive_batching_bench() -> anyhow::Result<()> {
 
 // ---- cross-node loopback: 2 shard nodes, one killed mid-load ----------
 
-/// A loopback shard node over a [`ShapedBackend`] router.
-fn shaped_node(rungs: Vec<usize>, il: usize, cost: Duration)
-               -> anyhow::Result<(NodeServer, String)> {
+/// A loopback shard node over a [`ShapedBackend`] router, bound to an
+/// explicit address (`127.0.0.1:0` picks a port; the flap section
+/// re-binds a known one after killing its node).
+fn shaped_node_on(listen: &str, rungs: Vec<usize>, il: usize,
+                  cost: Duration)
+                  -> anyhow::Result<(NodeServer, String)> {
     let body: Arc<WorkerBody> =
         Arc::new(move |h: WorkerHandle| -> anyhow::Result<()> {
             let mut b = ShapedBackend {
@@ -355,10 +363,16 @@ fn shaped_node(rungs: Vec<usize>, il: usize, cost: Duration)
         RouterOpts { workers: 1, ..RouterOpts::default() },
         body,
     );
-    let node = NodeServer::start(Box::new(router), "127.0.0.1:0",
-                                 NodeOpts::default())?;
+    let node =
+        NodeServer::start(Box::new(router), listen, NodeOpts::default())?;
     let addr = node.addr().to_string();
     Ok((node, addr))
+}
+
+/// A loopback shard node over a [`ShapedBackend`] router.
+fn shaped_node(rungs: Vec<usize>, il: usize, cost: Duration)
+               -> anyhow::Result<(NodeServer, String)> {
+    shaped_node_on("127.0.0.1:0", rungs, il, cost)
 }
 
 /// The acceptance gate for the net layer: 2 loopback shard nodes under
@@ -378,12 +392,16 @@ fn cluster_loopback_bench() -> anyhow::Result<()> {
     let (node_b, addr_b) = shaped_node(rungs, 4, cost)?;
     // generous timeout: the kill is detected via the severed
     // connection (instant), and a tight timeout would let CI
-    // scheduling stalls kill the healthy survivor too
+    // scheduling stalls kill the healthy survivor too. Reconnects are
+    // off (1 h) — this section is about losing a node *permanently*;
+    // the flap section below covers revival.
     let opts = ClusterOpts {
         health: HealthPolicy {
             heartbeat: Duration::from_millis(25),
             timeout: Duration::from_secs(5),
+            ..HealthPolicy::default()
         },
+        reconnect: Duration::from_secs(3600),
         ..ClusterOpts::default()
     };
     let cluster = Cluster::connect(&[addr_a, addr_b], opts)?;
@@ -486,5 +504,224 @@ fn cluster_loopback_bench() -> anyhow::Result<()> {
         summed.enqueued, summed.dispatched, summed.purged, summed.pending
     );
     println!("  -> all requests accounted for; conservation holds");
+    Ok(())
+}
+
+// ---- control-plane liveness: ~10 MiB responses, zero false deaths -----
+
+/// Backend whose pixels vary, so each 8-image response serializes to
+/// roughly 10 MiB of JSON — the data plane stays saturated for whole
+/// seconds while the liveness verdict must not waver.
+struct BigBackend {
+    il: usize,
+}
+
+impl GenBackend for BigBackend {
+    fn rungs(&self) -> Vec<usize> {
+        vec![8]
+    }
+    fn img_len(&self) -> usize {
+        self.il
+    }
+    fn generate(&mut self, labels: &[i32]) -> anyhow::Result<Vec<f32>> {
+        Ok((0..labels.len() * self.il)
+            .map(|i| (i % 9973) as f32 * 1.07e-3)
+            .collect())
+    }
+}
+
+/// The headline-bug gate: a shard streaming ≥ 8 MiB responses under
+/// sustained load, with a liveness deadline far below one response's
+/// transfer+parse time. Pre-isolation, the pong queued behind the
+/// response frames on the shared connection and the busy node was
+/// declared dead; with the dedicated control connection (and chunked
+/// data frames) the run must end with **zero** node deaths.
+fn cluster_liveness_bench() -> anyhow::Result<()> {
+    println!(
+        "\ncontrol-plane isolation (1 shard node, ~10 MiB responses, \
+         600 ms liveness deadline):"
+    );
+    let il = 131_072usize; // 8 imgs x 128k varied pixels ≈ 10 MiB JSON
+    let body: Arc<WorkerBody> =
+        Arc::new(move |h: WorkerHandle| -> anyhow::Result<()> {
+            let mut b = BigBackend { il };
+            h.serve(&mut b)
+        });
+    let router = Router::start(
+        RouterOpts { workers: 1, ..RouterOpts::default() },
+        body,
+    );
+    let node = NodeServer::start(Box::new(router), "127.0.0.1:0",
+                                 NodeOpts::default())?;
+    let addr = node.addr().to_string();
+    let cluster = Cluster::connect(
+        &[addr],
+        ClusterOpts {
+            health: HealthPolicy {
+                heartbeat: Duration::from_millis(25),
+                timeout: Duration::from_millis(600),
+                ..HealthPolicy::default()
+            },
+            reconnect: Duration::from_secs(3600),
+            ..ClusterOpts::default()
+        },
+    )?;
+    let n_req = 3usize;
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::new();
+    for i in 0..n_req {
+        rxs.push(cluster.submit(GenRequest { class: i as i32, n: 8 })?);
+    }
+    let mut bytes_est = 0usize;
+    for (_, rx) in rxs {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(120))
+            .map_err(|_| anyhow::anyhow!("big-response request hung"))??;
+        // ~11 JSON bytes per varied f32 pixel
+        bytes_est += resp.images.len() * 11;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let agg = cluster.shutdown();
+    println!(
+        "  {n_req} requests (~{} MiB of response JSON) in {wall:.2}s: \
+         {} node death(s), p95 {:.3}s",
+        bytes_est >> 20, agg.nodes_lost, agg.latency_p95_s
+    );
+    anyhow::ensure!(
+        agg.nodes_lost == 0,
+        "busy-but-healthy node falsely declared dead {} time(s)",
+        agg.nodes_lost
+    );
+    anyhow::ensure!(agg.failed_requests == 0,
+                    "{} request(s) failed on a healthy node",
+                    agg.failed_requests);
+    node.shutdown();
+    println!("  -> zero false node-deaths under multi-MiB streaming");
+    Ok(())
+}
+
+// ---- elasticity: kill a node, restart it, demand re-admission ----------
+
+/// Kill-then-restart: node A dies mid-load (its in-flight work
+/// re-queues onto B), a new node process comes up on the same address,
+/// and the *same* frontend must re-admit it and hand it new
+/// placements — while the slot-conservation identity keeps holding
+/// across the flap.
+fn cluster_flap_bench() -> anyhow::Result<()> {
+    println!(
+        "\nelasticity (kill node A mid-load, restart it, demand \
+         re-admission):"
+    );
+    let rungs = vec![1usize, 2, 4];
+    let cost = Duration::from_millis(5);
+    let (node_a, addr_a) = shaped_node(rungs.clone(), 4, cost)?;
+    let (node_b, addr_b) = shaped_node(rungs.clone(), 4, cost)?;
+    let cluster = Cluster::connect(
+        &[addr_a.clone(), addr_b],
+        ClusterOpts {
+            health: HealthPolicy {
+                heartbeat: Duration::from_millis(25),
+                timeout: Duration::from_secs(5),
+                readmit_pongs: 3,
+            },
+            reconnect: Duration::from_millis(100),
+            ..ClusterOpts::default()
+        },
+    )?;
+
+    // phase 1: load both shards, then kill A with work in flight
+    let mut rxs = Vec::new();
+    for i in 0..12usize {
+        let n = 1 + i % 4;
+        rxs.push((i, cluster.submit(GenRequest {
+            class: (i % 8) as i32,
+            n,
+        })?));
+    }
+    std::thread::sleep(Duration::from_millis(30));
+    node_a.shutdown(); // full node death: listener gone too
+    let mut completed = 0usize;
+    for (_, (_, rx)) in rxs {
+        match rx.recv_timeout(Duration::from_secs(30)) {
+            Ok(Ok(_)) => completed += 1,
+            Ok(Err(e)) => anyhow::bail!("request failed across the \
+                                         kill: {e}"),
+            Err(_) => anyhow::bail!("request hung across the kill"),
+        }
+    }
+    println!("  phase 1: {completed}/12 completed across the kill \
+              (A's in-flight re-queued onto B)");
+
+    // phase 2: restart A on the same address; the frontend must
+    // re-admit it without being restarted itself
+    let node_a2 = {
+        let deadline = std::time::Instant::now()
+            + Duration::from_secs(10);
+        loop {
+            match shaped_node_on(&addr_a, rungs.clone(), 4, cost) {
+                Ok((node, _)) => break node,
+                Err(e) => {
+                    anyhow::ensure!(
+                        std::time::Instant::now() < deadline,
+                        "could not re-bind node A's address: {e:#}"
+                    );
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+    };
+    let deadline =
+        std::time::Instant::now() + Duration::from_secs(20);
+    while cluster.live_shards() < 2 {
+        anyhow::ensure!(
+            std::time::Instant::now() < deadline,
+            "restarted node was not re-admitted within 20 s \
+             ({} serving shard(s))",
+            cluster.live_shards()
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    println!("  phase 2: restarted node re-admitted \
+              (probation pongs answered)");
+
+    // phase 3: new load must reach the re-admitted shard
+    let mut rxs = Vec::new();
+    for i in 0..16usize {
+        let n = 1 + i % 4;
+        rxs.push(cluster.submit(GenRequest {
+            class: (i % 8) as i32,
+            n,
+        })?);
+    }
+    for (_, rx) in rxs {
+        match rx.recv_timeout(Duration::from_secs(30)) {
+            Ok(Ok(_)) => {}
+            Ok(Err(e)) => anyhow::bail!("post-readmission request \
+                                         failed: {e}"),
+            Err(_) => anyhow::bail!("post-readmission request hung"),
+        }
+    }
+    let agg = cluster.shutdown();
+    let stats_a2 = node_a2.shutdown();
+    let stats_b = node_b.shutdown();
+    println!(
+        "  phase 3: restarted A served {} request(s), B {} — \
+         {} lost / {} re-admitted over the flap",
+        stats_a2.requests, stats_b.requests, agg.nodes_lost,
+        agg.nodes_readmitted
+    );
+    anyhow::ensure!(agg.nodes_lost == 1,
+                    "expected exactly the killed node lost, got {}",
+                    agg.nodes_lost);
+    anyhow::ensure!(agg.nodes_readmitted == 1,
+                    "restarted node was not counted re-admitted");
+    anyhow::ensure!(stats_a2.requests > 0,
+                    "re-admitted node never received a placement");
+    anyhow::ensure!(
+        agg.enqueued == agg.dispatched + agg.purged + agg.pending,
+        "conservation broke across the flap: {} != {} + {} + {}",
+        agg.enqueued, agg.dispatched, agg.purged, agg.pending
+    );
+    println!("  -> node flap healed in place; conservation holds");
     Ok(())
 }

@@ -19,7 +19,8 @@
 //!   --eval-images N --seed S --ho BOOL --mrq BOOL --tgq BOOL
 //!   --calib-cache DIR --no-calib-cache
 //!   --batch-ladder A,B,C --linger-ms N (serve batch policy)
-//!   --shards A,B --heartbeat-ms N --node-timeout-ms N (cluster)
+//!   --shards A,B --heartbeat-ms N --node-timeout-ms N
+//!   --control-plane BOOL --readmit-pongs K --reconnect-ms N (cluster)
 //!   --config FILE (TOML-subset, overridden by CLI flags)
 
 use std::time::Duration;
@@ -112,6 +113,13 @@ FLAGS (all subcommands)
   --heartbeat-ms N      cluster: shard heartbeat cadence      [500]
   --node-timeout-ms N   cluster: declare a shard dead after this long
                         without a heartbeat (re-queues its work) [2500]
+  --control-plane BOOL  cluster: dedicated per-shard control connection
+                        for ping/pong/stats, so liveness never queues
+                        behind response frames          [true]
+  --readmit-pongs K     cluster: consecutive pongs before a recovered
+                        shard re-enters placement       [3]
+  --reconnect-ms N      cluster: how often dead shards are re-dialed
+                        for re-admission                [1000]
   --stats-json PATH     serve/node: dump final ServerStats (local or
                         cluster-aggregated) as canonical JSON on
                         shutdown (node: needs a bounded --run-secs)

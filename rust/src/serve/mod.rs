@@ -6,10 +6,14 @@
 //! # Architecture (client → cluster → wire → node → router)
 //!
 //! ```text
-//! clients ──submit──▶ Cluster ─ wire frames ─▶ NodeServer ─┐   (remote,
-//!    │                  (least-loaded shard,     per-conn  │  serve/net)
-//!    │                   re-queue on node loss)  handlers  │
-//!    │                                                     ▼
+//! clients ──submit──▶ Cluster ── data plane ──▶ NodeServer ─┐  (remote,
+//!    │                  │ (least-loaded shard,    per-conn  │ serve/net)
+//!    │                  │  chunked frames,        handlers  │
+//!    │                  │  re-queue on node loss)           │
+//!    │                  └─ control plane (Hello{role}) ──▶──┤
+//!    │                     ping/pong/stats only; health     │
+//!    │                     Alive→Suspect→Dead→Probation→    │
+//!    │                     Alive (reconnect + re-admission) ▼
 //!    └──────────────── in-process (GenServer) ──────▶ Router
 //!                                                          │
 //!                     Batcher (FIFO slots, arrival times, counters)
@@ -84,7 +88,12 @@
 //! Across hosts the same discipline holds one level up: a lost shard
 //! node has its in-flight requests re-queued onto surviving shards by
 //! the [`net::Cluster`], and only when no shard remains do clients see
-//! a typed [`ServeError::NodeLost`] — zero hangs either way.
+//! a typed [`ServeError::NodeLost`] — zero hangs either way. Liveness
+//! itself is isolated from the data plane (each shard gets a dedicated
+//! control connection, so a node busy streaming multi-MiB responses is
+//! never mistaken for a dead one), and death is recoverable: dead
+//! shards are re-dialed, probed, and re-admitted into placement with a
+//! ramp-up weight (see [`net::health`]).
 
 pub mod batcher;
 pub mod dispatch;

@@ -6,15 +6,31 @@
 //! and the CLI) cannot tell it from an in-process
 //! [`GenServer`](crate::serve::GenServer):
 //!
-//! * **Placement** — each submit goes to the alive shard with the
-//!   least load: the queue depth it reported in its last heartbeat
-//!   plus the slots this frontend has in flight to it (covering the
-//!   window before the next heartbeat reflects them). See
-//!   [`Health::pick`].
-//! * **Health** — a monitor thread pings every live shard each
-//!   heartbeat interval; a shard that misses the timeout, or whose
-//!   connection errors on read or write, is declared dead (permanently
-//!   — restart the frontend to re-admit a recovered node).
+//! * **Placement** — each submit goes to the placeable shard with the
+//!   least effective load: the queue depth it reported in its last
+//!   heartbeat plus the slots this frontend has in flight to it
+//!   (covering the window before the next heartbeat reflects them),
+//!   inflated by the ramp-up handicap of freshly re-admitted shards.
+//!   See [`Health::pick`].
+//! * **Control plane** — unless [`ClusterOpts::control_plane`] is off,
+//!   each shard gets *two* connections, tagged by a `Hello{role}`
+//!   handshake: a data connection (submits out, responses back) and a
+//!   control connection carrying only ping/pong/stats. Liveness is
+//!   judged on the control connection, where a pong can never queue
+//!   behind a multi-MiB response frame — a node that is merely *busy*
+//!   is not a dead node. With the control plane off (the pre-isolation
+//!   mode), heartbeats ride the data connection and depend on frame
+//!   chunking alone to stay prompt.
+//! * **Health** — a monitor thread pings every connected shard each
+//!   heartbeat interval; a shard silent past half the timeout is
+//!   deprioritized (Suspect), past the whole timeout — or on any
+//!   connection error — declared dead. Death is *recoverable*: a
+//!   reconnector thread re-dials dead shards every
+//!   [`ClusterOpts::reconnect`], a revived shard re-enters as
+//!   Probation (pinged, never placed), and after
+//!   [`HealthPolicy::readmit_pongs`] consecutive pongs it is
+//!   re-admitted with a decaying placement handicap so a flapping node
+//!   cannot oscillate the scheduler. See [`super::health`].
 //! * **Re-queue on node loss** — the in-flight requests of a dead
 //!   shard are resubmitted to surviving shards (counted in
 //!   [`ServerStats::requeued`]), reusing the same
@@ -22,21 +38,25 @@
 //!   worker's batch. Only when *no* shard survives does a client see
 //!   [`ServeError::NodeLost`] — otherwise node loss is invisible,
 //!   modulo latency.
-//! * **Stats** — shard nodes answer `StatsReq` with live
-//!   [`ServerStats`] snapshots; the cluster aggregates them via
-//!   [`ServerStats::absorb`] (so the batcher-conservation identity
-//!   `enqueued == dispatched + purged + pending` keeps holding over
-//!   the sum) and overlays what only it can see: cluster-level
-//!   request/failure counts, *end-to-end* latency percentiles
-//!   (queue + wire + compute, measured at the frontend), re-queues
-//!   and lost nodes.
+//! * **Stats** — shard nodes answer `StatsReq` (on the control
+//!   connection) with live [`ServerStats`] snapshots; the cluster
+//!   aggregates them via [`ServerStats::absorb`] (so the
+//!   batcher-conservation identity `enqueued == dispatched + purged +
+//!   pending` keeps holding over the sum) and overlays what only it
+//!   can see: cluster-level request/failure counts, *end-to-end*
+//!   latency percentiles (queue + wire + compute, measured at the
+//!   frontend), re-queues, lost and re-admitted nodes.
 //!
 //! Locking: the state mutex and the per-shard writer mutexes are never
 //! held together — state decisions happen under the state lock, frame
 //! writes after it is released — so a slow TCP write can not stall
-//! submits, deliveries or the heartbeat monitor.
+//! submits, deliveries or the heartbeat monitor. Each shard carries a
+//! connection *epoch*, bumped on every reconnect: a reader thread from
+//! a previous connection reporting its death late cannot kill the
+//! replacement.
 
 use std::collections::HashMap;
+use std::io::Read;
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -48,9 +68,9 @@ use anyhow::{bail, Context, Result};
 
 use crate::serve::dispatch::Dispatch;
 use crate::serve::error::ServeError;
-use crate::serve::net::health::{Health, HealthPolicy};
-use crate::serve::net::proto::Msg;
-use crate::serve::net::wire::{read_frame, write_frame, WireError};
+use crate::serve::net::health::{Health, HealthPolicy, ShardState};
+use crate::serve::net::proto::{Msg, Role};
+use crate::serve::net::wire::{write_frame, MessageReader, WireError};
 use crate::serve::router::{
     GenRequest, GenResponse, GenResult, ServerStats,
 };
@@ -60,11 +80,21 @@ use crate::{debug_log, warn_log};
 /// Cluster tuning knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct ClusterOpts {
-    /// Heartbeat cadence + node-loss deadline.
+    /// Heartbeat cadence + node-loss deadline + re-admission policy.
     pub health: HealthPolicy,
     /// Backpressure: reject submits once this many image slots are in
     /// flight across all shards (mirrors the router's queue cap).
     pub max_queue: usize,
+    /// Give each shard a dedicated control connection for
+    /// ping/pong/stats (`--control-plane`; on by default). Off =
+    /// heartbeats share the data connection — the pre-isolation
+    /// *topology*, for diagnosis and A/B-ing the fix. Note this is not
+    /// a cross-version compatibility mode: both ends speak wire v2
+    /// either way.
+    pub control_plane: bool,
+    /// How often the reconnector re-dials a dead shard
+    /// (`--reconnect-ms`).
+    pub reconnect: Duration,
 }
 
 impl Default for ClusterOpts {
@@ -72,21 +102,26 @@ impl Default for ClusterOpts {
         ClusterOpts {
             health: HealthPolicy::default(),
             max_queue: 16384,
+            control_plane: true,
+            reconnect: Duration::from_millis(1000),
         }
     }
 }
 
 impl ClusterOpts {
-    /// The one place the config's millisecond knobs become a health
-    /// policy — the CLI, the demo and future callers must not each
-    /// repeat this mapping.
+    /// The one place the config's knobs become cluster options — the
+    /// CLI, the demo and future callers must not each repeat this
+    /// mapping.
     pub fn from_run_config(cfg: &crate::util::config::RunConfig)
                            -> ClusterOpts {
         ClusterOpts {
             health: HealthPolicy {
                 heartbeat: Duration::from_millis(cfg.heartbeat_ms),
                 timeout: Duration::from_millis(cfg.node_timeout_ms),
+                readmit_pongs: cfg.readmit_pongs,
             },
+            control_plane: cfg.control_plane,
+            reconnect: Duration::from_millis(cfg.reconnect_ms),
             ..ClusterOpts::default()
         }
     }
@@ -110,10 +145,20 @@ struct ClusterState {
     pending: HashMap<u64, ClusterPending>,
     /// Per-shard in-flight slot estimate (submitted minus answered).
     inflight: Vec<usize>,
+    /// Per-shard connection epoch; bumped on every (re)connect. Loss
+    /// reports carry the epoch they observed — stale ones are ignored.
+    epoch: Vec<u64>,
+    /// Last reconnect attempt per dead shard (`None` = retry now).
+    last_reconnect: Vec<Option<Instant>>,
+    /// Data-plane progress watermark per shard: the byte counter last
+    /// observed and when it last *changed* (see the stall check in
+    /// `monitor_loop`).
+    data_progress: Vec<(u64, Instant)>,
     requests: u64,
     failed_requests: u64,
     requeued: u64,
     nodes_lost: u64,
+    nodes_readmitted: u64,
     /// First recorded loss cause (attached to dead-cluster errors).
     first_cause: Option<String>,
     /// Ring of recent end-to-end latencies (completed requests only).
@@ -126,14 +171,50 @@ struct ClusterState {
     ping_seq: u64,
 }
 
+/// One shard's write halves. `data` carries submits (and, with the
+/// control plane off, heartbeats); `ctrl` carries only ping/stats.
+/// `bulk` serializes multi-chunk messages on `data` — the frame lock
+/// is released between chunks so small frames interleave. `None`
+/// streams mean the shard is dead (or being torn down).
+struct ShardConn {
+    data: Mutex<Option<TcpStream>>,
+    bulk: Mutex<()>,
+    ctrl: Mutex<Option<TcpStream>>,
+}
+
+impl ShardConn {
+    fn empty() -> ShardConn {
+        ShardConn {
+            data: Mutex::new(None),
+            bulk: Mutex::new(()),
+            ctrl: Mutex::new(None),
+        }
+    }
+
+    /// Take + close both halves (node loss, teardown).
+    fn close(&self) {
+        for half in [&self.data, &self.ctrl] {
+            let mut g = half.lock().unwrap_or_else(|p| p.into_inner());
+            if let Some(s) = g.take() {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+    }
+}
+
 struct ClusterShared {
     addrs: Vec<String>,
-    /// Write halves; `None` once the shard is dead (or being torn
-    /// down). Never locked while holding the state mutex.
-    writers: Vec<Mutex<Option<TcpStream>>>,
+    conns: Vec<ShardConn>,
+    /// Bytes ever read off each shard's *data* connection(s) —
+    /// chunk-granular progress evidence for the stall check, bumped
+    /// lock-free by the data reader's [`CountingReader`]. Monotonic
+    /// across reconnects (only ever compared for change).
+    data_bytes: Vec<Arc<AtomicU64>>,
     state: Mutex<ClusterState>,
     /// Signaled on delivery, node loss, stats arrival and teardown.
     changed: Condvar,
+    /// Reader threads, spawned per (re)connect; reaped on teardown.
+    readers: Mutex<Vec<JoinHandle<()>>>,
     opts: ClusterOpts,
 }
 
@@ -148,65 +229,145 @@ impl ClusterShared {
 pub struct Cluster {
     shared: Arc<ClusterShared>,
     next_id: AtomicU64,
-    readers: Vec<JoinHandle<()>>,
     monitor: Option<JoinHandle<()>>,
+    reconnector: Option<JoinHandle<()>>,
     t_start: Instant,
+}
+
+/// Isolating liveness on the control connection buys immunity to
+/// busy-node false deaths, but loses PR 4's side effect that a
+/// *data-path* fault broke the heartbeat too: a half-open data
+/// connection (middlebox silently dropping its state) would otherwise
+/// hang placed requests for the kernel's retransmission give-up
+/// (~15 min) while control pongs keep the shard Alive. The monitor
+/// therefore also pings the data plane each beat and watches
+/// byte-level read progress: a shard with work in flight whose data
+/// connection moves **zero bytes** for this long is declared lost.
+/// The deadline is deliberately lenient — pongs interleave between
+/// chunks, so even multi-MiB streams move bytes constantly; only a
+/// genuinely wedged path trips it — and floored at 30 s so a slow
+/// frame parse can never mimic a stall.
+fn data_stall_deadline(timeout: Duration) -> Duration {
+    (timeout * 10).max(Duration::from_secs(30))
+}
+
+/// Read adapter counting every byte pulled off a data connection —
+/// chunk-granular progress evidence (a reader mid-reassembly of a
+/// huge response still advances it, where message-level bookkeeping
+/// would sit still).
+struct CountingReader {
+    inner: TcpStream,
+    bytes: Arc<AtomicU64>,
+}
+
+impl Read for CountingReader {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.bytes.fetch_add(n as u64, Ordering::Relaxed);
+        Ok(n)
+    }
+}
+
+/// Dial one connection to a shard and tag its role. The connect is
+/// bounded by the liveness deadline — a black-holed address (firewall
+/// swallowing SYNs) must not wedge the reconnector for the OS connect
+/// timeout, which teardown would then wait out joining it — and the
+/// write timeout keeps a peer that stops *reading* from wedging the
+/// writer locks (which would also stall the heartbeat monitor).
+fn dial(addr: &str, role: Role, deadline: Duration)
+        -> std::io::Result<TcpStream> {
+    use std::net::ToSocketAddrs;
+    // try every resolved address like `TcpStream::connect` does (a
+    // dual-stack hostname may listen on one family only), each
+    // attempt individually bounded
+    let mut found = None;
+    let mut last_err = None;
+    for target in addr.to_socket_addrs()? {
+        match TcpStream::connect_timeout(&target, deadline) {
+            Ok(s) => {
+                found = Some(s);
+                break;
+            }
+            Err(e) => last_err = Some(e),
+        }
+    }
+    let Some(mut stream) = found else {
+        return Err(last_err.unwrap_or_else(|| {
+            std::io::Error::new(
+                std::io::ErrorKind::AddrNotAvailable,
+                format!("{addr}: no resolvable address"),
+            )
+        }));
+    };
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_write_timeout(Some(deadline));
+    write_frame(&mut stream, &Msg::Hello { role }.encode()).map_err(
+        |e| std::io::Error::new(std::io::ErrorKind::BrokenPipe,
+                                e.to_string()),
+    )?;
+    Ok(stream)
+}
+
+/// Dial a shard's full connection set: data always, control unless
+/// disabled. Returns the write halves ready to install.
+fn dial_shard(addr: &str, opts: &ClusterOpts)
+              -> std::io::Result<(TcpStream, Option<TcpStream>)> {
+    let data = dial(addr, Role::Data, opts.health.timeout)?;
+    let ctrl = if opts.control_plane {
+        Some(dial(addr, Role::Control, opts.health.timeout)?)
+    } else {
+        None
+    };
+    Ok((data, ctrl))
 }
 
 impl Cluster {
     /// Connect to the shard nodes. Unreachable addresses start dead
-    /// (logged); at least one must be reachable or this errors.
+    /// (logged) and are retried by the reconnector; at least one must
+    /// be reachable up front or this errors.
     pub fn connect(addrs: &[String], opts: ClusterOpts) -> Result<Cluster> {
         if addrs.is_empty() {
             bail!("cluster needs at least one shard address");
         }
         let now = Instant::now();
         let mut health = Health::new(addrs.len(), opts.health, now);
-        let mut writers = Vec::with_capacity(addrs.len());
-        let mut read_streams: Vec<Option<TcpStream>> =
-            Vec::with_capacity(addrs.len());
+        let mut conns = Vec::with_capacity(addrs.len());
+        // (shard, read-half, plane) for the reader spawns below
+        let mut reader_specs: Vec<(usize, TcpStream, Role)> = Vec::new();
+        let mut epoch = vec![0u64; addrs.len()];
         let mut nodes_lost = 0u64;
         let mut first_cause = None;
         for (i, addr) in addrs.iter().enumerate() {
-            match TcpStream::connect(addr) {
-                Ok(stream) => {
-                    let _ = stream.set_nodelay(true);
-                    // a shard that stops *reading* (wedged process,
-                    // half-open partition) must fail the write with a
-                    // typed error instead of blocking the writer mutex
-                    // — a blocked mutex would stall the heartbeat
-                    // monitor and every submit to that shard
-                    let _ = stream.set_write_timeout(
-                        Some(opts.health.timeout));
-                    match stream.try_clone() {
-                        Ok(reader) => {
-                            read_streams.push(Some(reader));
-                            writers.push(Mutex::new(Some(stream)));
-                        }
-                        Err(e) => {
-                            warn_log!("cluster: shard {addr}: clone \
-                                       failed: {e}");
-                            health.mark_dead(i);
-                            nodes_lost += 1;
-                            first_cause.get_or_insert(format!(
-                                "shard {addr}: {e}"));
-                            read_streams.push(None);
-                            writers.push(Mutex::new(None));
-                        }
+            let conn = ShardConn::empty();
+            match dial_shard(addr, &opts).and_then(|(data, ctrl)| {
+                let data_rd = data.try_clone()?;
+                let ctrl_rd = match &ctrl {
+                    Some(c) => Some(c.try_clone()?),
+                    None => None,
+                };
+                Ok((data, ctrl, data_rd, ctrl_rd))
+            }) {
+                Ok((data, ctrl, data_rd, ctrl_rd)) => {
+                    *conn.data.lock().unwrap() = Some(data);
+                    *conn.ctrl.lock().unwrap() = ctrl;
+                    epoch[i] = 1;
+                    reader_specs.push((i, data_rd, Role::Data));
+                    if let Some(c) = ctrl_rd {
+                        reader_specs.push((i, c, Role::Control));
                     }
                 }
                 Err(e) => {
-                    warn_log!("cluster: shard {addr} unreachable: {e}");
+                    warn_log!("cluster: shard {addr} unreachable: {e} \
+                               (will keep retrying)");
                     health.mark_dead(i);
                     nodes_lost += 1;
                     first_cause
                         .get_or_insert(format!("shard {addr}: {e}"));
-                    read_streams.push(None);
-                    writers.push(Mutex::new(None));
                 }
             }
+            conns.push(conn);
         }
-        if health.alive_count() == 0 {
+        if health.serving_count() == 0 {
             bail!(
                 "no shard node reachable ({})",
                 first_cause.as_deref().unwrap_or("none configured")
@@ -215,17 +376,24 @@ impl Cluster {
         let n = addrs.len();
         let shared = Arc::new(ClusterShared {
             addrs: addrs.to_vec(),
-            writers,
+            conns,
+            data_bytes: (0..n)
+                .map(|_| Arc::new(AtomicU64::new(0)))
+                .collect(),
             state: Mutex::new(ClusterState {
                 open: true,
                 closing: false,
                 health,
                 pending: HashMap::new(),
                 inflight: vec![0; n],
+                epoch,
+                last_reconnect: vec![None; n],
+                data_progress: vec![(0, now); n],
                 requests: 0,
                 failed_requests: 0,
                 requeued: 0,
                 nodes_lost,
+                nodes_readmitted: 0,
                 first_cause,
                 latencies: Vec::new(),
                 latency_count: 0,
@@ -235,39 +403,41 @@ impl Cluster {
                 ping_seq: 0,
             }),
             changed: Condvar::new(),
+            readers: Mutex::new(Vec::new()),
             opts,
         });
-        let mut readers = Vec::new();
-        for (i, stream) in read_streams.into_iter().enumerate() {
-            let Some(stream) = stream else { continue };
-            let rd_shared = Arc::clone(&shared);
-            let h = std::thread::Builder::new()
-                .name(format!("tqdit-net-read-{i}"))
-                .spawn(move || reader_loop(rd_shared, i, stream))
-                .context("spawning cluster reader thread")?;
-            readers.push(h);
+        for (i, stream, plane) in reader_specs {
+            let ep = shared.lock().epoch[i];
+            spawn_reader(&shared, i, ep, stream, plane)?;
         }
         let mon_shared = Arc::clone(&shared);
         let monitor = std::thread::Builder::new()
             .name("tqdit-net-monitor".into())
             .spawn(move || monitor_loop(mon_shared))
             .context("spawning cluster monitor thread")?;
+        let rec_shared = Arc::clone(&shared);
+        let reconnector = std::thread::Builder::new()
+            .name("tqdit-net-reconnect".into())
+            .spawn(move || reconnector_loop(rec_shared))
+            .context("spawning cluster reconnector thread")?;
         Ok(Cluster {
             shared,
             next_id: AtomicU64::new(0),
-            readers,
             monitor: Some(monitor),
+            reconnector: Some(reconnector),
             t_start: Instant::now(),
         })
     }
 
-    /// Submit a request to the least-loaded alive shard. Same contract
-    /// as the local router's `submit`; the one new failure mode is
-    /// [`ServeError::NodeLost`] when no shard remains.
+    /// Submit a request to the least-loaded placeable shard. Same
+    /// contract as the local router's `submit`; the one new failure
+    /// mode is [`ServeError::NodeLost`] when no shard is serving
+    /// (reconnection may re-admit one later — clients can retry).
     pub fn submit(&self, req: GenRequest)
                   -> std::result::Result<(u64, Receiver<GenResult>),
                                          ServeError> {
         let shard;
+        let epoch;
         let id;
         let rx;
         {
@@ -275,7 +445,7 @@ impl Cluster {
             if !st.open {
                 return Err(ServeError::ShuttingDown);
             }
-            if st.health.alive_count() == 0 {
+            if st.health.serving_count() == 0 {
                 return Err(ServeError::NodeLost {
                     cause: st
                         .first_cause
@@ -312,7 +482,8 @@ impl Cluster {
             shard = st
                 .health
                 .pick(&st.inflight)
-                .expect("alive_count > 0 implies a pick");
+                .expect("serving_count > 0 implies a pick");
+            epoch = st.epoch[shard];
             st.pending.insert(id, ClusterPending {
                 class: req.class,
                 n: req.n,
@@ -325,8 +496,8 @@ impl Cluster {
         // the wire write happens outside the state lock; on failure the
         // lost-node path re-queues (or typed-fails) this very request
         let msg = Msg::Submit { id, class: req.class, n: req.n };
-        if let Err(cause) = send_to_shard(&self.shared, shard, &msg) {
-            shard_lost(&self.shared, shard, &cause);
+        if let Err(cause) = send_data(&self.shared, shard, &msg) {
+            shard_lost(&self.shared, shard, epoch, &cause);
         }
         Ok((id, rx))
     }
@@ -336,19 +507,27 @@ impl Cluster {
         self.shared.lock().inflight.iter().sum()
     }
 
-    /// Sum of live worker counts the alive shards last reported.
+    /// Sum of live worker counts the serving shards last reported.
     pub fn live_workers(&self) -> usize {
         self.shared.lock().health.live_workers_total()
     }
 
-    /// Sum of ready worker counts the alive shards last reported.
+    /// Sum of ready worker counts the serving shards last reported.
     pub fn ready_workers(&self) -> usize {
         self.shared.lock().health.ready_workers_total()
     }
 
-    /// Shards still considered alive.
+    /// Shards currently serving (Alive or Suspect; a dead shard
+    /// re-enters this count once re-admitted).
     pub fn live_shards(&self) -> usize {
-        self.shared.lock().health.alive_count()
+        self.shared.lock().health.serving_count()
+    }
+
+    /// Recovered shards re-admitted into placement so far — the cheap
+    /// healing signal to poll (one lock, one load; `stats()` would
+    /// aggregate every snapshot and sort the latency ring per call).
+    pub fn nodes_readmitted(&self) -> u64 {
+        self.shared.lock().nodes_readmitted
     }
 
     /// Aggregate of the latest shard snapshots + cluster-level
@@ -382,7 +561,7 @@ impl Cluster {
             let mut st = self.shared.lock();
             while !st.pending.is_empty() {
                 let now = Instant::now();
-                if now >= deadline || st.health.alive_count() == 0 {
+                if now >= deadline || st.health.serving_count() == 0 {
                     break;
                 }
                 let wait =
@@ -395,22 +574,14 @@ impl Cluster {
                 st = g;
             }
             if !st.pending.is_empty() {
-                let stranded: Vec<u64> =
-                    st.pending.keys().copied().collect();
                 warn_log!("cluster: shutdown with {} request(s) still \
                            unresolved; failing them typed",
-                          stranded.len());
-                for sid in stranded {
-                    let p = st.pending.remove(&sid).unwrap();
-                    st.inflight[p.shard] =
-                        st.inflight[p.shard].saturating_sub(p.n);
-                    st.failed_requests += 1;
-                    let _ = p.tx.send(Err(ServeError::NodeLost {
-                        cause: "cluster shut down with the request \
-                                still in flight"
-                            .into(),
-                    }));
-                }
+                          st.pending.len());
+                fail_all_pending(&mut st, || ServeError::NodeLost {
+                    cause: "cluster shut down with the request still \
+                            in flight"
+                        .into(),
+                });
             }
         }
         // 2. final stats sweep from the survivors
@@ -419,11 +590,18 @@ impl Cluster {
             st.stats_want += 1;
             st.stats_want
         };
-        let survivors = self.shared.lock().health.alive_indices();
-        for i in survivors {
-            if let Err(c) = send_to_shard(&self.shared, i,
-                                          &Msg::StatsReq { seq: want }) {
-                shard_lost(&self.shared, i,
+        let survivors: Vec<(usize, u64)> = {
+            let st = self.shared.lock();
+            st.health
+                .serving_indices()
+                .into_iter()
+                .map(|i| (i, st.epoch[i]))
+                .collect()
+        };
+        for (i, ep) in survivors {
+            if let Err(c) = send_control(&self.shared, i,
+                                         &Msg::StatsReq { seq: want }) {
+                shard_lost(&self.shared, i, ep,
                            &format!("stats request write failed: {c}"));
             }
         }
@@ -434,7 +612,7 @@ impl Cluster {
             loop {
                 let missing = st
                     .health
-                    .alive_indices()
+                    .serving_indices()
                     .into_iter()
                     .any(|i| st.stats_seen[i] < want);
                 let now = Instant::now();
@@ -455,24 +633,32 @@ impl Cluster {
         aggregate(&st, self.t_start.elapsed().as_secs_f64())
     }
 
-    /// Close every connection and join the reader/monitor threads
-    /// (idempotent; shared between shutdown and drop).
+    /// Close every connection and join the reader/monitor/reconnector
+    /// threads (idempotent; shared between shutdown and drop).
     fn teardown(&mut self) {
         {
             let mut st = self.shared.lock();
             st.closing = true;
         }
         self.shared.changed.notify_all();
-        for w in &self.shared.writers {
-            let mut g = w.lock().unwrap_or_else(|p| p.into_inner());
-            if let Some(s) = g.take() {
-                let _ = s.shutdown(std::net::Shutdown::Both);
-            }
+        for conn in &self.shared.conns {
+            conn.close();
         }
-        for h in self.readers.drain(..) {
+        let readers: Vec<JoinHandle<()>> = {
+            let mut g = self
+                .shared
+                .readers
+                .lock()
+                .unwrap_or_else(|p| p.into_inner());
+            g.drain(..).collect()
+        };
+        for h in readers {
             let _ = h.join();
         }
         if let Some(h) = self.monitor.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.reconnector.take() {
             let _ = h.join();
         }
     }
@@ -480,17 +666,14 @@ impl Cluster {
 
 impl Drop for Cluster {
     /// A cluster dropped without `shutdown` still tears its threads
-    /// down; anything in flight is failed typed, never stranded.
+    /// down; anything in flight is failed typed — with the same
+    /// in-flight bookkeeping as the shutdown path, so the stats a
+    /// racing `stats()` reader sees stay conserved — never stranded.
     fn drop(&mut self) {
         {
             let mut st = self.shared.lock();
             st.open = false;
-            let stranded: Vec<u64> = st.pending.keys().copied().collect();
-            for sid in stranded {
-                let p = st.pending.remove(&sid).unwrap();
-                st.failed_requests += 1;
-                let _ = p.tx.send(Err(ServeError::ShuttingDown));
-            }
+            fail_all_pending(&mut st, || ServeError::ShuttingDown);
         }
         self.teardown();
     }
@@ -519,6 +702,27 @@ impl Dispatch for Cluster {
     }
 }
 
+/// Fail every pending request with `err()`, decrementing the
+/// in-flight book exactly like the delivery path — the one shared
+/// cleanup for shutdown-stranded and dropped clusters (stats
+/// conservation must not depend on *how* the cluster went away). A
+/// request that vanished mid-iteration is a logged degradation, not a
+/// panic, matching the delivery path.
+fn fail_all_pending(st: &mut ClusterState,
+                    err: impl Fn() -> ServeError) {
+    let stranded: Vec<u64> = st.pending.keys().copied().collect();
+    for id in stranded {
+        let Some(p) = st.pending.remove(&id) else {
+            debug_log!("cluster: request {id} already resolved while \
+                        failing pending requests");
+            continue;
+        };
+        st.inflight[p.shard] = st.inflight[p.shard].saturating_sub(p.n);
+        st.failed_requests += 1;
+        let _ = p.tx.send(Err(err()));
+    }
+}
+
 /// Aggregate shard snapshots + cluster overlay (state lock held by the
 /// caller).
 fn aggregate(st: &ClusterState, wall_s: f64) -> ServerStats {
@@ -527,11 +731,13 @@ fn aggregate(st: &ClusterState, wall_s: f64) -> ServerStats {
         agg.absorb(s);
     }
     // what only the frontend can see: the client-facing request
-    // counts, re-queue/loss accounting, and true end-to-end latency
+    // counts, re-queue/loss/re-admission accounting, and true
+    // end-to-end latency
     agg.requests = st.requests;
     agg.failed_requests = st.failed_requests;
     agg.requeued = st.requeued;
     agg.nodes_lost = st.nodes_lost;
+    agg.nodes_readmitted = st.nodes_readmitted;
     agg.wall_s = wall_s;
     let mut lat = st.latencies.clone();
     lat.sort_by(f64::total_cmp);
@@ -540,15 +746,33 @@ fn aggregate(st: &ClusterState, wall_s: f64) -> ServerStats {
     agg
 }
 
-/// Write one frame to a shard (its writer mutex only; never the state
-/// lock). `Err` carries the cause for the lost-node path.
-fn send_to_shard(shared: &ClusterShared, shard: usize, msg: &Msg)
-                 -> std::result::Result<(), String> {
-    let mut g = shared.writers[shard]
+/// Write one message on a shard's data connection (its writer locks
+/// only; never the state lock) via the layer-wide
+/// [`send_message`](crate::serve::net::send_message) two-lock
+/// discipline — oversized messages go as chunk runs with the frame
+/// lock released between chunks. `Err` carries the cause for the
+/// lost-node path.
+fn send_data(shared: &ClusterShared, shard: usize, msg: &Msg)
+             -> std::result::Result<(), String> {
+    let conn = &shared.conns[shard];
+    crate::serve::net::send_message(&conn.data, &conn.bulk,
+                                    &msg.encode())
+        .map_err(|e| e.to_string())
+}
+
+/// Write one (small) message on a shard's control connection, falling
+/// back to the data connection when the control plane is disabled.
+fn send_control(shared: &ClusterShared, shard: usize, msg: &Msg)
+                -> std::result::Result<(), String> {
+    if !shared.opts.control_plane {
+        return send_data(shared, shard, msg);
+    }
+    let mut g = shared.conns[shard]
+        .ctrl
         .lock()
         .unwrap_or_else(|p| p.into_inner());
     let Some(stream) = g.as_mut() else {
-        return Err("connection already closed".into());
+        return Err("control connection already closed".into());
     };
     write_frame(stream, &msg.encode()).map_err(|e| e.to_string())
 }
@@ -586,30 +810,43 @@ fn complete(shared: &ClusterShared, id: u64,
 
 /// Declare a shard dead and re-home its in-flight requests: each is
 /// resubmitted to the least-loaded survivor, or failed with a typed
-/// [`ServeError::NodeLost`] when none remains. Runs the cleanup
-/// exactly once per shard (`Health::mark_dead` gates re-entry);
-/// resubmit write failures cascade iteratively, never recursively.
-fn shard_lost(shared: &ClusterShared, shard: usize, cause: &str) {
-    let mut work: Vec<(usize, String)> =
-        vec![(shard, cause.to_string())];
-    while let Some((i, cause)) = work.pop() {
-        // close the socket first so the shard's reader thread unblocks
-        {
-            let mut g = shared.writers[i]
-                .lock()
-                .unwrap_or_else(|p| p.into_inner());
-            if let Some(s) = g.take() {
-                let _ = s.shutdown(std::net::Shutdown::Both);
-            }
-        }
-        let mut resubmits: Vec<(usize, Msg)> = Vec::new();
+/// [`ServeError::NodeLost`] when none remains. `epoch` is the
+/// connection generation the caller observed failing — a report about
+/// a connection the reconnector already replaced is ignored. The
+/// cleanup runs exactly once per death episode (`Health::mark_dead`
+/// reports the previous state); resubmit write failures cascade
+/// iteratively, never recursively. A probation shard dying is just a
+/// failed revival: back to reconnecting, nothing to re-home, not
+/// another loss.
+fn shard_lost(shared: &ClusterShared, shard: usize, epoch: u64,
+              cause: &str) {
+    let mut work: Vec<(usize, u64, String)> =
+        vec![(shard, epoch, cause.to_string())];
+    while let Some((i, ep, cause)) = work.pop() {
+        let mut resubmits: Vec<(usize, u64, Msg)> = Vec::new();
         {
             let mut st = shared.lock();
-            if !st.health.mark_dead(i) {
+            if st.epoch[i] != ep {
+                continue; // stale: a newer connection owns this shard
+            }
+            let prev = st.health.mark_dead(i);
+            if prev == ShardState::Dead {
                 continue; // already handled by a racing path
             }
+            // pace the revival: first re-dial one reconnect interval
+            // after the death, then every interval
+            st.last_reconnect[i] = Some(Instant::now());
             if st.closing {
                 continue; // deliberate teardown, not a loss
+            }
+            if prev == ShardState::Probation {
+                debug_log!("cluster: shard {} fell back to dead during \
+                            probation: {}",
+                           shared.addrs[i], cause);
+                drop(st);
+                close_if_epoch(shared, i, ep);
+                shared.changed.notify_all();
+                continue;
             }
             st.nodes_lost += 1;
             // drop the dead shard's snapshot: its in-flight slots are
@@ -634,6 +871,7 @@ fn shard_lost(shared: &ClusterShared, shard: usize, cause: &str) {
             for id in moved {
                 match st.health.pick(&st.inflight) {
                     Some(j) => {
+                        let ep_j = st.epoch[j];
                         let p = st
                             .pending
                             .get_mut(&id)
@@ -643,13 +881,14 @@ fn shard_lost(shared: &ClusterShared, shard: usize, cause: &str) {
                         st.inflight[j] += n;
                         st.requeued += 1;
                         resubmits
-                            .push((j, Msg::Submit { id, class, n }));
+                            .push((j, ep_j, Msg::Submit { id, class, n }));
                     }
                     None => {
-                        let p = st
-                            .pending
-                            .remove(&id)
-                            .expect("collected from pending");
+                        let Some(p) = st.pending.remove(&id) else {
+                            debug_log!("cluster: request {id} resolved \
+                                        while being re-homed");
+                            continue;
+                        };
                         st.failed_requests += 1;
                         let _ = p.tx.send(Err(ServeError::NodeLost {
                             cause: format!(
@@ -661,28 +900,77 @@ fn shard_lost(shared: &ClusterShared, shard: usize, cause: &str) {
                 }
             }
         }
+        // close both halves outside the state lock; this also unblocks
+        // the shard's reader threads, whose own loss reports then land
+        // on the already-dead state and no-op
+        close_if_epoch(shared, i, ep);
         shared.changed.notify_all();
-        for (j, msg) in resubmits {
-            if let Err(c) = send_to_shard(shared, j, &msg) {
-                work.push((j, c));
+        for (j, ep_j, msg) in resubmits {
+            if let Err(c) = send_data(shared, j, &msg) {
+                work.push((j, ep_j, c));
             }
         }
     }
 }
 
-/// Per-shard reader: pumps frames into deliveries, heartbeat records
-/// and stats snapshots until the connection dies (loss or teardown).
-fn reader_loop(shared: Arc<ClusterShared>, shard: usize,
-               mut stream: TcpStream) {
+/// Close a shard's connections only while `ep` is still its live
+/// epoch: the lost-node path closes *after* releasing the state lock,
+/// and with a tiny `--reconnect-ms` the reconnector may have already
+/// installed a replacement — a stale deferred close must not kill it.
+/// (The remaining instruction-wide window self-heals: a clipped
+/// probation connection just falls back to Dead and is re-dialed.)
+fn close_if_epoch(shared: &ClusterShared, i: usize, ep: u64) {
+    let still_ours = shared.lock().epoch[i] == ep;
+    if still_ours {
+        shared.conns[i].close();
+    }
+}
+
+/// Spawn one reader thread for a shard connection. Data-plane readers
+/// are wrapped in a [`CountingReader`] feeding the stall check.
+fn spawn_reader(shared: &Arc<ClusterShared>, shard: usize, epoch: u64,
+                stream: TcpStream, plane: Role) -> Result<()> {
+    let rd_shared = Arc::clone(shared);
+    let name = format!("tqdit-net-read-{shard}-{}", plane.name());
+    let counter = Arc::clone(&shared.data_bytes[shard]);
+    let h = std::thread::Builder::new()
+        .name(name)
+        .spawn(move || match plane {
+            Role::Data => reader_loop(rd_shared, shard, epoch,
+                                      CountingReader {
+                                          inner: stream,
+                                          bytes: counter,
+                                      },
+                                      plane),
+            Role::Control => {
+                reader_loop(rd_shared, shard, epoch, stream, plane)
+            }
+        })
+        .context("spawning cluster reader thread")?;
+    let mut g = shared.readers.lock().unwrap_or_else(|p| p.into_inner());
+    // reap finished readers so a long-lived frontend does not grow a
+    // handle per reconnect it ever performed
+    g.retain(|h| !h.is_finished());
+    g.push(h);
+    Ok(())
+}
+
+/// Per-connection reader: pumps frames into deliveries, heartbeat
+/// records and stats snapshots until the connection dies (loss or
+/// teardown). Data and control connections run the same loop — the
+/// message types themselves say what to do.
+fn reader_loop<R: Read>(shared: Arc<ClusterShared>, shard: usize,
+                        epoch: u64, mut stream: R, plane: Role) {
+    let mut messages = MessageReader::new();
     loop {
-        let payload = match read_frame(&mut stream) {
+        let payload = match messages.read(&mut stream) {
             Ok(p) => p,
             Err(WireError::Closed) => {
-                shard_lost(&shared, shard, "connection closed");
+                shard_lost(&shared, shard, epoch, "connection closed");
                 return;
             }
             Err(e) => {
-                shard_lost(&shared, shard, &e.to_string());
+                shard_lost(&shared, shard, epoch, &e.to_string());
                 return;
             }
         };
@@ -704,16 +992,41 @@ fn reader_loop(shared: Arc<ClusterShared>, shard: usize,
                 complete(&shared, id, Err(err));
             }
             Msg::Pong { queue_depth, live_workers, ready_workers, .. } => {
+                // with the control plane isolated, only control-plane
+                // pongs count as liveness evidence — the data-plane
+                // pong exists to move bytes for the stall probe, and
+                // feeding it to `Health::pong` would run the
+                // probation streak and the ramp decay at double rate
+                if plane == Role::Data && shared.opts.control_plane {
+                    continue;
+                }
                 let mut st = shared.lock();
-                st.health.pong(shard, queue_depth, live_workers,
-                               ready_workers, Instant::now());
+                if st.epoch[shard] != epoch {
+                    continue; // stale connection's pong
+                }
+                let readmitted = st.health.pong(
+                    shard, queue_depth, live_workers, ready_workers,
+                    Instant::now());
+                if readmitted {
+                    st.nodes_readmitted += 1;
+                    warn_log!("cluster: shard {} re-admitted after {} \
+                               consecutive pong(s); ramping placement \
+                               back up",
+                              shared.addrs[shard],
+                              shared.opts.health.readmit_pongs);
+                    drop(st);
+                    // placement capacity changed
+                    shared.changed.notify_all();
+                }
             }
             Msg::Stats { seq, stats } => {
                 let mut st = shared.lock();
                 // a snapshot racing the shard's death must not
                 // resurrect the cleared entry (its slots re-count on
-                // the survivors)
-                if st.health.is_alive(shard) {
+                // the survivors); stale-epoch snapshots equally so
+                if st.epoch[shard] == epoch
+                    && st.health.shard(shard).serving()
+                {
                     st.last_stats[shard] = Some(stats);
                     st.stats_seen[shard] =
                         st.stats_seen[shard].max(seq);
@@ -730,11 +1043,12 @@ fn reader_loop(shared: Arc<ClusterShared>, shard: usize,
     }
 }
 
-/// Heartbeat monitor: pings every alive shard each interval and
-/// declares the ones past the timeout dead. The condvar wait lets
-/// teardown interrupt a sleeping monitor immediately; spurious wakes
-/// (delivery notifications share the condvar) are cheap because pings
-/// are rate-limited to the heartbeat cadence.
+/// Heartbeat monitor: pings every connected shard (serving *and*
+/// probation — pongs are a probation shard's path back in) each
+/// interval and declares the ones past the timeout dead. The condvar
+/// wait lets teardown interrupt a sleeping monitor immediately;
+/// spurious wakes (delivery notifications share the condvar) are
+/// cheap because pings are rate-limited to the heartbeat cadence.
 fn monitor_loop(shared: Arc<ClusterShared>) {
     let heartbeat = shared.opts.health.heartbeat;
     let mut last_ping: Option<Instant> = None;
@@ -765,7 +1079,7 @@ fn monitor_loop(shared: Arc<ClusterShared>) {
             }
         }
         last_ping = Some(Instant::now());
-        let (seq, stats_seq, alive) = {
+        let (seq, stats_seq, targets) = {
             let mut st = shared.lock();
             st.ping_seq += 1;
             // stats requests ride the heartbeat cadence so
@@ -773,47 +1087,231 @@ fn monitor_loop(shared: Arc<ClusterShared>) {
             // stale; the shutdown sweep bumps the same counter, so
             // its wait still demands a strictly fresher snapshot
             st.stats_want += 1;
-            (st.ping_seq, st.stats_want, st.health.alive_indices())
+            let targets: Vec<(usize, u64)> = st
+                .health
+                .ping_targets()
+                .into_iter()
+                .map(|i| (i, st.epoch[i]))
+                .collect();
+            (st.ping_seq, st.stats_want, targets)
         };
-        for i in alive {
+        for &(i, ep) in &targets {
             if let Err(c) =
-                send_to_shard(&shared, i, &Msg::Ping { seq })
+                send_control(&shared, i, &Msg::Ping { seq })
             {
-                shard_lost(&shared, i,
+                shard_lost(&shared, i, ep,
                            &format!("heartbeat write failed: {c}"));
                 continue;
             }
-            let _ = send_to_shard(&shared, i,
-                                  &Msg::StatsReq { seq: stats_seq });
+            let _ = send_control(&shared, i,
+                                 &Msg::StatsReq { seq: stats_seq });
         }
-        let expired = {
-            let st = shared.lock();
-            st.health.expired(Instant::now())
+        // data-plane probe: with the control plane isolated, control
+        // pongs no longer prove the data path can move bytes — ping
+        // it too (the pong interleaves between response chunks) and
+        // watch byte-level read progress, so a half-open data
+        // connection fails in ~data_stall_deadline instead of the
+        // kernel's minutes-long retransmission give-up
+        if shared.opts.control_plane {
+            for &(i, ep) in &targets {
+                if let Err(c) = send_data(&shared, i, &Msg::Ping { seq })
+                {
+                    shard_lost(&shared, i, ep,
+                               &format!("data-plane heartbeat write \
+                                         failed: {c}"));
+                }
+            }
+            let stall =
+                data_stall_deadline(shared.opts.health.timeout);
+            let stalled: Vec<(usize, u64)> = {
+                let mut st = shared.lock();
+                let now = Instant::now();
+                let mut out = Vec::new();
+                for i in st.health.serving_indices() {
+                    let bytes =
+                        shared.data_bytes[i].load(Ordering::Relaxed);
+                    let (last_bytes, since) = st.data_progress[i];
+                    if bytes != last_bytes || st.inflight[i] == 0 {
+                        // progress, or nothing owed: reset the clock
+                        st.data_progress[i] = (bytes, now);
+                    } else if now.saturating_duration_since(since)
+                        > stall
+                    {
+                        out.push((i, st.epoch[i]));
+                    }
+                }
+                out
+            };
+            for (i, ep) in stalled {
+                shard_lost(&shared, i, ep,
+                           &format!("data plane stalled: requests in \
+                                     flight but zero bytes read for \
+                                     > {stall:?}"));
+            }
+        }
+        let expired: Vec<(usize, u64)> = {
+            let mut st = shared.lock();
+            let now = Instant::now();
+            st.health.tick(now);
+            st.health
+                .expired(now)
+                .into_iter()
+                .map(|i| (i, st.epoch[i]))
+                .collect()
         };
-        for i in expired {
+        for (i, ep) in expired {
             let timeout = shared.opts.health.timeout;
-            shard_lost(&shared, i,
+            shard_lost(&shared, i, ep,
                        &format!("heartbeat timeout (> {timeout:?})"));
         }
+    }
+}
+
+/// Reconnector: re-dials dead shards every reconnect interval. A
+/// revived shard is installed under a fresh epoch and enters
+/// Probation — the monitor's pings (answered on the new control
+/// connection) walk it back to Alive. Blocking dials happen on this
+/// thread only, so a black-holed address can never stall the
+/// heartbeat monitor or a submit.
+fn reconnector_loop(shared: Arc<ClusterShared>) {
+    loop {
+        let due: Vec<usize> = {
+            let mut st = shared.lock();
+            if st.closing {
+                return;
+            }
+            let now = Instant::now();
+            let interval = shared.opts.reconnect;
+            let due: Vec<usize> = st
+                .health
+                .dead_indices()
+                .into_iter()
+                .filter(|&i| match st.last_reconnect[i] {
+                    Some(at) => {
+                        now.saturating_duration_since(at) >= interval
+                    }
+                    None => true,
+                })
+                .collect();
+            for &i in &due {
+                st.last_reconnect[i] = Some(now);
+            }
+            due
+        };
+        for i in due {
+            try_reconnect(&shared, i);
+        }
+        let st = shared.lock();
+        if st.closing {
+            return;
+        }
+        let (g, _) = shared
+            .changed
+            .wait_timeout(st, shared.opts.reconnect)
+            .unwrap_or_else(|p| p.into_inner());
+        if g.closing {
+            return;
+        }
+    }
+}
+
+/// One reconnect attempt for a dead shard: dial data (+ control),
+/// install the write halves while the shard is still Dead (nothing
+/// sends to a dead shard, so the swap is race-free), then flip it to
+/// Probation under a fresh epoch and spawn its readers.
+fn try_reconnect(shared: &Arc<ClusterShared>, i: usize) {
+    let addr = &shared.addrs[i];
+    let (data, ctrl) = match dial_shard(addr, &shared.opts) {
+        Ok(pair) => pair,
+        Err(e) => {
+            debug_log!("cluster: shard {addr} still down: {e}");
+            return;
+        }
+    };
+    let (data_rd, ctrl_rd) = match (
+        data.try_clone(),
+        ctrl.as_ref().map(TcpStream::try_clone).transpose(),
+    ) {
+        (Ok(d), Ok(c)) => (d, c),
+        (Err(e), _) | (_, Err(e)) => {
+            debug_log!("cluster: shard {addr}: clone failed: {e}");
+            return;
+        }
+    };
+    {
+        let mut g = shared.conns[i]
+            .data
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
+        *g = Some(data);
+    }
+    {
+        let mut g = shared.conns[i]
+            .ctrl
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
+        *g = ctrl;
+    }
+    let epoch = {
+        let mut st = shared.lock();
+        if st.closing || st.health.state(i) != ShardState::Dead {
+            drop(st);
+            shared.conns[i].close();
+            return;
+        }
+        st.epoch[i] += 1;
+        st.health.begin_probation(i, Instant::now());
+        st.epoch[i]
+    };
+    warn_log!("cluster: shard {addr} reconnected; probing before \
+               re-admission");
+    if spawn_reader(shared, i, epoch, data_rd, Role::Data).is_err()
+        || match ctrl_rd {
+            Some(c) => {
+                spawn_reader(shared, i, epoch, c, Role::Control).is_err()
+            }
+            None => false,
+        }
+    {
+        // thread spawn failed: treat as a failed revival
+        shard_lost(shared, i, epoch, "spawning reader threads failed");
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::serve::net::testutil::mock_node;
+    use crate::serve::net::testutil::{mock_node, mock_node_at};
     use std::net::TcpListener;
 
     /// Fast heartbeats so pongs flow promptly, but a *generous*
     /// timeout: every death these tests exercise is detected via the
     /// severed connection (instant), and a tight timeout would let a
     /// loaded CI runner's scheduling stalls kill healthy mock nodes.
+    /// Reconnection is effectively off (1 h) so death stays permanent
+    /// unless a test opts in.
     fn fast_opts() -> ClusterOpts {
         ClusterOpts {
             health: HealthPolicy {
                 heartbeat: Duration::from_millis(20),
                 timeout: Duration::from_secs(5),
+                ..HealthPolicy::default()
             },
+            reconnect: Duration::from_secs(3600),
+            ..ClusterOpts::default()
+        }
+    }
+
+    /// Opts for the elasticity tests: prompt reconnects, a short pong
+    /// streak, and the same stall-tolerant timeout.
+    fn elastic_opts() -> ClusterOpts {
+        ClusterOpts {
+            health: HealthPolicy {
+                heartbeat: Duration::from_millis(10),
+                timeout: Duration::from_secs(5),
+                readmit_pongs: 2,
+            },
+            reconnect: Duration::from_millis(30),
             ..ClusterOpts::default()
         }
     }
@@ -822,6 +1320,18 @@ mod tests {
         rx.recv_timeout(Duration::from_secs(20))
             .expect("no hang")
             .expect("request must succeed")
+    }
+
+    /// Poll until the cluster reports `n` serving shards (readmission
+    /// and loss detection are asynchronous).
+    fn wait_live_shards(cluster: &Cluster, n: usize, what: &str) {
+        let deadline = Instant::now() + Duration::from_secs(15);
+        while cluster.live_shards() != n {
+            assert!(Instant::now() < deadline,
+                    "{what}: still {} serving shard(s), want {n}",
+                    cluster.live_shards());
+            std::thread::sleep(Duration::from_millis(5));
+        }
     }
 
     #[test]
@@ -943,7 +1453,8 @@ mod tests {
             }
             other => panic!("expected NodeLost, got {other:?}"),
         }
-        // later submits fail fast with the recorded cause
+        // later submits fail fast with the recorded cause (reconnects
+        // are off in fast_opts, so the death is effectively permanent)
         match cluster.submit(GenRequest { class: 0, n: 1 }) {
             Err(ServeError::NodeLost { .. }) => {}
             other => panic!("expected NodeLost reject, got {other:?}"),
@@ -969,7 +1480,9 @@ mod tests {
                 health: HealthPolicy {
                     heartbeat: Duration::from_millis(20),
                     timeout: Duration::from_millis(600),
+                    ..HealthPolicy::default()
                 },
+                reconnect: Duration::from_secs(3600),
                 ..ClusterOpts::default()
             },
         )
@@ -994,6 +1507,180 @@ mod tests {
         assert!(agg.requeued >= 1, "the silent shard got the first pick");
         node.shutdown();
         drop(silent);
+    }
+
+    #[test]
+    fn busy_node_with_huge_responses_is_not_declared_dead() {
+        // The headline regression: multi-MiB response frames + a
+        // liveness deadline far below their transfer/parse time. On
+        // the pre-isolation single-connection path the pong queued
+        // behind the response bytes and a merely *busy* node was
+        // declared dead; with the control plane isolated (and data
+        // frames chunked) liveness must stay green throughout.
+        let il = 300_000usize; // ~0.6–1.2 MiB of JSON per image pair
+        let (node, addr) =
+            mock_node(vec![1, 2], il, Duration::from_millis(50));
+        let cluster = Cluster::connect(
+            &[addr.to_string()],
+            ClusterOpts {
+                health: HealthPolicy {
+                    heartbeat: Duration::from_millis(20),
+                    timeout: Duration::from_millis(1000),
+                    ..HealthPolicy::default()
+                },
+                reconnect: Duration::from_secs(3600),
+                ..ClusterOpts::default()
+            },
+        )
+        .unwrap();
+        let mut rxs = Vec::new();
+        for i in 0..4usize {
+            let class = (i % 3) as i32 + 1;
+            let (_, rx) =
+                cluster.submit(GenRequest { class, n: 2 }).unwrap();
+            rxs.push((class, rx));
+        }
+        for (class, rx) in rxs {
+            let resp = rx
+                .recv_timeout(Duration::from_secs(60))
+                .expect("no hang")
+                .expect("busy node must keep serving");
+            assert_eq!(resp.images.len(), 2 * il);
+            assert!(resp.images.iter().all(|&p| p == class as f32));
+        }
+        let agg = cluster.shutdown();
+        assert_eq!(agg.nodes_lost, 0,
+                   "busy-but-healthy node was falsely declared dead");
+        assert_eq!(agg.failed_requests, 0);
+        assert_eq!(agg.requests, 4);
+        node.shutdown();
+    }
+
+    #[test]
+    fn shared_connection_mode_still_serves() {
+        // --control-plane false: the pre-isolation topology (one
+        // connection per shard, heartbeats ride the data plane) must
+        // keep serving — it is the diagnostic baseline the isolation
+        // fix is A/B-ed against (same build both ends; the flag is
+        // not a cross-version compatibility mode)
+        let (node, addr) = mock_node(vec![1, 2, 4], 3, Duration::ZERO);
+        let cluster = Cluster::connect(
+            &[addr.to_string()],
+            ClusterOpts { control_plane: false, ..fast_opts() },
+        )
+        .unwrap();
+        let mut rxs = Vec::new();
+        for i in 0..4usize {
+            let class = (i % 3) as i32;
+            let (_, rx) =
+                cluster.submit(GenRequest { class, n: 2 }).unwrap();
+            rxs.push((class, rx));
+        }
+        for (class, rx) in rxs {
+            let resp = recv_ok(&rx);
+            assert!(resp.images.iter().all(|&p| p == class as f32));
+        }
+        let agg = cluster.shutdown();
+        assert_eq!(agg.requests, 4);
+        assert_eq!(agg.failed_requests, 0);
+        assert_eq!(agg.nodes_lost, 0);
+        node.shutdown();
+    }
+
+    #[test]
+    fn severed_node_is_readmitted_and_serves_again() {
+        let (node, addr) = mock_node(vec![1, 2, 4], 2, Duration::ZERO);
+        let cluster = Cluster::connect(&[addr.to_string()],
+                                       elastic_opts())
+            .unwrap();
+        let (_, rx) =
+            cluster.submit(GenRequest { class: 1, n: 1 }).unwrap();
+        recv_ok(&rx);
+        // partition: the shard dies (read error) — but the node is
+        // still listening, so the reconnector revives it and the pong
+        // streak re-admits it. Polling the readmission counter (not a
+        // transient live_shards dip) keeps this stall-tolerant.
+        node.sever_connections();
+        let deadline = Instant::now() + Duration::from_secs(15);
+        while cluster.nodes_readmitted() == 0 {
+            assert!(Instant::now() < deadline,
+                    "severed node never re-admitted");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        wait_live_shards(&cluster, 1, "after reconnect");
+        let (_, rx) =
+            cluster.submit(GenRequest { class: 3, n: 2 }).unwrap();
+        let resp = recv_ok(&rx);
+        assert!(resp.images.iter().all(|&p| p == 3.0),
+                "re-admitted shard must serve real traffic");
+        let agg = cluster.shutdown();
+        assert_eq!(agg.nodes_lost, 1);
+        assert_eq!(agg.nodes_readmitted, 1);
+        assert_eq!(agg.failed_requests, 0);
+        let st = node.shutdown();
+        assert_eq!(st.requests, 2);
+    }
+
+    #[test]
+    fn restarted_node_is_readmitted_without_restarting_the_frontend() {
+        let (node, addr) = mock_node(vec![1, 2, 4], 2, Duration::ZERO);
+        let cluster = Cluster::connect(&[addr.to_string()],
+                                       elastic_opts())
+            .unwrap();
+        let (_, rx) =
+            cluster.submit(GenRequest { class: 2, n: 1 }).unwrap();
+        recv_ok(&rx);
+        // full node death: process gone, listener gone
+        node.shutdown();
+        wait_live_shards(&cluster, 0, "after node shutdown");
+        // a *new* node process comes up on the same address (bind may
+        // briefly race the old listener's close)
+        let node2 = {
+            let deadline = Instant::now() + Duration::from_secs(10);
+            loop {
+                match mock_node_at(&addr.to_string(), vec![1, 2, 4], 2,
+                                   Duration::ZERO) {
+                    Ok(node2) => break node2,
+                    Err(e) => {
+                        assert!(Instant::now() < deadline,
+                                "could not rebind the node address: \
+                                 {e:#}");
+                        std::thread::sleep(Duration::from_millis(50));
+                    }
+                }
+            }
+        };
+        wait_live_shards(&cluster, 1, "after node restart");
+        let (_, rx) =
+            cluster.submit(GenRequest { class: 4, n: 2 }).unwrap();
+        let resp = recv_ok(&rx);
+        assert!(resp.images.iter().all(|&p| p == 4.0));
+        let agg = cluster.shutdown();
+        assert_eq!(agg.nodes_lost, 1);
+        assert_eq!(agg.nodes_readmitted, 1);
+        let st2 = node2.shutdown();
+        assert_eq!(st2.requests, 1,
+                   "restarted node must receive new placements");
+    }
+
+    #[test]
+    fn dropped_cluster_fails_pending_typed_with_books_balanced() {
+        // drop (not shutdown) with work in flight: the client gets a
+        // typed ShuttingDown, and the drop path runs the same
+        // in-flight bookkeeping as shutdown (the satellite fix — it
+        // used to leak `inflight` slots)
+        let (node, addr) =
+            mock_node(vec![4], 2, Duration::from_millis(50));
+        let cluster =
+            Cluster::connect(&[addr.to_string()], fast_opts()).unwrap();
+        let (_, rx) =
+            cluster.submit(GenRequest { class: 1, n: 4 }).unwrap();
+        drop(cluster);
+        match rx.recv_timeout(Duration::from_secs(20)).expect("no hang") {
+            Err(ServeError::ShuttingDown) => {}
+            other => panic!("expected ShuttingDown, got {other:?}"),
+        }
+        node.shutdown();
     }
 
     #[test]

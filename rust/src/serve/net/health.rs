@@ -1,7 +1,7 @@
 //! Shard health tracking + load-aware placement.
 //!
 //! [`Health`] is the cluster dispatcher's pure bookkeeping core: which
-//! shards are alive, how recently each answered a heartbeat, and how
+//! shards are serving, how recently each answered a heartbeat, and how
 //! loaded each claims to be. Everything is a function of explicit
 //! `Instant`s passed in by the caller — no clocks, no sockets, no
 //! locks — in the same spirit as [`crate::serve::policy`], so every
@@ -9,29 +9,56 @@
 //! [`Cluster`](crate::serve::net::cluster::Cluster) holds a `Health`
 //! under its state mutex and feeds it pongs, errors and `now`.
 //!
-//! Liveness rule: a shard starts alive with a full grace window (its
-//! connect instant counts as a heartbeat); it dies when the caller
-//! reports a connection error ([`Health::mark_dead`]) or when its last
-//! heartbeat is older than the policy timeout ([`Health::expired`]).
-//! Death is permanent — re-admitting flapping nodes is a deliberate
-//! non-goal (restart the frontend to re-pick up a recovered shard).
+//! # State machine
 //!
-//! Placement rule ([`Health::pick`]): the alive shard minimizing
-//! *reported queue depth* (its last pong) *plus local in-flight*
-//! (slots this frontend sent it that have not come back — covers the
-//! window before the next pong reflects them), ties to the lowest
-//! index.
+//! Node death is *recoverable*: each shard walks
+//!
+//! ```text
+//!          pong                    reconnect
+//!   ┌──────────────┐         ┌──────────────────┐
+//!   ▼              │         ▼                  │
+//! Alive ──────▶ Suspect ──▶ Dead ◀────────── Probation
+//!   ▲    silent        timeout │    conn error /    │
+//!   │    > timeout/2   or conn │    silent > timeout│
+//!   │                  error   └────────────────────┤
+//!   └───────────────────────────────────────────────┘
+//!                 K consecutive pongs (readmit_pongs)
+//! ```
+//!
+//! * **Alive** — serving; placed by [`Health::pick`].
+//! * **Suspect** — missed heartbeats for more than half the timeout:
+//!   still serving (a busy node is not a dead node), but only placed
+//!   when no Alive shard exists; one pong restores Alive.
+//! * **Dead** — timed out or its connection errored. The cluster
+//!   re-homes its in-flight work once ([`Health::mark_dead`] reports
+//!   the previous state so the cleanup runs exactly once per death)
+//!   and its reconnect loop starts probing the address.
+//! * **Probation** — reconnected, not yet trusted: pinged but never
+//!   placed. After [`HealthPolicy::readmit_pongs`] *consecutive* pongs
+//!   on the (control) connection it is re-admitted to Alive with a
+//!   ramp-up handicap — [`RAMP_START`] halvings that decay one per
+//!   pong — so a flapping node re-enters placement gradually instead
+//!   of oscillating the scheduler.
 
 use std::time::{Duration, Instant};
 
-/// Heartbeat cadence + liveness deadline.
+/// Placement handicap a re-admitted shard starts with: its effective
+/// load is left-shifted by the remaining ramp (×16 at re-admission
+/// with the default of 4), decaying one halving per pong — roughly one
+/// heartbeat-interval per step — until it competes at face value.
+pub const RAMP_START: u32 = 4;
+
+/// Heartbeat cadence + liveness deadlines + re-admission policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct HealthPolicy {
-    /// How often the monitor pings each live shard.
+    /// How often the monitor pings each non-dead shard.
     pub heartbeat: Duration,
     /// A shard whose last heartbeat (or connect) is older than this is
-    /// declared dead.
+    /// declared dead; older than *half* of it, suspect.
     pub timeout: Duration,
+    /// Consecutive pongs a reconnected (probation) shard must answer
+    /// before it is re-admitted into placement.
+    pub readmit_pongs: u32,
 }
 
 impl Default for HealthPolicy {
@@ -39,20 +66,48 @@ impl Default for HealthPolicy {
         HealthPolicy {
             heartbeat: Duration::from_millis(500),
             timeout: Duration::from_millis(2500),
+            readmit_pongs: 3,
         }
     }
+}
+
+impl HealthPolicy {
+    /// Silence threshold for Alive → Suspect (half the death timeout).
+    pub fn suspect_after(&self) -> Duration {
+        self.timeout / 2
+    }
+}
+
+/// One shard's position in the liveness state machine (module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardState {
+    Alive,
+    Suspect,
+    Dead,
+    Probation,
 }
 
 /// Last known state of one shard.
 #[derive(Clone, Copy, Debug)]
 pub struct ShardHealth {
-    pub alive: bool,
+    pub state: ShardState,
     /// Last pong (or the connect instant before the first pong).
     pub last_seen: Instant,
     /// Queue depth the shard reported in its last pong.
     pub queue_depth: usize,
     pub live_workers: usize,
     pub ready_workers: usize,
+    /// Consecutive pongs answered while in probation.
+    pub probation_pongs: u32,
+    /// Remaining ramp-up handicap (halvings of placement appeal).
+    pub ramp: u32,
+}
+
+impl ShardHealth {
+    /// Serving = currently trusted with requests (Alive or Suspect).
+    pub fn serving(&self) -> bool {
+        matches!(self.state, ShardState::Alive | ShardState::Suspect)
+    }
 }
 
 /// Liveness + load book for a fixed shard set.
@@ -69,11 +124,13 @@ impl Health {
             policy,
             shards: (0..n)
                 .map(|_| ShardHealth {
-                    alive: true,
+                    state: ShardState::Alive,
                     last_seen: now,
                     queue_depth: 0,
                     live_workers: 0,
                     ready_workers: 0,
+                    probation_pongs: 0,
+                    ramp: 0,
                 })
                 .collect(),
         }
@@ -95,89 +152,195 @@ impl Health {
         &self.shards[i]
     }
 
-    pub fn is_alive(&self, i: usize) -> bool {
-        self.shards[i].alive
+    pub fn state(&self, i: usize) -> ShardState {
+        self.shards[i].state
     }
 
-    pub fn alive_count(&self) -> usize {
-        self.shards.iter().filter(|s| s.alive).count()
+    /// Shards currently trusted with requests (Alive or Suspect).
+    pub fn serving_count(&self) -> usize {
+        self.shards.iter().filter(|s| s.serving()).count()
     }
 
-    /// Indices of shards currently alive (heartbeat targets).
-    pub fn alive_indices(&self) -> Vec<usize> {
-        (0..self.shards.len()).filter(|&i| self.shards[i].alive).collect()
+    /// Indices of serving shards (final-stats sweep targets).
+    pub fn serving_indices(&self) -> Vec<usize> {
+        (0..self.shards.len())
+            .filter(|&i| self.shards[i].serving())
+            .collect()
     }
 
-    /// Record a heartbeat reply. A pong from a shard already declared
-    /// dead is ignored (death is permanent; see module docs).
+    /// Indices the heartbeat monitor pings: everything with a live
+    /// connection — serving shards *and* probation shards (whose pongs
+    /// are their path back in).
+    pub fn ping_targets(&self) -> Vec<usize> {
+        (0..self.shards.len())
+            .filter(|&i| self.shards[i].state != ShardState::Dead)
+            .collect()
+    }
+
+    /// Indices the reconnect loop should probe.
+    pub fn dead_indices(&self) -> Vec<usize> {
+        (0..self.shards.len())
+            .filter(|&i| self.shards[i].state == ShardState::Dead)
+            .collect()
+    }
+
+    /// Record a heartbeat reply; returns `true` when this pong
+    /// *re-admitted* a probation shard (the caller logs/counts it). A
+    /// pong from a Dead shard is ignored — with no connection it can
+    /// only be a stale delivery racing the death.
     pub fn pong(&mut self, i: usize, queue_depth: usize,
-                live_workers: usize, ready_workers: usize, now: Instant) {
+                live_workers: usize, ready_workers: usize,
+                now: Instant) -> bool {
+        let policy = self.policy;
         let s = &mut self.shards[i];
-        if !s.alive {
-            return;
+        if s.state == ShardState::Dead {
+            return false;
         }
         s.last_seen = now;
         s.queue_depth = queue_depth;
         s.live_workers = live_workers;
         s.ready_workers = ready_workers;
+        match s.state {
+            ShardState::Probation => {
+                s.probation_pongs += 1;
+                if s.probation_pongs >= policy.readmit_pongs {
+                    s.state = ShardState::Alive;
+                    s.probation_pongs = 0;
+                    s.ramp = RAMP_START;
+                    return true;
+                }
+            }
+            ShardState::Suspect => {
+                // recovered before the timeout: a busy node, not a
+                // dead one
+                s.state = ShardState::Alive;
+                s.ramp = s.ramp.saturating_sub(1);
+            }
+            ShardState::Alive => {
+                s.ramp = s.ramp.saturating_sub(1);
+            }
+            ShardState::Dead => unreachable!("handled above"),
+        }
+        false
     }
 
     /// Declare a shard dead (connection error, heartbeat expiry).
-    /// Returns false when it already was — callers use this to make
-    /// the lost-node cleanup run exactly once per shard.
-    pub fn mark_dead(&mut self, i: usize) -> bool {
+    /// Returns the *previous* state — callers run the in-flight
+    /// re-home cleanup only when it was serving (`Alive`/`Suspect`),
+    /// and exactly once per death episode (`Dead` means a racing path
+    /// already handled it).
+    pub fn mark_dead(&mut self, i: usize) -> ShardState {
         let s = &mut self.shards[i];
-        let was_alive = s.alive;
-        s.alive = false;
-        was_alive
+        let prev = s.state;
+        s.state = ShardState::Dead;
+        s.probation_pongs = 0;
+        s.ramp = 0;
+        prev
     }
 
-    /// Alive shards whose last heartbeat is older than the timeout as
-    /// of `now` (the caller then runs its lost-node path on each).
+    /// A reconnect succeeded: Dead → Probation, with `now` starting
+    /// the silence clock (a mute reconnected node expires again).
+    /// No-op from any other state.
+    pub fn begin_probation(&mut self, i: usize, now: Instant) {
+        let s = &mut self.shards[i];
+        if s.state != ShardState::Dead {
+            return;
+        }
+        s.state = ShardState::Probation;
+        s.last_seen = now;
+        s.probation_pongs = 0;
+        s.queue_depth = 0;
+        s.live_workers = 0;
+        s.ready_workers = 0;
+    }
+
+    /// Advance time-driven transitions: Alive shards silent for more
+    /// than half the timeout become Suspect (deprioritized, still
+    /// serving), and a Probation shard that skipped a heartbeat loses
+    /// its pong streak — the re-admission gate is *consecutive* pongs,
+    /// so a sick node answering every few pings cannot accumulate its
+    /// way back into placement. The monitor calls this each beat
+    /// before `expired`.
+    pub fn tick(&mut self, now: Instant) {
+        let suspect_after = self.policy.suspect_after();
+        // one full beat of slack: at tick time the current beat's pong
+        // is typically still in flight, so a healthy shard's silence
+        // measures ~one heartbeat
+        let streak_break = self.policy.heartbeat * 2;
+        for s in &mut self.shards {
+            let silent = now.saturating_duration_since(s.last_seen);
+            match s.state {
+                ShardState::Alive if silent > suspect_after => {
+                    s.state = ShardState::Suspect;
+                }
+                ShardState::Probation if silent > streak_break => {
+                    s.probation_pongs = 0;
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Non-dead shards whose last heartbeat is older than the timeout
+    /// as of `now` (the caller then runs its lost-node path on each —
+    /// for a mute Probation shard that just tears the connection down
+    /// and goes back to reconnecting).
     pub fn expired(&self, now: Instant) -> Vec<usize> {
         (0..self.shards.len())
             .filter(|&i| {
                 let s = &self.shards[i];
-                s.alive
+                s.state != ShardState::Dead
                     && now.saturating_duration_since(s.last_seen)
                         > self.policy.timeout
             })
             .collect()
     }
 
-    /// Least-loaded alive shard: minimal reported depth + local
-    /// in-flight estimate (`extra[i]`), ties to the lowest index.
-    /// `None` when every shard is dead.
-    pub fn pick(&self, extra: &[usize]) -> Option<usize> {
-        debug_assert_eq!(extra.len(), self.shards.len());
-        (0..self.shards.len())
-            .filter(|&i| self.shards[i].alive)
-            .min_by_key(|&i| self.shards[i].queue_depth + extra[i])
+    /// Effective placement cost: reported depth + local in-flight,
+    /// inflated by the remaining ramp-up handicap (each step doubles
+    /// the apparent load of a freshly re-admitted shard).
+    fn cost(&self, i: usize, extra: &[usize]) -> usize {
+        let s = &self.shards[i];
+        (s.queue_depth + extra[i] + 1) << s.ramp.min(16)
     }
 
-    /// Sum of the last-reported live worker counts over alive shards.
+    /// Least-loaded placeable shard: minimal effective cost among
+    /// Alive shards, falling back to Suspect ones (busy beats dead)
+    /// when no Alive shard exists; ties to the lowest index. `None`
+    /// when nothing is serving.
+    pub fn pick(&self, extra: &[usize]) -> Option<usize> {
+        debug_assert_eq!(extra.len(), self.shards.len());
+        let best = |target: ShardState| {
+            (0..self.shards.len())
+                .filter(|&i| self.shards[i].state == target)
+                .min_by_key(|&i| self.cost(i, extra))
+        };
+        best(ShardState::Alive).or_else(|| best(ShardState::Suspect))
+    }
+
+    /// Sum of the last-reported live worker counts over serving shards.
     pub fn live_workers_total(&self) -> usize {
         self.shards
             .iter()
-            .filter(|s| s.alive)
+            .filter(|s| s.serving())
             .map(|s| s.live_workers)
             .sum()
     }
 
-    /// Sum of the last-reported ready worker counts over alive shards.
+    /// Sum of the last-reported ready worker counts over serving shards.
     pub fn ready_workers_total(&self) -> usize {
         self.shards
             .iter()
-            .filter(|s| s.alive)
+            .filter(|s| s.serving())
             .map(|s| s.ready_workers)
             .sum()
     }
 
-    /// Sum of the last-reported queue depths over alive shards.
+    /// Sum of the last-reported queue depths over serving shards.
     pub fn depth_total(&self) -> usize {
         self.shards
             .iter()
-            .filter(|s| s.alive)
+            .filter(|s| s.serving())
             .map(|s| s.queue_depth)
             .sum()
     }
@@ -191,43 +354,156 @@ mod tests {
         HealthPolicy {
             heartbeat: Duration::from_millis(hb),
             timeout: Duration::from_millis(to),
+            readmit_pongs: 2,
         }
+    }
+
+    fn ms(x: u64) -> Duration {
+        Duration::from_millis(x)
     }
 
     #[test]
     fn starts_alive_with_grace_window() {
         let t0 = Instant::now();
         let h = Health::new(3, policy_ms(10, 50), t0);
-        assert_eq!(h.alive_count(), 3);
+        assert_eq!(h.serving_count(), 3);
         // inside the grace window nothing expires…
-        assert!(h.expired(t0 + Duration::from_millis(50)).is_empty());
+        assert!(h.expired(t0 + ms(50)).is_empty());
         // …one tick past it, everything silent does
-        assert_eq!(h.expired(t0 + Duration::from_millis(51)), vec![0, 1, 2]);
+        assert_eq!(h.expired(t0 + ms(51)), vec![0, 1, 2]);
     }
 
     #[test]
     fn pong_refreshes_only_its_shard() {
         let t0 = Instant::now();
         let mut h = Health::new(2, policy_ms(10, 50), t0);
-        h.pong(1, 7, 2, 2, t0 + Duration::from_millis(40));
-        assert_eq!(h.expired(t0 + Duration::from_millis(60)), vec![0]);
+        h.pong(1, 7, 2, 2, t0 + ms(40));
+        assert_eq!(h.expired(t0 + ms(60)), vec![0]);
         assert_eq!(h.shard(1).queue_depth, 7);
         assert_eq!(h.live_workers_total(), 2);
     }
 
     #[test]
-    fn mark_dead_is_idempotent_and_permanent() {
+    fn silence_past_half_timeout_is_suspect_not_dead() {
+        let t0 = Instant::now();
+        let mut h = Health::new(2, policy_ms(10, 100), t0);
+        h.pong(1, 0, 1, 1, t0 + ms(60));
+        h.tick(t0 + ms(60));
+        // shard 0 silent 60 ms > 50 ms (timeout/2): suspect, still
+        // serving, still counted — but not expired yet
+        assert_eq!(h.state(0), ShardState::Suspect);
+        assert_eq!(h.state(1), ShardState::Alive);
+        assert_eq!(h.serving_count(), 2);
+        assert!(h.expired(t0 + ms(60)).is_empty());
+        // suspects lose placement to alive shards even when *less*
+        // loaded…
+        h.pong(1, 9, 1, 1, t0 + ms(60));
+        assert_eq!(h.pick(&[0, 0]), Some(1));
+        // …but carry the cluster alone when nothing is alive
+        h.mark_dead(1);
+        assert_eq!(h.pick(&[0, 0]), Some(0));
+        // one pong fully restores the suspect
+        h.pong(0, 0, 1, 1, t0 + ms(70));
+        assert_eq!(h.state(0), ShardState::Alive);
+    }
+
+    #[test]
+    fn mark_dead_reports_previous_state_once() {
         let t0 = Instant::now();
         let mut h = Health::new(2, policy_ms(10, 50), t0);
-        assert!(h.mark_dead(0), "first death reported once");
-        assert!(!h.mark_dead(0), "second report is a no-op");
-        assert_eq!(h.alive_count(), 1);
+        assert_eq!(h.mark_dead(0), ShardState::Alive,
+                   "first death reports the serving state");
+        assert_eq!(h.mark_dead(0), ShardState::Dead,
+                   "second report sees the death already handled");
+        assert_eq!(h.serving_count(), 1);
         // a late pong from the dead shard must not resurrect it
-        h.pong(0, 0, 4, 4, t0 + Duration::from_millis(1));
-        assert!(!h.is_alive(0));
-        assert_eq!(h.alive_indices(), vec![1]);
+        h.pong(0, 0, 4, 4, t0 + ms(1));
+        assert_eq!(h.state(0), ShardState::Dead);
+        assert_eq!(h.serving_indices(), vec![1]);
+        assert_eq!(h.dead_indices(), vec![0]);
         // dead shards never show up as expired again
-        assert!(h.expired(t0 + Duration::from_secs(9)) == vec![1]);
+        assert_eq!(h.expired(t0 + Duration::from_secs(9)), vec![1]);
+    }
+
+    #[test]
+    fn probation_readmits_after_k_consecutive_pongs() {
+        let t0 = Instant::now();
+        let mut h = Health::new(2, policy_ms(10, 50), t0);
+        h.mark_dead(0);
+        h.begin_probation(0, t0 + ms(5));
+        assert_eq!(h.state(0), ShardState::Probation);
+        // pinged but never placed
+        assert!(h.ping_targets().contains(&0));
+        assert_eq!(h.serving_count(), 1);
+        assert_eq!(h.pick(&[0, 0]), Some(1));
+        // K = 2 consecutive pongs re-admit (the first must not)
+        assert!(!h.pong(0, 0, 1, 1, t0 + ms(10)));
+        assert_eq!(h.state(0), ShardState::Probation);
+        assert!(h.pong(0, 0, 1, 1, t0 + ms(20)),
+                "second pong re-admits");
+        assert_eq!(h.state(0), ShardState::Alive);
+        assert_eq!(h.shard(0).ramp, RAMP_START);
+        assert_eq!(h.serving_count(), 2);
+    }
+
+    #[test]
+    fn probation_streak_is_consecutive_not_cumulative() {
+        // readmit_pongs = 2, heartbeat 10 ms: a probation shard that
+        // answers one ping, goes quiet for several beats, then answers
+        // again must NOT be re-admitted on that second (non-
+        // consecutive) pong
+        let t0 = Instant::now();
+        let mut h = Health::new(1, policy_ms(10, 100), t0);
+        h.mark_dead(0);
+        h.begin_probation(0, t0);
+        assert!(!h.pong(0, 0, 1, 1, t0 + ms(10)));
+        // three silent beats: the monitor's tick breaks the streak
+        h.tick(t0 + ms(40));
+        assert_eq!(h.shard(0).probation_pongs, 0);
+        assert!(!h.pong(0, 0, 1, 1, t0 + ms(45)),
+                "a pong after a gap restarts the streak");
+        // two genuinely consecutive pongs do re-admit
+        assert!(h.pong(0, 0, 1, 1, t0 + ms(55)));
+        assert_eq!(h.state(0), ShardState::Alive);
+    }
+
+    #[test]
+    fn probation_death_resets_the_pong_streak() {
+        let t0 = Instant::now();
+        let mut h = Health::new(1, policy_ms(10, 50), t0);
+        h.mark_dead(0);
+        h.begin_probation(0, t0);
+        h.pong(0, 0, 1, 1, t0 + ms(5));
+        // the connection drops again before the streak completes
+        assert_eq!(h.mark_dead(0), ShardState::Probation);
+        h.begin_probation(0, t0 + ms(30));
+        // the streak starts over: one pong is not enough
+        assert!(!h.pong(0, 0, 1, 1, t0 + ms(35)));
+        assert_eq!(h.state(0), ShardState::Probation);
+        // and a mute probation shard expires like anything else
+        assert_eq!(h.expired(t0 + ms(90)), vec![0]);
+    }
+
+    #[test]
+    fn readmitted_shard_ramps_up_instead_of_swamping() {
+        let t0 = Instant::now();
+        let mut h = Health::new(2, policy_ms(10, 50), t0);
+        h.pong(1, 4, 1, 1, t0); // modest standing load on shard 1
+        h.mark_dead(0);
+        h.begin_probation(0, t0);
+        h.pong(0, 0, 1, 1, t0 + ms(10));
+        assert!(h.pong(0, 0, 1, 1, t0 + ms(20)));
+        // freshly re-admitted: empty but handicapped ×2^RAMP_START, so
+        // the loaded veteran still wins placement
+        assert_eq!(h.pick(&[0, 0]), Some(1));
+        // the handicap decays one halving per pong until the empty
+        // shard wins on merit: (0+0+1)<<r < (4+0+1)<<0 needs r <= 2
+        for k in 0..RAMP_START {
+            h.pong(0, 0, 1, 1, t0 + ms(30 + 10 * k as u64));
+            h.pong(1, 4, 1, 1, t0 + ms(30 + 10 * k as u64));
+        }
+        assert_eq!(h.shard(0).ramp, 0);
+        assert_eq!(h.pick(&[0, 0]), Some(0));
     }
 
     #[test]

@@ -6,12 +6,19 @@
 //!
 //! ```text
 //! clients ──▶ Cluster (Dispatch)                      frontend process
-//!               │  least-loaded placement (heartbeat depth + in-flight)
+//!               │  least-loaded placement (heartbeat depth + in-flight,
+//!               │  ramp-up handicap on re-admitted shards)
 //!               │  re-queue on node loss, NodeLost only when none left
-//!               ▼
+//!               │  reconnector revives dead shards (Probation → Alive)
+//!               ├────────────────┬─────────────────────────────────────
+//!               ▼ data plane     ▼ control plane (Hello{role})
+//!           submits out,     ping/pong/stats only — a pong never
+//!           responses back   queues behind a response frame
+//!           (chunked past CHUNK_LEN, per-chunk checksums)
+//!               ▼                ▼
 //!           wire frames (length-prefixed, versioned, checksummed)
-//!           proto messages (canonical JSON: submit/response/error/
-//!                           ping/pong/stats)
+//!           proto messages (canonical JSON: hello/submit/response/
+//!                           error/ping/pong/stats)
 //!               ▼
 //!           NodeServer (TCP listener)                   shard process
 //!               │  one handler thread per connection,
@@ -23,23 +30,31 @@
 //! Layering, bottom-up:
 //!
 //! * [`wire`] — the byte layer: framed, versioned, checksummed, every
-//!   malformed input a typed [`wire::WireError`]. Knows nothing about
-//!   messages.
+//!   malformed input a typed [`wire::WireError`]. Messages past
+//!   [`wire::CHUNK_LEN`] travel as sequence-numbered chunk runs
+//!   (standalone frames may interleave between chunks — the liveness
+//!   escape hatch), reassembled by [`wire::MessageReader`] under the
+//!   [`wire::MAX_FRAME_LEN`] cap. Knows nothing about messages.
 //! * [`proto`] — the message layer: [`proto::Msg`] as canonical JSON
-//!   inside frames, plus the [`ServerStats`](crate::serve::ServerStats)
-//!   / [`ServeError`](crate::serve::ServeError) serde the stats
-//!   protocol and `--stats-json` share. Knows nothing about sockets.
-//! * [`health`] — pure liveness/placement bookkeeping (heartbeat
-//!   expiry, least-loaded pick), unit-tested with explicit clocks.
+//!   inside frames — including the [`proto::Role`] handshake that tags
+//!   control connections — plus the
+//!   [`ServerStats`](crate::serve::ServerStats) /
+//!   [`ServeError`](crate::serve::ServeError) serde the stats protocol
+//!   and `--stats-json` share. Knows nothing about sockets.
+//! * [`health`] — pure liveness/placement bookkeeping: the
+//!   `Alive → Suspect → Dead → Probation → Alive` state machine,
+//!   heartbeat expiry, K-pong re-admission, ramped least-loaded pick —
+//!   unit-tested with explicit clocks.
 //! * [`node`] — a [`Dispatch`](crate::serve::Dispatch) service behind
 //!   a listener.
 //! * [`cluster`] — the frontend: same `Dispatch` surface, requests
-//!   spread over shard nodes, failover per [`health`].
+//!   spread over shard nodes, failover *and* recovery per [`health`].
 //!
 //! The loopback topology (nodes and cluster in one process over
 //! `127.0.0.1`) is first-class: the cluster tests, the
 //! `benches/runtime.rs` smoke section and `serve_demo --nodes N` all
-//! run it, including mid-load node kills.
+//! run it, including mid-load node kills and kill-then-restart
+//! re-admission.
 
 pub mod cluster;
 pub mod health;
@@ -47,11 +62,50 @@ pub mod node;
 pub mod proto;
 pub mod wire;
 
+use std::net::TcpStream;
+use std::sync::Mutex;
+
+/// Write one message under the two-lock discipline every connection
+/// writer in this layer shares — the one place the chunk-interleaving
+/// protocol lives. Small messages take only the frame lock; a message
+/// past [`wire::CHUNK_LEN`] additionally serializes on `bulk` (chunks
+/// of two messages must never interleave) while *releasing* the frame
+/// lock between chunks, so standalone frames — pongs, typed errors —
+/// slip in between and liveness never waits behind more than one
+/// chunk. A `None` stream slot means the connection is gone (typed
+/// I/O error, the caller's lost-connection path takes over).
+pub(crate) fn send_message(stream: &Mutex<Option<TcpStream>>,
+                           bulk: &Mutex<()>, payload: &[u8])
+                           -> Result<(), wire::WireError> {
+    // frames are encoded one at a time from the plan, outside the
+    // locks — a multi-MiB message is never buffered twice
+    let plan = wire::chunk_plan(payload.len())?;
+    let write_one = |range: std::ops::Range<usize>, ctrl: u16|
+                     -> Result<(), wire::WireError> {
+        let frame = wire::encode_frame_ctrl(&payload[range], ctrl)?;
+        let mut g = stream.lock().unwrap_or_else(|p| p.into_inner());
+        let Some(s) = g.as_mut() else {
+            return Err(wire::WireError::Io(
+                "connection already closed".into()));
+        };
+        wire::write_encoded(s, &frame)
+    };
+    if plan.len() == 1 {
+        let (range, ctrl) = plan.into_iter().next().expect("len 1");
+        return write_one(range, ctrl);
+    }
+    let _bulk = bulk.lock().unwrap_or_else(|p| p.into_inner());
+    for (range, ctrl) in plan {
+        write_one(range, ctrl)?;
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 pub(crate) mod testutil;
 
 pub use cluster::{Cluster, ClusterOpts};
-pub use health::{Health, HealthPolicy};
+pub use health::{Health, HealthPolicy, ShardState};
 pub use node::{NodeOpts, NodeServer};
-pub use proto::Msg;
-pub use wire::WireError;
+pub use proto::{Msg, Role};
+pub use wire::{MessageReader, WireError};

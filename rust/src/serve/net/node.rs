@@ -13,8 +13,19 @@
 //!   inline so heartbeats stay prompt under load;
 //! * completed responses are forwarded by a small fixed
 //!   [`ThreadPool`]: each job blocks on one request's response channel
-//!   and writes the reply frame under the connection's writer mutex
-//!   (frames from concurrent requests interleave whole, never torn).
+//!   and writes the reply under the connection's writer locks (frames
+//!   from concurrent requests interleave whole, never torn).
+//!
+//! **Control-plane isolation:** a frontend may tag a connection
+//! `Hello{role: control}` — the node then expects only ping/stats
+//! traffic on it (a submit is rejected typed), and since no response
+//! bytes ever travel that connection, a pong cannot queue behind a
+//! multi-MiB frame. On *data* connections the same liveness problem is
+//! bounded by chunking: responses larger than [`wire::CHUNK_LEN`] are
+//! written as chunk runs, the frame lock released between chunks (a
+//! per-connection bulk lock keeps different messages' chunks from
+//! interleaving), so an inline pong waits behind at most one chunk —
+//! not one response.
 //!
 //! Failure containment mirrors the router's ethos: a malformed
 //! *message* (valid frame, bad JSON) is logged and skipped — the
@@ -22,13 +33,8 @@
 //! connection; a client hanging up drops only its own replies. The
 //! node never panics on peer bytes.
 //!
-//! Known limitation: heartbeat replies share the connection (and its
-//! writer mutex) with response frames, so on a genuinely slow link a
-//! pong can queue behind a large in-progress response — size
-//! `--node-timeout-ms` above the worst-case frame transfer time, or
-//! see ROADMAP (separate control-plane channel) for the real fix.
 //! Writes carry a timeout so a peer that stops *reading* fails typed
-//! instead of wedging the writer mutex. [`NodeServer::sever_connections`]
+//! instead of wedging the writer locks. [`NodeServer::sever_connections`]
 //! force-closes every live connection without touching the service —
 //! the fault injection the cluster tests and the loopback bench use to
 //! simulate a network partition.
@@ -42,8 +48,8 @@ use anyhow::{Context, Result};
 
 use crate::serve::dispatch::Dispatch;
 use crate::serve::error::ServeError;
-use crate::serve::net::proto::Msg;
-use crate::serve::net::wire::{read_frame, write_frame, WireError};
+use crate::serve::net::proto::{Msg, Role};
+use crate::serve::net::wire::{MessageReader, WireError};
 use crate::serve::router::{GenRequest, ServerStats};
 use crate::util::threadpool::ThreadPool;
 use crate::{debug_log, warn_log};
@@ -168,10 +174,14 @@ impl NodeServer {
     }
 
     /// Stop accepting, close every connection, drain the wrapped
-    /// service and return its final statistics.
+    /// service and return its final statistics. Idempotent like
+    /// `Cluster::teardown`: a node already shut down reports default
+    /// stats instead of panicking.
     pub fn shutdown(mut self) -> ServerStats {
         self.stop_threads();
-        let shared = self.shared.take().expect("shutdown runs once");
+        let Some(shared) = self.shared.take() else {
+            return ServerStats::default();
+        };
         // handler threads are joined, so ours is the last reference;
         // response forwarders never hold one
         match Arc::try_unwrap(shared) {
@@ -251,10 +261,28 @@ fn accept_loop(shared: Arc<NodeShared>, listener: TcpListener) {
     }
 }
 
-/// Write one message under the connection's writer mutex.
-fn send(writer: &Mutex<TcpStream>, msg: &Msg) -> Result<(), WireError> {
-    let mut g = lock(writer);
-    write_frame(&mut *g, &msg.encode())
+/// One connection's write half, driven through the layer-wide
+/// [`send_message`](crate::serve::net::send_message) two-lock
+/// discipline: the inline pong path never waits behind more than one
+/// chunk of a large response.
+struct ConnWriter {
+    stream: Mutex<Option<TcpStream>>,
+    bulk: Mutex<()>,
+}
+
+impl ConnWriter {
+    /// Force-close the underlying socket (poisoned framing, conn exit).
+    fn close(&self) {
+        if let Some(s) = lock(&self.stream).take() {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+    }
+}
+
+/// Write one message under the connection's writer locks.
+fn send(writer: &ConnWriter, msg: &Msg) -> Result<(), WireError> {
+    crate::serve::net::send_message(&writer.stream, &writer.bulk,
+                                    &msg.encode())
 }
 
 /// One client connection: read frames, feed the service, answer
@@ -271,16 +299,23 @@ fn handle_conn(shared: Arc<NodeShared>, conn_id: usize,
             return;
         }
     };
-    let writer = Arc::new(Mutex::new(stream));
+    let writer = Arc::new(ConnWriter {
+        stream: Mutex::new(Some(stream)),
+        bulk: Mutex::new(()),
+    });
     conn_loop(&shared, &writer, &mut reader, &peer);
-    let _ = lock(&writer).shutdown(std::net::Shutdown::Both);
+    writer.close();
     lock(&shared.streams).retain(|(id, _)| *id != conn_id);
 }
 
-fn conn_loop(shared: &Arc<NodeShared>, writer: &Arc<Mutex<TcpStream>>,
+fn conn_loop(shared: &Arc<NodeShared>, writer: &Arc<ConnWriter>,
              reader: &mut TcpStream, peer: &str) {
+    // untagged connections are data connections (raw clients,
+    // pre-handshake frontends); a Hello can promote to control
+    let mut role = Role::Data;
+    let mut messages = MessageReader::new();
     loop {
-        let payload = match read_frame(reader) {
+        let payload = match messages.read(reader) {
             Ok(p) => p,
             Err(WireError::Closed) => break,
             Err(e) => {
@@ -301,6 +336,24 @@ fn conn_loop(shared: &Arc<NodeShared>, writer: &Arc<Mutex<TcpStream>>,
             }
         };
         match msg {
+            Msg::Hello { role: tagged } => {
+                debug_log!("node: {peer}: connection tagged {}",
+                           tagged.name());
+                role = tagged;
+            }
+            Msg::Submit { id, .. } if role == Role::Control => {
+                // control connections carry liveness only; shipping a
+                // response over one would re-create the pong-behind-
+                // frame wedge the split exists to prevent
+                warn_log!("node: {peer}: submit on a control \
+                           connection rejected");
+                let err = ServeError::Protocol {
+                    cause: "submit on a control connection".into(),
+                };
+                if send(writer, &Msg::ErrorResp { id, err }).is_err() {
+                    break;
+                }
+            }
             Msg::Submit { id, class, n } => {
                 match shared.svc.submit(GenRequest { class, n }) {
                     Ok((_, rx)) => {
@@ -328,12 +381,11 @@ fn conn_loop(shared: &Arc<NodeShared>, writer: &Arc<Mutex<TcpStream>>,
                             if let Err(e) = send(&w, &reply) {
                                 debug_log!("node: reply for request {id} \
                                             dropped: {e}");
-                                // a failed (possibly partial) frame
-                                // write poisons the stream framing —
-                                // close so the peer re-routes instead
-                                // of reading garbage
-                                let _ = lock(&w).shutdown(
-                                    std::net::Shutdown::Both);
+                                // a failed (possibly partial) frame or
+                                // chunk-run write poisons the stream
+                                // framing — close so the peer
+                                // re-routes instead of reading garbage
+                                w.close();
                             }
                         });
                     }
@@ -379,6 +431,7 @@ fn conn_loop(shared: &Arc<NodeShared>, writer: &Arc<Mutex<TcpStream>>,
 mod tests {
     use super::*;
     use crate::serve::net::testutil::{mock_node, read_msg, send_msg};
+    use crate::serve::net::wire::{read_frame, write_frame, CHUNK_LEN};
     use std::time::Duration;
 
     /// Read frames until `pred` matches (heartbeat replies may
@@ -535,6 +588,55 @@ mod tests {
                 id: 7,
                 err: ServeError::RequestTooLarge { n: 5, cap: 4 },
             } => {}
+            other => panic!("{other:?}"),
+        }
+        node.shutdown();
+    }
+
+    #[test]
+    fn control_connection_serves_liveness_and_rejects_submits() {
+        let (node, addr) = mock_node(vec![4], 3, Duration::ZERO);
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        send_msg(&mut c, &Msg::Hello { role: Role::Control });
+        // liveness + stats flow normally
+        send_msg(&mut c, &Msg::Ping { seq: 5 });
+        match read_until(&mut c, |m| matches!(m, Msg::Pong { .. })) {
+            Msg::Pong { seq: 5, .. } => {}
+            other => panic!("wrong pong: {other:?}"),
+        }
+        send_msg(&mut c, &Msg::StatsReq { seq: 1 });
+        read_until(&mut c, |m| matches!(m, Msg::Stats { .. }));
+        // but a submit is a peer bug: rejected typed, connection lives
+        send_msg(&mut c, &Msg::Submit { id: 9, class: 1, n: 1 });
+        match read_until(&mut c, |m| matches!(m, Msg::ErrorResp { .. })) {
+            Msg::ErrorResp { id: 9, err: ServeError::Protocol { .. } } => {}
+            other => panic!("{other:?}"),
+        }
+        send_msg(&mut c, &Msg::Ping { seq: 6 });
+        read_until(&mut c, |m| matches!(m, Msg::Pong { seq: 6, .. }));
+        let stats = node.shutdown();
+        assert_eq!(stats.requests, 0, "control traffic reached the \
+                                       service");
+    }
+
+    #[test]
+    fn large_response_travels_chunked_and_reassembles() {
+        // ~400 KiB of response JSON (> CHUNK_LEN) exercises the
+        // chunked write path + reader-side reassembly end to end
+        let il = 100_000usize;
+        let (node, addr) = mock_node(vec![2], il, Duration::ZERO);
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        send_msg(&mut c, &Msg::Submit { id: 3, class: 7, n: 2 });
+        match read_until(&mut c, |m| matches!(m, Msg::Response { .. })) {
+            Msg::Response { id: 3, images, .. } => {
+                assert_eq!(images.len(), 2 * il);
+                assert!(images.iter().all(|&p| p == 7.0));
+                // the point of the fixture: this really was chunked
+                assert!(images.len() * 2 > CHUNK_LEN,
+                        "fixture no longer exceeds one chunk");
+            }
             other => panic!("{other:?}"),
         }
         node.shutdown();

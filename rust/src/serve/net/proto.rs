@@ -3,9 +3,13 @@
 //!
 //! One [`Msg`] enum covers both directions of a shard connection:
 //!
-//! * frontend → node: `Submit` (one generation request, carrying the
-//!   *frontend's* request id — the node echoes it back, so each
-//!   connection is its own id namespace), `Ping`, `StatsReq`;
+//! * frontend → node: `Hello` (optional first message tagging the
+//!   connection's [`Role`] — `control` connections carry only
+//!   ping/pong/stats so liveness never queues behind response bytes;
+//!   an untagged connection is `data`, the pre-handshake behavior),
+//!   `Submit` (one generation request, carrying the *frontend's*
+//!   request id — the node echoes it back, so each connection is its
+//!   own id namespace), `Ping`, `StatsReq`;
 //! * node → frontend: `Response` / `ErrorResp` (terminal, exactly one
 //!   per submitted id), `Pong` (queue depth + worker counts, the
 //!   load-balancing signal), `Stats` (a live [`ServerStats`]
@@ -24,9 +28,40 @@ use crate::serve::error::ServeError;
 use crate::serve::router::{RungStats, ServerStats, WorkerStats};
 use crate::util::json::Json;
 
+/// What a shard connection is for. The frontend opens one `Data`
+/// connection (submits out, responses back) and — unless the control
+/// plane is disabled — one `Control` connection (ping/pong/stats
+/// only), so a pong can never queue behind a multi-MiB response frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    Data,
+    Control,
+}
+
+impl Role {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Role::Data => "data",
+            Role::Control => "control",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Role> {
+        match s {
+            "data" => Some(Role::Data),
+            "control" => Some(Role::Control),
+            _ => None,
+        }
+    }
+}
+
 /// One frame's payload, either direction of a shard connection.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Msg {
+    /// Frontend → node, first message on a connection: what this
+    /// connection carries. Nodes treat a connection without a hello as
+    /// `data` (raw clients, pre-handshake frontends).
+    Hello { role: Role },
     /// Frontend → node: run `n` images of `class`; the node answers
     /// with a `Response`/`ErrorResp` echoing `id`.
     Submit { id: u64, class: i32, n: usize },
@@ -55,6 +90,7 @@ impl Msg {
     /// The message's type tag (log lines naming skipped messages).
     pub fn kind(&self) -> &'static str {
         match self {
+            Msg::Hello { .. } => "hello",
             Msg::Submit { .. } => "submit",
             Msg::Response { .. } => "response",
             Msg::ErrorResp { .. } => "error",
@@ -81,6 +117,10 @@ impl Msg {
     pub fn to_json(&self) -> Json {
         let mut m = std::collections::BTreeMap::new();
         match self {
+            Msg::Hello { role } => {
+                m.insert("type".into(), Json::Str("hello".into()));
+                m.insert("role".into(), Json::Str(role.name().into()));
+            }
             Msg::Submit { id, class, n } => {
                 m.insert("type".into(), Json::Str("submit".into()));
                 m.insert("id".into(), Json::Num(*id as f64));
@@ -134,6 +174,14 @@ impl Msg {
     pub fn from_json(j: &Json) -> Result<Msg> {
         let ty = str_field(j, "type")?;
         match ty {
+            "hello" => {
+                let role = str_field(j, "role")?;
+                Ok(Msg::Hello {
+                    role: Role::parse(role).with_context(|| {
+                        format!("unknown connection role `{role}`")
+                    })?,
+                })
+            }
             "submit" => Ok(Msg::Submit {
                 id: count_field(j, "id")?,
                 class: int_field(j, "class")?
@@ -401,6 +449,7 @@ pub fn stats_to_json(s: &ServerStats) -> Json {
         ("pending", Json::Num(s.pending as f64)),
         ("requeued", Json::Num(s.requeued as f64)),
         ("nodes_lost", Json::Num(s.nodes_lost as f64)),
+        ("nodes_readmitted", Json::Num(s.nodes_readmitted as f64)),
         ("rungs", Json::Arr(s.rungs.iter().map(rung_to_json).collect())),
         (
             "workers",
@@ -447,6 +496,7 @@ pub fn stats_from_json(j: &Json) -> Result<ServerStats> {
         pending: count_field(j, "pending")?,
         requeued: count_field(j, "requeued")?,
         nodes_lost: count_field(j, "nodes_lost")?,
+        nodes_readmitted: count_field(j, "nodes_readmitted")?,
         rungs,
         workers,
     })
@@ -484,6 +534,7 @@ mod tests {
             pending: g.usize_in(0, 100) as u64,
             requeued: g.usize_in(0, 20) as u64,
             nodes_lost: g.usize_in(0, 3) as u64,
+            nodes_readmitted: g.usize_in(0, 3) as u64,
             rungs: Vec::new(),
             workers: Vec::new(),
         };
@@ -545,7 +596,10 @@ mod tests {
     #[test]
     fn prop_messages_roundtrip() {
         check("proto message roundtrip", 200, |g: &mut Gen| {
-            let msg = match g.usize_in(0, 6) {
+            let msg = match g.usize_in(0, 7) {
+                6 => Msg::Hello {
+                    role: if g.bool() { Role::Data } else { Role::Control },
+                },
                 0 => Msg::Submit {
                     id: g.usize_in(0, 1 << 30) as u64,
                     class: g.usize_in(0, 2000) as i32 - 1000,
@@ -628,6 +682,10 @@ mod tests {
         assert!(Msg::decode(b"{not json").is_err());
         // unknown type
         assert!(Msg::decode(br#"{"type":"warp","id":1}"#).is_err());
+        // unknown connection role
+        assert!(Msg::decode(br#"{"type":"hello","role":"warp"}"#).is_err());
+        // hello without a role
+        assert!(Msg::decode(br#"{"type":"hello"}"#).is_err());
         // missing field
         assert!(Msg::decode(br#"{"type":"submit","id":1,"n":2}"#).is_err());
         // fractional count

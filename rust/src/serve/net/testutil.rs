@@ -63,6 +63,16 @@ pub(crate) fn mock_node(rungs: Vec<usize>, il: usize, delay: Duration)
     mock_node_capped(rungs, il, delay, RouterOpts::default().max_queue)
 }
 
+/// A mock node bound to an explicit address (restart-a-dead-node
+/// tests re-bind a known port, which can briefly race the old
+/// listener's close — hence the `Result`).
+pub(crate) fn mock_node_at(listen: &str, rungs: Vec<usize>, il: usize,
+                           delay: Duration) -> Result<NodeServer> {
+    let router =
+        mock_router(rungs, il, delay, RouterOpts::default().max_queue);
+    NodeServer::start(Box::new(router), listen, NodeOpts::default())
+}
+
 /// [`mock_node`] with an explicit queue cap (backpressure tests).
 pub(crate) fn mock_node_capped(rungs: Vec<usize>, il: usize,
                                delay: Duration, max_queue: usize)

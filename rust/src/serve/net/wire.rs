@@ -1,27 +1,51 @@
 //! Length-prefixed binary frame codec for the cross-node wire.
 //!
-//! Every message on a shard connection travels as one *frame*: a
-//! fixed 20-byte header followed by an opaque payload (the canonical
-//! JSON of a [`crate::serve::net::proto::Msg`], but the codec never
-//! looks inside). Big-endian header layout:
+//! Every message on a shard connection travels as one or more
+//! *frames*: a fixed 20-byte header followed by an opaque payload (the
+//! canonical JSON of a [`crate::serve::net::proto::Msg`], but the
+//! codec never looks inside). Big-endian header layout:
 //!
 //! ```text
 //! offset  size  field
 //!      0     4  magic      0x54514454 ("TQDT")
 //!      4     2  version    WIRE_VERSION (readers reject any other)
-//!      6     2  reserved   must be zero
+//!      6     2  ctrl       chunk control bits (0 = standalone frame)
 //!      8     4  payload length (bytes, <= MAX_FRAME_LEN)
 //!     12     8  checksum   FNV-1a over header[0..12] ++ payload
 //!     20     …  payload
 //! ```
 //!
+//! # Chunking (v2)
+//!
+//! A message larger than [`CHUNK_LEN`] is split into a run of chunk
+//! frames so no single write occupies the connection for long — the
+//! sender can release its writer lock between chunks and let small
+//! frames (heartbeat replies, typed errors) interleave, which is what
+//! keeps liveness honest on a slow link. The `ctrl` field encodes it:
+//!
+//! ```text
+//! bit 15  CHUNKED  this frame is one chunk of a larger message
+//! bit 14  FIN      last chunk of its message
+//! bits 0–13        chunk sequence number (0-based, contiguous)
+//! ```
+//!
+//! `ctrl == 0` is a standalone frame (the entire message). Chunks of
+//! one message must arrive in order and contiguously *relative to each
+//! other*, but standalone frames may interleave between them — the
+//! stateful [`MessageReader`] hands an interleaved standalone frame to
+//! the caller immediately and keeps reassembling. Every chunk carries
+//! its own checksum; [`MAX_FRAME_LEN`] caps both a single frame and
+//! the reassembled message (a corrupt stream can never allocate
+//! unboundedly).
+//!
 //! Decoding is total: every malformed input maps to a typed
 //! [`WireError`] — bad magic, a version-skewed peer, an oversized
 //! length (rejected *before* allocating), a flipped bit anywhere in
 //! header or payload (the checksum covers both), a stream truncated
-//! mid-frame, or a clean close at a frame boundary ([`WireError::Closed`],
-//! the one non-error exit). Nothing in this module panics on input
-//! bytes — property-tested below in the `coordinator/store.rs` style.
+//! mid-frame, an out-of-order or truncated chunk run, or a clean close
+//! at a message boundary ([`WireError::Closed`], the one non-error
+//! exit). Nothing in this module panics on input bytes —
+//! property-tested below in the `coordinator/store.rs` style.
 
 use std::fmt;
 use std::io::{Read, Write};
@@ -30,19 +54,33 @@ use std::io::{Read, Write};
 pub const WIRE_MAGIC: u32 = 0x5451_4454;
 /// Protocol version; bumped on any incompatible message change.
 /// Readers reject every other version with [`WireError::VersionSkew`].
-pub const WIRE_VERSION: u16 = 1;
-/// Hard cap on one frame's payload. Generous for image responses
-/// (a 16-slot rung of 64x64x3 f32 images serializes well under 16 MiB)
-/// while keeping a corrupted length field from allocating gigabytes.
+/// v2: the reserved header bytes became the chunk `ctrl` field and the
+/// `Hello{role}` handshake tags control-plane connections.
+pub const WIRE_VERSION: u16 = 2;
+/// Hard cap on one frame's payload *and* on a reassembled chunked
+/// message. Generous for image responses while keeping a corrupted
+/// length field from allocating gigabytes.
 pub const MAX_FRAME_LEN: usize = 64 << 20;
+/// Payload size above which a message is split into chunk frames (and
+/// the per-chunk payload size the splitter produces). Small enough
+/// that a writer releasing its lock between chunks never blocks a
+/// heartbeat behind more than one chunk's transfer time.
+pub const CHUNK_LEN: usize = 256 << 10;
 /// Fixed header size (see module docs for the layout).
 pub const HEADER_LEN: usize = 20;
+
+/// `ctrl` bit: frame is one chunk of a larger message.
+const CTRL_CHUNKED: u16 = 1 << 15;
+/// `ctrl` bit: last chunk of its message.
+const CTRL_FIN: u16 = 1 << 14;
+/// `ctrl` mask: chunk sequence number.
+const CTRL_SEQ_MASK: u16 = (1 << 14) - 1;
 
 /// Typed wire-level failure. `Closed` is the clean-EOF signal every
 /// reader loop must treat as "peer hung up", not as corruption.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum WireError {
-    /// The stream ended cleanly on a frame boundary.
+    /// The stream ended cleanly on a message boundary.
     Closed,
     /// The stream ended mid-frame (`got` of `want` bytes arrived).
     Truncated { got: usize, want: usize },
@@ -50,12 +88,18 @@ pub enum WireError {
     BadMagic { got: u32 },
     /// The peer speaks a different protocol version.
     VersionSkew { got: u16, want: u16 },
-    /// Reserved header bytes were non-zero (header corruption).
-    BadReserved { got: u16 },
+    /// The `ctrl` field is inconsistent (e.g. FIN or a sequence number
+    /// without the CHUNKED bit) — header corruption or a buggy peer.
+    BadControl { got: u16 },
     /// Declared payload length exceeds [`MAX_FRAME_LEN`].
     TooLarge { len: usize, max: usize },
     /// Checksum mismatch: a bit flipped in header or payload.
     Corrupt { want: u64, got: u64 },
+    /// A chunk arrived out of sequence (dropped or reordered frame).
+    ChunkOutOfOrder { want: u16, got: u16 },
+    /// The stream ended cleanly mid-chunk-run (`chunks` arrived, no
+    /// FIN) — the peer died between chunks of one message.
+    ChunkTruncated { chunks: u16 },
     /// Underlying I/O failure (connection reset, …).
     Io(String),
 }
@@ -75,8 +119,8 @@ impl fmt::Display for WireError {
                 write!(f, "wire version skew: peer speaks v{got}, \
                            this build speaks v{want}")
             }
-            WireError::BadReserved { got } => {
-                write!(f, "reserved frame header bytes set ({got:#06x})")
+            WireError::BadControl { got } => {
+                write!(f, "inconsistent frame control bits ({got:#06x})")
             }
             WireError::TooLarge { len, max } => {
                 write!(f, "frame payload of {len} bytes exceeds the \
@@ -85,6 +129,14 @@ impl fmt::Display for WireError {
             WireError::Corrupt { want, got } => {
                 write!(f, "frame checksum mismatch \
                            (header says {want:#018x}, computed {got:#018x})")
+            }
+            WireError::ChunkOutOfOrder { want, got } => {
+                write!(f, "chunk out of order (expected seq {want}, \
+                           got {got})")
+            }
+            WireError::ChunkTruncated { chunks } => {
+                write!(f, "stream ended mid-message ({chunks} chunk(s) \
+                           arrived, no final chunk)")
             }
             WireError::Io(msg) => write!(f, "wire i/o error: {msg}"),
         }
@@ -105,8 +157,9 @@ fn fnv1a(chunks: &[&[u8]]) -> u64 {
     h
 }
 
-/// Encode one frame (header + payload) into a fresh buffer.
-pub fn encode_frame(payload: &[u8]) -> Result<Vec<u8>, WireError> {
+/// Encode one frame (header + payload) with explicit control bits.
+pub(crate) fn encode_frame_ctrl(payload: &[u8], ctrl: u16)
+                                -> Result<Vec<u8>, WireError> {
     if payload.len() > MAX_FRAME_LEN {
         return Err(WireError::TooLarge {
             len: payload.len(),
@@ -116,7 +169,7 @@ pub fn encode_frame(payload: &[u8]) -> Result<Vec<u8>, WireError> {
     let mut buf = Vec::with_capacity(HEADER_LEN + payload.len());
     buf.extend_from_slice(&WIRE_MAGIC.to_be_bytes());
     buf.extend_from_slice(&WIRE_VERSION.to_be_bytes());
-    buf.extend_from_slice(&0u16.to_be_bytes());
+    buf.extend_from_slice(&ctrl.to_be_bytes());
     buf.extend_from_slice(&(payload.len() as u32).to_be_bytes());
     let sum = fnv1a(&[&buf[..12], payload]);
     buf.extend_from_slice(&sum.to_be_bytes());
@@ -124,14 +177,83 @@ pub fn encode_frame(payload: &[u8]) -> Result<Vec<u8>, WireError> {
     Ok(buf)
 }
 
-/// Write one frame to `w` (single `write_all` + flush, so frames from
-/// different threads stay atomic as long as callers serialize on the
-/// writer — the node/cluster writer mutex does).
+/// Encode one standalone frame (header + payload) into a fresh buffer.
+pub fn encode_frame(payload: &[u8]) -> Result<Vec<u8>, WireError> {
+    encode_frame_ctrl(payload, 0)
+}
+
+/// Frame layout for a message of `len` payload bytes: one `(byte
+/// range, ctrl)` entry per frame — a single standalone frame when it
+/// fits [`CHUNK_LEN`], a run of chunk entries (sequence numbers + FIN
+/// on the last) otherwise. Callers encode each frame *just before*
+/// writing it (`encode_frame_ctrl`, as the net layer's `send_message`
+/// does), so a multi-MiB message is never materialized a second
+/// time; chunks of *different* messages
+/// must not interleave, so multi-frame writers serialize on a
+/// per-connection bulk lock while releasing the frame lock between
+/// chunks.
+pub fn chunk_plan(len: usize)
+                  -> Result<Vec<(std::ops::Range<usize>, u16)>,
+                            WireError> {
+    if len > MAX_FRAME_LEN {
+        return Err(WireError::TooLarge { len, max: MAX_FRAME_LEN });
+    }
+    if len <= CHUNK_LEN {
+        return Ok(vec![(0..len, 0)]);
+    }
+    let n_chunks = (len + CHUNK_LEN - 1) / CHUNK_LEN;
+    debug_assert!(n_chunks <= CTRL_SEQ_MASK as usize,
+                  "MAX_FRAME_LEN / CHUNK_LEN must fit the seq field");
+    let mut out = Vec::with_capacity(n_chunks);
+    for seq in 0..n_chunks {
+        let start = seq * CHUNK_LEN;
+        let end = (start + CHUNK_LEN).min(len);
+        let mut ctrl = CTRL_CHUNKED | (seq as u16 & CTRL_SEQ_MASK);
+        if seq + 1 == n_chunks {
+            ctrl |= CTRL_FIN;
+        }
+        out.push((start..end, ctrl));
+    }
+    Ok(out)
+}
+
+/// Encode one message as ready-to-write frame buffers (the eager
+/// convenience over [`chunk_plan`] — fine for tests and single-writer
+/// streams; lock-sharing writers use the plan directly to avoid
+/// buffering every chunk at once).
+pub fn encode_chunks(payload: &[u8]) -> Result<Vec<Vec<u8>>, WireError> {
+    chunk_plan(payload.len())?
+        .into_iter()
+        .map(|(range, ctrl)| encode_frame_ctrl(&payload[range], ctrl))
+        .collect()
+}
+
+/// Write one pre-encoded frame buffer (from [`encode_frame`] /
+/// [`encode_chunks`]) to `w` and flush.
+pub fn write_encoded<W: Write>(w: &mut W, frame: &[u8])
+                               -> Result<(), WireError> {
+    w.write_all(frame).map_err(|e| WireError::Io(e.to_string()))?;
+    w.flush().map_err(|e| WireError::Io(e.to_string()))
+}
+
+/// Write one message as a single standalone frame (no chunking; errors
+/// `TooLarge` past [`MAX_FRAME_LEN`]). Single-writer convenience —
+/// concurrent writers with large payloads use [`encode_chunks`] and
+/// their own locking.
 pub fn write_frame<W: Write>(w: &mut W, payload: &[u8])
                              -> Result<(), WireError> {
     let buf = encode_frame(payload)?;
-    w.write_all(&buf).map_err(|e| WireError::Io(e.to_string()))?;
-    w.flush().map_err(|e| WireError::Io(e.to_string()))
+    write_encoded(w, &buf)
+}
+
+/// Write one message, chunking oversized payloads (single-writer
+/// convenience over [`encode_chunks`]).
+pub fn write_message<W: Write>(w: &mut W, payload: &[u8])
+                               -> Result<(), WireError> {
+    for frame in encode_chunks(payload)? {
+        write_encoded(w, &frame)?;
+    }
+    Ok(())
 }
 
 /// Fill `buf` from `r`; distinguishes clean close (zero bytes at
@@ -156,9 +278,10 @@ fn read_full<R: Read>(r: &mut R, buf: &mut [u8], already: usize,
     Ok(())
 }
 
-/// Read one frame's payload from `r`, validating magic, version,
-/// reserved bytes, length cap and checksum (in that order).
-pub fn read_frame<R: Read>(r: &mut R) -> Result<Vec<u8>, WireError> {
+/// Read one raw frame from `r`, validating magic, version, length cap
+/// and checksum (in that order); returns its control bits + payload.
+fn read_frame_raw<R: Read>(r: &mut R)
+                           -> Result<(u16, Vec<u8>), WireError> {
     let mut hdr = [0u8; HEADER_LEN];
     // the payload length is unknown until the header is parsed, so
     // `want` for a header-stage truncation is the header itself
@@ -174,9 +297,10 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Vec<u8>, WireError> {
             want: WIRE_VERSION,
         });
     }
-    let reserved = u16::from_be_bytes(hdr[6..8].try_into().unwrap());
-    if reserved != 0 {
-        return Err(WireError::BadReserved { got: reserved });
+    let ctrl = u16::from_be_bytes(hdr[6..8].try_into().unwrap());
+    if ctrl != 0 && ctrl & CTRL_CHUNKED == 0 {
+        // FIN or a seq number on a non-chunk frame: corruption
+        return Err(WireError::BadControl { got: ctrl });
     }
     let len = u32::from_be_bytes(hdr[8..12].try_into().unwrap()) as usize;
     if len > MAX_FRAME_LEN {
@@ -189,7 +313,95 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Vec<u8>, WireError> {
     if got_sum != want_sum {
         return Err(WireError::Corrupt { want: want_sum, got: got_sum });
     }
-    Ok(payload)
+    Ok((ctrl, payload))
+}
+
+/// Stateful message reader: reassembles chunk runs, hands interleaved
+/// standalone frames (heartbeats, typed errors) to the caller
+/// *immediately* — mid-reassembly state survives across calls, so a
+/// pong never waits behind a multi-chunk response. One per connection;
+/// any error poisons the partial state (the caller closes the stream
+/// on error anyway).
+#[derive(Default)]
+pub struct MessageReader {
+    /// In-progress reassembly: next expected seq + accumulated bytes.
+    partial: Option<(u16, Vec<u8>)>,
+}
+
+impl MessageReader {
+    pub fn new() -> MessageReader {
+        MessageReader { partial: None }
+    }
+
+    /// Read the next complete message from `r` (standalone frame, or
+    /// the final chunk completing a run — possibly started on an
+    /// earlier call).
+    pub fn read<R: Read>(&mut self, r: &mut R)
+                         -> Result<Vec<u8>, WireError> {
+        loop {
+            let (ctrl, payload) = match read_frame_raw(r) {
+                Ok(fp) => fp,
+                Err(WireError::Closed) => {
+                    // clean close is only clean on a message boundary
+                    return Err(match self.partial.take() {
+                        Some((next_seq, _)) => {
+                            WireError::ChunkTruncated { chunks: next_seq }
+                        }
+                        None => WireError::Closed,
+                    });
+                }
+                Err(e) => {
+                    self.partial = None;
+                    return Err(e);
+                }
+            };
+            if ctrl == 0 {
+                // standalone frames pass through even mid-reassembly
+                return Ok(payload);
+            }
+            let seq = ctrl & CTRL_SEQ_MASK;
+            let fin = ctrl & CTRL_FIN != 0;
+            let (next_seq, mut buf) = match self.partial.take() {
+                None => {
+                    if seq != 0 {
+                        return Err(WireError::ChunkOutOfOrder {
+                            want: 0,
+                            got: seq,
+                        });
+                    }
+                    (0u16, Vec::new())
+                }
+                Some((next_seq, buf)) => {
+                    if seq != next_seq {
+                        return Err(WireError::ChunkOutOfOrder {
+                            want: next_seq,
+                            got: seq,
+                        });
+                    }
+                    (next_seq, buf)
+                }
+            };
+            if buf.len() + payload.len() > MAX_FRAME_LEN {
+                return Err(WireError::TooLarge {
+                    len: buf.len() + payload.len(),
+                    max: MAX_FRAME_LEN,
+                });
+            }
+            buf.extend_from_slice(&payload);
+            if fin {
+                return Ok(buf);
+            }
+            self.partial = Some((next_seq + 1, buf));
+        }
+    }
+}
+
+/// Read one message from `r` (standalone or a full chunk run) with a
+/// throwaway [`MessageReader`] — for callers that own the whole stream
+/// (tests, handshakes). Long-lived connection loops keep their own
+/// `MessageReader` so partial chunk state survives interleaved frames.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Vec<u8>, WireError> {
+    MessageReader::new().read(r)
 }
 
 #[cfg(test)]
@@ -225,6 +437,97 @@ mod tests {
         assert_eq!(read_frame(&mut c).unwrap(), b"third frame");
         // clean EOF at the boundary is Closed, not Truncated
         assert_eq!(read_frame(&mut c).unwrap_err(), WireError::Closed);
+    }
+
+    #[test]
+    fn oversized_message_chunks_and_reassembles() {
+        // deterministic non-constant payload spanning several chunks,
+        // ending mid-chunk (the last chunk is shorter)
+        let n = 2 * CHUNK_LEN + CHUNK_LEN / 3 + 7;
+        let payload: Vec<u8> = (0..n).map(|i| (i * 31 % 251) as u8).collect();
+        let frames = encode_chunks(&payload).unwrap();
+        assert_eq!(frames.len(), 3);
+        let mut stream = Vec::new();
+        for f in &frames {
+            stream.extend_from_slice(f);
+        }
+        let back = read_frame(&mut Cursor::new(&stream)).unwrap();
+        assert_eq!(back, payload);
+        // write_message produces the same stream
+        let mut via_write = Vec::new();
+        write_message(&mut via_write, &payload).unwrap();
+        assert_eq!(via_write, stream);
+    }
+
+    #[test]
+    fn small_message_stays_one_frame() {
+        let frames = encode_chunks(b"small").unwrap();
+        assert_eq!(frames.len(), 1);
+        assert_eq!(frames[0], encode_frame(b"small").unwrap());
+    }
+
+    #[test]
+    fn standalone_frame_interleaves_between_chunks() {
+        // a pong squeezed between chunk 0 and chunk 1 must be
+        // delivered *first*, and the chunked message must still
+        // reassemble afterwards — this is the liveness property the
+        // chunking exists for
+        let big: Vec<u8> = vec![0xCD; CHUNK_LEN + 100];
+        let frames = encode_chunks(&big).unwrap();
+        assert_eq!(frames.len(), 2);
+        let mut stream = Vec::new();
+        stream.extend_from_slice(&frames[0]);
+        write_frame(&mut stream, b"pong!").unwrap();
+        stream.extend_from_slice(&frames[1]);
+        let mut c = Cursor::new(&stream);
+        let mut mr = MessageReader::new();
+        assert_eq!(mr.read(&mut c).unwrap(), b"pong!");
+        assert_eq!(mr.read(&mut c).unwrap(), big);
+        assert_eq!(mr.read(&mut c).unwrap_err(), WireError::Closed);
+    }
+
+    #[test]
+    fn chunk_out_of_order_is_typed() {
+        let big: Vec<u8> = vec![7; 2 * CHUNK_LEN + 10];
+        let frames = encode_chunks(&big).unwrap();
+        assert_eq!(frames.len(), 3);
+        // drop the middle chunk
+        let mut stream = Vec::new();
+        stream.extend_from_slice(&frames[0]);
+        stream.extend_from_slice(&frames[2]);
+        match read_frame(&mut Cursor::new(&stream)) {
+            Err(WireError::ChunkOutOfOrder { want: 1, got: 2 }) => {}
+            other => panic!("expected ChunkOutOfOrder, got {other:?}"),
+        }
+        // a run starting mid-sequence is equally typed
+        let mut stream = Vec::new();
+        stream.extend_from_slice(&frames[1]);
+        match read_frame(&mut Cursor::new(&stream)) {
+            Err(WireError::ChunkOutOfOrder { want: 0, got: 1 }) => {}
+            other => panic!("expected ChunkOutOfOrder, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn chunk_run_cut_clean_is_chunk_truncated() {
+        let big: Vec<u8> = vec![9; CHUNK_LEN + 50];
+        let frames = encode_chunks(&big).unwrap();
+        // stream ends cleanly after chunk 0 — a peer that died between
+        // chunks, not a clean message boundary
+        match read_frame(&mut Cursor::new(&frames[0])) {
+            Err(WireError::ChunkTruncated { chunks: 1 }) => {}
+            other => panic!("expected ChunkTruncated, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn encode_rejects_past_the_reassembly_cap() {
+        // the chunker refuses to build a message the reader would
+        // reject; a zeroed vec keeps this cheap
+        assert!(matches!(
+            encode_chunks(&vec![0u8; MAX_FRAME_LEN + 1]),
+            Err(WireError::TooLarge { .. })
+        ));
     }
 
     #[test]
@@ -279,12 +582,14 @@ mod tests {
             buf[at] ^= (g.usize_in(1, 255) as u8).max(1);
             match read_frame(&mut Cursor::new(&buf)) {
                 // which typed error depends on the field hit: magic,
-                // version, reserved, a length now pointing past the
-                // buffer (Truncated) or over the cap (TooLarge), or
-                // the checksum catch-all. Accepting the frame with the
-                // original payload can only happen if corruption made
-                // the length *smaller* and the checksum still matched —
-                // the checksum covers the length bytes, so never.
+                // version, control bits, a length now pointing past
+                // the buffer (Truncated) or over the cap (TooLarge),
+                // a ctrl flip that fakes a chunk run (ChunkOutOfOrder/
+                // ChunkTruncated), or the checksum catch-all.
+                // Accepting the frame with the original payload can
+                // only happen if corruption made the length *smaller*
+                // and the checksum still matched — the checksum covers
+                // the length bytes, so never.
                 Err(_) => Ok(()),
                 Ok(back) => Err(format!(
                     "corrupt byte {at} accepted ({} bytes back)",
@@ -297,10 +602,10 @@ mod tests {
     #[test]
     fn version_skew_is_named_before_checksum() {
         let mut buf = encode_frame(b"hello").unwrap();
-        // patch the version field (bytes 4..6) to v2
-        buf[4..6].copy_from_slice(&2u16.to_be_bytes());
+        // patch the version field (bytes 4..6) to a foreign version
+        buf[4..6].copy_from_slice(&9u16.to_be_bytes());
         match read_frame(&mut Cursor::new(&buf)) {
-            Err(WireError::VersionSkew { got: 2, want }) => {
+            Err(WireError::VersionSkew { got: 9, want }) => {
                 assert_eq!(want, WIRE_VERSION);
             }
             other => panic!("expected VersionSkew, got {other:?}"),
@@ -338,12 +643,17 @@ mod tests {
     }
 
     #[test]
-    fn reserved_bytes_must_be_zero() {
+    fn stray_control_bits_without_chunked_are_rejected() {
+        // FIN (bit 14) or a seq number set on a standalone frame is
+        // corruption, not a chunk
         let mut buf = encode_frame(b"hello").unwrap();
-        buf[6] = 0xAB;
+        buf[6..8].copy_from_slice(&CTRL_FIN.to_be_bytes());
+        // re-checksum so only the ctrl inconsistency can trip
+        let sum = fnv1a(&[&buf[..12], b"hello"]);
+        buf[12..20].copy_from_slice(&sum.to_be_bytes());
         assert!(matches!(
             read_frame(&mut Cursor::new(&buf)),
-            Err(WireError::BadReserved { .. })
+            Err(WireError::BadControl { .. })
         ));
     }
 

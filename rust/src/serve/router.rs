@@ -168,9 +168,11 @@ pub struct ServerStats {
     pub pending: u64,
     /// Cluster-level counters (zero for a purely local service):
     /// requests re-queued onto a surviving shard after their node was
-    /// lost, and shard nodes declared dead.
+    /// lost, shard nodes declared dead, and recovered shard nodes
+    /// re-admitted into placement.
     pub requeued: u64,
     pub nodes_lost: u64,
+    pub nodes_readmitted: u64,
     /// Dispatch counters sliced by ladder rung, aggregated over the
     /// workers (ascending by rung).
     pub rungs: Vec<RungStats>,
@@ -200,10 +202,13 @@ impl ServerStats {
             "slots: {} enqueued = {} dispatched + {} purged + {} pending",
             self.enqueued, self.dispatched, self.purged, self.pending
         );
-        if self.requeued > 0 || self.nodes_lost > 0 {
+        if self.requeued > 0 || self.nodes_lost > 0
+            || self.nodes_readmitted > 0
+        {
             println!(
-                "cluster: {} request(s) re-queued, {} node(s) lost",
-                self.requeued, self.nodes_lost
+                "cluster: {} request(s) re-queued, {} node(s) lost, \
+                 {} re-admitted",
+                self.requeued, self.nodes_lost, self.nodes_readmitted
             );
         }
         if self.calib_cache_hits + self.calib_cache_misses > 0 {
@@ -272,6 +277,7 @@ impl ServerStats {
         self.pending += o.pending;
         self.requeued += o.requeued;
         self.nodes_lost += o.nodes_lost;
+        self.nodes_readmitted += o.nodes_readmitted;
         for r in &o.rungs {
             let e = rung_entry(&mut self.rungs, r.rung);
             e.batches += r.batches;
@@ -598,6 +604,7 @@ impl RouterState {
             pending: self.batcher.pending() as u64,
             requeued: 0,
             nodes_lost: 0,
+            nodes_readmitted: 0,
             rungs,
             workers: self.workers.clone(),
         };

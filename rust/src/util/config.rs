@@ -198,6 +198,18 @@ pub struct RunConfig {
     /// whose last heartbeat is older than this is declared dead and
     /// its in-flight requests re-queued. Must exceed the heartbeat.
     pub node_timeout_ms: u64,
+    /// Cluster: dedicated control connection per shard for
+    /// ping/pong/stats (`--control-plane BOOL`, default true), so
+    /// liveness never queues behind multi-MiB response frames.
+    /// `false` is the pre-isolation shared-connection *topology*
+    /// (diagnostic baseline; both ends still run the same build).
+    pub control_plane: bool,
+    /// Cluster: consecutive pongs a reconnected shard must answer
+    /// before re-admission into placement (`--readmit-pongs K`).
+    pub readmit_pongs: u32,
+    /// Cluster: how often dead shards are re-dialed
+    /// (`--reconnect-ms N`).
+    pub reconnect_ms: u64,
 }
 
 impl Default for RunConfig {
@@ -222,6 +234,9 @@ impl Default for RunConfig {
             shards: None,
             heartbeat_ms: 500,
             node_timeout_ms: 2500,
+            control_plane: true,
+            readmit_pongs: 3,
+            reconnect_ms: 1000,
         }
     }
 }
@@ -273,6 +288,13 @@ impl RunConfig {
             node_timeout_ms: raw
                 .usize("node-timeout-ms", d.node_timeout_ms as usize)?
                 as u64,
+            control_plane: raw.bool("control-plane", d.control_plane)?,
+            readmit_pongs: raw
+                .usize("readmit-pongs", d.readmit_pongs as usize)?
+                as u32,
+            reconnect_ms: raw
+                .usize("reconnect-ms", d.reconnect_ms as usize)?
+                as u64,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -306,6 +328,13 @@ impl RunConfig {
                  healthy node dead",
                 self.node_timeout_ms, self.heartbeat_ms
             );
+        }
+        if self.readmit_pongs == 0 {
+            bail!("config `readmit-pongs`: must be at least 1 — zero \
+                   would re-admit a shard before it answered anything");
+        }
+        if self.reconnect_ms == 0 {
+            bail!("config `reconnect-ms`: must be at least 1");
         }
         Ok(())
     }
@@ -449,6 +478,10 @@ name = "full run"
                    "10.0.0.2:7070".to_string()][..])
         );
         assert_eq!((cfg.heartbeat_ms, cfg.node_timeout_ms), (100, 900));
+        // elasticity knobs default to isolated + recoverable
+        assert!(cfg.control_plane);
+        assert_eq!(cfg.readmit_pongs, 3);
+        assert_eq!(cfg.reconnect_ms, 1000);
         // an empty shard list is a config error, not "no shards"
         let c = RawConfig::parse("shards = ,").unwrap();
         let e = format!("{:#}", RunConfig::from_raw(&c).unwrap_err());
@@ -461,6 +494,28 @@ name = "full run"
         assert!(e.contains("node-timeout-ms"), "{e}");
         let c = RawConfig::parse("heartbeat-ms = 0").unwrap();
         assert!(RunConfig::from_raw(&c).is_err());
+    }
+
+    #[test]
+    fn control_plane_and_readmission_flags() {
+        let c = RawConfig::parse(
+            "control-plane = false\nreadmit-pongs = 5\n\
+             reconnect-ms = 250",
+        )
+        .unwrap();
+        let cfg = RunConfig::from_raw(&c).unwrap();
+        assert!(!cfg.control_plane);
+        assert_eq!(cfg.readmit_pongs, 5);
+        assert_eq!(cfg.reconnect_ms, 250);
+        // zero would re-admit untested shards / spin the re-dialer
+        for bad in ["readmit-pongs = 0", "reconnect-ms = 0"] {
+            let c = RawConfig::parse(bad).unwrap();
+            assert!(RunConfig::from_raw(&c).is_err(), "{bad}");
+        }
+        // malformed values error with the key and value
+        let c = RawConfig::parse("readmit-pongs = many").unwrap();
+        let e = format!("{:#}", RunConfig::from_raw(&c).unwrap_err());
+        assert!(e.contains("readmit-pongs") && e.contains("many"), "{e}");
     }
 
     #[test]
