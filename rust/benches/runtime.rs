@@ -11,10 +11,18 @@
 //! Smoke gates (no AOT artifacts, no PJRT — the CI steps):
 //! `TQDIT_BENCH_SMOKE=1` runs only the mock-backend adaptive-batching
 //! section; `TQDIT_NET_SMOKE=1` only the loopback cluster sections.
+//! `TQDIT_NET_REACTOR=1` flips the net sections onto the event-driven
+//! reactor transport (default: thread-per-connection) — CI runs both.
+//! The net sections also run a connection-capacity smoke (≥1k idle
+//! loopback connections on one reactor node, thread count O(workers))
+//! and write the serve scorecard to `BENCH_serve.json`, one section
+//! per transport mode: img/s, p95 latency, padding, connect cold-start
+//! ms, max concurrent connections.
 
 #[path = "common.rs"]
 mod common;
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
@@ -22,13 +30,17 @@ use std::time::Duration;
 use tq_dit::coordinator::pipeline::{Method, Pipeline};
 use tq_dit::coordinator::QuantConfig;
 use tq_dit::sampler::Sampler;
+use tq_dit::serve::net::reactor::{
+    process_thread_count, raise_nofile_limit,
+};
 use tq_dit::serve::{
     Cluster, ClusterOpts, GenBackend, GenRequest, GenServer,
-    HealthPolicy, NodeOpts, NodeServer, Router, RouterOpts, ServerStats,
-    WorkerBody, WorkerHandle,
+    HealthPolicy, NetClient, NetClientOpts, NodeOpts, NodeServer,
+    Router, RouterOpts, ServerStats, WorkerBody, WorkerHandle,
 };
 use tq_dit::tensor::Tensor;
 use tq_dit::util::bench::Bench;
+use tq_dit::util::json::Json;
 use tq_dit::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -42,10 +54,83 @@ fn main() -> anyhow::Result<()> {
         adaptive_batching_bench()?;
     }
     if full || net_smoke {
-        cluster_loopback_bench()?;
+        println!(
+            "\n== net transport: {} ==",
+            if reactor_mode() { "reactor" } else { "threaded" }
+        );
+        let metrics = cluster_loopback_bench()?;
         cluster_liveness_bench()?;
         cluster_flap_bench()?;
+        let max_conns = connection_count_bench()?;
+        write_serve_report(&metrics, max_conns)?;
     }
+    Ok(())
+}
+
+/// Transport mode for the net sections: `TQDIT_NET_REACTOR=1` flips
+/// them onto the poll-based reactor; default is thread-per-connection.
+fn reactor_mode() -> bool {
+    std::env::var("TQDIT_NET_REACTOR").as_deref() == Ok("1")
+}
+
+fn net_node_opts() -> NodeOpts {
+    NodeOpts { reactor: reactor_mode(), ..NodeOpts::default() }
+}
+
+fn net_cluster_opts() -> ClusterOpts {
+    ClusterOpts { reactor: reactor_mode(), ..ClusterOpts::default() }
+}
+
+/// The serve scorecard one net-smoke run produces (one transport mode).
+struct ServeMetrics {
+    img_per_s: f64,
+    latency_p95_s: f64,
+    padded_slots: u64,
+    batch_fill: f64,
+    /// `Cluster::connect` wall time: dials + handshakes + (reactor
+    /// mode) reactor spawn and connection registration.
+    cold_start_ms: f64,
+}
+
+/// Merge this run's section into `BENCH_serve.json` (next to the cargo
+/// manifest, so threaded and reactor CI steps land in one file).
+fn write_serve_report(m: &ServeMetrics, max_conns: usize)
+                      -> anyhow::Result<()> {
+    let path = match std::env::var("CARGO_MANIFEST_DIR") {
+        Ok(d) => std::path::PathBuf::from(d).join("BENCH_serve.json"),
+        Err(_) => std::path::PathBuf::from("BENCH_serve.json"),
+    };
+    let mut root = match std::fs::read_to_string(&path) {
+        Ok(text) => match Json::parse(&text) {
+            Ok(Json::Obj(o)) => o,
+            _ => BTreeMap::new(),
+        },
+        Err(_) => BTreeMap::new(),
+    };
+    let mut sec = BTreeMap::new();
+    sec.insert("img_per_s".to_string(), Json::Num(m.img_per_s));
+    sec.insert("latency_p95_s".to_string(), Json::Num(m.latency_p95_s));
+    sec.insert("padded_slots".to_string(),
+               Json::Num(m.padded_slots as f64));
+    sec.insert("batch_fill".to_string(), Json::Num(m.batch_fill));
+    sec.insert("cold_start_ms".to_string(), Json::Num(m.cold_start_ms));
+    sec.insert("max_concurrent_connections".to_string(),
+               Json::Num(max_conns as f64));
+    let mode = if reactor_mode() { "reactor" } else { "threaded" };
+    root.insert(mode.to_string(), Json::Obj(sec));
+    root.insert(
+        "note".to_string(),
+        Json::Str(
+            "written by the runtime bench net sections \
+             (TQDIT_NET_SMOKE=1; TQDIT_NET_REACTOR=1 for the reactor \
+             section)"
+                .to_string(),
+        ),
+    );
+    std::fs::write(&path, Json::Obj(root).dump()).map_err(|e| {
+        anyhow::anyhow!("writing {}: {e}", path.display())
+    })?;
+    println!("\nwrote {} ({mode} section)", path.display());
     Ok(())
 }
 
@@ -364,7 +449,7 @@ fn shaped_node_on(listen: &str, rungs: Vec<usize>, il: usize,
         body,
     );
     let node =
-        NodeServer::start(Box::new(router), listen, NodeOpts::default())?;
+        NodeServer::start(Box::new(router), listen, net_node_opts())?;
     let addr = node.addr().to_string();
     Ok((node, addr))
 }
@@ -381,7 +466,8 @@ fn shaped_node(rungs: Vec<usize>, il: usize, cost: Duration)
 /// `ServeError` — zero hangs — and slot conservation
 /// (`enqueued == dispatched + purged + pending`) must hold both on the
 /// cluster aggregate and on the per-node shutdown stats summed.
-fn cluster_loopback_bench() -> anyhow::Result<()> {
+/// Returns the scorecard for `BENCH_serve.json`.
+fn cluster_loopback_bench() -> anyhow::Result<ServeMetrics> {
     println!(
         "\ncross-node loopback (2 mock shard nodes, 5 ms/slot, kill one \
          at 40 ms):"
@@ -402,9 +488,11 @@ fn cluster_loopback_bench() -> anyhow::Result<()> {
             ..HealthPolicy::default()
         },
         reconnect: Duration::from_secs(3600),
-        ..ClusterOpts::default()
+        ..net_cluster_opts()
     };
+    let t_conn = std::time::Instant::now();
     let cluster = Cluster::connect(&[addr_a, addr_b], opts)?;
+    let cold_start_ms = 1e3 * t_conn.elapsed().as_secs_f64();
 
     let clients = 4usize;
     let per_client = 8usize;
@@ -504,7 +592,13 @@ fn cluster_loopback_bench() -> anyhow::Result<()> {
         summed.enqueued, summed.dispatched, summed.purged, summed.pending
     );
     println!("  -> all requests accounted for; conservation holds");
-    Ok(())
+    Ok(ServeMetrics {
+        img_per_s: agg.images as f64 / wall.max(1e-9),
+        latency_p95_s: agg.latency_p95_s,
+        padded_slots: summed.padded_slots,
+        batch_fill: summed.batch_fill,
+        cold_start_ms,
+    })
 }
 
 // ---- control-plane liveness: ~10 MiB responses, zero false deaths -----
@@ -552,7 +646,7 @@ fn cluster_liveness_bench() -> anyhow::Result<()> {
         body,
     );
     let node = NodeServer::start(Box::new(router), "127.0.0.1:0",
-                                 NodeOpts::default())?;
+                                 net_node_opts())?;
     let addr = node.addr().to_string();
     let cluster = Cluster::connect(
         &[addr],
@@ -563,7 +657,7 @@ fn cluster_liveness_bench() -> anyhow::Result<()> {
                 ..HealthPolicy::default()
             },
             reconnect: Duration::from_secs(3600),
-            ..ClusterOpts::default()
+            ..net_cluster_opts()
         },
     )?;
     let n_req = 3usize;
@@ -625,7 +719,7 @@ fn cluster_flap_bench() -> anyhow::Result<()> {
                 readmit_pongs: 3,
             },
             reconnect: Duration::from_millis(100),
-            ..ClusterOpts::default()
+            ..net_cluster_opts()
         },
     )?;
 
@@ -724,4 +818,72 @@ fn cluster_flap_bench() -> anyhow::Result<()> {
     );
     println!("  -> node flap healed in place; conservation holds");
     Ok(())
+}
+
+// ---- connection capacity: many idle clients, bounded threads ----------
+
+/// The C10k-class smoke gate: one shard node holding `target` idle
+/// loopback connections while still serving a multiplexed client, with
+/// process thread count O(workers) in reactor mode. The threaded
+/// transport necessarily spends one handler thread per connection, so
+/// its target is token-sized — the asymmetry *is* the measurement.
+/// Returns the max concurrent connections held.
+fn connection_count_bench() -> anyhow::Result<usize> {
+    let target: usize = if reactor_mode() { 1024 } else { 48 };
+    println!(
+        "\nconnection capacity ({target} idle loopback clients on one \
+         node):"
+    );
+    raise_nofile_limit(8192);
+    let before = process_thread_count().unwrap_or(0);
+    let body: Arc<WorkerBody> =
+        Arc::new(move |h: WorkerHandle| -> anyhow::Result<()> {
+            let mut b = ShapedBackend {
+                rungs: vec![1, 2, 4],
+                il: 4,
+                cost_per_slot: Duration::from_millis(1),
+            };
+            h.serve(&mut b)
+        });
+    let router = Router::start(
+        RouterOpts { workers: 1, ..RouterOpts::default() },
+        body,
+    );
+    let node = NodeServer::start(Box::new(router), "127.0.0.1:0",
+                                 net_node_opts())?;
+    let addr = node.addr().to_string();
+    let mut idle = Vec::with_capacity(target);
+    for i in 0..target {
+        idle.push(std::net::TcpStream::connect(&addr).map_err(|e| {
+            anyhow::anyhow!("connection {i}/{target} refused: {e}")
+        })?);
+    }
+    // the node must keep serving with every idle connection held open
+    let client = NetClient::connect(&addr, NetClientOpts::default())?;
+    let (_, rx) = client
+        .submit(GenRequest { class: 3, n: 2 })
+        .map_err(|e| anyhow::anyhow!("submit under load: {e}"))?;
+    rx.recv_timeout(Duration::from_secs(30))
+        .map_err(|_| {
+            anyhow::anyhow!(
+                "request hung under {target} idle connections")
+        })?
+        .map_err(|e| anyhow::anyhow!("request failed under load: {e}"))?;
+    let during = process_thread_count().unwrap_or(0);
+    let held = idle.len() + 1;
+    println!(
+        "  {held} connections held, threads {before} -> {during}, \
+         service alive"
+    );
+    if reactor_mode() {
+        anyhow::ensure!(
+            during < before + 50,
+            "thread count grew O(connections): {before} -> {during}"
+        );
+        println!("  -> O(workers) threads at {held} connections");
+    }
+    drop(idle);
+    client.shutdown();
+    node.shutdown();
+    Ok(held)
 }

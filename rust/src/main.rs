@@ -21,6 +21,7 @@
 //!   --batch-ladder A,B,C --linger-ms N (serve batch policy)
 //!   --shards A,B --heartbeat-ms N --node-timeout-ms N
 //!   --control-plane BOOL --readmit-pongs K --reconnect-ms N (cluster)
+//!   --reactor BOOL --max-conns N (serve/node transport)
 //!   --config FILE (TOML-subset, overridden by CLI flags)
 
 use std::time::Duration;
@@ -120,6 +121,12 @@ FLAGS (all subcommands)
                         shard re-enters placement       [3]
   --reconnect-ms N      cluster: how often dead shards are re-dialed
                         for re-admission                [1000]
+  --reactor BOOL        serve/node: event-driven transport — one poll(2)
+                        reactor thread owns every connection instead of
+                        one handler thread each; both transports speak
+                        the same wire protocol          [false]
+  --max-conns N         node: accepted-connection cap in reactor mode
+                        (refused at accept past the cap)     [4096]
   --stats-json PATH     serve/node: dump final ServerStats (local or
                         cluster-aggregated) as canonical JSON on
                         shutdown (node: needs a bounded --run-secs)
@@ -316,11 +323,17 @@ fn cmd_node(cfg: RunConfig, args: &Args) -> Result<()> {
     let stats_json = args.get("stats-json").map(str::to_string);
     let method = Method::parse(args.str_or("method", "tq-dit"))
         .ok_or_else(|| anyhow::anyhow!("unknown --method"))?;
+    let node_opts = NodeOpts {
+        reactor: cfg.reactor,
+        max_conns: cfg.max_conns,
+        ..NodeOpts::default()
+    };
     let server = GenServer::with_workers(cfg, method, workers);
-    let node =
-        NodeServer::start(Box::new(server), &listen, NodeOpts::default())?;
-    println!("shard node listening on {} ({} worker(s), method {})",
-             node.addr(), workers, method.name());
+    let node = NodeServer::start(Box::new(server), &listen, node_opts)?;
+    println!("shard node listening on {} ({} worker(s), method {}, {} \
+              transport)",
+             node.addr(), workers, method.name(),
+             if node_opts.reactor { "reactor" } else { "threaded" });
     if run_secs == 0 {
         if stats_json.is_some() {
             // no signal handling offline: an unbounded run ends by

@@ -39,6 +39,11 @@ pub enum ServeError {
     /// message, response channel torn down without a result) — the
     /// connection and the rest of the service keep going.
     Protocol { cause: String },
+    /// The caller-supplied per-request deadline elapsed before a
+    /// response arrived. The request may still complete server-side;
+    /// only the waiting is over (multiplexing clients drop the late
+    /// response when it lands).
+    Deadline { after_ms: u64 },
 }
 
 impl fmt::Display for ServeError {
@@ -70,6 +75,9 @@ impl fmt::Display for ServeError {
             }
             ServeError::Protocol { cause } => {
                 write!(f, "wire protocol violation: {cause}")
+            }
+            ServeError::Deadline { after_ms } => {
+                write!(f, "request deadline exceeded after {after_ms} ms")
             }
         }
     }
@@ -108,5 +116,12 @@ mod tests {
         let s = ServeError::Protocol { cause: "bad frame".into() }
             .to_string();
         assert!(s.contains("bad frame"), "{s}");
+    }
+
+    #[test]
+    fn deadline_reports_the_budget() {
+        let s = ServeError::Deadline { after_ms: 250 }.to_string();
+        assert!(s.contains("250"), "{s}");
+        assert!(s.contains("deadline"), "{s}");
     }
 }

@@ -7,13 +7,16 @@
 //!
 //! ```text
 //! clients ──submit──▶ Cluster ── data plane ──▶ NodeServer ─┐  (remote,
-//!    │                  │ (least-loaded shard,    per-conn  │ serve/net)
-//!    │                  │  chunked frames,        handlers  │
-//!    │                  │  re-queue on node loss)           │
+//!    │                  │ (least-loaded shard,   reactor or │ serve/net)
+//!    │                  │  binary image frames,  per-conn   │
+//!    │                  │  re-queue on node loss) handlers  │
 //!    │                  └─ control plane (Hello{role}) ──▶──┤
-//!    │                     ping/pong/stats only; health     │
-//!    │                     Alive→Suspect→Dead→Probation→    │
-//!    │                     Alive (reconnect + re-admission) ▼
+//!    │                     ping/pong + pushed stats deltas; │
+//!    │                     health Alive→Suspect→Dead→       │
+//!    │                     Probation→Alive (re-admission)   ▼
+//!    │   both ends event-driven at --reactor: one poll(2)
+//!    │   thread per process owns every connection, timer
+//!    │   wheel drives heartbeats and request deadlines
 //!    └──────────────── in-process (GenServer) ──────▶ Router
 //!                                                          │
 //!                     Batcher (FIFO slots, arrival times, counters)
@@ -106,7 +109,10 @@ pub mod server;
 pub use batcher::{Batcher, BatcherCounters, Slot};
 pub use dispatch::Dispatch;
 pub use error::ServeError;
-pub use net::{Cluster, ClusterOpts, HealthPolicy, NodeOpts, NodeServer};
+pub use net::{
+    Cluster, ClusterOpts, HealthPolicy, NetClient, NetClientOpts,
+    NodeOpts, NodeServer,
+};
 pub use policy::{BatchPlan, BatchPolicy, Ladder};
 pub use router::{
     GenBackend, GenRequest, GenResponse, GenResult, Router, RouterOpts,

@@ -1,0 +1,634 @@
+//! Multiplexing node client: one reactor-backed connection, many
+//! in-flight requests, per-request deadlines.
+//!
+//! The PR 4 client shape was implicit — callers owned a socket and a
+//! reader thread per connection. [`NetClient`] replaces that with the
+//! serve boundary's event-driven discipline: a single data-plane
+//! connection driven by a [`Reactor`], request ids multiplexing any
+//! number of in-flight submits over it, and an optional per-request
+//! deadline that fails the *waiting* — never the connection — with a
+//! typed [`ServeError::Deadline`]. A response landing after its
+//! deadline fired is dropped silently (the request may well have
+//! completed server-side; only the caller stopped waiting).
+//!
+//! What this deliberately is not: a [`Dispatch`](crate::serve::Dispatch)
+//! implementation. The cluster is the `Dispatch`-shaped frontend with
+//! placement, health and failover; `NetClient` is the thin per-node
+//! SDK — one shard address, no liveness pings (the deadline is the
+//! caller's hang protection), typed errors for everything else.
+
+use std::collections::HashMap;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::serve::error::ServeError;
+use crate::serve::net::proto::{Msg, Role, WIRE_BINARY};
+use crate::serve::net::reactor::{
+    Ctl, Driver, Handle, Reactor, ReactorOpts, Token,
+};
+use crate::serve::net::wire::{write_frame, WireError};
+use crate::serve::router::{
+    GenRequest, GenResponse, GenResult, ServerStats,
+};
+use crate::util::bench::percentile;
+use crate::{debug_log, warn_log};
+
+/// Client tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct NetClientOpts {
+    /// Bound on the blocking connect + handshake.
+    pub connect_timeout: Duration,
+    /// Shutdown patience: how long `shutdown` waits for in-flight
+    /// requests before failing them typed.
+    pub drain: Duration,
+}
+
+impl Default for NetClientOpts {
+    fn default() -> Self {
+        NetClientOpts {
+            connect_timeout: Duration::from_secs(5),
+            drain: Duration::from_secs(30),
+        }
+    }
+}
+
+/// One outstanding request.
+struct ClientPending {
+    tx: Sender<GenResult>,
+    n: usize,
+    t0: Instant,
+    /// Deadline budget in ms, when one was set (carried into the
+    /// typed error so the caller sees what elapsed).
+    deadline_ms: Option<u64>,
+}
+
+struct ClientState {
+    open: bool,
+    closing: bool,
+    /// The one connection's token (`None` until `on_open`, and again
+    /// after loss — there is no reconnect; callers make a new client).
+    token: Option<Token>,
+    pending: HashMap<u64, ClientPending>,
+    requests: u64,
+    failed_requests: u64,
+    latencies: Vec<f64>,
+    latency_count: u64,
+    /// First terminal connection failure (colors later submits).
+    lost: Option<String>,
+}
+
+struct ClientShared {
+    addr: String,
+    state: Mutex<ClientState>,
+    /// Signaled on delivery, connection open/loss and teardown.
+    changed: Condvar,
+    reactor: OnceLock<Handle<()>>,
+}
+
+impl ClientShared {
+    fn lock(&self) -> std::sync::MutexGuard<'_, ClientState> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Fail every pending request with `err()`; shared by loss,
+    /// shutdown stragglers and drop.
+    fn fail_all(&self, err: impl Fn() -> ServeError) {
+        let mut st = self.lock();
+        let ids: Vec<u64> = st.pending.keys().copied().collect();
+        for id in ids {
+            if let Some(p) = st.pending.remove(&id) {
+                st.failed_requests += 1;
+                let _ = p.tx.send(Err(err()));
+            }
+        }
+        drop(st);
+        self.changed.notify_all();
+    }
+}
+
+/// Handle to one shard node over one multiplexed connection. `Sync`:
+/// any number of threads submit through a shared reference.
+pub struct NetClient {
+    shared: Arc<ClientShared>,
+    next_id: AtomicU64,
+    reactor: Option<Reactor>,
+    opts: NetClientOpts,
+    t_start: Instant,
+}
+
+/// The client's [`Driver`]: route responses to their waiters, fire
+/// deadlines, fail everything typed on loss. Timer keys are request
+/// ids (unique per client, so a fired key whose request already
+/// resolved is inert).
+struct ClientDriver {
+    shared: Arc<ClientShared>,
+}
+
+impl Driver for ClientDriver {
+    type Tag = ();
+
+    fn accept_tag(&mut self, _listener: Token,
+                  _peer: std::net::SocketAddr) {
+        // zero listeners: nothing accepts
+    }
+
+    fn on_open(&mut self, _ctl: &mut Ctl<'_>, token: Token, _tag: ()) {
+        let mut st = self.shared.lock();
+        st.token = Some(token);
+        drop(st);
+        self.shared.changed.notify_all();
+    }
+
+    fn on_message(&mut self, _ctl: &mut Ctl<'_>, _token: Token,
+                  payload: Vec<u8>) {
+        let msg = match Msg::decode(&payload) {
+            Ok(m) => m,
+            Err(e) => {
+                warn_log!("client: {}: skipping bad message: {e:#}",
+                          self.shared.addr);
+                return;
+            }
+        };
+        match msg {
+            Msg::Response { id, images, .. } => {
+                complete(&self.shared, id, Ok(images));
+            }
+            Msg::ErrorResp { id, err } => {
+                complete(&self.shared, id, Err(err));
+            }
+            Msg::HelloAck { wire } => {
+                debug_log!("client: {}: wire level {wire} acknowledged",
+                           self.shared.addr);
+            }
+            Msg::Reject { err } => {
+                // connection-level refusal: remember the cause (the
+                // close that follows fails the in-flight requests)
+                let mut st = self.shared.lock();
+                st.lost
+                    .get_or_insert(format!("node rejected the \
+                                            connection: {err}"));
+            }
+            other => {
+                debug_log!("client: {}: ignoring {} message",
+                           self.shared.addr, other.kind());
+            }
+        }
+    }
+
+    fn on_close(&mut self, _ctl: &mut Ctl<'_>, token: Token,
+                cause: WireError) {
+        let closing;
+        let cause = {
+            let mut st = self.shared.lock();
+            if st.token == Some(token) {
+                st.token = None;
+            }
+            closing = st.closing;
+            st.lost
+                .get_or_insert_with(|| match &cause {
+                    WireError::Closed => "connection closed".into(),
+                    e => e.to_string(),
+                })
+                .clone()
+        };
+        if !closing {
+            warn_log!("client: {}: connection lost: {cause}",
+                      self.shared.addr);
+        }
+        self.shared.fail_all(|| ServeError::NodeLost {
+            cause: format!("{}: {cause}", self.shared.addr),
+        });
+    }
+
+    fn on_timer(&mut self, _ctl: &mut Ctl<'_>, key: u64) {
+        // a deadline fired: if the request still waits, stop the wait
+        // (the node may still answer — that response is then dropped)
+        let mut st = self.shared.lock();
+        let Some(p) = st.pending.remove(&key) else { return };
+        st.failed_requests += 1;
+        let after_ms = p.deadline_ms.unwrap_or(0);
+        let _ = p.tx.send(Err(ServeError::Deadline { after_ms }));
+        drop(st);
+        self.shared.changed.notify_all();
+    }
+}
+
+/// Deliver a terminal outcome for request `id`; a request whose
+/// deadline already fired is gone from `pending` — late response
+/// dropped, as documented.
+fn complete(shared: &ClientShared, id: u64,
+            outcome: std::result::Result<Vec<f32>, ServeError>) {
+    let mut st = shared.lock();
+    let Some(p) = st.pending.remove(&id) else {
+        debug_log!("client: late/duplicate answer for request {id} \
+                    dropped");
+        return;
+    };
+    let latency_s = p.t0.elapsed().as_secs_f64();
+    match outcome {
+        Ok(images) => {
+            // reborrow: field-splitting doesn't reach through the guard
+            let stm = &mut *st;
+            crate::serve::router::push_latency(
+                &mut stm.latencies, &mut stm.latency_count, latency_s);
+            let _ = p.tx.send(Ok(GenResponse { id, images, latency_s }));
+        }
+        Err(err) => {
+            st.failed_requests += 1;
+            let _ = p.tx.send(Err(err));
+        }
+    }
+    drop(st);
+    shared.changed.notify_all();
+}
+
+impl NetClient {
+    /// Connect to a shard node's data plane. The blocking dial and
+    /// `Hello` handshake happen here, bounded by
+    /// [`NetClientOpts::connect_timeout`]; everything after is
+    /// event-driven.
+    pub fn connect(addr: &str, opts: NetClientOpts) -> Result<NetClient> {
+        use std::net::ToSocketAddrs;
+        let mut found = None;
+        let mut last_err = None;
+        for target in addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving {addr}"))?
+        {
+            match TcpStream::connect_timeout(&target,
+                                             opts.connect_timeout) {
+                Ok(s) => {
+                    found = Some(s);
+                    break;
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        let Some(mut stream) = found else {
+            let e = last_err.map_or_else(
+                || "no resolvable address".to_string(),
+                |e| e.to_string(),
+            );
+            anyhow::bail!("connecting to node {addr}: {e}");
+        };
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_write_timeout(Some(opts.connect_timeout));
+        let hello = Msg::Hello { role: Role::Data,
+                                 max_wire: WIRE_BINARY };
+        write_frame(&mut stream, &hello.encode())
+            .map_err(|e| anyhow::anyhow!("{addr}: handshake: {e}"))?;
+        let shared = Arc::new(ClientShared {
+            addr: addr.to_string(),
+            state: Mutex::new(ClientState {
+                open: true,
+                closing: false,
+                token: None,
+                pending: HashMap::new(),
+                requests: 0,
+                failed_requests: 0,
+                latencies: Vec::new(),
+                latency_count: 0,
+                lost: None,
+            }),
+            changed: Condvar::new(),
+            reactor: OnceLock::new(),
+        });
+        let driver = ClientDriver { shared: Arc::clone(&shared) };
+        let (reactor, handle, _) =
+            Reactor::spawn(driver, Vec::new(), ReactorOpts::default())
+                .context("spawning client reactor")?;
+        let _ = shared.reactor.set(handle.clone());
+        if !handle.register(stream, ()) {
+            anyhow::bail!("client reactor stopped during connect");
+        }
+        // wait (bounded) for the token: submits route through it
+        {
+            let deadline = Instant::now() + opts.connect_timeout;
+            let mut st = shared.lock();
+            while st.token.is_none() {
+                let now = Instant::now();
+                if now >= deadline {
+                    anyhow::bail!(
+                        "{addr}: reactor registration timed out");
+                }
+                let (g, _) = shared
+                    .changed
+                    .wait_timeout(st, deadline - now)
+                    .unwrap_or_else(|p| p.into_inner());
+                st = g;
+            }
+        }
+        Ok(NetClient {
+            shared,
+            next_id: AtomicU64::new(0),
+            reactor: Some(reactor),
+            opts,
+            t_start: Instant::now(),
+        })
+    }
+
+    /// Submit with no deadline: the response channel resolves when the
+    /// node answers or the connection dies (typed, never a hang).
+    pub fn submit(&self, req: GenRequest)
+                  -> std::result::Result<(u64, Receiver<GenResult>),
+                                         ServeError> {
+        self.submit_inner(req, None)
+    }
+
+    /// Submit with a per-request deadline: if no response arrives in
+    /// `deadline`, the waiter gets [`ServeError::Deadline`] and a late
+    /// response is dropped. The connection is unaffected — other
+    /// in-flight requests keep waiting on their own terms.
+    pub fn submit_with_deadline(&self, req: GenRequest,
+                                deadline: Duration)
+                                -> std::result::Result<
+                                    (u64, Receiver<GenResult>),
+                                    ServeError> {
+        self.submit_inner(req, Some(deadline))
+    }
+
+    fn submit_inner(&self, req: GenRequest, deadline: Option<Duration>)
+                    -> std::result::Result<(u64, Receiver<GenResult>),
+                                           ServeError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        let token = {
+            let mut st = self.shared.lock();
+            if !st.open {
+                return Err(ServeError::ShuttingDown);
+            }
+            let Some(token) = st.token else {
+                return Err(ServeError::NodeLost {
+                    cause: format!(
+                        "{}: {}",
+                        self.shared.addr,
+                        st.lost
+                            .as_deref()
+                            .unwrap_or("connection closed")
+                    ),
+                });
+            };
+            st.requests += 1;
+            if req.n == 0 {
+                // nothing to compute: complete immediately, no wire
+                let _ = tx.send(Ok(GenResponse {
+                    id,
+                    images: Vec::new(),
+                    latency_s: 0.0,
+                }));
+                return Ok((id, rx));
+            }
+            st.pending.insert(id, ClientPending {
+                tx,
+                n: req.n,
+                t0: Instant::now(),
+                deadline_ms: deadline
+                    .map(|d| d.as_millis().min(u64::MAX as u128) as u64),
+            });
+            token
+        };
+        let handle = self
+            .shared
+            .reactor
+            .get()
+            .expect("set during connect");
+        let msg = Msg::Submit { id, class: req.class, n: req.n };
+        if !handle.send(token, msg.encode()) {
+            // reactor gone: fail this one typed, right now
+            let mut st = self.shared.lock();
+            if let Some(p) = st.pending.remove(&id) {
+                st.failed_requests += 1;
+                let _ = p.tx.send(Err(ServeError::NodeLost {
+                    cause: format!("{}: client reactor stopped",
+                                   self.shared.addr),
+                }));
+            }
+            return Ok((id, rx));
+        }
+        if let Some(d) = deadline {
+            handle.timer(Instant::now() + d, id);
+        }
+        Ok((id, rx))
+    }
+
+    /// Image slots submitted but not yet resolved.
+    pub fn queue_depth(&self) -> usize {
+        self.shared.lock().pending.values().map(|p| p.n).sum()
+    }
+
+    /// Client-side stats overlay: request/failure counts and
+    /// end-to-end latency percentiles. (Node-side counters live on the
+    /// node; ask it, or the cluster, for those.)
+    pub fn stats(&self) -> ServerStats {
+        let st = self.shared.lock();
+        let mut s = ServerStats {
+            requests: st.requests,
+            failed_requests: st.failed_requests,
+            wall_s: self.t_start.elapsed().as_secs_f64(),
+            ..ServerStats::default()
+        };
+        let mut lat = st.latencies.clone();
+        lat.sort_by(f64::total_cmp);
+        s.latency_p50_s = percentile(&lat, 0.50);
+        s.latency_p95_s = percentile(&lat, 0.95);
+        s
+    }
+
+    /// Stop accepting, wait (bounded by [`NetClientOpts::drain`]) for
+    /// in-flight requests, fail stragglers typed, and return the
+    /// client-side stats.
+    pub fn shutdown(mut self) -> ServerStats {
+        {
+            let mut st = self.shared.lock();
+            st.open = false;
+        }
+        let deadline = Instant::now() + self.opts.drain;
+        {
+            let mut st = self.shared.lock();
+            while !st.pending.is_empty() && st.token.is_some() {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (g, _) = self
+                    .shared
+                    .changed
+                    .wait_timeout(st, deadline - now)
+                    .unwrap_or_else(|p| p.into_inner());
+                st = g;
+            }
+        }
+        self.shared.fail_all(|| ServeError::ShuttingDown);
+        self.teardown();
+        self.stats()
+    }
+
+    fn teardown(&mut self) {
+        {
+            let mut st = self.shared.lock();
+            st.closing = true;
+        }
+        self.shared.changed.notify_all();
+        if let Some(h) = self.shared.reactor.get() {
+            h.stop();
+        }
+        if let Some(r) = self.reactor.take() {
+            r.join();
+        }
+    }
+}
+
+impl Drop for NetClient {
+    /// A client dropped without `shutdown` still fails its in-flight
+    /// requests typed and joins the reactor — never a stranded waiter.
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.lock();
+            st.open = false;
+        }
+        self.shared.fail_all(|| ServeError::ShuttingDown);
+        self.teardown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::net::node::NodeOpts;
+    use crate::serve::net::testutil::{mock_node, mock_node_opts};
+
+    fn recv_ok(rx: &Receiver<GenResult>) -> GenResponse {
+        rx.recv_timeout(Duration::from_secs(20))
+            .expect("no hang")
+            .expect("request must succeed")
+    }
+
+    #[test]
+    fn client_multiplexes_many_inflight_requests_on_one_socket() {
+        // reactor node + reactor client: binary responses end to end,
+        // ten requests in flight over the one connection
+        let nopts = NodeOpts { reactor: true, ..NodeOpts::default() };
+        let (node, addr) = mock_node_opts(
+            vec![1, 2, 4], 3, Duration::from_millis(5), nopts);
+        let client = NetClient::connect(&addr.to_string(),
+                                        NetClientOpts::default())
+            .unwrap();
+        let mut rxs = Vec::new();
+        for i in 0..10usize {
+            let class = (i % 4) as i32;
+            let n = 1 + i % 3;
+            let (_, rx) =
+                client.submit(GenRequest { class, n }).unwrap();
+            rxs.push((class, n, rx));
+        }
+        assert!(client.queue_depth() > 0,
+                "submits must be in flight concurrently");
+        for (class, n, rx) in rxs {
+            let resp = recv_ok(&rx);
+            assert_eq!(resp.images.len(), n * 3);
+            assert!(resp.images.iter().all(|&p| p == class as f32),
+                    "wrong pixels for class {class}");
+        }
+        let cs = client.shutdown();
+        assert_eq!(cs.requests, 10);
+        assert_eq!(cs.failed_requests, 0);
+        let st = node.shutdown();
+        assert_eq!(st.requests, 10);
+        assert_eq!(st.enqueued,
+                   st.dispatched + st.purged + st.pending);
+    }
+
+    #[test]
+    fn client_deadline_fails_typed_then_connection_keeps_serving() {
+        // slow backend: the deadline fires first; the connection (and
+        // a later, patient request) is unaffected
+        let (node, addr) =
+            mock_node(vec![1, 2], 2, Duration::from_millis(150));
+        let client = NetClient::connect(&addr.to_string(),
+                                        NetClientOpts::default())
+            .unwrap();
+        let (_, rx) = client
+            .submit_with_deadline(GenRequest { class: 1, n: 2 },
+                                  Duration::from_millis(30))
+            .unwrap();
+        match rx.recv_timeout(Duration::from_secs(10)).expect("no hang") {
+            Err(ServeError::Deadline { after_ms: 30 }) => {}
+            other => panic!("expected Deadline, got {other:?}"),
+        }
+        // the late response for the first request is dropped silently;
+        // a patient second request still completes on the same socket
+        let (_, rx) = client
+            .submit_with_deadline(GenRequest { class: 2, n: 1 },
+                                  Duration::from_secs(30))
+            .unwrap();
+        let resp = recv_ok(&rx);
+        assert!(resp.images.iter().all(|&p| p == 2.0));
+        let cs = client.shutdown();
+        assert_eq!(cs.requests, 2);
+        assert_eq!(cs.failed_requests, 1);
+        node.shutdown();
+    }
+
+    #[test]
+    fn client_connection_loss_fails_pending_typed() {
+        let (node, addr) =
+            mock_node(vec![2], 2, Duration::from_millis(100));
+        let client = NetClient::connect(&addr.to_string(),
+                                        NetClientOpts::default())
+            .unwrap();
+        let (_, rx) =
+            client.submit(GenRequest { class: 1, n: 2 }).unwrap();
+        std::thread::sleep(Duration::from_millis(10));
+        node.sever_connections();
+        match rx.recv_timeout(Duration::from_secs(10)).expect("no hang") {
+            Err(ServeError::NodeLost { cause }) => {
+                assert!(cause.contains(&addr.to_string()), "{cause}");
+            }
+            other => panic!("expected NodeLost, got {other:?}"),
+        }
+        // later submits fail fast with the recorded cause
+        match client.submit(GenRequest { class: 0, n: 1 }) {
+            Err(ServeError::NodeLost { .. }) => {}
+            other => panic!("expected NodeLost reject, got {other:?}"),
+        }
+        client.shutdown();
+        node.shutdown();
+    }
+
+    #[test]
+    fn client_zero_image_request_completes_without_wire_traffic() {
+        let (node, addr) = mock_node(vec![2], 2, Duration::ZERO);
+        let client = NetClient::connect(&addr.to_string(),
+                                        NetClientOpts::default())
+            .unwrap();
+        let (id, rx) =
+            client.submit(GenRequest { class: 1, n: 0 }).unwrap();
+        let resp = recv_ok(&rx);
+        assert_eq!(resp.id, id);
+        assert!(resp.images.is_empty());
+        client.shutdown();
+        node.shutdown();
+    }
+
+    #[test]
+    fn dropped_client_fails_pending_typed() {
+        let (node, addr) =
+            mock_node(vec![2], 2, Duration::from_millis(100));
+        let client = NetClient::connect(&addr.to_string(),
+                                        NetClientOpts::default())
+            .unwrap();
+        let (_, rx) =
+            client.submit(GenRequest { class: 1, n: 2 }).unwrap();
+        drop(client);
+        match rx.recv_timeout(Duration::from_secs(10)).expect("no hang") {
+            Err(ServeError::ShuttingDown) => {}
+            other => panic!("expected ShuttingDown, got {other:?}"),
+        }
+        node.shutdown();
+    }
+}

@@ -54,13 +54,29 @@
 //! connection *epoch*, bumped on every reconnect: a reader thread from
 //! a previous connection reporting its death late cannot kill the
 //! replacement.
+//!
+//! **Reactor mode** ([`ClusterOpts::reactor`]): the same protocol,
+//! health machine and re-queue semantics, but the per-shard reader
+//! threads and the monitor thread collapse into one
+//! [`super::reactor::Reactor`]. Frames arrive as `Driver::on_message`
+//! callbacks keyed by the shard/plane/epoch tag each registered
+//! connection carries; the heartbeat + stall-probe + expiry sweep runs
+//! as a reactor timer (the stall watermark reads the reactor's own
+//! per-connection byte counter instead of a [`CountingReader`]); and
+//! writes route through the reactor handle, pings and stats requests
+//! on the ctrl-priority lane. Shard stats arrive as
+//! [`Msg::StatsDelta`] pushes folded into the per-shard cumulative
+//! snapshot instead of snapshot-on-request polling (the poll fallback
+//! stays for nodes that push nothing). Blocking dials remain
+//! quarantined on the reconnector thread, which hands connected
+//! streams to the reactor instead of spawning readers.
 
 use std::collections::HashMap;
 use std::io::Read;
-use std::net::TcpStream;
+use std::net::{SocketAddr, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -69,7 +85,10 @@ use anyhow::{bail, Context, Result};
 use crate::serve::dispatch::Dispatch;
 use crate::serve::error::ServeError;
 use crate::serve::net::health::{Health, HealthPolicy, ShardState};
-use crate::serve::net::proto::{Msg, Role};
+use crate::serve::net::proto::{Msg, Role, WIRE_BINARY};
+use crate::serve::net::reactor::{
+    Ctl, Driver, Handle, Reactor, ReactorOpts, Token,
+};
 use crate::serve::net::wire::{write_frame, MessageReader, WireError};
 use crate::serve::router::{
     GenRequest, GenResponse, GenResult, ServerStats,
@@ -95,6 +114,11 @@ pub struct ClusterOpts {
     /// How often the reconnector re-dials a dead shard
     /// (`--reconnect-ms`).
     pub reconnect: Duration,
+    /// Drive every shard connection from one poll-based reactor
+    /// thread instead of per-connection reader threads + a monitor
+    /// thread (`--reactor`). Same protocol, health machine and
+    /// re-queue semantics either way.
+    pub reactor: bool,
 }
 
 impl Default for ClusterOpts {
@@ -104,6 +128,7 @@ impl Default for ClusterOpts {
             max_queue: 16384,
             control_plane: true,
             reconnect: Duration::from_millis(1000),
+            reactor: false,
         }
     }
 }
@@ -122,6 +147,7 @@ impl ClusterOpts {
             },
             control_plane: cfg.control_plane,
             reconnect: Duration::from_millis(cfg.reconnect_ms),
+            reactor: cfg.reactor,
             ..ClusterOpts::default()
         }
     }
@@ -169,6 +195,15 @@ struct ClusterState {
     stats_seen: Vec<u64>,
     stats_want: u64,
     ping_seq: u64,
+    /// Reactor mode: the live token per shard and plane (`None` =
+    /// dead, or dialed but not yet through the reactor's `on_open`).
+    data_token: Vec<Option<Token>>,
+    ctrl_token: Vec<Option<Token>>,
+    /// Reactor mode: the epoch whose delta stream last fed
+    /// `last_stats[i]` — while it trails `epoch[i]`, the heartbeat
+    /// polls full snapshots as a fallback (threaded nodes and the
+    /// shared-connection topology push no deltas).
+    delta_epoch: Vec<u64>,
 }
 
 /// One shard's write halves. `data` carries submits (and, with the
@@ -215,6 +250,9 @@ struct ClusterShared {
     changed: Condvar,
     /// Reader threads, spawned per (re)connect; reaped on teardown.
     readers: Mutex<Vec<JoinHandle<()>>>,
+    /// Reactor mode: the cross-thread mailbox into the reactor, set
+    /// once right after spawn (empty in threaded mode).
+    reactor: OnceLock<Handle<ClusterTag>>,
     opts: ClusterOpts,
 }
 
@@ -231,6 +269,8 @@ pub struct Cluster {
     next_id: AtomicU64,
     monitor: Option<JoinHandle<()>>,
     reconnector: Option<JoinHandle<()>>,
+    /// Reactor mode: the event loop to join on teardown.
+    reactor: Option<Reactor>,
     t_start: Instant,
 }
 
@@ -301,7 +341,10 @@ fn dial(addr: &str, role: Role, deadline: Duration)
     };
     let _ = stream.set_nodelay(true);
     let _ = stream.set_write_timeout(Some(deadline));
-    write_frame(&mut stream, &Msg::Hello { role }.encode()).map_err(
+    // advertise binary-response support: `Msg::decode` routes marked
+    // payloads on any reader, so both transport modes can take them
+    let hello = Msg::Hello { role, max_wire: WIRE_BINARY };
+    write_frame(&mut stream, &hello.encode()).map_err(
         |e| std::io::Error::new(std::io::ErrorKind::BrokenPipe,
                                 e.to_string()),
     )?;
@@ -340,16 +383,21 @@ impl Cluster {
         for (i, addr) in addrs.iter().enumerate() {
             let conn = ShardConn::empty();
             match dial_shard(addr, &opts).and_then(|(data, ctrl)| {
+                if opts.reactor {
+                    // the reactor owns each stream outright: no read
+                    // clones, no write halves in `ShardConn`
+                    return Ok((None, None, data, ctrl));
+                }
                 let data_rd = data.try_clone()?;
                 let ctrl_rd = match &ctrl {
                     Some(c) => Some(c.try_clone()?),
                     None => None,
                 };
-                Ok((data, ctrl, data_rd, ctrl_rd))
+                Ok((Some(data), ctrl, data_rd, ctrl_rd))
             }) {
-                Ok((data, ctrl, data_rd, ctrl_rd)) => {
-                    *conn.data.lock().unwrap() = Some(data);
-                    *conn.ctrl.lock().unwrap() = ctrl;
+                Ok((data_wr, ctrl_wr, data_rd, ctrl_rd)) => {
+                    *conn.data.lock().unwrap() = data_wr;
+                    *conn.ctrl.lock().unwrap() = ctrl_wr;
                     epoch[i] = 1;
                     reader_specs.push((i, data_rd, Role::Data));
                     if let Some(c) = ctrl_rd {
@@ -401,11 +449,54 @@ impl Cluster {
                 stats_seen: vec![0; n],
                 stats_want: 0,
                 ping_seq: 0,
+                data_token: vec![None; n],
+                ctrl_token: vec![None; n],
+                delta_epoch: vec![0; n],
             }),
             changed: Condvar::new(),
             readers: Mutex::new(Vec::new()),
+            reactor: OnceLock::new(),
             opts,
         });
+        // the reconnector runs in both modes: it is the one thread
+        // blocking dials are quarantined on (a black-holed address can
+        // never stall the event loop or a submit)
+        let rec_shared = Arc::clone(&shared);
+        let spawn_reconnector = || {
+            std::thread::Builder::new()
+                .name("tqdit-net-reconnect".into())
+                .spawn(move || reconnector_loop(rec_shared))
+                .context("spawning cluster reconnector thread")
+        };
+        if opts.reactor {
+            let driver = ClusterDriver {
+                shared: Arc::clone(&shared),
+                tokens: HashMap::new(),
+            };
+            let (reactor, handle, _) =
+                Reactor::spawn(driver, Vec::new(),
+                               ReactorOpts::default())
+                    .context("spawning cluster reactor")?;
+            let _ = shared.reactor.set(handle.clone());
+            for (i, stream, plane) in reader_specs {
+                let ep = shared.lock().epoch[i];
+                let tag = ClusterTag { shard: i, plane, epoch: ep };
+                if !handle.register(stream, tag) {
+                    bail!("cluster reactor stopped during connect");
+                }
+            }
+            wait_registered(&shared);
+            handle.timer(Instant::now() + opts.health.heartbeat,
+                         HEARTBEAT_TIMER);
+            return Ok(Cluster {
+                shared,
+                next_id: AtomicU64::new(0),
+                monitor: None,
+                reconnector: Some(spawn_reconnector()?),
+                reactor: Some(reactor),
+                t_start: Instant::now(),
+            });
+        }
         for (i, stream, plane) in reader_specs {
             let ep = shared.lock().epoch[i];
             spawn_reader(&shared, i, ep, stream, plane)?;
@@ -415,16 +506,12 @@ impl Cluster {
             .name("tqdit-net-monitor".into())
             .spawn(move || monitor_loop(mon_shared))
             .context("spawning cluster monitor thread")?;
-        let rec_shared = Arc::clone(&shared);
-        let reconnector = std::thread::Builder::new()
-            .name("tqdit-net-reconnect".into())
-            .spawn(move || reconnector_loop(rec_shared))
-            .context("spawning cluster reconnector thread")?;
         Ok(Cluster {
             shared,
             next_id: AtomicU64::new(0),
             monitor: Some(monitor),
-            reconnector: Some(reconnector),
+            reconnector: Some(spawn_reconnector()?),
+            reactor: None,
             t_start: Instant::now(),
         })
     }
@@ -641,6 +728,14 @@ impl Cluster {
             st.closing = true;
         }
         self.shared.changed.notify_all();
+        // reactor mode: stopping the loop drops every connection;
+        // `closing` is already set, so nothing reads that as a loss
+        if let Some(h) = self.shared.reactor.get() {
+            h.stop();
+        }
+        if let Some(r) = self.reactor.take() {
+            r.join();
+        }
         for conn in &self.shared.conns {
             conn.close();
         }
@@ -754,6 +849,9 @@ fn aggregate(st: &ClusterState, wall_s: f64) -> ServerStats {
 /// lost-node path.
 fn send_data(shared: &ClusterShared, shard: usize, msg: &Msg)
              -> std::result::Result<(), String> {
+    if shared.opts.reactor {
+        return reactor_send(shared, shard, msg, Role::Data);
+    }
     let conn = &shared.conns[shard];
     crate::serve::net::send_message(&conn.data, &conn.bulk,
                                     &msg.encode())
@@ -767,6 +865,9 @@ fn send_control(shared: &ClusterShared, shard: usize, msg: &Msg)
     if !shared.opts.control_plane {
         return send_data(shared, shard, msg);
     }
+    if shared.opts.reactor {
+        return reactor_send(shared, shard, msg, Role::Control);
+    }
     let mut g = shared.conns[shard]
         .ctrl
         .lock()
@@ -775,6 +876,37 @@ fn send_control(shared: &ClusterShared, shard: usize, msg: &Msg)
         return Err("control connection already closed".into());
     };
     write_frame(stream, &msg.encode()).map_err(|e| e.to_string())
+}
+
+/// Reactor-mode send: look up the shard's live token for `plane` and
+/// route the encoded message through the reactor handle — bulk lane
+/// for data traffic, ctrl-priority for the control plane. The gap
+/// between a dial and its `on_open` surfaces as a typed error, which
+/// callers treat like any other dead-connection write.
+fn reactor_send(shared: &ClusterShared, shard: usize, msg: &Msg,
+                plane: Role) -> std::result::Result<(), String> {
+    let Some(handle) = shared.reactor.get() else {
+        return Err("cluster reactor not started".into());
+    };
+    let token = {
+        let st = shared.lock();
+        match plane {
+            Role::Data => st.data_token[shard],
+            Role::Control => st.ctrl_token[shard],
+        }
+    };
+    let Some(token) = token else {
+        return Err(format!("{} connection not open", plane.name()));
+    };
+    let ok = match plane {
+        Role::Data => handle.send(token, msg.encode()),
+        Role::Control => handle.send_ctrl(token, msg.encode()),
+    };
+    if ok {
+        Ok(())
+    } else {
+        Err("cluster reactor stopped".into())
+    }
 }
 
 /// Deliver a terminal outcome for request `id` (from whichever shard
@@ -792,8 +924,10 @@ fn complete(shared: &ClusterShared, id: u64,
     let latency_s = p.t0.elapsed().as_secs_f64();
     match outcome {
         Ok(images) => {
+            // reborrow: field-splitting doesn't reach through the guard
+            let stm = &mut *st;
             crate::serve::router::push_latency(
-                &mut st.latencies, &mut st.latency_count, latency_s);
+                &mut stm.latencies, &mut stm.latency_count, latency_s);
             let _ = p.tx.send(Ok(GenResponse { id, images, latency_s }));
         }
         Err(err) => {
@@ -920,6 +1054,23 @@ fn shard_lost(shared: &ClusterShared, shard: usize, epoch: u64,
 /// (The remaining instruction-wide window self-heals: a clipped
 /// probation connection just falls back to Dead and is re-dialed.)
 fn close_if_epoch(shared: &ClusterShared, i: usize, ep: u64) {
+    if shared.opts.reactor {
+        // handle-requested closes fire no `on_close`, so taking the
+        // tokens here is the whole cleanup
+        let (data, ctrl) = {
+            let mut st = shared.lock();
+            if st.epoch[i] != ep {
+                return;
+            }
+            (st.data_token[i].take(), st.ctrl_token[i].take())
+        };
+        if let Some(h) = shared.reactor.get() {
+            for t in [data, ctrl].into_iter().flatten() {
+                h.close(t);
+            }
+        }
+        return;
+    }
     let still_ours = shared.lock().epoch[i] == ep;
     if still_ours {
         shared.conns[i].close();
@@ -1033,6 +1184,14 @@ fn reader_loop<R: Read>(shared: Arc<ClusterShared>, shard: usize,
                 }
                 drop(st);
                 shared.changed.notify_all();
+            }
+            Msg::HelloAck { wire } => {
+                debug_log!("cluster: shard {}: wire level {wire} \
+                            acknowledged", shared.addrs[shard]);
+            }
+            Msg::StatsDelta { .. } => {
+                // delta pushes are the reactor frontend's diet; the
+                // threaded reader polls full snapshots instead
             }
             other => {
                 warn_log!("cluster: shard {}: skipping unexpected {} \
@@ -1228,6 +1387,35 @@ fn try_reconnect(shared: &Arc<ClusterShared>, i: usize) {
             return;
         }
     };
+    if shared.opts.reactor {
+        // flip to Probation under the fresh epoch *before* handing the
+        // streams over: `on_open` records tokens only while the tag's
+        // epoch is current, so a register landing after yet another
+        // death is quietly dropped
+        let epoch = {
+            let mut st = shared.lock();
+            if st.closing || st.health.state(i) != ShardState::Dead {
+                return;
+            }
+            st.epoch[i] += 1;
+            st.health.begin_probation(i, Instant::now());
+            st.epoch[i]
+        };
+        warn_log!("cluster: shard {addr} reconnected; probing before \
+                   re-admission");
+        let Some(handle) = shared.reactor.get() else { return };
+        let mut ok = handle.register(
+            data, ClusterTag { shard: i, plane: Role::Data, epoch });
+        if let Some(c) = ctrl {
+            ok &= handle.register(
+                c, ClusterTag { shard: i, plane: Role::Control, epoch });
+        }
+        if !ok {
+            // failed revival, same as a reader-spawn failure
+            shard_lost(shared, i, epoch, "cluster reactor stopped");
+        }
+        return;
+    }
     let (data_rd, ctrl_rd) = match (
         data.try_clone(),
         ctrl.as_ref().map(TcpStream::try_clone).transpose(),
@@ -1278,10 +1466,402 @@ fn try_reconnect(shared: &Arc<ClusterShared>, i: usize) {
     }
 }
 
+// ---------------------------------------------------------------------
+// Reactor mode
+
+/// Timer key of the heartbeat sweep — the cluster driver's only timer.
+const HEARTBEAT_TIMER: u64 = 0;
+
+/// Connection identity carried through `Handle::register`: which
+/// shard, which plane, and the epoch the dial was made under — the
+/// reactor-mode twin of the `(shard, epoch, plane)` triple each
+/// threaded reader thread closes over. Stale epochs make a late
+/// `on_open` or loss report inert, exactly like the threaded path.
+#[derive(Clone, Copy, Debug)]
+struct ClusterTag {
+    shard: usize,
+    plane: Role,
+    epoch: u64,
+}
+
+/// Fold one [`Msg::StatsDelta`] push into a shard's accumulated
+/// snapshot: counters add, gauges and the rung/worker breakdowns stay
+/// absolute — the exact inverse of the node's `stats_delta` (the two
+/// must agree on which fields are counters). The first push on a
+/// connection carries full cumulative values, so an empty accumulator
+/// starts from the push itself; the conservation identity `enqueued ==
+/// dispatched + purged + pending` holds on every folded value because
+/// each one equals the node's cumulative counters at push time.
+fn stats_fold(acc: &ServerStats, d: &ServerStats) -> ServerStats {
+    let mut next = d.clone();
+    next.requests = acc.requests + d.requests;
+    next.images = acc.images + d.images;
+    next.batches = acc.batches + d.batches;
+    next.padded_slots = acc.padded_slots + d.padded_slots;
+    next.failed_requests = acc.failed_requests + d.failed_requests;
+    next.dropped_responses =
+        acc.dropped_responses + d.dropped_responses;
+    next.calib_cache_hits = acc.calib_cache_hits + d.calib_cache_hits;
+    next.calib_cache_misses =
+        acc.calib_cache_misses + d.calib_cache_misses;
+    next.enqueued = acc.enqueued + d.enqueued;
+    next.dispatched = acc.dispatched + d.dispatched;
+    next.purged = acc.purged + d.purged;
+    next.requeued = acc.requeued + d.requeued;
+    next.nodes_lost = acc.nodes_lost + d.nodes_lost;
+    next.nodes_readmitted = acc.nodes_readmitted + d.nodes_readmitted;
+    next
+}
+
+/// Block (bounded) until the reactor's `on_open` has recorded tokens
+/// for every shard dialed at connect — placement and heartbeats route
+/// by token, so the first submit must not race the registration
+/// handoff into a spurious node loss. A shard whose registration never
+/// lands (reactor died) is declared lost the normal way.
+fn wait_registered(shared: &Arc<ClusterShared>) {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let missing = |st: &ClusterState, i: usize| {
+        st.data_token[i].is_none()
+            || (shared.opts.control_plane && st.ctrl_token[i].is_none())
+    };
+    let mut st = shared.lock();
+    loop {
+        let any = st
+            .health
+            .serving_indices()
+            .into_iter()
+            .any(|i| missing(&st, i));
+        let now = Instant::now();
+        if !any || now >= deadline {
+            break;
+        }
+        let (g, _) = shared
+            .changed
+            .wait_timeout(st, deadline - now)
+            .unwrap_or_else(|p| p.into_inner());
+        st = g;
+    }
+    let stragglers: Vec<(usize, u64)> = st
+        .health
+        .serving_indices()
+        .into_iter()
+        .filter(|&i| missing(&st, i))
+        .map(|i| (i, st.epoch[i]))
+        .collect();
+    drop(st);
+    for (i, ep) in stragglers {
+        shard_lost(shared, i, ep, "reactor registration timed out");
+    }
+}
+
+/// The cluster frontend's [`Driver`]: `reader_loop` and `monitor_loop`
+/// re-expressed as callbacks on one reactor thread. Callbacks only
+/// decode, update shared state and enqueue writes — compute lives on
+/// the nodes, blocking dials on the reconnector thread.
+struct ClusterDriver {
+    shared: Arc<ClusterShared>,
+    /// Live token → identity (reactor-thread local). Entries for
+    /// connections closed through the handle (which fires no
+    /// `on_close`) are pruned by the heartbeat sweep once their epoch
+    /// is outrun.
+    tokens: HashMap<Token, ClusterTag>,
+}
+
+impl Driver for ClusterDriver {
+    type Tag = ClusterTag;
+
+    fn accept_tag(&mut self, _listener: Token, _peer: SocketAddr)
+                  -> ClusterTag {
+        // the cluster reactor runs zero listeners; nothing accepts
+        ClusterTag { shard: usize::MAX, plane: Role::Data, epoch: 0 }
+    }
+
+    fn on_open(&mut self, ctl: &mut Ctl<'_>, token: Token,
+               tag: ClusterTag) {
+        let stale = {
+            let mut st = self.shared.lock();
+            if st.closing || tag.shard >= st.epoch.len()
+                || st.epoch[tag.shard] != tag.epoch
+            {
+                true
+            } else {
+                match tag.plane {
+                    Role::Data => {
+                        st.data_token[tag.shard] = Some(token)
+                    }
+                    Role::Control => {
+                        st.ctrl_token[tag.shard] = Some(token)
+                    }
+                }
+                false
+            }
+        };
+        if stale {
+            // a dial the epoch outran (the shard died again, or
+            // teardown started): drop it without a loss report
+            ctl.close(token);
+            return;
+        }
+        self.tokens.insert(token, tag);
+        self.shared.changed.notify_all();
+    }
+
+    fn on_message(&mut self, _ctl: &mut Ctl<'_>, token: Token,
+                  payload: Vec<u8>) {
+        let Some(&tag) = self.tokens.get(&token) else { return };
+        let shared = Arc::clone(&self.shared);
+        let shard = tag.shard;
+        // a bad message in a good frame degrades that message only
+        let msg = match Msg::decode(&payload) {
+            Ok(m) => m,
+            Err(e) => {
+                warn_log!("cluster: shard {}: skipping bad message: \
+                           {e:#}",
+                          shared.addrs[shard]);
+                return;
+            }
+        };
+        match msg {
+            Msg::Response { id, images, .. } => {
+                complete(&shared, id, Ok(images));
+            }
+            Msg::ErrorResp { id, err } => {
+                complete(&shared, id, Err(err));
+            }
+            Msg::Pong { queue_depth, live_workers, ready_workers, .. } => {
+                // same liveness discipline as the threaded reader:
+                // with the control plane isolated, only control pongs
+                // count as evidence — the data-plane pong exists to
+                // move bytes for the stall probe
+                if tag.plane == Role::Data && shared.opts.control_plane {
+                    return;
+                }
+                let mut st = shared.lock();
+                if st.epoch[shard] != tag.epoch {
+                    return; // stale connection's pong
+                }
+                let readmitted = st.health.pong(
+                    shard, queue_depth, live_workers, ready_workers,
+                    Instant::now());
+                if readmitted {
+                    st.nodes_readmitted += 1;
+                    warn_log!("cluster: shard {} re-admitted after {} \
+                               consecutive pong(s); ramping placement \
+                               back up",
+                              shared.addrs[shard],
+                              shared.opts.health.readmit_pongs);
+                    drop(st);
+                    shared.changed.notify_all();
+                }
+            }
+            Msg::Stats { seq, stats } => {
+                let mut st = shared.lock();
+                // a snapshot racing the shard's death must not
+                // resurrect the cleared entry; stale epochs equally so
+                if st.epoch[shard] == tag.epoch
+                    && st.health.shard(shard).serving()
+                {
+                    st.last_stats[shard] = Some(stats);
+                    st.stats_seen[shard] =
+                        st.stats_seen[shard].max(seq);
+                }
+                drop(st);
+                shared.changed.notify_all();
+            }
+            Msg::StatsDelta { stats } => {
+                let mut st = shared.lock();
+                if st.epoch[shard] == tag.epoch
+                    && st.health.shard(shard).serving()
+                {
+                    let folded = match st.last_stats[shard].take() {
+                        Some(acc) => stats_fold(&acc, &stats),
+                        None => stats,
+                    };
+                    st.last_stats[shard] = Some(folded);
+                    // the delta stream is live: the heartbeat stops
+                    // polling full snapshots for this epoch
+                    st.delta_epoch[shard] = tag.epoch;
+                }
+                drop(st);
+                shared.changed.notify_all();
+            }
+            Msg::HelloAck { wire } => {
+                debug_log!("cluster: shard {}: wire level {wire} \
+                            acknowledged", shared.addrs[shard]);
+            }
+            Msg::Reject { err } => {
+                // the node refused this connection outright (e.g. it
+                // could not staff a handler for it)
+                shard_lost(&shared, shard, tag.epoch,
+                           &format!("node rejected the connection: \
+                                     {err}"));
+            }
+            other => {
+                warn_log!("cluster: shard {}: skipping unexpected {} \
+                           message",
+                          shared.addrs[shard], other.kind());
+            }
+        }
+    }
+
+    fn on_close(&mut self, _ctl: &mut Ctl<'_>, token: Token,
+                cause: WireError) {
+        let Some(tag) = self.tokens.remove(&token) else { return };
+        {
+            let mut st = self.shared.lock();
+            let slot = match tag.plane {
+                Role::Data => &mut st.data_token[tag.shard],
+                Role::Control => &mut st.ctrl_token[tag.shard],
+            };
+            if *slot == Some(token) {
+                *slot = None;
+            }
+        }
+        let cause = match cause {
+            WireError::Closed => "connection closed".to_string(),
+            e => e.to_string(),
+        };
+        // `shard_lost` owns the dedup: stale epochs and already-dead
+        // shards no-op, probation deaths fall back without a loss
+        shard_lost(&self.shared, tag.shard, tag.epoch, &cause);
+    }
+
+    fn on_timer(&mut self, ctl: &mut Ctl<'_>, key: u64) {
+        if key != HEARTBEAT_TIMER {
+            return;
+        }
+        // one `monitor_loop` body: ping, stall-probe, expire — then
+        // reschedule. `closing` ends the cadence with no reschedule.
+        let shared = Arc::clone(&self.shared);
+        let heartbeat = shared.opts.health.heartbeat;
+        struct Target {
+            shard: usize,
+            epoch: u64,
+            data: Option<Token>,
+            ctrl: Option<Token>,
+            want_stats: bool,
+        }
+        let (seq, stats_seq, targets) = {
+            let mut st = shared.lock();
+            if st.closing {
+                return;
+            }
+            st.ping_seq += 1;
+            st.stats_want += 1;
+            // prune identities their epoch has outrun (closed through
+            // the handle, so no `on_close` removed them)
+            self.tokens.retain(|_, t| {
+                st.epoch.get(t.shard).copied() == Some(t.epoch)
+            });
+            let targets: Vec<Target> = st
+                .health
+                .ping_targets()
+                .into_iter()
+                .map(|i| Target {
+                    shard: i,
+                    epoch: st.epoch[i],
+                    data: st.data_token[i],
+                    ctrl: st.ctrl_token[i],
+                    // poll full snapshots until this epoch's delta
+                    // stream starts (threaded nodes never push one)
+                    want_stats: st.delta_epoch[i] != st.epoch[i],
+                })
+                .collect();
+            (st.ping_seq, st.stats_want, targets)
+        };
+        let ping = Msg::Ping { seq }.encode();
+        let stats_req = Msg::StatsReq { seq: stats_seq }.encode();
+        let mut lost: Vec<(usize, u64, String)> = Vec::new();
+        for t in &targets {
+            // liveness pings ride the control plane (or the data
+            // connection's ctrl-priority lane when the plane is off).
+            // A shard mid-registration has no token yet: skip it —
+            // expiry covers a handoff that never completes.
+            let ping_tok = if shared.opts.control_plane {
+                t.ctrl
+            } else {
+                t.data
+            };
+            if let Some(tok) = ping_tok {
+                if let Err(e) = ctl.send_ctrl(tok, &ping) {
+                    lost.push((t.shard, t.epoch,
+                               format!("heartbeat write failed: {e}")));
+                    continue;
+                }
+                if t.want_stats {
+                    let _ = ctl.send_ctrl(tok, &stats_req);
+                }
+            }
+            if shared.opts.control_plane {
+                if let Some(tok) = t.data {
+                    if let Err(e) = ctl.send_ctrl(tok, &ping) {
+                        lost.push((t.shard, t.epoch,
+                                   format!("data-plane heartbeat \
+                                            write failed: {e}")));
+                    }
+                }
+            }
+        }
+        // stall probe: the reactor's own read counter replaces the
+        // threaded path's `CountingReader` watermark (it resets per
+        // connection, which reads as progress — correct: a fresh
+        // connection gets a fresh clock)
+        if shared.opts.control_plane {
+            let stall = data_stall_deadline(shared.opts.health.timeout);
+            let stalled: Vec<(usize, u64)> = {
+                let mut st = shared.lock();
+                let now = Instant::now();
+                let mut out = Vec::new();
+                for i in st.health.serving_indices() {
+                    let Some(tok) = st.data_token[i] else { continue };
+                    let bytes = ctl.bytes_in(tok);
+                    let (last_bytes, since) = st.data_progress[i];
+                    if bytes != last_bytes || st.inflight[i] == 0 {
+                        st.data_progress[i] = (bytes, now);
+                    } else if now.saturating_duration_since(since)
+                        > stall
+                    {
+                        out.push((i, st.epoch[i]));
+                    }
+                }
+                out
+            };
+            for (i, ep) in stalled {
+                lost.push((i, ep,
+                           format!("data plane stalled: requests in \
+                                    flight but zero bytes read for \
+                                    > {stall:?}")));
+            }
+        }
+        let expired: Vec<(usize, u64)> = {
+            let mut st = shared.lock();
+            let now = Instant::now();
+            st.health.tick(now);
+            st.health
+                .expired(now)
+                .into_iter()
+                .map(|i| (i, st.epoch[i]))
+                .collect()
+        };
+        let timeout = shared.opts.health.timeout;
+        for (i, ep) in expired {
+            lost.push((i, ep,
+                       format!("heartbeat timeout (> {timeout:?})")));
+        }
+        for (i, ep, cause) in lost {
+            shard_lost(&shared, i, ep, &cause);
+        }
+        ctl.set_timer(ctl.now() + heartbeat, HEARTBEAT_TIMER);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::serve::net::testutil::{mock_node, mock_node_at};
+    use crate::serve::net::node::NodeOpts;
+    use crate::serve::net::testutil::{
+        mock_node, mock_node_at, mock_node_opts,
+    };
     use std::net::TcpListener;
 
     /// Fast heartbeats so pongs flow promptly, but a *generous*
@@ -1733,5 +2313,252 @@ mod tests {
         assert!(format!("{err:#}").contains("no shard node reachable"),
                 "{err:#}");
         assert!(Cluster::connect(&[], fast_opts()).is_err());
+    }
+
+    // -- reactor-mode frontend -----------------------------------------
+
+    /// [`fast_opts`] on the reactor transport.
+    fn reactor_opts() -> ClusterOpts {
+        ClusterOpts { reactor: true, ..fast_opts() }
+    }
+
+    /// A reactor-mode node with a prompt stats-push cadence.
+    fn reactor_node_opts() -> NodeOpts {
+        NodeOpts {
+            reactor: true,
+            stats_push: Duration::from_millis(20),
+            ..NodeOpts::default()
+        }
+    }
+
+    #[test]
+    fn reactor_cluster_serves_mixed_load_end_to_end() {
+        // both ends event-driven: reactor frontend, reactor nodes,
+        // binary response payloads negotiated on every data plane
+        let (node_a, addr_a) = mock_node_opts(
+            vec![1, 2, 4], 3, Duration::from_millis(2),
+            reactor_node_opts());
+        let (node_b, addr_b) = mock_node_opts(
+            vec![1, 2, 4], 3, Duration::from_millis(2),
+            reactor_node_opts());
+        let cluster = Cluster::connect(
+            &[addr_a.to_string(), addr_b.to_string()],
+            reactor_opts(),
+        )
+        .unwrap();
+        let mut rxs = Vec::new();
+        let mut total = 0usize;
+        for i in 0..12usize {
+            let n = 1 + i % 4;
+            total += n;
+            let class = (i % 7) as i32;
+            let (_, rx) =
+                cluster.submit(GenRequest { class, n }).unwrap();
+            rxs.push((class, n, rx));
+        }
+        for (class, n, rx) in rxs {
+            let resp = recv_ok(&rx);
+            assert_eq!(resp.images.len(), n * 3);
+            assert!(
+                resp.images.iter().all(|&p| p == class as f32),
+                "cross-shard pixel mixup for class {class}"
+            );
+        }
+        let agg = cluster.shutdown();
+        assert_eq!(agg.requests, 12);
+        assert_eq!(agg.failed_requests, 0);
+        assert_eq!(agg.nodes_lost, 0);
+        assert_eq!(agg.images as usize, total);
+        assert_eq!(agg.enqueued,
+                   agg.dispatched + agg.purged + agg.pending);
+        let st_a = node_a.shutdown();
+        let st_b = node_b.shutdown();
+        assert!(st_a.requests > 0 && st_b.requests > 0,
+                "one shard starved: {} / {}", st_a.requests,
+                st_b.requests);
+        assert_eq!(st_a.images + st_b.images, agg.images);
+    }
+
+    #[test]
+    fn reactor_severed_node_requeues_inflight_to_survivor() {
+        // the PR 5 re-queue regression on the reactor path (threaded
+        // nodes on purpose: the matrix's mixed half)
+        let (node_a, addr_a) =
+            mock_node(vec![1, 2, 4], 2, Duration::from_millis(20));
+        let (node_b, addr_b) =
+            mock_node(vec![1, 2, 4], 2, Duration::from_millis(20));
+        let cluster = Cluster::connect(
+            &[addr_a.to_string(), addr_b.to_string()],
+            reactor_opts(),
+        )
+        .unwrap();
+        let mut rxs = Vec::new();
+        for i in 0..8usize {
+            let class = (1 + i % 5) as i32;
+            let (_, rx) =
+                cluster.submit(GenRequest { class, n: 2 }).unwrap();
+            rxs.push((class, rx));
+        }
+        std::thread::sleep(Duration::from_millis(5));
+        node_a.sever_connections();
+        for (class, rx) in rxs {
+            let resp = recv_ok(&rx);
+            assert_eq!(resp.images.len(), 2 * 2);
+            assert!(resp.images.iter().all(|&p| p == class as f32));
+        }
+        let agg = cluster.shutdown();
+        assert_eq!(agg.requests, 8);
+        assert_eq!(agg.failed_requests, 0, "re-queue must be invisible");
+        assert_eq!(agg.nodes_lost, 1);
+        assert!(agg.requeued >= 1,
+                "shard A held in-flight work when severed");
+        assert_eq!(agg.enqueued,
+                   agg.dispatched + agg.purged + agg.pending);
+        let st_a = node_a.shutdown();
+        assert_eq!(st_a.enqueued,
+                   st_a.dispatched + st_a.purged + st_a.pending);
+        node_b.shutdown();
+    }
+
+    #[test]
+    fn reactor_busy_node_with_huge_responses_is_not_declared_dead() {
+        // the PR 5 headline regression, reactor path: multi-MiB
+        // responses with a liveness deadline far below their transfer
+        // time must not read as death
+        let il = 300_000usize;
+        let (node, addr) =
+            mock_node(vec![1, 2], il, Duration::from_millis(50));
+        let cluster = Cluster::connect(
+            &[addr.to_string()],
+            ClusterOpts {
+                health: HealthPolicy {
+                    heartbeat: Duration::from_millis(20),
+                    timeout: Duration::from_millis(1000),
+                    ..HealthPolicy::default()
+                },
+                reconnect: Duration::from_secs(3600),
+                reactor: true,
+                ..ClusterOpts::default()
+            },
+        )
+        .unwrap();
+        let mut rxs = Vec::new();
+        for i in 0..4usize {
+            let class = (i % 3) as i32 + 1;
+            let (_, rx) =
+                cluster.submit(GenRequest { class, n: 2 }).unwrap();
+            rxs.push((class, rx));
+        }
+        for (class, rx) in rxs {
+            let resp = rx
+                .recv_timeout(Duration::from_secs(60))
+                .expect("no hang")
+                .expect("busy node must keep serving");
+            assert_eq!(resp.images.len(), 2 * il);
+            assert!(resp.images.iter().all(|&p| p == class as f32));
+        }
+        let agg = cluster.shutdown();
+        assert_eq!(agg.nodes_lost, 0,
+                   "busy-but-healthy node was falsely declared dead");
+        assert_eq!(agg.failed_requests, 0);
+        assert_eq!(agg.requests, 4);
+        node.shutdown();
+    }
+
+    #[test]
+    fn reactor_severed_node_is_readmitted_and_serves_again() {
+        // the flap cycle (lost → reconnect → probation → pong streak →
+        // re-admitted → serving) driven by the reactor state machines
+        let (node, addr) = mock_node(vec![1, 2, 4], 2, Duration::ZERO);
+        let cluster = Cluster::connect(
+            &[addr.to_string()],
+            ClusterOpts { reactor: true, ..elastic_opts() },
+        )
+        .unwrap();
+        let (_, rx) =
+            cluster.submit(GenRequest { class: 1, n: 1 }).unwrap();
+        recv_ok(&rx);
+        node.sever_connections();
+        let deadline = Instant::now() + Duration::from_secs(15);
+        while cluster.nodes_readmitted() == 0 {
+            assert!(Instant::now() < deadline,
+                    "severed node never re-admitted");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        wait_live_shards(&cluster, 1, "after reconnect");
+        let (_, rx) =
+            cluster.submit(GenRequest { class: 3, n: 2 }).unwrap();
+        let resp = recv_ok(&rx);
+        assert!(resp.images.iter().all(|&p| p == 3.0),
+                "re-admitted shard must serve real traffic");
+        let agg = cluster.shutdown();
+        assert_eq!(agg.nodes_lost, 1);
+        assert_eq!(agg.nodes_readmitted, 1);
+        assert_eq!(agg.failed_requests, 0);
+        let st = node.shutdown();
+        assert_eq!(st.requests, 2);
+    }
+
+    #[test]
+    fn reactor_stats_deltas_reconstruct_cumulative_counters() {
+        // a reactor node pushes deltas unprompted; the folded stream
+        // must converge on the node's cumulative counters with the
+        // conservation identity intact — no snapshot polling involved
+        let (node, addr) =
+            mock_node_opts(vec![1, 2], 3, Duration::ZERO,
+                           reactor_node_opts());
+        let cluster =
+            Cluster::connect(&[addr.to_string()], reactor_opts())
+                .unwrap();
+        for i in 0..5u64 {
+            let (_, rx) = cluster
+                .submit(GenRequest { class: (i % 3) as i32, n: 2 })
+                .unwrap();
+            recv_ok(&rx);
+        }
+        let deadline = Instant::now() + Duration::from_secs(15);
+        loop {
+            let agg = cluster.stats();
+            if agg.images == 10 {
+                assert_eq!(agg.enqueued,
+                           agg.dispatched + agg.purged + agg.pending);
+                break;
+            }
+            assert!(Instant::now() < deadline,
+                    "delta stream never reached the cumulative count \
+                     (images = {})", agg.images);
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        cluster.shutdown();
+        let st = node.shutdown();
+        assert_eq!(st.images, 10);
+    }
+
+    #[test]
+    fn reactor_shared_connection_mode_still_serves() {
+        // --control-plane false on the reactor: heartbeats ride the
+        // data connection's ctrl-priority lane
+        let (node, addr) = mock_node(vec![1, 2, 4], 3, Duration::ZERO);
+        let cluster = Cluster::connect(
+            &[addr.to_string()],
+            ClusterOpts { control_plane: false, ..reactor_opts() },
+        )
+        .unwrap();
+        let mut rxs = Vec::new();
+        for i in 0..4usize {
+            let class = (i % 3) as i32;
+            let (_, rx) =
+                cluster.submit(GenRequest { class, n: 2 }).unwrap();
+            rxs.push((class, rx));
+        }
+        for (class, rx) in rxs {
+            let resp = recv_ok(&rx);
+            assert!(resp.images.iter().all(|&p| p == class as f32));
+        }
+        let agg = cluster.shutdown();
+        assert_eq!(agg.requests, 4);
+        assert_eq!(agg.failed_requests, 0);
+        assert_eq!(agg.nodes_lost, 0);
+        node.shutdown();
     }
 }

@@ -2,30 +2,50 @@
 //!
 //! The PR 1–3 stack shards across *threads* in one process; this
 //! subsystem shards across *processes and hosts* with nothing but
-//! `std::net` and the existing thread pool — no async runtime:
+//! `std::net` and the existing thread pool — no async runtime. Every
+//! process hosts at most **one reactor thread** (`poll(2)` readiness
+//! loop over non-blocking sockets) that owns all of that process's
+//! connections; compute stays on the thread pool:
 //!
 //! ```text
-//! clients ──▶ Cluster (Dispatch)                      frontend process
-//!               │  least-loaded placement (heartbeat depth + in-flight,
-//!               │  ramp-up handicap on re-admitted shards)
-//!               │  re-queue on node loss, NodeLost only when none left
-//!               │  reconnector revives dead shards (Probation → Alive)
-//!               ├────────────────┬─────────────────────────────────────
-//!               ▼ data plane     ▼ control plane (Hello{role})
-//!           submits out,     ping/pong/stats only — a pong never
-//!           responses back   queues behind a response frame
-//!           (chunked past CHUNK_LEN, per-chunk checksums)
-//!               ▼                ▼
+//! clients ──▶ Cluster (Dispatch) ──── or ──▶ NetClient   frontend process
+//!               │  least-loaded placement        │ one connection,
+//!               │  re-queue on node loss         │ many in-flight ids,
+//!               │  reconnector = blocking-dial   │ per-request deadline
+//!               │  quarantine (Probation→Alive)  │ → ServeError::Deadline
+//!               ▼                                ▼
+//!           ┌─ reactor thread ─────────────────────────────────────┐
+//!           │ poll(2) loop: conn state machines keyed by epoch,    │
+//!           │ buffered writes w/ backpressure, timer wheel drives  │
+//!           │ heartbeats + deadlines; ctrl-priority lane — a pong  │
+//!           │ never queues behind a bulk response frame            │
+//!           └──────────────────────────────────────────────────────┘
+//!               │ data plane          │ control plane (Hello{role})
+//!               │ submits out,        │ ping/pong + stats *deltas*
+//!               │ responses back      │ pushed by the node; snapshot
+//!               │ (binary tensors at  │ poll only as the threaded-
+//!               │  wire ≥ 3, chunked  │ node fallback
+//!               │  past CHUNK_LEN)    │
+//!               ▼                     ▼
 //!           wire frames (length-prefixed, versioned, checksummed)
-//!           proto messages (canonical JSON: hello/submit/response/
-//!                           error/ping/pong/stats)
+//!           proto messages (canonical JSON control; negotiated
+//!                           binary image payloads at wire ≥ 3)
 //!               ▼
 //!           NodeServer (TCP listener)                   shard process
-//!               │  one handler thread per connection,
-//!               │  forwarder pool for responses
+//!               │  reactor accepts + frames all connections
+//!               │  (or legacy one-thread-per-connection mode);
+//!               │  thread pool runs compute, forwarders respond
 //!               ▼
 //!           Dispatch (GenServer → Router → Batcher → samplers)
 //! ```
+//!
+//! Both transport modes speak the same wire protocol and are selected
+//! per process ([`NodeOpts::reactor`], [`ClusterOpts::reactor`],
+//! `--reactor` on the CLI); a reactor cluster serves threaded nodes
+//! and vice versa. [`reactor::ReactorOpts::max_conns`] (`--max-conns`)
+//! caps accepted connections — the reactor holds thousands of idle
+//! connections at O(workers) threads, where the legacy mode spends a
+//! thread per connection.
 //!
 //! Layering, bottom-up:
 //!
@@ -37,10 +57,17 @@
 //!   [`wire::MAX_FRAME_LEN`] cap. Knows nothing about messages.
 //! * [`proto`] — the message layer: [`proto::Msg`] as canonical JSON
 //!   inside frames — including the [`proto::Role`] handshake that tags
-//!   control connections — plus the
-//!   [`ServerStats`](crate::serve::ServerStats) /
+//!   control connections and negotiates the wire level (image tensors
+//!   go binary at [`proto::WIRE_BINARY`], control stays JSON) — plus
+//!   the [`ServerStats`](crate::serve::ServerStats) /
 //!   [`ServeError`](crate::serve::ServeError) serde the stats protocol
 //!   and `--stats-json` share. Knows nothing about sockets.
+//! * [`reactor`] — the event loop: one thread, `poll(2)` over
+//!   non-blocking sockets, per-connection read/write state machines,
+//!   buffered writer with backpressure caps, a timer wheel, and a
+//!   [`reactor::Handle`] any thread can send/register/close through.
+//!   Knows nothing about the serve protocol — drivers implement
+//!   [`reactor::Driver`].
 //! * [`health`] — pure liveness/placement bookkeeping: the
 //!   `Alive → Suspect → Dead → Probation → Alive` state machine,
 //!   heartbeat expiry, K-pong re-admission, ramped least-loaded pick —
@@ -49,6 +76,8 @@
 //!   a listener.
 //! * [`cluster`] — the frontend: same `Dispatch` surface, requests
 //!   spread over shard nodes, failover *and* recovery per [`health`].
+//! * [`client`] — the thin per-node SDK: one reactor-backed
+//!   connection, many in-flight requests, typed per-request deadlines.
 //!
 //! The loopback topology (nodes and cluster in one process over
 //! `127.0.0.1`) is first-class: the cluster tests, the
@@ -56,10 +85,12 @@
 //! run it, including mid-load node kills and kill-then-restart
 //! re-admission.
 
+pub mod client;
 pub mod cluster;
 pub mod health;
 pub mod node;
 pub mod proto;
+pub mod reactor;
 pub mod wire;
 
 use std::net::TcpStream;
@@ -104,8 +135,10 @@ pub(crate) fn send_message(stream: &Mutex<Option<TcpStream>>,
 #[cfg(test)]
 pub(crate) mod testutil;
 
+pub use client::{NetClient, NetClientOpts};
 pub use cluster::{Cluster, ClusterOpts};
 pub use health::{Health, HealthPolicy, ShardState};
 pub use node::{NodeOpts, NodeServer};
 pub use proto::{Msg, Role};
+pub use reactor::{Reactor, ReactorOpts};
 pub use wire::{MessageReader, WireError};

@@ -3,7 +3,10 @@
 //! A node wraps the in-process serve stack (normally a
 //! [`GenServer`](crate::serve::GenServer), a mock router in tests) and
 //! speaks the [`proto`](crate::serve::net::proto) message set over
-//! [`wire`](crate::serve::net::wire) frames:
+//! [`wire`](crate::serve::net::wire) frames, in one of two transport
+//! modes selected by [`NodeOpts::reactor`]:
+//!
+//! **Threaded mode** (the default, the original PR 4 shape):
 //!
 //! * one **accept thread** takes connections;
 //! * one **connection-handler thread per client** reads frames and
@@ -15,6 +18,24 @@
 //!   [`ThreadPool`]: each job blocks on one request's response channel
 //!   and writes the reply under the connection's writer locks (frames
 //!   from concurrent requests interleave whole, never torn).
+//!
+//! **Reactor mode** (`reactor: true`): every connection lives on one
+//! [`reactor`](crate::serve::net::reactor) thread — accepting, frame
+//! reassembly, and writes all run from the readiness loop, so
+//! connection count stops costing OS threads (the
+//! [`NodeOpts::max_conns`] cap pauses accepting, kernel backlog takes
+//! the overflow). Compute is unchanged: `Submit`s feed the same shared
+//! service, and the forwarder pool still blocks per in-flight request,
+//! re-entering the loop through the reactor handle with the completed
+//! reply. Pongs and typed errors ride the ctrl-priority outbox lane —
+//! the same "a pong never waits behind more than one chunk" discipline
+//! the threaded writer locks enforce. Control connections additionally
+//! get [`Msg::StatsDelta`] pushes every [`NodeOpts::stats_push`], so a
+//! reactor frontend never has to poll `StatsReq`.
+//!
+//! Both modes negotiate the wire feature level from `Hello::max_wire`
+//! (see [`proto::WIRE_BINARY`]): a peer advertising binary support
+//! gets raw-`f32` response payloads instead of JSON.
 //!
 //! **Control-plane isolation:** a frontend may tag a connection
 //! `Hello{role: control}` — the node then expects only ping/stats
@@ -39,17 +60,24 @@
 //! the fault injection the cluster tests and the loopback bench use to
 //! simulate a network partition.
 
+use std::collections::HashMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
 use crate::serve::dispatch::Dispatch;
 use crate::serve::error::ServeError;
-use crate::serve::net::proto::{Msg, Role};
-use crate::serve::net::wire::{MessageReader, WireError};
+use crate::serve::net::proto::{Msg, Role, WIRE_BINARY};
+use crate::serve::net::reactor::{
+    Ctl, Driver, Handle, Reactor, ReactorOpts, Token,
+};
+use crate::serve::net::wire::{
+    write_frame, MessageReader, WireError, WIRE_VERSION,
+};
 use crate::serve::router::{GenRequest, ServerStats};
 use crate::util::threadpool::ThreadPool;
 use crate::{debug_log, warn_log};
@@ -60,11 +88,25 @@ pub struct NodeOpts {
     /// Response-forwarder pool size: how many completed requests can
     /// be serialized back to clients concurrently.
     pub forwarders: usize,
+    /// Serve connections on the `poll(2)` reactor (one thread for all
+    /// sockets) instead of a handler thread per connection.
+    pub reactor: bool,
+    /// Reactor mode: pause accepting while this many connections are
+    /// open (kernel backlog absorbs the rest).
+    pub max_conns: usize,
+    /// Reactor mode: push a [`Msg::StatsDelta`] on every control
+    /// connection at this cadence.
+    pub stats_push: Duration,
 }
 
 impl Default for NodeOpts {
     fn default() -> Self {
-        NodeOpts { forwarders: 8 }
+        NodeOpts {
+            forwarders: 8,
+            reactor: false,
+            max_conns: 4096,
+            stats_push: Duration::from_millis(250),
+        }
     }
 }
 
@@ -87,11 +129,28 @@ struct NodeShared {
     closing: AtomicBool,
 }
 
+/// Reactor-mode compute core: what the driver and the forwarder pool
+/// share. Holds no connection state — that lives in [`NodeDriver`] on
+/// the reactor thread.
+struct NodeCore {
+    svc: Box<dyn Dispatch>,
+    pool: ThreadPool,
+}
+
+/// Reactor-mode transport half of a [`NodeServer`].
+struct ReactorPart {
+    core: Arc<NodeCore>,
+    handle: Handle<SocketAddr>,
+    reactor: Option<Reactor>,
+}
+
 /// A serving shard node; dropped or [`NodeServer::shutdown`] stops it.
 pub struct NodeServer {
-    /// `None` only after `shutdown` consumed it (the `Drop` impl
-    /// forces fields behind options).
+    /// Threaded mode; `None` in reactor mode or after `shutdown`
+    /// consumed it (the `Drop` impl forces fields behind options).
     shared: Option<Arc<NodeShared>>,
+    /// Reactor mode; `None` in threaded mode.
+    reactor: Option<ReactorPart>,
     addr: SocketAddr,
     accept: Option<JoinHandle<()>>,
 }
@@ -107,6 +166,9 @@ impl NodeServer {
         let addr = listener
             .local_addr()
             .context("reading node listener address")?;
+        if opts.reactor {
+            return Self::start_reactor(svc, listener, addr, opts);
+        }
         let shared = Arc::new(NodeShared {
             svc,
             pool: ThreadPool::new(opts.forwarders.max(1)),
@@ -121,8 +183,46 @@ impl NodeServer {
             .context("spawning node accept thread")?;
         Ok(NodeServer {
             shared: Some(shared),
+            reactor: None,
             addr,
             accept: Some(accept),
+        })
+    }
+
+    fn start_reactor(svc: Box<dyn Dispatch>, listener: TcpListener,
+                     addr: SocketAddr, opts: NodeOpts)
+                     -> Result<NodeServer> {
+        let core = Arc::new(NodeCore {
+            svc,
+            pool: ThreadPool::new(opts.forwarders.max(1)),
+        });
+        // the handle only exists once the reactor is spawned, but the
+        // driver (which spawns forwarder jobs needing it) is built
+        // first — hand it over through a cell filled right after spawn
+        let cell = Arc::new(OnceLock::new());
+        let driver = NodeDriver {
+            core: Arc::clone(&core),
+            handle: Arc::clone(&cell),
+            conns: HashMap::new(),
+            stats_push: opts.stats_push,
+        };
+        let ropts = ReactorOpts {
+            max_conns: opts.max_conns.max(1),
+            ..ReactorOpts::default()
+        };
+        let (reactor, handle, _ltokens) =
+            Reactor::spawn(driver, vec![listener], ropts)
+                .context("spawning node reactor")?;
+        let _ = cell.set(handle.clone());
+        Ok(NodeServer {
+            shared: None,
+            reactor: Some(ReactorPart {
+                core,
+                handle,
+                reactor: Some(reactor),
+            }),
+            addr,
+            accept: None,
         })
     }
 
@@ -137,6 +237,10 @@ impl NodeServer {
     /// loopback bench; the service keeps draining whatever it already
     /// dispatched). The node still accepts new connections afterwards.
     pub fn sever_connections(&self) {
+        if let Some(rp) = self.reactor.as_ref() {
+            rp.handle.sever_all();
+            return;
+        }
         let Some(shared) = self.shared.as_ref() else { return };
         let streams: Vec<(usize, TcpStream)> = {
             let mut g = lock(&shared.streams);
@@ -144,6 +248,16 @@ impl NodeServer {
         };
         for (_, s) in streams {
             let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+    }
+
+    /// Reactor mode: stop the loop (dropping every connection) and
+    /// join its thread. Idempotent.
+    fn stop_reactor(&mut self) {
+        let Some(rp) = self.reactor.as_mut() else { return };
+        rp.handle.stop();
+        if let Some(r) = rp.reactor.take() {
+            r.join();
         }
     }
 
@@ -179,6 +293,27 @@ impl NodeServer {
     /// stats instead of panicking.
     pub fn shutdown(mut self) -> ServerStats {
         self.stop_threads();
+        self.stop_reactor();
+        if let Some(rp) = self.reactor.take() {
+            // same ordering as the threaded path: connections are down
+            // (the reactor joined, its driver — the other NodeCore
+            // reference — dropped with it), then the service drains;
+            // dropping the pool last lets every in-flight forwarder
+            // job resolve its answered channel
+            return match Arc::try_unwrap(rp.core) {
+                Ok(core) => {
+                    let NodeCore { svc, pool } = core;
+                    let stats = svc.shutdown();
+                    drop(pool);
+                    stats
+                }
+                Err(_) => {
+                    warn_log!("node: the reactor outlived shutdown; \
+                               stats unavailable");
+                    ServerStats::default()
+                }
+            };
+        }
         let Some(shared) = self.shared.take() else {
             return ServerStats::default();
         };
@@ -207,6 +342,7 @@ impl Drop for NodeServer {
     /// wrapped service drains via its own drop).
     fn drop(&mut self) {
         self.stop_threads();
+        self.stop_reactor();
     }
 }
 
@@ -247,6 +383,30 @@ fn accept_loop(shared: Arc<NodeShared>, listener: TcpListener) {
                     Err(e) => {
                         warn_log!("node: spawning handler for {peer} \
                                    failed: {e}");
+                        // the spawn closure took the stream down with
+                        // it; the registry clone still holds the
+                        // socket, so refuse typed instead of letting
+                        // the peer see a silent hangup
+                        let cloned = {
+                            let mut g = lock(&shared.streams);
+                            g.iter()
+                                .position(|(id, _)| *id == conn_id)
+                                .map(|i| g.remove(i).1)
+                        };
+                        if let Some(mut s) = cloned {
+                            let reject = Msg::Reject {
+                                err: ServeError::Protocol {
+                                    cause: format!(
+                                        "node cannot serve this \
+                                         connection: {e}"
+                                    ),
+                                },
+                            };
+                            let _ =
+                                write_frame(&mut s, &reject.encode());
+                            let _ = s
+                                .shutdown(std::net::Shutdown::Both);
+                        }
                     }
                 }
             }
@@ -279,10 +439,12 @@ impl ConnWriter {
     }
 }
 
-/// Write one message under the connection's writer locks.
-fn send(writer: &ConnWriter, msg: &Msg) -> Result<(), WireError> {
+/// Write one message under the connection's writer locks, at the
+/// connection's negotiated wire feature level.
+fn send(writer: &ConnWriter, msg: &Msg, wire: u16)
+        -> Result<(), WireError> {
     crate::serve::net::send_message(&writer.stream, &writer.bulk,
-                                    &msg.encode())
+                                    &msg.encode_at(wire))
 }
 
 /// One client connection: read frames, feed the service, answer
@@ -313,6 +475,8 @@ fn conn_loop(shared: &Arc<NodeShared>, writer: &Arc<ConnWriter>,
     // untagged connections are data connections (raw clients,
     // pre-handshake frontends); a Hello can promote to control
     let mut role = Role::Data;
+    // wire feature level, negotiated by the Hello (baseline = JSON)
+    let mut wire = WIRE_VERSION;
     let mut messages = MessageReader::new();
     loop {
         let payload = match messages.read(reader) {
@@ -336,10 +500,19 @@ fn conn_loop(shared: &Arc<NodeShared>, writer: &Arc<ConnWriter>,
             }
         };
         match msg {
-            Msg::Hello { role: tagged } => {
-                debug_log!("node: {peer}: connection tagged {}",
-                           tagged.name());
+            Msg::Hello { role: tagged, max_wire } => {
                 role = tagged;
+                wire = max_wire.min(WIRE_BINARY);
+                debug_log!("node: {peer}: connection tagged {} \
+                            (wire {wire})", tagged.name());
+                if max_wire > WIRE_VERSION {
+                    // confirm the negotiated level (baseline peers
+                    // never advertised, so they never see the ack)
+                    let ack = Msg::HelloAck { wire };
+                    if send(writer, &ack, WIRE_VERSION).is_err() {
+                        break;
+                    }
+                }
             }
             Msg::Submit { id, .. } if role == Role::Control => {
                 // control connections carry liveness only; shipping a
@@ -350,7 +523,9 @@ fn conn_loop(shared: &Arc<NodeShared>, writer: &Arc<ConnWriter>,
                 let err = ServeError::Protocol {
                     cause: "submit on a control connection".into(),
                 };
-                if send(writer, &Msg::ErrorResp { id, err }).is_err() {
+                if send(writer, &Msg::ErrorResp { id, err }, wire)
+                    .is_err()
+                {
                     break;
                 }
             }
@@ -378,7 +553,7 @@ fn conn_loop(shared: &Arc<NodeShared>, writer: &Arc<ConnWriter>,
                                     },
                                 },
                             };
-                            if let Err(e) = send(&w, &reply) {
+                            if let Err(e) = send(&w, &reply, wire) {
                                 debug_log!("node: reply for request {id} \
                                             dropped: {e}");
                                 // a failed (possibly partial) frame or
@@ -392,7 +567,8 @@ fn conn_loop(shared: &Arc<NodeShared>, writer: &Arc<ConnWriter>,
                     Err(err) => {
                         // a rejected submit (backpressure, shutdown)
                         // answers immediately with the typed cause
-                        if send(writer, &Msg::ErrorResp { id, err })
+                        if send(writer, &Msg::ErrorResp { id, err },
+                                wire)
                             .is_err()
                         {
                             break;
@@ -407,13 +583,15 @@ fn conn_loop(shared: &Arc<NodeShared>, writer: &Arc<ConnWriter>,
                     live_workers: shared.svc.live_workers(),
                     ready_workers: shared.svc.ready_workers(),
                 };
-                if send(writer, &pong).is_err() {
+                if send(writer, &pong, wire).is_err() {
                     break;
                 }
             }
             Msg::StatsReq { seq } => {
                 let stats = shared.svc.stats();
-                if send(writer, &Msg::Stats { seq, stats }).is_err() {
+                if send(writer, &Msg::Stats { seq, stats }, wire)
+                    .is_err()
+                {
                     break;
                 }
             }
@@ -427,10 +605,253 @@ fn conn_loop(shared: &Arc<NodeShared>, writer: &Arc<ConnWriter>,
     }
 }
 
+// ---------------------------------------------------------------------
+// Reactor mode
+
+/// Per-connection state the reactor driver tracks (all mutated on the
+/// reactor thread — no locks).
+struct ConnState {
+    peer: SocketAddr,
+    role: Role,
+    /// Negotiated wire feature level for node → peer traffic.
+    wire: u16,
+    /// Counter values at the last `StatsDelta` push (control conns);
+    /// zero until the first push, which therefore carries the full
+    /// cumulative value — the `StatsDelta` contract.
+    pushed: ServerStats,
+}
+
+/// Counter increments since `prev`; gauges (`pending`, fills, depths,
+/// latencies, wall clock) and the rung/worker breakdowns stay
+/// absolute. Summing deltas per connection reconstructs the node's
+/// cumulative counters, conservation identity included
+/// (`Σenqueued = Σdispatched + Σpurged + pending_now`).
+fn stats_delta(prev: &ServerStats, cur: &ServerStats) -> ServerStats {
+    let mut d = cur.clone();
+    d.requests = cur.requests.saturating_sub(prev.requests);
+    d.images = cur.images.saturating_sub(prev.images);
+    d.batches = cur.batches.saturating_sub(prev.batches);
+    d.padded_slots = cur.padded_slots.saturating_sub(prev.padded_slots);
+    d.failed_requests =
+        cur.failed_requests.saturating_sub(prev.failed_requests);
+    d.dropped_responses =
+        cur.dropped_responses.saturating_sub(prev.dropped_responses);
+    d.calib_cache_hits =
+        cur.calib_cache_hits.saturating_sub(prev.calib_cache_hits);
+    d.calib_cache_misses =
+        cur.calib_cache_misses.saturating_sub(prev.calib_cache_misses);
+    d.enqueued = cur.enqueued.saturating_sub(prev.enqueued);
+    d.dispatched = cur.dispatched.saturating_sub(prev.dispatched);
+    d.purged = cur.purged.saturating_sub(prev.purged);
+    d.requeued = cur.requeued.saturating_sub(prev.requeued);
+    d.nodes_lost = cur.nodes_lost.saturating_sub(prev.nodes_lost);
+    d.nodes_readmitted =
+        cur.nodes_readmitted.saturating_sub(prev.nodes_readmitted);
+    d
+}
+
+/// Block (briefly) until `start_reactor` has filled the handle cell —
+/// only ever awaited on forwarder-pool threads, and the fill races at
+/// most the first connection's first completed request.
+fn wait_handle(cell: &OnceLock<Handle<SocketAddr>>)
+               -> Handle<SocketAddr> {
+    loop {
+        if let Some(h) = cell.get() {
+            return h.clone();
+        }
+        std::thread::yield_now();
+    }
+}
+
+/// The node's [`Driver`]: `conn_loop` re-expressed as reactor
+/// callbacks. Inline answers (pong, typed errors, hello ack) ride the
+/// ctrl-priority lane; responses ride bulk via the forwarder pool.
+struct NodeDriver {
+    core: Arc<NodeCore>,
+    handle: Arc<OnceLock<Handle<SocketAddr>>>,
+    conns: HashMap<Token, ConnState>,
+    stats_push: Duration,
+}
+
+impl Driver for NodeDriver {
+    type Tag = SocketAddr;
+
+    fn accept_tag(&mut self, _listener: Token, peer: SocketAddr)
+                  -> SocketAddr {
+        peer
+    }
+
+    fn on_open(&mut self, _ctl: &mut Ctl<'_>, token: Token,
+               peer: SocketAddr) {
+        self.conns.insert(token, ConnState {
+            peer,
+            role: Role::Data,
+            wire: WIRE_VERSION,
+            pushed: ServerStats::default(),
+        });
+    }
+
+    fn on_message(&mut self, ctl: &mut Ctl<'_>, token: Token,
+                  payload: Vec<u8>) {
+        // a bad *message* in a good frame degrades that message only,
+        // same as the threaded path
+        let msg = match Msg::decode(&payload) {
+            Ok(m) => m,
+            Err(e) => {
+                warn_log!("node: skipping bad message: {e:#}");
+                return;
+            }
+        };
+        let Some(st) = self.conns.get_mut(&token) else { return };
+        match msg {
+            Msg::Hello { role, max_wire } => {
+                st.role = role;
+                st.wire = max_wire.min(WIRE_BINARY);
+                let wire = st.wire;
+                debug_log!("node: {}: connection tagged {} \
+                            (wire {wire})", st.peer, role.name());
+                if max_wire > WIRE_VERSION {
+                    let ack = Msg::HelloAck { wire }.encode();
+                    if ctl.send_ctrl(token, &ack).is_err() {
+                        self.conns.remove(&token);
+                        return;
+                    }
+                }
+                if role == Role::Control {
+                    // start this connection's stats-push cadence; the
+                    // timer key is the token (unique forever, so a
+                    // fired key for a gone connection is inert)
+                    ctl.set_timer(ctl.now() + self.stats_push, token);
+                }
+            }
+            Msg::Submit { id, .. } if st.role == Role::Control => {
+                warn_log!("node: {}: submit on a control connection \
+                           rejected", st.peer);
+                let err = ServeError::Protocol {
+                    cause: "submit on a control connection".into(),
+                };
+                let resp = Msg::ErrorResp { id, err }.encode();
+                if ctl.send_ctrl(token, &resp).is_err() {
+                    self.conns.remove(&token);
+                }
+            }
+            Msg::Submit { id, class, n } => {
+                let wire = st.wire;
+                match self.core.svc.submit(GenRequest { class, n }) {
+                    Ok((_, rx)) => {
+                        let cell = Arc::clone(&self.handle);
+                        // same shape as the threaded forwarder: the
+                        // job blocks on this one request's channel,
+                        // then re-enters the loop through the handle
+                        self.core.pool.execute(move || {
+                            let reply = match rx.recv() {
+                                Ok(Ok(resp)) => Msg::Response {
+                                    id,
+                                    latency_s: resp.latency_s,
+                                    images: resp.images,
+                                },
+                                Ok(Err(err)) => {
+                                    Msg::ErrorResp { id, err }
+                                }
+                                Err(_) => Msg::ErrorResp {
+                                    id,
+                                    err: ServeError::Protocol {
+                                        cause: "response channel \
+                                                closed without a \
+                                                result"
+                                            .into(),
+                                    },
+                                },
+                            };
+                            let handle = wait_handle(&cell);
+                            if !handle.send(token,
+                                            reply.encode_at(wire)) {
+                                debug_log!("node: reply for request \
+                                            {id} dropped: reactor \
+                                            stopped");
+                            }
+                        });
+                    }
+                    Err(err) => {
+                        let resp = Msg::ErrorResp { id, err }.encode();
+                        if ctl.send_ctrl(token, &resp).is_err() {
+                            self.conns.remove(&token);
+                        }
+                    }
+                }
+            }
+            Msg::Ping { seq } => {
+                let pong = Msg::Pong {
+                    seq,
+                    queue_depth: self.core.svc.queue_depth(),
+                    live_workers: self.core.svc.live_workers(),
+                    ready_workers: self.core.svc.ready_workers(),
+                };
+                if ctl.send_ctrl(token, &pong.encode()).is_err() {
+                    self.conns.remove(&token);
+                }
+            }
+            Msg::StatsReq { seq } => {
+                let stats = self.core.svc.stats();
+                if st.role == Role::Control {
+                    // a full snapshot re-baselines the delta stream:
+                    // the peer replaces its accumulated value with
+                    // this snapshot, so every later delta must be
+                    // relative to it or the fold double-counts
+                    st.pushed = stats.clone();
+                }
+                let resp = Msg::Stats { seq, stats }.encode();
+                if ctl.send(token, &resp).is_err() {
+                    self.conns.remove(&token);
+                }
+            }
+            other => {
+                warn_log!("node: {}: skipping unexpected {} message",
+                          st.peer, other.kind());
+            }
+        }
+    }
+
+    fn on_close(&mut self, _ctl: &mut Ctl<'_>, token: Token,
+                cause: WireError) {
+        if let Some(st) = self.conns.remove(&token) {
+            match cause {
+                WireError::Closed => {
+                    debug_log!("node: {}: connection closed", st.peer);
+                }
+                e => {
+                    warn_log!("node: {}: closing connection: {e}",
+                              st.peer);
+                }
+            }
+        }
+    }
+
+    fn on_timer(&mut self, ctl: &mut Ctl<'_>, key: u64) {
+        // timer keys are connection tokens (stats-push cadence); a
+        // key whose connection is gone was lazily cancelled
+        let Some(st) = self.conns.get_mut(&key) else { return };
+        if st.role != Role::Control {
+            return;
+        }
+        let cur = self.core.svc.stats();
+        let delta = stats_delta(&st.pushed, &cur);
+        st.pushed = cur;
+        let push = Msg::StatsDelta { stats: delta }.encode();
+        if ctl.send_ctrl(key, &push).is_err() {
+            self.conns.remove(&key);
+            return;
+        }
+        ctl.set_timer(ctl.now() + self.stats_push, key);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::serve::net::testutil::{mock_node, read_msg, send_msg};
+    use crate::serve::net::testutil::{
+        mock_node, mock_node_opts, read_msg, send_msg,
+    };
     use crate::serve::net::wire::{read_frame, write_frame, CHUNK_LEN};
     use std::time::Duration;
 
@@ -598,7 +1019,10 @@ mod tests {
         let (node, addr) = mock_node(vec![4], 3, Duration::ZERO);
         let mut c = TcpStream::connect(addr).unwrap();
         c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
-        send_msg(&mut c, &Msg::Hello { role: Role::Control });
+        send_msg(&mut c, &Msg::Hello {
+            role: Role::Control,
+            max_wire: WIRE_VERSION,
+        });
         // liveness + stats flow normally
         send_msg(&mut c, &Msg::Ping { seq: 5 });
         match read_until(&mut c, |m| matches!(m, Msg::Pong { .. })) {
@@ -660,6 +1084,200 @@ mod tests {
         c2.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
         send_msg(&mut c2, &Msg::Submit { id: 1, class: 2, n: 1 });
         match read_until(&mut c2, |m| matches!(m, Msg::Response { .. })) {
+            Msg::Response { id: 1, images, .. } => {
+                assert_eq!(images, vec![2.0, 2.0]);
+            }
+            other => panic!("{other:?}"),
+        }
+        node.shutdown();
+    }
+
+    // -- reactor mode --------------------------------------------------
+
+    fn reactor_opts() -> NodeOpts {
+        NodeOpts {
+            reactor: true,
+            stats_push: Duration::from_millis(40),
+            ..NodeOpts::default()
+        }
+    }
+
+    #[test]
+    fn reactor_node_serves_submit_ping_stats_over_one_socket() {
+        let (node, addr) =
+            mock_node_opts(vec![4], 3, Duration::ZERO, reactor_opts());
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+
+        send_msg(&mut c, &Msg::Submit { id: 42, class: 5, n: 2 });
+        send_msg(&mut c, &Msg::Ping { seq: 9 });
+        match read_until(&mut c, |m| matches!(m, Msg::Pong { .. })) {
+            Msg::Pong { seq: 9, .. } => {}
+            other => panic!("wrong pong: {other:?}"),
+        }
+        match read_until(&mut c, |m| matches!(m, Msg::Response { .. }))
+        {
+            Msg::Response { id: 42, images, .. } => {
+                assert_eq!(images.len(), 2 * 3);
+                assert!(images.iter().all(|&p| p == 5.0));
+            }
+            other => panic!("wrong response: {other:?}"),
+        }
+        send_msg(&mut c, &Msg::StatsReq { seq: 1 });
+        match read_until(&mut c, |m| matches!(m, Msg::Stats { .. })) {
+            Msg::Stats { seq: 1, stats } => {
+                assert_eq!(stats.requests, 1);
+                assert_eq!(stats.enqueued,
+                           stats.dispatched + stats.purged
+                               + stats.pending);
+            }
+            other => panic!("wrong stats: {other:?}"),
+        }
+        let final_stats = node.shutdown();
+        assert_eq!(final_stats.requests, 1);
+        assert_eq!(final_stats.images, 2);
+    }
+
+    #[test]
+    fn reactor_node_negotiates_binary_responses() {
+        let (node, addr) =
+            mock_node_opts(vec![4], 3, Duration::ZERO, reactor_opts());
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        send_msg(&mut c, &Msg::Hello {
+            role: Role::Data,
+            max_wire: WIRE_BINARY,
+        });
+        match read_msg(&mut c) {
+            Msg::HelloAck { wire } => assert_eq!(wire, WIRE_BINARY),
+            other => panic!("expected hello ack, got {other:?}"),
+        }
+        send_msg(&mut c, &Msg::Submit { id: 5, class: 3, n: 2 });
+        // the response payload must really be binary (marker byte),
+        // not merely decodable
+        let payload = loop {
+            let p = read_frame(&mut c).unwrap();
+            if p.first() == Some(&0u8) {
+                break p;
+            }
+            // skip interleaved JSON control traffic, if any
+            Msg::decode(&p).unwrap();
+        };
+        match Msg::decode(&payload).unwrap() {
+            Msg::Response { id: 5, images, .. } => {
+                assert_eq!(images.len(), 2 * 3);
+                assert!(images.iter().all(|&p| p == 3.0));
+            }
+            other => panic!("{other:?}"),
+        }
+        // control traffic stays JSON at every feature level
+        send_msg(&mut c, &Msg::Ping { seq: 1 });
+        let p = read_frame(&mut c).unwrap();
+        assert_eq!(p.first(), Some(&b'{'), "pong went binary");
+        match Msg::decode(&p).unwrap() {
+            Msg::Pong { seq: 1, .. } => {}
+            other => panic!("{other:?}"),
+        }
+        node.shutdown();
+    }
+
+    #[test]
+    fn reactor_control_connection_pushes_stats_deltas() {
+        let (node, addr) =
+            mock_node_opts(vec![4], 2, Duration::ZERO, reactor_opts());
+        let mut ctl = TcpStream::connect(addr).unwrap();
+        ctl.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        send_msg(&mut ctl, &Msg::Hello {
+            role: Role::Control,
+            max_wire: WIRE_VERSION,
+        });
+        // a submit on the control plane is a peer bug, typed
+        send_msg(&mut ctl, &Msg::Submit { id: 9, class: 1, n: 1 });
+        match read_until(&mut ctl,
+                         |m| matches!(m, Msg::ErrorResp { .. })) {
+            Msg::ErrorResp {
+                id: 9,
+                err: ServeError::Protocol { .. },
+            } => {}
+            other => panic!("{other:?}"),
+        }
+        // real work flows on a data connection
+        let mut data = TcpStream::connect(addr).unwrap();
+        data.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        for id in 0..2u64 {
+            send_msg(&mut data, &Msg::Submit { id, class: 4, n: 2 });
+            read_until(&mut data,
+                       |m| matches!(m, Msg::Response { .. }));
+        }
+        // deltas arrive unprompted (no StatsReq was ever sent on this
+        // connection) and sum to the cumulative counters
+        let (mut req_sum, mut enq_sum, mut dis_sum, mut pur_sum) =
+            (0u64, 0u64, 0u64, 0u64);
+        let mut pending = 0u64;
+        loop {
+            match read_until(&mut ctl,
+                             |m| matches!(m, Msg::StatsDelta { .. })) {
+                Msg::StatsDelta { stats } => {
+                    req_sum += stats.requests;
+                    enq_sum += stats.enqueued;
+                    dis_sum += stats.dispatched;
+                    pur_sum += stats.purged;
+                    pending = stats.pending; // gauge: absolute
+                    if req_sum >= 2 {
+                        break;
+                    }
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        assert_eq!(req_sum, 2, "delta sum over-counts");
+        assert_eq!(enq_sum, dis_sum + pur_sum + pending,
+                   "conservation identity lost in delta form");
+        let stats = node.shutdown();
+        assert_eq!(stats.requests, 2);
+    }
+
+    #[test]
+    fn reactor_large_response_travels_chunked() {
+        // baseline (JSON) path: a multi-chunk response through the
+        // reactor's bulk outbox lane, reassembled by the client
+        let il = 100_000usize;
+        let (node, addr) =
+            mock_node_opts(vec![2], il, Duration::ZERO, reactor_opts());
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        send_msg(&mut c, &Msg::Submit { id: 3, class: 7, n: 2 });
+        match read_until(&mut c, |m| matches!(m, Msg::Response { .. }))
+        {
+            Msg::Response { id: 3, images, .. } => {
+                assert_eq!(images.len(), 2 * il);
+                assert!(images.iter().all(|&p| p == 7.0));
+                assert!(images.len() * 2 > CHUNK_LEN,
+                        "fixture no longer exceeds one chunk");
+            }
+            other => panic!("{other:?}"),
+        }
+        node.shutdown();
+    }
+
+    #[test]
+    fn reactor_severed_connection_leaves_the_service_running() {
+        let (node, addr) =
+            mock_node_opts(vec![2], 2, Duration::ZERO, reactor_opts());
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        send_msg(&mut c, &Msg::Ping { seq: 1 });
+        read_until(&mut c, |m| matches!(m, Msg::Pong { .. }));
+        node.sever_connections();
+        match read_frame(&mut c) {
+            Err(_) => {}
+            Ok(_) => panic!("severed connection still delivered"),
+        }
+        let mut c2 = TcpStream::connect(addr).unwrap();
+        c2.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        send_msg(&mut c2, &Msg::Submit { id: 1, class: 2, n: 1 });
+        match read_until(&mut c2,
+                         |m| matches!(m, Msg::Response { .. })) {
             Msg::Response { id: 1, images, .. } => {
                 assert_eq!(images, vec![2.0, 2.0]);
             }

@@ -1,32 +1,86 @@
-//! Cross-node protocol messages, serialized as canonical JSON inside
-//! [`wire`](crate::serve::net::wire) frames.
+//! Cross-node protocol messages, serialized inside
+//! [`wire`](crate::serve::net::wire) frames — canonical JSON for
+//! control traffic, an optional raw binary encoding for image tensors.
 //!
 //! One [`Msg`] enum covers both directions of a shard connection:
 //!
 //! * frontend → node: `Hello` (optional first message tagging the
 //!   connection's [`Role`] — `control` connections carry only
 //!   ping/pong/stats so liveness never queues behind response bytes;
-//!   an untagged connection is `data`, the pre-handshake behavior),
-//!   `Submit` (one generation request, carrying the *frontend's*
-//!   request id — the node echoes it back, so each connection is its
-//!   own id namespace), `Ping`, `StatsReq`;
-//! * node → frontend: `Response` / `ErrorResp` (terminal, exactly one
-//!   per submitted id), `Pong` (queue depth + worker counts, the
-//!   load-balancing signal), `Stats` (a live [`ServerStats`]
-//!   snapshot).
+//!   an untagged connection is `data`, the pre-handshake behavior —
+//!   and advertising the sender's highest supported wire feature
+//!   level, `max_wire`), `Submit` (one generation request, carrying
+//!   the *frontend's* request id — the node echoes it back, so each
+//!   connection is its own id namespace), `Ping`, `StatsReq`;
+//! * node → frontend: `HelloAck` (the negotiated feature level; only
+//!   sent when the hello advertised more than the v2 baseline),
+//!   `Response` / `ErrorResp` (terminal, exactly one per submitted
+//!   id), `Reject` (connection-level typed refusal, e.g. the node
+//!   cannot take another connection), `Pong` (queue depth + worker
+//!   counts, the load-balancing signal), `Stats` (a live
+//!   [`ServerStats`] snapshot, answering `StatsReq`), `StatsDelta`
+//!   (reactor mode: stats *pushed* on the control connection —
+//!   additive counters carry the increment since the previous push on
+//!   this connection, gauges carry current absolute values).
+//!
+//! # Wire feature negotiation (`max_wire`)
+//!
+//! The frame header version stays [`wire::WIRE_VERSION`] = 2 — framing
+//! and chunking are unchanged. On top of it, peers negotiate a
+//! *feature level*: a frontend advertising [`WIRE_BINARY`] (= 3) in
+//! its hello tells the node it may answer `Submit`s with the binary
+//! response payload below; the node confirms with `HelloAck`. Either
+//! side omitting the field (or advertising 2) pins the connection to
+//! all-JSON — old and new peers interoperate in both directions.
+//!
+//! # Binary response payload
+//!
+//! JSON-encoding a multi-MiB `f32` tensor costs ~10 bytes and a float
+//! parse per pixel. The binary response encodes the same message as
+//! raw little-endian `f32` frame bytes behind a 22-byte header:
+//!
+//! ```text
+//! offset  size  field
+//!      0     1  0x00        (binary marker; JSON always starts '{')
+//!      1     1  'R'         (payload kind: response)
+//!      2     8  id          u64 big-endian
+//!     10     8  latency_s   f64 big-endian
+//!     18     4  n_pixels    u32 big-endian
+//!     22  4×n   pixels      f32 little-endian (native GPU layout,
+//!                            bit-for-bit — no text roundtrip)
+//! ```
+//!
+//! [`Msg::decode`] accepts both encodings unconditionally (the marker
+//! byte disambiguates); *emitting* binary requires the negotiated
+//! feature level, so a v2 peer never sees it. Control messages stay
+//! JSON at every feature level.
 //!
 //! Serde follows the `coordinator/store.rs` conventions: the canonical
 //! serializer in [`crate::util::json`] (sorted keys, shortest-roundtrip
 //! floats, so every `f32` image pixel survives the wire bit-for-bit),
 //! and decoding validates everything — counts must be whole
-//! non-negative numbers, floats finite, kinds known — returning typed
-//! errors, never panicking on peer bytes.
+//! non-negative numbers, floats finite, kinds known, binary payloads
+//! exactly sized — returning typed errors, never panicking on peer
+//! bytes.
 
 use anyhow::{bail, Context, Result};
 
 use crate::serve::error::ServeError;
+use crate::serve::net::wire::WIRE_VERSION;
 use crate::serve::router::{RungStats, ServerStats, WorkerStats};
 use crate::util::json::Json;
+
+/// Wire feature level that unlocks binary tensor payloads. Negotiated
+/// per connection via `Hello::max_wire` + `HelloAck`; the frame-header
+/// version stays [`WIRE_VERSION`] regardless.
+pub const WIRE_BINARY: u16 = 3;
+
+/// Marker byte opening every binary payload (JSON starts with `{`).
+const BIN_MARKER: u8 = 0x00;
+/// Binary payload kind: response.
+const BIN_RESPONSE: u8 = b'R';
+/// Binary response header length (marker + kind + id + latency + n).
+const BIN_RESP_HEADER: usize = 22;
 
 /// What a shard connection is for. The frontend opens one `Data`
 /// connection (submits out, responses back) and — unless the control
@@ -59,17 +113,29 @@ impl Role {
 #[derive(Clone, Debug, PartialEq)]
 pub enum Msg {
     /// Frontend → node, first message on a connection: what this
-    /// connection carries. Nodes treat a connection without a hello as
-    /// `data` (raw clients, pre-handshake frontends).
-    Hello { role: Role },
+    /// connection carries, plus the sender's highest supported wire
+    /// feature level (see [`WIRE_BINARY`]; absent on the wire means
+    /// the v2 all-JSON baseline). Nodes treat a connection without a
+    /// hello as `data` at the baseline level (raw clients,
+    /// pre-handshake frontends).
+    Hello { role: Role, max_wire: u16 },
+    /// Node → frontend: the feature level this connection will use
+    /// (`min` of both sides). Only sent when the hello advertised past
+    /// the baseline, so baseline peers never see it.
+    HelloAck { wire: u16 },
     /// Frontend → node: run `n` images of `class`; the node answers
     /// with a `Response`/`ErrorResp` echoing `id`.
     Submit { id: u64, class: i32, n: usize },
     /// Node → frontend: the completed request (flat pixels, node-side
-    /// queue+compute latency).
+    /// queue+compute latency). JSON at the baseline level, raw binary
+    /// (see module docs) once [`WIRE_BINARY`] is negotiated.
     Response { id: u64, latency_s: f64, images: Vec<f32> },
     /// Node → frontend: the request failed with a typed error.
     ErrorResp { id: u64, err: ServeError },
+    /// Node → frontend: connection-level typed refusal — no request id
+    /// (nothing was submitted); the node closes after sending. The
+    /// accept path uses it when it cannot take the connection at all.
+    Reject { err: ServeError },
     /// Frontend → node heartbeat probe.
     Ping { seq: u64 },
     /// Node → frontend heartbeat reply: the dispatch signal (queued
@@ -82,8 +148,16 @@ pub enum Msg {
     },
     /// Frontend → node: request a live stats snapshot.
     StatsReq { seq: u64 },
-    /// Node → frontend: the snapshot.
+    /// Node → frontend: the snapshot (absolute values).
     Stats { seq: u64, stats: ServerStats },
+    /// Node → frontend, reactor mode: stats pushed on the control
+    /// connection. Additive counters carry the increment since the
+    /// previous push on this connection (the first push since connect
+    /// is the full cumulative value); gauges and the rung/worker
+    /// breakdowns carry current absolute values. Summing deltas per
+    /// connection epoch reconstructs the node's cumulative counters —
+    /// including the conservation identity.
+    StatsDelta { stats: ServerStats },
 }
 
 impl Msg {
@@ -91,23 +165,44 @@ impl Msg {
     pub fn kind(&self) -> &'static str {
         match self {
             Msg::Hello { .. } => "hello",
+            Msg::HelloAck { .. } => "hello_ack",
             Msg::Submit { .. } => "submit",
             Msg::Response { .. } => "response",
             Msg::ErrorResp { .. } => "error",
+            Msg::Reject { .. } => "reject",
             Msg::Ping { .. } => "ping",
             Msg::Pong { .. } => "pong",
             Msg::StatsReq { .. } => "stats_req",
             Msg::Stats { .. } => "stats",
+            Msg::StatsDelta { .. } => "stats_delta",
         }
     }
 
-    /// Canonical JSON bytes (the wire frame payload).
+    /// Canonical JSON bytes (the baseline wire frame payload).
     pub fn encode(&self) -> Vec<u8> {
         self.to_json().dump().into_bytes()
     }
 
-    /// Decode a frame payload; every malformed input is a typed error.
+    /// Encode at a negotiated feature level: responses go binary at
+    /// [`WIRE_BINARY`] and above, everything else (and every message
+    /// at the baseline) stays canonical JSON.
+    pub fn encode_at(&self, wire: u16) -> Vec<u8> {
+        match self {
+            Msg::Response { id, latency_s, images }
+                if wire >= WIRE_BINARY =>
+            {
+                encode_response_binary(*id, *latency_s, images)
+            }
+            _ => self.encode(),
+        }
+    }
+
+    /// Decode a frame payload (either encoding — the marker byte
+    /// disambiguates); every malformed input is a typed error.
     pub fn decode(bytes: &[u8]) -> Result<Msg> {
+        if bytes.first() == Some(&BIN_MARKER) {
+            return decode_binary(bytes);
+        }
         let text = std::str::from_utf8(bytes)
             .context("message payload is not UTF-8")?;
         let j = Json::parse(text).context("message payload is not JSON")?;
@@ -117,9 +212,20 @@ impl Msg {
     pub fn to_json(&self) -> Json {
         let mut m = std::collections::BTreeMap::new();
         match self {
-            Msg::Hello { role } => {
+            Msg::Hello { role, max_wire } => {
                 m.insert("type".into(), Json::Str("hello".into()));
                 m.insert("role".into(), Json::Str(role.name().into()));
+                // baseline hellos omit the field: byte-identical to
+                // the v2 hello, so old peers see exactly what their
+                // own frontends send
+                if *max_wire > WIRE_VERSION {
+                    m.insert("max_wire".into(),
+                             Json::Num(*max_wire as f64));
+                }
+            }
+            Msg::HelloAck { wire } => {
+                m.insert("type".into(), Json::Str("hello_ack".into()));
+                m.insert("wire".into(), Json::Num(*wire as f64));
             }
             Msg::Submit { id, class, n } => {
                 m.insert("type".into(), Json::Str("submit".into()));
@@ -142,6 +248,10 @@ impl Msg {
             Msg::ErrorResp { id, err } => {
                 m.insert("type".into(), Json::Str("error".into()));
                 m.insert("id".into(), Json::Num(*id as f64));
+                m.insert("err".into(), serve_error_to_json(err));
+            }
+            Msg::Reject { err } => {
+                m.insert("type".into(), Json::Str("reject".into()));
                 m.insert("err".into(), serve_error_to_json(err));
             }
             Msg::Ping { seq } => {
@@ -167,6 +277,11 @@ impl Msg {
                 m.insert("seq".into(), Json::Num(*seq as f64));
                 m.insert("stats".into(), stats_to_json(stats));
             }
+            Msg::StatsDelta { stats } => {
+                m.insert("type".into(),
+                         Json::Str("stats_delta".into()));
+                m.insert("stats".into(), stats_to_json(stats));
+            }
         }
         Json::Obj(m)
     }
@@ -176,12 +291,25 @@ impl Msg {
         match ty {
             "hello" => {
                 let role = str_field(j, "role")?;
+                // absent max_wire = the v2 baseline (old peers)
+                let max_wire = match j.get("max_wire") {
+                    None => WIRE_VERSION,
+                    Some(_) => count_field(j, "max_wire")?
+                        .try_into()
+                        .context("hello `max_wire` out of u16 range")?,
+                };
                 Ok(Msg::Hello {
                     role: Role::parse(role).with_context(|| {
                         format!("unknown connection role `{role}`")
                     })?,
+                    max_wire,
                 })
             }
+            "hello_ack" => Ok(Msg::HelloAck {
+                wire: count_field(j, "wire")?
+                    .try_into()
+                    .context("hello_ack `wire` out of u16 range")?,
+            }),
             "submit" => Ok(Msg::Submit {
                 id: count_field(j, "id")?,
                 class: int_field(j, "class")?
@@ -217,6 +345,12 @@ impl Msg {
                     j.get("err").context("error message missing `err`")?,
                 )?,
             }),
+            "reject" => Ok(Msg::Reject {
+                err: serve_error_from_json(
+                    j.get("err")
+                        .context("reject message missing `err`")?,
+                )?,
+            }),
             "ping" => Ok(Msg::Ping { seq: count_field(j, "seq")? }),
             "pong" => Ok(Msg::Pong {
                 seq: count_field(j, "seq")?,
@@ -234,9 +368,73 @@ impl Msg {
                         .context("stats message missing `stats`")?,
                 )?,
             }),
+            "stats_delta" => Ok(Msg::StatsDelta {
+                stats: stats_from_json(
+                    j.get("stats")
+                        .context("stats_delta message missing `stats`")?,
+                )?,
+            }),
             other => bail!("unknown message type `{other}`"),
         }
     }
+}
+
+// -- binary payload encoding (see module docs for the layout) ------------
+
+/// Encode a `Response` as the raw binary payload: 22-byte header, then
+/// the pixels as little-endian `f32` — bit-for-bit, no text roundtrip.
+fn encode_response_binary(
+    id: u64,
+    latency_s: f64,
+    images: &[f32],
+) -> Vec<u8> {
+    let mut out = Vec::with_capacity(BIN_RESP_HEADER + 4 * images.len());
+    out.push(BIN_MARKER);
+    out.push(BIN_RESPONSE);
+    out.extend_from_slice(&id.to_be_bytes());
+    out.extend_from_slice(&latency_s.to_be_bytes());
+    out.extend_from_slice(&(images.len() as u32).to_be_bytes());
+    for &p in images {
+        out.extend_from_slice(&p.to_le_bytes());
+    }
+    out
+}
+
+/// Decode a binary payload (first byte already seen as [`BIN_MARKER`]).
+/// Validates the kind byte, the exact length, and latency finiteness —
+/// typed errors, never a panic on peer bytes.
+fn decode_binary(bytes: &[u8]) -> Result<Msg> {
+    if bytes.len() < BIN_RESP_HEADER {
+        bail!(
+            "binary payload truncated: {} bytes, header needs {}",
+            bytes.len(),
+            BIN_RESP_HEADER
+        );
+    }
+    if bytes[1] != BIN_RESPONSE {
+        bail!("unknown binary payload kind 0x{:02x}", bytes[1]);
+    }
+    let id = u64::from_be_bytes(bytes[2..10].try_into().unwrap());
+    let latency_s = f64::from_be_bytes(bytes[10..18].try_into().unwrap());
+    if !latency_s.is_finite() {
+        bail!("binary response `latency_s` is not finite");
+    }
+    let n = u32::from_be_bytes(bytes[18..22].try_into().unwrap()) as usize;
+    let want = BIN_RESP_HEADER + 4 * n;
+    if bytes.len() != want {
+        bail!(
+            "binary response length mismatch: {} bytes for {} pixels \
+             (want {})",
+            bytes.len(),
+            n,
+            want
+        );
+    }
+    let images = bytes[BIN_RESP_HEADER..]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok(Msg::Response { id, latency_s, images })
 }
 
 // -- field accessors (typed errors naming the key) -----------------------
@@ -327,6 +525,10 @@ pub fn serve_error_to_json(e: &ServeError) -> Json {
             ("kind", Json::Str("protocol".into())),
             ("cause", Json::Str(cause.clone())),
         ]),
+        ServeError::Deadline { after_ms } => obj(vec![
+            ("kind", Json::Str("deadline".into())),
+            ("after_ms", Json::Num(*after_ms as f64)),
+        ]),
     }
 }
 
@@ -359,6 +561,9 @@ pub fn serve_error_from_json(j: &Json) -> Result<ServeError> {
         }
         "node_lost" => ServeError::NodeLost { cause: cause()? },
         "protocol" => ServeError::Protocol { cause: cause()? },
+        "deadline" => {
+            ServeError::Deadline { after_ms: count_field(j, "after_ms")? }
+        }
         other => bail!("unknown serve error kind `{other}`"),
     })
 }
@@ -569,7 +774,7 @@ mod tests {
     }
 
     fn random_error(g: &mut Gen) -> ServeError {
-        match g.usize_in(0, 7) {
+        match g.usize_in(0, 8) {
             0 => ServeError::ShuttingDown,
             1 => ServeError::QueueFull {
                 queued: g.usize_in(0, 999),
@@ -589,6 +794,9 @@ mod tests {
             },
             5 => ServeError::AllWorkersDead { cause: "init".into() },
             6 => ServeError::NodeLost { cause: "timeout".into() },
+            7 => ServeError::Deadline {
+                after_ms: g.usize_in(1, 60_000) as u64,
+            },
             _ => ServeError::Protocol { cause: "bad frame".into() },
         }
     }
@@ -596,10 +804,16 @@ mod tests {
     #[test]
     fn prop_messages_roundtrip() {
         check("proto message roundtrip", 200, |g: &mut Gen| {
-            let msg = match g.usize_in(0, 7) {
+            let msg = match g.usize_in(0, 10) {
                 6 => Msg::Hello {
                     role: if g.bool() { Role::Data } else { Role::Control },
+                    max_wire: if g.bool() { WIRE_VERSION } else { WIRE_BINARY },
                 },
+                7 => Msg::HelloAck {
+                    wire: if g.bool() { WIRE_VERSION } else { WIRE_BINARY },
+                },
+                8 => Msg::Reject { err: random_error(g) },
+                9 => Msg::StatsDelta { stats: random_stats(g) },
                 0 => Msg::Submit {
                     id: g.usize_in(0, 1 << 30) as u64,
                     class: g.usize_in(0, 2000) as i32 - 1000,
@@ -657,6 +871,84 @@ mod tests {
     }
 
     #[test]
+    fn binary_response_roundtrips_bit_for_bit() {
+        let images = vec![0.1f32, -17.125, f32::MIN_POSITIVE, 0.0, 255.0];
+        let msg = Msg::Response {
+            id: u64::MAX - 3,
+            latency_s: 0.25,
+            images: images.clone(),
+        };
+        let bytes = msg.encode_at(WIRE_BINARY);
+        assert_eq!(bytes[0], 0x00, "binary marker");
+        assert_eq!(bytes.len(), 22 + 4 * images.len());
+        match Msg::decode(&bytes).unwrap() {
+            Msg::Response { id, latency_s, images: back } => {
+                assert_eq!(id, u64::MAX - 3);
+                assert_eq!(latency_s, 0.25);
+                for (a, b) in images.iter().zip(&back) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn encode_at_baseline_stays_json() {
+        let msg =
+            Msg::Response { id: 1, latency_s: 0.1, images: vec![1.0] };
+        let bytes = msg.encode_at(WIRE_VERSION);
+        assert_eq!(bytes, msg.encode(), "baseline must emit JSON");
+        assert_eq!(bytes[0], b'{');
+        // control messages stay JSON even past the baseline
+        let ping = Msg::Ping { seq: 9 };
+        assert_eq!(ping.encode_at(WIRE_BINARY), ping.encode());
+    }
+
+    #[test]
+    fn decode_rejects_malformed_binary_payloads() {
+        let good = Msg::Response {
+            id: 3,
+            latency_s: 0.5,
+            images: vec![1.0, 2.0],
+        }
+        .encode_at(WIRE_BINARY);
+        // short header
+        assert!(Msg::decode(&good[..10]).is_err());
+        // unknown payload kind
+        let mut bad = good.clone();
+        bad[1] = b'Z';
+        assert!(Msg::decode(&bad).is_err());
+        // length disagrees with the pixel count
+        let mut bad = good.clone();
+        bad.push(0);
+        assert!(Msg::decode(&bad).is_err());
+        assert!(Msg::decode(&good[..good.len() - 1]).is_err());
+        // non-finite latency
+        let mut bad = good.clone();
+        bad[10..18].copy_from_slice(&f64::NAN.to_be_bytes());
+        assert!(Msg::decode(&bad).is_err());
+        // the untouched original still parses
+        assert!(Msg::decode(&good).is_ok());
+    }
+
+    #[test]
+    fn baseline_hello_is_byte_identical_to_v2() {
+        // a baseline hello must not grow new fields — old nodes parse
+        // it with strict field checks
+        let h = Msg::Hello { role: Role::Data, max_wire: WIRE_VERSION };
+        assert_eq!(h.encode(), br#"{"role":"data","type":"hello"}"#);
+        // and a v2 hello (no max_wire on the wire) decodes as baseline
+        match Msg::decode(br#"{"role":"control","type":"hello"}"#).unwrap()
+        {
+            Msg::Hello { role: Role::Control, max_wire } => {
+                assert_eq!(max_wire, WIRE_VERSION)
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
     fn every_error_variant_roundtrips() {
         for err in [
             ServeError::ShuttingDown,
@@ -667,6 +959,7 @@ mod tests {
             ServeError::AllWorkersDead { cause: "z".into() },
             ServeError::NodeLost { cause: "gone".into() },
             ServeError::Protocol { cause: "junk".into() },
+            ServeError::Deadline { after_ms: 1500 },
         ] {
             let back =
                 serve_error_from_json(&serve_error_to_json(&err)).unwrap();

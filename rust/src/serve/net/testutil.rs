@@ -85,6 +85,18 @@ pub(crate) fn mock_node_capped(rungs: Vec<usize>, il: usize,
     (node, addr)
 }
 
+/// [`mock_node`] with explicit [`NodeOpts`] (reactor-mode tests).
+pub(crate) fn mock_node_opts(rungs: Vec<usize>, il: usize,
+                             delay: Duration, opts: NodeOpts)
+                             -> (NodeServer, SocketAddr) {
+    let router =
+        mock_router(rungs, il, delay, RouterOpts::default().max_queue);
+    let node = NodeServer::start(Box::new(router), "127.0.0.1:0", opts)
+        .expect("start loopback node");
+    let addr = node.addr();
+    (node, addr)
+}
+
 /// Write one protocol message (panics on failure — test plumbing).
 pub(crate) fn send_msg(stream: &mut TcpStream, msg: &Msg) {
     write_frame(stream, &msg.encode()).expect("send message");

@@ -210,6 +210,15 @@ pub struct RunConfig {
     /// Cluster: how often dead shards are re-dialed
     /// (`--reconnect-ms N`).
     pub reconnect_ms: u64,
+    /// Serve/cluster: event-driven transport (`--reactor BOOL`). One
+    /// `poll(2)` reactor thread per process owns every connection
+    /// instead of one handler thread each; same wire protocol, so
+    /// mixed deployments interoperate.
+    pub reactor: bool,
+    /// Node: accepted-connection cap in reactor mode
+    /// (`--max-conns N`); connections past the cap are refused at
+    /// accept. Ignored by the thread-per-connection transport.
+    pub max_conns: usize,
 }
 
 impl Default for RunConfig {
@@ -237,6 +246,8 @@ impl Default for RunConfig {
             control_plane: true,
             readmit_pongs: 3,
             reconnect_ms: 1000,
+            reactor: false,
+            max_conns: 4096,
         }
     }
 }
@@ -295,6 +306,8 @@ impl RunConfig {
             reconnect_ms: raw
                 .usize("reconnect-ms", d.reconnect_ms as usize)?
                 as u64,
+            reactor: raw.bool("reactor", d.reactor)?,
+            max_conns: raw.usize("max-conns", d.max_conns)?,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -335,6 +348,10 @@ impl RunConfig {
         }
         if self.reconnect_ms == 0 {
             bail!("config `reconnect-ms`: must be at least 1");
+        }
+        if self.max_conns == 0 {
+            bail!("config `max-conns`: must be at least 1 — a zero cap \
+                   refuses every connection at accept");
         }
         Ok(())
     }
@@ -516,6 +533,28 @@ name = "full run"
         let c = RawConfig::parse("readmit-pongs = many").unwrap();
         let e = format!("{:#}", RunConfig::from_raw(&c).unwrap_err());
         assert!(e.contains("readmit-pongs") && e.contains("many"), "{e}");
+    }
+
+    #[test]
+    fn reactor_and_max_conns_flags() {
+        // defaults: legacy thread-per-connection transport, roomy cap
+        let cfg = RunConfig::from_raw(&RawConfig::parse("").unwrap())
+            .unwrap();
+        assert!(!cfg.reactor);
+        assert_eq!(cfg.max_conns, 4096);
+        // bare `--reactor` parses as "true"; the cap is tunable
+        let c = RawConfig::parse("reactor = true\nmax-conns = 2000")
+            .unwrap();
+        let cfg = RunConfig::from_raw(&c).unwrap();
+        assert!(cfg.reactor);
+        assert_eq!(cfg.max_conns, 2000);
+        // a zero cap would refuse every connection
+        let c = RawConfig::parse("max-conns = 0").unwrap();
+        assert!(RunConfig::from_raw(&c).is_err());
+        // malformed values error with the key and value
+        let c = RawConfig::parse("max-conns = lots").unwrap();
+        let e = format!("{:#}", RunConfig::from_raw(&c).unwrap_err());
+        assert!(e.contains("max-conns") && e.contains("lots"), "{e}");
     }
 
     #[test]
