@@ -1,0 +1,12 @@
+//! Violating fixture for `lock-across-blocking`: a frame write happens
+//! while the shared-state guard is live, so every sibling submitter
+//! stalls behind one peer's socket. Not compiled — linted by the
+//! fixture tests in `analysis/mod.rs` and by CI expecting exit != 0.
+
+fn push_update(shared: &Shared, payload: &[u8]) -> std::io::Result<()> {
+    let mut st = crate::util::lock(&shared.state);
+    st.seq += 1;
+    st.sock.write_all(payload)?; // finding: blocking under the guard
+    st.sock.flush()?; // finding: and again
+    Ok(())
+}

@@ -1,0 +1,14 @@
+//! Clean counterpart to `lock_across_blocking_bad.rs`: state is
+//! updated under the guard, the socket write happens after the guard's
+//! block ends. Not compiled — linted by the fixture tests.
+
+fn push_update(shared: &Shared, payload: &[u8]) -> std::io::Result<()> {
+    let seq = {
+        let mut st = crate::util::lock(&shared.state);
+        st.seq += 1;
+        st.seq
+    };
+    let mut sock = shared.socket_for(seq);
+    sock.write_all(payload)?;
+    sock.flush()
+}

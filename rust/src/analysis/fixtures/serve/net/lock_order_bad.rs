@@ -1,0 +1,12 @@
+//! Violating fixture for `lock-order`: `data` (rank 3) is taken first,
+//! then `state` (rank 0) — the inverse of the declared registry, which
+//! deadlocks against any thread locking in the blessed order. Also
+//! acquires an unregistered mutex while a guard is held. Not compiled.
+
+fn rehome(conn: &Conn) {
+    let mut data = crate::util::lock(&conn.data);
+    let mut st = crate::util::lock(&conn.state); // finding: rank inversion
+    st.moved += data.take_pending();
+    let scratch = crate::util::lock(&conn.scratch); // finding: unregistered
+    drop(scratch);
+}

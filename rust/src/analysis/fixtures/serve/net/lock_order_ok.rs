@@ -1,0 +1,13 @@
+//! Clean counterpart to `lock_order_bad.rs`: acquisitions strictly
+//! ascend the registry (`state` rank 0, then `data` rank 3), and the
+//! low-rank guard is dropped before any further work. Not compiled.
+
+fn rehome(conn: &Conn) {
+    let moved = {
+        let mut st = crate::util::lock(&conn.state);
+        st.take_moved()
+    };
+    let mut data = crate::util::lock(&conn.data);
+    data.push_pending(moved);
+    drop(data);
+}

@@ -1,0 +1,12 @@
+//! Violating fixture for `no-panic-paths`: a decode path that indexes
+//! peer-controlled bytes, unwraps, and panics — a malformed frame from
+//! one peer takes the whole node down. Not compiled.
+
+fn decode_ack(bytes: &[u8]) -> Ack {
+    let kind = bytes[0]; // finding: indexing peer bytes
+    let id = parse_id(bytes).unwrap(); // finding: unwrap on a decode path
+    if kind == 0xff {
+        panic!("bad ack kind"); // finding: panic in production code
+    }
+    Ack { id }
+}

@@ -1,0 +1,17 @@
+//! Clean counterpart to `no_panic_paths_bad.rs`: total reads via
+//! `.get(..)` with typed errors, and one provably-infallible unwrap
+//! carrying the mandatory pragma + reason. Not compiled.
+
+fn decode_ack(bytes: &[u8]) -> Result<Ack, WireError> {
+    let kind = bytes.first().copied().unwrap_or(0);
+    if kind == 0xff {
+        return Err(WireError::Protocol("bad ack kind".into()));
+    }
+    let id = parse_id(bytes)?;
+    Ok(Ack { id })
+}
+
+fn newest_rung(ladder: &Ladder) -> usize {
+    // tq-lint: allow(no-panic-paths): Ladder::new rejects empty ladders
+    *ladder.rungs.last().unwrap()
+}

@@ -1,0 +1,9 @@
+//! Violating fixture for `non-poisoning-lock`: `.lock().unwrap()`
+//! turns one panicking holder into a permanent `PoisonError` for every
+//! later accessor. Not compiled.
+
+fn bump(counter: &Mutex<u64>) -> u64 {
+    let mut g = counter.lock().unwrap(); // finding: poisons on panic
+    *g += 1;
+    *g
+}

@@ -1,0 +1,9 @@
+//! Clean counterpart to `non_poisoning_lock_bad.rs`: the shared
+//! non-poisoning helper is the one blessed way to take a mutex. Not
+//! compiled.
+
+fn bump(counter: &Mutex<u64>) -> u64 {
+    let mut g = crate::util::lock(counter);
+    *g += 1;
+    *g
+}

@@ -1,0 +1,12 @@
+//! Violating fixture for `protocol-exhaustiveness`: the silent `_`
+//! wildcard swallows any `Msg` variant a newer peer sends — no log, no
+//! error, just a protocol feature that mysteriously no-ops. Not
+//! compiled.
+
+fn handle(msg: Msg) {
+    match msg {
+        Msg::Ping { seq } => pong(seq),
+        Msg::Submit { id, n } => enqueue(id, n),
+        _ => {} // finding: silent wildcard over a protocol enum
+    }
+}

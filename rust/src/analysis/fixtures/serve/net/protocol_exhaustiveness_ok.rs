@@ -1,0 +1,11 @@
+//! Clean counterpart to `protocol_exhaustiveness_bad.rs`: the
+//! catch-all arm binds and logs, so an unexpected variant leaves a
+//! trace. Not compiled.
+
+fn handle(msg: Msg) {
+    match msg {
+        Msg::Ping { seq } => pong(seq),
+        Msg::Submit { id, n } => enqueue(id, n),
+        other => log_ignored(&other),
+    }
+}

@@ -1,0 +1,9 @@
+//! Violating fixture for `reactor-discipline`: a reactor callback does
+//! blocking frame I/O inline — every connection on the loop stalls
+//! behind this one peer. Not compiled.
+
+fn on_readable(&mut self, ctl: &mut Ctl<'_>) {
+    let frame = read_frame(&mut self.sock); // finding: blocks the loop
+    self.dispatch(frame);
+    ctl.rearm();
+}

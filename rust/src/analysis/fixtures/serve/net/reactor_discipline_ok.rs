@@ -1,0 +1,15 @@
+//! Clean counterpart to `reactor_discipline_bad.rs`: the callback only
+//! drains already-buffered frames and hands real work to the pool —
+//! blocking calls live inside the offloaded closure, off the loop.
+//! Not compiled.
+
+fn on_readable(&mut self, ctl: &mut Ctl<'_>) {
+    while let Some(frame) = self.frames.next_ready() {
+        let tx = self.tx.clone();
+        self.pool.execute(move || {
+            let resp = handle_frame(frame);
+            tx.send_message(resp)
+        });
+    }
+    ctl.rearm();
+}

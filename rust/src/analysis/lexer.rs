@@ -1,0 +1,248 @@
+//! Hand-rolled Rust lexer for the lint pass — just enough token
+//! structure for the rules in [`super::rules`], none of the grammar.
+//!
+//! The hard parts a line-based grep gets wrong, handled here:
+//!
+//! * strings (`"unwrap()"` inside a string is *text*, not a call),
+//!   including escapes and raw strings `r#"…"#` with any hash depth,
+//!   and byte-string variants `b"…"` / `br"…"`;
+//! * nested block comments (`/* /* */ */` — Rust nests them, C does
+//!   not);
+//! * `'a` lifetimes vs `'x'` char literals vs `'\n'` escaped chars;
+//! * line comments, which the pragma parser reads *as tokens* (the
+//!   rules themselves only ever see the comment-free stream).
+//!
+//! Numbers, idents and single-char punctuation are enough structure
+//! for brace matching and call-shape checks; multi-char operators stay
+//! as individual punct tokens (`=>` is `=` then `>`), which the rules
+//! account for.
+
+/// Token class. `LineComment`/`BlockComment` only survive into the raw
+/// stream handed to the pragma parser; rules run on
+/// [`code_tokens`](super::scope::code_tokens) output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Num,
+    Str,
+    Char,
+    Lifetime,
+    Punct,
+    LineComment,
+    BlockComment,
+}
+
+/// One lexed token: kind, verbatim text, 1-based line of its first
+/// character.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: usize,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c == '_' || c.is_ascii_alphabetic()
+}
+
+fn is_ident_cont(c: char) -> bool {
+    c == '_' || c.is_ascii_alphanumeric()
+}
+
+/// Lex `src` into a flat token stream. Total: any input produces some
+/// token stream — unterminated strings/comments run to end of input
+/// rather than erroring, which is the right behavior for a linter that
+/// must never take the build down with it.
+pub fn lex(src: &str) -> Vec<Tok> {
+    let s: Vec<char> = src.chars().collect();
+    let n = s.len();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let text = |a: usize, b: usize| -> String { s[a..b.min(n)].iter().collect() };
+    while i < n {
+        let c = s[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == ' ' || c == '\t' || c == '\r' {
+            i += 1;
+            continue;
+        }
+        // line comment
+        if c == '/' && i + 1 < n && s[i + 1] == '/' {
+            let mut j = i;
+            while j < n && s[j] != '\n' {
+                j += 1;
+            }
+            toks.push(Tok { kind: TokKind::LineComment, text: text(i, j), line });
+            i = j;
+            continue;
+        }
+        // block comment, nesting-aware
+        if c == '/' && i + 1 < n && s[i + 1] == '*' {
+            let (start, l0) = (i, line);
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if s[j] == '\n' {
+                    line += 1;
+                    j += 1;
+                } else if s[j] == '/' && j + 1 < n && s[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if s[j] == '*' && j + 1 < n && s[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            toks.push(Tok { kind: TokKind::BlockComment, text: text(start, j), line: l0 });
+            i = j;
+            continue;
+        }
+        // raw / byte string prefixes: r"…", r#"…"#, br"…", b"…", b'x'
+        if c == 'r' || c == 'b' {
+            let mut j = i;
+            let isb = s[j] == 'b';
+            if isb {
+                j += 1;
+            }
+            if j < n && s[j] == 'r' {
+                j += 1;
+                let mut hashes = 0usize;
+                while j < n && s[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && s[j] == '"' {
+                    // raw string: runs to `"` followed by `hashes` #s
+                    j += 1;
+                    let l0 = line;
+                    let end = loop {
+                        if j >= n {
+                            break n;
+                        }
+                        if s[j] == '"' && s[j + 1..].iter().take(hashes).filter(|&&h| h == '#').count() == hashes
+                            && j + 1 + hashes <= n
+                        {
+                            break j;
+                        }
+                        if s[j] == '\n' {
+                            line += 1;
+                        }
+                        j += 1;
+                    };
+                    let stop = (end + 1 + hashes).min(n);
+                    toks.push(Tok { kind: TokKind::Str, text: text(i, stop), line: l0 });
+                    i = stop;
+                    continue;
+                }
+                // `r` / `br` not followed by a string: re-lex as ident
+                // below (fall through with i unchanged)
+            } else if isb && j < n && (s[j] == '"' || s[j] == '\'') {
+                // cooked byte string / byte char with escapes
+                let q = s[j];
+                let l0 = line;
+                let mut k = j + 1;
+                while k < n {
+                    if s[k] == '\\' {
+                        k += 2;
+                        continue;
+                    }
+                    if s[k] == '\n' {
+                        line += 1;
+                    }
+                    if s[k] == q {
+                        k += 1;
+                        break;
+                    }
+                    k += 1;
+                }
+                let kind = if q == '"' { TokKind::Str } else { TokKind::Char };
+                toks.push(Tok { kind, text: text(i, k), line: l0 });
+                i = k;
+                continue;
+            }
+        }
+        if is_ident_start(c) {
+            let mut j = i;
+            while j < n && is_ident_cont(s[j]) {
+                j += 1;
+            }
+            toks.push(Tok { kind: TokKind::Ident, text: text(i, j), line });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n && (is_ident_cont(s[j]) || s[j] == '.') {
+                // stop before `..` so ranges like `2..10` stay punct
+                if s[j] == '.' && j + 1 < n && s[j + 1] == '.' {
+                    break;
+                }
+                j += 1;
+            }
+            toks.push(Tok { kind: TokKind::Num, text: text(i, j), line });
+            i = j;
+            continue;
+        }
+        if c == '"' {
+            let l0 = line;
+            let mut j = i + 1;
+            while j < n {
+                if s[j] == '\\' {
+                    j += 2;
+                    continue;
+                }
+                if s[j] == '\n' {
+                    line += 1;
+                }
+                if s[j] == '"' {
+                    j += 1;
+                    break;
+                }
+                j += 1;
+            }
+            toks.push(Tok { kind: TokKind::Str, text: text(i, j), line: l0 });
+            i = j;
+            continue;
+        }
+        if c == '\'' {
+            // escaped char `'\n'`
+            if i + 1 < n && s[i + 1] == '\\' {
+                let mut j = i + 2;
+                if j < n {
+                    j += 1; // the escaped character itself
+                }
+                while j < n && s[j] != '\'' {
+                    j += 1;
+                }
+                j = (j + 1).min(n);
+                toks.push(Tok { kind: TokKind::Char, text: text(i, j), line });
+                i = j;
+                continue;
+            }
+            // `'x'` — any single non-quote char then a closing quote
+            if i + 2 < n && s[i + 1] != '\'' && s[i + 2] == '\'' {
+                toks.push(Tok { kind: TokKind::Char, text: text(i, i + 3), line });
+                i += 3;
+                continue;
+            }
+            // otherwise a lifetime: `'` + ident chars
+            let mut j = i + 1;
+            while j < n && is_ident_cont(s[j]) {
+                j += 1;
+            }
+            toks.push(Tok { kind: TokKind::Lifetime, text: text(i, j), line });
+            i = j;
+            continue;
+        }
+        toks.push(Tok { kind: TokKind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    toks
+}

@@ -1,0 +1,458 @@
+//! Static analysis over this repo's own Rust sources — `tq-dit lint`.
+//!
+//! A dependency-free lint pass purpose-built for the concurrency
+//! invariants the serve stack depends on but `rustc`/clippy cannot
+//! see: which mutex may be held across which calls, in what order
+//! locks nest, and which code paths must never panic. It runs in CI
+//! against the whole tree (and in a unit test below, so `cargo test`
+//! alone catches regressions).
+//!
+//! ## Pipeline
+//!
+//! 1. [`lexer`] — a hand-rolled token lexer: strings (escaped, raw
+//!    `r#"…"#`, byte), nested block comments, `'a` lifetimes vs `'x'`
+//!    char literals. Rules never see raw text, so `"unwrap()"` inside
+//!    a string literal can't false-positive.
+//! 2. [`scope`] — brace-matched structure recovery: `#[cfg(test)]` /
+//!    `#[test]` regions (exempt from every rule), per-function body
+//!    ranges, statement boundaries, `pool.execute(..)`/`spawn(..)`
+//!    offload ranges.
+//! 3. [`rules`] — the rule engine; each rule is a pure function from
+//!    tokens to [`Finding`]s:
+//!
+//!    | rule | guards against |
+//!    |------|----------------|
+//!    | `lock-across-blocking` | holding a mutex guard across socket/frame I/O, channel `recv`, `sleep`, `join` — and re-acquiring a held mutex (self-deadlock) |
+//!    | `lock-order` | acquisitions that invert the declared rank registry (`state` → `readers` → `bulk` → `data`/`ctrl`/`stream`/`half` → `record`), or touch an unregistered mutex while one is held |
+//!    | `no-panic-paths` | `.unwrap()` / `.expect()` / `panic!`-family in production `serve/` and `runtime/` code; slice-indexing peer bytes on `serve/net` decode paths |
+//!    | `protocol-exhaustiveness` | silent `_ => {}` arms over protocol enums (`Msg`, `WireError`, `ShardState`, `Role`, `Health`) in `serve/net` |
+//!    | `reactor-discipline` | blocking calls inside reactor callbacks (`on_*` fns, fns taking `Ctl`) outside `reactor.rs` |
+//!    | `non-poisoning-lock` | `.lock().unwrap()` — call sites belong on [`crate::util::lock`] |
+//!
+//! ## Suppressions
+//!
+//! `// tq-lint: allow(rule): reason` exempts the next code line (and
+//! the pragma's own line); `// tq-lint: allow-file(rule): reason`
+//! exempts the file. A reason is mandatory and the rule name must be
+//! real — anything else is a `bad-pragma` finding, so suppressions
+//! never rot silently.
+//!
+//! ## Fixtures
+//!
+//! `fixtures/serve/net/` holds one violating and one clean file per
+//! rule (the directory name puts them in scope of the path-gated
+//! rules). They are not compiled — the tree walker skips `fixtures`
+//! directories, and the tests below lint them via `include_str!`,
+//! asserting each `_bad` file trips exactly its rule and each `_ok`
+//! file is clean. CI additionally runs `tq-dit lint` on each `_bad`
+//! fixture expecting a nonzero exit.
+
+pub mod lexer;
+pub mod rules;
+pub mod scope;
+
+use std::path::{Path, PathBuf};
+
+pub use rules::{Finding, KNOWN_RULES};
+
+use crate::util::json::Json;
+
+/// Lint one source text. `path` is used both for reporting and for the
+/// path-gated rules (`serve/`, `runtime/`, `serve/net`), so pass a
+/// repo-relative or absolute path with `/` separators.
+pub fn lint_source(path: &str, src: &str) -> Vec<Finding> {
+    let raw = lexer::lex(src);
+    let mut findings = Vec::new();
+    let pragmas = rules::parse_pragmas(&raw, path, &mut findings);
+    let toks = scope::code_tokens(&raw);
+    let skip = scope::test_regions(&toks);
+    let fns = scope::functions(&toks, &skip);
+    rules::rule_locks(path, &toks, &fns, &mut findings);
+    rules::rule_no_panic(path, &toks, &fns, &mut findings);
+    rules::rule_protocol(path, &toks, &skip, &mut findings);
+    rules::rule_reactor(path, &toks, &fns, &mut findings);
+    rules::rule_lock_helper(path, &toks, &skip, &mut findings);
+    findings
+        .into_iter()
+        .filter(|f| !pragmas.suppresses(&f.rule, f.line))
+        .collect()
+}
+
+fn collect_rs(root: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    if root.is_file() {
+        out.push(root.to_path_buf());
+        return Ok(());
+    }
+    let mut entries: Vec<PathBuf> =
+        std::fs::read_dir(root)?.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            // fixtures are deliberate violations; the tests lint them
+            // explicitly, the tree walk must not
+            if p.file_name().is_some_and(|n| n == "fixtures") {
+                continue;
+            }
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under the given roots (files are linted
+/// directly; directories are walked, skipping `fixtures`). Findings
+/// come back sorted by file, line, rule.
+pub fn lint_paths(roots: &[PathBuf]) -> std::io::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    for root in roots {
+        collect_rs(root, &mut files)?;
+    }
+    files.sort();
+    let mut findings = Vec::new();
+    for f in &files {
+        let src = std::fs::read_to_string(f)?;
+        let rel = f.to_string_lossy().replace('\\', "/");
+        findings.extend(lint_source(&rel, &src));
+    }
+    findings.sort();
+    Ok(findings)
+}
+
+/// Canonical JSON report: `{"findings": [...], "counts": {...}}` via
+/// the crate's own serializer, for the CI artifact.
+pub fn report_json(findings: &[Finding]) -> Json {
+    use std::collections::BTreeMap;
+    let items: Vec<Json> = findings
+        .iter()
+        .map(|f| {
+            let mut o = BTreeMap::new();
+            o.insert("file".to_string(), Json::Str(f.file.clone()));
+            o.insert("line".to_string(), Json::Num(f.line as f64));
+            o.insert("rule".to_string(), Json::Str(f.rule.clone()));
+            o.insert("message".to_string(), Json::Str(f.message.clone()));
+            Json::Obj(o)
+        })
+        .collect();
+    let mut counts: BTreeMap<String, Json> = BTreeMap::new();
+    for f in findings {
+        let e = counts.entry(f.rule.clone()).or_insert(Json::Num(0.0));
+        if let Json::Num(n) = e {
+            *n += 1.0;
+        }
+    }
+    let mut top = BTreeMap::new();
+    top.insert("findings".to_string(), Json::Arr(items));
+    top.insert("counts".to_string(), Json::Obj(counts));
+    Json::Obj(top)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::lexer::{lex, TokKind};
+    use super::*;
+
+    fn rules_hit(path: &str, src: &str) -> Vec<String> {
+        let mut rs: Vec<String> =
+            lint_source(path, src).into_iter().map(|f| f.rule).collect();
+        rs.sort();
+        rs.dedup();
+        rs
+    }
+
+    // ------------------------------------------------------- lexer
+
+    #[test]
+    fn lexer_strings_hide_their_contents() {
+        // "unwrap()" inside string literals must lex as one Str token,
+        // never as idents the rules could match
+        let src = r##"
+            fn serve_msg() {
+                let a = "x.unwrap() inside";
+                let b = r#"raw "quoted" .unwrap() body"#;
+                let c = b"byte unwrap()";
+            }
+        "##;
+        let toks = lex(src);
+        assert_eq!(toks.iter().filter(|t| t.kind == TokKind::Str).count(), 3);
+        assert!(!toks
+            .iter()
+            .any(|t| t.kind == TokKind::Ident && t.text == "unwrap"));
+        // and the whole file lints clean even under a serve/ path
+        assert!(lint_source("serve/net/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn lexer_raw_string_hash_depths() {
+        let src = r####"let s = r###"one "# two "## three"###;"####;
+        let toks = lex(src);
+        let strs: Vec<_> =
+            toks.iter().filter(|t| t.kind == TokKind::Str).collect();
+        assert_eq!(strs.len(), 1);
+        assert!(strs[0].text.starts_with("r###\""));
+        assert!(strs[0].text.ends_with("\"###"));
+    }
+
+    #[test]
+    fn lexer_lifetimes_vs_char_literals() {
+        let src = "fn f<'a>(x: &'a str) { let c = 'x'; let nl = '\\n'; \
+                   let brace = '{'; let q = '\\''; }";
+        let toks = lex(src);
+        let lifetimes: Vec<_> = toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Lifetime)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(lifetimes, ["'a", "'a"]);
+        let chars: Vec<_> = toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Char)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(chars, ["'x'", "'\\n'", "'{'", "'\\''"]);
+        // the '{' char literal must not unbalance brace matching
+        let code = scope::code_tokens(&toks);
+        let open = code.iter().position(|t| t.text == "{").unwrap();
+        let close = scope::match_brace(&code, open);
+        assert_eq!(code[close].text, "}");
+        assert_eq!(close, code.len() - 1);
+    }
+
+    #[test]
+    fn lexer_nested_block_comments() {
+        let src = "/* outer /* inner */ still comment */ fn f() {}";
+        let toks = lex(src);
+        assert_eq!(toks[0].kind, TokKind::BlockComment);
+        assert!(toks[0].text.ends_with("still comment */"));
+        assert_eq!(toks[1].text, "fn");
+    }
+
+    #[test]
+    fn lexer_line_numbers_survive_multiline_tokens() {
+        let src = "let a = \"one\ntwo\";\nlet b = 1; /* x\ny */ let c = 2;";
+        let toks = lex(src);
+        let b = toks.iter().find(|t| t.text == "b").unwrap();
+        assert_eq!(b.line, 3); // the string spanned lines 1-2
+        let c = toks.iter().find(|t| t.text == "c").unwrap();
+        assert_eq!(c.line, 4); // the block comment spanned 3-4
+    }
+
+    // ----------------------------------------------------- pragmas
+
+    #[test]
+    fn pragma_suppresses_next_code_line_only() {
+        let src = "fn f(v: &Vec<u32>) -> u32 {\n\
+                   // tq-lint: allow(no-panic-paths): checked non-empty\n\
+                   *v.last().unwrap()\n\
+                   }\n\
+                   fn g(v: &Vec<u32>) -> u32 { *v.last().unwrap() }\n";
+        let fs = lint_source("serve/x.rs", src);
+        // f's unwrap is suppressed; g's is not
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].rule, "no-panic-paths");
+        assert_eq!(fs[0].line, 5);
+    }
+
+    #[test]
+    fn pragma_allow_file_is_filewide() {
+        let src = "// tq-lint: allow-file(no-panic-paths): generated\n\
+                   fn f(v: &Vec<u32>) -> u32 { v.first().unwrap() + 1 }\n\
+                   fn g(v: &Vec<u32>) -> u32 { *v.last().unwrap() }\n";
+        assert!(lint_source("serve/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn pragma_errors_are_findings() {
+        let cases = [
+            ("// tq-lint: allow(no-panic-paths", "missing `)`"),
+            ("// tq-lint: allow(not-a-rule): x", "unknown rule"),
+            ("// tq-lint: allow(no-panic-paths)", "needs a `: reason`"),
+            ("// tq-lint: allow(no-panic-paths):   ", "needs a `: reason`"),
+            ("// tq-lint: frobnicate", "unrecognized"),
+        ];
+        for (src, want) in cases {
+            let fs = lint_source("serve/x.rs", src);
+            assert_eq!(fs.len(), 1, "{src}");
+            assert_eq!(fs[0].rule, "bad-pragma", "{src}");
+            assert!(fs[0].message.contains(want), "{src}: {}", fs[0].message);
+        }
+    }
+
+    #[test]
+    fn bad_pragma_cannot_be_suppressed_by_itself() {
+        // an allow() of a bogus rule is a finding even on its own line
+        let src = "// tq-lint: allow(made-up-rule): because\nfn f() {}\n";
+        let fs = lint_source("serve/x.rs", src);
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].rule, "bad-pragma");
+    }
+
+    // ---------------------------------------------------- fixtures
+
+    const FIXTURES: [(&str, &str, &str); 12] = [
+        (
+            "lock-across-blocking",
+            "fixtures/serve/net/lock_across_blocking_bad.rs",
+            include_str!("fixtures/serve/net/lock_across_blocking_bad.rs"),
+        ),
+        (
+            "",
+            "fixtures/serve/net/lock_across_blocking_ok.rs",
+            include_str!("fixtures/serve/net/lock_across_blocking_ok.rs"),
+        ),
+        (
+            "lock-order",
+            "fixtures/serve/net/lock_order_bad.rs",
+            include_str!("fixtures/serve/net/lock_order_bad.rs"),
+        ),
+        (
+            "",
+            "fixtures/serve/net/lock_order_ok.rs",
+            include_str!("fixtures/serve/net/lock_order_ok.rs"),
+        ),
+        (
+            "no-panic-paths",
+            "fixtures/serve/net/no_panic_paths_bad.rs",
+            include_str!("fixtures/serve/net/no_panic_paths_bad.rs"),
+        ),
+        (
+            "",
+            "fixtures/serve/net/no_panic_paths_ok.rs",
+            include_str!("fixtures/serve/net/no_panic_paths_ok.rs"),
+        ),
+        (
+            "protocol-exhaustiveness",
+            "fixtures/serve/net/protocol_exhaustiveness_bad.rs",
+            include_str!("fixtures/serve/net/protocol_exhaustiveness_bad.rs"),
+        ),
+        (
+            "",
+            "fixtures/serve/net/protocol_exhaustiveness_ok.rs",
+            include_str!("fixtures/serve/net/protocol_exhaustiveness_ok.rs"),
+        ),
+        (
+            "reactor-discipline",
+            "fixtures/serve/net/reactor_discipline_bad.rs",
+            include_str!("fixtures/serve/net/reactor_discipline_bad.rs"),
+        ),
+        (
+            "",
+            "fixtures/serve/net/reactor_discipline_ok.rs",
+            include_str!("fixtures/serve/net/reactor_discipline_ok.rs"),
+        ),
+        (
+            "non-poisoning-lock",
+            "fixtures/serve/net/non_poisoning_lock_bad.rs",
+            include_str!("fixtures/serve/net/non_poisoning_lock_bad.rs"),
+        ),
+        (
+            "",
+            "fixtures/serve/net/non_poisoning_lock_ok.rs",
+            include_str!("fixtures/serve/net/non_poisoning_lock_ok.rs"),
+        ),
+    ];
+
+    #[test]
+    fn violating_fixtures_trip_their_rule() {
+        for (rule, path, src) in FIXTURES {
+            if rule.is_empty() {
+                continue;
+            }
+            let hit = rules_hit(path, src);
+            assert!(
+                hit.iter().any(|r| r == rule),
+                "{path}: expected a `{rule}` finding, got {hit:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn clean_fixtures_stay_clean() {
+        for (rule, path, src) in FIXTURES {
+            if !rule.is_empty() {
+                continue;
+            }
+            let fs = lint_source(path, src);
+            assert!(fs.is_empty(), "{path}: unexpected findings {fs:?}");
+        }
+    }
+
+    #[test]
+    fn self_deadlock_is_flagged() {
+        let src = "fn f(s: &Shared) {\n\
+                   let a = s.state.lock().unwrap_or_else(|p| p.into_inner());\n\
+                   let b = s.state.lock().unwrap_or_else(|p| p.into_inner());\n\
+                   }\n";
+        let fs = lint_source("serve/net/x.rs", src);
+        assert!(
+            fs.iter().any(|f| f.rule == "lock-across-blocking"
+                && f.message.contains("self-deadlock")),
+            "{fs:?}"
+        );
+    }
+
+    #[test]
+    fn condvar_wait_consumes_the_guard() {
+        // wait() hands the guard back to the condvar — the blocking
+        // call itself must NOT count as blocking-under-lock
+        let src = "fn f(s: &Shared) {\n\
+                   let mut st = crate::util::lock(&s.state);\n\
+                   st = s.cv.wait(st).unwrap_or_else(|p| p.into_inner());\n\
+                   st.n += 1;\n\
+                   }\n";
+        let fs = lint_source("serve/net/x.rs", src);
+        assert!(
+            fs.iter().all(|f| f.rule != "lock-across-blocking"),
+            "{fs:?}"
+        );
+    }
+
+    #[test]
+    fn test_regions_are_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n\
+                   fn helper(v: &Vec<u32>) -> u32 { v.first().unwrap() + 1 }\n\
+                   }\n";
+        assert!(lint_source("serve/x.rs", src).is_empty());
+        let src2 = "#[test]\nfn t() { Vec::<u32>::new().first().unwrap(); }\n";
+        assert!(lint_source("serve/x.rs", src2).is_empty());
+    }
+
+    // ----------------------------------------------------- dogfood
+
+    #[test]
+    fn dogfood_whole_tree_is_clean() {
+        // the manifest may sit at the repo root (src under rust/src) or
+        // alongside the sources — handle both
+        let base = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+        let root = if base.join("rust/src").is_dir() {
+            base.join("rust/src")
+        } else {
+            base.join("src")
+        };
+        let findings = lint_paths(&[root]).expect("walk src");
+        assert!(
+            findings.is_empty(),
+            "lint findings in the tree:\n{}",
+            findings
+                .iter()
+                .map(|f| f.to_string())
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let fs = vec![Finding {
+            file: "a.rs".into(),
+            line: 3,
+            rule: "lock-order".into(),
+            message: "m".into(),
+        }];
+        let j = report_json(&fs).dump();
+        assert!(j.contains("\"findings\""));
+        assert!(j.contains("\"lock-order\""));
+        assert!(j.contains("\"line\":3"));
+    }
+}

@@ -1,0 +1,670 @@
+//! The rule engine: pragma parsing plus the six concurrency/robustness
+//! rules, each a pure function over the token stream emitting
+//! [`Finding`]s. See the module doc on [`crate::analysis`] for what
+//! each rule enforces and why.
+
+use crate::analysis::lexer::{Tok, TokKind};
+use crate::analysis::scope::{
+    in_ranges, in_regions, match_brace, offload_ranges, stmt_start, FnBody,
+};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// One diagnostic: `file:line: rule: message`.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: String,
+    pub message: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: {}: {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Every rule a pragma may name. A pragma naming anything else is
+/// itself a finding (`bad-pragma`), so suppressions can't rot silently.
+pub const KNOWN_RULES: [&str; 6] = [
+    "lock-across-blocking",
+    "lock-order",
+    "no-panic-paths",
+    "protocol-exhaustiveness",
+    "reactor-discipline",
+    "non-poisoning-lock",
+];
+
+/// Calls that park the calling thread: socket and frame I/O, channel
+/// receives, sleeps and joins. Holding a mutex across any of these
+/// serializes every sibling on one peer's network behavior.
+const BLOCKING: [&str; 14] = [
+    "write_all", "flush", "read_exact", "write_encoded", "write_frame",
+    "read_frame", "read_message", "send_message", "connect", "accept",
+    "sleep", "join", "recv", "recv_timeout",
+];
+
+/// The declared lock-order registry: a mutex's *field name* maps to a
+/// rank; acquisitions must strictly ascend. Unregistered names acquired
+/// under a held guard are findings too — the registry is the contract.
+const LOCK_RANKS: [(&str, i32); 10] = [
+    ("state", 0), ("self", 0), ("shared", 0),
+    ("readers", 1),
+    ("bulk", 2),
+    ("data", 3), ("ctrl", 3), ("stream", 3), ("half", 3),
+    ("record", 4),
+];
+
+const PANIC_MACROS: [&str; 4] = ["panic", "unreachable", "todo", "unimplemented"];
+
+/// Enum paths that mark a `match` as protocol-shaped: a silent `_`
+/// wildcard over one of these swallows future wire/state variants.
+const PROTO_ENUMS: [&str; 5] = ["Msg", "WireError", "ShardState", "Role", "Health"];
+
+fn lock_rank(name: &str) -> Option<i32> {
+    LOCK_RANKS.iter().find(|(n, _)| *n == name).map(|&(_, r)| r)
+}
+
+/// Per-file pragma state: line-scoped allows per rule, plus file-wide
+/// allows.
+pub struct Pragmas {
+    allow: BTreeMap<String, BTreeSet<usize>>,
+    allow_file: BTreeSet<String>,
+}
+
+impl Pragmas {
+    pub fn suppresses(&self, rule: &str, line: usize) -> bool {
+        self.allow_file.contains(rule)
+            || self.allow.get(rule).is_some_and(|ls| ls.contains(&line))
+    }
+}
+
+/// Parse `// tq-lint: allow(rule): reason` (line-scoped: the pragma's
+/// own line and the first code line after it) and
+/// `// tq-lint: allow-file(rule): reason` (file-wide) out of the *raw*
+/// token stream. Malformed pragmas, unknown rules and missing reasons
+/// are `bad-pragma` findings — a suppression must always say why.
+pub fn parse_pragmas(raw: &[Tok], path: &str, findings: &mut Vec<Finding>) -> Pragmas {
+    let mut out = Pragmas { allow: BTreeMap::new(), allow_file: BTreeSet::new() };
+    for (idx, t) in raw.iter().enumerate() {
+        if t.kind != TokKind::LineComment {
+            continue;
+        }
+        let body = t.text.trim_start_matches('/').trim();
+        let Some(rest) = body.strip_prefix("tq-lint:") else {
+            continue;
+        };
+        let rest = rest.trim();
+        let mut matched = false;
+        for (kw, filewide) in [("allow-file(", true), ("allow(", false)] {
+            let Some(inner) = rest.strip_prefix(kw) else {
+                continue;
+            };
+            matched = true;
+            let Some(close) = inner.find(')') else {
+                findings.push(Finding {
+                    file: path.to_string(),
+                    line: t.line,
+                    rule: "bad-pragma".to_string(),
+                    message: "malformed tq-lint pragma (missing `)`)".to_string(),
+                });
+                break;
+            };
+            let rule = inner[..close].trim().to_string();
+            let reason = inner[close + 1..].trim();
+            if !KNOWN_RULES.contains(&rule.as_str()) {
+                findings.push(Finding {
+                    file: path.to_string(),
+                    line: t.line,
+                    rule: "bad-pragma".to_string(),
+                    message: format!("unknown rule `{rule}` in pragma"),
+                });
+                break;
+            }
+            let reason_ok = reason
+                .strip_prefix(':')
+                .is_some_and(|r| !r.trim().is_empty());
+            if !reason_ok {
+                findings.push(Finding {
+                    file: path.to_string(),
+                    line: t.line,
+                    rule: "bad-pragma".to_string(),
+                    message: "pragma needs a `: reason`".to_string(),
+                });
+                break;
+            }
+            if filewide {
+                out.allow_file.insert(rule);
+            } else {
+                let lines = out.allow.entry(rule).or_default();
+                lines.insert(t.line);
+                // the first code token after the comment: the pragma
+                // covers that line too (the usual comment-above shape)
+                for u in &raw[idx + 1..] {
+                    if matches!(u.kind, TokKind::LineComment | TokKind::BlockComment) {
+                        continue;
+                    }
+                    if u.line > t.line {
+                        lines.insert(u.line);
+                    }
+                    break;
+                }
+            }
+            break;
+        }
+        if !matched {
+            findings.push(Finding {
+                file: path.to_string(),
+                line: t.line,
+                rule: "bad-pragma".to_string(),
+                message: "unrecognized tq-lint pragma".to_string(),
+            });
+        }
+    }
+    out
+}
+
+/// Name the mutex behind a `lock(` call site: the receiver ident for
+/// method calls (`x.lock()`), the last ident inside the parens for the
+/// free-fn helper (`lock(&self.state)` → `state`).
+fn lock_receiver(toks: &[Tok], i: usize) -> Option<String> {
+    if i >= 2 && toks[i - 1].text == "." && toks[i - 2].kind == TokKind::Ident {
+        return Some(toks[i - 2].text.clone());
+    }
+    let mut depth = 0i32;
+    let mut last_ident = None;
+    let mut j = i + 1;
+    while j < toks.len() {
+        let t = &toks[j];
+        if t.text == "(" {
+            depth += 1;
+        } else if t.text == ")" {
+            depth -= 1;
+            if depth == 0 {
+                break;
+            }
+        } else if t.kind == TokKind::Ident {
+            last_ident = Some(t.text.clone());
+        }
+        j += 1;
+    }
+    last_ident
+}
+
+struct Guard {
+    /// Binding name (`<temp>` for an unbound guard expression).
+    name: String,
+    /// The mutex field it came from (registry key).
+    src: String,
+    /// Brace depth at acquisition — block exit releases it.
+    depth: i32,
+    line: usize,
+    rank: Option<i32>,
+    /// Temporary guards die at their statement's `;`.
+    temp: bool,
+    die_at: usize,
+}
+
+/// Rules 1+2 — `lock-across-blocking` and `lock-order` — share one
+/// guard-tracking walk per function: let-bound guards live until
+/// `drop()`, condvar-`wait()` consumption or block exit; temporaries
+/// die at their statement. Blocking calls and same-mutex re-acquisition
+/// while any guard is held are rule-1 findings; rank inversions and
+/// unregistered acquisitions are rule-2.
+pub fn rule_locks(path: &str, toks: &[Tok], fns: &[FnBody], findings: &mut Vec<Finding>) {
+    for f in fns {
+        let (bs, be) = (f.body_start, f.body_end.min(toks.len().saturating_sub(1)));
+        let mut guards: Vec<Guard> = Vec::new();
+        let mut depth = 0i32;
+        let offload = offload_ranges(toks, bs, be);
+        let mut i = bs;
+        while i <= be {
+            let t = &toks[i];
+            if in_ranges(i, &offload) {
+                i += 1;
+                continue;
+            }
+            if t.kind == TokKind::Punct {
+                match t.text.as_str() {
+                    "{" => depth += 1,
+                    "}" => {
+                        depth -= 1;
+                        guards.retain(|g| g.depth <= depth);
+                    }
+                    ";" => guards.retain(|g| !(g.temp && i >= g.die_at)),
+                    _ => {}
+                }
+                i += 1;
+                continue;
+            }
+            if t.kind != TokKind::Ident {
+                i += 1;
+                continue;
+            }
+            let is_call = toks.get(i + 1).is_some_and(|nt| nt.text == "(") && i + 1 <= be;
+            if t.text == "drop" && is_call {
+                if let Some(d) = toks.get(i + 2).filter(|d| d.kind == TokKind::Ident) {
+                    guards.retain(|g| g.name != d.text);
+                }
+                i += 1;
+                continue;
+            }
+            if (t.text == "wait" || t.text == "wait_timeout") && is_call {
+                // a condvar wait atomically releases (consumes) the
+                // guard passed as its first argument
+                if let Some(w) = toks.get(i + 2).filter(|w| w.kind == TokKind::Ident) {
+                    guards.retain(|g| g.name != w.text);
+                }
+                i += 1;
+                continue;
+            }
+            if t.text == "lock" && is_call {
+                let recv = lock_receiver(toks, i).unwrap_or_else(|| "?".to_string());
+                let rank = lock_rank(&recv);
+                let mut reacquired = false;
+                for g in &guards {
+                    if g.name == recv
+                        || (g.rank.is_some() && rank.is_some() && g.rank == rank && g.src == recv)
+                    {
+                        findings.push(Finding {
+                            file: path.to_string(),
+                            line: t.line,
+                            rule: "lock-across-blocking".to_string(),
+                            message: format!(
+                                "re-acquiring `{recv}` while its guard from line {} \
+                                 is still held (self-deadlock)",
+                                g.line
+                            ),
+                        });
+                        reacquired = true;
+                        break;
+                    }
+                }
+                if !reacquired {
+                    if let (None, Some(g)) = (rank, guards.last()) {
+                        findings.push(Finding {
+                            file: path.to_string(),
+                            line: t.line,
+                            rule: "lock-order".to_string(),
+                            message: format!(
+                                "`{recv}` is not in the lock-order registry but is \
+                                 acquired while `{}` (line {}) is held",
+                                g.src, g.line
+                            ),
+                        });
+                    } else if let Some(r) = rank {
+                        for g in &guards {
+                            if let Some(gr) = g.rank {
+                                if gr >= r {
+                                    findings.push(Finding {
+                                        file: path.to_string(),
+                                        line: t.line,
+                                        rule: "lock-order".to_string(),
+                                        message: format!(
+                                            "acquiring `{recv}` (rank {r}) while holding \
+                                             `{}` (rank {gr}, line {}) inverts the \
+                                             declared order",
+                                            g.src, g.line
+                                        ),
+                                    });
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                }
+                // guard lifetime: let-binding vs temporary
+                let ss = stmt_start(toks, i, bs);
+                let is_let = toks[ss].kind == TokKind::Ident && toks[ss].text == "let";
+                if is_let {
+                    let mut gi = ss + 1;
+                    if toks.get(gi).is_some_and(|t| t.text == "mut") {
+                        gi += 1;
+                    }
+                    let gname = match toks.get(gi) {
+                        // `let (g, _) = …` destructuring
+                        Some(t) if t.text == "(" => toks
+                            .get(gi + 1)
+                            .map(|t| t.text.clone())
+                            .unwrap_or_else(|| "?".to_string()),
+                        Some(t) if t.kind == TokKind::Ident => t.text.clone(),
+                        _ => "?".to_string(),
+                    };
+                    guards.push(Guard {
+                        name: gname,
+                        src: recv,
+                        depth,
+                        line: t.line,
+                        rank,
+                        temp: false,
+                        die_at: usize::MAX,
+                    });
+                } else {
+                    // temporary guard: lives to the statement's `;`
+                    let mut d2 = 0i32;
+                    let mut j = i;
+                    while j <= be {
+                        let tj = &toks[j];
+                        if tj.text == "(" || tj.text == "[" {
+                            d2 += 1;
+                        } else if tj.text == ")" || tj.text == "]" {
+                            d2 -= 1;
+                        } else if tj.text == ";" && d2 <= 0 {
+                            break;
+                        }
+                        j += 1;
+                    }
+                    guards.push(Guard {
+                        name: "<temp>".to_string(),
+                        src: recv,
+                        depth,
+                        line: t.line,
+                        rank,
+                        temp: true,
+                        die_at: j,
+                    });
+                }
+                i += 1;
+                continue;
+            }
+            if is_call && BLOCKING.contains(&t.text.as_str()) && !guards.is_empty() {
+                let g = &guards[guards.len() - 1];
+                findings.push(Finding {
+                    file: path.to_string(),
+                    line: t.line,
+                    rule: "lock-across-blocking".to_string(),
+                    message: format!(
+                        "`{}` may block while the `{}` guard from line {} is held",
+                        t.text, g.src, g.line
+                    ),
+                });
+                i += 1;
+                continue;
+            }
+            if !guards.is_empty()
+                && (t.text == "read" || t.text == "write")
+                && is_call
+                && i >= 1
+                && toks[i - 1].text == "."
+            {
+                let g = &guards[guards.len() - 1];
+                findings.push(Finding {
+                    file: path.to_string(),
+                    line: t.line,
+                    rule: "lock-across-blocking".to_string(),
+                    message: format!(
+                        "socket `{}` under the `{}` guard from line {}",
+                        t.text, g.src, g.line
+                    ),
+                });
+            }
+            guards.retain(|g| !(g.temp && i > g.die_at));
+            i += 1;
+        }
+    }
+}
+
+/// Rule 3 — `no-panic-paths`: `.unwrap()`, `.expect()` and panic
+/// macros are banned in production `serve/` and `runtime/` code; on
+/// `serve/net` decode paths, so is direct slice indexing of peer bytes
+/// (use `.get(..)` and a typed error — peers control those lengths).
+pub fn rule_no_panic(path: &str, toks: &[Tok], fns: &[FnBody], findings: &mut Vec<Finding>) {
+    let inscope =
+        (path.contains("serve/") || path.contains("runtime/")) && !path.contains("testutil");
+    if !inscope {
+        return;
+    }
+    let mut seen = BTreeSet::new();
+    for f in fns {
+        let (bs, be) = (f.body_start, f.body_end.min(toks.len().saturating_sub(1)));
+        let decode_fn = f.name.starts_with("decode") || f.name.ends_with("_from_json");
+        for i in bs..=be {
+            if seen.contains(&i) {
+                continue;
+            }
+            let t = &toks[i];
+            if t.kind != TokKind::Ident {
+                continue;
+            }
+            let nt = if i + 1 <= be { toks.get(i + 1) } else { None };
+            if (t.text == "unwrap" || t.text == "expect")
+                && i >= 1
+                && toks[i - 1].text == "."
+                && nt.is_some_and(|n| n.text == "(")
+            {
+                seen.insert(i);
+                findings.push(Finding {
+                    file: path.to_string(),
+                    line: t.line,
+                    rule: "no-panic-paths".to_string(),
+                    message: format!(
+                        "`.{}()` in production serve/runtime code — return a \
+                         typed error or degrade with a log",
+                        t.text
+                    ),
+                });
+            } else if PANIC_MACROS.contains(&t.text.as_str()) && nt.is_some_and(|n| n.text == "!")
+            {
+                seen.insert(i);
+                findings.push(Finding {
+                    file: path.to_string(),
+                    line: t.line,
+                    rule: "no-panic-paths".to_string(),
+                    message: format!("`{}!` in production serve/runtime code", t.text),
+                });
+            } else if decode_fn
+                && path.contains("serve/net")
+                && nt.is_some_and(|n| n.text == "[")
+                && i >= 1
+                && toks[i - 1].text != "&"
+                && toks[i - 1].text != "#"
+            {
+                seen.insert(i);
+                findings.push(Finding {
+                    file: path.to_string(),
+                    line: t.line,
+                    rule: "no-panic-paths".to_string(),
+                    message: format!(
+                        "indexing `{}[..]` on a decode path — use `.get(..)` and \
+                         return a typed error",
+                        t.text
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Rule 4 — `protocol-exhaustiveness`: in `serve/net`, a `match` whose
+/// arms name a protocol enum (`Msg::`, `WireError::`, `ShardState::`,
+/// `Role::`, `Health::`) must not end in a silent `_ => {}` /
+/// `_ => ()` — a new wire variant would be swallowed without a trace.
+pub fn rule_protocol(
+    path: &str,
+    toks: &[Tok],
+    skip: &[(usize, usize)],
+    findings: &mut Vec<Finding>,
+) {
+    if !path.contains("serve/net") {
+        return;
+    }
+    let n = toks.len();
+    let mut i = 0usize;
+    while i < n {
+        if in_regions(i, skip) {
+            i += 1;
+            continue;
+        }
+        let t = &toks[i];
+        if !(t.kind == TokKind::Ident && t.text == "match") {
+            i += 1;
+            continue;
+        }
+        // scrutinee runs to the `{` at bracket depth 0
+        let mut d = 0i32;
+        let mut j = i + 1;
+        while j < n {
+            let tj = &toks[j];
+            if tj.text == "(" || tj.text == "[" {
+                d += 1;
+            } else if tj.text == ")" || tj.text == "]" {
+                d -= 1;
+            } else if tj.text == "{" && d == 0 {
+                break;
+            }
+            j += 1;
+        }
+        if j >= n {
+            break;
+        }
+        let body_end = match_brace(toks, j);
+        let mentions = (j + 1..body_end.min(n)).any(|k| {
+            toks[k].kind == TokKind::Ident
+                && PROTO_ENUMS.contains(&toks[k].text.as_str())
+                && toks.get(k + 1).is_some_and(|t| t.text == ":")
+                && toks.get(k + 2).is_some_and(|t| t.text == ":")
+        });
+        if mentions {
+            let mut depth = 1i32;
+            let mut k = j + 1;
+            while k < body_end.min(n) {
+                let tk = &toks[k];
+                if tk.text == "{" {
+                    depth += 1;
+                } else if tk.text == "}" {
+                    depth -= 1;
+                } else if depth == 1
+                    && tk.kind == TokKind::Ident
+                    && tk.text == "_"
+                    && k + 2 < body_end
+                    && toks[k + 1].text == "="
+                    && toks[k + 2].text == ">"
+                {
+                    match toks.get(k + 3) {
+                        Some(b) if b.text == "{" => {
+                            let e = match_brace(toks, k + 3);
+                            if e == k + 4 {
+                                findings.push(Finding {
+                                    file: path.to_string(),
+                                    line: tk.line,
+                                    rule: "protocol-exhaustiveness".to_string(),
+                                    message: "silent `_ => {}` arm over a protocol \
+                                              enum — new variants would be swallowed; \
+                                              list them or log"
+                                        .to_string(),
+                                });
+                            }
+                        }
+                        Some(b)
+                            if b.text == "("
+                                && toks.get(k + 4).is_some_and(|t| t.text == ")") =>
+                        {
+                            findings.push(Finding {
+                                file: path.to_string(),
+                                line: tk.line,
+                                rule: "protocol-exhaustiveness".to_string(),
+                                message: "silent `_ => ()` arm over a protocol enum"
+                                    .to_string(),
+                            });
+                        }
+                        _ => {}
+                    }
+                }
+                k += 1;
+            }
+        }
+        i = if body_end > i { body_end + 1 } else { i + 1 };
+    }
+}
+
+/// Rule 5 — `reactor-discipline`: in `serve/net` (outside `reactor.rs`
+/// itself), a reactor callback — an `on_*` fn or any fn taking a `Ctl`
+/// parameter — must not make blocking calls; one stalled handler
+/// freezes every connection on the loop. Work handed to
+/// `pool.execute(..)` / `spawn(..)` is exempt (it runs elsewhere).
+pub fn rule_reactor(path: &str, toks: &[Tok], fns: &[FnBody], findings: &mut Vec<Finding>) {
+    if !path.contains("serve/net") || path.ends_with("reactor.rs") {
+        return;
+    }
+    for f in fns {
+        let (bs, be) = (f.body_start, f.body_end.min(toks.len().saturating_sub(1)));
+        let mut is_handler = f.name.starts_with("on_");
+        if !is_handler {
+            // scan the signature backwards to the `fn` keyword
+            let mut j = bs;
+            let mut steps = 0;
+            while j > 0 && steps <= 80 {
+                j -= 1;
+                steps += 1;
+                if toks[j].text == "fn" {
+                    break;
+                }
+                if toks[j].kind == TokKind::Ident && toks[j].text == "Ctl" {
+                    is_handler = true;
+                }
+            }
+        }
+        if !is_handler {
+            continue;
+        }
+        let offload = offload_ranges(toks, bs, be);
+        for i in bs..=be {
+            let t = &toks[i];
+            if t.kind != TokKind::Ident || in_ranges(i, &offload) {
+                continue;
+            }
+            let is_call = i + 1 <= be && toks.get(i + 1).is_some_and(|n| n.text == "(");
+            if !is_call {
+                continue;
+            }
+            if BLOCKING.contains(&t.text.as_str()) || t.text == "wait" || t.text == "wait_timeout"
+            {
+                findings.push(Finding {
+                    file: path.to_string(),
+                    line: t.line,
+                    rule: "reactor-discipline".to_string(),
+                    message: format!(
+                        "`{}` can block the reactor thread inside `{}` — queue it \
+                         on the pool or use the reactor timer/handle",
+                        t.text, f.name
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Rule 6 — `non-poisoning-lock`: `.lock().unwrap()` /
+/// `.lock().expect(..)` propagate poisoning; every call site belongs on
+/// [`crate::util::lock`], which recovers instead.
+pub fn rule_lock_helper(
+    path: &str,
+    toks: &[Tok],
+    skip: &[(usize, usize)],
+    findings: &mut Vec<Finding>,
+) {
+    let n = toks.len();
+    for i in 0..n {
+        if in_regions(i, skip) {
+            continue;
+        }
+        let t = &toks[i];
+        if t.kind == TokKind::Ident
+            && t.text == "lock"
+            && i + 4 < n
+            && toks[i + 1].text == "("
+            && toks[i + 2].text == ")"
+            && toks[i + 3].text == "."
+            && (toks[i + 4].text == "unwrap" || toks[i + 4].text == "expect")
+        {
+            findings.push(Finding {
+                file: path.to_string(),
+                line: t.line,
+                rule: "non-poisoning-lock".to_string(),
+                message: "`.lock().unwrap()` poisons on panic — use \
+                          crate::util::lock (non-poisoning) instead"
+                    .to_string(),
+            });
+        }
+    }
+}

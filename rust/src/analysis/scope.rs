@@ -1,0 +1,210 @@
+//! Structure recovery over the token stream: brace matching, test
+//! region discovery, per-function body ranges, statement boundaries.
+//!
+//! Everything here works on *indices into the comment-free token
+//! list* — a (start, end) pair is an inclusive token range, not a byte
+//! range. The rules never re-scan source text.
+
+use crate::analysis::lexer::{Tok, TokKind};
+
+/// Drop comment tokens; rules operate on this stream (pragmas are read
+/// from the raw stream separately).
+pub fn code_tokens(toks: &[Tok]) -> Vec<Tok> {
+    toks.iter()
+        .filter(|t| !matches!(t.kind, TokKind::LineComment | TokKind::BlockComment))
+        .cloned()
+        .collect()
+}
+
+fn is_punct(t: &Tok, p: &str) -> bool {
+    t.kind == TokKind::Punct && t.text == p
+}
+
+/// `toks[open_idx]` is `{`; index of the matching `}` (or `toks.len()`
+/// when unbalanced — callers clamp).
+pub fn match_brace(toks: &[Tok], open_idx: usize) -> usize {
+    let mut depth = 0i32;
+    for (k, t) in toks.iter().enumerate().skip(open_idx) {
+        if is_punct(t, "{") {
+            depth += 1;
+        } else if is_punct(t, "}") {
+            depth -= 1;
+            if depth == 0 {
+                return k;
+            }
+        }
+    }
+    toks.len()
+}
+
+/// Inclusive token-index ranges that are `#[cfg(test)]` mod bodies or
+/// `#[test]`/`#[bench]` fn bodies — every rule skips these; tests may
+/// unwrap freely.
+pub fn test_regions(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut regions = Vec::new();
+    let n = toks.len();
+    let mut i = 0usize;
+    while i < n {
+        if !(is_punct(&toks[i], "#") && i + 1 < n && toks[i + 1].text == "[") {
+            i += 1;
+            continue;
+        }
+        // collect attribute tokens to the matching `]`
+        let mut depth = 0i32;
+        let mut j = i + 1;
+        let mut attr: Vec<&str> = Vec::new();
+        while j < n {
+            let tj = &toks[j];
+            if tj.text == "[" {
+                depth += 1;
+            } else if tj.text == "]" {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            } else {
+                attr.push(&tj.text);
+            }
+            j += 1;
+        }
+        let is_cfg_test = attr.contains(&"cfg") && attr.contains(&"test");
+        let is_test_attr = attr == ["test"] || attr == ["bench"];
+        if is_cfg_test || is_test_attr {
+            // hop over any further attributes, then find the item body
+            let mut k = j + 1;
+            while k < n && toks[k].text == "#" && k + 1 < n && toks[k + 1].text == "[" {
+                let mut d2 = 0i32;
+                while k < n {
+                    if toks[k].text == "[" {
+                        d2 += 1;
+                    } else if toks[k].text == "]" {
+                        d2 -= 1;
+                        if d2 == 0 {
+                            break;
+                        }
+                    }
+                    k += 1;
+                }
+                k += 1;
+            }
+            while k < n && !(is_punct(&toks[k], "{") || is_punct(&toks[k], ";")) {
+                k += 1;
+            }
+            if k < n && toks[k].text == "{" {
+                let end = match_brace(toks, k);
+                regions.push((i, end));
+                i = end + 1;
+                continue;
+            }
+        }
+        i = j + 1;
+    }
+    regions
+}
+
+/// Whether token index `idx` falls in any of the inclusive `regions`.
+pub fn in_regions(idx: usize, regions: &[(usize, usize)]) -> bool {
+    regions.iter().any(|&(a, b)| a <= idx && idx <= b)
+}
+
+/// A function body found in the stream: name plus the inclusive token
+/// range of its `{ … }` body.
+#[derive(Clone, Debug)]
+pub struct FnBody {
+    pub name: String,
+    pub body_start: usize,
+    pub body_end: usize,
+}
+
+/// All non-test function bodies. Nested fns are yielded separately;
+/// their tokens also sit inside the parent's range, which the rules
+/// tolerate (a finding is deduplicated by token index where it
+/// matters).
+pub fn functions(toks: &[Tok], skip: &[(usize, usize)]) -> Vec<FnBody> {
+    let mut out = Vec::new();
+    let n = toks.len();
+    let mut i = 0usize;
+    while i < n {
+        if in_regions(i, skip) {
+            i += 1;
+            continue;
+        }
+        let t = &toks[i];
+        if t.kind == TokKind::Ident
+            && t.text == "fn"
+            && i + 1 < n
+            && toks[i + 1].kind == TokKind::Ident
+        {
+            let name = toks[i + 1].text.clone();
+            let mut k = i + 2;
+            while k < n && !(is_punct(&toks[k], "{") || is_punct(&toks[k], ";")) {
+                k += 1;
+            }
+            if k < n && toks[k].text == "{" {
+                let end = match_brace(toks, k);
+                out.push(FnBody { name, body_start: k, body_end: end });
+                i += 2;
+                continue;
+            }
+            i = k;
+            continue;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// First token index of the statement containing `i` (the token after
+/// the nearest `;`, `{` or `}` at or before it).
+pub fn stmt_start(toks: &[Tok], i: usize, body_start: usize) -> usize {
+    let mut j = i.saturating_sub(1);
+    while j > body_start {
+        let t = &toks[j];
+        if t.kind == TokKind::Punct && (t.text == ";" || t.text == "{" || t.text == "}") {
+            return j + 1;
+        }
+        j -= 1;
+    }
+    body_start + 1
+}
+
+/// Token ranges inside `pool.execute(..)` / `thread::spawn(..)` call
+/// arguments within `[start, end]`: closure bodies that run off the
+/// current thread, exempt from on-thread blocking rules.
+pub fn offload_ranges(toks: &[Tok], start: usize, end: usize) -> Vec<(usize, usize)> {
+    let mut ranges = Vec::new();
+    let end = end.min(toks.len().saturating_sub(1));
+    let mut k = start;
+    while k <= end {
+        let t = &toks[k];
+        if t.kind == TokKind::Ident
+            && (t.text == "execute" || t.text == "spawn")
+            && k + 1 <= end
+            && toks[k + 1].text == "("
+        {
+            let mut depth = 0i32;
+            let mut j = k + 1;
+            while j <= end {
+                if toks[j].text == "(" {
+                    depth += 1;
+                } else if toks[j].text == ")" {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                j += 1;
+            }
+            ranges.push((k, j));
+            k = j + 1;
+            continue;
+        }
+        k += 1;
+    }
+    ranges
+}
+
+/// Whether token index `i` falls in any offload range.
+pub fn in_ranges(i: usize, ranges: &[(usize, usize)]) -> bool {
+    ranges.iter().any(|&(a, b)| a <= i && i <= b)
+}

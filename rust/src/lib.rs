@@ -30,7 +30,12 @@
 //!   node loss).
 //! * [`metrics`] — FID / sFID / Inception Score, image writers.
 //! * [`data`] — synthetic dataset (mirror of `python/compile/data.py`).
+//! * [`analysis`] — static analysis over this repo's own sources
+//!   (`tq-dit lint`): concurrency-invariant rules — lock-across-
+//!   blocking, lock order, panic-free serve paths, protocol match
+//!   exhaustiveness, reactor discipline — gated in CI.
 
+pub mod analysis;
 pub mod coordinator;
 pub mod data;
 pub mod metrics;

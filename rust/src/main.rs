@@ -13,6 +13,8 @@
 //!   node           expose the generation service as a shard node
 //!                  (`--listen ADDR`) for a cluster frontend
 //!   stats          artifact/manifest inventory + exec stats
+//!   lint           static analysis over the repo's own Rust sources
+//!                  (concurrency invariants; nonzero exit on findings)
 //!
 //! Common flags: --artifacts DIR --wbits K --abits K --timesteps T
 //!   --groups G --calib-per-group N --rounds R --candidates C
@@ -65,6 +67,7 @@ fn main() -> Result<()> {
         "node" => cmd_node(cfg, &args),
         "report" => cmd_report(cfg, &args),
         "stats" => cmd_stats(cfg),
+        "lint" => cmd_lint(&args),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
             Ok(())
@@ -91,6 +94,9 @@ SUBCOMMANDS
                  (--listen ADDR, --workers, --run-secs N; 0 = forever)
   report         per-layer quantization-error attribution (--method)
   stats          manifest inventory
+  lint           static analysis over the repo's own Rust sources
+                 ([PATHS...], default rust/src; --json PATH writes a
+                 machine-readable report; exits nonzero on findings)
 
 FLAGS (all subcommands)
   --artifacts DIR       AOT artifact directory  [artifacts]
@@ -371,6 +377,38 @@ fn cmd_report(cfg: RunConfig, args: &Args) -> Result<()> {
     tq_dit::coordinator::report::print_report(
         reps, &format!("{} W{}A{}", method.name(), cfg.wbits, cfg.abits));
     Ok(())
+}
+
+/// `tq-dit lint [--json PATH] [PATHS...]` — run the crate's own static
+/// analysis (see `tq_dit::analysis`) over the given files/directories,
+/// defaulting to the Rust source tree. Exits nonzero on any finding so
+/// CI can gate on it; `--json` additionally writes the report as an
+/// artifact.
+fn cmd_lint(args: &Args) -> Result<()> {
+    let roots: Vec<std::path::PathBuf> = if args.positional.is_empty() {
+        // work from either the repo root or rust/
+        let rs = std::path::PathBuf::from("rust/src");
+        vec![if rs.is_dir() { rs } else { "src".into() }]
+    } else {
+        args.positional.iter().map(Into::into).collect()
+    };
+    let findings = tq_dit::analysis::lint_paths(&roots)
+        .with_context(|| format!("linting {roots:?}"))?;
+    for f in &findings {
+        println!("{f}");
+    }
+    if let Some(path) = args.get("json") {
+        let report = tq_dit::analysis::report_json(&findings);
+        std::fs::write(path, report.dump())
+            .with_context(|| format!("writing lint report {path}"))?;
+        eprintln!("wrote lint report to {path}");
+    }
+    if findings.is_empty() {
+        eprintln!("lint: clean");
+        Ok(())
+    } else {
+        bail!("lint: {} finding(s)", findings.len());
+    }
 }
 
 fn cmd_stats(cfg: RunConfig) -> Result<()> {

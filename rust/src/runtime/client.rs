@@ -156,7 +156,9 @@ impl Runtime {
             .iter()
             .map(|(k, s)| (k.clone(), *s))
             .collect();
-        v.sort_by(|a, b| b.1.total_s.partial_cmp(&a.1.total_s).unwrap());
+        // total_cmp, not partial_cmp().unwrap(): one NaN timing must
+        // not panic a stats snapshot
+        v.sort_by(|a, b| b.1.total_s.total_cmp(&a.1.total_s));
         v
     }
 }

@@ -97,6 +97,47 @@
 //! never mistaken for a dead one), and death is recoverable: dead
 //! shards are re-dialed, probed, and re-admitted into placement with a
 //! ramp-up weight (see [`net::health`]).
+//!
+//! # Concurrency invariants (machine-checked by `tq-dit lint`)
+//!
+//! The serve stack's locking discipline is enforced by the crate's own
+//! static analysis ([`crate::analysis`]), which runs in CI and in a
+//! dogfood unit test — the invariants below are *checked*, not
+//! aspirational:
+//!
+//! * **No blocking under a lock** (`lock-across-blocking`): no mutex
+//!   guard may be held across socket/frame I/O, channel `recv`,
+//!   `sleep` or `join`. State updates happen under the lock; wire
+//!   writes happen after it is released (the lost-node path re-queues
+//!   on failure). The two deliberate exceptions carry
+//!   `// tq-lint: allow(...)` pragmas with their justification: the
+//!   thread-pool worker whose receiver mutex *is* the work queue, and
+//!   the bounded single-frame writes in [`net::send_message`] /
+//!   `cluster::send_control` where the chunk protocol releases the
+//!   frame lock between chunks.
+//! * **Lock order** (`lock-order`): nested acquisitions must ascend
+//!   the declared registry — `state` (0) → `readers` (1) → `bulk` (2)
+//!   → `data`/`ctrl`/`stream`/`half` (3) → `record` (4) — and no
+//!   unregistered mutex may be taken while one is held. Condvar
+//!   `wait`s consume their guard and are exempt by construction.
+//! * **No panics on the request path** (`no-panic-paths`):
+//!   `.unwrap()`/`.expect()`/`panic!`-family are banned in production
+//!   `serve/` and `runtime/` code — failures surface as typed
+//!   [`ServeError`]s or logged degradation. On `serve/net` decode
+//!   paths, slice-indexing peer-controlled bytes is banned too (the
+//!   total `wire::be_*` readers exist for exactly this). Tests are
+//!   exempt; provably-infallible sites carry a pragma with a reason.
+//! * **Protocol matches stay loud** (`protocol-exhaustiveness`): no
+//!   silent `_ => {}` over `Msg`/`WireError`/`ShardState`/`Role`/
+//!   `Health` in `serve/net` — a new wire variant must force a
+//!   decision, not vanish.
+//! * **Reactor callbacks never block** (`reactor-discipline`): `on_*`
+//!   handlers and `Ctl`-taking fns outside `reactor.rs` must hand
+//!   blocking work to the pool; one stalled callback would freeze
+//!   every connection on the loop.
+//! * **One way to lock** (`non-poisoning-lock`): every
+//!   `std::sync::Mutex` is taken through [`crate::util::lock`], which
+//!   recovers from poisoning instead of cascading `PoisonError`s.
 
 pub mod batcher;
 pub mod dispatch;

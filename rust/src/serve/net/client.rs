@@ -92,7 +92,7 @@ struct ClientShared {
 
 impl ClientShared {
     fn lock(&self) -> std::sync::MutexGuard<'_, ClientState> {
-        self.state.lock().unwrap_or_else(|p| p.into_inner())
+        crate::util::lock(&self.state)
     }
 
     /// Fail every pending request with `err()`; shared by loss,
@@ -392,11 +392,17 @@ impl NetClient {
             });
             token
         };
-        let handle = self
-            .shared
-            .reactor
-            .get()
-            .expect("set during connect");
+        let Some(handle) = self.shared.reactor.get() else {
+            // connect() sets this before handing the client out; a
+            // missing reactor is a broken handle, not a broken process
+            let mut st = self.shared.lock();
+            st.pending.remove(&id);
+            st.failed_requests += 1;
+            return Err(ServeError::NodeLost {
+                cause: format!("{}: client reactor not initialized",
+                               self.shared.addr),
+            });
+        };
         let msg = Msg::Submit { id, class: req.class, n: req.n };
         if !handle.send(token, msg.encode()) {
             // reactor gone: fail this one typed, right now

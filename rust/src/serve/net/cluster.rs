@@ -229,7 +229,7 @@ impl ShardConn {
     /// Take + close both halves (node loss, teardown).
     fn close(&self) {
         for half in [&self.data, &self.ctrl] {
-            let mut g = half.lock().unwrap_or_else(|p| p.into_inner());
+            let mut g = crate::util::lock(half);
             if let Some(s) = g.take() {
                 let _ = s.shutdown(std::net::Shutdown::Both);
             }
@@ -258,7 +258,7 @@ struct ClusterShared {
 
 impl ClusterShared {
     fn lock(&self) -> std::sync::MutexGuard<'_, ClusterState> {
-        self.state.lock().unwrap_or_else(|p| p.into_inner())
+        crate::util::lock(&self.state)
     }
 }
 
@@ -396,8 +396,8 @@ impl Cluster {
                 Ok((Some(data), ctrl, data_rd, ctrl_rd))
             }) {
                 Ok((data_wr, ctrl_wr, data_rd, ctrl_rd)) => {
-                    *conn.data.lock().unwrap() = data_wr;
-                    *conn.ctrl.lock().unwrap() = ctrl_wr;
+                    *crate::util::lock(&conn.data) = data_wr;
+                    *crate::util::lock(&conn.ctrl) = ctrl_wr;
                     epoch[i] = 1;
                     reader_specs.push((i, data_rd, Role::Data));
                     if let Some(c) = ctrl_rd {
@@ -566,10 +566,17 @@ impl Cluster {
                 }));
                 return Ok((id, rx));
             }
-            shard = st
-                .health
-                .pick(&st.inflight)
-                .expect("serving_count > 0 implies a pick");
+            shard = match st.health.pick(&st.inflight) {
+                Some(s) => s,
+                // serving_count was checked above, but the health map
+                // is shared state: fail the request typed, not the
+                // process, if it emptied in between
+                None => {
+                    return Err(ServeError::NodeLost {
+                        cause: "no serving shard available".into(),
+                    });
+                }
+            };
             epoch = st.epoch[shard];
             st.pending.insert(id, ClusterPending {
                 class: req.class,
@@ -740,11 +747,7 @@ impl Cluster {
             conn.close();
         }
         let readers: Vec<JoinHandle<()>> = {
-            let mut g = self
-                .shared
-                .readers
-                .lock()
-                .unwrap_or_else(|p| p.into_inner());
+            let mut g = crate::util::lock(&self.shared.readers);
             g.drain(..).collect()
         };
         for h in readers {
@@ -868,13 +871,13 @@ fn send_control(shared: &ClusterShared, shard: usize, msg: &Msg)
     if shared.opts.reactor {
         return reactor_send(shared, shard, msg, Role::Control);
     }
-    let mut g = shared.conns[shard]
-        .ctrl
-        .lock()
-        .unwrap_or_else(|p| p.into_inner());
+    let mut g = crate::util::lock(&shared.conns[shard].ctrl);
     let Some(stream) = g.as_mut() else {
         return Err("control connection already closed".into());
     };
+    // tq-lint: allow(lock-across-blocking): control frames are tiny
+    // (one header + a short body) and the socket has a write timeout;
+    // the ctrl mutex only serializes writers on this one stream
     write_frame(stream, &msg.encode()).map_err(|e| e.to_string())
 }
 
@@ -1006,10 +1009,11 @@ fn shard_lost(shared: &ClusterShared, shard: usize, epoch: u64,
                 match st.health.pick(&st.inflight) {
                     Some(j) => {
                         let ep_j = st.epoch[j];
-                        let p = st
-                            .pending
-                            .get_mut(&id)
-                            .expect("collected from pending");
+                        let Some(p) = st.pending.get_mut(&id) else {
+                            debug_log!("cluster: request {id} resolved \
+                                        while being re-homed");
+                            continue;
+                        };
                         p.shard = j;
                         let (class, n) = (p.class, p.n);
                         st.inflight[j] += n;
@@ -1098,7 +1102,7 @@ fn spawn_reader(shared: &Arc<ClusterShared>, shard: usize, epoch: u64,
             }
         })
         .context("spawning cluster reader thread")?;
-    let mut g = shared.readers.lock().unwrap_or_else(|p| p.into_inner());
+    let mut g = crate::util::lock(&shared.readers);
     // reap finished readers so a long-lived frontend does not grow a
     // handle per reconnect it ever performed
     g.retain(|h| !h.is_finished());
@@ -1427,17 +1431,11 @@ fn try_reconnect(shared: &Arc<ClusterShared>, i: usize) {
         }
     };
     {
-        let mut g = shared.conns[i]
-            .data
-            .lock()
-            .unwrap_or_else(|p| p.into_inner());
+        let mut g = crate::util::lock(&shared.conns[i].data);
         *g = Some(data);
     }
     {
-        let mut g = shared.conns[i]
-            .ctrl
-            .lock()
-            .unwrap_or_else(|p| p.into_inner());
+        let mut g = crate::util::lock(&shared.conns[i].ctrl);
         *g = ctrl;
     }
     let epoch = {

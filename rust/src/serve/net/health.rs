@@ -219,7 +219,9 @@ impl Health {
             ShardState::Alive => {
                 s.ramp = s.ramp.saturating_sub(1);
             }
-            ShardState::Dead => unreachable!("handled above"),
+            // early-returned at the top of this fn; nothing to do, and
+            // nothing worth panicking over if that ever changes
+            ShardState::Dead => {}
         }
         false
     }
@@ -276,7 +278,13 @@ impl Health {
                 ShardState::Probation if silent > streak_break => {
                     s.probation_pongs = 0;
                 }
-                _ => {}
+                // explicitly unchanged by the beat — a new state added
+                // to the machine must decide its tick behavior here
+                // rather than fall through a wildcard
+                ShardState::Alive
+                | ShardState::Suspect
+                | ShardState::Dead
+                | ShardState::Probation => {}
             }
         }
     }

@@ -114,18 +114,24 @@ pub(crate) fn send_message(stream: &Mutex<Option<TcpStream>>,
     let write_one = |range: std::ops::Range<usize>, ctrl: u16|
                      -> Result<(), wire::WireError> {
         let frame = wire::encode_frame_ctrl(&payload[range], ctrl)?;
-        let mut g = stream.lock().unwrap_or_else(|p| p.into_inner());
+        let mut g = crate::util::lock(stream);
         let Some(s) = g.as_mut() else {
             return Err(wire::WireError::Io(
                 "connection already closed".into()));
         };
+        // tq-lint: allow(lock-across-blocking): by design — one frame
+        // is bounded by CHUNK_LEN and the chunk protocol releases the
+        // frame lock between frames, so no writer waits behind more
+        // than one bounded write (module doc above)
         wire::write_encoded(s, &frame)
     };
-    if plan.len() == 1 {
-        let (range, ctrl) = plan.into_iter().next().expect("len 1");
-        return write_one(range, ctrl);
-    }
-    let _bulk = bulk.lock().unwrap_or_else(|p| p.into_inner());
+    // a single-frame message skips the bulk lock entirely: nothing to
+    // interleave with
+    let _bulk = if plan.len() > 1 {
+        Some(crate::util::lock(bulk))
+    } else {
+        None
+    };
     for (range, ctrl) in plan {
         write_one(range, ctrl)?;
     }

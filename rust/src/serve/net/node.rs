@@ -346,9 +346,7 @@ impl Drop for NodeServer {
     }
 }
 
-fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(|p| p.into_inner())
-}
+use crate::util::lock;
 
 fn accept_loop(shared: Arc<NodeShared>, listener: TcpListener) {
     let mut next_conn = 0usize;

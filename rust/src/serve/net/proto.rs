@@ -66,6 +66,7 @@
 use anyhow::{bail, Context, Result};
 
 use crate::serve::error::ServeError;
+use crate::serve::net::wire;
 use crate::serve::net::wire::WIRE_VERSION;
 use crate::serve::router::{RungStats, ServerStats, WorkerStats};
 use crate::util::json::Json;
@@ -411,15 +412,16 @@ fn decode_binary(bytes: &[u8]) -> Result<Msg> {
             BIN_RESP_HEADER
         );
     }
-    if bytes[1] != BIN_RESPONSE {
-        bail!("unknown binary payload kind 0x{:02x}", bytes[1]);
+    let kind = bytes.get(1).copied().unwrap_or(0);
+    if kind != BIN_RESPONSE {
+        bail!("unknown binary payload kind 0x{kind:02x}");
     }
-    let id = u64::from_be_bytes(bytes[2..10].try_into().unwrap());
-    let latency_s = f64::from_be_bytes(bytes[10..18].try_into().unwrap());
+    let id = wire::be_u64(bytes, 2);
+    let latency_s = f64::from_bits(wire::be_u64(bytes, 10));
     if !latency_s.is_finite() {
         bail!("binary response `latency_s` is not finite");
     }
-    let n = u32::from_be_bytes(bytes[18..22].try_into().unwrap()) as usize;
+    let n = wire::be_u32(bytes, 18) as usize;
     let want = BIN_RESP_HEADER + 4 * n;
     if bytes.len() != want {
         bail!(
@@ -430,9 +432,11 @@ fn decode_binary(bytes: &[u8]) -> Result<Msg> {
             want
         );
     }
-    let images = bytes[BIN_RESP_HEADER..]
+    let images = bytes
+        .get(BIN_RESP_HEADER..)
+        .unwrap_or(&[])
         .chunks_exact(4)
-        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .map(wire::le_f32)
         .collect();
     Ok(Msg::Response { id, latency_s, images })
 }
@@ -797,7 +801,13 @@ mod tests {
             7 => ServeError::Deadline {
                 after_ms: g.usize_in(1, 60_000) as u64,
             },
-            _ => ServeError::Protocol { cause: "bad frame".into() },
+            8 => ServeError::Protocol { cause: "bad frame".into() },
+            // usize_in(0, 8) is inclusive on both ends; a ninth value
+            // can only mean a Gen bug, and a new variant added to the
+            // roundtrip must get its own arm here
+            out_of_range => {
+                unreachable!("usize_in(0, 8) returned {out_of_range}")
+            }
         }
     }
 

@@ -228,6 +228,51 @@ pub fn encode_chunks(payload: &[u8]) -> Result<Vec<Vec<u8>>, WireError> {
         .collect()
 }
 
+// -- total byte-field reads ----------------------------------------------
+//
+// Decode paths must never panic on peer bytes (the `no-panic-paths`
+// lint rule enforces it), so header fields are read through these
+// *total* helpers instead of `slice[a..b].try_into().unwrap()`:
+// out-of-range bytes read as zero. Every caller checks the buffer
+// length before parsing, and a genuinely short buffer surfaces as a
+// magic/checksum mismatch — a typed error, never an index panic.
+
+/// Big-endian `u16` at `at`; missing bytes read as zero.
+pub(crate) fn be_u16(b: &[u8], at: usize) -> u16 {
+    let mut a = [0u8; 2];
+    for (d, s) in a.iter_mut().zip(b.iter().skip(at)) {
+        *d = *s;
+    }
+    u16::from_be_bytes(a)
+}
+
+/// Big-endian `u32` at `at`; missing bytes read as zero.
+pub(crate) fn be_u32(b: &[u8], at: usize) -> u32 {
+    let mut a = [0u8; 4];
+    for (d, s) in a.iter_mut().zip(b.iter().skip(at)) {
+        *d = *s;
+    }
+    u32::from_be_bytes(a)
+}
+
+/// Big-endian `u64` at `at`; missing bytes read as zero.
+pub(crate) fn be_u64(b: &[u8], at: usize) -> u64 {
+    let mut a = [0u8; 8];
+    for (d, s) in a.iter_mut().zip(b.iter().skip(at)) {
+        *d = *s;
+    }
+    u64::from_be_bytes(a)
+}
+
+/// Little-endian `f32` from (up to) the first four bytes of `c`.
+pub(crate) fn le_f32(c: &[u8]) -> f32 {
+    let mut a = [0u8; 4];
+    for (d, s) in a.iter_mut().zip(c.iter()) {
+        *d = *s;
+    }
+    f32::from_le_bytes(a)
+}
+
 /// Write one pre-encoded frame buffer (from [`encode_frame`] /
 /// [`encode_chunks`]) to `w` and flush.
 pub fn write_encoded<W: Write>(w: &mut W, frame: &[u8])
@@ -286,27 +331,27 @@ fn read_frame_raw<R: Read>(r: &mut R)
     // the payload length is unknown until the header is parsed, so
     // `want` for a header-stage truncation is the header itself
     read_full(r, &mut hdr, 0, HEADER_LEN)?;
-    let magic = u32::from_be_bytes(hdr[0..4].try_into().unwrap());
+    let magic = be_u32(&hdr, 0);
     if magic != WIRE_MAGIC {
         return Err(WireError::BadMagic { got: magic });
     }
-    let version = u16::from_be_bytes(hdr[4..6].try_into().unwrap());
+    let version = be_u16(&hdr, 4);
     if version != WIRE_VERSION {
         return Err(WireError::VersionSkew {
             got: version,
             want: WIRE_VERSION,
         });
     }
-    let ctrl = u16::from_be_bytes(hdr[6..8].try_into().unwrap());
+    let ctrl = be_u16(&hdr, 6);
     if ctrl != 0 && ctrl & CTRL_CHUNKED == 0 {
         // FIN or a seq number on a non-chunk frame: corruption
         return Err(WireError::BadControl { got: ctrl });
     }
-    let len = u32::from_be_bytes(hdr[8..12].try_into().unwrap()) as usize;
+    let len = be_u32(&hdr, 8) as usize;
     if len > MAX_FRAME_LEN {
         return Err(WireError::TooLarge { len, max: MAX_FRAME_LEN });
     }
-    let want_sum = u64::from_be_bytes(hdr[12..20].try_into().unwrap());
+    let want_sum = be_u64(&hdr, 12);
     let mut payload = vec![0u8; len];
     read_full(r, &mut payload, HEADER_LEN, HEADER_LEN + len)?;
     let got_sum = fnv1a(&[&hdr[..12], &payload]);
@@ -465,13 +510,12 @@ impl FrameDecoder {
                 return Ok(None);
             }
             let hdr = &self.buf[self.off..self.off + HEADER_LEN];
-            let magic = u32::from_be_bytes(hdr[0..4].try_into().unwrap());
+            let magic = be_u32(hdr, 0);
             if magic != WIRE_MAGIC {
                 self.partial = None;
                 return Err(WireError::BadMagic { got: magic });
             }
-            let version =
-                u16::from_be_bytes(hdr[4..6].try_into().unwrap());
+            let version = be_u16(hdr, 4);
             if version != WIRE_VERSION {
                 self.partial = None;
                 return Err(WireError::VersionSkew {
@@ -479,13 +523,12 @@ impl FrameDecoder {
                     want: WIRE_VERSION,
                 });
             }
-            let ctrl = u16::from_be_bytes(hdr[6..8].try_into().unwrap());
+            let ctrl = be_u16(hdr, 6);
             if ctrl != 0 && ctrl & CTRL_CHUNKED == 0 {
                 self.partial = None;
                 return Err(WireError::BadControl { got: ctrl });
             }
-            let len =
-                u32::from_be_bytes(hdr[8..12].try_into().unwrap()) as usize;
+            let len = be_u32(hdr, 8) as usize;
             if len > MAX_FRAME_LEN {
                 self.partial = None;
                 return Err(WireError::TooLarge {
@@ -497,8 +540,7 @@ impl FrameDecoder {
                 self.compact();
                 return Ok(None);
             }
-            let want_sum =
-                u64::from_be_bytes(hdr[12..20].try_into().unwrap());
+            let want_sum = be_u64(hdr, 12);
             let start = self.off + HEADER_LEN;
             let payload = &self.buf[start..start + len];
             let got_sum =
@@ -567,10 +609,7 @@ impl FrameDecoder {
         } else if avail < HEADER_LEN {
             WireError::Truncated { got: avail, want: HEADER_LEN }
         } else {
-            let at = self.off + 8;
-            let len = u32::from_be_bytes(
-                self.buf[at..at + 4].try_into().unwrap(),
-            ) as usize;
+            let len = be_u32(&self.buf, self.off + 8) as usize;
             WireError::Truncated { got: avail, want: HEADER_LEN + len }
         }
     }

@@ -56,17 +56,18 @@ impl Ladder {
 
     /// Largest rung (the classic full artifact batch).
     pub fn max(&self) -> usize {
+        // tq-lint: allow(no-panic-paths): Ladder::new rejects an empty
+        // rung list, so `last()` is always Some
         *self.rungs.last().unwrap()
     }
 
     /// Smallest rung that covers `n` slots, or the largest rung when
     /// none does (`n` then spans several dispatches).
     pub fn rung_for(&self, n: usize) -> usize {
-        *self
-            .rungs
-            .iter()
-            .find(|&&r| r >= n)
-            .unwrap_or_else(|| self.rungs.last().unwrap())
+        match self.rungs.iter().find(|&&r| r >= n) {
+            Some(&r) => r,
+            None => self.max(),
+        }
     }
 
     /// Whether some rung holds exactly `n` slots (zero padding).

@@ -638,7 +638,7 @@ impl Shared {
     /// panic — the counters may be slightly stale, but clients keep
     /// getting typed errors instead.
     fn lock(&self) -> std::sync::MutexGuard<'_, RouterState> {
-        self.state.lock().unwrap_or_else(|p| p.into_inner())
+        crate::util::lock(&self.state)
     }
 
     /// Worker bookkeeping on thread exit; if this was the last worker,
@@ -691,9 +691,10 @@ impl Router {
         });
         let mut handles = Vec::with_capacity(workers);
         for idx in 0..workers {
+            let on_spawn_err = Arc::clone(&shared);
             let shared = Arc::clone(&shared);
             let body = Arc::clone(&body);
-            let h = std::thread::Builder::new()
+            let spawned = std::thread::Builder::new()
                 .name(format!("gen-worker-{idx}"))
                 .spawn(move || {
                     let handle = WorkerHandle {
@@ -710,9 +711,21 @@ impl Router {
                         Err(p) => Some(panic_message(&p)),
                     };
                     shared.worker_exited(idx, err);
-                })
-                .expect("spawn gen worker");
-            handles.push(h);
+                });
+            match spawned {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    // a worker that never got a thread is a dead worker
+                    // with a typed cause (clients see WorkerInitFailed /
+                    // AllWorkersDead), not a process abort
+                    crate::warn_log!(
+                        "router: spawning gen-worker-{idx} failed: {e}");
+                    on_spawn_err.worker_exited(
+                        idx,
+                        Some(format!("thread spawn failed: {e}")),
+                    );
+                }
+            }
         }
         Router {
             shared,

@@ -84,7 +84,7 @@ impl CalibCell {
         F: FnOnce() -> (std::result::Result<QuantConfig, String>,
                         Option<bool>),
     {
-        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        let mut st = crate::util::lock(&self.state);
         loop {
             let claim = match *st {
                 CalibState::Done(ref res) => {
@@ -107,7 +107,7 @@ impl CalibCell {
             let guard = CalibPanicGuard { cell: self };
             let t0 = Instant::now();
             let (res, cache) = f();
-            *self.record.lock().unwrap_or_else(|p| p.into_inner()) =
+            *crate::util::lock(&self.record) =
                 Some(CalibRecord {
                     cache,
                     cold_start_ms: t0.elapsed().as_secs_f64() * 1e3,
@@ -121,12 +121,11 @@ impl CalibCell {
 
     /// The resolution record, once some caller has resolved.
     fn record(&self) -> Option<CalibRecord> {
-        *self.record.lock().unwrap_or_else(|p| p.into_inner())
+        *crate::util::lock(&self.record)
     }
 
     fn publish(&self, res: std::result::Result<QuantConfig, String>) {
-        let mut st =
-            self.state.lock().unwrap_or_else(|p| p.into_inner());
+        let mut st = crate::util::lock(&self.state);
         *st = CalibState::Done(res);
         drop(st);
         self.ready.notify_all();

@@ -14,3 +14,34 @@ pub mod logging;
 pub mod meminfo;
 pub mod rng;
 pub mod threadpool;
+
+use std::sync::{Mutex, MutexGuard};
+
+/// Non-poisoning lock, the one way the whole codebase takes a
+/// `std::sync::Mutex`: a panicking holder must not take every later
+/// accessor down with a `PoisonError` — the guarded state here is
+/// queues and counters that stay consistent statement-to-statement,
+/// and the serve stack already isolates panics per worker/job. The
+/// `non-poisoning-lock` lint rule (see [`crate::analysis`]) keeps
+/// call sites on this helper instead of `.lock().unwrap()`.
+pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn lock_recovers_from_poisoning() {
+        let m = Arc::new(Mutex::new(7usize));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the mutex");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        assert_eq!(*super::lock(&m), 7);
+    }
+}

@@ -33,7 +33,11 @@ impl ThreadPool {
                 std::thread::Builder::new()
                     .name(format!("tq-worker-{i}"))
                     .spawn(move || loop {
-                        let msg = { rx.lock().unwrap().recv() };
+                        // tq-lint: allow(lock-across-blocking): idle
+                        // workers intentionally serialize on the
+                        // receiver mutex — holding it across `recv` IS
+                        // the work queue (one waiter wakes per job)
+                        let msg = { crate::util::lock(&rx).recv() };
                         match msg {
                             Ok(Msg::Run(job)) => {
                                 // panic isolation: a panicking job must
