@@ -6,10 +6,44 @@
 //! runs (T=250/100, n=32 per group, 256+ eval images), or override the
 //! individual `TQDIT_BENCH_*` vars.
 
+use std::collections::BTreeMap;
+
 use tq_dit::util::config::RunConfig;
+use tq_dit::util::json::Json;
 
 fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Merge one named section into a `BENCH_*.json` scorecard next to the
+/// cargo manifest. Read-parse-merge-dump, so independent bench steps
+/// (threaded/reactor net smokes, batching, calibration, step-reuse)
+/// accumulate into one file per scorecard instead of clobbering each
+/// other; an unreadable or corrupt file degrades to a fresh one.
+pub fn write_bench_section(file: &str, section: &str,
+                           fields: Vec<(&str, Json)>)
+                           -> anyhow::Result<std::path::PathBuf> {
+    let path = match std::env::var("CARGO_MANIFEST_DIR") {
+        Ok(d) => std::path::PathBuf::from(d).join(file),
+        Err(_) => std::path::PathBuf::from(file),
+    };
+    let mut root = match std::fs::read_to_string(&path) {
+        Ok(text) => match Json::parse(&text) {
+            Ok(Json::Obj(o)) => o,
+            _ => BTreeMap::new(),
+        },
+        Err(_) => BTreeMap::new(),
+    };
+    let mut sec = BTreeMap::new();
+    for (k, v) in fields {
+        sec.insert(k.to_string(), v);
+    }
+    root.insert(section.to_string(), Json::Obj(sec));
+    std::fs::write(&path, Json::Obj(root).dump()).map_err(|e| {
+        anyhow::anyhow!("writing {}: {e}", path.display())
+    })?;
+    println!("\nwrote {} ({section} section)", path.display());
+    Ok(path)
 }
 
 pub fn full() -> bool {

@@ -9,27 +9,34 @@
 //! with conservation intact across the flap.
 //!
 //! Smoke gates (no AOT artifacts, no PJRT — the CI steps):
-//! `TQDIT_BENCH_SMOKE=1` runs only the mock-backend adaptive-batching
+//! `TQDIT_BENCH_SMOKE=1` runs the mock-backend adaptive-batching and
+//! step-reuse sections; `TQDIT_BENCH_REUSE=1` only the step-reuse
 //! section; `TQDIT_NET_SMOKE=1` only the loopback cluster sections.
-//! `TQDIT_NET_REACTOR=1` flips the net sections onto the event-driven
-//! reactor transport (default: thread-per-connection) — CI runs both.
-//! The net sections also run a connection-capacity smoke (≥1k idle
-//! loopback connections on one reactor node, thread count O(workers))
-//! and write the serve scorecard to `BENCH_serve.json`, one section
-//! per transport mode: img/s, p95 latency, padding, connect cold-start
-//! ms, max concurrent connections.
+//! The net sections run on the event-driven reactor transport by
+//! default (mirroring the `--reactor` flag); `TQDIT_NET_REACTOR=0`
+//! opts back into thread-per-connection — CI runs both. They also run
+//! a connection-capacity smoke (≥1k idle loopback connections on one
+//! reactor node, thread count O(workers)) and write the serve
+//! scorecard to `BENCH_serve.json`, one section per transport mode
+//! (img/s, p95 latency, padding, connect cold-start ms, max concurrent
+//! connections) plus `batching` and `calibration` sections. The
+//! step-reuse section writes `BENCH_sample.json` (img/s with and
+//! without reuse, per-step ms, reuse rate, δ=0 image-hash equality)
+//! and exits nonzero unless δ=0 is byte-identical to the plain loop,
+//! the default-δ synthetic pipeline strictly beats the no-reuse
+//! baseline, and `reuse_hits` surfaces in `ServerStats`.
 
 #[path = "common.rs"]
 mod common;
 
-use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
 use tq_dit::coordinator::pipeline::{Method, Pipeline};
 use tq_dit::coordinator::QuantConfig;
-use tq_dit::sampler::Sampler;
+use tq_dit::sampler::{reuse, Sampler};
+use tq_dit::sched::{DdpmSchedule, TimeGroups};
 use tq_dit::serve::net::reactor::{
     process_thread_count, raise_nofile_limit,
 };
@@ -46,12 +53,17 @@ use tq_dit::util::rng::Rng;
 fn main() -> anyhow::Result<()> {
     let smoke = std::env::var("TQDIT_BENCH_SMOKE").as_deref() == Ok("1");
     let net_smoke = std::env::var("TQDIT_NET_SMOKE").as_deref() == Ok("1");
-    let full = !smoke && !net_smoke;
+    let reuse_only =
+        std::env::var("TQDIT_BENCH_REUSE").as_deref() == Ok("1");
+    let full = !smoke && !net_smoke && !reuse_only;
     if full {
         pjrt_benches()?;
     }
     if full || smoke {
         adaptive_batching_bench()?;
+    }
+    if full || smoke || reuse_only {
+        step_reuse_bench()?;
     }
     if full || net_smoke {
         println!(
@@ -67,10 +79,11 @@ fn main() -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Transport mode for the net sections: `TQDIT_NET_REACTOR=1` flips
-/// them onto the poll-based reactor; default is thread-per-connection.
+/// Transport mode for the net sections: the poll-based reactor by
+/// default (mirroring `RunConfig`); `TQDIT_NET_REACTOR=0` opts back
+/// into thread-per-connection.
 fn reactor_mode() -> bool {
-    std::env::var("TQDIT_NET_REACTOR").as_deref() == Ok("1")
+    std::env::var("TQDIT_NET_REACTOR").as_deref() != Ok("0")
 }
 
 fn net_node_opts() -> NodeOpts {
@@ -96,41 +109,15 @@ struct ServeMetrics {
 /// manifest, so threaded and reactor CI steps land in one file).
 fn write_serve_report(m: &ServeMetrics, max_conns: usize)
                       -> anyhow::Result<()> {
-    let path = match std::env::var("CARGO_MANIFEST_DIR") {
-        Ok(d) => std::path::PathBuf::from(d).join("BENCH_serve.json"),
-        Err(_) => std::path::PathBuf::from("BENCH_serve.json"),
-    };
-    let mut root = match std::fs::read_to_string(&path) {
-        Ok(text) => match Json::parse(&text) {
-            Ok(Json::Obj(o)) => o,
-            _ => BTreeMap::new(),
-        },
-        Err(_) => BTreeMap::new(),
-    };
-    let mut sec = BTreeMap::new();
-    sec.insert("img_per_s".to_string(), Json::Num(m.img_per_s));
-    sec.insert("latency_p95_s".to_string(), Json::Num(m.latency_p95_s));
-    sec.insert("padded_slots".to_string(),
-               Json::Num(m.padded_slots as f64));
-    sec.insert("batch_fill".to_string(), Json::Num(m.batch_fill));
-    sec.insert("cold_start_ms".to_string(), Json::Num(m.cold_start_ms));
-    sec.insert("max_concurrent_connections".to_string(),
-               Json::Num(max_conns as f64));
     let mode = if reactor_mode() { "reactor" } else { "threaded" };
-    root.insert(mode.to_string(), Json::Obj(sec));
-    root.insert(
-        "note".to_string(),
-        Json::Str(
-            "written by the runtime bench net sections \
-             (TQDIT_NET_SMOKE=1; TQDIT_NET_REACTOR=1 for the reactor \
-             section)"
-                .to_string(),
-        ),
-    );
-    std::fs::write(&path, Json::Obj(root).dump()).map_err(|e| {
-        anyhow::anyhow!("writing {}: {e}", path.display())
-    })?;
-    println!("\nwrote {} ({mode} section)", path.display());
+    common::write_bench_section("BENCH_serve.json", mode, vec![
+        ("img_per_s", Json::Num(m.img_per_s)),
+        ("latency_p95_s", Json::Num(m.latency_p95_s)),
+        ("padded_slots", Json::Num(m.padded_slots as f64)),
+        ("batch_fill", Json::Num(m.batch_fill)),
+        ("cold_start_ms", Json::Num(m.cold_start_ms)),
+        ("max_concurrent_connections", Json::Num(max_conns as f64)),
+    ])?;
     Ok(())
 }
 
@@ -194,12 +181,40 @@ fn pjrt_benches() -> anyhow::Result<()> {
 
     let mut crng = Rng::new(cfg.seed ^ 0x5eed);
     let (qc, _) = pipe.calibrate(Method::TqDit, &mut crng)?;
-    let sampler_q = Sampler::new(&pipe.rt, &pipe.weights, qc,
+    let sampler_q = Sampler::new(&pipe.rt, &pipe.weights, qc.clone(),
                                  cfg.timesteps)?;
     let r = quick.run("sample/tq-dit(T=50,batch=16)", || {
         std::hint::black_box(sampler_q.sample(&labels, &mut rng).unwrap());
     });
     println!("  -> {:.2} img/s end-to-end", r.per_sec(b));
+
+    // step reuse on the real artifacts: setting δ=0 must be
+    // byte-identical to the default-constructed sampler, and the
+    // calibrated drift at the default δ should trade forward passes
+    // for fused host updates
+    let mut sampler_z = Sampler::new(&pipe.rt, &pipe.weights, qc.clone(),
+                                     cfg.timesteps)?;
+    sampler_z.set_reuse_delta(0.0);
+    let mut ra = Rng::new(cfg.seed ^ 0xd1ff);
+    let mut rb = Rng::new(cfg.seed ^ 0xd1ff);
+    let (imgs_a, _) = sampler_q.sample(&labels, &mut ra)?;
+    let (imgs_b, _) = sampler_z.sample(&labels, &mut rb)?;
+    anyhow::ensure!(
+        hash_f32(&imgs_a) == hash_f32(&imgs_b),
+        "δ=0 sampler diverged from the default-constructed one"
+    );
+    let mut sampler_r = sampler_z;
+    sampler_r.set_reuse_delta(cfg.reuse_delta);
+    let mut rr = Rng::new(cfg.seed ^ 0xd1ff);
+    let (imgs_r, st) = sampler_r.sample(&labels, &mut rr)?;
+    anyhow::ensure!(imgs_r.iter().all(|v| v.is_finite()),
+                    "reuse trajectory produced non-finite pixels");
+    println!(
+        "  reuse(δ={}): {}/{} steps from cache, {} uploads saved",
+        sampler_r.reuse_delta(), st.reuse_hits, cfg.timesteps,
+        st.uploads_saved
+    );
+    drop(sampler_r);
 
     // per-artifact exec stats (observability)
     println!("\nper-artifact cumulative exec stats:");
@@ -268,6 +283,8 @@ fn pjrt_benches() -> anyhow::Result<()> {
     ccfg.calib_cache = Some(cache_dir.to_string_lossy().into_owned());
     println!("\ncalibration cache: tq-dit server cold start, cold vs warm:");
     let mut cold_ready_s = 0.0f64;
+    let mut warm_ready_s = 0.0f64;
+    let mut cold_calib_ms = 0.0f64;
     for label in ["cold", "warm"] {
         let t0 = std::time::Instant::now();
         let server =
@@ -280,6 +297,7 @@ fn pjrt_benches() -> anyhow::Result<()> {
         let outcome = if stats.calib_cache_hits > 0 { "hit" } else { "miss" };
         if label == "cold" {
             cold_ready_s = ready_s;
+            cold_calib_ms = stats.calib_cold_start_ms;
             println!(
                 "  {label}: ready in {ready_s:.2}s  (calib {:.0} ms, \
                  cache {outcome}, {} quantize runs so far)",
@@ -287,6 +305,7 @@ fn pjrt_benches() -> anyhow::Result<()> {
                 tq_dit::coordinator::quantize::quantize_runs()
             );
         } else {
+            warm_ready_s = ready_s;
             println!(
                 "  {label}: ready in {ready_s:.2}s  (calib {:.0} ms, \
                  cache {outcome}, {:.1}x faster cold start)",
@@ -296,6 +315,13 @@ fn pjrt_benches() -> anyhow::Result<()> {
         }
     }
     let _ = std::fs::remove_dir_all(&cache_dir);
+    common::write_bench_section("BENCH_serve.json", "calibration", vec![
+        ("cold_ready_s", Json::Num(cold_ready_s)),
+        ("warm_ready_s", Json::Num(warm_ready_s)),
+        ("cold_calib_ms", Json::Num(cold_calib_ms)),
+        ("warm_speedup",
+         Json::Num(cold_ready_s / warm_ready_s.max(1e-9))),
+    ])?;
     Ok(())
 }
 
@@ -387,12 +413,18 @@ fn adaptive_batching_bench() -> anyhow::Result<()> {
     let linger = Duration::from_millis(2);
     let ladder = vec![1usize, 2, 4, 8, 16];
     let fixed = vec![16usize];
+    let mut report: Vec<(String, Json)> = Vec::new();
     for scenario in ["trickle", "steady", "burst"] {
         let mut padded = Vec::new();
         for (label, rungs) in
             [("fixed ", fixed.clone()), ("ladder", ladder.clone())]
         {
             let stats = drive_scenario(rungs, linger, scenario)?;
+            let tag = label.trim();
+            report.push((format!("{scenario}_{tag}_padded_slots"),
+                         Json::Num(stats.padded_slots as f64)));
+            report.push((format!("{scenario}_{tag}_p95_s"),
+                         Json::Num(stats.latency_p95_s)));
             println!(
                 "  {scenario:<8} {label}: {:>3} batches  {:>4} images  \
                  {:>4} padded  fill {:>3.0}%  p50 {:.3}s  p95 {:.3}s",
@@ -424,6 +456,224 @@ fn adaptive_batching_bench() -> anyhow::Result<()> {
             );
         }
     }
+    common::write_bench_section(
+        "BENCH_serve.json",
+        "batching",
+        report.iter().map(|(k, v)| (k.as_str(), v.clone())).collect(),
+    )?;
+    Ok(())
+}
+
+// ---- step reuse: δ=0 byte-equality + throughput gates ------------------
+
+/// FNV-1a over the f32 bit patterns — the image hash both equality
+/// gates compare.
+fn hash_f32(v: &[f32]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for x in v {
+        for b in x.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+/// [`GenBackend`] over the device-free reuse trajectory
+/// ([`reuse::simulate`]), so the `reuse_hits`-in-`ServerStats` gate
+/// runs without PJRT or AOT artifacts: same policy, fused math and
+/// counter plumbing as the real sampler backend.
+struct ReuseSimBackend {
+    sched: DdpmSchedule,
+    groups: TimeGroups,
+    drift: Vec<f32>,
+    delta: f64,
+    il: usize,
+    rng: Rng,
+    reuse: (u64, u64, u64),
+}
+
+impl GenBackend for ReuseSimBackend {
+    fn rungs(&self) -> Vec<usize> {
+        vec![2]
+    }
+    fn img_len(&self) -> usize {
+        self.il
+    }
+    fn generate(&mut self, labels: &[i32]) -> anyhow::Result<Vec<f32>> {
+        let (x, st) = reuse::simulate(
+            &self.sched, &self.groups, &self.drift, self.delta,
+            labels.len() * self.il, &mut self.rng,
+            |x, t, _g| {
+                x.iter()
+                    .map(|v| (v * 0.9 + t as f32 * 1e-3).sin())
+                    .collect()
+            },
+        );
+        self.reuse.0 += st.reuse_hits as u64;
+        self.reuse.1 += st.steps_skipped as u64;
+        self.reuse.2 += st.uploads_saved as u64;
+        Ok(x)
+    }
+    fn reuse_counters(&self) -> (u64, u64, u64) {
+        self.reuse
+    }
+}
+
+/// The step-reuse acceptance gates (device-free, so they run on every
+/// CI push): δ=0 must hash-match the plain per-step loop exactly, the
+/// default-δ synthetic pipeline must strictly beat the no-reuse
+/// baseline in img/s with `reuse_hits > 0`, and the counters must
+/// surface in `ServerStats` through the router. Writes the
+/// `step_reuse` section of `BENCH_sample.json`.
+fn step_reuse_bench() -> anyhow::Result<()> {
+    let t_sample = 100usize;
+    let sched = DdpmSchedule::new(250, 1e-4, 0.02, t_sample);
+    let groups = TimeGroups::new(250, 10);
+    let drift = reuse::drift_from_schedule(&sched, &groups);
+    let delta = tq_dit::util::config::RunConfig::default().reuse_delta;
+    let il = 16 * 16 * 3;
+    println!(
+        "\nstep reuse (synthetic forward, T={t_sample}, G=10, \
+         default δ={delta}):"
+    );
+
+    // gate 1: δ=0 is byte-identical to the plain per-step reverse loop
+    let eps_of = |x: &[f32], t: usize| -> Vec<f32> {
+        x.iter().map(|v| (v * 0.9 + t as f32 * 1e-3).sin()).collect()
+    };
+    let mut rng_a = Rng::new(99);
+    let (img0, st0) = reuse::simulate(
+        &sched, &groups, &drift, 0.0, il, &mut rng_a,
+        |x, t, _g| eps_of(x, t),
+    );
+    let mut rng_b = Rng::new(99);
+    let mut plain = rng_b.normal_vec(il);
+    for i in 0..sched.len() {
+        let eps = eps_of(&plain, sched.steps[i]);
+        let noise = if i + 1 == sched.len() {
+            None
+        } else {
+            Some(rng_b.normal_vec(il))
+        };
+        sched.reverse_step(i, &mut plain, &eps, noise.as_deref());
+    }
+    for v in plain.iter_mut() {
+        *v = v.clamp(-1.5, 1.5);
+    }
+    let hash_equal = hash_f32(&img0) == hash_f32(&plain);
+    println!(
+        "  δ=0: hash {:016x} vs plain {:016x} ({})",
+        hash_f32(&img0), hash_f32(&plain),
+        if hash_equal { "identical" } else { "DIVERGED" }
+    );
+    anyhow::ensure!(hash_equal,
+                    "δ=0 reuse trajectory is not byte-identical to the \
+                     plain sampler loop");
+    anyhow::ensure!(st0.reuse_hits == 0 && st0.steps_skipped == 0,
+                    "δ=0 must never reuse");
+
+    // gate 2: at the default δ the costed synthetic pipeline strictly
+    // beats the no-reuse baseline (each skipped forward saves its cost)
+    let fwd_cost = Duration::from_micros(800);
+    let n_imgs = 4usize;
+    let mut run_mode = |d: f64| -> (f64, u64, u64) {
+        let mut hits = 0u64;
+        let mut steps = 0u64;
+        let t0 = std::time::Instant::now();
+        for i in 0..n_imgs {
+            let mut rng = Rng::new(1000 + i as u64);
+            let (_, st) = reuse::simulate(
+                &sched, &groups, &drift, d, il, &mut rng,
+                |x, t, _g| {
+                    std::thread::sleep(fwd_cost);
+                    eps_of(x, t)
+                },
+            );
+            hits += st.reuse_hits as u64;
+            steps += (st.reuse_hits + sched.len() - st.steps_skipped)
+                as u64;
+        }
+        (t0.elapsed().as_secs_f64(), hits, steps)
+    };
+    let (base_s, base_hits, _) = run_mode(0.0);
+    let (reuse_s, reuse_hits, _) = run_mode(delta);
+    let base_ips = n_imgs as f64 / base_s.max(1e-9);
+    let reuse_ips = n_imgs as f64 / reuse_s.max(1e-9);
+    let reuse_rate =
+        reuse_hits as f64 / (n_imgs * sched.len()) as f64;
+    println!(
+        "  baseline δ=0: {base_ips:.2} img/s  ({:.3} ms/step)",
+        1e3 * base_s / (n_imgs * sched.len()) as f64
+    );
+    println!(
+        "  default δ={delta}: {reuse_ips:.2} img/s  ({:.3} ms/step, \
+         reuse rate {:.0}%)",
+        1e3 * reuse_s / (n_imgs * sched.len()) as f64,
+        reuse_rate * 100.0
+    );
+    anyhow::ensure!(base_hits == 0, "baseline must not reuse");
+    anyhow::ensure!(reuse_hits > 0,
+                    "default δ={delta} produced zero reuse hits");
+    anyhow::ensure!(
+        reuse_ips > base_ips,
+        "step reuse did not beat the baseline: {reuse_ips:.2} <= \
+         {base_ips:.2} img/s"
+    );
+
+    // gate 3: the counters surface in ServerStats through the router
+    let sched2 = sched.clone();
+    let groups2 = groups.clone();
+    let drift2 = drift.clone();
+    let body: Arc<WorkerBody> =
+        Arc::new(move |h: WorkerHandle| -> anyhow::Result<()> {
+            let mut b = ReuseSimBackend {
+                sched: sched2.clone(),
+                groups: groups2.clone(),
+                drift: drift2.clone(),
+                delta,
+                il,
+                rng: Rng::new(7),
+                reuse: (0, 0, 0),
+            };
+            h.serve(&mut b)
+        });
+    let router = Router::start(
+        RouterOpts { workers: 1, ..RouterOpts::default() },
+        body,
+    );
+    let mut rxs = Vec::new();
+    for i in 0..3usize {
+        rxs.push(router.submit(GenRequest { class: i as i32, n: 2 })?);
+    }
+    for (_, rx) in rxs {
+        rx.recv()??;
+    }
+    let stats = router.shutdown();
+    println!(
+        "  server stats: {} reuse hit(s), {} forward(s) skipped, \
+         {} upload(s) saved",
+        stats.reuse_hits, stats.steps_skipped, stats.uploads_saved
+    );
+    anyhow::ensure!(stats.reuse_hits > 0,
+                    "reuse_hits did not surface in ServerStats");
+    anyhow::ensure!(stats.reuse_hits == stats.steps_skipped,
+                    "counter mismatch: {} hits vs {} skipped",
+                    stats.reuse_hits, stats.steps_skipped);
+
+    common::write_bench_section("BENCH_sample.json", "step_reuse", vec![
+        ("img_per_s_baseline", Json::Num(base_ips)),
+        ("img_per_s_reuse", Json::Num(reuse_ips)),
+        ("per_step_ms_baseline",
+         Json::Num(1e3 * base_s / (n_imgs * sched.len()) as f64)),
+        ("per_step_ms_reuse",
+         Json::Num(1e3 * reuse_s / (n_imgs * sched.len()) as f64)),
+        ("reuse_rate", Json::Num(reuse_rate)),
+        ("speedup", Json::Num(reuse_ips / base_ips.max(1e-9))),
+        ("hash_equal_delta0", Json::Bool(hash_equal)),
+        ("server_reuse_hits", Json::Num(stats.reuse_hits as f64)),
+    ])?;
+    println!("  -> δ=0 byte-identical; reuse beats baseline");
     Ok(())
 }
 

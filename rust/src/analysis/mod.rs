@@ -24,7 +24,7 @@
 //!    |------|----------------|
 //!    | `lock-across-blocking` | holding a mutex guard across socket/frame I/O, channel `recv`, `sleep`, `join` — and re-acquiring a held mutex (self-deadlock) |
 //!    | `lock-order` | acquisitions that invert the declared rank registry (`state` → `readers` → `bulk` → `data`/`ctrl`/`stream`/`half` → `record`), or touch an unregistered mutex while one is held |
-//!    | `no-panic-paths` | `.unwrap()` / `.expect()` / `panic!`-family in production `serve/` and `runtime/` code; slice-indexing peer bytes on `serve/net` decode paths |
+//!    | `no-panic-paths` | `.unwrap()` / `.expect()` / `panic!`-family in production `serve/`, `runtime/` and `sampler/` code; slice-indexing peer bytes on `serve/net` decode paths |
 //!    | `protocol-exhaustiveness` | silent `_ => {}` arms over protocol enums (`Msg`, `WireError`, `ShardState`, `Role`, `Health`) in `serve/net` |
 //!    | `reactor-discipline` | blocking calls inside reactor callbacks (`on_*` fns, fns taking `Ctl`) outside `reactor.rs` |
 //!    | `non-poisoning-lock` | `.lock().unwrap()` — call sites belong on [`crate::util::lock`] |
@@ -58,7 +58,7 @@ pub use rules::{Finding, KNOWN_RULES};
 use crate::util::json::Json;
 
 /// Lint one source text. `path` is used both for reporting and for the
-/// path-gated rules (`serve/`, `runtime/`, `serve/net`), so pass a
+/// path-gated rules (`serve/`, `runtime/`, `sampler/`, `serve/net`), so pass a
 /// repo-relative or absolute path with `/` separators.
 pub fn lint_source(path: &str, src: &str) -> Vec<Finding> {
     let raw = lexer::lex(src);

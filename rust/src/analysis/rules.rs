@@ -405,12 +405,16 @@ pub fn rule_locks(path: &str, toks: &[Tok], fns: &[FnBody], findings: &mut Vec<F
 }
 
 /// Rule 3 — `no-panic-paths`: `.unwrap()`, `.expect()` and panic
-/// macros are banned in production `serve/` and `runtime/` code; on
-/// `serve/net` decode paths, so is direct slice indexing of peer bytes
-/// (use `.get(..)` and a typed error — peers control those lengths).
+/// macros are banned in production `serve/`, `runtime/` and `sampler/`
+/// code (the sampler runs on serve worker threads, so a panic there
+/// strands a whole batch); on `serve/net` decode paths, so is direct
+/// slice indexing of peer bytes (use `.get(..)` and a typed error —
+/// peers control those lengths).
 pub fn rule_no_panic(path: &str, toks: &[Tok], fns: &[FnBody], findings: &mut Vec<Finding>) {
-    let inscope =
-        (path.contains("serve/") || path.contains("runtime/")) && !path.contains("testutil");
+    let inscope = (path.contains("serve/")
+        || path.contains("runtime/")
+        || path.contains("sampler/"))
+        && !path.contains("testutil");
     if !inscope {
         return;
     }

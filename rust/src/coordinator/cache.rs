@@ -44,8 +44,9 @@ use crate::util::json::Json;
 
 /// Bumped whenever the entry format or the semantics of any keyed
 /// input change; older entries are ignored (and re-written on the next
-/// calibration), never misread.
-pub const CACHE_VERSION: u32 = 1;
+/// calibration), never misread. v2: `QuantConfig` gained the per-group
+/// `drift` statistics the sampler's step-reuse policy consumes.
+pub const CACHE_VERSION: u32 = 2;
 
 const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
 const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
@@ -391,7 +392,7 @@ mod tests {
         let path = cache.path_for(&key);
         let text = std::fs::read_to_string(&path)
             .unwrap()
-            .replace("\"version\":1", "\"version\":99");
+            .replace("\"version\":2", "\"version\":99");
         std::fs::write(&path, text).unwrap();
         assert_eq!(cache.load(&key), None);
         let _ = std::fs::remove_dir_all(&dir);

@@ -145,16 +145,25 @@ impl Pipeline {
         Ok((calib, ev))
     }
 
+    /// Schedule-derived per-group ε-drift, recorded on every calibrated
+    /// config (all methods, including FP): the statistic the sampler's
+    /// step-reuse policy compares against `--reuse-delta`.
+    fn stamp_drift(&self, qc: &mut QuantConfig) {
+        qc.drift = crate::sampler::reuse::drift_from_schedule(
+            &self.schedule(), &self.groups);
+    }
+
     /// Calibrate with `method`, measuring Table-IV costs.
     pub fn calibrate(&self, method: Method, rng: &mut Rng)
                      -> Result<(QuantConfig, CalibCost)> {
         let probe = MemProbe::start();
         let t0 = std::time::Instant::now();
         let c = &self.cfg;
-        let (qc, evals, ev_bytes, batches) = match method {
+        let (mut qc, evals, ev_bytes, batches) = match method {
             Method::Fp => {
-                return Ok((QuantConfig::fp(self.groups.clone()),
-                           CalibCost::default()))
+                let mut qc = QuantConfig::fp(self.groups.clone());
+                self.stamp_drift(&mut qc);
+                return Ok((qc, CalibCost::default()));
             }
             Method::TqDit => {
                 let (_, ev) = self.grouped_evidence(rng)?;
@@ -210,6 +219,7 @@ impl Pipeline {
                 (qc, cost.evals, ev.bytes(), ev.batches_run)
             }
         };
+        self.stamp_drift(&mut qc);
         let cost = CalibCost {
             wall_s: t0.elapsed().as_secs_f64(),
             peak_rss_delta: probe.finish().rss_delta,
@@ -289,8 +299,10 @@ impl Pipeline {
     /// resulting [`QuantConfig`] across threads, and each builds its
     /// own sampler here without re-running calibration.
     pub fn sampler(&self, qc: &QuantConfig) -> Result<Sampler<'_>> {
-        Sampler::new(&self.rt, &self.weights, qc.clone(),
-                     self.cfg.timesteps)
+        let mut s = Sampler::new(&self.rt, &self.weights, qc.clone(),
+                                 self.cfg.timesteps)?;
+        s.set_reuse_delta(self.cfg.reuse_delta);
+        Ok(s)
     }
 
     /// Build one sampler per lowered batch rung (optionally restricted
@@ -301,8 +313,12 @@ impl Pipeline {
     pub fn sampler_ladder(&self, qc: &QuantConfig,
                           rungs: Option<&[usize]>)
                           -> Result<Vec<Sampler<'_>>> {
-        Sampler::ladder(&self.rt, &self.weights, qc, self.cfg.timesteps,
-                        rungs)
+        let mut ladder = Sampler::ladder(&self.rt, &self.weights, qc,
+                                         self.cfg.timesteps, rungs)?;
+        for s in ladder.iter_mut() {
+            s.set_reuse_delta(self.cfg.reuse_delta);
+        }
+        Ok(ladder)
     }
 
     /// Sample `n` images under `qc` and score FID/sFID/IS.

@@ -58,6 +58,12 @@ pub struct QuantConfig {
     pub groups: TimeGroups,
     /// PTQD sampler correction per time group (identity by default).
     pub correction: Vec<NoiseCorrection>,
+    /// Per-group ε-drift recorded at calibration time (len = groups):
+    /// how much ε̂ can move between adjacent sampler steps inside the
+    /// group. Drives the sampler's step-reuse policy
+    /// ([`crate::sampler::reuse`]); the default sentinel 1.0 means
+    /// "never reuse".
+    pub drift: Vec<f32>,
 }
 
 impl QuantConfig {
@@ -72,6 +78,7 @@ impl QuantConfig {
             weights: HashMap::new(),
             groups: groups.clone(),
             correction: vec![NoiseCorrection::default(); groups.groups],
+            drift: vec![1.0; groups.groups],
         }
     }
 
@@ -86,6 +93,7 @@ impl QuantConfig {
             weights: HashMap::new(),
             groups: groups.clone(),
             correction: vec![NoiseCorrection::default(); groups.groups],
+            drift: vec![1.0; groups.groups],
         }
     }
 
@@ -178,6 +186,10 @@ impl QuantConfig {
                 .map(correction_to_json)
                 .collect()),
         );
+        m.insert(
+            "drift".into(),
+            Json::Arr(self.drift.iter().map(|&d| num(d)).collect()),
+        );
         Json::Obj(m)
     }
 
@@ -230,6 +242,28 @@ impl QuantConfig {
             bail!("correction length {} != groups {}", correction.len(),
                   groups.groups);
         }
+        let drift = j
+            .get("drift")
+            .and_then(Json::as_arr)
+            .context("missing `drift` array")?
+            .iter()
+            .enumerate()
+            .map(|(i, v)| {
+                let d = v
+                    .as_f64()
+                    .with_context(|| format!("drift[{i}]: expected a number"))?
+                    as f32;
+                if !d.is_finite() || d < 0.0 {
+                    bail!("drift[{i}]: expected a finite non-negative \
+                           value");
+                }
+                Ok(d)
+            })
+            .collect::<Result<Vec<f32>>>()?;
+        if drift.len() != groups.groups {
+            bail!("drift length {} != groups {}", drift.len(),
+                  groups.groups);
+        }
         Ok(QuantConfig {
             method: str_field(j, "method")?.to_string(),
             wbits: usize_field(j, "wbits")? as u32,
@@ -239,6 +273,7 @@ impl QuantConfig {
             weights,
             groups,
             correction,
+            drift,
         })
     }
 }
@@ -476,6 +511,9 @@ mod tests {
                 nc.bias = g.f32_normal() * 1e-2;
                 nc.resid_var = g.f32_in(0.0, 1e-2);
             }
+            for d in c.drift.iter_mut() {
+                *d = g.f32_in(0.0, 0.2);
+            }
             let text = c.to_json().dump();
             let parsed = crate::util::json::Json::parse(&text)
                 .map_err(|e| e.to_string())?;
@@ -541,6 +579,19 @@ mod tests {
         // correction length must match the group count
         let mut bad = c.clone();
         bad.correction.pop();
+        assert!(QuantConfig::from_json(&reparse(&bad)).is_err());
+
+        // drift length must match the group count too — a short vector
+        // would silently disable reuse for the tail groups
+        let mut bad = c.clone();
+        bad.drift.pop();
+        let e = QuantConfig::from_json(&reparse(&bad)).unwrap_err();
+        assert!(format!("{e:#}").contains("drift"), "{e:#}");
+
+        // a negative or non-finite drift entry is rejected (it would
+        // confuse the reuse policy's strict `drift < δ` comparison)
+        let mut bad = c.clone();
+        bad.drift[0] = -0.5;
         assert!(QuantConfig::from_json(&reparse(&bad)).is_err());
 
         // unknown site kind

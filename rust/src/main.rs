@@ -20,6 +20,7 @@
 //!   --groups G --calib-per-group N --rounds R --candidates C
 //!   --eval-images N --seed S --ho BOOL --mrq BOOL --tgq BOOL
 //!   --calib-cache DIR --no-calib-cache
+//!   --reuse-delta X (sampler step-reuse threshold)
 //!   --batch-ladder A,B,C --linger-ms N (serve batch policy)
 //!   --shards A,B --heartbeat-ms N --node-timeout-ms N
 //!   --control-plane BOOL --readmit-pongs K --reconnect-ms N (cluster)
@@ -127,10 +128,15 @@ FLAGS (all subcommands)
                         shard re-enters placement       [3]
   --reconnect-ms N      cluster: how often dead shards are re-dialed
                         for re-admission                [1000]
+  --reuse-delta X       sampler: step-reuse threshold — TGQ groups whose
+                        calibration drift is below X share one forward
+                        pass per reuse run; 0 disables reuse and is
+                        byte-identical to the plain sampler   [0.05]
   --reactor BOOL        serve/node: event-driven transport — one poll(2)
                         reactor thread owns every connection instead of
                         one handler thread each; both transports speak
-                        the same wire protocol          [false]
+                        the same wire protocol; `--reactor false` falls
+                        back to one handler thread per connection [true]
   --max-conns N         node: accepted-connection cap in reactor mode
                         (refused at accept past the cap)     [4096]
   --stats-json PATH     serve/node: dump final ServerStats (local or

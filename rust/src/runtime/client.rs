@@ -125,6 +125,17 @@ impl Runtime {
             .map_err(|e| anyhow::anyhow!("upload i32: {e:?}"))
     }
 
+    /// Upload a raw f32 slice with an explicit shape — the zero-copy
+    /// sibling of [`Self::upload`] for hot paths that keep their state
+    /// in a plain `Vec<f32>` (the sampler trajectory) and must not pay
+    /// a `Tensor` clone per step.
+    pub fn upload_f32(&self, data: &[f32], shape: &[usize])
+                      -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, shape, None)
+            .map_err(|e| anyhow::anyhow!("upload f32: {e:?}"))
+    }
+
     /// Upload a set of tensors once (e.g. the model weights) so the hot
     /// path reuses resident device buffers across calls.
     pub fn upload_all(&self, tensors: &[Tensor]) -> Result<Vec<xla::PjRtBuffer>> {

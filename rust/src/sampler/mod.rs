@@ -1,10 +1,28 @@
-//! Ancestral DDPM sampling loop with per-time-group qparams switching.
+//! Ancestral DDPM sampling loop with per-time-group qparams switching
+//! and timestep-aware compute reuse.
 //!
-//! The sampler owns the request path: weights are fake-quantized once
-//! (host-side, per the calibrated config), uploaded once as resident
-//! device buffers, and each reverse step uploads only (x_t, t, y[, Δ]).
-//! TGQ configs swap the packed qparams vector whenever the trajectory
-//! crosses a time-group boundary (the vectors are precomputed).
+//! The sampler owns the request path with a *device-resident
+//! trajectory*: weights are fake-quantized once (host-side, per the
+//! calibrated config) and uploaded once; the per-group packed qparams
+//! vectors and the per-step `t` vectors are likewise uploaded at
+//! construction, so each reverse step uploads only the evolving `x_t`
+//! (straight from its host `Vec<f32>`, no per-step tensor clone). TGQ
+//! configs switch between the resident qparams buffers whenever the
+//! trajectory crosses a time-group boundary.
+//!
+//! On top of that sits the **step-reuse layer** ([`reuse`]): the
+//! paper's TGQ insight — activations vary smoothly within a time group
+//! — means adjacent steps in a low-drift group can share one forward
+//! pass. A pure [`reuse::ReusePolicy`] turns the per-group drift
+//! statistics the coordinator calibrates ([`QuantConfig::drift`]) and
+//! the `--reuse-delta` threshold δ into a per-step `Full | Reuse`
+//! plan; a run of `Reuse` steps skips the device dispatch entirely and
+//! applies the scheduler's closed-form composition of the skipped
+//! reverse updates to the group's last ε̂
+//! ([`DdpmSchedule::fused_coeffs`]). δ=0 (the constructor default)
+//! disables reuse and is byte-identical to the plain per-step loop;
+//! [`SampleStats`] counts `reuse_hits` / `steps_skipped` /
+//! `uploads_saved` so the serve stack can prove the cache hits.
 //!
 //! One sampler drives one *rung* of the manifest's batch ladder — the
 //! batch dim its artifact was lowered with. [`Sampler::new`] builds the
@@ -17,6 +35,8 @@
 //! part of the quantization error is divided out of ε̂ and the residual
 //! variance is removed from the ancestral σ².
 
+pub mod reuse;
+
 use std::rc::Rc;
 
 use anyhow::{bail, Result};
@@ -28,11 +48,22 @@ use crate::sched::DdpmSchedule;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
+use reuse::{Decision, ReusePolicy};
+
 /// Per-trajectory observability (sampling-path §Perf numbers).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SampleStats {
+    /// Host reverse updates applied (a fused reuse run counts once).
     pub steps: usize,
     pub qp_swaps: usize,
+    /// Steps whose ε̂ came from the group's step cache.
+    pub reuse_hits: usize,
+    /// Forward passes avoided (`sched.len()` minus dispatches run).
+    pub steps_skipped: usize,
+    /// Per-trajectory host→device uploads avoided relative to the
+    /// pre-resident protocol (which uploaded `x_t` *and* `t` every
+    /// step plus the group qparams at each crossing).
+    pub uploads_saved: usize,
     pub exec_s: f64,
     pub host_s: f64,
 }
@@ -46,8 +77,16 @@ pub struct Sampler<'a> {
     /// Weight buffers (fake-quantized) resident on device — shared
     /// across the rungs of a ladder.
     wbufs: Rc<Vec<xla::PjRtBuffer>>,
-    /// Precomputed per-group qparams vectors (empty for the FP path).
-    qvecs: Vec<Tensor>,
+    /// Per-group packed qparams, uploaded once at construction (empty
+    /// for the FP path); group crossings index instead of re-uploading.
+    qbufs: Vec<xla::PjRtBuffer>,
+    /// Per-step `t` vectors, uploaded once at construction.
+    tbufs: Vec<xla::PjRtBuffer>,
+    /// Step-reuse threshold δ (0 = disabled, byte-identical loop).
+    reuse_delta: f64,
+    /// Per-step `Full | Reuse` plan derived from δ and the config's
+    /// calibrated per-group drift.
+    plan: Vec<Decision>,
     /// Resolved artifact name for this rung's forward pass.
     artifact: String,
     img_len: usize,
@@ -143,20 +182,33 @@ impl<'a> Sampler<'a> {
         // here as a typed construction error instead of failing the
         // first client batch
         rt.executable_for_rung(base, batch)?;
-        let qvecs: Vec<Tensor> = if fp {
+        // device-resident trajectory: the per-group qparams and the
+        // per-step t vectors never change within a sampler's lifetime,
+        // so they are uploaded exactly once here instead of per
+        // step/crossing on the hot path
+        let qbufs: Vec<xla::PjRtBuffer> = if fp {
             Vec::new()
         } else {
             qc.qparams_all_groups(m)
                 .into_iter()
-                .map(|v| Tensor::new(vec![m.qp_len], v))
-                .collect()
+                .map(|v| rt.upload(&Tensor::new(vec![m.qp_len], v)))
+                .collect::<Result<_>>()?
         };
+        let tbufs: Vec<xla::PjRtBuffer> = sched
+            .steps
+            .iter()
+            .map(|&t| rt.upload_i32(&vec![t as i32; batch], &[batch]))
+            .collect::<Result<_>>()?;
+        let plan = vec![Decision::Full; sched.len()];
         Ok(Sampler {
             rt,
             sched,
             qc,
             wbufs,
-            qvecs,
+            qbufs,
+            tbufs,
+            reuse_delta: 0.0,
+            plan,
             artifact,
             img_len: m.model.img_size * m.model.img_size * m.model.channels,
             batch,
@@ -172,74 +224,140 @@ impl<'a> Sampler<'a> {
         self.img_len
     }
 
+    /// Set the step-reuse threshold δ and recompute the per-step plan
+    /// from the config's calibrated per-group drift. δ=0 (the
+    /// construction default) plans every step `Full` — byte-identical
+    /// to the pre-reuse sampler; larger δ lets low-drift time groups
+    /// share forward passes at stride 2/4/8.
+    pub fn set_reuse_delta(&mut self, delta: f64) {
+        self.reuse_delta = if delta.is_finite() { delta.max(0.0) } else { 0.0 };
+        self.plan = ReusePolicy::new(self.reuse_delta)
+            .plan(&self.sched.steps, &self.qc.groups, &self.qc.drift);
+    }
+
+    /// Current step-reuse threshold δ.
+    pub fn reuse_delta(&self) -> f64 {
+        self.reuse_delta
+    }
+
     /// Generate one batch of images for the given class labels
     /// (`labels.len()` must equal [`Self::batch`]). Returns flat
     /// (B, H, W, C) pixels in ≈[-1, 1] and the step statistics.
+    ///
+    /// The loop iterates the reuse plan's runs: a `Full` step uploads
+    /// the host trajectory (`x_t` only — `t` and the group qparams are
+    /// already resident), dispatches the model and applies one reverse
+    /// update; a `Reuse` run applies the fused closed-form composition
+    /// of its skipped steps to the group's cached ε̂ with zero device
+    /// work. At δ=0 every step is `Full` and the trajectory is
+    /// byte-identical to the pre-reuse sampler.
     pub fn sample(&self, labels: &[i32], rng: &mut Rng)
                   -> Result<(Vec<f32>, SampleStats)> {
         let m = &self.rt.manifest;
         let b = self.batch;
-        assert_eq!(labels.len(), b, "labels must match artifact batch");
+        if labels.len() != b {
+            bail!(
+                "label count {} does not match artifact batch {b} \
+                 (rung `{}`)",
+                labels.len(), self.artifact
+            );
+        }
         let il = self.img_len;
+        let shape = [b, m.model.img_size, m.model.img_size,
+                     m.model.channels];
+        let n = self.sched.len();
         let mut stats = SampleStats::default();
 
         let mut x = rng.normal_vec(b * il);
         let yb = self.rt.upload_i32(labels, &[b])?;
         let mut last_group = usize::MAX;
-        let mut qpb: Option<xla::PjRtBuffer> = None;
+        // group-local ε̂ cache for the reuse fast path
+        let mut eps_hat: Vec<f32> = Vec::new();
+        let mut eps_group = usize::MAX;
 
         let t_total = std::time::Instant::now();
-        for i in 0..self.sched.len() {
-            let t = self.sched.steps[i];
-            let tvec = vec![t as i32; b];
+        for run in ReusePolicy::runs(&self.plan) {
+            let g = self.qc.groups.group_of(self.sched.steps[run.start]);
+            let nc = self.qc.correction_for_t(self.sched.steps[run.start]);
 
-            // TGQ: swap the packed qparams when crossing a boundary
-            if !self.qvecs.is_empty() {
-                let g = self.qc.groups.group_of(t);
-                if g != last_group {
-                    qpb = Some(self.rt.upload(&self.qvecs[g])?);
+            if run.reuse && eps_group == g && !eps_hat.is_empty() {
+                // fused reuse run: one host update, zero dispatches,
+                // zero uploads — ε̂ rescales through the closed form
+                let (a, bc, s) =
+                    self.sched.fused_coeffs(run.start, run.len,
+                                            nc.resid_var);
+                for j in 0..x.len() {
+                    x[j] = a * x[j] - bc * eps_hat[j];
+                }
+                if s > 0.0 {
+                    let z = rng.normal_vec(b * il);
+                    for j in 0..x.len() {
+                        x[j] += s * z[j];
+                    }
+                }
+                stats.steps += 1;
+                stats.reuse_hits += run.len;
+                stats.steps_skipped += run.len;
+                stats.uploads_saved += 2 * run.len; // x_t and t
+                continue;
+            }
+
+            // full step(s); a reuse run without a cached same-group ε̂
+            // (impossible under `ReusePolicy::plan`, which opens every
+            // group with a Full step) degrades to full steps here
+            for i in run.start..run.start + run.len {
+                // TGQ: switch the resident qparams buffer on crossing
+                if !self.qbufs.is_empty() && g != last_group {
                     last_group = g;
                     stats.qp_swaps += 1;
+                    stats.uploads_saved += 1; // resident since init
                 }
-            }
 
-            let xt = Tensor::new(
-                vec![b, m.model.img_size, m.model.img_size,
-                     m.model.channels],
-                x.clone(),
-            );
-            let xb = self.rt.upload(&xt)?;
-            let tb = self.rt.upload_i32(&tvec, &[b])?;
-            let t_exec = std::time::Instant::now();
-            let mut inputs: Vec<&xla::PjRtBuffer> =
-                self.wbufs.iter().collect();
-            inputs.extend([&xb, &tb, &yb]);
-            if let Some(q) = &qpb {
-                inputs.push(q);
-            }
-            let outs = self.rt.run_buffers(&self.artifact, &inputs)?;
-            stats.exec_s += t_exec.elapsed().as_secs_f64();
-            let mut eps_hat = outs[0].data.clone();
-
-            // PTQD correlated-noise correction (identity for others)
-            let nc = self.qc.correction_for_t(t);
-            if nc.rho != 1.0 || nc.bias != 0.0 {
-                let inv = 1.0 / nc.rho;
-                for e in eps_hat.iter_mut() {
-                    *e = (*e - nc.bias) * inv;
+                let xb = self.rt.upload_f32(&x, &shape)?;
+                let t_exec = std::time::Instant::now();
+                let mut inputs: Vec<&xla::PjRtBuffer> =
+                    self.wbufs.iter().collect();
+                inputs.extend([&xb, &self.tbufs[i], &yb]);
+                if let Some(q) = self.qbufs.get(g) {
+                    inputs.push(q);
                 }
-            }
+                let mut outs =
+                    self.rt.run_buffers(&self.artifact, &inputs)?;
+                stats.exec_s += t_exec.elapsed().as_secs_f64();
+                if outs.is_empty() {
+                    bail!("artifact `{}` returned no outputs",
+                          self.artifact);
+                }
+                eps_hat = outs.swap_remove(0).data;
+                eps_group = g;
 
-            // ancestral update with (optionally) reduced variance
-            let last = i + 1 == self.sched.len();
-            let noise = if last {
-                None
-            } else {
-                Some(rng.normal_vec(b * il))
-            };
-            self.reverse_step(i, &mut x, &eps_hat, noise.as_deref(),
-                              nc.resid_var);
-            stats.steps += 1;
+                // PTQD correlated-noise correction (identity for others)
+                if nc.rho != 1.0 || nc.bias != 0.0 {
+                    let inv = 1.0 / nc.rho;
+                    for e in eps_hat.iter_mut() {
+                        *e = (*e - nc.bias) * inv;
+                    }
+                }
+
+                // ancestral update with (optionally) reduced variance
+                let noise = if i + 1 == n {
+                    None
+                } else {
+                    Some(rng.normal_vec(b * il))
+                };
+                let (c_x, c_eps, sigma) =
+                    self.sched.step_coeffs(i, nc.resid_var);
+                for j in 0..x.len() {
+                    x[j] = c_x * (x[j] - c_eps * eps_hat[j]);
+                }
+                if let Some(z) = &noise {
+                    for j in 0..x.len() {
+                        x[j] += sigma * z[j];
+                    }
+                }
+                stats.steps += 1;
+                stats.uploads_saved += 1; // t resident since init
+            }
         }
         stats.host_s = t_total.elapsed().as_secs_f64() - stats.exec_s;
 
@@ -247,31 +365,6 @@ impl<'a> Sampler<'a> {
             *v = v.clamp(-1.5, 1.5);
         }
         Ok((x, stats))
-    }
-
-    /// Reverse step with PTQD variance shrinkage: the residual
-    /// (uncorrelated) quantization noise enters x with coefficient
-    /// c_ε = β/√(1−ᾱ); its variance is removed from the posterior σ².
-    fn reverse_step(&self, i: usize, x: &mut [f32], eps_hat: &[f32],
-                    noise: Option<&[f32]>, resid_var: f32) {
-        let s = &self.sched;
-        let beta = s.betas[i];
-        let ab = s.alpha_bars[i];
-        let ab_prev = s.alpha_bars_prev[i];
-        let alpha = 1.0 - beta;
-        let c_eps = (beta / (1.0 - ab).sqrt()) as f32;
-        let c_x = (1.0 / alpha.sqrt()) as f32;
-        let var = beta * (1.0 - ab_prev) / (1.0 - ab);
-        let var = (var - (c_eps as f64).powi(2) * resid_var as f64).max(0.0);
-        let sigma = var.sqrt() as f32;
-        for j in 0..x.len() {
-            x[j] = c_x * (x[j] - c_eps * eps_hat[j]);
-        }
-        if let Some(z) = noise {
-            for j in 0..x.len() {
-                x[j] += sigma * z[j];
-            }
-        }
     }
 
     /// Generate `n` images round-robin over the classes, streaming each
@@ -296,6 +389,9 @@ impl<'a> Sampler<'a> {
             produced += take;
             agg.steps += st.steps;
             agg.qp_swaps += st.qp_swaps;
+            agg.reuse_hits += st.reuse_hits;
+            agg.steps_skipped += st.steps_skipped;
+            agg.uploads_saved += st.uploads_saved;
             agg.exec_s += st.exec_s;
             agg.host_s += st.host_s;
         }

@@ -1,0 +1,450 @@
+//! Time-grouped step reuse: the policy deciding, per sampler step,
+//! whether to run the model or reuse the group's last ε̂.
+//!
+//! The paper's TGQ insight — activations vary smoothly *within* a time
+//! group — is exploited at inference here: adjacent steps in a
+//! low-drift group share one forward pass, and the skipped reverse
+//! updates are applied with the scheduler's closed-form composition
+//! ([`DdpmSchedule::fused_coeffs`]), so a run of reused steps costs one
+//! host update and zero device dispatches.
+//!
+//! Everything in this module is pure and device-free:
+//!
+//! * [`drift_from_schedule`] computes the per-group ε-drift proxy the
+//!   coordinator records alongside the calibrated `QuantConfig` — the
+//!   mean change of the forward-process mixing coefficients
+//!   (√ᾱ, √(1−ᾱ)) across adjacent visited steps of each group. It is
+//!   the schedule-level upper-bound on how far ε̂ can wander between
+//!   two steps the sampler actually takes in that group.
+//! * [`ReusePolicy`] turns `drift < δ` (strict — δ=0 never reuses)
+//!   into a per-step [`Decision`] plan. Groups further below the
+//!   threshold refresh less often (stride 2/4/8), which is the
+//!   "per-group step schedule": a group at stride k takes ⌈n/k⌉ full
+//!   steps outright. The first visited step of every group is always
+//!   `Full`, so a `Reuse` step always has a same-group ε̂ to reuse.
+//! * [`simulate`] runs a full trajectory against a caller-supplied
+//!   ε̂-closure with *exactly* the control flow, RNG draw order and
+//!   fused math of `Sampler::sample` — the device-free reference the
+//!   δ=0 byte-equality tests and the CI reuse bench are built on.
+
+use crate::sched::{DdpmSchedule, TimeGroups};
+use crate::util::rng::Rng;
+
+use super::SampleStats;
+
+/// Per-step verdict of the [`ReusePolicy`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Decision {
+    /// Run the forward pass at this step.
+    Full,
+    /// Skip the forward pass; reuse the group's last ε̂ with the
+    /// scheduler's closed-form rescaling.
+    Reuse,
+}
+
+/// A maximal run of consecutive same-decision steps; `Reuse` runs never
+/// cross a time-group boundary (the first visited step of every group
+/// is `Full` by construction).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Run {
+    /// First sampler-step index of the run.
+    pub start: usize,
+    /// Number of consecutive steps in the run.
+    pub len: usize,
+    /// `true` for a reuse run, `false` for a single full step.
+    pub reuse: bool,
+}
+
+/// Step-reuse decision policy: a drift threshold δ applied to the
+/// calibrated per-group drift statistics.
+#[derive(Clone, Copy, Debug)]
+pub struct ReusePolicy {
+    /// Drift threshold; a group reuses only while `drift[g] < delta`
+    /// (strict), so δ=0 reproduces the no-reuse trajectory exactly.
+    pub delta: f64,
+}
+
+impl ReusePolicy {
+    pub fn new(delta: f64) -> ReusePolicy {
+        ReusePolicy { delta }
+    }
+
+    /// Refresh stride for one group: how many trajectory steps share a
+    /// forward pass. Drift at or above δ never reuses (stride 1);
+    /// below δ the stride doubles per halving of drift, capped at 8.
+    pub fn stride(&self, drift: f32) -> usize {
+        let d = drift as f64;
+        if !d.is_finite() || d < 0.0 || !(d < self.delta) {
+            1
+        } else if d >= self.delta / 2.0 {
+            2
+        } else if d >= self.delta / 4.0 {
+            4
+        } else {
+            8
+        }
+    }
+
+    /// Per-step plan over a descending sampler step sequence. Groups
+    /// missing a drift entry are treated as maximally drifting (never
+    /// reused). Position 0 of every group's visit block is `Full`.
+    pub fn plan(&self, steps: &[usize], groups: &TimeGroups,
+                drift: &[f32]) -> Vec<Decision> {
+        let mut visits = vec![0usize; groups.groups];
+        steps
+            .iter()
+            .map(|&t| {
+                let g = groups.group_of(t);
+                let s = self.stride(drift.get(g).copied().unwrap_or(1.0));
+                let pos = visits[g];
+                visits[g] += 1;
+                if pos % s == 0 {
+                    Decision::Full
+                } else {
+                    Decision::Reuse
+                }
+            })
+            .collect()
+    }
+
+    /// Collapse a plan into maximal runs: each `Full` step is its own
+    /// unit-length run; consecutive `Reuse` steps merge (they share
+    /// one ε̂ and one fused host update).
+    pub fn runs(plan: &[Decision]) -> Vec<Run> {
+        let mut out = Vec::new();
+        let mut i = 0usize;
+        while i < plan.len() {
+            match plan[i] {
+                Decision::Full => {
+                    out.push(Run { start: i, len: 1, reuse: false });
+                    i += 1;
+                }
+                Decision::Reuse => {
+                    let mut k = 1usize;
+                    while i + k < plan.len()
+                        && plan[i + k] == Decision::Reuse
+                    {
+                        k += 1;
+                    }
+                    out.push(Run { start: i, len: k, reuse: true });
+                    i += k;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Per-group step schedule derived from a plan: which sampler-step
+/// indices run full and which reuse, per time group. The union over
+/// groups partitions `0..steps.len()` exactly (the conservation
+/// property the tests pin).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct GroupSchedule {
+    /// Sampler-step indices this group runs the model at.
+    pub full: Vec<usize>,
+    /// Sampler-step indices this group reuses its last ε̂ at.
+    pub reuse: Vec<usize>,
+}
+
+/// Split a plan into per-group schedules (index = group).
+pub fn per_group_schedule(steps: &[usize], groups: &TimeGroups,
+                          plan: &[Decision]) -> Vec<GroupSchedule> {
+    let mut out = vec![GroupSchedule::default(); groups.groups];
+    for (i, &t) in steps.iter().enumerate() {
+        let g = groups.group_of(t);
+        match plan.get(i).copied().unwrap_or(Decision::Full) {
+            Decision::Full => out[g].full.push(i),
+            Decision::Reuse => out[g].reuse.push(i),
+        }
+    }
+    out
+}
+
+/// Schedule-derived per-group ε-drift proxy, recorded at calibration
+/// time: the mean over adjacent *visited* step pairs (t, t') of
+/// |√(1−ᾱ_t) − √(1−ᾱ_t')| + |√ᾱ_t − √ᾱ_t'| — how much the forward
+/// process mixing changes between two steps the sampler actually takes
+/// inside the group. Groups covering fewer than two visited steps get
+/// the sentinel 1.0 (never reused: there is no adjacent pair to share
+/// a forward pass across).
+pub fn drift_from_schedule(sched: &DdpmSchedule, groups: &TimeGroups)
+                           -> Vec<f32> {
+    (0..groups.groups)
+        .map(|g| {
+            let (lo, hi) = groups.range_of(g);
+            let visited: Vec<usize> = sched
+                .steps
+                .iter()
+                .copied()
+                .filter(|&t| t >= lo && t <= hi)
+                .collect();
+            if visited.len() < 2 {
+                return 1.0;
+            }
+            let coeff = |t: usize| {
+                let ab = sched.train_alpha_bars[t];
+                (ab.sqrt(), (1.0 - ab).sqrt())
+            };
+            let sum: f64 = visited
+                .windows(2)
+                .map(|w| {
+                    let (a0, e0) = coeff(w[0]);
+                    let (a1, e1) = coeff(w[1]);
+                    (a0 - a1).abs() + (e0 - e1).abs()
+                })
+                .sum();
+            (sum / (visited.len() - 1) as f64) as f32
+        })
+        .collect()
+}
+
+/// Device-free reference trajectory: runs the reuse-aware sampling
+/// loop against `eps_of(x, t, g)` in place of the model, with the same
+/// decision plan, fused math, RNG draw order and final clamp as
+/// `Sampler::sample`. With δ=0 this is byte-identical to the plain
+/// per-step loop; the tests and the CI reuse bench both rest on it.
+pub fn simulate<F>(sched: &DdpmSchedule, groups: &TimeGroups,
+                   drift: &[f32], delta: f64, img_len: usize,
+                   rng: &mut Rng, mut eps_of: F)
+                   -> (Vec<f32>, SampleStats)
+where
+    F: FnMut(&[f32], usize, usize) -> Vec<f32>,
+{
+    let plan = ReusePolicy::new(delta).plan(&sched.steps, groups, drift);
+    let runs = ReusePolicy::runs(&plan);
+    let mut stats = SampleStats::default();
+    let mut x = rng.normal_vec(img_len);
+    let mut eps_hat: Vec<f32> = Vec::new();
+    let mut eps_group = usize::MAX;
+    let n = sched.len();
+    for run in &runs {
+        let g = groups.group_of(sched.steps[run.start]);
+        if run.reuse && eps_group == g && !eps_hat.is_empty() {
+            let (a, bc, s) = sched.fused_coeffs(run.start, run.len, 0.0);
+            for j in 0..x.len() {
+                x[j] = a * x[j] - bc * eps_hat[j];
+            }
+            if s > 0.0 {
+                let z = rng.normal_vec(img_len);
+                for j in 0..x.len() {
+                    x[j] += s * z[j];
+                }
+            }
+            stats.steps += 1;
+            stats.reuse_hits += run.len;
+            stats.steps_skipped += run.len;
+            stats.uploads_saved += 2 * run.len;
+            continue;
+        }
+        // full step(s); a degraded reuse run (no cached ε̂ — cannot
+        // happen under plans from `ReusePolicy::plan`) falls through
+        // here and stays exact
+        for i in run.start..run.start + run.len {
+            eps_hat = eps_of(&x, sched.steps[i], g);
+            eps_group = g;
+            let (c_x, c_eps, sigma) = sched.step_coeffs(i, 0.0);
+            let noise = if i + 1 == n {
+                None
+            } else {
+                Some(rng.normal_vec(img_len))
+            };
+            for j in 0..x.len() {
+                x[j] = c_x * (x[j] - c_eps * eps_hat[j]);
+            }
+            if let Some(z) = &noise {
+                for j in 0..x.len() {
+                    x[j] += sigma * z[j];
+                }
+            }
+            stats.steps += 1;
+            stats.uploads_saved += 1;
+        }
+    }
+    for v in x.iter_mut() {
+        *v = v.clamp(-1.5, 1.5);
+    }
+    (x, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+
+    fn sched(t_sample: usize) -> DdpmSchedule {
+        DdpmSchedule::new(250, 1e-4, 0.02, t_sample)
+    }
+
+    #[test]
+    fn delta_zero_plans_all_full() {
+        check("delta0_all_full", 40, |g| {
+            let t_sample = g.usize_in(1, 120);
+            let groups = TimeGroups::new(250, g.usize_in(1, t_sample.min(10)));
+            let s = sched(t_sample);
+            let drift: Vec<f32> =
+                (0..groups.groups).map(|_| g.f32_in(0.0, 0.5)).collect();
+            let plan = ReusePolicy::new(0.0).plan(&s.steps, &groups, &drift);
+            if plan.iter().all(|d| *d == Decision::Full) {
+                Ok(())
+            } else {
+                Err(format!("δ=0 planned a reuse step: {plan:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn schedule_conservation_partitions_every_step() {
+        // per-group schedules cover every group's visited steps, no
+        // step double-counted, and the union is exactly 0..n
+        check("schedule_conservation", 40, |g| {
+            let t_sample = g.usize_in(2, 120);
+            let groups = TimeGroups::new(250, g.usize_in(1, 10));
+            let s = sched(t_sample);
+            let drift: Vec<f32> =
+                (0..groups.groups).map(|_| g.f32_in(0.0, 0.1)).collect();
+            let delta = g.f32_in(0.0, 0.1) as f64;
+            let plan = ReusePolicy::new(delta).plan(&s.steps, &groups, &drift);
+            let per = per_group_schedule(&s.steps, &groups, &plan);
+            let mut seen = vec![0usize; s.len()];
+            for gs in &per {
+                for &i in gs.full.iter().chain(&gs.reuse) {
+                    seen[i] += 1;
+                }
+            }
+            if seen.iter().any(|&c| c != 1) {
+                return Err(format!("steps not covered exactly once: {seen:?}"));
+            }
+            // each group that appears in the trajectory runs at least
+            // one full step (the ε̂ producer)
+            for (gi, gs) in per.iter().enumerate() {
+                let visited = s.steps.iter()
+                    .any(|&t| groups.group_of(t) == gi);
+                if visited && gs.full.is_empty() {
+                    return Err(format!("group {gi} has no full step"));
+                }
+                if !visited && !(gs.full.is_empty() && gs.reuse.is_empty()) {
+                    return Err(format!("unvisited group {gi} got steps"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn first_visit_of_each_group_is_full() {
+        let s = sched(100);
+        let groups = TimeGroups::new(250, 10);
+        let drift = vec![0.0f32; 10]; // maximally reusable
+        let plan = ReusePolicy::new(0.5).plan(&s.steps, &groups, &drift);
+        let mut seen = vec![false; 10];
+        for (i, &t) in s.steps.iter().enumerate() {
+            let g = groups.group_of(t);
+            if !seen[g] {
+                assert_eq!(plan[i], Decision::Full, "group {g} step {i}");
+                seen[g] = true;
+            }
+        }
+        // and with zero drift the stride cap bites: ≥ half the steps reuse
+        let reused = plan.iter().filter(|d| **d == Decision::Reuse).count();
+        assert!(reused * 2 >= s.len(), "{reused}/{}", s.len());
+    }
+
+    #[test]
+    fn runs_merge_only_reuse_steps() {
+        use Decision::{Full, Reuse};
+        let plan = [Full, Reuse, Reuse, Full, Full, Reuse];
+        let runs = ReusePolicy::runs(&plan);
+        assert_eq!(runs, vec![
+            Run { start: 0, len: 1, reuse: false },
+            Run { start: 1, len: 2, reuse: true },
+            Run { start: 3, len: 1, reuse: false },
+            Run { start: 4, len: 1, reuse: false },
+            Run { start: 5, len: 1, reuse: true },
+        ]);
+        // runs partition the plan
+        let total: usize = runs.iter().map(|r| r.len).sum();
+        assert_eq!(total, plan.len());
+    }
+
+    #[test]
+    fn drift_proxy_orders_groups_and_flags_sparse_ones() {
+        let s = sched(100);
+        let groups = TimeGroups::new(250, 10);
+        let drift = drift_from_schedule(&s, &groups);
+        assert_eq!(drift.len(), 10);
+        for &d in &drift {
+            assert!(d.is_finite() && d >= 0.0);
+            // adjacent respaced steps move the mixing coefficients by
+            // far less than the 1.0 sentinel
+            assert!(d < 0.5, "{d}");
+        }
+        // a 5-step trajectory cannot give 10 groups two visits each:
+        // sparse groups get the sentinel
+        let s5 = sched(5);
+        let d5 = drift_from_schedule(&s5, &groups);
+        assert!(d5.iter().filter(|&&d| d == 1.0).count() >= 5, "{d5:?}");
+    }
+
+    #[test]
+    fn simulate_delta_zero_matches_plain_loop_exactly() {
+        // the reuse-aware loop at δ=0 is byte-identical to the plain
+        // per-step reverse loop (same RNG draws, same arithmetic)
+        let s = sched(60);
+        let groups = TimeGroups::new(250, 10);
+        let drift = drift_from_schedule(&s, &groups);
+        let il = 32usize;
+        // deterministic stand-in for the model
+        let eps_of = |x: &[f32], t: usize, _g: usize| -> Vec<f32> {
+            x.iter()
+                .map(|v| (v * 0.9 + t as f32 * 1e-3).sin())
+                .collect()
+        };
+        let mut rng_a = Rng::new(42);
+        let (got, stats) =
+            simulate(&s, &groups, &drift, 0.0, il, &mut rng_a, eps_of);
+        assert_eq!(stats.reuse_hits, 0);
+        assert_eq!(stats.steps_skipped, 0);
+        assert_eq!(stats.steps, s.len());
+
+        let mut rng_b = Rng::new(42);
+        let mut x = rng_b.normal_vec(il);
+        for i in 0..s.len() {
+            let eps = eps_of(&x, s.steps[i], 0);
+            let noise = if i + 1 == s.len() {
+                None
+            } else {
+                Some(rng_b.normal_vec(il))
+            };
+            s.reverse_step(i, &mut x, &eps, noise.as_deref());
+        }
+        for v in x.iter_mut() {
+            *v = v.clamp(-1.5, 1.5);
+        }
+        assert_eq!(got, x, "δ=0 trajectory diverged from the plain loop");
+    }
+
+    #[test]
+    fn simulate_with_reuse_skips_forwards_and_stays_finite() {
+        let s = sched(60);
+        let groups = TimeGroups::new(250, 10);
+        let drift = drift_from_schedule(&s, &groups);
+        let il = 32usize;
+        let mut forwards = 0usize;
+        let mut rng = Rng::new(7);
+        let (x, stats) = simulate(
+            &s, &groups, &drift, 0.25, il, &mut rng,
+            |x, t, _g| {
+                forwards += 1;
+                x.iter()
+                    .map(|v| (v * 0.9 + t as f32 * 1e-3).sin())
+                    .collect()
+            },
+        );
+        assert!(stats.reuse_hits > 0);
+        assert_eq!(stats.steps_skipped, s.len() - forwards);
+        assert_eq!(stats.reuse_hits, stats.steps_skipped);
+        assert!(stats.steps < s.len()); // fused runs collapse updates
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+}

@@ -121,6 +121,56 @@ impl DdpmSchedule {
             }
         }
     }
+
+    /// Coefficients of the reverse update at sampler index `i` with
+    /// PTQD variance shrinkage: returns `(c_x, c_eps, σ)` where the
+    /// update is x ← c_x·(x − c_eps·ε̂) + σ·z and the residual
+    /// (uncorrelated) quantization noise variance `resid_var` has been
+    /// removed from the posterior σ² (floored at zero). The f32
+    /// roundings deliberately reproduce [`Self::reverse_step`]'s
+    /// arithmetic so a loop built on these coefficients stays
+    /// byte-identical to the direct update.
+    pub fn step_coeffs(&self, i: usize, resid_var: f32)
+                       -> (f32, f32, f32) {
+        let beta = self.betas[i];
+        let ab = self.alpha_bars[i];
+        let ab_prev = self.alpha_bars_prev[i];
+        let alpha = 1.0 - beta;
+        let c_eps = (beta / (1.0 - ab).sqrt()) as f32;
+        let c_x = (1.0 / alpha.sqrt()) as f32;
+        let var = beta * (1.0 - ab_prev) / (1.0 - ab);
+        let var =
+            (var - (c_eps as f64).powi(2) * resid_var as f64).max(0.0);
+        (c_x, c_eps, var.sqrt() as f32)
+    }
+
+    /// Closed-form composition of `count` consecutive reverse steps
+    /// starting at sampler index `i0`, all sharing one ε̂ (the
+    /// step-reuse fast path): returns `(a, b, s)` such that
+    /// x_out = a·x − b·ε̂ + s·z for a single standard gaussian z.
+    ///
+    /// Derivation: each step applies x ← c_x·(x − c_eps·ε̂) + σ·z_j, so
+    /// the affine part composes as a ← c_x·a, b ← c_x·(b + c_eps) and
+    /// the independent gaussians fold into one with
+    /// s² ← c_x²·s² + σ². The trajectory-final step contributes no
+    /// noise (the sampler passes `noise: None` there), which the
+    /// composition honors by dropping σ when `i = len()−1`.
+    pub fn fused_coeffs(&self, i0: usize, count: usize, resid_var: f32)
+                        -> (f32, f32, f32) {
+        let mut a = 1.0f64;
+        let mut b = 0.0f64;
+        let mut var = 0.0f64;
+        for i in i0..(i0 + count).min(self.len()) {
+            let (c_x, c_eps, sigma) = self.step_coeffs(i, resid_var);
+            let (c_x, c_eps, sigma) =
+                (c_x as f64, c_eps as f64, sigma as f64);
+            a *= c_x;
+            b = c_x * (b + c_eps);
+            var = c_x * c_x * var
+                + if i + 1 < self.len() { sigma * sigma } else { 0.0 };
+        }
+        (a as f32, b as f32, var.sqrt() as f32)
+    }
 }
 
 #[cfg(test)]
@@ -207,5 +257,81 @@ mod tests {
         assert_eq!(s.steps[i_last], 0);
         // ᾱ_prev at the final step is 1 → posterior variance ≈ β·0
         assert!((s.alpha_bars_prev[i_last] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn step_coeffs_pin_reverse_step_rescaling() {
+        // the coefficients are the closed-form pieces of eq. 3/4:
+        // c_eps = β/√(1−ᾱ), c_x = 1/√α, σ² = β·(1−ᾱ_prev)/(1−ᾱ)
+        let s = sched(100);
+        for i in [0usize, 37, 99] {
+            let (c_x, c_eps, sigma) = s.step_coeffs(i, 0.0);
+            let beta = s.betas[i];
+            let ab = s.alpha_bars[i];
+            let ab_prev = s.alpha_bars_prev[i];
+            assert_eq!(c_eps, (beta / (1.0 - ab).sqrt()) as f32);
+            assert_eq!(c_x, (1.0 / (1.0 - beta).sqrt()) as f32);
+            let var = beta * (1.0 - ab_prev) / (1.0 - ab);
+            assert!((sigma as f64 - var.sqrt()).abs() < 1e-7);
+            // a loop built on the coefficients reproduces reverse_step
+            // byte-for-byte (the sampler's δ=0 exactness rests on this)
+            let eps = vec![0.25f32; 4];
+            let z = vec![-0.5f32; 4];
+            let mut a = vec![0.7f32; 4];
+            let mut b = a.clone();
+            s.reverse_step(i, &mut a, &eps, Some(&z));
+            for j in 0..b.len() {
+                b[j] = c_x * (b[j] - c_eps * eps[j]) + sigma * z[j];
+            }
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn step_coeffs_shrinkage_floors_sigma_at_zero() {
+        let s = sched(100);
+        let (_, _, sigma) = s.step_coeffs(10, 1e9);
+        assert_eq!(sigma, 0.0);
+    }
+
+    #[test]
+    fn fused_coeffs_match_sequential_composition() {
+        // k reverse steps sharing one ε̂ collapse to x·a − ε̂·b exactly
+        // (zero-noise path), for interior and trajectory-final runs
+        let s = sched(100);
+        for (i0, count) in [(3usize, 4usize), (0, 1), (96, 4)] {
+            let eps = vec![0.3f32; 8];
+            let mut x = vec![0.9f32; 8];
+            for i in i0..i0 + count {
+                s.reverse_step(i, &mut x, &eps, None);
+            }
+            let (a, b, _) = s.fused_coeffs(i0, count, 0.0);
+            for &v in &x {
+                let fused = a * 0.9 - b * 0.3;
+                assert!((v - fused).abs() < 1e-5, "{v} vs {fused}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_variance_composes_and_skips_final_noise() {
+        let s = sched(100);
+        // interior run: s² = Σ_j σ_j² · Π_{l>j} c_x_l²
+        let (i0, count) = (10usize, 3usize);
+        let mut want = 0.0f64;
+        for j in i0..i0 + count {
+            let (_, _, sigma) = s.step_coeffs(j, 0.0);
+            let mut tail = 1.0f64;
+            for l in j + 1..i0 + count {
+                let (c_x, _, _) = s.step_coeffs(l, 0.0);
+                tail *= (c_x as f64) * (c_x as f64);
+            }
+            want += (sigma as f64).powi(2) * tail;
+        }
+        let (_, _, sf) = s.fused_coeffs(i0, count, 0.0);
+        assert!((sf as f64 - want.sqrt()).abs() < 1e-7);
+        // a run ending on the trajectory-final step draws no noise there
+        let (_, _, s_last) = s.fused_coeffs(s.len() - 1, 1, 0.0);
+        assert_eq!(s_last, 0.0);
     }
 }

@@ -52,6 +52,17 @@
 //!   or parks on the condvar with the linger deadline as timeout.
 //!   Per-rung batch/padding/latency accounting lands in
 //!   [`WorkerStats`]/[`ServerStats`].
+//! * **Step reuse** happens one layer below the router, inside each
+//!   worker's [`crate::sampler::Sampler`]: a timestep-aware reuse plan
+//!   ([`crate::sampler::reuse::ReusePolicy`], threshold `--reuse-delta`,
+//!   δ=0 ⇒ byte-identical to the dense trajectory) serves low-drift
+//!   steps from the group's cached ε̂ with closed-form coefficient
+//!   fusion instead of running the transformer. The backend reports
+//!   lifetime totals through [`GenBackend::reuse_counters`]; the
+//!   router folds them into [`WorkerStats`]/[`ServerStats`] as
+//!   `reuse_hits` / `steps_skipped` / `uploads_saved`, and the net
+//!   layer carries them in stats deltas and cluster folds like every
+//!   other counter.
 //!
 //! # Threading model
 //!

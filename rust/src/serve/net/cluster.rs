@@ -1508,6 +1508,9 @@ fn stats_fold(acc: &ServerStats, d: &ServerStats) -> ServerStats {
     next.requeued = acc.requeued + d.requeued;
     next.nodes_lost = acc.nodes_lost + d.nodes_lost;
     next.nodes_readmitted = acc.nodes_readmitted + d.nodes_readmitted;
+    next.reuse_hits = acc.reuse_hits + d.reuse_hits;
+    next.steps_skipped = acc.steps_skipped + d.steps_skipped;
+    next.uploads_saved = acc.uploads_saved + d.uploads_saved;
     next
 }
 

@@ -41,7 +41,8 @@
 //!
 //! Both transport modes speak the same wire protocol and are selected
 //! per process ([`NodeOpts::reactor`], [`ClusterOpts::reactor`],
-//! `--reactor` on the CLI); a reactor cluster serves threaded nodes
+//! `--reactor` on the CLI — reactor is the CLI default, threaded is
+//! the `--reactor false` fallback); a reactor cluster serves threaded nodes
 //! and vice versa. [`reactor::ReactorOpts::max_conns`] (`--max-conns`)
 //! caps accepted connections — the reactor holds thousands of idle
 //! connections at O(workers) threads, where the legacy mode spends a

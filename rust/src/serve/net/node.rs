@@ -6,7 +6,9 @@
 //! [`wire`](crate::serve::net::wire) frames, in one of two transport
 //! modes selected by [`NodeOpts::reactor`]:
 //!
-//! **Threaded mode** (the default, the original PR 4 shape):
+//! **Threaded mode** (the library default here and the original PR 4
+//! shape; note the CLI now defaults to `--reactor true` and reaches
+//! this path only via `--reactor false`):
 //!
 //! * one **accept thread** takes connections;
 //! * one **connection-handler thread per client** reads frames and
@@ -645,6 +647,11 @@ fn stats_delta(prev: &ServerStats, cur: &ServerStats) -> ServerStats {
     d.nodes_lost = cur.nodes_lost.saturating_sub(prev.nodes_lost);
     d.nodes_readmitted =
         cur.nodes_readmitted.saturating_sub(prev.nodes_readmitted);
+    d.reuse_hits = cur.reuse_hits.saturating_sub(prev.reuse_hits);
+    d.steps_skipped =
+        cur.steps_skipped.saturating_sub(prev.steps_skipped);
+    d.uploads_saved =
+        cur.uploads_saved.saturating_sub(prev.uploads_saved);
     d
 }
 

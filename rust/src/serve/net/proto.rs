@@ -601,6 +601,9 @@ fn worker_to_json(w: &WorkerStats) -> Json {
         ("images", Json::Num(w.images as f64)),
         ("padded_slots", Json::Num(w.padded_slots as f64)),
         ("busy_s", Json::Num(w.busy_s)),
+        ("reuse_hits", Json::Num(w.reuse_hits as f64)),
+        ("steps_skipped", Json::Num(w.steps_skipped as f64)),
+        ("uploads_saved", Json::Num(w.uploads_saved as f64)),
         ("rungs", Json::Arr(w.rungs.iter().map(rung_to_json).collect())),
         ("ready", Json::Bool(w.ready)),
         ("failed", Json::Bool(w.failed)),
@@ -621,6 +624,9 @@ fn worker_from_json(j: &Json) -> Result<WorkerStats> {
         images: count_field(j, "images")?,
         padded_slots: count_field(j, "padded_slots")?,
         busy_s: num_field(j, "busy_s")?,
+        reuse_hits: count_field(j, "reuse_hits")?,
+        steps_skipped: count_field(j, "steps_skipped")?,
+        uploads_saved: count_field(j, "uploads_saved")?,
         rungs,
         ready: j
             .get("ready")
@@ -659,6 +665,9 @@ pub fn stats_to_json(s: &ServerStats) -> Json {
         ("requeued", Json::Num(s.requeued as f64)),
         ("nodes_lost", Json::Num(s.nodes_lost as f64)),
         ("nodes_readmitted", Json::Num(s.nodes_readmitted as f64)),
+        ("reuse_hits", Json::Num(s.reuse_hits as f64)),
+        ("steps_skipped", Json::Num(s.steps_skipped as f64)),
+        ("uploads_saved", Json::Num(s.uploads_saved as f64)),
         ("rungs", Json::Arr(s.rungs.iter().map(rung_to_json).collect())),
         (
             "workers",
@@ -706,6 +715,9 @@ pub fn stats_from_json(j: &Json) -> Result<ServerStats> {
         requeued: count_field(j, "requeued")?,
         nodes_lost: count_field(j, "nodes_lost")?,
         nodes_readmitted: count_field(j, "nodes_readmitted")?,
+        reuse_hits: count_field(j, "reuse_hits")?,
+        steps_skipped: count_field(j, "steps_skipped")?,
+        uploads_saved: count_field(j, "uploads_saved")?,
         rungs,
         workers,
     })
@@ -744,6 +756,9 @@ mod tests {
             requeued: g.usize_in(0, 20) as u64,
             nodes_lost: g.usize_in(0, 3) as u64,
             nodes_readmitted: g.usize_in(0, 3) as u64,
+            reuse_hits: g.usize_in(0, 500) as u64,
+            steps_skipped: g.usize_in(0, 500) as u64,
+            uploads_saved: g.usize_in(0, 2000) as u64,
             rungs: Vec::new(),
             workers: Vec::new(),
         };
@@ -763,6 +778,9 @@ mod tests {
                 images: g.usize_in(0, 500) as u64,
                 padded_slots: g.usize_in(0, 50) as u64,
                 busy_s: g.f32_in(0.0, 10.0) as f64,
+                reuse_hits: g.usize_in(0, 200) as u64,
+                steps_skipped: g.usize_in(0, 200) as u64,
+                uploads_saved: g.usize_in(0, 800) as u64,
                 rungs: vec![RungStats {
                     rung: 4,
                     batches: g.usize_in(0, 10) as u64,

@@ -115,6 +115,14 @@ pub struct WorkerStats {
     pub padded_slots: u64,
     /// Wall-clock spent inside `generate`.
     pub busy_s: f64,
+    /// Sampler steps whose ε̂ came from the step-reuse cache instead of
+    /// a forward pass (zero for backends without a reuse layer).
+    pub reuse_hits: u64,
+    /// Forward passes the reuse policy avoided outright.
+    pub steps_skipped: u64,
+    /// Host→device uploads avoided by the device-resident trajectory
+    /// (qparams, per-step `t` vectors) plus skipped-step traffic.
+    pub uploads_saved: u64,
     /// The same counters sliced per dispatched ladder rung (ascending).
     pub rungs: Vec<RungStats>,
     /// The backend was built and entered service at some point
@@ -173,6 +181,14 @@ pub struct ServerStats {
     pub requeued: u64,
     pub nodes_lost: u64,
     pub nodes_readmitted: u64,
+    /// Sampler steps served from the step-reuse cache across all
+    /// workers (zero when the reuse layer is disabled, δ = 0).
+    pub reuse_hits: u64,
+    /// Forward passes the reuse policy skipped across all workers.
+    pub steps_skipped: u64,
+    /// Host→device uploads avoided by the device-resident trajectory
+    /// across all workers.
+    pub uploads_saved: u64,
     /// Dispatch counters sliced by ladder rung, aggregated over the
     /// workers (ascending by rung).
     pub rungs: Vec<RungStats>,
@@ -209,6 +225,13 @@ impl ServerStats {
                 "cluster: {} request(s) re-queued, {} node(s) lost, \
                  {} re-admitted",
                 self.requeued, self.nodes_lost, self.nodes_readmitted
+            );
+        }
+        if self.reuse_hits > 0 || self.steps_skipped > 0 {
+            println!(
+                "reuse: {} step(s) served from cache, {} forward pass(es) \
+                 skipped, {} upload(s) saved",
+                self.reuse_hits, self.steps_skipped, self.uploads_saved
             );
         }
         if self.calib_cache_hits + self.calib_cache_misses > 0 {
@@ -278,6 +301,9 @@ impl ServerStats {
         self.requeued += o.requeued;
         self.nodes_lost += o.nodes_lost;
         self.nodes_readmitted += o.nodes_readmitted;
+        self.reuse_hits += o.reuse_hits;
+        self.steps_skipped += o.steps_skipped;
+        self.uploads_saved += o.uploads_saved;
         for r in &o.rungs {
             let e = rung_entry(&mut self.rungs, r.rung);
             e.batches += r.batches;
@@ -307,6 +333,13 @@ pub trait GenBackend {
     /// of [`Self::rungs`] (the policy-chosen rung, padded with class-0
     /// slots).
     fn generate(&mut self, labels: &[i32]) -> Result<Vec<f32>>;
+    /// Cumulative step-reuse counters over this backend's lifetime:
+    /// `(reuse_hits, steps_skipped, uploads_saved)`. Polled after each
+    /// successful batch; backends without a reuse layer keep the
+    /// default all-zero report.
+    fn reuse_counters(&self) -> (u64, u64, u64) {
+        (0, 0, 0)
+    }
 }
 
 /// Handed to each worker body on its own thread; [`WorkerHandle::serve`]
@@ -563,6 +596,12 @@ impl RouterState {
         let images: u64 = self.workers.iter().map(|w| w.images).sum();
         let padded: u64 =
             self.workers.iter().map(|w| w.padded_slots).sum();
+        let reuse_hits: u64 =
+            self.workers.iter().map(|w| w.reuse_hits).sum();
+        let steps_skipped: u64 =
+            self.workers.iter().map(|w| w.steps_skipped).sum();
+        let uploads_saved: u64 =
+            self.workers.iter().map(|w| w.uploads_saved).sum();
         let mut rungs: Vec<RungStats> = Vec::new();
         for w in &self.workers {
             for r in &w.rungs {
@@ -605,6 +644,9 @@ impl RouterState {
             requeued: 0,
             nodes_lost: 0,
             nodes_readmitted: 0,
+            reuse_hits,
+            steps_skipped,
+            uploads_saved,
             rungs,
             workers: self.workers.clone(),
         };
@@ -967,7 +1009,14 @@ fn worker_loop(idx: usize, backend: &mut dyn GenBackend, shared: &Shared)
             // copy_from_slice mid-delivery and strand the whole batch;
             // treat the broken contract like a generate failure instead
             Ok(Ok(imgs)) if imgs.len() == rung * il => {
-                st.deliver(idx, &slots, &imgs, il, rung, busy_s)
+                st.deliver(idx, &slots, &imgs, il, rung, busy_s);
+                // cumulative totals, stored absolute (not accumulated
+                // here) so a re-poll can never double-count
+                let (hits, skipped, saved) = backend.reuse_counters();
+                let w = &mut st.workers[idx];
+                w.reuse_hits = hits;
+                w.steps_skipped = skipped;
+                w.uploads_saved = saved;
             }
             Ok(Ok(imgs)) => {
                 st.fail_batch(idx, &slots, &format!(
@@ -1632,17 +1681,26 @@ mod tests {
             rx.recv().unwrap().unwrap();
             router.shutdown()
         };
-        let b = {
+        let mut b = {
             let router = mock_router(1, 2, 3);
             let (_, rx) =
                 router.submit(GenRequest { class: 2, n: 2 }).unwrap();
             rx.recv().unwrap().unwrap();
             router.shutdown()
         };
+        a.reuse_hits = 3;
+        a.steps_skipped = 3;
+        a.uploads_saved = 7;
+        b.reuse_hits = 2;
+        b.steps_skipped = 1;
+        b.uploads_saved = 4;
         let (ra, rb) = (a.requests, b.requests);
         a.absorb(&b);
         assert_eq!(a.requests, ra + rb);
         assert_eq!(a.images, 7);
+        assert_eq!(a.reuse_hits, 5);
+        assert_eq!(a.steps_skipped, 4);
+        assert_eq!(a.uploads_saved, 11);
         assert_eq!(a.enqueued, 7);
         assert_eq!(a.enqueued, a.dispatched + a.purged + a.pending);
         // worker rows from both services, re-numbered without collision

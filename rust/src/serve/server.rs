@@ -147,10 +147,15 @@ impl Drop for CalibPanicGuard<'_> {
 /// [`GenBackend`] over the real sampler ladder; one per worker thread.
 /// Holds a sampler per served batch rung — all sharing one resident
 /// upload of the quantized weights — and routes each dispatch to the
-/// rung the batch policy planned it for.
+/// rung the batch policy planned it for. Step-reuse counters from each
+/// trajectory accumulate here and surface through
+/// [`GenBackend::reuse_counters`].
 struct SamplerBackend<'a> {
     samplers: Vec<Sampler<'a>>,
     rng: Rng,
+    /// Lifetime totals of the sampler's reuse counters
+    /// (`reuse_hits`, `steps_skipped`, `uploads_saved`).
+    reuse: (u64, u64, u64),
 }
 
 impl<'a> GenBackend for SamplerBackend<'a> {
@@ -171,8 +176,15 @@ impl<'a> GenBackend for SamplerBackend<'a> {
                 anyhow::anyhow!("no sampler lowered for a {}-slot batch",
                                 labels.len())
             })?;
-        let (imgs, _) = s.sample(labels, &mut self.rng)?;
+        let (imgs, stats) = s.sample(labels, &mut self.rng)?;
+        self.reuse.0 += stats.reuse_hits as u64;
+        self.reuse.1 += stats.steps_skipped as u64;
+        self.reuse.2 += stats.uploads_saved as u64;
         Ok(imgs)
+    }
+
+    fn reuse_counters(&self) -> (u64, u64, u64) {
+        self.reuse
     }
 }
 
@@ -216,6 +228,7 @@ impl GenServer {
                 rng: Rng::new(pipe.cfg.seed
                               ^ 0x9e3779b97f4a7c15u64
                                     .wrapping_mul(h.index() as u64 + 1)),
+                reuse: (0, 0, 0),
             };
             h.serve(&mut backend)
         });

@@ -210,10 +210,17 @@ pub struct RunConfig {
     /// Cluster: how often dead shards are re-dialed
     /// (`--reconnect-ms N`).
     pub reconnect_ms: u64,
-    /// Serve/cluster: event-driven transport (`--reactor BOOL`). One
-    /// `poll(2)` reactor thread per process owns every connection
-    /// instead of one handler thread each; same wire protocol, so
-    /// mixed deployments interoperate.
+    /// Sampler: step-reuse drift threshold δ (`--reuse-delta X`). Time
+    /// groups whose calibrated ε-drift sits strictly below δ share
+    /// forward passes across adjacent steps (the skipped reverse
+    /// updates are applied in closed form). 0 disables reuse and is
+    /// byte-identical to the per-step loop.
+    pub reuse_delta: f64,
+    /// Serve/cluster: event-driven transport (`--reactor BOOL`,
+    /// default on). One `poll(2)` reactor thread per process owns
+    /// every connection instead of one handler thread each; same wire
+    /// protocol, so mixed deployments interoperate. `--reactor false`
+    /// falls back to the thread-per-connection transport.
     pub reactor: bool,
     /// Node: accepted-connection cap in reactor mode
     /// (`--max-conns N`); connections past the cap are refused at
@@ -246,7 +253,8 @@ impl Default for RunConfig {
             control_plane: true,
             readmit_pongs: 3,
             reconnect_ms: 1000,
-            reactor: false,
+            reuse_delta: 0.05,
+            reactor: true,
             max_conns: 4096,
         }
     }
@@ -306,6 +314,7 @@ impl RunConfig {
             reconnect_ms: raw
                 .usize("reconnect-ms", d.reconnect_ms as usize)?
                 as u64,
+            reuse_delta: raw.f64("reuse-delta", d.reuse_delta)?,
             reactor: raw.bool("reactor", d.reactor)?,
             max_conns: raw.usize("max-conns", d.max_conns)?,
         };
@@ -352,6 +361,13 @@ impl RunConfig {
         if self.max_conns == 0 {
             bail!("config `max-conns`: must be at least 1 — a zero cap \
                    refuses every connection at accept");
+        }
+        if !self.reuse_delta.is_finite() || self.reuse_delta < 0.0 {
+            bail!(
+                "config `reuse-delta`: must be a finite value >= 0 \
+                 (got {}); 0 disables step reuse",
+                self.reuse_delta
+            );
         }
         Ok(())
     }
@@ -537,16 +553,18 @@ name = "full run"
 
     #[test]
     fn reactor_and_max_conns_flags() {
-        // defaults: legacy thread-per-connection transport, roomy cap
+        // defaults: event-driven reactor transport (soaked in CI —
+        // ROADMAP carry-over), roomy cap
         let cfg = RunConfig::from_raw(&RawConfig::parse("").unwrap())
             .unwrap();
-        assert!(!cfg.reactor);
+        assert!(cfg.reactor);
         assert_eq!(cfg.max_conns, 4096);
-        // bare `--reactor` parses as "true"; the cap is tunable
-        let c = RawConfig::parse("reactor = true\nmax-conns = 2000")
+        // `--reactor false` opts back into thread-per-connection; the
+        // cap is tunable
+        let c = RawConfig::parse("reactor = false\nmax-conns = 2000")
             .unwrap();
         let cfg = RunConfig::from_raw(&c).unwrap();
-        assert!(cfg.reactor);
+        assert!(!cfg.reactor);
         assert_eq!(cfg.max_conns, 2000);
         // a zero cap would refuse every connection
         let c = RawConfig::parse("max-conns = 0").unwrap();
@@ -555,6 +573,28 @@ name = "full run"
         let c = RawConfig::parse("max-conns = lots").unwrap();
         let e = format!("{:#}", RunConfig::from_raw(&c).unwrap_err());
         assert!(e.contains("max-conns") && e.contains("lots"), "{e}");
+    }
+
+    #[test]
+    fn reuse_delta_flag() {
+        // default: a small positive δ — low-drift groups reuse; 0 is
+        // the exactness anchor
+        let cfg = RunConfig::from_raw(&RawConfig::parse("").unwrap())
+            .unwrap();
+        assert_eq!(cfg.reuse_delta, 0.05);
+        let c = RawConfig::parse("reuse-delta = 0").unwrap();
+        assert_eq!(RunConfig::from_raw(&c).unwrap().reuse_delta, 0.0);
+        let c = RawConfig::parse("reuse-delta = 0.125").unwrap();
+        assert_eq!(RunConfig::from_raw(&c).unwrap().reuse_delta, 0.125);
+        // negative, non-finite and malformed values are config errors
+        for bad in ["reuse-delta = -0.1", "reuse-delta = inf",
+                    "reuse-delta = NaN"] {
+            let c = RawConfig::parse(bad).unwrap();
+            assert!(RunConfig::from_raw(&c).is_err(), "{bad}");
+        }
+        let c = RawConfig::parse("reuse-delta = slow").unwrap();
+        let e = format!("{:#}", RunConfig::from_raw(&c).unwrap_err());
+        assert!(e.contains("reuse-delta") && e.contains("slow"), "{e}");
     }
 
     #[test]
