@@ -16,10 +16,14 @@
 //! default (mirroring the `--reactor` flag); `TQDIT_NET_REACTOR=0`
 //! opts back into thread-per-connection — CI runs both. They also run
 //! a connection-capacity smoke (≥1k idle loopback connections on one
-//! reactor node, thread count O(workers)) and write the serve
-//! scorecard to `BENCH_serve.json`, one section per transport mode
-//! (img/s, p95 latency, padding, connect cold-start ms, max concurrent
-//! connections) plus `batching` and `calibration` sections. The
+//! reactor node, thread count O(workers)), a live `/metrics` scrape
+//! against a metrics-enabled reactor node (scraped p95 must match the
+//! shutdown `ServerStats` within histogram bucket error), a tracing
+//! on/off overhead comparison, and write the serve scorecard to
+//! `BENCH_serve.json`, one section per transport mode (img/s, p95
+//! latency, padding, connect cold-start ms, max concurrent
+//! connections) plus `batching`, `calibration` and `tracing_overhead`
+//! sections. The
 //! step-reuse section writes `BENCH_sample.json` (img/s with and
 //! without reuse, per-step ms, reuse rate, δ=0 image-hash equality)
 //! and exits nonzero unless δ=0 is byte-identical to the plain loop,
@@ -75,6 +79,8 @@ fn main() -> anyhow::Result<()> {
         cluster_flap_bench()?;
         let max_conns = connection_count_bench()?;
         write_serve_report(&metrics, max_conns)?;
+        metrics_scrape_bench()?;
+        tracing_overhead_bench()?;
     }
     Ok(())
 }
@@ -1136,4 +1142,159 @@ fn connection_count_bench() -> anyhow::Result<usize> {
     client.shutdown();
     node.shutdown();
     Ok(held)
+}
+
+// ---- observability: live /metrics scrape + tracing overhead ------------
+
+/// The live-metrics gate (reactor mode; the threaded transport has no
+/// metrics listener): drive load through a metrics-enabled node,
+/// scrape `GET /metrics` while the service is busy, and hold the
+/// scraped p95 gauge to the shutdown `ServerStats` within the
+/// histogram's bucket error.
+fn metrics_scrape_bench() -> anyhow::Result<()> {
+    use std::io::{Read as _, Write as _};
+    use tq_dit::obs::{hist, metrics};
+    if !reactor_mode() {
+        println!(
+            "\nlive /metrics scrape: skipped (threaded transport has \
+             no metrics listener)"
+        );
+        return Ok(());
+    }
+    println!("\nlive /metrics scrape (reactor node, shaped load):");
+    let body: Arc<WorkerBody> =
+        Arc::new(move |h: WorkerHandle| -> anyhow::Result<()> {
+            let mut b = ShapedBackend {
+                rungs: vec![1, 2, 4],
+                il: 4,
+                cost_per_slot: Duration::from_millis(5),
+            };
+            h.serve(&mut b)
+        });
+    let router = Router::start(
+        RouterOpts { workers: 1, ..RouterOpts::default() },
+        body,
+    );
+    let node_opts = NodeOpts {
+        metrics_addr: Some("127.0.0.1:0".parse().unwrap()),
+        ..net_node_opts()
+    };
+    let node =
+        NodeServer::start(Box::new(router), "127.0.0.1:0", node_opts)?;
+    let addr = node.addr().to_string();
+    let maddr = node
+        .metrics_addr()
+        .ok_or_else(|| anyhow::anyhow!("metrics listener not bound"))?;
+    let scrape = || -> anyhow::Result<String> {
+        let mut h = std::net::TcpStream::connect(maddr)?;
+        h.set_read_timeout(Some(Duration::from_secs(10)))?;
+        h.write_all(b"GET /metrics HTTP/1.1\r\nHost: bench\r\n\r\n")?;
+        let mut text = String::new();
+        h.read_to_string(&mut text)?;
+        anyhow::ensure!(
+            text.starts_with("HTTP/1.1 200 OK\r\n"),
+            "scrape failed: {}",
+            text.lines().next().unwrap_or("")
+        );
+        Ok(text.split("\r\n\r\n").nth(1).unwrap_or("").to_string())
+    };
+
+    let client = NetClient::connect(&addr, NetClientOpts::default())?;
+    let mut rxs = Vec::new();
+    for i in 0..24usize {
+        rxs.push(client.submit(GenRequest {
+            class: (i % 8) as i32,
+            n: 1 + i % 4,
+        })?);
+    }
+    // mid-load: the endpoint must answer while the data plane works
+    let mid = metrics::parse_exposition(&scrape()?);
+    anyhow::ensure!(
+        mid.contains_key("tqdit_requests_total"),
+        "mid-load scrape missing tqdit_requests_total"
+    );
+    for (_, rx) in rxs {
+        rx.recv_timeout(Duration::from_secs(30))
+            .map_err(|_| anyhow::anyhow!("request hung mid-scrape"))??;
+    }
+    // drained: the scraped histogram is the same one shutdown reports
+    let series = metrics::parse_exposition(&scrape()?);
+    let p95_key = "tqdit_request_latency_quantile_seconds{q=\"0.95\"}";
+    let p95_live = *series
+        .get(p95_key)
+        .ok_or_else(|| anyhow::anyhow!("scrape missing {p95_key}"))?;
+    let count_live = *series
+        .get("tqdit_request_latency_seconds_count")
+        .unwrap_or(&0.0);
+    client.shutdown();
+    let stats = node.shutdown();
+    println!(
+        "  live: {count_live:.0} request(s) in histogram, p95 \
+         {p95_live:.4}s; shutdown p95 {:.4}s",
+        stats.latency_p95_s
+    );
+    anyhow::ensure!(
+        count_live == stats.latency.count() as f64,
+        "live histogram count {count_live} != shutdown count {}",
+        stats.latency.count()
+    );
+    let tol = hist::QUANTILE_REL_ERROR * stats.latency_p95_s.max(1e-9)
+        + 1e-9;
+    anyhow::ensure!(
+        (p95_live - stats.latency_p95_s).abs() <= tol,
+        "live p95 {p95_live} drifted from shutdown p95 {} beyond \
+         bucket error {tol}",
+        stats.latency_p95_s
+    );
+    println!("  -> live scrape matches shutdown stats within bucket \
+              error");
+    Ok(())
+}
+
+/// Tracing cost at the router layer: the identical burst workload with
+/// the span ring disabled and enabled. Off is the shipping default, so
+/// it anchors the throughput numbers; on must stay within a generous
+/// bound (1 ms/slot compute dominates the span writes). Writes the
+/// `tracing_overhead` section of `BENCH_serve.json`.
+fn tracing_overhead_bench() -> anyhow::Result<()> {
+    use tq_dit::obs::trace;
+    println!("\ntracing overhead (router burst, 1 ms/slot):");
+    trace::enable(trace::DEFAULT_CAPACITY);
+    trace::set_enabled(false);
+    let run = || -> anyhow::Result<f64> {
+        let t0 = std::time::Instant::now();
+        let stats = drive_scenario(
+            vec![1, 2, 4, 8, 16],
+            Duration::from_millis(2),
+            "burst",
+        )?;
+        Ok(stats.images as f64 / t0.elapsed().as_secs_f64().max(1e-9))
+    };
+    // best-of-two per mode smooths CI scheduling noise
+    let off = run()?.max(run()?);
+    trace::set_enabled(true);
+    let on = run()?.max(run()?);
+    trace::set_enabled(false);
+    let spans = trace::snapshot().len();
+    let overhead_pct = 100.0 * (off / on.max(1e-9) - 1.0);
+    println!(
+        "  tracing off: {off:.1} img/s   on: {on:.1} img/s   overhead \
+         {overhead_pct:+.1}%   ({spans} span(s) recorded)"
+    );
+    anyhow::ensure!(spans > 0, "tracing on recorded no spans");
+    anyhow::ensure!(
+        on * 2.0 > off,
+        "tracing on halved throughput: {on:.1} vs {off:.1} img/s"
+    );
+    common::write_bench_section(
+        "BENCH_serve.json",
+        "tracing_overhead",
+        vec![
+            ("img_per_s_tracing_off", Json::Num(off)),
+            ("img_per_s_tracing_on", Json::Num(on)),
+            ("overhead_pct", Json::Num(overhead_pct)),
+            ("spans_recorded", Json::Num(spans as f64)),
+        ],
+    )?;
+    Ok(())
 }

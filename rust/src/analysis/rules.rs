@@ -405,15 +405,18 @@ pub fn rule_locks(path: &str, toks: &[Tok], fns: &[FnBody], findings: &mut Vec<F
 }
 
 /// Rule 3 — `no-panic-paths`: `.unwrap()`, `.expect()` and panic
-/// macros are banned in production `serve/`, `runtime/` and `sampler/`
-/// code (the sampler runs on serve worker threads, so a panic there
-/// strands a whole batch); on `serve/net` decode paths, so is direct
+/// macros are banned in production `serve/`, `runtime/`, `sampler/`
+/// and `obs/` code (the sampler runs on serve worker threads, so a
+/// panic there strands a whole batch; obs rides every hot path — a
+/// panic in a histogram bucket must not take a request down with it);
+/// on `serve/net` decode paths, so is direct
 /// slice indexing of peer bytes (use `.get(..)` and a typed error —
 /// peers control those lengths).
 pub fn rule_no_panic(path: &str, toks: &[Tok], fns: &[FnBody], findings: &mut Vec<Finding>) {
     let inscope = (path.contains("serve/")
         || path.contains("runtime/")
-        || path.contains("sampler/"))
+        || path.contains("sampler/")
+        || path.contains("obs/"))
         && !path.contains("testutil");
     if !inscope {
         return;

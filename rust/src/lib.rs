@@ -28,6 +28,10 @@
 //!   typed error propagation, extended across hosts by `serve::net`
 //!   (wire/proto/node/cluster with health checks and re-queue on
 //!   node loss).
+//! * [`obs`] — serve-stack observability: request-scoped tracing
+//!   (span ring + Chrome trace export), mergeable log-linear latency
+//!   histograms, and the Prometheus-style `/metrics` exposition the
+//!   reactor serves at `--metrics-addr`.
 //! * [`metrics`] — FID / sFID / Inception Score, image writers.
 //! * [`data`] — synthetic dataset (mirror of `python/compile/data.py`).
 //! * [`analysis`] — static analysis over this repo's own sources
@@ -40,6 +44,7 @@ pub mod coordinator;
 pub mod data;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod sampler;

@@ -25,6 +25,9 @@
 //!   --shards A,B --heartbeat-ms N --node-timeout-ms N
 //!   --control-plane BOOL --readmit-pongs K --reconnect-ms N (cluster)
 //!   --reactor BOOL --max-conns N (serve/node transport)
+//!   --trace BOOL --trace-json PATH (request-scoped tracing)
+//!   --metrics-addr HOST:PORT (node: Prometheus endpoint)
+//!   --log-level LVL (stderr threshold: debug|info|warn|error)
 //!   --config FILE (TOML-subset, overridden by CLI flags)
 
 use std::time::Duration;
@@ -52,10 +55,16 @@ fn main() -> Result<()> {
         "help".to_string()
     };
     let args = Args::parse(argv);
+    let cfg = RunConfig::from_args(&args)?;
+    // validate() vetted the level string; --verbose is a shorthand
+    // that outranks it
+    let _ = logging::set_level_str(&cfg.log_level);
     if args.flag("verbose") {
         logging::set_level(logging::Level::Debug);
     }
-    let cfg = RunConfig::from_args(&args)?;
+    if cfg.trace {
+        tq_dit::obs::trace::enable(tq_dit::obs::trace::DEFAULT_CAPACITY);
+    }
 
     match cmd.as_str() {
         "table" => cmd_table(cfg, &args),
@@ -142,6 +151,17 @@ FLAGS (all subcommands)
   --stats-json PATH     serve/node: dump final ServerStats (local or
                         cluster-aggregated) as canonical JSON on
                         shutdown (node: needs a bounded --run-secs)
+  --trace BOOL          request-scoped tracing: spans for queue/linger/
+                        rung-pick/generate/encode (and, on a cluster
+                        frontend, the per-shard dispatch hop — nodes
+                        ship spans home on the response)      [false]
+  --trace-json PATH     write collected spans as Chrome trace JSON on
+                        shutdown (chrome://tracing / Perfetto);
+                        implies --trace true
+  --metrics-addr A:P    node (reactor mode): serve Prometheus text
+                        exposition at GET /metrics on this address
+  --log-level LVL       stderr log threshold, debug|info|warn|error
+                        (--verbose is shorthand for debug)     [info]
   --seed S --verbose --config FILE
 ";
 
@@ -293,10 +313,23 @@ fn write_stats_json(path: Option<&str>, stats: &ServerStats)
     Ok(())
 }
 
+/// `--trace-json PATH`: export the span ring as Chrome trace JSON
+/// (load in `chrome://tracing` or Perfetto) after shutdown, once every
+/// in-flight request has landed its spans.
+fn write_trace_json(path: Option<&str>) -> Result<()> {
+    let Some(path) = path else { return Ok(()) };
+    let n = tq_dit::obs::trace::write_chrome_json(
+        std::path::Path::new(path))
+        .with_context(|| format!("writing trace json {path}"))?;
+    println!("wrote {n} span(s) to {path}");
+    Ok(())
+}
+
 fn cmd_serve(cfg: RunConfig, args: &Args) -> Result<()> {
     let n_req = args.usize("requests", 6)?;
     let workers = args.usize("workers", 1)?;
     let stats_json = args.get("stats-json").map(str::to_string);
+    let trace_json = cfg.trace_json.clone();
     let method = Method::parse(args.str_or("method", "tq-dit"))
         .ok_or_else(|| anyhow::anyhow!("unknown --method"))?;
     // one driver for both topologies: the in-process server and the
@@ -325,6 +358,7 @@ fn cmd_serve(cfg: RunConfig, args: &Args) -> Result<()> {
     let stats = server.shutdown();
     stats.print();
     write_stats_json(stats_json.as_deref(), &stats)?;
+    write_trace_json(trace_json.as_deref())?;
     Ok(())
 }
 
@@ -333,11 +367,32 @@ fn cmd_node(cfg: RunConfig, args: &Args) -> Result<()> {
     let workers = args.usize("workers", 1)?;
     let run_secs = args.u64("run-secs", 0)?;
     let stats_json = args.get("stats-json").map(str::to_string);
+    let trace_json = cfg.trace_json.clone();
     let method = Method::parse(args.str_or("method", "tq-dit"))
         .ok_or_else(|| anyhow::anyhow!("unknown --method"))?;
+    let metrics_addr = match cfg.metrics_addr.as_deref() {
+        None => None,
+        Some(a) => {
+            use std::net::ToSocketAddrs;
+            Some(
+                a.to_socket_addrs()
+                    .with_context(|| {
+                        format!("resolving --metrics-addr {a}")
+                    })?
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!(
+                        "--metrics-addr {a}: no resolvable address"))?,
+            )
+        }
+    };
+    if metrics_addr.is_some() && !cfg.reactor {
+        eprintln!("warning: --metrics-addr needs the reactor transport \
+                   (--reactor true); no metrics endpoint will be bound");
+    }
     let node_opts = NodeOpts {
         reactor: cfg.reactor,
         max_conns: cfg.max_conns,
+        metrics_addr,
         ..NodeOpts::default()
     };
     let server = GenServer::with_workers(cfg, method, workers);
@@ -346,6 +401,9 @@ fn cmd_node(cfg: RunConfig, args: &Args) -> Result<()> {
               transport)",
              node.addr(), workers, method.name(),
              if node_opts.reactor { "reactor" } else { "threaded" });
+    if let Some(m) = node.metrics_addr() {
+        println!("metrics exposition on http://{m}/metrics");
+    }
     if run_secs == 0 {
         if stats_json.is_some() {
             // no signal handling offline: an unbounded run ends by

@@ -1,0 +1,471 @@
+//! Mergeable log-linear latency histogram.
+//!
+//! Replaces the bounded `push_latency` sample ring: a fixed array of
+//! geometrically spaced buckets over `[1µs, ~18h]` whose merge is
+//! plain element-wise addition — exactly commutative and associative —
+//! so per-worker, per-shard, and per-epoch histograms fold into one
+//! without the max-of-p95 distortion the old `ServerStats::absorb`
+//! had. Quantiles come from a cumulative rank walk and are accurate
+//! to one bucket (relative error ≤ `GROWTH − 1` ≈ 5%), clamped to the
+//! observed min/max so tiny samples stay exact at the extremes.
+//!
+//! The struct is pure data (no atomics, no locks): writers own their
+//! histogram and hand copies/deltas across threads the same way the
+//! rest of `ServerStats` moves. Counters-style wire deltas subtract
+//! per bucket ([`LatencyHist::delta_since`]) and re-accumulate with
+//! [`LatencyHist::merge`] on the folding side.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Lower edge of bucket 0, in seconds (1µs).
+const MIN_S: f64 = 1e-6;
+/// Geometric bucket growth factor.
+const GROWTH: f64 = 1.05;
+/// Bucket count: covers up to `MIN_S * GROWTH^512` ≈ 6.9e4 s.
+const NUM_BUCKETS: usize = 512;
+
+/// Worst-case relative quantile error: a value is reported as its
+/// bucket's geometric midpoint, off by at most `sqrt(GROWTH) − 1`
+/// from either edge; `GROWTH − 1` gives comfortable slack.
+pub const QUANTILE_REL_ERROR: f64 = GROWTH - 1.0;
+
+/// Fixed-capacity log-linear histogram of latencies in seconds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LatencyHist {
+    buckets: Vec<u64>,
+    count: u64,
+    sum_s: f64,
+    min_s: f64,
+    max_s: f64,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        LatencyHist {
+            buckets: vec![0; NUM_BUCKETS],
+            count: 0,
+            sum_s: 0.0,
+            min_s: f64::INFINITY,
+            max_s: 0.0,
+        }
+    }
+}
+
+fn bucket_index(v: f64) -> usize {
+    if !(v > MIN_S) {
+        return 0;
+    }
+    let idx = (v / MIN_S).ln() / GROWTH.ln();
+    if idx >= (NUM_BUCKETS - 1) as f64 {
+        NUM_BUCKETS - 1
+    } else {
+        idx as usize
+    }
+}
+
+/// Geometric midpoint of bucket `i` — the value a quantile landing in
+/// that bucket reports.
+fn bucket_mid(i: usize) -> f64 {
+    MIN_S * GROWTH.powf(i as f64 + 0.5)
+}
+
+/// Exclusive upper edge of bucket `i` (Prometheus `le` label).
+pub fn bucket_upper(i: usize) -> f64 {
+    MIN_S * GROWTH.powf(i as f64 + 1.0)
+}
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one observation (seconds). Non-finite or negative
+    /// values are dropped rather than poisoning the sums.
+    pub fn record(&mut self, v: f64) {
+        if !v.is_finite() || v < 0.0 {
+            return;
+        }
+        self.buckets[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum_s += v;
+        if v < self.min_s {
+            self.min_s = v;
+        }
+        if v > self.max_s {
+            self.max_s = v;
+        }
+    }
+
+    /// Fold `other` into `self` — element-wise bucket addition, so
+    /// merge order can never change the result.
+    pub fn merge(&mut self, other: &LatencyHist) {
+        for (b, o) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b = b.saturating_add(*o);
+        }
+        self.count = self.count.saturating_add(other.count);
+        self.sum_s += other.sum_s;
+        if other.min_s < self.min_s {
+            self.min_s = other.min_s;
+        }
+        if other.max_s > self.max_s {
+            self.max_s = other.max_s;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum_s(&self) -> f64 {
+        self.sum_s
+    }
+
+    pub fn min_s(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min_s
+        }
+    }
+
+    pub fn max_s(&self) -> f64 {
+        self.max_s
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_s / self.count as f64
+        }
+    }
+
+    /// Quantile estimate for `q ∈ [0, 1]`: walk the cumulative counts
+    /// to the bucket holding rank `ceil(q·count)` and report its
+    /// geometric midpoint, clamped to the observed `[min, max]`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = ((q * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen = seen.saturating_add(c);
+            if seen >= rank {
+                return bucket_mid(i).clamp(self.min_s, self.max_s);
+            }
+        }
+        self.max_s
+    }
+
+    /// Non-empty buckets as `(index, count)` pairs — the sparse form
+    /// used on the wire and in the Prometheus exposition.
+    pub fn nonzero_buckets(
+        &self,
+    ) -> impl Iterator<Item = (usize, u64)> + '_ {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (i, c))
+    }
+
+    /// Counter-style delta: per-bucket `cur − prev` (saturating, so a
+    /// restarted node that reset its counts yields its full current
+    /// histogram rather than garbage), with min/max carried as the
+    /// current absolutes — a later [`merge`](Self::merge) folds them
+    /// with `min`/`max`, which is correct for gauges.
+    pub fn delta_since(&self, prev: &LatencyHist) -> LatencyHist {
+        let mut out = LatencyHist::new();
+        let mut count = 0u64;
+        for (i, (&cur, &old)) in
+            self.buckets.iter().zip(prev.buckets.iter()).enumerate()
+        {
+            let d = cur.saturating_sub(old);
+            out.buckets[i] = d;
+            count = count.saturating_add(d);
+        }
+        out.count = count;
+        out.sum_s = (self.sum_s - prev.sum_s).max(0.0);
+        out.min_s = if self.count == 0 {
+            f64::INFINITY
+        } else {
+            self.min_s
+        };
+        out.max_s = self.max_s;
+        out
+    }
+
+    // -- wire form --------------------------------------------------------
+
+    /// Sparse JSON form: `{"n":…,"sum":…,"min":…,"max":…,"b":[[i,c],…]}`.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("n".to_string(), Json::Num(self.count as f64));
+        m.insert("sum".to_string(), Json::Num(self.sum_s));
+        m.insert("min".to_string(), Json::Num(self.min_s()));
+        m.insert("max".to_string(), Json::Num(self.max_s));
+        let pairs = self
+            .nonzero_buckets()
+            .map(|(i, c)| {
+                Json::Arr(vec![
+                    Json::Num(i as f64),
+                    Json::Num(c as f64),
+                ])
+            })
+            .collect();
+        m.insert("b".to_string(), Json::Arr(pairs));
+        Json::Obj(m)
+    }
+
+    /// Parse the sparse form; malformed or missing fields degrade to
+    /// an empty histogram (old peers simply don't send one).
+    pub fn from_json(v: &Json) -> LatencyHist {
+        let mut out = LatencyHist::new();
+        let n = v.get("n").and_then(Json::as_f64).unwrap_or(0.0);
+        if n <= 0.0 {
+            return out;
+        }
+        out.count = n as u64;
+        out.sum_s =
+            v.get("sum").and_then(Json::as_f64).unwrap_or(0.0).max(0.0);
+        // a non-empty histogram's min stays a plain number (0.0 is a
+        // legal observation) — restoring the empty-state INFINITY here
+        // would put min above max and panic the quantile clamp
+        out.min_s =
+            v.get("min").and_then(Json::as_f64).unwrap_or(0.0).max(0.0);
+        out.max_s = v
+            .get("max")
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0)
+            .max(out.min_s);
+        if let Some(pairs) = v.get("b").and_then(Json::as_arr) {
+            for pair in pairs {
+                let items = match pair.as_arr() {
+                    Some(items) if items.len() == 2 => items,
+                    _ => continue,
+                };
+                let i = items[0].as_f64().unwrap_or(-1.0);
+                let c = items[1].as_f64().unwrap_or(0.0);
+                if i >= 0.0 && (i as usize) < NUM_BUCKETS && c > 0.0 {
+                    out.buckets[i as usize] = c as u64;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+
+    fn hist_of(vals: &[f64]) -> LatencyHist {
+        let mut h = LatencyHist::new();
+        for &v in vals {
+            h.record(v);
+        }
+        h
+    }
+
+    #[test]
+    fn empty_is_zeroes() {
+        let h = LatencyHist::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.min_s(), 0.0);
+        assert_eq!(h.max_s(), 0.0);
+        assert_eq!(h.mean_s(), 0.0);
+    }
+
+    #[test]
+    fn single_value_is_exact_at_every_quantile() {
+        let h = hist_of(&[0.125]);
+        for q in [0.0, 0.5, 0.95, 1.0] {
+            assert_eq!(h.quantile(q), 0.125);
+        }
+        assert_eq!(h.count(), 1);
+    }
+
+    #[test]
+    fn rejects_garbage_observations() {
+        let h = hist_of(&[f64::NAN, f64::INFINITY, -1.0]);
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn quantile_error_bounded_vs_exact_sort() {
+        check("hist_quantile_error", 50, |g| {
+            let n = g.usize_in(1, 400);
+            let mut vals = Vec::with_capacity(n);
+            for _ in 0..n {
+                // spread over ~5 decades
+                let exp = g.f32_in(-4.0, 1.0) as f64;
+                vals.push(10f64.powf(exp));
+            }
+            let h = hist_of(&vals);
+            let mut sorted = vals.clone();
+            sorted.sort_by(|a, b| a.total_cmp(b));
+            for q in [0.5, 0.9, 0.95, 0.99] {
+                let rank =
+                    (((q * n as f64).ceil() as usize).max(1)) - 1;
+                let exact = sorted[rank];
+                let est = h.quantile(q);
+                let rel = (est - exact).abs() / exact;
+                if rel > QUANTILE_REL_ERROR {
+                    return Err(format!(
+                        "q{q}: est {est} vs exact {exact} (rel {rel})"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn merge_commutative_and_associative() {
+        check("hist_merge_algebra", 60, |g| {
+            let mut parts = Vec::new();
+            for _ in 0..3 {
+                let n = g.usize_in(0, 60);
+                let mut vals = Vec::with_capacity(n);
+                for _ in 0..n {
+                    vals.push(g.f32_in(1e-5, 30.0) as f64);
+                }
+                parts.push(hist_of(&vals));
+            }
+            let (a, b, c) = (&parts[0], &parts[1], &parts[2]);
+            // a ⊕ b == b ⊕ a
+            let mut ab = a.clone();
+            ab.merge(b);
+            let mut ba = b.clone();
+            ba.merge(a);
+            if ab != ba {
+                return Err("merge is not commutative".into());
+            }
+            // (a ⊕ b) ⊕ c == a ⊕ (b ⊕ c), up to float sum order
+            let mut abc = ab.clone();
+            abc.merge(c);
+            let mut bc = b.clone();
+            bc.merge(c);
+            let mut a_bc = a.clone();
+            a_bc.merge(&bc);
+            if abc.count() != a_bc.count()
+                || abc.buckets != a_bc.buckets
+                || (abc.sum_s - a_bc.sum_s).abs()
+                    > 1e-9 * abc.sum_s.max(1.0)
+            {
+                return Err("merge is not associative".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn merged_quantile_beats_max_of_parts() {
+        // The bug this replaces: absorb took max(p95_a, p95_b). With
+        // one fast and one slow shard, the true merged p50 must sit
+        // between the two parts, not at either extreme.
+        let fast = hist_of(&vec![0.010; 95]);
+        let slow = hist_of(&vec![1.0; 5]);
+        let mut merged = fast.clone();
+        merged.merge(&slow);
+        let p50 = merged.quantile(0.5);
+        assert!(
+            (p50 - 0.010).abs() / 0.010 <= QUANTILE_REL_ERROR,
+            "p50 {p50} should track the fast majority"
+        );
+        let p99 = merged.quantile(0.99);
+        assert!(
+            (p99 - 1.0).abs() / 1.0 <= QUANTILE_REL_ERROR,
+            "p99 {p99} should see the slow tail"
+        );
+    }
+
+    #[test]
+    fn delta_then_merge_conserves() {
+        check("hist_delta_conserves", 40, |g| {
+            // Simulate the node-push cycle: cumulative histogram on
+            // the node, periodic deltas folded on the frontend.
+            let mut node = LatencyHist::new();
+            let mut prev = LatencyHist::new();
+            let mut folded = LatencyHist::new();
+            for _ in 0..g.usize_in(1, 5) {
+                for _ in 0..g.usize_in(0, 40) {
+                    node.record(g.f32_in(1e-4, 5.0) as f64);
+                }
+                let d = node.delta_since(&prev);
+                prev = node.clone();
+                folded.merge(&d);
+            }
+            if folded.count() != node.count()
+                || folded.buckets != node.buckets
+            {
+                return Err(format!(
+                    "fold lost counts: {} vs {}",
+                    folded.count(),
+                    node.count()
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn delta_after_restart_yields_current_counts() {
+        // A restarted node's cumulative counters reset below `prev`;
+        // saturating subtraction must hand back its fresh histogram
+        // instead of wrapping.
+        let before = hist_of(&[0.2, 0.4, 0.6]);
+        let after_restart = hist_of(&[0.1]);
+        let d = after_restart.delta_since(&before);
+        assert_eq!(d.count(), 1);
+        assert!((d.quantile(0.5) - 0.1).abs() / 0.1 <= QUANTILE_REL_ERROR);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        check("hist_json_roundtrip", 30, |g| {
+            let n = g.usize_in(0, 80);
+            let mut h = LatencyHist::new();
+            for _ in 0..n {
+                h.record(g.f32_in(1e-5, 60.0) as f64);
+            }
+            let text = h.to_json().dump();
+            let parsed = match Json::parse(&text) {
+                Ok(v) => v,
+                Err(e) => return Err(format!("reparse failed: {e}")),
+            };
+            let back = LatencyHist::from_json(&parsed);
+            if back.buckets != h.buckets || back.count() != h.count() {
+                return Err("bucket roundtrip mismatch".into());
+            }
+            if (back.sum_s() - h.sum_s()).abs() > 1e-9 {
+                return Err("sum roundtrip mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn from_json_tolerates_garbage() {
+        for text in
+            ["{}", "null", "[1,2]", "{\"n\":3,\"b\":[[9999,1],[-1,2],\"x\"]}"]
+        {
+            let v = Json::parse(text).unwrap();
+            let h = LatencyHist::from_json(&v);
+            assert!(h.quantile(0.95).is_finite());
+        }
+    }
+
+    #[test]
+    fn bucket_edges_are_monotone() {
+        for i in 1..NUM_BUCKETS {
+            assert!(bucket_upper(i) > bucket_upper(i - 1));
+        }
+        assert!(bucket_upper(NUM_BUCKETS - 1) > 6e4);
+    }
+}

@@ -1,0 +1,397 @@
+//! Prometheus-style text exposition + the minimal HTTP plumbing the
+//! reactor needs to serve it.
+//!
+//! [`render_prometheus`] turns a live [`ServerStats`] snapshot (plus
+//! per-shard health, for a cluster frontend) into `text/plain;
+//! version=0.0.4` exposition: throughput, per-rung fill, reuse
+//! counters, queue depth, shard health states, and the latency
+//! histogram as cumulative `_bucket{le=…}` series with explicit
+//! quantile gauges alongside. Rendering is pure string building over
+//! an already-assembled snapshot — the reactor callback that serves
+//! `/metrics` takes the state lock only long enough to clone the
+//! stats, never across a write.
+//!
+//! The HTTP half is deliberately tiny: `/metrics` consumers send one
+//! `GET` and read to EOF, so [`http_request_complete`] /
+//! [`http_request_path`] / [`http_response`] (plus `Connection:
+//! close`) are the whole protocol. No keep-alive, no chunking.
+
+use crate::obs::hist::{bucket_upper, LatencyHist};
+use crate::serve::router::ServerStats;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Render one scrape. `shard_health` is `(addr, state)` per shard —
+/// empty for a single-node service.
+pub fn render_prometheus(
+    stats: &ServerStats,
+    shard_health: &[(String, String)],
+) -> String {
+    let mut out = String::with_capacity(4096);
+    let mut counter = |name: &str, help: &str, v: u64| {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} counter");
+        let _ = writeln!(out, "{name} {v}");
+    };
+    counter(
+        "tqdit_requests_total",
+        "Requests accepted by this service.",
+        stats.requests,
+    );
+    counter(
+        "tqdit_images_total",
+        "Real (non-padding) images delivered.",
+        stats.images,
+    );
+    counter(
+        "tqdit_batches_total",
+        "Batches dispatched to workers.",
+        stats.batches,
+    );
+    counter(
+        "tqdit_padded_slots_total",
+        "Padding slots burned to fill dispatched rungs.",
+        stats.padded_slots,
+    );
+    counter(
+        "tqdit_failed_requests_total",
+        "Requests that received a typed error instead of images.",
+        stats.failed_requests,
+    );
+    counter(
+        "tqdit_reuse_hits_total",
+        "Sampler steps served from the step-reuse cache.",
+        stats.reuse_hits,
+    );
+    counter(
+        "tqdit_steps_skipped_total",
+        "Forward passes the reuse policy skipped.",
+        stats.steps_skipped,
+    );
+    counter(
+        "tqdit_uploads_saved_total",
+        "Host-to-device uploads avoided by the resident trajectory.",
+        stats.uploads_saved,
+    );
+    counter(
+        "tqdit_requeued_total",
+        "Requests re-queued onto a surviving shard after node loss.",
+        stats.requeued,
+    );
+    counter(
+        "tqdit_nodes_lost_total",
+        "Shard nodes declared dead.",
+        stats.nodes_lost,
+    );
+    counter(
+        "tqdit_nodes_readmitted_total",
+        "Recovered shard nodes re-admitted into placement.",
+        stats.nodes_readmitted,
+    );
+
+    let mut gauge = |name: &str, help: &str, v: f64| {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} gauge");
+        let _ = writeln!(out, "{name} {v}");
+    };
+    gauge(
+        "tqdit_queue_depth",
+        "Image slots queued but not yet computing.",
+        stats.pending as f64,
+    );
+    gauge(
+        "tqdit_throughput_img_per_s",
+        "Lifetime images per second of wall clock.",
+        stats.throughput(),
+    );
+    gauge(
+        "tqdit_batch_fill",
+        "Mean per-dispatch fill, normalized per rung.",
+        stats.batch_fill,
+    );
+
+    let _ = writeln!(
+        out,
+        "# HELP tqdit_rung_fill Mean fill of each ladder rung's \
+         dispatches."
+    );
+    let _ = writeln!(out, "# TYPE tqdit_rung_fill gauge");
+    for r in &stats.rungs {
+        let _ = writeln!(
+            out,
+            "tqdit_rung_fill{{rung=\"{}\"}} {}",
+            r.rung,
+            r.fill()
+        );
+    }
+    let _ = writeln!(
+        out,
+        "# HELP tqdit_rung_batches_total Batches dispatched per \
+         ladder rung."
+    );
+    let _ = writeln!(out, "# TYPE tqdit_rung_batches_total counter");
+    for r in &stats.rungs {
+        let _ = writeln!(
+            out,
+            "tqdit_rung_batches_total{{rung=\"{}\"}} {}",
+            r.rung, r.batches
+        );
+    }
+
+    let _ = writeln!(
+        out,
+        "# HELP tqdit_shard_state Shard health (1 = in the labelled \
+         state)."
+    );
+    let _ = writeln!(out, "# TYPE tqdit_shard_state gauge");
+    for (addr, state) in shard_health {
+        let _ = writeln!(
+            out,
+            "tqdit_shard_state{{shard=\"{addr}\",state=\"{state}\"}} 1"
+        );
+    }
+
+    render_latency(&mut out, &stats.latency);
+    out
+}
+
+fn render_latency(out: &mut String, hist: &LatencyHist) {
+    let name = "tqdit_request_latency_seconds";
+    let _ = writeln!(
+        out,
+        "# HELP {name} Per-request latency (queue + compute)."
+    );
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    let mut cum = 0u64;
+    for (i, c) in hist.nonzero_buckets() {
+        cum += c;
+        let _ = writeln!(
+            out,
+            "{name}_bucket{{le=\"{}\"}} {cum}",
+            bucket_upper(i)
+        );
+    }
+    let _ =
+        writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", hist.count());
+    let _ = writeln!(out, "{name}_sum {}", hist.sum_s());
+    let _ = writeln!(out, "{name}_count {}", hist.count());
+    let qname = "tqdit_request_latency_quantile_seconds";
+    let _ = writeln!(
+        out,
+        "# HELP {qname} Latency quantiles from the live histogram."
+    );
+    let _ = writeln!(out, "# TYPE {qname} gauge");
+    for q in [0.5, 0.95, 0.99] {
+        let _ = writeln!(
+            out,
+            "{qname}{{q=\"{q}\"}} {}",
+            hist.quantile(q)
+        );
+    }
+}
+
+/// Parse an exposition body into `name{labels} → value` (comments
+/// skipped, malformed lines dropped). The smoke tests use this to
+/// assert required series exist *and* parse.
+pub fn parse_exposition(text: &str) -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let Some((key, val)) = line.rsplit_once(' ') else {
+            continue;
+        };
+        if let Ok(v) = val.parse::<f64>() {
+            out.insert(key.to_string(), v);
+        }
+    }
+    out
+}
+
+// -- HTTP glue -------------------------------------------------------------
+
+/// Has a full request head arrived? (`/metrics` requests have no
+/// body, so the blank line ends them.)
+pub fn http_request_complete(buf: &[u8]) -> bool {
+    buf.windows(4).any(|w| w == b"\r\n\r\n")
+}
+
+/// Path of a `GET` request line (`None` for anything else — the
+/// caller answers 405/400 and closes).
+pub fn http_request_path(buf: &[u8]) -> Option<String> {
+    let text = std::str::from_utf8(buf).ok()?;
+    let line = text.lines().next()?;
+    let mut parts = line.split_whitespace();
+    if parts.next()? != "GET" {
+        return None;
+    }
+    let path = parts.next()?;
+    parts.next()?; // HTTP version must be present
+    Some(path.to_string())
+}
+
+/// Build a complete `Connection: close` HTTP/1.1 response.
+pub fn http_response(
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    body: &[u8],
+) -> Vec<u8> {
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\n\
+         Content-Type: {content_type}\r\n\
+         Content-Length: {}\r\n\
+         Connection: close\r\n\r\n",
+        body.len()
+    );
+    let mut out = head.into_bytes();
+    out.extend_from_slice(body);
+    out
+}
+
+/// The exposition content type scrapers expect.
+pub const EXPOSITION_CONTENT_TYPE: &str =
+    "text/plain; version=0.0.4; charset=utf-8";
+
+/// Answer one parsed request against a rendered exposition body.
+pub fn respond(path: Option<&str>, exposition: &str) -> Vec<u8> {
+    match path {
+        Some("/metrics") | Some("/") => http_response(
+            200,
+            "OK",
+            EXPOSITION_CONTENT_TYPE,
+            exposition.as_bytes(),
+        ),
+        Some(_) => {
+            http_response(404, "Not Found", "text/plain", b"not found\n")
+        }
+        None => http_response(
+            400,
+            "Bad Request",
+            "text/plain",
+            b"only GET is served here\n",
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_stats() -> ServerStats {
+        let mut s = ServerStats {
+            requests: 10,
+            images: 40,
+            batches: 6,
+            batch_fill: 0.8,
+            padded_slots: 8,
+            pending: 3,
+            wall_s: 2.0,
+            reuse_hits: 17,
+            ..ServerStats::default()
+        };
+        s.rungs.push(crate::serve::router::RungStats {
+            rung: 8,
+            batches: 6,
+            images: 40,
+            padded_slots: 8,
+            busy_s: 1.0,
+        });
+        for v in [0.01, 0.02, 0.02, 0.5] {
+            s.latency.record(v);
+        }
+        s
+    }
+
+    #[test]
+    fn exposition_has_required_series() {
+        let health =
+            vec![("127.0.0.1:7001".to_string(), "alive".to_string())];
+        let text = render_prometheus(&sample_stats(), &health);
+        let series = parse_exposition(&text);
+        assert_eq!(series.get("tqdit_images_total"), Some(&40.0));
+        assert_eq!(series.get("tqdit_queue_depth"), Some(&3.0));
+        assert_eq!(series.get("tqdit_reuse_hits_total"), Some(&17.0));
+        assert_eq!(
+            series.get("tqdit_throughput_img_per_s"),
+            Some(&20.0)
+        );
+        assert_eq!(
+            series.get("tqdit_rung_fill{rung=\"8\"}"),
+            Some(&(40.0 / 48.0))
+        );
+        assert_eq!(
+            series.get(
+                "tqdit_shard_state{shard=\"127.0.0.1:7001\",\
+                 state=\"alive\"}"
+            ),
+            Some(&1.0)
+        );
+        assert_eq!(
+            series
+                .get("tqdit_request_latency_seconds_bucket{le=\"+Inf\"}"),
+            Some(&4.0)
+        );
+        assert_eq!(
+            series.get("tqdit_request_latency_seconds_count"),
+            Some(&4.0)
+        );
+        let p95 = series
+            .get("tqdit_request_latency_quantile_seconds{q=\"0.95\"}")
+            .copied()
+            .expect("p95 gauge");
+        assert!((p95 - 0.5).abs() / 0.5 < 0.06, "p95 {p95}");
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_monotone() {
+        let text = render_prometheus(&sample_stats(), &[]);
+        let mut last = 0.0;
+        let mut seen = 0;
+        for (k, v) in parse_exposition(&text) {
+            if k.starts_with("tqdit_request_latency_seconds_bucket") {
+                // BTreeMap order is lexicographic, not numeric le
+                // order — just check every bucket is a sane count.
+                assert!(v >= 0.0 && v <= 4.0, "{k} {v}");
+                last = v.max(last);
+                seen += 1;
+            }
+        }
+        assert!(seen >= 3, "expected several emitted buckets");
+        assert_eq!(last, 4.0, "+Inf bucket must equal count");
+    }
+
+    #[test]
+    fn http_request_parsing() {
+        assert!(!http_request_complete(b"GET /metrics HTTP/1.1\r\n"));
+        let full = b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n";
+        assert!(http_request_complete(full));
+        assert_eq!(
+            http_request_path(full).as_deref(),
+            Some("/metrics")
+        );
+        assert_eq!(http_request_path(b"POST / HTTP/1.1\r\n\r\n"), None);
+        assert_eq!(http_request_path(b"\xff\xfe\r\n\r\n"), None);
+    }
+
+    #[test]
+    fn responses_are_well_formed() {
+        let body = render_prometheus(&sample_stats(), &[]);
+        let resp = respond(Some("/metrics"), &body);
+        let text = String::from_utf8_lossy(&resp);
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Connection: close"));
+        assert!(
+            text.contains(&format!("Content-Length: {}", body.len()))
+        );
+        assert!(text.ends_with(body.as_str()));
+        let nf = respond(Some("/nope"), &body);
+        assert!(String::from_utf8_lossy(&nf)
+            .starts_with("HTTP/1.1 404"));
+        let bad = respond(None, &body);
+        assert!(String::from_utf8_lossy(&bad)
+            .starts_with("HTTP/1.1 400"));
+    }
+}

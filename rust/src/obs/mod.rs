@@ -1,0 +1,54 @@
+//! Observability for the quantized serve stack: request-scoped
+//! tracing, mergeable latency histograms, and a live Prometheus-style
+//! metrics plane. Std-only, like everything else in this crate.
+//!
+//! # Why this layer exists
+//!
+//! The cluster can shard, batch, reuse steps, and survive node death,
+//! but end-of-run counters can't answer *where one request's latency
+//! went* — queue wait vs. batch linger vs. the quantized forward vs.
+//! the reuse-fused host update vs. the wire hop — and cross-shard
+//! percentiles used to be merged by `max` over a bounded sample ring,
+//! which is statistically wrong. Both the drift-calibration carry-over
+//! and quality-tiered serving need per-stage, per-time-group timing to
+//! make decisions; this module is the layer they read from.
+//!
+//! # The three pieces
+//!
+//! * **[`trace`]** — a [`trace::TraceCtx`] (trace id + span id) is
+//!   minted at `submit`, threaded through the batcher's slots, the
+//!   router worker, and (via a thread-local) the sampler's per-group
+//!   step runs, and propagated across the wire behind `WIRE_TRACE`
+//!   negotiation so a clustered request stitches frontend spans
+//!   (queue / linger / dispatch) and node spans (rung pick, Full vs.
+//!   Reuse step runs, encode) into one timeline keyed by one trace
+//!   id. Spans land in a fixed-capacity ring of plain atomics —
+//!   recording is wait-free, and a single relaxed load when tracing
+//!   is off — and export as Chrome trace-event JSON (`--trace-json`,
+//!   viewable in Perfetto).
+//! * **[`hist`]** — [`hist::LatencyHist`], a log-linear histogram
+//!   whose merge is element-wise addition: per-worker, per-shard, and
+//!   per-epoch latency distributions fold exactly (commutative,
+//!   associative), fixing the old max-of-p95 `absorb` bug. Quantiles
+//!   are bucket-accurate ([`hist::QUANTILE_REL_ERROR`]); deltas
+//!   subtract per bucket for the node→frontend stats push.
+//! * **[`metrics`]** — renders a [`ServerStats`
+//!   ](crate::serve::router::ServerStats) snapshot as Prometheus text
+//!   exposition, served by the existing reactor as one more
+//!   connection class (`--metrics-addr`) — a plain HTTP `GET
+//!   /metrics` answered from the event loop, no extra threads.
+//!
+//! # Hot-path discipline
+//!
+//! Nothing here blocks and nothing here locks: the recorder is
+//! atomics end to end (the `no-panic-paths` lint covers `obs/` like
+//! the rest of the serve stack), histogram recording is an array
+//! increment on state the caller already owns, and `/metrics`
+//! rendering happens on the reactor thread from a cloned snapshot.
+
+pub mod hist;
+pub mod metrics;
+pub mod trace;
+
+pub use hist::LatencyHist;
+pub use trace::{SpanKind, SpanRec, TraceCtx};

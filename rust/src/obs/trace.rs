@@ -1,0 +1,690 @@
+//! Request-scoped tracing: trace contexts, a lock-free span ring, and
+//! Chrome trace-event export.
+//!
+//! A [`TraceCtx`] (trace id + parent span id) is minted at `submit`
+//! and rides the request through batcher slots, router workers, the
+//! wire (`WIRE_TRACE`-negotiated fields on `Submit`/`Response`), and
+//! the sampler's per-group step runs. Each stage closes a span with
+//! [`record_span`]; finished spans land in a fixed-capacity ring of
+//! plain atomics — recording is wait-free (one `fetch_add` + relaxed
+//! stores) and collapses to a single load-and-branch when tracing is
+//! off, so the hot path never pays for a disabled recorder. There are
+//! no mutexes here, hence nothing to register in the lint's
+//! `LOCK_RANKS`.
+//!
+//! Ids are 64-bit and seeded per process from wall clock ⊕ pid, so a
+//! frontend can ingest a node's spans verbatim ([`record`]) without
+//! collision in practice. Readers ([`snapshot`]) run off the hot path
+//! and use a per-slot seqlock (odd = in-flight, even = published) to
+//! skip torn slots instead of blocking writers.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+/// Trace context carried by a request: the trace id and the span id
+/// that new child spans parent under. `trace == 0` means "untraced".
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceCtx {
+    pub trace: u64,
+    pub span: u64,
+}
+
+impl TraceCtx {
+    pub const NONE: TraceCtx = TraceCtx { trace: 0, span: 0 };
+
+    pub fn is_active(&self) -> bool {
+        self.trace != 0
+    }
+
+    /// The same trace, re-parented under `span` — what a stage hands
+    /// to the stages it encloses.
+    pub fn child_of(&self, span: u64) -> TraceCtx {
+        TraceCtx { trace: self.trace, span }
+    }
+}
+
+/// Span stage names. The discriminant is the ring's storage form.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Whole request, minted at `submit` (frontend root).
+    Request = 0,
+    /// Slot sat in the batcher FIFO before a worker popped it.
+    Queue = 1,
+    /// Policy held a ready batch back waiting for fill.
+    Linger = 2,
+    /// Ladder rung selection (`a` = rung, `b` = take).
+    RungPick = 3,
+    /// One batch forward on a worker (`a` = rung, `b` = batch).
+    Generate = 4,
+    /// Full quantized transformer steps (`a` = TGQ group, `b` = len).
+    StepsFull = 5,
+    /// Reuse-fused closed-form steps (`a` = TGQ group, `b` = len).
+    StepsReuse = 6,
+    /// Response copy-out / encode on delivery.
+    Encode = 7,
+    /// Frontend→node wire hop (cluster dispatch to reply).
+    Dispatch = 8,
+}
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Request => "request",
+            SpanKind::Queue => "queue",
+            SpanKind::Linger => "linger",
+            SpanKind::RungPick => "rung_pick",
+            SpanKind::Generate => "generate",
+            SpanKind::StepsFull => "steps_full",
+            SpanKind::StepsReuse => "steps_reuse",
+            SpanKind::Encode => "encode",
+            SpanKind::Dispatch => "dispatch",
+        }
+    }
+
+    fn from_u64(v: u64) -> Option<SpanKind> {
+        Some(match v {
+            0 => SpanKind::Request,
+            1 => SpanKind::Queue,
+            2 => SpanKind::Linger,
+            3 => SpanKind::RungPick,
+            4 => SpanKind::Generate,
+            5 => SpanKind::StepsFull,
+            6 => SpanKind::StepsReuse,
+            7 => SpanKind::Encode,
+            8 => SpanKind::Dispatch,
+            _ => return None,
+        })
+    }
+
+    fn from_name(s: &str) -> Option<SpanKind> {
+        Some(match s {
+            "request" => SpanKind::Request,
+            "queue" => SpanKind::Queue,
+            "linger" => SpanKind::Linger,
+            "rung_pick" => SpanKind::RungPick,
+            "generate" => SpanKind::Generate,
+            "steps_full" => SpanKind::StepsFull,
+            "steps_reuse" => SpanKind::StepsReuse,
+            "encode" => SpanKind::Encode,
+            "dispatch" => SpanKind::Dispatch,
+            _ => return None,
+        })
+    }
+}
+
+/// One finished span. Times are process-monotonic nanoseconds
+/// ([`now_ns`]); cross-process spans are re-based by the ingesting
+/// side before [`record`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SpanRec {
+    pub trace: u64,
+    pub span: u64,
+    pub parent: u64,
+    pub kind: SpanKind,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    /// Kind-specific detail (rung / TGQ group / shard).
+    pub a: u64,
+    /// Kind-specific detail (take / run length / bytes).
+    pub b: u64,
+}
+
+impl SpanRec {
+    /// Wire form. Ids go as hex *strings* — they are full 64-bit
+    /// values and would be mangled by JSON's f64 numbers.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("tr".into(), Json::Str(format!("{:016x}", self.trace)));
+        m.insert("sp".into(), Json::Str(format!("{:016x}", self.span)));
+        m.insert(
+            "pa".into(),
+            Json::Str(format!("{:016x}", self.parent)),
+        );
+        m.insert("k".into(), Json::Str(self.kind.name().to_string()));
+        m.insert("st".into(), Json::Num(self.start_ns as f64));
+        m.insert("du".into(), Json::Num(self.dur_ns as f64));
+        m.insert("a".into(), Json::Num(self.a as f64));
+        m.insert("b".into(), Json::Num(self.b as f64));
+        Json::Obj(m)
+    }
+
+    /// Parse the wire form; `None` for malformed entries or span
+    /// kinds this build doesn't know (forward-compatible skip).
+    pub fn from_json(v: &Json) -> Option<SpanRec> {
+        let hex = |key: &str| -> Option<u64> {
+            u64::from_str_radix(v.get(key)?.as_str()?, 16).ok()
+        };
+        let num = |key: &str| -> u64 {
+            v.get(key)
+                .and_then(Json::as_f64)
+                .filter(|x| *x >= 0.0)
+                .unwrap_or(0.0) as u64
+        };
+        let kind = SpanKind::from_name(v.get("k")?.as_str()?)?;
+        Some(SpanRec {
+            trace: hex("tr")?,
+            span: hex("sp")?,
+            parent: hex("pa").unwrap_or(0),
+            kind,
+            start_ns: num("st"),
+            dur_ns: num("du"),
+            a: num("a"),
+            b: num("b"),
+        })
+    }
+}
+
+// -- recorder state --------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static RING: OnceLock<SpanRing> = OnceLock::new();
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+static ID_SEED: OnceLock<u64> = OnceLock::new();
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Default ring capacity: ~64k spans ≈ a few thousand requests.
+pub const DEFAULT_CAPACITY: usize = 65_536;
+
+/// Is the recorder on? One relaxed load — the entire cost of tracing
+/// when disabled.
+#[inline]
+pub fn tracing_on() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn the recorder on, allocating the ring on first use. Capacity
+/// is fixed at whatever the *first* enable call asked for.
+pub fn enable(capacity: usize) {
+    RING.get_or_init(|| SpanRing::new(capacity.max(16)));
+    ENABLED.store(true, Ordering::Release);
+}
+
+/// Toggle recording without touching the ring (bench overhead legs
+/// flip this between runs).
+pub fn set_enabled(on: bool) {
+    if on {
+        enable(DEFAULT_CAPACITY);
+    } else {
+        ENABLED.store(false, Ordering::Release);
+    }
+}
+
+/// Process-monotonic nanoseconds (first call pins the epoch).
+pub fn now_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+fn id_seed() -> u64 {
+    *ID_SEED.get_or_init(|| {
+        let nanos = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0x5EED);
+        splitmix64(nanos ^ ((std::process::id() as u64) << 32))
+    })
+}
+
+/// A fresh nonzero 64-bit id, unique within the process and seeded
+/// per process for cross-process uniqueness in practice.
+pub fn next_id() -> u64 {
+    let n = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+    let id = splitmix64(id_seed().wrapping_add(n));
+    if id == 0 {
+        1
+    } else {
+        id
+    }
+}
+
+/// Mint a root context for a new request: fresh trace id, with the
+/// request span itself as the parent for stage spans. Returns
+/// [`TraceCtx::NONE`] when tracing is off, which every downstream
+/// recording site treats as "skip".
+pub fn mint() -> TraceCtx {
+    if !tracing_on() {
+        return TraceCtx::NONE;
+    }
+    TraceCtx { trace: next_id(), span: next_id() }
+}
+
+/// Close a stage span under `ctx`: mints the span id, records it,
+/// and returns the id so callers can parent sub-stages. No-op
+/// (returns 0) when untraced or disabled.
+pub fn record_span(
+    ctx: TraceCtx,
+    kind: SpanKind,
+    start_ns: u64,
+    end_ns: u64,
+    a: u64,
+    b: u64,
+) -> u64 {
+    if !ctx.is_active() || !tracing_on() {
+        return 0;
+    }
+    let span = next_id();
+    record(SpanRec {
+        trace: ctx.trace,
+        span,
+        parent: ctx.span,
+        kind,
+        start_ns,
+        dur_ns: end_ns.saturating_sub(start_ns),
+        a,
+        b,
+    });
+    span
+}
+
+/// Record a finished span verbatim (ids already assigned) — the
+/// ingest path for spans shipped across the wire.
+pub fn record(rec: SpanRec) {
+    if !tracing_on() {
+        return;
+    }
+    if let Some(ring) = RING.get() {
+        ring.push(rec);
+    }
+}
+
+/// Copy out every published span, oldest first. Off the hot path —
+/// export, tests, and `/metrics`-adjacent debugging only.
+pub fn snapshot() -> Vec<SpanRec> {
+    let mut out = match RING.get() {
+        Some(ring) => ring.read_all(),
+        None => Vec::new(),
+    };
+    out.sort_by_key(|r| (r.start_ns, r.span));
+    out
+}
+
+/// Published spans belonging to one trace, oldest first.
+pub fn spans_for_trace(trace: u64) -> Vec<SpanRec> {
+    let mut out = snapshot();
+    out.retain(|r| r.trace == trace);
+    out
+}
+
+// -- ring ------------------------------------------------------------------
+
+/// Per-slot seqlock over plain atomics: `seq == 0` empty, odd while a
+/// writer is mid-publish, even (= 2·generation) once readable.
+struct Slot {
+    seq: AtomicU64,
+    trace: AtomicU64,
+    span: AtomicU64,
+    parent: AtomicU64,
+    kind: AtomicU64,
+    start: AtomicU64,
+    dur: AtomicU64,
+    a: AtomicU64,
+    b: AtomicU64,
+}
+
+impl Slot {
+    fn empty() -> Slot {
+        Slot {
+            seq: AtomicU64::new(0),
+            trace: AtomicU64::new(0),
+            span: AtomicU64::new(0),
+            parent: AtomicU64::new(0),
+            kind: AtomicU64::new(0),
+            start: AtomicU64::new(0),
+            dur: AtomicU64::new(0),
+            a: AtomicU64::new(0),
+            b: AtomicU64::new(0),
+        }
+    }
+}
+
+struct SpanRing {
+    slots: Box<[Slot]>,
+    cursor: AtomicU64,
+}
+
+impl SpanRing {
+    fn new(capacity: usize) -> SpanRing {
+        let slots: Vec<Slot> =
+            (0..capacity).map(|_| Slot::empty()).collect();
+        SpanRing {
+            slots: slots.into_boxed_slice(),
+            cursor: AtomicU64::new(0),
+        }
+    }
+
+    /// Wait-free: claim a slot by ticket, publish under the seqlock.
+    /// Two writers lapping each other on the same slot can interleave;
+    /// the reader-side seq check discards such torn slots — acceptable
+    /// for a debugging ring, and impossible without wrap pressure.
+    fn push(&self, rec: SpanRec) {
+        let ticket = self.cursor.fetch_add(1, Ordering::Relaxed);
+        let cap = self.slots.len() as u64;
+        let slot = &self.slots[(ticket % cap) as usize];
+        let generation = ticket / cap + 1;
+        slot.seq.store(generation * 2 - 1, Ordering::Release);
+        slot.trace.store(rec.trace, Ordering::Relaxed);
+        slot.span.store(rec.span, Ordering::Relaxed);
+        slot.parent.store(rec.parent, Ordering::Relaxed);
+        slot.kind.store(rec.kind as u64, Ordering::Relaxed);
+        slot.start.store(rec.start_ns, Ordering::Relaxed);
+        slot.dur.store(rec.dur_ns, Ordering::Relaxed);
+        slot.a.store(rec.a, Ordering::Relaxed);
+        slot.b.store(rec.b, Ordering::Relaxed);
+        slot.seq.store(generation * 2, Ordering::Release);
+    }
+
+    fn read_all(&self) -> Vec<SpanRec> {
+        let mut out = Vec::new();
+        for slot in self.slots.iter() {
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 == 0 || s1 % 2 == 1 {
+                continue;
+            }
+            let rec = SpanRec {
+                trace: slot.trace.load(Ordering::Relaxed),
+                span: slot.span.load(Ordering::Relaxed),
+                parent: slot.parent.load(Ordering::Relaxed),
+                kind: match SpanKind::from_u64(
+                    slot.kind.load(Ordering::Relaxed),
+                ) {
+                    Some(k) => k,
+                    None => continue,
+                },
+                start_ns: slot.start.load(Ordering::Relaxed),
+                dur_ns: slot.dur.load(Ordering::Relaxed),
+                a: slot.a.load(Ordering::Relaxed),
+                b: slot.b.load(Ordering::Relaxed),
+            };
+            let s2 = slot.seq.load(Ordering::Acquire);
+            if s1 == s2 {
+                out.push(rec);
+            }
+        }
+        out
+    }
+}
+
+// -- thread-local current context ------------------------------------------
+
+thread_local! {
+    static CURRENT: std::cell::Cell<TraceCtx> =
+        std::cell::Cell::new(TraceCtx::NONE);
+}
+
+/// Install the batch's trace context on this worker thread so layers
+/// below the router (the sampler) can record spans without threading
+/// a context through `GenBackend::generate`'s signature.
+pub fn set_current(ctx: TraceCtx) {
+    CURRENT.with(|c| c.set(ctx));
+}
+
+/// The trace context installed on this thread (NONE outside a traced
+/// batch).
+pub fn current() -> TraceCtx {
+    CURRENT.with(|c| c.get())
+}
+
+/// RAII guard: installs `ctx` for the scope, restores the previous
+/// context on drop (worker loops nest cleanly).
+pub struct CurrentGuard {
+    prev: TraceCtx,
+}
+
+impl CurrentGuard {
+    pub fn enter(ctx: TraceCtx) -> CurrentGuard {
+        let prev = current();
+        set_current(ctx);
+        CurrentGuard { prev }
+    }
+}
+
+impl Drop for CurrentGuard {
+    fn drop(&mut self) {
+        set_current(self.prev);
+    }
+}
+
+// -- export ----------------------------------------------------------------
+
+/// Render spans as Chrome trace-event JSON (Perfetto / chrome://tracing
+/// "X" complete events). Each trace id becomes one `tid` row so a
+/// request reads as a single timeline; ids ride along in `args` as
+/// hex strings.
+pub fn chrome_trace_json(spans: &[SpanRec]) -> String {
+    // Stable small tids per trace, in first-seen (time) order.
+    let mut tids: BTreeMap<u64, u64> = BTreeMap::new();
+    for rec in spans {
+        let next = tids.len() as u64 + 1;
+        tids.entry(rec.trace).or_insert(next);
+    }
+    let events: Vec<Json> = spans
+        .iter()
+        .map(|rec| {
+            let mut args = BTreeMap::new();
+            args.insert(
+                "trace".to_string(),
+                Json::Str(format!("{:016x}", rec.trace)),
+            );
+            args.insert(
+                "span".to_string(),
+                Json::Str(format!("{:016x}", rec.span)),
+            );
+            args.insert(
+                "parent".to_string(),
+                Json::Str(format!("{:016x}", rec.parent)),
+            );
+            args.insert("a".to_string(), Json::Num(rec.a as f64));
+            args.insert("b".to_string(), Json::Num(rec.b as f64));
+            let mut e = BTreeMap::new();
+            e.insert(
+                "name".to_string(),
+                Json::Str(rec.kind.name().to_string()),
+            );
+            e.insert("cat".to_string(), Json::Str("serve".to_string()));
+            e.insert("ph".to_string(), Json::Str("X".to_string()));
+            e.insert(
+                "ts".to_string(),
+                Json::Num(rec.start_ns as f64 / 1_000.0),
+            );
+            e.insert(
+                "dur".to_string(),
+                Json::Num((rec.dur_ns as f64 / 1_000.0).max(0.001)),
+            );
+            e.insert("pid".to_string(), Json::Num(1.0));
+            e.insert(
+                "tid".to_string(),
+                Json::Num(*tids.get(&rec.trace).unwrap_or(&0) as f64),
+            );
+            e.insert("args".to_string(), Json::Obj(args));
+            Json::Obj(e)
+        })
+        .collect();
+    let mut top = BTreeMap::new();
+    top.insert("traceEvents".to_string(), Json::Arr(events));
+    top.insert(
+        "displayTimeUnit".to_string(),
+        Json::Str("ms".to_string()),
+    );
+    Json::Obj(top).dump()
+}
+
+/// Dump the whole ring to `path` as Chrome trace JSON (`--trace-json`).
+pub fn write_chrome_json(path: &Path) -> std::io::Result<usize> {
+    let spans = snapshot();
+    std::fs::write(path, chrome_trace_json(&spans))?;
+    Ok(spans.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unique_ctx() -> TraceCtx {
+        set_enabled(true);
+        mint()
+    }
+
+    #[test]
+    fn disabled_recording_is_inert() {
+        // NONE ctx spans never record, whatever the global flag says.
+        assert_eq!(
+            record_span(TraceCtx::NONE, SpanKind::Queue, 0, 10, 0, 0),
+            0
+        );
+    }
+
+    #[test]
+    fn ids_are_nonzero_and_distinct() {
+        let a = next_id();
+        let b = next_id();
+        assert_ne!(a, 0);
+        assert_ne!(b, 0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn spans_stitch_by_trace_and_parent() {
+        let ctx = unique_ctx();
+        let gen_span = record_span(
+            ctx,
+            SpanKind::Generate,
+            1_000,
+            9_000,
+            2,
+            4,
+        );
+        assert_ne!(gen_span, 0);
+        let child = ctx.child_of(gen_span);
+        record_span(child, SpanKind::StepsFull, 1_100, 4_000, 0, 12);
+        record_span(child, SpanKind::StepsReuse, 4_000, 4_100, 1, 37);
+        let spans = spans_for_trace(ctx.trace);
+        assert_eq!(spans.len(), 3);
+        let full = spans
+            .iter()
+            .find(|r| r.kind == SpanKind::StepsFull)
+            .expect("steps_full span");
+        assert_eq!(full.parent, gen_span);
+        assert_eq!(full.b, 12);
+        let generate = spans
+            .iter()
+            .find(|r| r.kind == SpanKind::Generate)
+            .expect("generate span");
+        assert_eq!(generate.parent, ctx.span);
+    }
+
+    #[test]
+    fn remote_spans_ingest_verbatim() {
+        let ctx = unique_ctx();
+        let rec = SpanRec {
+            trace: ctx.trace,
+            span: 0xABCD,
+            parent: ctx.span,
+            kind: SpanKind::Encode,
+            start_ns: 5,
+            dur_ns: 6,
+            a: 0,
+            b: 1024,
+        };
+        record(rec);
+        let spans = spans_for_trace(ctx.trace);
+        assert!(spans.iter().any(|r| *r == rec));
+    }
+
+    #[test]
+    fn span_json_roundtrip() {
+        let rec = SpanRec {
+            trace: u64::MAX - 3, // would not survive f64
+            span: 1 << 60,
+            parent: 7,
+            kind: SpanKind::Dispatch,
+            start_ns: 123_456_789,
+            dur_ns: 42,
+            a: 3,
+            b: 9,
+        };
+        let text = rec.to_json().dump();
+        let back =
+            SpanRec::from_json(&Json::parse(&text).expect("reparse"))
+                .expect("decode");
+        assert_eq!(back, rec);
+    }
+
+    #[test]
+    fn malformed_span_json_is_skipped() {
+        for text in
+            ["{}", "null", "{\"k\":\"warp\"}", "{\"k\":\"queue\"}"]
+        {
+            let v = Json::parse(text).expect("parse");
+            assert!(SpanRec::from_json(&v).is_none(), "{text}");
+        }
+    }
+
+    #[test]
+    fn chrome_export_is_valid_json_with_events() {
+        let ctx = unique_ctx();
+        record_span(ctx, SpanKind::Queue, 0, 500, 0, 0);
+        let spans = spans_for_trace(ctx.trace);
+        let text = chrome_trace_json(&spans);
+        let v = Json::parse(&text).expect("chrome json parses");
+        let events =
+            v.get("traceEvents").and_then(Json::as_arr).expect("events");
+        assert_eq!(events.len(), spans.len());
+        assert_eq!(
+            events[0].get("ph").and_then(Json::as_str),
+            Some("X")
+        );
+    }
+
+    #[test]
+    fn concurrent_recording_smoke() {
+        set_enabled(true);
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    let ctx = mint();
+                    for i in 0..200u64 {
+                        record_span(
+                            ctx,
+                            SpanKind::Queue,
+                            i,
+                            i + 1,
+                            t,
+                            i,
+                        );
+                    }
+                    ctx.trace
+                })
+            })
+            .collect();
+        for t in threads {
+            let trace = t.join().expect("thread");
+            assert!(!spans_for_trace(trace).is_empty());
+        }
+    }
+
+    #[test]
+    fn current_guard_nests_and_restores() {
+        let outer = TraceCtx { trace: 11, span: 1 };
+        let inner = TraceCtx { trace: 22, span: 2 };
+        {
+            let _a = CurrentGuard::enter(outer);
+            assert_eq!(current(), outer);
+            {
+                let _b = CurrentGuard::enter(inner);
+                assert_eq!(current(), inner);
+            }
+            assert_eq!(current(), outer);
+        }
+        assert_eq!(current(), TraceCtx::NONE);
+    }
+}

@@ -43,6 +43,7 @@ use anyhow::{bail, Result};
 
 use crate::coordinator::QuantConfig;
 use crate::model::WeightStore;
+use crate::obs::trace::{self, SpanKind};
 use crate::runtime::Runtime;
 use crate::sched::DdpmSchedule;
 use crate::tensor::Tensor;
@@ -275,10 +276,16 @@ impl<'a> Sampler<'a> {
         let mut eps_hat: Vec<f32> = Vec::new();
         let mut eps_group = usize::MAX;
 
+        // per-run step spans parent under the router's Generate span
+        // (installed on this thread for the duration of the call);
+        // NONE outside a traced batch, making every record a no-op
+        let tctx = trace::current();
         let t_total = std::time::Instant::now();
         for run in ReusePolicy::runs(&self.plan) {
             let g = self.qc.groups.group_of(self.sched.steps[run.start]);
             let nc = self.qc.correction_for_t(self.sched.steps[run.start]);
+            let run_start =
+                if tctx.is_active() { trace::now_ns() } else { 0 };
 
             if run.reuse && eps_group == g && !eps_hat.is_empty() {
                 // fused reuse run: one host update, zero dispatches,
@@ -299,6 +306,11 @@ impl<'a> Sampler<'a> {
                 stats.reuse_hits += run.len;
                 stats.steps_skipped += run.len;
                 stats.uploads_saved += 2 * run.len; // x_t and t
+                if tctx.is_active() {
+                    trace::record_span(tctx, SpanKind::StepsReuse,
+                                       run_start, trace::now_ns(),
+                                       g as u64, run.len as u64);
+                }
                 continue;
             }
 
@@ -357,6 +369,11 @@ impl<'a> Sampler<'a> {
                 }
                 stats.steps += 1;
                 stats.uploads_saved += 1; // t resident since init
+            }
+            if tctx.is_active() {
+                trace::record_span(tctx, SpanKind::StepsFull,
+                                   run_start, trace::now_ns(),
+                                   g as u64, run.len as u64);
             }
         }
         stats.host_s = t_total.elapsed().as_secs_f64() - stats.exec_s;

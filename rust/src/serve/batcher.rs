@@ -8,6 +8,8 @@
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
+use crate::obs::trace::TraceCtx;
+
 /// One image's worth of pending work.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Slot {
@@ -17,6 +19,10 @@ pub struct Slot {
     pub class: i32,
     /// Index of this image within its request.
     pub index: usize,
+    /// Trace context of the originating request ([`TraceCtx::NONE`]
+    /// when untraced) — rides the slot so the dispatching worker can
+    /// parent its batch spans without re-locking request state.
+    pub trace: TraceCtx,
 }
 
 /// Lifetime slot-flow counters. Conservation invariant:
@@ -47,12 +53,26 @@ impl Batcher {
         self.push_request_at(req_id, class, n, Instant::now());
     }
 
+    /// [`Self::push_request`] carrying the request's trace context on
+    /// every slot (the router's submit path).
+    pub fn push_request_traced(&mut self, req_id: u64, class: i32,
+                               n: usize, trace: TraceCtx) {
+        let at = Instant::now();
+        for index in 0..n {
+            self.queue
+                .push_back((Slot { req_id, class, index, trace }, at));
+            self.counters.enqueued += 1;
+        }
+    }
+
     /// [`Self::push_request`] with an explicit arrival instant (tests
     /// drive the linger deadline with a mock clock, no sleeps).
     pub fn push_request_at(&mut self, req_id: u64, class: i32, n: usize,
                            at: Instant) {
+        let trace = TraceCtx::NONE;
         for index in 0..n {
-            self.queue.push_back((Slot { req_id, class, index }, at));
+            self.queue
+                .push_back((Slot { req_id, class, index, trace }, at));
             self.counters.enqueued += 1;
         }
     }
@@ -121,12 +141,13 @@ mod tests {
         b.push_request(1, 3, 2);
         b.push_request(2, 5, 1);
         let batch = b.take(8);
+        let none = TraceCtx::NONE;
         assert_eq!(
             batch,
             vec![
-                Slot { req_id: 1, class: 3, index: 0 },
-                Slot { req_id: 1, class: 3, index: 1 },
-                Slot { req_id: 2, class: 5, index: 0 },
+                Slot { req_id: 1, class: 3, index: 0, trace: none },
+                Slot { req_id: 1, class: 3, index: 1, trace: none },
+                Slot { req_id: 2, class: 5, index: 0, trace: none },
             ]
         );
         assert!(b.is_empty());
@@ -143,6 +164,18 @@ mod tests {
         assert_eq!(b1[0].index, 0);
         assert_eq!(b3[1].index, 9);
         assert!(b.take(4).is_empty());
+    }
+
+    #[test]
+    fn trace_context_rides_every_slot_of_its_request() {
+        let mut b = Batcher::new();
+        let ctx = TraceCtx { trace: 0xBEEF, span: 0xF00D };
+        b.push_request_traced(1, 3, 2, ctx);
+        b.push_request(2, 5, 1); // untraced neighbor
+        let batch = b.take(8);
+        assert_eq!(batch[0].trace, ctx);
+        assert_eq!(batch[1].trace, ctx);
+        assert_eq!(batch[2].trace, TraceCtx::NONE);
     }
 
     #[test]

@@ -18,6 +18,7 @@
 
 use std::sync::mpsc::Receiver;
 
+use crate::obs::trace::TraceCtx;
 use crate::serve::error::ServeError;
 use crate::serve::router::{GenRequest, GenResult, ServerStats};
 
@@ -30,6 +31,18 @@ pub trait Dispatch: Send + Sync {
     /// when the service cannot take the request.
     fn submit(&self, req: GenRequest)
               -> Result<(u64, Receiver<GenResult>), ServeError>;
+
+    /// [`Dispatch::submit`] under an externally minted trace context
+    /// (`parent.span` is the span the service's request span parents
+    /// under — a shard node passes the frontend's dispatch span here
+    /// so both sides stitch into one timeline). The default drops the
+    /// context: implementations without a tracing path still serve
+    /// the request, they just contribute no spans — the same graceful
+    /// degradation a wire-version-skewed peer gets.
+    fn submit_traced(&self, req: GenRequest, _parent: TraceCtx)
+                     -> Result<(u64, Receiver<GenResult>), ServeError> {
+        self.submit(req)
+    }
 
     /// Image slots accepted but not yet computed (for this service's
     /// best local estimate — a cluster sums shard reports).

@@ -10,13 +10,18 @@
 //!    │                  │ (least-loaded shard,   reactor or │ serve/net)
 //!    │                  │  binary image frames,  per-conn   │
 //!    │                  │  re-queue on node loss) handlers  │
+//!    │                  │  Submit{trace} out at ≥WIRE_TRACE,│
+//!    │                  │  Response{spans} home, re-based   │
+//!    │                  │  into the Dispatch hop's window   │
 //!    │                  └─ control plane (Hello{role}) ──▶──┤
 //!    │                     ping/pong + pushed stats deltas; │
 //!    │                     health Alive→Suspect→Dead→       │
 //!    │                     Probation→Alive (re-admission)   ▼
-//!    │   both ends event-driven at --reactor: one poll(2)
-//!    │   thread per process owns every connection, timer
-//!    │   wheel drives heartbeats and request deadlines
+//!    │   both ends event-driven at --reactor: one poll(2)   │
+//!    │   thread per process owns every connection, timer    │
+//!    │   wheel drives heartbeats and request deadlines;     │
+//!    │   a reactor node can also serve GET /metrics         │
+//!    │   (--metrics-addr) as one more connection class ◀────┘
 //!    └──────────────── in-process (GenServer) ──────▶ Router
 //!                                                          │
 //!                     Batcher (FIFO slots, arrival times, counters)
@@ -28,6 +33,16 @@
 //!                        ▼
 //!        worker: pad take→rung, generate on the rung's executable,
 //!                deliver (per-rung stats) or fail (typed errors)
+//!
+//! observability (crate::obs), riding the same paths when --trace is
+//! on: Request ─┬─ Queue / Linger            (batcher wait)
+//!              ├─ Dispatch{shard}           (cluster hop, wire time)
+//!              │    └─ Request (node side, spans shipped home)
+//!              ├─ RungPick → Generate ─ StepsFull | StepsReuse
+//!              └─ Encode                    (response serialization)
+//! spans land in a lock-free ring (trace::snapshot / --trace-json);
+//! latency lives in mergeable log-linear histograms (obs::hist) that
+//! flow through StatsDelta pushes, stats folds and /metrics scrapes.
 //! ```
 //!
 //! Both entry points implement the [`Dispatch`] trait — submit /
@@ -133,7 +148,8 @@
 //!   `wait`s consume their guard and are exempt by construction.
 //! * **No panics on the request path** (`no-panic-paths`):
 //!   `.unwrap()`/`.expect()`/`panic!`-family are banned in production
-//!   `serve/` and `runtime/` code — failures surface as typed
+//!   `serve/`, `runtime/`, `sampler/` and `obs/` code — failures
+//!   surface as typed
 //!   [`ServeError`]s or logged degradation. On `serve/net` decode
 //!   paths, slice-indexing peer-controlled bytes is banned too (the
 //!   total `wire::be_*` readers exist for exactly this). Tests are

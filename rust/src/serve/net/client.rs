@@ -26,6 +26,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::obs::hist::LatencyHist;
+use crate::obs::trace::TraceCtx;
 use crate::serve::error::ServeError;
 use crate::serve::net::proto::{Msg, Role, WIRE_BINARY};
 use crate::serve::net::reactor::{
@@ -35,7 +37,6 @@ use crate::serve::net::wire::{write_frame, WireError};
 use crate::serve::router::{
     GenRequest, GenResponse, GenResult, ServerStats,
 };
-use crate::util::bench::percentile;
 use crate::{debug_log, warn_log};
 
 /// Client tuning knobs.
@@ -76,8 +77,7 @@ struct ClientState {
     pending: HashMap<u64, ClientPending>,
     requests: u64,
     failed_requests: u64,
-    latencies: Vec<f64>,
-    latency_count: u64,
+    latency: LatencyHist,
     /// First terminal connection failure (colors later submits).
     lost: Option<String>,
 }
@@ -232,10 +232,7 @@ fn complete(shared: &ClientShared, id: u64,
     let latency_s = p.t0.elapsed().as_secs_f64();
     match outcome {
         Ok(images) => {
-            // reborrow: field-splitting doesn't reach through the guard
-            let stm = &mut *st;
-            crate::serve::router::push_latency(
-                &mut stm.latencies, &mut stm.latency_count, latency_s);
+            st.latency.record(latency_s);
             let _ = p.tx.send(Ok(GenResponse { id, images, latency_s }));
         }
         Err(err) => {
@@ -291,8 +288,7 @@ impl NetClient {
                 pending: HashMap::new(),
                 requests: 0,
                 failed_requests: 0,
-                latencies: Vec::new(),
-                latency_count: 0,
+                latency: LatencyHist::new(),
                 lost: None,
             }),
             changed: Condvar::new(),
@@ -403,7 +399,8 @@ impl NetClient {
                                self.shared.addr),
             });
         };
-        let msg = Msg::Submit { id, class: req.class, n: req.n };
+        let msg = Msg::Submit { id, class: req.class, n: req.n,
+                                trace: TraceCtx::NONE };
         if !handle.send(token, msg.encode()) {
             // reactor gone: fail this one typed, right now
             let mut st = self.shared.lock();
@@ -427,8 +424,8 @@ impl NetClient {
         self.shared.lock().pending.values().map(|p| p.n).sum()
     }
 
-    /// Client-side stats overlay: request/failure counts and
-    /// end-to-end latency percentiles. (Node-side counters live on the
+    /// Client-side stats overlay: request/failure counts and the
+    /// end-to-end latency histogram. (Node-side counters live on the
     /// node; ask it, or the cluster, for those.)
     pub fn stats(&self) -> ServerStats {
         let st = self.shared.lock();
@@ -438,10 +435,9 @@ impl NetClient {
             wall_s: self.t_start.elapsed().as_secs_f64(),
             ..ServerStats::default()
         };
-        let mut lat = st.latencies.clone();
-        lat.sort_by(f64::total_cmp);
-        s.latency_p50_s = percentile(&lat, 0.50);
-        s.latency_p95_s = percentile(&lat, 0.95);
+        s.latency = st.latency.clone();
+        s.latency_p50_s = s.latency.quantile(0.50);
+        s.latency_p95_s = s.latency.quantile(0.95);
         s
     }
 

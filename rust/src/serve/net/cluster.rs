@@ -43,9 +43,18 @@
 //!   aggregates them via [`ServerStats::absorb`] (so the
 //!   batcher-conservation identity `enqueued == dispatched + purged +
 //!   pending` keeps holding over the sum) and overlays what only it
-//!   can see: cluster-level request/failure counts, *end-to-end*
-//!   latency percentiles (queue + wire + compute, measured at the
+//!   can see: cluster-level request/failure counts, the *end-to-end*
+//!   latency histogram (queue + wire + compute, measured at the
 //!   frontend), re-queues, lost and re-admitted nodes.
+//! * **Tracing** — each submit mints (or joins, via `submit_traced`) a
+//!   [`TraceCtx`](crate::obs::trace::TraceCtx). Once a shard's data
+//!   plane acknowledges [`WIRE_TRACE`], the pre-minted dispatch-hop
+//!   span id rides the `Submit` and the node's spans for the request
+//!   come home on the `Response`, where they are re-based into this
+//!   process's timeline — one trace id stitches the frontend's
+//!   request/dispatch spans and the node's queue/compute spans into a
+//!   single timeline. A peer below the trace wire just sees untraced
+//!   submits: the timeline keeps its frontend half and nothing breaks.
 //!
 //! Locking: the state mutex and the per-shard writer mutexes are never
 //! held together — state decisions happen under the state lock, frame
@@ -82,10 +91,12 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use crate::obs::hist::LatencyHist;
+use crate::obs::trace::{self, SpanKind, SpanRec, TraceCtx};
 use crate::serve::dispatch::Dispatch;
 use crate::serve::error::ServeError;
 use crate::serve::net::health::{Health, HealthPolicy, ShardState};
-use crate::serve::net::proto::{Msg, Role, WIRE_BINARY};
+use crate::serve::net::proto::{Msg, Role, WIRE_TRACE};
 use crate::serve::net::reactor::{
     Ctl, Driver, Handle, Reactor, ReactorOpts, Token,
 };
@@ -93,7 +104,6 @@ use crate::serve::net::wire::{write_frame, MessageReader, WireError};
 use crate::serve::router::{
     GenRequest, GenResponse, GenResult, ServerStats,
 };
-use crate::util::bench::percentile;
 use crate::{debug_log, warn_log};
 
 /// Cluster tuning knobs.
@@ -161,6 +171,19 @@ struct ClusterPending {
     /// Shard currently responsible for it.
     shard: usize,
     t0: Instant,
+    /// Root trace context ([`TraceCtx::NONE`] = untraced); `span` is
+    /// the pre-minted request-root span id, recorded at completion.
+    trace: TraceCtx,
+    /// Span the request root itself parents under (a caller's span
+    /// via `submit_traced`, 0 for a locally minted root).
+    parent_span: u64,
+    /// Submit time on the trace clock (0 when untraced).
+    t0_ns: u64,
+    /// Current dispatch hop: the pre-minted span id the node parents
+    /// its spans under, and when the hop went on the wire. Re-minted
+    /// when the request is re-homed off a dead shard.
+    dispatch_span: u64,
+    dispatch_t0_ns: u64,
 }
 
 struct ClusterState {
@@ -187,9 +210,13 @@ struct ClusterState {
     nodes_readmitted: u64,
     /// First recorded loss cause (attached to dead-cluster errors).
     first_cause: Option<String>,
-    /// Ring of recent end-to-end latencies (completed requests only).
-    latencies: Vec<f64>,
-    latency_count: u64,
+    /// End-to-end latency of completed requests (queue + wire +
+    /// compute, measured at the frontend).
+    latency: LatencyHist,
+    /// Wire feature level each shard's data plane acknowledged (0
+    /// until its `HelloAck` lands; reset on reconnect). Trace ids go
+    /// on the wire only at [`WIRE_TRACE`] and above.
+    wire: Vec<u16>,
     /// Last stats snapshot + the request seq it answered, per shard.
     last_stats: Vec<Option<ServerStats>>,
     stats_seen: Vec<u64>,
@@ -341,9 +368,10 @@ fn dial(addr: &str, role: Role, deadline: Duration)
     };
     let _ = stream.set_nodelay(true);
     let _ = stream.set_write_timeout(Some(deadline));
-    // advertise binary-response support: `Msg::decode` routes marked
-    // payloads on any reader, so both transport modes can take them
-    let hello = Msg::Hello { role, max_wire: WIRE_BINARY };
+    // advertise the full feature level (binary responses + trace
+    // fields): `Msg::decode` routes marked payloads on any reader,
+    // and trace ids are only *sent* once the ack confirms the level
+    let hello = Msg::Hello { role, max_wire: WIRE_TRACE };
     write_frame(&mut stream, &hello.encode()).map_err(
         |e| std::io::Error::new(std::io::ErrorKind::BrokenPipe,
                                 e.to_string()),
@@ -443,8 +471,8 @@ impl Cluster {
                 nodes_lost,
                 nodes_readmitted: 0,
                 first_cause,
-                latencies: Vec::new(),
-                latency_count: 0,
+                latency: LatencyHist::new(),
+                wire: vec![0; n],
                 last_stats: vec![None; n],
                 stats_seen: vec![0; n],
                 stats_want: 0,
@@ -520,13 +548,35 @@ impl Cluster {
     /// contract as the local router's `submit`; the one new failure
     /// mode is [`ServeError::NodeLost`] when no shard is serving
     /// (reconnection may re-admit one later — clients can retry).
+    /// Mints a fresh trace for the request (a no-op id when tracing
+    /// is off).
     pub fn submit(&self, req: GenRequest)
                   -> std::result::Result<(u64, Receiver<GenResult>),
                                          ServeError> {
+        self.submit_traced(req, trace::mint())
+    }
+
+    /// [`Self::submit`] under an externally minted trace context:
+    /// `parent.trace` keys the request's spans and `parent.span`
+    /// parents the request root. The frontend pre-mints a dispatch
+    /// span id per hop and sends it with the submit when the shard's
+    /// data plane negotiated [`WIRE_TRACE`] — the node's spans come
+    /// home on the response and stitch under that hop; below the
+    /// trace wire the node just sees an untraced submit and the
+    /// timeline keeps its frontend half only.
+    pub fn submit_traced(&self, req: GenRequest, parent: TraceCtx)
+                         -> std::result::Result<(u64, Receiver<GenResult>),
+                                                ServeError> {
+        let ctx = if parent.is_active() {
+            TraceCtx { trace: parent.trace, span: trace::next_id() }
+        } else {
+            TraceCtx::NONE
+        };
         let shard;
         let epoch;
         let id;
         let rx;
+        let msg;
         {
             let mut st = self.shared.lock();
             if !st.open {
@@ -578,18 +628,43 @@ impl Cluster {
                 }
             };
             epoch = st.epoch[shard];
+            let (dispatch_span, now_ns) = if ctx.is_active() {
+                (trace::next_id(), trace::now_ns())
+            } else {
+                (0, 0)
+            };
+            // the trace rides the wire only once this shard's data
+            // plane has acknowledged WIRE_TRACE — an older peer just
+            // sees the untraced submit it has always understood
+            let wire_trace = if ctx.is_active()
+                && st.wire[shard] >= WIRE_TRACE
+            {
+                TraceCtx { trace: ctx.trace, span: dispatch_span }
+            } else {
+                TraceCtx::NONE
+            };
             st.pending.insert(id, ClusterPending {
                 class: req.class,
                 n: req.n,
                 tx,
                 shard,
                 t0: Instant::now(),
+                trace: ctx,
+                parent_span: parent.span,
+                t0_ns: now_ns,
+                dispatch_span,
+                dispatch_t0_ns: now_ns,
             });
             st.inflight[shard] += req.n;
+            msg = Msg::Submit {
+                id,
+                class: req.class,
+                n: req.n,
+                trace: wire_trace,
+            };
         }
         // the wire write happens outside the state lock; on failure the
         // lost-node path re-queues (or typed-fails) this very request
-        let msg = Msg::Submit { id, class: req.class, n: req.n };
         if let Err(cause) = send_data(&self.shared, shard, &msg) {
             shard_lost(&self.shared, shard, epoch, &cause);
         }
@@ -783,6 +858,11 @@ impl Dispatch for Cluster {
                                      ServeError> {
         Cluster::submit(self, req)
     }
+    fn submit_traced(&self, req: GenRequest, parent: TraceCtx)
+                     -> std::result::Result<(u64, Receiver<GenResult>),
+                                            ServeError> {
+        Cluster::submit_traced(self, req, parent)
+    }
     fn queue_depth(&self) -> usize {
         Cluster::queue_depth(self)
     }
@@ -837,10 +917,12 @@ fn aggregate(st: &ClusterState, wall_s: f64) -> ServerStats {
     agg.nodes_lost = st.nodes_lost;
     agg.nodes_readmitted = st.nodes_readmitted;
     agg.wall_s = wall_s;
-    let mut lat = st.latencies.clone();
-    lat.sort_by(f64::total_cmp);
-    agg.latency_p50_s = percentile(&lat, 0.50);
-    agg.latency_p95_s = percentile(&lat, 0.95);
+    // the frontend's histogram *replaces* the absorbed node-side one:
+    // the nodes time queue+compute, the frontend times the client's
+    // whole round trip, and the aggregate reports the latter
+    agg.latency = st.latency.clone();
+    agg.latency_p50_s = agg.latency.quantile(0.50);
+    agg.latency_p95_s = agg.latency.quantile(0.95);
     agg
 }
 
@@ -915,8 +997,13 @@ fn reactor_send(shared: &ClusterShared, shard: usize, msg: &Msg,
 /// Deliver a terminal outcome for request `id` (from whichever shard
 /// answered first — a request re-queued off a slow-but-alive shard may
 /// legitimately resolve twice; the second is logged and dropped).
+/// `spans` are the node's spans for the request (empty when untraced
+/// or below the trace wire) — re-based and ingested here, then the
+/// frontend's own dispatch-hop and request-root spans close over
+/// them, so a clustered request reads as one stitched timeline.
 fn complete(shared: &ClusterShared, id: u64,
-            outcome: std::result::Result<Vec<f32>, ServeError>) {
+            outcome: std::result::Result<Vec<f32>, ServeError>,
+            spans: Vec<SpanRec>) {
     let mut st = shared.lock();
     let Some(p) = st.pending.remove(&id) else {
         debug_log!("cluster: late/duplicate answer for request {id} \
@@ -925,12 +1012,36 @@ fn complete(shared: &ClusterShared, id: u64,
     };
     st.inflight[p.shard] = st.inflight[p.shard].saturating_sub(p.n);
     let latency_s = p.t0.elapsed().as_secs_f64();
+    if p.trace.is_active() && trace::tracing_on() {
+        let end_ns = trace::now_ns();
+        ingest_remote_spans(&p, &spans, end_ns);
+        // both ids were pre-minted (the node parents under the
+        // dispatch span; stage spans under the root), so the spans
+        // are recorded verbatim rather than via `record_span`
+        trace::record(SpanRec {
+            trace: p.trace.trace,
+            span: p.dispatch_span,
+            parent: p.trace.span,
+            kind: SpanKind::Dispatch,
+            start_ns: p.dispatch_t0_ns,
+            dur_ns: end_ns.saturating_sub(p.dispatch_t0_ns),
+            a: p.shard as u64,
+            b: spans.len() as u64,
+        });
+        trace::record(SpanRec {
+            trace: p.trace.trace,
+            span: p.trace.span,
+            parent: p.parent_span,
+            kind: SpanKind::Request,
+            start_ns: p.t0_ns,
+            dur_ns: end_ns.saturating_sub(p.t0_ns),
+            a: 0,
+            b: p.n as u64,
+        });
+    }
     match outcome {
         Ok(images) => {
-            // reborrow: field-splitting doesn't reach through the guard
-            let stm = &mut *st;
-            crate::serve::router::push_latency(
-                &mut stm.latencies, &mut stm.latency_count, latency_s);
+            st.latency.record(latency_s);
             let _ = p.tx.send(Ok(GenResponse { id, images, latency_s }));
         }
         Err(err) => {
@@ -942,6 +1053,38 @@ fn complete(shared: &ClusterShared, id: u64,
     drop(st);
     if drained {
         shared.changed.notify_all();
+    }
+}
+
+/// Re-base a node's spans — timed on the *node's* monotonic clock —
+/// into this process's timeline before ingesting them: the node's
+/// whole reported interval is centered inside the frontend's dispatch
+/// window, splitting the unobservable wire time evenly between the
+/// two directions. Spans from other traces (a confused peer) are
+/// dropped rather than ingested under the wrong timeline.
+fn ingest_remote_spans(p: &ClusterPending, spans: &[SpanRec],
+                       end_ns: u64) {
+    let anchor = spans
+        .iter()
+        .filter(|r| r.trace == p.trace.trace)
+        .min_by_key(|r| r.start_ns);
+    let Some(anchor) = anchor else { return };
+    let node_span = spans
+        .iter()
+        .filter(|r| r.trace == p.trace.trace)
+        .map(|r| r.start_ns.saturating_sub(anchor.start_ns) + r.dur_ns)
+        .max()
+        .unwrap_or(0);
+    let hop = end_ns.saturating_sub(p.dispatch_t0_ns);
+    let base = p.dispatch_t0_ns + hop.saturating_sub(node_span) / 2;
+    for r in spans {
+        if r.trace != p.trace.trace {
+            continue;
+        }
+        let mut rec = *r;
+        rec.start_ns =
+            base + rec.start_ns.saturating_sub(anchor.start_ns);
+        trace::record(rec);
     }
 }
 
@@ -1009,17 +1152,39 @@ fn shard_lost(shared: &ClusterShared, shard: usize, epoch: u64,
                 match st.health.pick(&st.inflight) {
                     Some(j) => {
                         let ep_j = st.epoch[j];
+                        let wire_j = st.wire[j];
                         let Some(p) = st.pending.get_mut(&id) else {
                             debug_log!("cluster: request {id} resolved \
                                         while being re-homed");
                             continue;
                         };
                         p.shard = j;
+                        // a re-homed request starts a fresh dispatch
+                        // hop: new span id, new send time, same gating
+                        // on the survivor's acknowledged wire level
+                        let wire_trace = if p.trace.is_active() {
+                            p.dispatch_span = trace::next_id();
+                            p.dispatch_t0_ns = trace::now_ns();
+                            if wire_j >= WIRE_TRACE {
+                                TraceCtx {
+                                    trace: p.trace.trace,
+                                    span: p.dispatch_span,
+                                }
+                            } else {
+                                TraceCtx::NONE
+                            }
+                        } else {
+                            TraceCtx::NONE
+                        };
                         let (class, n) = (p.class, p.n);
                         st.inflight[j] += n;
                         st.requeued += 1;
-                        resubmits
-                            .push((j, ep_j, Msg::Submit { id, class, n }));
+                        resubmits.push((j, ep_j, Msg::Submit {
+                            id,
+                            class,
+                            n,
+                            trace: wire_trace,
+                        }));
                     }
                     None => {
                         let Some(p) = st.pending.remove(&id) else {
@@ -1140,11 +1305,11 @@ fn reader_loop<R: Read>(shared: Arc<ClusterShared>, shard: usize,
             }
         };
         match msg {
-            Msg::Response { id, images, .. } => {
-                complete(&shared, id, Ok(images));
+            Msg::Response { id, images, spans, .. } => {
+                complete(&shared, id, Ok(images), spans);
             }
             Msg::ErrorResp { id, err } => {
-                complete(&shared, id, Err(err));
+                complete(&shared, id, Err(err), Vec::new());
             }
             Msg::Pong { queue_depth, live_workers, ready_workers, .. } => {
                 // with the control plane isolated, only control-plane
@@ -1192,6 +1357,14 @@ fn reader_loop<R: Read>(shared: Arc<ClusterShared>, shard: usize,
             Msg::HelloAck { wire } => {
                 debug_log!("cluster: shard {}: wire level {wire} \
                             acknowledged", shared.addrs[shard]);
+                // trace ids go on the wire only once the data plane
+                // has acknowledged a level that understands them
+                if plane == Role::Data {
+                    let mut st = shared.lock();
+                    if st.epoch[shard] == epoch {
+                        st.wire[shard] = wire;
+                    }
+                }
             }
             Msg::StatsDelta { .. } => {
                 // delta pushes are the reactor frontend's diet; the
@@ -1402,6 +1575,7 @@ fn try_reconnect(shared: &Arc<ClusterShared>, i: usize) {
                 return;
             }
             st.epoch[i] += 1;
+            st.wire[i] = 0; // renegotiated by the fresh hello/ack
             st.health.begin_probation(i, Instant::now());
             st.epoch[i]
         };
@@ -1446,6 +1620,7 @@ fn try_reconnect(shared: &Arc<ClusterShared>, i: usize) {
             return;
         }
         st.epoch[i] += 1;
+        st.wire[i] = 0; // renegotiated by the fresh hello/ack
         st.health.begin_probation(i, Instant::now());
         st.epoch[i]
     };
@@ -1511,6 +1686,15 @@ fn stats_fold(acc: &ServerStats, d: &ServerStats) -> ServerStats {
     next.reuse_hits = acc.reuse_hits + d.reuse_hits;
     next.steps_skipped = acc.steps_skipped + d.steps_skipped;
     next.uploads_saved = acc.uploads_saved + d.uploads_saved;
+    // the latency histogram travels as a per-bucket increment
+    // (`LatencyHist::delta_since` on the node), so folding is a
+    // merge; the quantile gauges re-derive from the folded buckets
+    next.latency = acc.latency.clone();
+    next.latency.merge(&d.latency);
+    if next.latency.count() > 0 {
+        next.latency_p50_s = next.latency.quantile(0.50);
+        next.latency_p95_s = next.latency.quantile(0.95);
+    }
     next
 }
 
@@ -1623,11 +1807,11 @@ impl Driver for ClusterDriver {
             }
         };
         match msg {
-            Msg::Response { id, images, .. } => {
-                complete(&shared, id, Ok(images));
+            Msg::Response { id, images, spans, .. } => {
+                complete(&shared, id, Ok(images), spans);
             }
             Msg::ErrorResp { id, err } => {
-                complete(&shared, id, Err(err));
+                complete(&shared, id, Err(err), Vec::new());
             }
             Msg::Pong { queue_depth, live_workers, ready_workers, .. } => {
                 // same liveness discipline as the threaded reader:
@@ -1689,6 +1873,14 @@ impl Driver for ClusterDriver {
             Msg::HelloAck { wire } => {
                 debug_log!("cluster: shard {}: wire level {wire} \
                             acknowledged", shared.addrs[shard]);
+                // same gating as the threaded reader: only the data
+                // plane's acknowledged level admits trace ids
+                if tag.plane == Role::Data {
+                    let mut st = shared.lock();
+                    if st.epoch[shard] == tag.epoch {
+                        st.wire[shard] = wire;
+                    }
+                }
             }
             Msg::Reject { err } => {
                 // the node refused this connection outright (e.g. it
@@ -1860,9 +2052,11 @@ impl Driver for ClusterDriver {
 mod tests {
     use super::*;
     use crate::serve::net::node::NodeOpts;
+    use crate::serve::net::proto::WIRE_BINARY;
     use crate::serve::net::testutil::{
         mock_node, mock_node_at, mock_node_opts,
     };
+    use crate::serve::net::wire::read_frame;
     use std::net::TcpListener;
 
     /// Fast heartbeats so pongs flow promptly, but a *generous*
@@ -2316,6 +2510,186 @@ mod tests {
         assert!(Cluster::connect(&[], fast_opts()).is_err());
     }
 
+    // -- tracing + latency plumbing ------------------------------------
+
+    #[test]
+    fn clustered_trace_stitches_one_timeline_across_the_wire() {
+        trace::set_enabled(true);
+        let (node, addr) =
+            mock_node(vec![1, 2, 4], 2, Duration::from_millis(1));
+        let cluster =
+            Cluster::connect(&[addr.to_string()], fast_opts())
+                .unwrap();
+        // one warm-up round trip: the HelloAck recording the node's
+        // wire level is ordered before any response on the same
+        // connection, so the next submit surely carries its trace
+        let (_, rx) =
+            cluster.submit(GenRequest { class: 0, n: 1 }).unwrap();
+        recv_ok(&rx);
+        let parent = TraceCtx {
+            trace: trace::next_id(),
+            span: trace::next_id(),
+        };
+        let (_, rx) = cluster
+            .submit_traced(GenRequest { class: 2, n: 2 }, parent)
+            .unwrap();
+        recv_ok(&rx);
+        let spans = trace::spans_for_trace(parent.trace);
+        let root = spans
+            .iter()
+            .find(|r| {
+                r.kind == SpanKind::Request
+                    && r.parent == parent.span
+            })
+            .expect("frontend request root");
+        let dispatch = spans
+            .iter()
+            .find(|r| r.kind == SpanKind::Dispatch)
+            .expect("dispatch hop span");
+        assert_eq!(dispatch.parent, root.span,
+                   "the hop must hang off the request root");
+        let node_root = spans
+            .iter()
+            .find(|r| {
+                r.kind == SpanKind::Request
+                    && r.parent == dispatch.span
+            })
+            .expect("node-side root must stitch under the dispatch \
+                     hop");
+        assert!(spans.iter().any(|r| r.kind == SpanKind::Generate),
+                "node compute spans must ship home");
+        // the re-based node timeline nests inside the hop window
+        assert!(node_root.start_ns >= dispatch.start_ns);
+        assert!(node_root.start_ns + node_root.dur_ns
+                    <= dispatch.start_ns + dispatch.dur_ns,
+                "node span must not spill past the dispatch hop");
+        cluster.shutdown();
+        node.shutdown();
+    }
+
+    /// One connection of a wire-v3 peer: acknowledges *below*
+    /// [`WIRE_TRACE`] and answers the minimum protocol, recording the
+    /// trace ctx of every submit it sees.
+    fn old_wire_conn(mut stream: TcpStream,
+                     seen: Arc<Mutex<Vec<TraceCtx>>>) {
+        loop {
+            let Ok(payload) = read_frame(&mut stream) else { return };
+            let Ok(msg) = Msg::decode(&payload) else { return };
+            let reply = match msg {
+                Msg::Hello { .. } => {
+                    Some(Msg::HelloAck { wire: WIRE_BINARY })
+                }
+                Msg::Ping { seq } => Some(Msg::Pong {
+                    seq,
+                    queue_depth: 0,
+                    live_workers: 1,
+                    ready_workers: 1,
+                }),
+                Msg::StatsReq { seq } => Some(Msg::Stats {
+                    seq,
+                    stats: ServerStats::default(),
+                }),
+                Msg::Submit { id, class, n, trace } => {
+                    crate::util::lock(&seen).push(trace);
+                    Some(Msg::Response {
+                        id,
+                        latency_s: 0.0,
+                        images: vec![class as f32; n * 2],
+                        spans: Vec::new(),
+                    })
+                }
+                _ => None,
+            };
+            if let Some(r) = reply {
+                if write_frame(&mut stream, &r.encode()).is_err() {
+                    return;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn trace_ids_stay_home_below_the_trace_wire() {
+        trace::set_enabled(true);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let seen: Arc<Mutex<Vec<TraceCtx>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let accept_seen = Arc::clone(&seen);
+        let server = std::thread::spawn(move || {
+            // the frontend dials a data and a control connection
+            let handlers: Vec<_> = (0..2)
+                .map(|_| {
+                    let (stream, _) =
+                        listener.accept().expect("accept");
+                    let seen = Arc::clone(&accept_seen);
+                    std::thread::spawn(move || {
+                        old_wire_conn(stream, seen)
+                    })
+                })
+                .collect();
+            for h in handlers {
+                let _ = h.join();
+            }
+        });
+        let cluster =
+            Cluster::connect(&[addr.to_string()], fast_opts())
+                .unwrap();
+        // warm up one round trip so the (old) ack surely landed
+        let (_, rx) =
+            cluster.submit(GenRequest { class: 1, n: 1 }).unwrap();
+        recv_ok(&rx);
+        let parent = TraceCtx {
+            trace: trace::next_id(),
+            span: trace::next_id(),
+        };
+        let (_, rx) = cluster
+            .submit_traced(GenRequest { class: 3, n: 2 }, parent)
+            .unwrap();
+        let resp = recv_ok(&rx);
+        assert_eq!(resp.images.len(), 2 * 2);
+        // the old peer never saw a trace id...
+        for t in crate::util::lock(&seen).iter() {
+            assert_eq!(*t, TraceCtx::NONE,
+                       "trace ids must not cross a wire below \
+                        WIRE_TRACE");
+        }
+        // ...but the frontend half of the timeline still recorded
+        let spans = trace::spans_for_trace(parent.trace);
+        assert!(spans.iter().any(|r| r.kind == SpanKind::Request),
+                "frontend request root missing");
+        assert!(spans.iter().any(|r| r.kind == SpanKind::Dispatch),
+                "frontend dispatch span missing");
+        cluster.shutdown();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn stats_fold_rebuilds_the_latency_histogram_from_delta_pushes() {
+        // a node's cumulative histogram at two push instants
+        let mut c1 = LatencyHist::new();
+        for _ in 0..40 {
+            c1.record(0.010);
+        }
+        let mut c2 = c1.clone();
+        for _ in 0..10 {
+            c2.record(1.0);
+        }
+        // push 1 = full cumulative values (the first push on a
+        // connection), push 2 = per-bucket increment
+        let mut push1 = ServerStats::default();
+        push1.latency = c1.clone();
+        let mut push2 = ServerStats::default();
+        push2.latency = c2.delta_since(&c1);
+        let folded = stats_fold(&push1, &push2);
+        assert_eq!(folded.latency.count(), c2.count());
+        assert_eq!(folded.latency.quantile(0.95), c2.quantile(0.95));
+        assert!(folded.latency_p95_s > 0.9,
+                "p95 must see the slow tail from the second push");
+        assert!(folded.latency_p50_s < 0.02,
+                "p50 must stay with the fast mass");
+    }
+
     // -- reactor-mode frontend -----------------------------------------
 
     /// [`fast_opts`] on the reactor transport.
@@ -2530,6 +2904,22 @@ mod tests {
                      (images = {})", agg.images);
             std::thread::sleep(Duration::from_millis(5));
         }
+        // the latency histogram rides the same delta stream: the
+        // folded per-shard snapshot reconstructs the node's samples
+        {
+            let st = cluster.shared.lock();
+            let hist = &st.last_stats[0]
+                .as_ref()
+                .expect("folded snapshot")
+                .latency;
+            assert_eq!(hist.count(), 5,
+                       "one latency sample per request must survive \
+                        the delta encoding");
+        }
+        // while the aggregate overlays the frontend's end-to-end view
+        let agg = cluster.stats();
+        assert_eq!(agg.latency.count(), 5);
+        assert!(agg.latency_p95_s >= agg.latency_p50_s);
         cluster.shutdown();
         let st = node.shutdown();
         assert_eq!(st.images, 10);

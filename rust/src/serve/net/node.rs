@@ -71,11 +71,13 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use crate::obs::metrics;
+use crate::obs::trace::{self, TraceCtx};
 use crate::serve::dispatch::Dispatch;
 use crate::serve::error::ServeError;
-use crate::serve::net::proto::{Msg, Role, WIRE_BINARY};
+use crate::serve::net::proto::{Msg, Role, WIRE_TRACE};
 use crate::serve::net::reactor::{
-    Ctl, Driver, Handle, Reactor, ReactorOpts, Token,
+    ConnClass, Ctl, Driver, Handle, Reactor, ReactorOpts, Token,
 };
 use crate::serve::net::wire::{
     write_frame, MessageReader, WireError, WIRE_VERSION,
@@ -99,6 +101,11 @@ pub struct NodeOpts {
     /// Reactor mode: push a [`Msg::StatsDelta`] on every control
     /// connection at this cadence.
     pub stats_push: Duration,
+    /// Reactor mode: also bind this address and serve Prometheus
+    /// text exposition (`GET /metrics`) from the same reactor thread
+    /// — raw HTTP as one more connection class, no extra threads.
+    /// Ignored (with a warning) in threaded mode.
+    pub metrics_addr: Option<SocketAddr>,
 }
 
 impl Default for NodeOpts {
@@ -108,6 +115,7 @@ impl Default for NodeOpts {
             reactor: false,
             max_conns: 4096,
             stats_push: Duration::from_millis(250),
+            metrics_addr: None,
         }
     }
 }
@@ -154,6 +162,9 @@ pub struct NodeServer {
     /// Reactor mode; `None` in threaded mode.
     reactor: Option<ReactorPart>,
     addr: SocketAddr,
+    /// Bound `/metrics` listener address (reactor mode with
+    /// [`NodeOpts::metrics_addr`] set; resolves port 0).
+    metrics_addr: Option<SocketAddr>,
     accept: Option<JoinHandle<()>>,
 }
 
@@ -171,6 +182,10 @@ impl NodeServer {
         if opts.reactor {
             return Self::start_reactor(svc, listener, addr, opts);
         }
+        if let Some(m) = opts.metrics_addr {
+            warn_log!("node: --metrics-addr {m} needs reactor mode; \
+                       not serving metrics");
+        }
         let shared = Arc::new(NodeShared {
             svc,
             pool: ThreadPool::new(opts.forwarders.max(1)),
@@ -187,6 +202,7 @@ impl NodeServer {
             shared: Some(shared),
             reactor: None,
             addr,
+            metrics_addr: None,
             accept: Some(accept),
         })
     }
@@ -198,6 +214,23 @@ impl NodeServer {
             svc,
             pool: ThreadPool::new(opts.forwarders.max(1)),
         });
+        let mut listeners = vec![listener];
+        let mut metrics_addr = None;
+        if let Some(m) = opts.metrics_addr {
+            let ml = TcpListener::bind(m)
+                .with_context(|| format!("binding metrics listener {m}"))?;
+            metrics_addr = Some(
+                ml.local_addr()
+                    .context("reading metrics listener address")?,
+            );
+            listeners.push(ml);
+        }
+        // listener tokens are assigned 1..=n in `listeners` order (the
+        // `Reactor::spawn` contract); the driver needs the metrics
+        // token *before* spawn to classify accepts, so derive it from
+        // the order above and assert the contract held afterwards
+        let metrics_token: Option<Token> =
+            metrics_addr.map(|_| listeners.len() as Token);
         // the handle only exists once the reactor is spawned, but the
         // driver (which spawns forwarder jobs needing it) is built
         // first — hand it over through a cell filled right after spawn
@@ -207,14 +240,18 @@ impl NodeServer {
             handle: Arc::clone(&cell),
             conns: HashMap::new(),
             stats_push: opts.stats_push,
+            metrics_token,
+            http: HashMap::new(),
         };
         let ropts = ReactorOpts {
             max_conns: opts.max_conns.max(1),
             ..ReactorOpts::default()
         };
-        let (reactor, handle, _ltokens) =
-            Reactor::spawn(driver, vec![listener], ropts)
+        let (reactor, handle, ltokens) =
+            Reactor::spawn(driver, listeners, ropts)
                 .context("spawning node reactor")?;
+        debug_assert_eq!(metrics_token,
+                         metrics_token.and(ltokens.last().copied()));
         let _ = cell.set(handle.clone());
         Ok(NodeServer {
             shared: None,
@@ -224,6 +261,7 @@ impl NodeServer {
                 reactor: Some(reactor),
             }),
             addr,
+            metrics_addr,
             accept: None,
         })
     }
@@ -231,6 +269,11 @@ impl NodeServer {
     /// The bound listen address (resolves port 0).
     pub fn addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// The bound `/metrics` address, when serving metrics.
+    pub fn metrics_addr(&self) -> Option<SocketAddr> {
+        self.metrics_addr
     }
 
     /// Force-close every live client connection *without* touching the
@@ -502,7 +545,7 @@ fn conn_loop(shared: &Arc<NodeShared>, writer: &Arc<ConnWriter>,
         match msg {
             Msg::Hello { role: tagged, max_wire } => {
                 role = tagged;
-                wire = max_wire.min(WIRE_BINARY);
+                wire = max_wire.min(WIRE_TRACE);
                 debug_log!("node: {peer}: connection tagged {} \
                             (wire {wire})", tagged.name());
                 if max_wire > WIRE_VERSION {
@@ -529,8 +572,18 @@ fn conn_loop(shared: &Arc<NodeShared>, writer: &Arc<ConnWriter>,
                     break;
                 }
             }
-            Msg::Submit { id, class, n } => {
-                match shared.svc.submit(GenRequest { class, n }) {
+            Msg::Submit { id, class, n, trace } => {
+                // honor the trace only on a wire that negotiated it:
+                // an old frontend never sends one, and a skewed peer's
+                // ids (which it could not correlate) degrade to NONE
+                let trace = if wire >= WIRE_TRACE {
+                    trace
+                } else {
+                    TraceCtx::NONE
+                };
+                match shared.svc
+                    .submit_traced(GenRequest { class, n }, trace)
+                {
                     Ok((_, rx)) => {
                         let w = Arc::clone(writer);
                         // the job blocks on this one request's channel;
@@ -542,6 +595,15 @@ fn conn_loop(shared: &Arc<NodeShared>, writer: &Arc<ConnWriter>,
                                     id,
                                     latency_s: resp.latency_s,
                                     images: resp.images,
+                                    // ship this request's spans home so
+                                    // the frontend stitches one timeline
+                                    spans: if trace.is_active() {
+                                        trace::spans_for_trace(
+                                            trace.trace,
+                                        )
+                                    } else {
+                                        Vec::new()
+                                    },
                                 },
                                 Ok(Err(err)) => Msg::ErrorResp { id, err },
                                 Err(_) => Msg::ErrorResp {
@@ -622,12 +684,16 @@ struct ConnState {
 }
 
 /// Counter increments since `prev`; gauges (`pending`, fills, depths,
-/// latencies, wall clock) and the rung/worker breakdowns stay
-/// absolute. Summing deltas per connection reconstructs the node's
-/// cumulative counters, conservation identity included
+/// latency quantiles, wall clock) and the rung/worker breakdowns stay
+/// absolute. The latency *histogram* travels as a per-bucket
+/// increment, so the frontend's merged histogram reconstructs the
+/// node's exactly — bucket counts are counters like any other.
+/// Summing deltas per connection reconstructs the node's cumulative
+/// counters, conservation identity included
 /// (`Σenqueued = Σdispatched + Σpurged + pending_now`).
 fn stats_delta(prev: &ServerStats, cur: &ServerStats) -> ServerStats {
     let mut d = cur.clone();
+    d.latency = cur.latency.delta_since(&prev.latency);
     d.requests = cur.requests.saturating_sub(prev.requests);
     d.images = cur.images.saturating_sub(prev.images);
     d.batches = cur.batches.saturating_sub(prev.batches);
@@ -676,7 +742,15 @@ struct NodeDriver {
     handle: Arc<OnceLock<Handle<SocketAddr>>>,
     conns: HashMap<Token, ConnState>,
     stats_push: Duration,
+    /// Listener token of the raw-HTTP `/metrics` listener, if bound.
+    metrics_token: Option<Token>,
+    /// Request-head bytes accumulated per raw metrics connection.
+    http: HashMap<Token, Vec<u8>>,
 }
+
+/// Longest request head a `/metrics` scraper may send before the
+/// connection is dropped as garbage.
+const MAX_HTTP_HEAD: usize = 16 << 10;
 
 impl Driver for NodeDriver {
     type Tag = SocketAddr;
@@ -684,6 +758,36 @@ impl Driver for NodeDriver {
     fn accept_tag(&mut self, _listener: Token, peer: SocketAddr)
                   -> SocketAddr {
         peer
+    }
+
+    fn conn_class(&mut self, listener: Token) -> ConnClass {
+        if Some(listener) == self.metrics_token {
+            ConnClass::Raw
+        } else {
+            ConnClass::Framed
+        }
+    }
+
+    fn on_raw(&mut self, ctl: &mut Ctl<'_>, token: Token,
+              chunk: &[u8]) {
+        let buf = self.http.entry(token).or_default();
+        buf.extend_from_slice(chunk);
+        if !metrics::http_request_complete(buf) {
+            if buf.len() > MAX_HTTP_HEAD {
+                self.http.remove(&token);
+                ctl.close(token);
+            }
+            return;
+        }
+        let buf = self.http.remove(&token).unwrap_or_default();
+        let path = metrics::http_request_path(&buf);
+        // a node scrape has no shard table — it *is* the shard
+        let body =
+            metrics::render_prometheus(&self.core.svc.stats(), &[]);
+        let resp = metrics::respond(path.as_deref(), &body);
+        if ctl.send_raw(token, &resp).is_ok() {
+            ctl.close_after_flush(token);
+        }
     }
 
     fn on_open(&mut self, _ctl: &mut Ctl<'_>, token: Token,
@@ -711,7 +815,7 @@ impl Driver for NodeDriver {
         match msg {
             Msg::Hello { role, max_wire } => {
                 st.role = role;
-                st.wire = max_wire.min(WIRE_BINARY);
+                st.wire = max_wire.min(WIRE_TRACE);
                 let wire = st.wire;
                 debug_log!("node: {}: connection tagged {} \
                             (wire {wire})", st.peer, role.name());
@@ -740,9 +844,18 @@ impl Driver for NodeDriver {
                     self.conns.remove(&token);
                 }
             }
-            Msg::Submit { id, class, n } => {
+            Msg::Submit { id, class, n, trace } => {
                 let wire = st.wire;
-                match self.core.svc.submit(GenRequest { class, n }) {
+                // same trace-only-when-negotiated rule as the
+                // threaded path
+                let trace = if wire >= WIRE_TRACE {
+                    trace
+                } else {
+                    TraceCtx::NONE
+                };
+                match self.core.svc
+                    .submit_traced(GenRequest { class, n }, trace)
+                {
                     Ok((_, rx)) => {
                         let cell = Arc::clone(&self.handle);
                         // same shape as the threaded forwarder: the
@@ -754,6 +867,13 @@ impl Driver for NodeDriver {
                                     id,
                                     latency_s: resp.latency_s,
                                     images: resp.images,
+                                    spans: if trace.is_active() {
+                                        trace::spans_for_trace(
+                                            trace.trace,
+                                        )
+                                    } else {
+                                        Vec::new()
+                                    },
                                 },
                                 Ok(Err(err)) => {
                                     Msg::ErrorResp { id, err }
@@ -819,6 +939,7 @@ impl Driver for NodeDriver {
 
     fn on_close(&mut self, _ctl: &mut Ctl<'_>, token: Token,
                 cause: WireError) {
+        self.http.remove(&token);
         if let Some(st) = self.conns.remove(&token) {
             match cause {
                 WireError::Closed => {
@@ -854,6 +975,7 @@ impl Driver for NodeDriver {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::serve::net::proto::WIRE_BINARY;
     use crate::serve::net::testutil::{
         mock_node, mock_node_opts, read_msg, send_msg,
     };
@@ -872,13 +994,18 @@ mod tests {
         }
     }
 
+    /// An untraced submit — the common case in these tests.
+    fn submit(id: u64, class: i32, n: usize) -> Msg {
+        Msg::Submit { id, class, n, trace: TraceCtx::NONE }
+    }
+
     #[test]
     fn node_serves_submit_ping_stats_over_one_socket() {
         let (node, addr) = mock_node(vec![4], 3, Duration::ZERO);
         let mut c = TcpStream::connect(addr).unwrap();
         c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
 
-        send_msg(&mut c, &Msg::Submit { id: 42, class: 5, n: 2 });
+        send_msg(&mut c, &submit(42, 5, 2));
         send_msg(&mut c, &Msg::Ping { seq: 9 });
 
         // ping answered inline; the response forwarded when computed —
@@ -925,11 +1052,7 @@ mod tests {
                         .unwrap();
                     for i in 0..4u64 {
                         let class = client + 1;
-                        send_msg(&mut c, &Msg::Submit {
-                            id: i,
-                            class,
-                            n: 3,
-                        });
+                        send_msg(&mut c, &submit(i, class, 3));
                         match read_until(&mut c,
                                          |m| matches!(m,
                                                       Msg::Response { .. }
@@ -964,7 +1087,7 @@ mod tests {
         // valid frame, garbage JSON — the node must skip it
         write_frame(&mut c, b"{ not json").unwrap();
         // and a well-formed submit on the same connection still works
-        send_msg(&mut c, &Msg::Submit { id: 1, class: 3, n: 1 });
+        send_msg(&mut c, &submit(1, 3, 1));
         match read_until(&mut c, |m| matches!(m, Msg::Response { .. })) {
             Msg::Response { id: 1, images, .. } => {
                 assert_eq!(images, vec![3.0, 3.0]);
@@ -992,7 +1115,7 @@ mod tests {
         // a fresh connection is unaffected
         let mut c = TcpStream::connect(addr).unwrap();
         c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
-        send_msg(&mut c, &Msg::Submit { id: 2, class: 1, n: 1 });
+        send_msg(&mut c, &submit(2, 1, 1));
         match read_until(&mut c, |m| matches!(m, Msg::Response { .. })) {
             Msg::Response { id: 2, .. } => {}
             other => panic!("{other:?}"),
@@ -1008,7 +1131,7 @@ mod tests {
                 vec![2], 2, Duration::ZERO, 4);
         let mut c = TcpStream::connect(addr).unwrap();
         c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
-        send_msg(&mut c, &Msg::Submit { id: 7, class: 1, n: 5 });
+        send_msg(&mut c, &submit(7, 1, 5));
         match read_until(&mut c, |m| matches!(m, Msg::ErrorResp { .. })) {
             Msg::ErrorResp {
                 id: 7,
@@ -1037,7 +1160,7 @@ mod tests {
         send_msg(&mut c, &Msg::StatsReq { seq: 1 });
         read_until(&mut c, |m| matches!(m, Msg::Stats { .. }));
         // but a submit is a peer bug: rejected typed, connection lives
-        send_msg(&mut c, &Msg::Submit { id: 9, class: 1, n: 1 });
+        send_msg(&mut c, &submit(9, 1, 1));
         match read_until(&mut c, |m| matches!(m, Msg::ErrorResp { .. })) {
             Msg::ErrorResp { id: 9, err: ServeError::Protocol { .. } } => {}
             other => panic!("{other:?}"),
@@ -1057,7 +1180,7 @@ mod tests {
         let (node, addr) = mock_node(vec![2], il, Duration::ZERO);
         let mut c = TcpStream::connect(addr).unwrap();
         c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
-        send_msg(&mut c, &Msg::Submit { id: 3, class: 7, n: 2 });
+        send_msg(&mut c, &submit(3, 7, 2));
         match read_until(&mut c, |m| matches!(m, Msg::Response { .. })) {
             Msg::Response { id: 3, images, .. } => {
                 assert_eq!(images.len(), 2 * il);
@@ -1087,7 +1210,7 @@ mod tests {
         // the node accepts and serves new connections afterwards
         let mut c2 = TcpStream::connect(addr).unwrap();
         c2.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
-        send_msg(&mut c2, &Msg::Submit { id: 1, class: 2, n: 1 });
+        send_msg(&mut c2, &submit(1, 2, 1));
         match read_until(&mut c2, |m| matches!(m, Msg::Response { .. })) {
             Msg::Response { id: 1, images, .. } => {
                 assert_eq!(images, vec![2.0, 2.0]);
@@ -1114,7 +1237,7 @@ mod tests {
         let mut c = TcpStream::connect(addr).unwrap();
         c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
 
-        send_msg(&mut c, &Msg::Submit { id: 42, class: 5, n: 2 });
+        send_msg(&mut c, &submit(42, 5, 2));
         send_msg(&mut c, &Msg::Ping { seq: 9 });
         match read_until(&mut c, |m| matches!(m, Msg::Pong { .. })) {
             Msg::Pong { seq: 9, .. } => {}
@@ -1157,7 +1280,7 @@ mod tests {
             Msg::HelloAck { wire } => assert_eq!(wire, WIRE_BINARY),
             other => panic!("expected hello ack, got {other:?}"),
         }
-        send_msg(&mut c, &Msg::Submit { id: 5, class: 3, n: 2 });
+        send_msg(&mut c, &submit(5, 3, 2));
         // the response payload must really be binary (marker byte),
         // not merely decodable
         let payload = loop {
@@ -1197,7 +1320,7 @@ mod tests {
             max_wire: WIRE_VERSION,
         });
         // a submit on the control plane is a peer bug, typed
-        send_msg(&mut ctl, &Msg::Submit { id: 9, class: 1, n: 1 });
+        send_msg(&mut ctl, &submit(9, 1, 1));
         match read_until(&mut ctl,
                          |m| matches!(m, Msg::ErrorResp { .. })) {
             Msg::ErrorResp {
@@ -1210,7 +1333,7 @@ mod tests {
         let mut data = TcpStream::connect(addr).unwrap();
         data.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
         for id in 0..2u64 {
-            send_msg(&mut data, &Msg::Submit { id, class: 4, n: 2 });
+            send_msg(&mut data, &submit(id, 4, 2));
             read_until(&mut data,
                        |m| matches!(m, Msg::Response { .. }));
         }
@@ -1251,7 +1374,7 @@ mod tests {
             mock_node_opts(vec![2], il, Duration::ZERO, reactor_opts());
         let mut c = TcpStream::connect(addr).unwrap();
         c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
-        send_msg(&mut c, &Msg::Submit { id: 3, class: 7, n: 2 });
+        send_msg(&mut c, &submit(3, 7, 2));
         match read_until(&mut c, |m| matches!(m, Msg::Response { .. }))
         {
             Msg::Response { id: 3, images, .. } => {
@@ -1262,6 +1385,114 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+        node.shutdown();
+    }
+
+    #[test]
+    fn reactor_node_ships_spans_home_on_a_trace_wire() {
+        trace::set_enabled(true);
+        let (node, addr) =
+            mock_node_opts(vec![4], 2, Duration::ZERO, reactor_opts());
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        send_msg(&mut c, &Msg::Hello {
+            role: Role::Data,
+            max_wire: WIRE_TRACE,
+        });
+        match read_msg(&mut c) {
+            Msg::HelloAck { wire } => assert_eq!(wire, WIRE_TRACE),
+            other => panic!("expected hello ack, got {other:?}"),
+        }
+        // the ids a frontend would mint: its trace + dispatch span
+        let ctx = TraceCtx {
+            trace: trace::next_id(),
+            span: trace::next_id(),
+        };
+        send_msg(&mut c,
+                 &Msg::Submit { id: 6, class: 2, n: 1, trace: ctx });
+        match read_until(&mut c, |m| matches!(m, Msg::Response { .. }))
+        {
+            Msg::Response { id: 6, images, spans, .. } => {
+                assert_eq!(images, vec![2.0, 2.0]);
+                // a traced response stays JSON and carries the node's
+                // spans for exactly this trace, rooted under the
+                // frontend's dispatch span
+                assert!(!spans.is_empty(), "no spans came home");
+                assert!(spans.iter().all(|s| s.trace == ctx.trace));
+                let root = spans
+                    .iter()
+                    .find(|s| s.parent == ctx.span)
+                    .expect("request root under the dispatch span");
+                assert_eq!(root.kind,
+                           crate::obs::trace::SpanKind::Request);
+            }
+            other => panic!("{other:?}"),
+        }
+        node.shutdown();
+    }
+
+    #[test]
+    fn trace_ids_degrade_gracefully_below_the_trace_wire() {
+        trace::set_enabled(true);
+        let (node, addr) =
+            mock_node_opts(vec![4], 2, Duration::ZERO, reactor_opts());
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        // no Hello: the connection stays at the baseline wire, so the
+        // trace ids in the submit must be ignored, not half-honored
+        let ctx = TraceCtx {
+            trace: trace::next_id(),
+            span: trace::next_id(),
+        };
+        send_msg(&mut c,
+                 &Msg::Submit { id: 4, class: 3, n: 1, trace: ctx });
+        match read_until(&mut c, |m| matches!(m, Msg::Response { .. }))
+        {
+            Msg::Response { id: 4, images, spans, .. } => {
+                assert_eq!(images, vec![3.0, 3.0]);
+                assert!(spans.is_empty(), "spans on a baseline wire");
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(trace::spans_for_trace(ctx.trace).is_empty(),
+                "a baseline-wire submit must not record server spans");
+        node.shutdown();
+    }
+
+    #[test]
+    fn reactor_node_serves_prometheus_metrics_over_raw_http() {
+        use std::io::{Read as _, Write as _};
+        let mut opts = reactor_opts();
+        opts.metrics_addr = Some("127.0.0.1:0".parse().unwrap());
+        let (node, addr) =
+            mock_node_opts(vec![4], 2, Duration::ZERO, opts);
+        let maddr =
+            node.metrics_addr().expect("metrics listener bound");
+        // drive traffic so the scrape shows live counters
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        for id in 0..3u64 {
+            send_msg(&mut c, &submit(id, 2, 2));
+            read_until(&mut c, |m| matches!(m, Msg::Response { .. }));
+        }
+        let mut h = TcpStream::connect(maddr).unwrap();
+        h.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        h.write_all(b"GET /metrics HTTP/1.1\r\nHost: t\r\n\r\n")
+            .unwrap();
+        let mut text = String::new();
+        h.read_to_string(&mut text).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        let body = text.split("\r\n\r\n").nth(1).unwrap_or("");
+        let series = metrics::parse_exposition(body);
+        assert_eq!(series.get("tqdit_requests_total"), Some(&3.0));
+        assert_eq!(series.get("tqdit_images_total"), Some(&6.0));
+        assert_eq!(
+            series.get("tqdit_request_latency_seconds_count"),
+            Some(&3.0)
+        );
+        // the scrape did not disturb the data plane
+        send_msg(&mut c, &submit(9, 1, 1));
+        read_until(&mut c, |m| matches!(m, Msg::Response { .. }));
         node.shutdown();
     }
 
@@ -1280,7 +1511,7 @@ mod tests {
         }
         let mut c2 = TcpStream::connect(addr).unwrap();
         c2.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
-        send_msg(&mut c2, &Msg::Submit { id: 1, class: 2, n: 1 });
+        send_msg(&mut c2, &submit(1, 2, 1));
         match read_until(&mut c2,
                          |m| matches!(m, Msg::Response { .. })) {
             Msg::Response { id: 1, images, .. } => {

@@ -65,6 +65,8 @@
 
 use anyhow::{bail, Context, Result};
 
+use crate::obs::hist::LatencyHist;
+use crate::obs::trace::{SpanRec, TraceCtx};
 use crate::serve::error::ServeError;
 use crate::serve::net::wire;
 use crate::serve::net::wire::WIRE_VERSION;
@@ -75,6 +77,16 @@ use crate::util::json::Json;
 /// per connection via `Hello::max_wire` + `HelloAck`; the frame-header
 /// version stays [`WIRE_VERSION`] regardless.
 pub const WIRE_BINARY: u16 = 3;
+
+/// Wire feature level that unlocks trace propagation: `Submit` may
+/// carry a trace context (`tr`/`sp` hex ids) and `Response` may carry
+/// the node's spans for that trace. Implies [`WIRE_BINARY`]. A peer
+/// pinned below this level simply never sees the fields — the request
+/// still serves, it just contributes no node-side spans (graceful
+/// version-skew degradation); decoding is tolerant at *every* level,
+/// so a mid-negotiation message with trace fields never kills a
+/// connection.
+pub const WIRE_TRACE: u16 = 4;
 
 /// Marker byte opening every binary payload (JSON starts with `{`).
 const BIN_MARKER: u8 = 0x00;
@@ -125,12 +137,24 @@ pub enum Msg {
     /// the baseline, so baseline peers never see it.
     HelloAck { wire: u16 },
     /// Frontend → node: run `n` images of `class`; the node answers
-    /// with a `Response`/`ErrorResp` echoing `id`.
-    Submit { id: u64, class: i32, n: usize },
+    /// with a `Response`/`ErrorResp` echoing `id`. `trace` carries the
+    /// frontend's trace id plus its dispatch span for this request
+    /// ([`TraceCtx::NONE`] — nothing on the wire — when untraced or
+    /// below [`WIRE_TRACE`]).
+    Submit { id: u64, class: i32, n: usize, trace: TraceCtx },
     /// Node → frontend: the completed request (flat pixels, node-side
     /// queue+compute latency). JSON at the baseline level, raw binary
-    /// (see module docs) once [`WIRE_BINARY`] is negotiated.
-    Response { id: u64, latency_s: f64, images: Vec<f32> },
+    /// (see module docs) once [`WIRE_BINARY`] is negotiated — except a
+    /// traced response (`spans` non-empty, the node's spans for the
+    /// request's trace, re-based by the ingesting frontend), which
+    /// stays JSON at every level so the span list has somewhere to
+    /// ride.
+    Response {
+        id: u64,
+        latency_s: f64,
+        images: Vec<f32>,
+        spans: Vec<SpanRec>,
+    },
     /// Node → frontend: the request failed with a typed error.
     ErrorResp { id: u64, err: ServeError },
     /// Node → frontend: connection-level typed refusal — no request id
@@ -189,8 +213,8 @@ impl Msg {
     /// at the baseline) stays canonical JSON.
     pub fn encode_at(&self, wire: u16) -> Vec<u8> {
         match self {
-            Msg::Response { id, latency_s, images }
-                if wire >= WIRE_BINARY =>
+            Msg::Response { id, latency_s, images, spans }
+                if wire >= WIRE_BINARY && spans.is_empty() =>
             {
                 encode_response_binary(*id, *latency_s, images)
             }
@@ -228,13 +252,20 @@ impl Msg {
                 m.insert("type".into(), Json::Str("hello_ack".into()));
                 m.insert("wire".into(), Json::Num(*wire as f64));
             }
-            Msg::Submit { id, class, n } => {
+            Msg::Submit { id, class, n, trace } => {
                 m.insert("type".into(), Json::Str("submit".into()));
                 m.insert("id".into(), Json::Num(*id as f64));
                 m.insert("class".into(), Json::Num(*class as f64));
                 m.insert("n".into(), Json::Num(*n as f64));
+                // untraced submits stay byte-identical to the old wire
+                if trace.is_active() {
+                    m.insert("tr".into(),
+                             Json::Str(format!("{:016x}", trace.trace)));
+                    m.insert("sp".into(),
+                             Json::Str(format!("{:016x}", trace.span)));
+                }
             }
-            Msg::Response { id, latency_s, images } => {
+            Msg::Response { id, latency_s, images, spans } => {
                 m.insert("type".into(), Json::Str("response".into()));
                 m.insert("id".into(), Json::Num(*id as f64));
                 m.insert("latency_s".into(), Json::Num(*latency_s));
@@ -245,6 +276,15 @@ impl Msg {
                         .map(|&p| Json::Num(p as f64))
                         .collect()),
                 );
+                if !spans.is_empty() {
+                    m.insert(
+                        "spans".into(),
+                        Json::Arr(spans
+                            .iter()
+                            .map(SpanRec::to_json)
+                            .collect()),
+                    );
+                }
             }
             Msg::ErrorResp { id, err } => {
                 m.insert("type".into(), Json::Str("error".into()));
@@ -317,6 +357,9 @@ impl Msg {
                     .try_into()
                     .context("submit `class` out of i32 range")?,
                 n: count_field(j, "n")? as usize,
+                // optional, tolerant: a malformed context degrades to
+                // untraced rather than failing the request
+                trace: trace_ctx_from_json(j),
             }),
             "response" => {
                 let arr = j
@@ -334,10 +377,22 @@ impl Msg {
                     }
                     images.push(x as f32);
                 }
+                // optional span list; entries this build can't parse
+                // are skipped (forward-compatible), never fatal
+                let spans = j
+                    .get("spans")
+                    .and_then(Json::as_arr)
+                    .map(|arr| {
+                        arr.iter()
+                            .filter_map(SpanRec::from_json)
+                            .collect()
+                    })
+                    .unwrap_or_default();
                 Ok(Msg::Response {
                     id: count_field(j, "id")?,
                     latency_s: num_field(j, "latency_s")?,
                     images,
+                    spans,
                 })
             }
             "error" => Ok(Msg::ErrorResp {
@@ -438,7 +493,22 @@ fn decode_binary(bytes: &[u8]) -> Result<Msg> {
         .chunks_exact(4)
         .map(wire::le_f32)
         .collect();
-    Ok(Msg::Response { id, latency_s, images })
+    Ok(Msg::Response { id, latency_s, images, spans: Vec::new() })
+}
+
+/// Optional trace context on a message (`tr`/`sp` hex id strings);
+/// absent or malformed fields mean "untraced" — version skew and
+/// garbage degrade service observability, never service itself.
+fn trace_ctx_from_json(j: &Json) -> TraceCtx {
+    let hex = |key: &str| -> Option<u64> {
+        u64::from_str_radix(j.get(key)?.as_str()?, 16).ok()
+    };
+    match (hex("tr"), hex("sp")) {
+        (Some(trace), Some(span)) if trace != 0 => {
+            TraceCtx { trace, span }
+        }
+        _ => TraceCtx::NONE,
+    }
 }
 
 // -- field accessors (typed errors naming the key) -----------------------
@@ -673,6 +743,8 @@ pub fn stats_to_json(s: &ServerStats) -> Json {
             "workers",
             Json::Arr(s.workers.iter().map(worker_to_json).collect()),
         ),
+        // sparse histogram; old decoders ignore the unknown key
+        ("latency", s.latency.to_json()),
     ])
 }
 
@@ -720,6 +792,12 @@ pub fn stats_from_json(j: &Json) -> Result<ServerStats> {
         uploads_saved: count_field(j, "uploads_saved")?,
         rungs,
         workers,
+        // absent on old wires → empty histogram (absorb then falls
+        // back to the conservative max-of-percentiles bound)
+        latency: j
+            .get("latency")
+            .map(LatencyHist::from_json)
+            .unwrap_or_default(),
     })
 }
 
@@ -761,6 +839,15 @@ mod tests {
             uploads_saved: g.usize_in(0, 2000) as u64,
             rungs: Vec::new(),
             workers: Vec::new(),
+            latency: {
+                let mut h = LatencyHist::new();
+                for _ in 0..g.usize_in(0, 20) {
+                    // strictly positive: 0.0 is legal to record but
+                    // its min does not survive the sparse wire form
+                    h.record(g.f32_in(1e-4, 5.0) as f64);
+                }
+                h
+            },
         };
         for i in 0..g.usize_in(0, 4) {
             s.rungs.push(RungStats {
@@ -846,6 +933,14 @@ mod tests {
                     id: g.usize_in(0, 1 << 30) as u64,
                     class: g.usize_in(0, 2000) as i32 - 1000,
                     n: g.usize_in(0, 64),
+                    trace: if g.bool() {
+                        TraceCtx {
+                            trace: g.usize_in(1, 1 << 30) as u64,
+                            span: g.usize_in(0, 1 << 30) as u64,
+                        }
+                    } else {
+                        TraceCtx::NONE
+                    },
                 },
                 1 => {
                     let n = g.usize_in(0, 48);
@@ -854,6 +949,18 @@ mod tests {
                         latency_s: g.f32_in(0.0, 10.0) as f64,
                         // f32 pixels must survive the wire bit-for-bit
                         images: g.vec_normal(n),
+                        spans: (0..g.usize_in(0, 3))
+                            .map(|i| SpanRec {
+                                trace: g.usize_in(1, 1 << 30) as u64,
+                                span: i as u64 + 1,
+                                parent: g.usize_in(0, 9) as u64,
+                                kind: crate::obs::trace::SpanKind::Queue,
+                                start_ns: g.usize_in(0, 1 << 30) as u64,
+                                dur_ns: g.usize_in(0, 1 << 20) as u64,
+                                a: g.usize_in(0, 9) as u64,
+                                b: g.usize_in(0, 9) as u64,
+                            })
+                            .collect(),
                     }
                 }
                 2 => Msg::ErrorResp {
@@ -887,7 +994,12 @@ mod tests {
     #[test]
     fn pixels_survive_the_wire_bit_for_bit() {
         let images = vec![0.1f32, -17.125, f32::MIN_POSITIVE, 0.0, 255.0];
-        let msg = Msg::Response { id: 7, latency_s: 0.25, images: images.clone() };
+        let msg = Msg::Response {
+            id: 7,
+            latency_s: 0.25,
+            images: images.clone(),
+            spans: Vec::new(),
+        };
         match roundtrip(&msg) {
             Msg::Response { images: back, .. } => {
                 for (a, b) in images.iter().zip(&back) {
@@ -905,6 +1017,7 @@ mod tests {
             id: u64::MAX - 3,
             latency_s: 0.25,
             images: images.clone(),
+            spans: Vec::new(),
         };
         let bytes = msg.encode_at(WIRE_BINARY);
         assert_eq!(bytes[0], 0x00, "binary marker");
@@ -923,8 +1036,12 @@ mod tests {
 
     #[test]
     fn encode_at_baseline_stays_json() {
-        let msg =
-            Msg::Response { id: 1, latency_s: 0.1, images: vec![1.0] };
+        let msg = Msg::Response {
+            id: 1,
+            latency_s: 0.1,
+            images: vec![1.0],
+            spans: Vec::new(),
+        };
         let bytes = msg.encode_at(WIRE_VERSION);
         assert_eq!(bytes, msg.encode(), "baseline must emit JSON");
         assert_eq!(bytes[0], b'{');
@@ -939,6 +1056,7 @@ mod tests {
             id: 3,
             latency_s: 0.5,
             images: vec![1.0, 2.0],
+            spans: Vec::new(),
         }
         .encode_at(WIRE_BINARY);
         // short header
@@ -1041,9 +1159,103 @@ mod tests {
     fn submit_class_may_be_negative() {
         // padding uses class 0, but the protocol must not mangle
         // negative conditioning labels
-        match roundtrip(&Msg::Submit { id: 1, class: -3, n: 2 }) {
+        let msg = Msg::Submit {
+            id: 1,
+            class: -3,
+            n: 2,
+            trace: TraceCtx::NONE,
+        };
+        match roundtrip(&msg) {
             Msg::Submit { class: -3, .. } => {}
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn untraced_submit_is_byte_identical_to_old_wire() {
+        // trace fields ride only on traced submits: a NONE context
+        // must produce exactly the pre-WIRE_TRACE encoding so old
+        // nodes with strict field expectations see nothing new
+        let msg = Msg::Submit {
+            id: 3,
+            class: 7,
+            n: 2,
+            trace: TraceCtx::NONE,
+        };
+        assert_eq!(
+            msg.encode(),
+            br#"{"class":7,"id":3,"n":2,"type":"submit"}"#
+        );
+        // and an old-wire submit (no trace fields) decodes as untraced
+        match Msg::decode(br#"{"class":7,"id":3,"n":2,"type":"submit"}"#)
+            .unwrap()
+        {
+            Msg::Submit { trace, .. } => assert_eq!(trace, TraceCtx::NONE),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn traced_submit_carries_full_64_bit_ids() {
+        let trace = TraceCtx { trace: u64::MAX - 5, span: 1 << 60 };
+        let msg = Msg::Submit { id: 9, class: 0, n: 1, trace };
+        match roundtrip(&msg) {
+            Msg::Submit { trace: back, .. } => assert_eq!(back, trace),
+            other => panic!("{other:?}"),
+        }
+        // a malformed context degrades to untraced, never an error
+        let garbled =
+            br#"{"class":0,"id":9,"n":1,"sp":"zz","tr":"3","type":"submit"}"#;
+        match Msg::decode(garbled).unwrap() {
+            Msg::Submit { trace, .. } => assert_eq!(trace, TraceCtx::NONE),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn traced_response_stays_json_even_on_a_binary_wire() {
+        let spans = vec![SpanRec {
+            trace: 5,
+            span: 6,
+            parent: 7,
+            kind: crate::obs::trace::SpanKind::Generate,
+            start_ns: 100,
+            dur_ns: 50,
+            a: 4,
+            b: 2,
+        }];
+        let msg = Msg::Response {
+            id: 1,
+            latency_s: 0.1,
+            images: vec![1.0, 2.0],
+            spans: spans.clone(),
+        };
+        let bytes = msg.encode_at(WIRE_BINARY);
+        assert_eq!(bytes[0], b'{', "span-carrying response must be JSON");
+        match Msg::decode(&bytes).unwrap() {
+            Msg::Response { spans: back, .. } => assert_eq!(back, spans),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn stats_histogram_survives_the_wire() {
+        let mut s = ServerStats::default();
+        for v in [0.01, 0.02, 0.02, 1.5] {
+            s.latency.record(v);
+        }
+        s.latency_p50_s = s.latency.quantile(0.50);
+        s.latency_p95_s = s.latency.quantile(0.95);
+        let back = stats_from_json(&stats_to_json(&s)).unwrap();
+        assert_eq!(back, s);
+        // an old-wire stats payload (no `latency` key) parses to an
+        // empty histogram rather than failing
+        let mut m = match stats_to_json(&ServerStats::default()) {
+            Json::Obj(m) => m,
+            other => panic!("{other:?}"),
+        };
+        m.remove("latency");
+        let old = stats_from_json(&Json::Obj(m)).unwrap();
+        assert_eq!(old.latency.count(), 0);
     }
 }

@@ -227,6 +227,19 @@ impl TimerWheel {
 /// than to somebody else's connection).
 pub type Token = u64;
 
+/// How a connection's byte stream is interpreted. `Framed` runs the
+/// length-prefixed wire protocol through the incremental
+/// `FrameDecoder`; `Raw` hands read chunks straight to
+/// [`Driver::on_raw`] and writes queued via [`Ctl::send_raw`] go out
+/// without frame headers — the class a plain-HTTP `/metrics` listener
+/// uses. Decided per *listener* ([`Driver::conn_class`]) at accept;
+/// connections registered through [`Handle::register`] are framed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum ConnClass {
+    Framed,
+    Raw,
+}
+
 /// Per-connection write queue with two priorities. `ctrl` frames
 /// (standalone, small) drain before the next `bulk` frame; bulk
 /// messages are enqueued as their full chunk run at once, so chunks of
@@ -261,6 +274,7 @@ impl Outbox {
 
 struct Conn {
     stream: TcpStream,
+    class: ConnClass,
     decoder: FrameDecoder,
     outbox: Outbox,
     /// Total payload bytes read — the reactor-mode replacement for the
@@ -288,6 +302,12 @@ pub(crate) trait Driver: Send + 'static {
     fn accept_tag(&mut self, listener: Token, peer: SocketAddr)
                   -> Self::Tag;
 
+    /// Byte-stream class for connections accepted on `listener`
+    /// (default: every listener speaks the framed wire protocol).
+    fn conn_class(&mut self, _listener: Token) -> ConnClass {
+        ConnClass::Framed
+    }
+
     /// A connection entered the loop (accepted or registered).
     fn on_open(&mut self, ctl: &mut Ctl<'_>, token: Token,
                tag: Self::Tag);
@@ -295,6 +315,14 @@ pub(crate) trait Driver: Send + 'static {
     /// One complete wire message arrived on `token`.
     fn on_message(&mut self, ctl: &mut Ctl<'_>, token: Token,
                   payload: Vec<u8>);
+
+    /// A read chunk arrived on a [`ConnClass::Raw`] connection —
+    /// unframed bytes, delivered as they come off the socket. The
+    /// default drops them (a driver without raw listeners never sees
+    /// this).
+    fn on_raw(&mut self, _ctl: &mut Ctl<'_>, _token: Token,
+              _chunk: &[u8]) {
+    }
 
     /// `token` left the loop: peer close, wire error, write stall, or
     /// outbox overflow. Not called for closes the driver itself
@@ -345,6 +373,14 @@ impl Ctl<'_> {
     pub fn send_ctrl(&mut self, token: Token, payload: &[u8])
                      -> Result<(), WireError> {
         enqueue(self.conns, self.opts, token, payload, true)
+    }
+
+    /// Queue bytes verbatim — no frame header — on `token`'s bulk
+    /// lane: the write path for [`ConnClass::Raw`] connections (e.g.
+    /// an HTTP response). Same overflow discipline as [`Ctl::send`].
+    pub fn send_raw(&mut self, token: Token, payload: &[u8])
+                    -> Result<(), WireError> {
+        enqueue_raw(self.conns, self.opts, token, payload)
     }
 
     /// Drop `token` now; queued output is discarded. No `on_close`.
@@ -413,6 +449,33 @@ fn enqueue(conns: &mut HashMap<Token, Conn>, opts: &ReactorOpts,
             conn.outbox.bulk.push_back(f);
         }
     }
+    Ok(())
+}
+
+/// [`Ctl::send_raw`]'s enqueue: the payload goes out byte-for-byte,
+/// so it rides the bulk lane whole (raw peers have no framing to
+/// interleave around).
+fn enqueue_raw(conns: &mut HashMap<Token, Conn>, opts: &ReactorOpts,
+               token: Token, payload: &[u8])
+               -> Result<(), WireError> {
+    let conn = match conns.get_mut(&token) {
+        Some(c) => c,
+        None => return Err(WireError::Closed),
+    };
+    if conn.outbox.bytes + payload.len() > opts.max_outbox {
+        conns.remove(&token);
+        return Err(WireError::Io(format!(
+            "outbox overflow ({} bytes over the {} cap): \
+             slow consumer dropped",
+            payload.len(),
+            opts.max_outbox
+        )));
+    }
+    if conn.outbox.is_empty() {
+        conn.write_progress = Instant::now();
+    }
+    conn.outbox.bytes += payload.len();
+    conn.outbox.bulk.push_back(payload.to_vec());
     Ok(())
 }
 
@@ -607,7 +670,10 @@ fn run_loop<D: Driver>(mut driver: D,
                     }
                     let token = next_token;
                     next_token += 1;
-                    conns.insert(token, new_conn(stream));
+                    conns.insert(
+                        token,
+                        new_conn(stream, ConnClass::Framed),
+                    );
                     driver.on_open(&mut ctl!(), token, tag);
                 }
                 Cmd::Send { token, payload, ctrl } => {
@@ -821,10 +887,11 @@ fn run_loop<D: Driver>(mut driver: D,
     }
 }
 
-fn new_conn(stream: TcpStream) -> Conn {
+fn new_conn(stream: TcpStream, class: ConnClass) -> Conn {
     let _ = stream.set_nodelay(true);
     Conn {
         stream,
+        class,
         decoder: FrameDecoder::new(),
         outbox: Outbox::default(),
         bytes_in: 0,
@@ -851,7 +918,8 @@ fn accept_ready<D: Driver>(ltoken: Token, listener: &TcpListener,
                 }
                 let token = *next_token;
                 *next_token += 1;
-                conns.insert(token, new_conn(stream));
+                let class = driver.conn_class(ltoken);
+                conns.insert(token, new_conn(stream, class));
                 let tag = driver.accept_tag(ltoken, peer);
                 let mut ctl = Ctl {
                     conns,
@@ -880,10 +948,15 @@ fn read_ready<D: Driver>(token: Token,
                          scratch: &mut [u8], driver: &mut D,
                          timers: &mut TimerWheel, opts: &ReactorOpts,
                          stopping: &mut bool) {
-    // pull everything available, decode complete messages, then
+    // pull everything available, decode complete messages (or, on a
+    // raw-class connection, collect the chunks as they are), then
     // dispatch — dispatching after the borrow ends lets the driver
     // write back to this very connection
     let mut msgs: Vec<Vec<u8>> = Vec::new();
+    let raw = match conns.get(&token) {
+        Some(c) => c.class == ConnClass::Raw,
+        None => return,
+    };
     let mut close: Option<WireError> = None;
     {
         let conn = match conns.get_mut(&token) {
@@ -893,11 +966,19 @@ fn read_ready<D: Driver>(token: Token,
         'read: loop {
             match conn.stream.read(scratch) {
                 Ok(0) => {
-                    close = Some(conn.decoder.close_error());
+                    close = Some(if raw {
+                        WireError::Closed
+                    } else {
+                        conn.decoder.close_error()
+                    });
                     break;
                 }
                 Ok(n) => {
                     conn.bytes_in += n as u64;
+                    if raw {
+                        msgs.push(scratch[..n].to_vec());
+                        continue;
+                    }
                     conn.decoder.push(&scratch[..n]);
                     loop {
                         match conn.decoder.next() {
@@ -937,7 +1018,11 @@ fn read_ready<D: Driver>(token: Token,
             now: Instant::now(),
             stopping,
         };
-        driver.on_message(&mut ctl, token, m);
+        if raw {
+            driver.on_raw(&mut ctl, token, &m);
+        } else {
+            driver.on_message(&mut ctl, token, m);
+        }
         if *stopping {
             return;
         }
@@ -1308,6 +1393,75 @@ mod tests {
         drop(a);
         c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
         assert_eq!(read_frame(&mut c).unwrap(), b"c");
+        h.stop();
+        r.join();
+    }
+
+    /// Echoes framed messages framed and raw chunks raw; classifies
+    /// connections by their listener.
+    struct MixedEcho {
+        raw_listener: Token,
+    }
+
+    impl Driver for MixedEcho {
+        type Tag = ();
+        fn accept_tag(&mut self, _l: Token, _p: SocketAddr) {}
+        fn conn_class(&mut self, listener: Token) -> ConnClass {
+            if listener == self.raw_listener {
+                ConnClass::Raw
+            } else {
+                ConnClass::Framed
+            }
+        }
+        fn on_open(&mut self, _ctl: &mut Ctl<'_>, _t: Token,
+                   _tag: ()) {
+        }
+        fn on_message(&mut self, ctl: &mut Ctl<'_>, token: Token,
+                      payload: Vec<u8>) {
+            let _ = ctl.send(token, &payload);
+        }
+        fn on_raw(&mut self, ctl: &mut Ctl<'_>, token: Token,
+                  chunk: &[u8]) {
+            let _ = ctl.send_raw(token, chunk);
+        }
+        fn on_close(&mut self, _ctl: &mut Ctl<'_>, _t: Token,
+                    _c: WireError) {
+        }
+        fn on_timer(&mut self, _ctl: &mut Ctl<'_>, _k: u64) {}
+    }
+
+    #[test]
+    fn raw_and_framed_classes_coexist_on_one_reactor() {
+        let lf = TcpListener::bind("127.0.0.1:0").unwrap();
+        let lr = TcpListener::bind("127.0.0.1:0").unwrap();
+        let fa = lf.local_addr().unwrap();
+        let ra = lr.local_addr().unwrap();
+        let (r, h, ltokens) = Reactor::spawn(
+            MixedEcho { raw_listener: 2 },
+            vec![lf, lr],
+            ReactorOpts::default(),
+        )
+        .unwrap();
+        // the listener-token contract the node's metrics listener
+        // relies on: tokens are 1..=n in `listeners` order
+        assert_eq!(ltokens, vec![1, 2]);
+        // the framed listener still frames
+        let mut f = TcpStream::connect(fa).unwrap();
+        write_frame(&mut f, b"framed").unwrap();
+        assert_eq!(read_frame(&mut f).unwrap(), b"framed");
+        // raw bytes come back without headers
+        let mut c = TcpStream::connect(ra).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let want = b"GET /metrics HTTP/1.1\r\n\r\n";
+        c.write_all(want).unwrap();
+        let mut got = Vec::new();
+        let mut buf = [0u8; 256];
+        while got.len() < want.len() {
+            let n = c.read(&mut buf).unwrap();
+            assert!(n > 0, "eof before the raw echo completed");
+            got.extend_from_slice(&buf[..n]);
+        }
+        assert_eq!(&got[..], &want[..]);
         h.stop();
         r.join();
     }

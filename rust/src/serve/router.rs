@@ -36,10 +36,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::obs::hist::LatencyHist;
+use crate::obs::trace::{self, SpanKind, SpanRec, TraceCtx};
 use crate::serve::batcher::{Batcher, Slot};
 use crate::serve::error::ServeError;
 use crate::serve::policy::{BatchPlan, BatchPolicy, Ladder};
-use crate::util::bench::percentile;
 
 /// A client request: n images of one class.
 #[derive(Clone, Debug)]
@@ -154,9 +155,17 @@ pub struct ServerStats {
     /// Queue depth observed at each batch dispatch.
     pub queue_depth_avg: f64,
     pub queue_depth_max: usize,
-    /// Per-request latency percentiles (queue + compute).
+    /// Per-request latency percentiles (queue + compute), derived
+    /// from [`ServerStats::latency`] — kept as plain fields so
+    /// benches and reports read them without histogram math.
     pub latency_p50_s: f64,
     pub latency_p95_s: f64,
+    /// Full per-request latency distribution as a mergeable
+    /// log-linear histogram: [`ServerStats::absorb`] and the cluster
+    /// stats fold add these bucket-wise, so cross-shard percentiles
+    /// are computed over the *merged* distribution instead of the
+    /// old max-of-percentiles bound.
+    pub latency: LatencyHist,
     /// Persistent-calibration-cache outcome for this run (filled in by
     /// the serve layer; both zero when calibration never resolved).
     pub calib_cache_hits: u64,
@@ -265,12 +274,14 @@ impl ServerStats {
     /// Counters add, so the conservation invariant
     /// `enqueued == dispatched + purged + pending` survives the merge
     /// whenever it holds per input. Ratios (`batch_fill`,
-    /// `queue_depth_avg`) merge weighted by batch count; `wall_s` and
-    /// the latency percentiles take the max (services ran
-    /// concurrently, and a max percentile is the conservative bound —
-    /// the cluster overwrites these with its own end-to-end
-    /// measurements). Worker rows are re-numbered so rows from
-    /// different nodes never collide.
+    /// `queue_depth_avg`) merge weighted by batch count; `wall_s`
+    /// takes the max (services ran concurrently). Latency histograms
+    /// merge bucket-wise and the percentile fields are *recomputed*
+    /// from the merged distribution — only when both sides carry an
+    /// empty histogram (a stats report from a pre-histogram peer)
+    /// does the old max-of-percentiles conservative bound remain.
+    /// Worker rows are re-numbered so rows from different nodes never
+    /// collide.
     pub fn absorb(&mut self, o: &ServerStats) {
         let (b0, b1) = (self.batches as f64, o.batches as f64);
         if b0 + b1 > 0.0 {
@@ -288,8 +299,16 @@ impl ServerStats {
         self.dropped_responses += o.dropped_responses;
         self.wall_s = self.wall_s.max(o.wall_s);
         self.queue_depth_max = self.queue_depth_max.max(o.queue_depth_max);
-        self.latency_p50_s = self.latency_p50_s.max(o.latency_p50_s);
-        self.latency_p95_s = self.latency_p95_s.max(o.latency_p95_s);
+        self.latency.merge(&o.latency);
+        if self.latency.count() > 0 {
+            self.latency_p50_s = self.latency.quantile(0.50);
+            self.latency_p95_s = self.latency.quantile(0.95);
+        } else {
+            // neither side shipped a histogram (old-wire peer):
+            // max() stays the conservative cross-service bound
+            self.latency_p50_s = self.latency_p50_s.max(o.latency_p50_s);
+            self.latency_p95_s = self.latency_p95_s.max(o.latency_p95_s);
+        }
         self.calib_cache_hits += o.calib_cache_hits;
         self.calib_cache_misses += o.calib_cache_misses;
         self.calib_cold_start_ms =
@@ -406,25 +425,18 @@ struct PendingReq {
     images: Vec<f32>,
     remaining: usize,
     t0: Instant,
-}
-
-/// Completed-request latencies kept for shutdown percentiles — bounded
-/// so a long-lived server doesn't grow memory per request. The cluster
-/// dispatcher keeps its own ring at the same size.
-pub(crate) const LATENCY_WINDOW: usize = 65536;
-
-/// Record one completed-request latency in a bounded ring: grow until
-/// [`LATENCY_WINDOW`], then overwrite round-robin. Shared by the
-/// router and the cluster dispatcher so their window policies cannot
-/// drift apart.
-pub(crate) fn push_latency(window: &mut Vec<f64>, count: &mut u64,
-                           latency_s: f64) {
-    if window.len() < LATENCY_WINDOW {
-        window.push(latency_s);
-    } else {
-        window[(*count % LATENCY_WINDOW as u64) as usize] = latency_s;
-    }
-    *count += 1;
+    /// This request's trace context: `trace.span` is the request root
+    /// span every stage span parents under ([`TraceCtx::NONE`] when
+    /// untraced).
+    trace: TraceCtx,
+    /// Span the request root itself parents under — the frontend's
+    /// dispatch span when the request came over the wire, 0 locally.
+    parent_span: u64,
+    /// Submit time on the trace clock (0 when untraced).
+    t0_ns: u64,
+    /// The queue-wait span has been recorded (first dispatch of any
+    /// of this request's slots closes it).
+    queue_span_done: bool,
 }
 
 struct RouterState {
@@ -442,9 +454,9 @@ struct RouterState {
     failed_requests: u64,
     dropped_responses: u64,
     fill_sum: f64,
-    /// Ring of the most recent [`LATENCY_WINDOW`] request latencies.
-    latencies: Vec<f64>,
-    latency_count: u64,
+    /// Completed-request latency distribution (fixed-size buckets, so
+    /// a long-lived server's memory stays flat).
+    latency: LatencyHist,
     queue_depth_max: usize,
     depth_sum: f64,
     depth_samples: u64,
@@ -464,8 +476,7 @@ impl RouterState {
             failed_requests: 0,
             dropped_responses: 0,
             fill_sum: 0.0,
-            latencies: Vec::new(),
-            latency_count: 0,
+            latency: LatencyHist::new(),
             queue_depth_max: 0,
             depth_sum: 0.0,
             depth_samples: 0,
@@ -480,9 +491,21 @@ impl RouterState {
     fn deliver(&mut self, idx: usize, slots: &[Slot], imgs: &[f32],
                il: usize, rung: usize, busy_s: f64) {
         self.fill_sum += slots.len() as f64 / rung.max(1) as f64;
+        let batch_ctx =
+            slots.first().map(|s| s.trace).unwrap_or(TraceCtx::NONE);
+        let encode_start = if batch_ctx.is_active() {
+            trace::now_ns()
+        } else {
+            0
+        };
         // counted per delivered slot, not per batch: slots computed for
         // requests that already failed elsewhere are not images
         let mut delivered = 0u64;
+        // channel sends are deferred until every span of this batch
+        // (including Encode, below) is in the ring: a shard node
+        // snapshots `spans_for_trace` the moment the receiver wakes,
+        // and must not race the tail of this very function
+        let mut completed = Vec::new();
         for (i, s) in slots.iter().enumerate() {
             // a missing entry means the request already failed elsewhere
             let Some(p) = self.pending.get_mut(&s.req_id) else { continue };
@@ -508,17 +531,40 @@ impl RouterState {
                     continue;
                 };
                 let latency_s = done.t0.elapsed().as_secs_f64();
-                push_latency(&mut self.latencies,
-                             &mut self.latency_count, latency_s);
+                self.latency.record(latency_s);
+                if done.trace.is_active() {
+                    // close the request root span under the parent
+                    // the submitter supplied (the frontend's dispatch
+                    // span for a clustered request, 0 locally)
+                    trace::record(SpanRec {
+                        trace: done.trace.trace,
+                        span: done.trace.span,
+                        parent: done.parent_span,
+                        kind: SpanKind::Request,
+                        start_ns: done.t0_ns,
+                        dur_ns: trace::now_ns()
+                            .saturating_sub(done.t0_ns),
+                        a: 0,
+                        b: done.n as u64,
+                    });
+                }
                 let resp = GenResponse {
                     id: s.req_id,
                     images: done.images,
                     latency_s,
                 };
-                if done.tx.send(Ok(resp)).is_err() {
-                    // client hung up its receiver: drop cleanly
-                    self.dropped_responses += 1;
-                }
+                completed.push((done.tx, resp));
+            }
+        }
+        if batch_ctx.is_active() {
+            trace::record_span(batch_ctx, SpanKind::Encode,
+                               encode_start, trace::now_ns(),
+                               delivered, slots.len() as u64);
+        }
+        for (tx, resp) in completed {
+            if tx.send(Ok(resp)).is_err() {
+                // client hung up its receiver: drop cleanly
+                self.dropped_responses += 1;
             }
         }
         let padded = (rung - slots.len()) as u64;
@@ -563,6 +609,30 @@ impl RouterState {
         self.depth_samples += 1;
     }
 
+    /// Record one `Queue` span per traced request whose *first* slots
+    /// just left the batcher: submit → first dispatch, parented under
+    /// that request's root span. A request split across batches only
+    /// gets the span once (`queue_span_done`); later slots of the same
+    /// request waited on compute, not the queue.
+    fn note_dequeue_spans(&mut self, slots: &[Slot], now_ns: u64) {
+        let mut prev_req = None;
+        for s in slots {
+            if prev_req == Some(s.req_id) || !s.trace.is_active() {
+                continue;
+            }
+            prev_req = Some(s.req_id);
+            let Some(p) = self.pending.get_mut(&s.req_id) else {
+                continue;
+            };
+            if p.queue_span_done {
+                continue;
+            }
+            p.queue_span_done = true;
+            trace::record_span(p.trace, SpanKind::Queue, p.t0_ns,
+                               now_ns, p.n as u64, 0);
+        }
+    }
+
     /// Fail and remove every pending request with a clone of `err`.
     fn fail_all_pending(&mut self, err: &ServeError) {
         let stranded: Vec<PendingReq> =
@@ -583,15 +653,13 @@ impl RouterState {
     }
 
     /// Build a [`ServerStats`] view of the current state (shared by
-    /// the live snapshot and the post-drain shutdown path). Returns
-    /// the cloned latency window alongside stats with *zeroed*
-    /// percentiles: the remote stats protocol calls this on every
-    /// heartbeat, so the O(n log n) sort over up to
-    /// [`LATENCY_WINDOW`] samples runs in [`finish_stats`] *after*
-    /// the state lock is released — a snapshot must not stall
-    /// submits, deliveries or the inline pong path.
-    fn assemble_stats(&self, wall_s: f64) -> (ServerStats, Vec<f64>) {
-        let lat = self.latencies.clone();
+    /// the live snapshot and the post-drain shutdown path). The
+    /// remote stats protocol calls this on every heartbeat; the
+    /// quantile walk over the histogram's fixed bucket array is O(512)
+    /// regardless of traffic, so computing percentiles under the state
+    /// lock cannot stall submits, deliveries or the inline pong path
+    /// the way sorting an unbounded sample window would.
+    fn assemble_stats(&self, wall_s: f64) -> ServerStats {
         let batches: u64 = self.workers.iter().map(|w| w.batches).sum();
         let images: u64 = self.workers.iter().map(|w| w.images).sum();
         let padded: u64 =
@@ -632,8 +700,9 @@ impl RouterState {
                 0.0
             },
             queue_depth_max: self.queue_depth_max,
-            latency_p50_s: 0.0,
-            latency_p95_s: 0.0,
+            latency_p50_s: self.latency.quantile(0.50),
+            latency_p95_s: self.latency.quantile(0.95),
+            latency: self.latency.clone(),
             calib_cache_hits: 0,
             calib_cache_misses: 0,
             calib_cold_start_ms: 0.0,
@@ -649,20 +718,8 @@ impl RouterState {
             uploads_saved,
             rungs,
             workers: self.workers.clone(),
-        };
-        (stats, lat)
+        }
     }
-}
-
-/// Sort the latency window (outside any lock) and fill the
-/// percentiles; `total_cmp`, not `partial_cmp().unwrap()`, so one NaN
-/// sample (a clock anomaly) cannot panic the stats path.
-fn finish_stats(mut stats: ServerStats, mut lat: Vec<f64>)
-                -> ServerStats {
-    lat.sort_by(f64::total_cmp);
-    stats.latency_p50_s = percentile(&lat, 0.50);
-    stats.latency_p95_s = percentile(&lat, 0.95);
-    stats
 }
 
 struct Shared {
@@ -695,7 +752,7 @@ impl Shared {
             st.ready -= 1;
         }
         if let Some(cause) = init_err {
-            eprintln!("[serve] worker {idx} failed: {cause}");
+            crate::warn_log!("worker {idx} failed: {cause}");
             if st.first_error.is_none() {
                 st.first_error =
                     Some(ServeError::WorkerInitFailed { worker: idx, cause });
@@ -780,10 +837,29 @@ impl Router {
 
     /// Submit a request; returns (id, receiver yielding the response or
     /// a typed error). Rejects (instead of queuing forever) when the
-    /// service is shutting down, dead, or over its queue cap.
+    /// service is shutting down, dead, or over its queue cap. Mints a
+    /// fresh trace for the request (a no-op id when `--trace` is off).
     pub fn submit(&self, req: GenRequest)
                   -> std::result::Result<(u64, Receiver<GenResult>),
                                          ServeError> {
+        self.submit_traced(req, trace::mint())
+    }
+
+    /// [`Self::submit`] under an externally minted trace context:
+    /// `parent.trace` keys the request's spans and `parent.span` is
+    /// what its root `Request` span parents under (a shard node passes
+    /// the frontend's `Dispatch` span, stitching both hosts into one
+    /// timeline). The router pre-mints the root span id here so every
+    /// stage span recorded while the request is in flight can hang off
+    /// it; the root itself is recorded at completion in `deliver`.
+    pub fn submit_traced(&self, req: GenRequest, parent: TraceCtx)
+                         -> std::result::Result<(u64, Receiver<GenResult>),
+                                                ServeError> {
+        let ctx = if parent.is_active() {
+            TraceCtx { trace: parent.trace, span: trace::next_id() }
+        } else {
+            TraceCtx::NONE
+        };
         let mut st = self.shared.lock();
         if !st.open {
             return Err(ServeError::ShuttingDown);
@@ -825,8 +901,12 @@ impl Router {
             images: Vec::new(),
             remaining: req.n,
             t0: Instant::now(),
+            trace: ctx,
+            parent_span: parent.span,
+            t0_ns: if ctx.is_active() { trace::now_ns() } else { 0 },
+            queue_span_done: false,
         });
-        st.batcher.push_request(id, req.class, req.n);
+        st.batcher.push_request_traced(id, req.class, req.n, ctx);
         drop(st);
         self.shared.work_ready.notify_all();
         Ok((id, rx))
@@ -855,11 +935,9 @@ impl Router {
     /// `pending`). The remote stats protocol serves this without
     /// stopping the service.
     pub fn stats(&self) -> ServerStats {
-        let (stats, lat) = self
-            .shared
+        self.shared
             .lock()
-            .assemble_stats(self.t_start.elapsed().as_secs_f64());
-        finish_stats(stats, lat)
+            .assemble_stats(self.t_start.elapsed().as_secs_f64())
     }
 
     /// Stop accepting requests, drain the queue, join the workers and
@@ -879,10 +957,7 @@ impl Router {
         if !st.pending.is_empty() {
             st.fail_all_pending(&ServeError::ShuttingDown);
         }
-        let (stats, lat) =
-            st.assemble_stats(self.t_start.elapsed().as_secs_f64());
-        drop(st);
-        finish_stats(stats, lat)
+        st.assemble_stats(self.t_start.elapsed().as_secs_f64())
     }
 }
 
@@ -891,6 +966,11 @@ impl crate::serve::dispatch::Dispatch for Router {
               -> std::result::Result<(u64, Receiver<GenResult>),
                                      ServeError> {
         Router::submit(self, req)
+    }
+    fn submit_traced(&self, req: GenRequest, parent: TraceCtx)
+                     -> std::result::Result<(u64, Receiver<GenResult>),
+                                            ServeError> {
+        Router::submit_traced(self, req, parent)
     }
     fn queue_depth(&self) -> usize {
         Router::queue_depth(self)
@@ -949,8 +1029,12 @@ fn worker_loop(idx: usize, backend: &mut dyn GenBackend, shared: &Shared)
         st.workers[idx].ready = true;
     }
     loop {
-        let (slots, rung) = {
+        let (slots, rung, batch_ctx) = {
             let mut st = shared.lock();
+            // set at the first Wait so the dispatched batch can record
+            // how long it lingered for fill (only stamped when tracing
+            // is on — off, the whole path stays clock-call free)
+            let mut linger_from: Option<u64> = None;
             loop {
                 if st.batcher.is_empty() {
                     if !st.open {
@@ -972,9 +1056,29 @@ fn worker_loop(idx: usize, backend: &mut dyn GenBackend, shared: &Shared)
                                          !st.open) {
                     BatchPlan::Dispatch { rung, take } => {
                         st.note_depth();
-                        break (st.batcher.take(take), rung);
+                        let slots = st.batcher.take(take);
+                        let ctx = slots
+                            .first()
+                            .map(|s| s.trace)
+                            .unwrap_or(TraceCtx::NONE);
+                        if ctx.is_active() {
+                            let now = trace::now_ns();
+                            st.note_dequeue_spans(&slots, now);
+                            if let Some(from) = linger_from {
+                                trace::record_span(
+                                    ctx, SpanKind::Linger, from, now,
+                                    pending as u64, 0);
+                            }
+                            trace::record_span(
+                                ctx, SpanKind::RungPick, now, now,
+                                rung as u64, slots.len() as u64);
+                        }
+                        break (slots, rung, ctx);
                     }
                     BatchPlan::Wait { remaining } => {
+                        if linger_from.is_none() && trace::tracing_on() {
+                            linger_from = Some(trace::now_ns());
+                        }
                         // park until the linger deadline; new submits
                         // and shutdown notify the condvar to re-plan
                         // earlier
@@ -994,14 +1098,40 @@ fn worker_loop(idx: usize, backend: &mut dyn GenBackend, shared: &Shared)
         for (i, s) in slots.iter().enumerate() {
             labels[i] = s.class;
         }
+        // pre-mint the Generate span's id and publish it as the
+        // thread's current context, so the sampler's per-group step
+        // spans (recorded *during* the call) parent under it; the span
+        // itself is recorded once the duration is known
+        let gen_ctx = if batch_ctx.is_active() {
+            TraceCtx { trace: batch_ctx.trace, span: trace::next_id() }
+        } else {
+            TraceCtx::NONE
+        };
+        let gen_start =
+            if gen_ctx.is_active() { trace::now_ns() } else { 0 };
         let t0 = Instant::now();
         // a panicking backend fails its batch like an `Err` (then the
         // panic resumes and the worker is recorded dead) — the clients
         // in this batch must never be stranded
-        let result = std::panic::catch_unwind(
-            std::panic::AssertUnwindSafe(|| backend.generate(&labels)),
-        );
+        let result = {
+            let _cur = trace::CurrentGuard::enter(gen_ctx);
+            std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(|| backend.generate(&labels)),
+            )
+        };
         let busy_s = t0.elapsed().as_secs_f64();
+        if gen_ctx.is_active() {
+            trace::record(SpanRec {
+                trace: gen_ctx.trace,
+                span: gen_ctx.span,
+                parent: batch_ctx.span,
+                kind: SpanKind::Generate,
+                start_ns: gen_start,
+                dur_ns: trace::now_ns().saturating_sub(gen_start),
+                a: rung as u64,
+                b: slots.len() as u64,
+            });
+        }
 
         let mut st = shared.lock();
         match result {
@@ -1717,5 +1847,126 @@ mod tests {
         assert_eq!(stats.batches, 0);
         assert_eq!(stats.batch_fill, 0.0);
         assert_eq!(stats.latency_p50_s, 0.0);
+    }
+
+    #[test]
+    fn shutdown_stats_carry_the_latency_histogram() {
+        let router = mock_router(1, 2, 3);
+        let (_, rx) = router.submit(GenRequest { class: 1, n: 2 }).unwrap();
+        rx.recv().unwrap().unwrap();
+        let stats = router.shutdown();
+        assert_eq!(stats.latency.count(), 1);
+        assert!(stats.latency_p95_s >= stats.latency_p50_s);
+        assert!(stats.latency_p95_s <= stats.latency.max_s() + 1e-12);
+    }
+
+    #[test]
+    fn absorb_recomputes_percentiles_from_merged_histograms() {
+        // shard A: 90 fast requests; shard B: 10 slow ones. The old
+        // fold took max() per percentile, reporting A∪B's p50 as 1s;
+        // the merged-distribution fold keeps p50 fast and lets p95
+        // see the tail.
+        let mut a = ServerStats::default();
+        for _ in 0..90 {
+            a.latency.record(0.010);
+        }
+        a.latency_p50_s = a.latency.quantile(0.50);
+        a.latency_p95_s = a.latency.quantile(0.95);
+        let mut b = ServerStats::default();
+        for _ in 0..10 {
+            b.latency.record(1.0);
+        }
+        b.latency_p50_s = b.latency.quantile(0.50);
+        b.latency_p95_s = b.latency.quantile(0.95);
+        a.absorb(&b);
+        assert_eq!(a.latency.count(), 100);
+        assert!(a.latency_p50_s < 0.02,
+                "merged p50 {} should track the fast mode",
+                a.latency_p50_s);
+        assert!((a.latency_p95_s - 1.0).abs() < 0.06,
+                "merged p95 {} should see the slow tail",
+                a.latency_p95_s);
+    }
+
+    #[test]
+    fn absorb_keeps_max_bound_for_histogramless_peers() {
+        // a stats report from a pre-histogram wire peer has percentile
+        // fields but an empty histogram: the conservative max() fold
+        // must survive as the fallback
+        let mut a = ServerStats {
+            latency_p50_s: 0.2,
+            latency_p95_s: 0.4,
+            ..ServerStats::default()
+        };
+        let b = ServerStats {
+            latency_p50_s: 0.1,
+            latency_p95_s: 0.9,
+            ..ServerStats::default()
+        };
+        a.absorb(&b);
+        assert_eq!(a.latency_p50_s, 0.2);
+        assert_eq!(a.latency_p95_s, 0.9);
+    }
+
+    #[test]
+    fn traced_request_produces_stitched_parented_spans() {
+        trace::set_enabled(true);
+        let router = mock_router(1, 4, 3);
+        // the caller-supplied context a shard node would forward: its
+        // span is the frontend's dispatch span
+        let parent = TraceCtx {
+            trace: trace::next_id(),
+            span: trace::next_id(),
+        };
+        let (_, rx) = router
+            .submit_traced(GenRequest { class: 1, n: 2 }, parent)
+            .unwrap();
+        rx.recv().unwrap().unwrap();
+        router.shutdown();
+        let spans = trace::spans_for_trace(parent.trace);
+        let root = spans
+            .iter()
+            .find(|r| r.kind == SpanKind::Request)
+            .expect("request root span");
+        assert_eq!(root.parent, parent.span,
+                   "request root must parent under the caller's span");
+        assert_eq!(root.b, 2);
+        for kind in [SpanKind::Queue, SpanKind::Generate,
+                     SpanKind::Encode, SpanKind::RungPick]
+        {
+            let stage = spans
+                .iter()
+                .find(|r| r.kind == kind)
+                .unwrap_or_else(|| panic!("missing {kind:?} span"));
+            assert_eq!(stage.parent, root.span,
+                       "{kind:?} must parent under the request root");
+        }
+        let rung = spans
+            .iter()
+            .find(|r| r.kind == SpanKind::RungPick)
+            .expect("rung span");
+        assert_eq!(rung.a, 4, "one-rung ladder always picks rung 4");
+        assert_eq!(rung.b, 2, "two real slots taken");
+    }
+
+    #[test]
+    fn untraced_submit_stays_spanless() {
+        // per-request opt-out: a NONE parent context must not record
+        // even while the global recorder is on for other requests
+        trace::set_enabled(true);
+        let router = mock_router(1, 2, 3);
+        let before = trace::snapshot().len();
+        let (_, rx) = router
+            .submit_traced(GenRequest { class: 1, n: 1 }, TraceCtx::NONE)
+            .unwrap();
+        rx.recv().unwrap().unwrap();
+        router.shutdown();
+        // spans from concurrently running traced tests may land in the
+        // meantime, so assert on this request's absence, not totals:
+        // a NONE ctx has trace id 0, and no span carries it
+        let zero_trace: Vec<_> = trace::spans_for_trace(0);
+        assert!(zero_trace.is_empty(),
+                "NONE ctx must never record (ring grew {} -> {})",
+                before, trace::snapshot().len());
     }
 }

@@ -21,6 +21,7 @@ use anyhow::Result;
 
 use crate::coordinator::pipeline::{Method, Pipeline};
 use crate::coordinator::QuantConfig;
+use crate::obs::trace::TraceCtx;
 use crate::sampler::Sampler;
 use crate::serve::router::{
     GenBackend, GenRequest, GenResult, Router, RouterOpts, ServerStats,
@@ -248,6 +249,16 @@ impl GenServer {
         self.router.submit(req)
     }
 
+    /// [`Self::submit`] under an externally minted trace context (a
+    /// shard node forwards the frontend's dispatch span here).
+    pub fn submit_traced(&self, req: GenRequest, parent: TraceCtx)
+                         -> std::result::Result<
+                             (u64, std::sync::mpsc::Receiver<GenResult>),
+                             ServeError,
+                         > {
+        self.router.submit_traced(req, parent)
+    }
+
     /// Image slots queued but not yet picked up by a worker.
     pub fn queue_depth(&self) -> usize {
         self.router.queue_depth()
@@ -300,6 +311,13 @@ impl crate::serve::dispatch::Dispatch for GenServer {
                   ServeError,
               > {
         GenServer::submit(self, req)
+    }
+    fn submit_traced(&self, req: GenRequest, parent: TraceCtx)
+                     -> std::result::Result<
+                         (u64, std::sync::mpsc::Receiver<GenResult>),
+                         ServeError,
+                     > {
+        GenServer::submit_traced(self, req, parent)
     }
     fn queue_depth(&self) -> usize {
         GenServer::queue_depth(self)

@@ -226,6 +226,22 @@ pub struct RunConfig {
     /// (`--max-conns N`); connections past the cap are refused at
     /// accept. Ignored by the thread-per-connection transport.
     pub max_conns: usize,
+    /// Observability: request-scoped tracing (`--trace BOOL`, default
+    /// off). Spans cover queue/linger/rung-pick/generate/encode and —
+    /// on a cluster frontend — the per-shard dispatch hop; nodes ship
+    /// their spans home on the response so one request is one
+    /// timeline.
+    pub trace: bool,
+    /// Observability: write the collected spans as Chrome
+    /// `chrome://tracing` JSON here on shutdown
+    /// (`--trace-json PATH`). Implies `--trace true`.
+    pub trace_json: Option<String>,
+    /// Observability: serve a Prometheus text exposition on this
+    /// address (`--metrics-addr host:port`). Reactor-mode nodes only;
+    /// `None` (the default) binds nothing.
+    pub metrics_addr: Option<String>,
+    /// Stderr log threshold (`--log-level debug|info|warn|error`).
+    pub log_level: String,
 }
 
 impl Default for RunConfig {
@@ -256,6 +272,10 @@ impl Default for RunConfig {
             reuse_delta: 0.05,
             reactor: true,
             max_conns: 4096,
+            trace: false,
+            trace_json: None,
+            metrics_addr: None,
+            log_level: "info".into(),
         }
     }
 }
@@ -271,7 +291,7 @@ impl RunConfig {
                 d.calib_cache.as_deref().unwrap_or("calib-cache"),
             ))
         };
-        let cfg = RunConfig {
+        let mut cfg = RunConfig {
             artifacts: raw.str_or("artifacts", &d.artifacts),
             wbits: raw.usize("wbits", d.wbits as usize)? as u32,
             abits: raw.usize("abits", d.abits as usize)? as u32,
@@ -317,7 +337,16 @@ impl RunConfig {
             reuse_delta: raw.f64("reuse-delta", d.reuse_delta)?,
             reactor: raw.bool("reactor", d.reactor)?,
             max_conns: raw.usize("max-conns", d.max_conns)?,
+            trace: raw.bool("trace", d.trace)?,
+            trace_json: raw.values.get("trace-json").cloned(),
+            metrics_addr: raw.values.get("metrics-addr").cloned(),
+            log_level: raw.str_or("log-level", &d.log_level),
         };
+        // an export path without spans would be an empty file; asking
+        // for the file is asking for the spans
+        if cfg.trace_json.is_some() {
+            cfg.trace = true;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -368,6 +397,26 @@ impl RunConfig {
                  (got {}); 0 disables step reuse",
                 self.reuse_delta
             );
+        }
+        match self.log_level.to_ascii_lowercase().as_str() {
+            "debug" | "info" | "warn" | "warning" | "error" => {}
+            other => bail!(
+                "config `log-level`: unknown level `{other}` \
+                 (expected debug|info|warn|error)"
+            ),
+        }
+        if let Some(p) = &self.trace_json {
+            if p.is_empty() {
+                bail!("config `trace-json`: expected a file path");
+            }
+        }
+        if let Some(a) = &self.metrics_addr {
+            if !a.contains(':') {
+                bail!(
+                    "config `metrics-addr`: expected host:port, \
+                     got `{a}`"
+                );
+            }
         }
         Ok(())
     }
@@ -595,6 +644,43 @@ name = "full run"
         let c = RawConfig::parse("reuse-delta = slow").unwrap();
         let e = format!("{:#}", RunConfig::from_raw(&c).unwrap_err());
         assert!(e.contains("reuse-delta") && e.contains("slow"), "{e}");
+    }
+
+    #[test]
+    fn observability_flags() {
+        // defaults: tracing off, no export, no metrics endpoint,
+        // info-level logs — the hot path pays nothing it didn't ask for
+        let cfg = RunConfig::from_raw(&RawConfig::parse("").unwrap())
+            .unwrap();
+        assert!(!cfg.trace);
+        assert_eq!(cfg.trace_json, None);
+        assert_eq!(cfg.metrics_addr, None);
+        assert_eq!(cfg.log_level, "info");
+        // --trace-json implies --trace: asking for the file is asking
+        // for the spans
+        let c = RawConfig::parse("trace-json = /tmp/spans.json").unwrap();
+        let cfg = RunConfig::from_raw(&c).unwrap();
+        assert!(cfg.trace);
+        assert_eq!(cfg.trace_json.as_deref(), Some("/tmp/spans.json"));
+        // explicit knobs round-trip
+        let c = RawConfig::parse(
+            "trace = true\nmetrics-addr = 127.0.0.1:9091\n\
+             log-level = debug",
+        )
+        .unwrap();
+        let cfg = RunConfig::from_raw(&c).unwrap();
+        assert!(cfg.trace);
+        assert_eq!(cfg.metrics_addr.as_deref(), Some("127.0.0.1:9091"));
+        assert_eq!(cfg.log_level, "debug");
+        // malformed values are config errors with the key in them
+        let c = RawConfig::parse("log-level = loud").unwrap();
+        let e = format!("{:#}", RunConfig::from_raw(&c).unwrap_err());
+        assert!(e.contains("log-level") && e.contains("loud"), "{e}");
+        let c = RawConfig::parse("metrics-addr = 9091").unwrap();
+        let e = format!("{:#}", RunConfig::from_raw(&c).unwrap_err());
+        assert!(e.contains("metrics-addr"), "{e}");
+        let c = RawConfig::parse("trace-json = \"\"").unwrap();
+        assert!(RunConfig::from_raw(&c).is_err());
     }
 
     #[test]

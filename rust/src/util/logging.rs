@@ -1,6 +1,19 @@
 //! Leveled stderr logger + scoped wall-clock timers.
+//!
+//! Every line carries a monotonic seconds-since-start timestamp and
+//! the emitting module's path, so interleaved worker/reactor output
+//! can be ordered and attributed without a debugger:
+//!
+//! ```text
+//! [   1.042s WARN  tq_dit::serve::router] worker 2 exited: ...
+//! ```
+//!
+//! The threshold is a process-global atomic: [`set_level`] for
+//! programmatic use, [`set_level_str`] for the `--log-level` CLI /
+//! config knob (`debug|info|warn|error`).
 
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -12,16 +25,41 @@ pub enum Level {
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(1);
+static START: OnceLock<Instant> = OnceLock::new();
+
+/// Seconds since the first log line (or first explicit call) of this
+/// process — monotonic, unaffected by wall-clock steps.
+pub fn since_start_secs() -> f64 {
+    START.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
 
 pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Parse a `--log-level` knob value. Accepts `debug|info|warn|error`
+/// (case-insensitive); anything else is reported back to the caller.
+pub fn set_level_str(s: &str) -> Result<(), String> {
+    let level = match s.to_ascii_lowercase().as_str() {
+        "debug" => Level::Debug,
+        "info" => Level::Info,
+        "warn" | "warning" => Level::Warn,
+        "error" => Level::Error,
+        other => {
+            return Err(format!(
+                "unknown log level `{other}` (expected debug|info|warn|error)"
+            ));
+        }
+    };
+    set_level(level);
+    Ok(())
 }
 
 pub fn enabled(level: Level) -> bool {
     level as u8 >= LEVEL.load(Ordering::Relaxed)
 }
 
-pub fn log(level: Level, msg: &str) {
+pub fn log(level: Level, module: &str, msg: &str) {
     if enabled(level) {
         let tag = match level {
             Level::Debug => "DEBUG",
@@ -29,7 +67,7 @@ pub fn log(level: Level, msg: &str) {
             Level::Warn => "WARN ",
             Level::Error => "ERROR",
         };
-        eprintln!("[{tag}] {msg}");
+        eprintln!("[{:>8.3}s {tag} {module}] {msg}", since_start_secs());
     }
 }
 
@@ -37,7 +75,9 @@ pub fn log(level: Level, msg: &str) {
 macro_rules! info {
     ($($t:tt)*) => {
         $crate::util::logging::log(
-            $crate::util::logging::Level::Info, &format!($($t)*))
+            $crate::util::logging::Level::Info,
+            module_path!(),
+            &format!($($t)*))
     };
 }
 
@@ -45,7 +85,9 @@ macro_rules! info {
 macro_rules! debug_log {
     ($($t:tt)*) => {
         $crate::util::logging::log(
-            $crate::util::logging::Level::Debug, &format!($($t)*))
+            $crate::util::logging::Level::Debug,
+            module_path!(),
+            &format!($($t)*))
     };
 }
 
@@ -53,7 +95,19 @@ macro_rules! debug_log {
 macro_rules! warn_log {
     ($($t:tt)*) => {
         $crate::util::logging::log(
-            $crate::util::logging::Level::Warn, &format!($($t)*))
+            $crate::util::logging::Level::Warn,
+            module_path!(),
+            &format!($($t)*))
+    };
+}
+
+#[macro_export]
+macro_rules! error_log {
+    ($($t:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Error,
+            module_path!(),
+            &format!($($t)*))
     };
 }
 
@@ -77,6 +131,7 @@ impl Drop for Timer {
     fn drop(&mut self) {
         log(
             Level::Info,
+            module_path!(),
             &format!("{}: {:.2}s", self.label, self.elapsed_secs()),
         );
     }
@@ -86,13 +141,34 @@ impl Drop for Timer {
 mod tests {
     use super::*;
 
+    // The threshold is process-global; serialize the tests that poke it.
+    static LEVEL_GUARD: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
     #[test]
     fn level_gating() {
+        let _g = crate::util::lock(&LEVEL_GUARD);
         set_level(Level::Warn);
         assert!(!enabled(Level::Info));
         assert!(enabled(Level::Error));
         set_level(Level::Info);
         assert!(enabled(Level::Info));
+    }
+
+    #[test]
+    fn level_strings_parse() {
+        let _g = crate::util::lock(&LEVEL_GUARD);
+        for s in ["debug", "INFO", "Warn", "warning", "error"] {
+            assert!(set_level_str(s).is_ok(), "{s} should parse");
+        }
+        assert!(set_level_str("loud").is_err());
+        set_level(Level::Info);
+    }
+
+    #[test]
+    fn monotonic_clock_advances() {
+        let a = since_start_secs();
+        let b = since_start_secs();
+        assert!(b >= a);
     }
 
     #[test]
