@@ -65,6 +65,7 @@ fn main() -> anyhow::Result<()> {
     }
     if full || smoke {
         adaptive_batching_bench()?;
+        lint_bench()?;
     }
     if full || smoke || reuse_only {
         step_reuse_bench()?;
@@ -82,6 +83,50 @@ fn main() -> anyhow::Result<()> {
         metrics_scrape_bench()?;
         tracing_overhead_bench()?;
     }
+    Ok(())
+}
+
+/// Whole-program lint wall-time: the lint gates every CI push, so its
+/// cost is part of the inner loop — track it next to the serve numbers
+/// as the `lint` section of `BENCH_serve.json`, split by phase
+/// (parse+index, call-graph build, rule passes, stats-plumbing). Also
+/// doubles as the bench-side dogfood: a finding here fails the run.
+fn lint_bench() -> anyhow::Result<()> {
+    let rs = std::path::PathBuf::from("rust/src");
+    let root = if rs.is_dir() { rs } else { "src".into() };
+    let run = tq_dit::analysis::lint_tree(std::slice::from_ref(&root))?;
+    anyhow::ensure!(
+        run.findings.is_empty(),
+        "lint found {} finding(s) during bench",
+        run.findings.len()
+    );
+    let ms = |ns: u128| ns as f64 / 1e6;
+    let phase = |label: &str| {
+        ms(run
+            .timings
+            .iter()
+            .filter(|(l, _)| *l == label || (label == "rules" && *l != "parse+index" && *l != "graph" && *l != "stats-plumbing"))
+            .map(|(_, ns)| ns)
+            .sum())
+    };
+    println!(
+        "\nwhole-program lint: {} files, {} fns, {} inferred blocking, \
+         {:.1} ms wall",
+        run.files,
+        run.graph.fn_count(),
+        run.graph.blocking_count(),
+        ms(run.wall_ns)
+    );
+    common::write_bench_section("BENCH_serve.json", "lint", vec![
+        ("files", Json::Num(run.files as f64)),
+        ("fns", Json::Num(run.graph.fn_count() as f64)),
+        ("inferred_blocking", Json::Num(run.graph.blocking_count() as f64)),
+        ("wall_ms", Json::Num(ms(run.wall_ns))),
+        ("parse_index_ms", Json::Num(phase("parse+index"))),
+        ("graph_ms", Json::Num(phase("graph"))),
+        ("rule_pass_ms", Json::Num(phase("rules"))),
+        ("stats_plumbing_ms", Json::Num(phase("stats-plumbing"))),
+    ])?;
     Ok(())
 }
 

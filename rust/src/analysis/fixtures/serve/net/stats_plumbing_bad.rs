@@ -1,0 +1,36 @@
+//! Violates `stats-plumbing`: `ServerStats.reuse_hits` is plumbed
+//! through the serde encode/decode and `stats_fold`, but missing from
+//! `absorb` — a new counter that silently vanishes when worker deltas
+//! are folded in. The finding anchors at the field definition. This
+//! file carries its own miniature plumbing set; required fns that are
+//! absent from the file's index are skipped, so the fixture stays
+//! self-contained. Not compiled.
+
+struct ServerStats {
+    requests: u64,
+    reuse_hits: u64,
+}
+
+impl ServerStats {
+    fn absorb(&mut self, o: &ServerStats) {
+        self.requests += o.requests;
+    }
+}
+
+fn stats_to_json(s: &ServerStats) -> Json {
+    obj(&[("requests", s.requests), ("reuse_hits", s.reuse_hits)])
+}
+
+fn stats_from_json(j: &Json) -> ServerStats {
+    ServerStats {
+        requests: num(j, "requests"),
+        reuse_hits: num(j, "reuse_hits"),
+    }
+}
+
+fn stats_fold(acc: &ServerStats, d: &ServerStats) -> ServerStats {
+    ServerStats {
+        requests: acc.requests + d.requests,
+        reuse_hits: acc.reuse_hits + d.reuse_hits,
+    }
+}

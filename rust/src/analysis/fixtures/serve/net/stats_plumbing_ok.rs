@@ -1,0 +1,37 @@
+//! The repaired `stats_plumbing_bad.rs`: every `ServerStats` field is
+//! mentioned in all four required fns — string-literal serde keys
+//! count as mentions, as do plain idents. The
+//! `stats_plumbing_catches_a_dropped_absorb_mention` test deletes the
+//! `reuse_hits` absorb line from this source and asserts the rule
+//! fires, which is the acceptance contract for the rule itself. Not
+//! compiled.
+
+struct ServerStats {
+    requests: u64,
+    reuse_hits: u64,
+}
+
+impl ServerStats {
+    fn absorb(&mut self, o: &ServerStats) {
+        self.requests += o.requests;
+        self.reuse_hits += o.reuse_hits;
+    }
+}
+
+fn stats_to_json(s: &ServerStats) -> Json {
+    obj(&[("requests", s.requests), ("reuse_hits", s.reuse_hits)])
+}
+
+fn stats_from_json(j: &Json) -> ServerStats {
+    ServerStats {
+        requests: num(j, "requests"),
+        reuse_hits: num(j, "reuse_hits"),
+    }
+}
+
+fn stats_fold(acc: &ServerStats, d: &ServerStats) -> ServerStats {
+    ServerStats {
+        requests: acc.requests + d.requests,
+        reuse_hits: acc.reuse_hits + d.reuse_hits,
+    }
+}

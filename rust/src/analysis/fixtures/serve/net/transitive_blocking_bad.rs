@@ -1,0 +1,19 @@
+//! Violates `lock-across-blocking` only *through* helpers: the guard
+//! is held across a call the call graph infers as blocking, two hops
+//! away from the actual `write_all`. The finding must print the chain
+//! (`push_state -> flush_shard -> write_frame_to [blocking: write_all]`).
+//! Not compiled — linted via include_str! in analysis::tests.
+
+fn write_frame_to(conn: &mut Conn) -> std::io::Result<()> {
+    conn.sock.write_all(&conn.buf)
+}
+
+fn flush_shard(conn: &mut Conn) {
+    let _ = write_frame_to(conn);
+}
+
+fn push_state(shared: &Shared, conn: &mut Conn) {
+    let st = crate::util::lock(&shared.state);
+    flush_shard(conn);
+    drop(st);
+}

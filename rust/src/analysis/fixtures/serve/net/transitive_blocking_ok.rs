@@ -1,0 +1,38 @@
+//! The repaired shapes for `transitive_blocking_bad.rs` — same
+//! helpers, no finding. Two distinct repairs are shown: dropping the
+//! guard and offloading the blocking helper to the pool, and cutting
+//! inference at a mode-dispatch shim with a declared
+//! `allow(transitive-blocking)` pragma (its hot path hands the frame
+//! to a non-blocking queue). Not compiled.
+
+fn write_frame_to(conn: &mut Conn) -> std::io::Result<()> {
+    conn.sock.write_all(&conn.buf)
+}
+
+fn flush_shard(conn: &mut Conn) {
+    let _ = write_frame_to(conn);
+}
+
+fn push_state(shared: &Shared, pool: &ThreadPool, conn: Conn) {
+    let mut st = crate::util::lock(&shared.state);
+    st.dirty = false;
+    drop(st);
+    let mut conn = conn;
+    pool.execute(move || {
+        flush_shard(&mut conn);
+    });
+}
+
+// tq-lint: allow(transitive-blocking): queue_frame hands the bytes to the reactor handle without blocking; only the threaded fallback path may block, and its callers are dedicated writer threads
+fn send_any(conn: &mut Conn, reactor: bool) {
+    if reactor {
+        queue_frame(conn);
+    } else {
+        flush_shard(conn);
+    }
+}
+
+fn notify(shared: &Shared, conn: &mut Conn) {
+    let _st = crate::util::lock(&shared.state);
+    send_any(conn, true);
+}

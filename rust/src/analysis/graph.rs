@@ -1,0 +1,580 @@
+//! Whole-program call graph and transitive-blocking inference.
+//!
+//! Built from every file's [`FileIndex`], the graph records one node
+//! per function and resolves call sites with *typed* resolution: a
+//! method call `x.f(…)` produces an edge only when the receiver's
+//! outer type is known — `self` (the enclosing `impl` type), a
+//! `self.field` whose struct declares the field's type, or a typed
+//! local/parameter. Unknown receivers produce **no** edge: one junk
+//! edge into a blocking fn would poison whole subtrees of the graph,
+//! so precision wins over recall. Path calls `Seg::f(…)` resolve via
+//! the assoc-fn table when `Seg` is a type (uppercase) and via the
+//! free-fn table when it is a module segment; bare calls resolve via
+//! the free-fn table.
+//!
+//! Blocking inference is a fixpoint: seeds are non-offloaded calls to
+//! the [`BLOCKING`] names (plus `wait`/`wait_timeout`; `join` only
+//! when zero-arg, so `Path::join`/`slice::join` don't count), and a
+//! fn becomes blocking when any non-offloaded resolved callee is
+//! blocking. Two things cut propagation: pool-offload ranges
+//! (`execute`/`spawn` argument bodies, from
+//! [`scope::offload_ranges`](crate::analysis::scope::offload_ranges))
+//! and fns whose definition line carries a
+//! `tq-lint: allow(transitive-blocking)` pragma — a *declared* cut
+//! for mode-dispatch shims whose hot path is non-blocking. Each
+//! blocking fn remembers why, so findings print the full chain:
+//! `on_readable -> flush_shard -> write_frame [blocking: write_all]`.
+
+use crate::analysis::index::{EnumItem, FileIndex, FnItem, StructItem};
+use crate::analysis::lexer::{Tok, TokKind};
+use crate::analysis::rules::BLOCKING;
+use crate::analysis::scope::{in_ranges, offload_ranges};
+use crate::util::json::Json;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// One file's contribution to the graph.
+pub struct GraphInput<'a> {
+    pub path: &'a str,
+    pub toks: &'a [Tok],
+    pub index: &'a FileIndex,
+    /// Fn-definition lines covered by a `transitive-blocking` pragma.
+    pub cuts: &'a BTreeSet<usize>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CallKind {
+    /// `recv.name(…)` — resolves only through a typed receiver.
+    Method,
+    /// `Seg::name(…)`.
+    Path,
+    /// `name(…)`.
+    Free,
+}
+
+/// One syntactic call site inside a fn body.
+#[derive(Clone, Debug)]
+pub struct CallSite {
+    pub name: String,
+    pub kind: CallKind,
+    /// Method receiver ident (`x` in `x.f()`), if it is an ident.
+    pub recv: Option<String>,
+    /// Ident before the receiver in a `base.recv.f()` chain.
+    pub base: Option<String>,
+    /// Path segment before `::` for `CallKind::Path`.
+    pub qual: Option<String>,
+    /// Token index of the callee name.
+    pub idx: usize,
+    pub line: usize,
+    /// Inside a pool `execute(…)`/`spawn(…)` argument list.
+    pub offloaded: bool,
+    /// `name()` with no arguments (the `join` seed refinement).
+    pub zero_arg: bool,
+}
+
+/// Why a fn is blocking: a direct seed call, or a resolved edge into
+/// another blocking fn.
+#[derive(Clone, Debug)]
+pub enum Why {
+    Seed { call: String },
+    Via { call: String, callee: usize },
+}
+
+struct Node {
+    file: String,
+    item: FnItem,
+    sites: Vec<CallSite>,
+    mentions: BTreeSet<String>,
+    cut: bool,
+}
+
+/// The program: fn nodes, resolution tables, item lists, and the
+/// inferred blocking set.
+pub struct Graph {
+    nodes: Vec<Node>,
+    free: BTreeMap<String, Vec<usize>>,
+    assoc: BTreeMap<(String, String), Vec<usize>>,
+    fieldtypes: BTreeMap<String, BTreeMap<String, String>>,
+    by_body: BTreeMap<(String, usize), usize>,
+    structs: Vec<(String, StructItem)>,
+    enums: Vec<(String, EnumItem)>,
+    blocking: BTreeMap<usize, Why>,
+    seeds: usize,
+}
+
+fn ident_words_of_str(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    for c in text.chars() {
+        if c.is_ascii_alphanumeric() || c == '_' {
+            cur.push(c);
+        } else if !cur.is_empty() {
+            out.push(std::mem::take(&mut cur));
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+/// Identifier-ish words a fn body mentions: idents plus words inside
+/// string literals (serde keys count as plumbing a field).
+fn fn_mentions(toks: &[Tok], f: &FnItem) -> BTreeSet<String> {
+    let mut words = BTreeSet::new();
+    let be = f.body_end.min(toks.len().saturating_sub(1));
+    for t in toks.iter().take(be + 1).skip(f.body_start) {
+        match t.kind {
+            TokKind::Ident => {
+                words.insert(t.text.clone());
+            }
+            TokKind::Str => {
+                words.extend(ident_words_of_str(&t.text));
+            }
+            _ => {}
+        }
+    }
+    words
+}
+
+fn call_sites(toks: &[Tok], f: &FnItem) -> Vec<CallSite> {
+    let mut sites = Vec::new();
+    let off = offload_ranges(toks, f.body_start, f.body_end);
+    let be = f.body_end.min(toks.len().saturating_sub(1));
+    let mut i = f.body_start + 1;
+    while i < be {
+        let t = &toks[i];
+        let is_call = t.kind == TokKind::Ident && toks[i + 1].text == "(";
+        let is_def = i >= 1 && toks[i - 1].kind == TokKind::Ident && toks[i - 1].text == "fn";
+        if !is_call || is_def {
+            i += 1;
+            continue;
+        }
+        let zero_arg = toks.get(i + 2).is_some_and(|t| t.text == ")");
+        let offloaded = in_ranges(i, &off);
+        let site = if i >= 1 && toks[i - 1].text == "." {
+            let recv = (i >= 2 && toks[i - 2].kind == TokKind::Ident)
+                .then(|| toks[i - 2].text.clone());
+            let base = (recv.is_some()
+                && i >= 4
+                && toks[i - 3].text == "."
+                && toks[i - 4].kind == TokKind::Ident)
+                .then(|| toks[i - 4].text.clone());
+            CallSite { name: t.text.clone(), kind: CallKind::Method, recv, base,
+                       qual: None, idx: i, line: t.line, offloaded, zero_arg }
+        } else if i >= 3
+            && toks[i - 1].text == ":"
+            && toks[i - 2].text == ":"
+            && toks[i - 3].kind == TokKind::Ident
+        {
+            CallSite { name: t.text.clone(), kind: CallKind::Path, recv: None,
+                       base: None, qual: Some(toks[i - 3].text.clone()), idx: i,
+                       line: t.line, offloaded, zero_arg }
+        } else {
+            CallSite { name: t.text.clone(), kind: CallKind::Free, recv: None,
+                       base: None, qual: None, idx: i, line: t.line, offloaded,
+                       zero_arg }
+        };
+        sites.push(site);
+        i += 1;
+    }
+    sites
+}
+
+impl Graph {
+    /// Build the graph over a set of indexed files and run the
+    /// blocking fixpoint.
+    pub fn build(inputs: &[GraphInput]) -> Graph {
+        let mut g = Graph {
+            nodes: Vec::new(),
+            free: BTreeMap::new(),
+            assoc: BTreeMap::new(),
+            fieldtypes: BTreeMap::new(),
+            by_body: BTreeMap::new(),
+            structs: Vec::new(),
+            enums: Vec::new(),
+            blocking: BTreeMap::new(),
+            seeds: 0,
+        };
+        for inp in inputs {
+            for f in &inp.index.fns {
+                let id = g.nodes.len();
+                match &f.impl_type {
+                    Some(t) => g
+                        .assoc
+                        .entry((t.clone(), f.name.clone()))
+                        .or_default()
+                        .push(id),
+                    None => g.free.entry(f.name.clone()).or_default().push(id),
+                }
+                g.by_body.insert((inp.path.to_string(), f.body_start), id);
+                g.nodes.push(Node {
+                    file: inp.path.to_string(),
+                    item: f.clone(),
+                    sites: call_sites(inp.toks, f),
+                    mentions: fn_mentions(inp.toks, f),
+                    cut: inp.cuts.contains(&f.line),
+                });
+            }
+            for s in &inp.index.structs {
+                let m = g.fieldtypes.entry(s.name.clone()).or_default();
+                for fl in &s.fields {
+                    if let Some(ty) = &fl.ty {
+                        m.insert(fl.name.clone(), ty.clone());
+                    }
+                }
+                g.structs.push((inp.path.to_string(), s.clone()));
+            }
+            for e in &inp.index.enums {
+                g.enums.push((inp.path.to_string(), e.clone()));
+            }
+        }
+        g.seed();
+        g.propagate();
+        g
+    }
+
+    fn seed(&mut self) {
+        let mut seeded = Vec::new();
+        for (id, node) in self.nodes.iter().enumerate() {
+            if node.cut {
+                continue;
+            }
+            for s in &node.sites {
+                if s.offloaded {
+                    continue;
+                }
+                let nm = s.name.as_str();
+                let seedy =
+                    BLOCKING.contains(&nm) || nm == "wait" || nm == "wait_timeout";
+                if !seedy || (nm == "join" && !s.zero_arg) {
+                    continue;
+                }
+                seeded.push((id, nm.to_string()));
+                break;
+            }
+        }
+        self.seeds = seeded.len();
+        for (id, call) in seeded {
+            self.blocking.insert(id, Why::Seed { call });
+        }
+    }
+
+    fn propagate(&mut self) {
+        let mut changed = true;
+        while changed {
+            changed = false;
+            for id in 0..self.nodes.len() {
+                if self.blocking.contains_key(&id) || self.nodes[id].cut {
+                    continue;
+                }
+                let mut found = None;
+                'sites: for s in &self.nodes[id].sites {
+                    if s.offloaded {
+                        continue;
+                    }
+                    for tgt in self.resolve(s, id) {
+                        if tgt != id && self.blocking.contains_key(&tgt) {
+                            found = Some((s.name.clone(), tgt));
+                            break 'sites;
+                        }
+                    }
+                }
+                if let Some((call, callee)) = found {
+                    self.blocking.insert(id, Why::Via { call, callee });
+                    changed = true;
+                }
+            }
+        }
+    }
+
+    /// Callee candidates for one site; empty when the receiver type is
+    /// unknown.
+    fn resolve(&self, site: &CallSite, caller: usize) -> Vec<usize> {
+        let c = &self.nodes[caller].item;
+        let assoc = |ty: &str| -> Vec<usize> {
+            self.assoc
+                .get(&(ty.to_string(), site.name.clone()))
+                .cloned()
+                .unwrap_or_default()
+        };
+        let free = || self.free.get(&site.name).cloned().unwrap_or_default();
+        match site.kind {
+            CallKind::Method => {
+                let recv = match &site.recv {
+                    Some(r) => r.as_str(),
+                    None => return Vec::new(),
+                };
+                if recv == "self" {
+                    return assoc(c.impl_type.as_deref().unwrap_or("?"));
+                }
+                let rtype = if site.base.as_deref() == Some("self") {
+                    c.impl_type
+                        .as_ref()
+                        .and_then(|t| self.fieldtypes.get(t))
+                        .and_then(|m| m.get(recv))
+                } else if site.base.is_none() {
+                    c.locals.get(recv).or_else(|| c.params.get(recv))
+                } else {
+                    None
+                };
+                match rtype {
+                    Some(t) => assoc(t),
+                    None => Vec::new(),
+                }
+            }
+            CallKind::Path => {
+                let q = site.qual.as_deref().unwrap_or("");
+                let q = if q == "Self" || q == "self" {
+                    c.impl_type.as_deref().unwrap_or("?")
+                } else {
+                    q
+                };
+                if q.chars().next().is_some_and(|ch| ch.is_ascii_uppercase()) {
+                    assoc(q)
+                } else {
+                    free()
+                }
+            }
+            CallKind::Free => free(),
+        }
+    }
+
+    /// Graph node for the fn whose body opens at `(file, body_start)` —
+    /// the join key with [`scope::functions`](crate::analysis::scope::functions).
+    pub fn fn_id(&self, file: &str, body_start: usize) -> Option<usize> {
+        self.by_body.get(&(file.to_string(), body_start)).copied()
+    }
+
+    pub fn is_blocking(&self, id: usize) -> bool {
+        self.blocking.contains_key(&id)
+    }
+
+    /// If the call at token `tok_idx` inside fn `caller` resolves to an
+    /// inferred-blocking fn, the blocking chain starting at the callee.
+    pub fn blocking_chain(&self, caller: usize, tok_idx: usize) -> Option<String> {
+        let node = self.nodes.get(caller)?;
+        let site = node.sites.iter().find(|s| s.idx == tok_idx)?;
+        if site.offloaded {
+            return None;
+        }
+        let callee = self
+            .resolve(site, caller)
+            .into_iter()
+            .find(|t| self.blocking.contains_key(t))?;
+        Some(self.chain(callee))
+    }
+
+    /// Render `qual -> qual -> … [blocking: seed]` for a blocking fn.
+    pub fn chain(&self, mut id: usize) -> String {
+        let mut parts = vec![self.nodes[id].item.qual()];
+        for _ in 0..8 {
+            match self.blocking.get(&id) {
+                None => {
+                    parts.push("?".to_string());
+                    break;
+                }
+                Some(Why::Seed { call }) => {
+                    parts.push(format!("[blocking: {call}]"));
+                    break;
+                }
+                Some(Why::Via { callee, .. }) => {
+                    parts.push(self.nodes[*callee].item.qual());
+                    id = *callee;
+                }
+            }
+        }
+        parts.join(" -> ")
+    }
+
+    /// Fn ids matching a registry spec: `Type::name` via the assoc
+    /// table, bare `name` via the free table.
+    pub fn resolve_spec(&self, spec: &str) -> Vec<usize> {
+        match spec.split_once("::") {
+            Some((ty, nm)) => self
+                .assoc
+                .get(&(ty.to_string(), nm.to_string()))
+                .cloned()
+                .unwrap_or_default(),
+            None => self.free.get(spec).cloned().unwrap_or_default(),
+        }
+    }
+
+    pub fn mentions(&self, id: usize) -> &BTreeSet<String> {
+        &self.nodes[id].mentions
+    }
+
+    pub fn structs(&self) -> &[(String, StructItem)] {
+        &self.structs
+    }
+
+    pub fn enums(&self) -> &[(String, EnumItem)] {
+        &self.enums
+    }
+
+    pub fn fn_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn blocking_count(&self) -> usize {
+        self.blocking.len()
+    }
+
+    /// Serialize nodes + resolved edges for `tq-dit lint --graph-json`.
+    pub fn to_json(&self) -> Json {
+        let mut nodes = Vec::new();
+        let mut edges = Vec::new();
+        for (id, node) in self.nodes.iter().enumerate() {
+            let mut o = BTreeMap::new();
+            o.insert("id".to_string(), Json::Num(id as f64));
+            o.insert("fn".to_string(), Json::Str(node.item.qual()));
+            o.insert("file".to_string(), Json::Str(node.file.clone()));
+            o.insert("line".to_string(), Json::Num(node.item.line as f64));
+            o.insert("method".to_string(), Json::Bool(node.item.has_self));
+            o.insert("blocking".to_string(), Json::Bool(self.is_blocking(id)));
+            if node.cut {
+                o.insert("cut".to_string(), Json::Bool(true));
+            }
+            if self.is_blocking(id) {
+                o.insert("chain".to_string(), Json::Str(self.chain(id)));
+            }
+            nodes.push(Json::Obj(o));
+            for s in &node.sites {
+                for tgt in self.resolve(s, id) {
+                    let mut e = BTreeMap::new();
+                    e.insert("from".to_string(), Json::Num(id as f64));
+                    e.insert("to".to_string(), Json::Num(tgt as f64));
+                    e.insert("call".to_string(), Json::Str(s.name.clone()));
+                    e.insert("line".to_string(), Json::Num(s.line as f64));
+                    if s.offloaded {
+                        e.insert("offloaded".to_string(), Json::Bool(true));
+                    }
+                    edges.push(Json::Obj(e));
+                }
+            }
+        }
+        let mut counts = BTreeMap::new();
+        counts.insert("fns".to_string(), Json::Num(self.nodes.len() as f64));
+        counts.insert("edges".to_string(), Json::Num(edges.len() as f64));
+        counts.insert("seeds".to_string(), Json::Num(self.seeds as f64));
+        counts.insert(
+            "blocking".to_string(),
+            Json::Num(self.blocking.len() as f64),
+        );
+        let mut top = BTreeMap::new();
+        top.insert("nodes".to_string(), Json::Arr(nodes));
+        top.insert("edges".to_string(), Json::Arr(edges));
+        top.insert("counts".to_string(), Json::Obj(counts));
+        Json::Obj(top)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::index::index_file;
+    use crate::analysis::lexer::lex;
+    use crate::analysis::scope::code_tokens;
+
+    fn graph_of(src: &str) -> (Graph, Vec<Tok>, FileIndex) {
+        let toks = code_tokens(&lex(src));
+        let index = index_file(&toks);
+        let cuts = BTreeSet::new();
+        let g = Graph::build(&[GraphInput { path: "t.rs", toks: &toks, index: &index, cuts: &cuts }]);
+        (g, toks, index)
+    }
+
+    fn id_of(g: &Graph, ix: &FileIndex, name: &str) -> usize {
+        let f = ix.fns.iter().find(|f| f.qual() == name).unwrap();
+        g.fn_id("t.rs", f.body_start).unwrap()
+    }
+
+    #[test]
+    fn cycle_terminates_and_both_sides_block() {
+        let src = "
+            fn ping(sock: &mut Conn) { pong(sock); }
+            fn pong(sock: &mut Conn) { ping(sock); leak(sock); }
+            fn leak(sock: &mut Conn) { sock_write(); }
+            fn sock_write() { write_all(); }
+        ";
+        let (g, _t, ix) = graph_of(src);
+        for f in ["ping", "pong", "leak", "sock_write"] {
+            assert!(g.is_blocking(id_of(&g, &ix, f)), "{f} should block");
+        }
+        let chain = g.chain(id_of(&g, &ix, "leak"));
+        assert_eq!(chain, "leak -> sock_write -> [blocking: write_all]");
+    }
+
+    #[test]
+    fn offload_ranges_cut_propagation() {
+        let src = "
+            fn hot(pool: &ThreadPool) { pool.execute(move || { cold(); }); }
+            fn cold() { flush(); }
+        ";
+        let (g, _t, ix) = graph_of(src);
+        assert!(g.is_blocking(id_of(&g, &ix, "cold")));
+        assert!(!g.is_blocking(id_of(&g, &ix, "hot")), "offloaded call must not propagate");
+    }
+
+    #[test]
+    fn method_and_free_fn_with_same_name_resolve_separately() {
+        let src = "
+            struct Quiet { n: u32 }
+            impl Quiet { fn poke(&self) { self.n; } }
+            fn poke() { write_all(); }
+            fn uses_method(q: &Quiet) { q.poke(); }
+            fn uses_free() { poke(); }
+            fn unknown_receiver(q: &Mystery) { q.poke(); }
+        ";
+        let (g, _t, ix) = graph_of(src);
+        assert!(!g.is_blocking(id_of(&g, &ix, "uses_method")), "typed receiver picks Quiet::poke");
+        assert!(g.is_blocking(id_of(&g, &ix, "uses_free")), "free call picks the blocking free fn");
+        // Mystery has no struct def: receiver type unknown -> no edge
+        assert!(!g.is_blocking(id_of(&g, &ix, "unknown_receiver")));
+    }
+
+    #[test]
+    fn join_seed_requires_zero_args() {
+        let src = "
+            fn thread_join(h: Handle) { h.join(); }
+            fn path_join(p: &Path) { p.join(\"x\"); }
+        ";
+        let (g, _t, ix) = graph_of(src);
+        assert!(g.is_blocking(id_of(&g, &ix, "thread_join")));
+        assert!(!g.is_blocking(id_of(&g, &ix, "path_join")));
+    }
+
+    #[test]
+    fn declared_cut_stops_propagation() {
+        let src = "
+            fn dispatch(conn: &mut Conn) { slow_path(conn); }
+            fn slow_path(conn: &mut Conn) { write_all(); }
+            fn caller(conn: &mut Conn) { dispatch(conn); }
+        ";
+        let toks = code_tokens(&lex(src));
+        let index = index_file(&toks);
+        let cut_line = index.fns.iter().find(|f| f.name == "dispatch").unwrap().line;
+        let cuts: BTreeSet<usize> = [cut_line].into_iter().collect();
+        let g = Graph::build(&[GraphInput { path: "t.rs", toks: &toks, index: &index, cuts: &cuts }]);
+        let id = |name: &str| {
+            let f = index.fns.iter().find(|f| f.qual() == name).unwrap();
+            g.fn_id("t.rs", f.body_start).unwrap()
+        };
+        assert!(g.is_blocking(id("slow_path")));
+        assert!(!g.is_blocking(id("dispatch")), "cut fn is never marked blocking");
+        assert!(!g.is_blocking(id("caller")), "cut stops the chain to callers");
+    }
+
+    #[test]
+    fn self_field_receiver_uses_struct_field_type() {
+        let src = "
+            struct Writer { n: u32 }
+            impl Writer { fn put(&self) { write_all(); } }
+            struct Front { out: Writer }
+            impl Front { fn push(&self) { self.out.put(); } }
+        ";
+        let (g, _t, ix) = graph_of(src);
+        assert!(g.is_blocking(id_of(&g, &ix, "Front::push")));
+        let chain = g.chain(id_of(&g, &ix, "Front::push"));
+        assert_eq!(chain, "Front::push -> Writer::put -> [blocking: write_all]");
+    }
+}

@@ -1,0 +1,598 @@
+//! Per-file item extraction — the symbol layer under the call graph.
+//!
+//! [`index_file`] walks one file's comment-free token stream (the same
+//! stream the rules see) and records every function definition (with
+//! its enclosing `impl` type, receiver-ness, parameter types and
+//! typed local bindings), struct (with per-field declared outer
+//! types), and enum (with its variants). Test regions are skipped the
+//! same way [`crate::analysis::scope::functions`] skips them, so the
+//! fn list here lines up one-to-one with the rule engine's
+//! [`FnBody`](crate::analysis::scope::FnBody) list — the graph keys
+//! fns by `(file, body_start)` on the strength of that alignment.
+//!
+//! Types are recorded as *outer* names only (`Vec<WorkerStats>` →
+//! `Vec`, `&mut ShardConn` → `ShardConn`, `Arc<Mutex<T>>` → `Arc`):
+//! the call graph resolves a method call only when the receiver's
+//! outer type names an `impl` block in this crate, and an outer std
+//! wrapper simply resolves to nothing — precision over recall.
+
+use crate::analysis::lexer::{Tok, TokKind};
+use crate::analysis::scope::{in_regions, match_brace, test_regions};
+use std::collections::BTreeMap;
+
+fn is_punct(t: &Tok, p: &str) -> bool {
+    t.kind == TokKind::Punct && t.text == p
+}
+
+/// One function definition.
+#[derive(Clone, Debug)]
+pub struct FnItem {
+    pub name: String,
+    /// Enclosing `impl` block's type name (`impl Foo {` /
+    /// `impl Trait for Foo {` → `Foo`); `None` for free fns and trait
+    /// declaration bodies.
+    pub impl_type: Option<String>,
+    /// Whether the parameter list contains `self`.
+    pub has_self: bool,
+    /// Line of the name token.
+    pub line: usize,
+    /// Inclusive token range of the `{ … }` body.
+    pub body_start: usize,
+    pub body_end: usize,
+    /// Parameter name → declared outer type.
+    pub params: BTreeMap<String, String>,
+    /// `let`-bound local → outer type, from explicit `let x: T`
+    /// annotations and `let x = Type::ctor(..)` / `let x = Type { .. }`
+    /// initializers.
+    pub locals: BTreeMap<String, String>,
+}
+
+impl FnItem {
+    /// `Type::name` for methods/assoc fns, bare `name` otherwise.
+    pub fn qual(&self) -> String {
+        match &self.impl_type {
+            Some(t) => format!("{t}::{}", self.name),
+            None => self.name.clone(),
+        }
+    }
+}
+
+/// One struct field (or, reused, one enum variant — `ty` then `None`).
+#[derive(Clone, Debug)]
+pub struct Field {
+    pub name: String,
+    pub line: usize,
+    pub ty: Option<String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct StructItem {
+    pub name: String,
+    pub line: usize,
+    pub fields: Vec<Field>,
+}
+
+#[derive(Clone, Debug)]
+pub struct EnumItem {
+    pub name: String,
+    pub line: usize,
+    pub variants: Vec<Field>,
+}
+
+/// Everything extracted from one file.
+#[derive(Clone, Debug, Default)]
+pub struct FileIndex {
+    pub fns: Vec<FnItem>,
+    pub structs: Vec<StructItem>,
+    pub enums: Vec<EnumItem>,
+}
+
+/// Index past a generic parameter list: `toks[i]` may be `<`; returns
+/// the index just past the matching `>` (a `->` never closes —
+/// `impl<F: Fn() -> T>` stays balanced).
+fn skip_generics(toks: &[Tok], i: usize) -> usize {
+    let n = toks.len();
+    if i >= n || toks[i].text != "<" {
+        return i;
+    }
+    let mut depth = 0i32;
+    let mut j = i;
+    while j < n {
+        let t = &toks[j];
+        if t.text == "<" {
+            depth += 1;
+        } else if t.text == ">" && !(j >= 1 && toks[j - 1].text == "-") {
+            depth -= 1;
+            if depth == 0 {
+                return j + 1;
+            }
+        }
+        j += 1;
+    }
+    n
+}
+
+/// Outermost type name of the type starting at `toks[i]` (after the
+/// `:` of a field/param/let): skip `&`, lifetimes, `mut`, `dyn`; then
+/// the first ident path's last segment. `[u8; 4]`, `(A, B)` and
+/// `impl Trait` yield `None`.
+pub fn outer_type(toks: &[Tok], i: usize, end: usize) -> Option<String> {
+    let end = end.min(toks.len());
+    let mut j = i;
+    while j < end {
+        let t = &toks[j];
+        let skip = t.kind == TokKind::Lifetime
+            || (t.kind == TokKind::Ident && (t.text == "mut" || t.text == "dyn"))
+            || t.text == "&";
+        if !skip {
+            break;
+        }
+        j += 1;
+    }
+    if j >= end || toks[j].kind != TokKind::Ident || toks[j].text == "impl" {
+        return None;
+    }
+    let mut last = toks[j].text.clone();
+    j += 1;
+    while j + 1 < end && toks[j].text == ":" && toks[j + 1].text == ":" {
+        j += 2;
+        match toks.get(j) {
+            Some(t) if t.kind == TokKind::Ident => {
+                last = t.text.clone();
+                j += 1;
+            }
+            _ => break,
+        }
+    }
+    Some(last)
+}
+
+/// `impl` blocks: `(type name, open brace idx, close brace idx)`.
+fn impl_ranges(toks: &[Tok], skip: &[(usize, usize)]) -> Vec<(String, usize, usize)> {
+    let n = toks.len();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < n {
+        let t = &toks[i];
+        if in_regions(i, skip) || !(t.kind == TokKind::Ident && t.text == "impl") {
+            i += 1;
+            continue;
+        }
+        let mut j = skip_generics(toks, i + 1);
+        // header path idents to the `{` at angle depth 0; `for` starts
+        // the implemented-on type (`impl Trait for Foo`)
+        let mut depth = 0i32;
+        let mut segs: Vec<String> = Vec::new();
+        let mut after_for: Option<Vec<String>> = None;
+        while j < n {
+            let tj = &toks[j];
+            if tj.text == "<" {
+                depth += 1;
+            } else if tj.text == ">" && !(j >= 1 && toks[j - 1].text == "-") {
+                depth -= 1;
+            } else if depth == 0 && tj.text == "{" {
+                break;
+            } else if depth == 0 && tj.kind == TokKind::Ident {
+                if tj.text == "for" {
+                    after_for = Some(Vec::new());
+                } else if tj.text != "where" {
+                    match &mut after_for {
+                        Some(v) => v.push(tj.text.clone()),
+                        None => segs.push(tj.text.clone()),
+                    }
+                }
+            }
+            j += 1;
+        }
+        if j >= n {
+            break;
+        }
+        let path = match &after_for {
+            Some(v) if !v.is_empty() => v,
+            _ => &segs,
+        };
+        let ty = path.last().cloned().unwrap_or_else(|| "?".to_string());
+        out.push((ty, j, match_brace(toks, j)));
+        i = j + 1;
+    }
+    out
+}
+
+/// Innermost impl type containing token index `idx`.
+fn impl_type_at(ranges: &[(String, usize, usize)], idx: usize) -> Option<String> {
+    let mut best: Option<(&str, usize)> = None;
+    for (ty, a, b) in ranges {
+        if *a <= idx && idx <= *b && best.map_or(true, |(_, ba)| *a > ba) {
+            best = Some((ty, *a));
+        }
+    }
+    best.map(|(t, _)| t.to_string())
+}
+
+fn index_fns(toks: &[Tok], skip: &[(usize, usize)],
+             impls: &[(String, usize, usize)]) -> Vec<FnItem> {
+    let n = toks.len();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < n {
+        if in_regions(i, skip) {
+            i += 1;
+            continue;
+        }
+        let t = &toks[i];
+        let named = t.kind == TokKind::Ident
+            && t.text == "fn"
+            && i + 1 < n
+            && toks[i + 1].kind == TokKind::Ident;
+        if !named {
+            i += 1;
+            continue;
+        }
+        let name = toks[i + 1].text.clone();
+        let mut k = i + 2;
+        while k < n && !(is_punct(&toks[k], "{") || is_punct(&toks[k], ";")) {
+            k += 1;
+        }
+        if !(k < n && toks[k].text == "{") {
+            // trait declaration without a body
+            i = k;
+            continue;
+        }
+        // parameters: the first `( … )` after the name
+        let mut has_self = false;
+        let mut params = BTreeMap::new();
+        let mut p = i + 2;
+        while p < k && toks[p].text != "(" {
+            p += 1;
+        }
+        if p < k {
+            let mut d = 0i32;
+            let mut q = p;
+            while q < k {
+                let tq = &toks[q];
+                if tq.text == "(" {
+                    d += 1;
+                } else if tq.text == ")" {
+                    d -= 1;
+                    if d == 0 {
+                        break;
+                    }
+                } else if d == 1 && tq.kind == TokKind::Ident {
+                    if tq.text == "self" {
+                        has_self = true;
+                    } else if toks.get(q + 1).is_some_and(|t| t.text == ":")
+                        && toks.get(q + 2).map_or(true, |t| t.text != ":")
+                    {
+                        if let Some(ty) = outer_type(toks, q + 2, k) {
+                            params.insert(tq.text.clone(), ty);
+                        }
+                    }
+                }
+                q += 1;
+            }
+        }
+        let body_start = k;
+        let body_end = match_brace(toks, k);
+        // typed locals inside the body
+        let mut locals = BTreeMap::new();
+        let mut q = body_start;
+        while q < body_end.min(n) {
+            if toks[q].kind == TokKind::Ident && toks[q].text == "let" {
+                let mut gi = q + 1;
+                if toks.get(gi).is_some_and(|t| t.text == "mut") {
+                    gi += 1;
+                }
+                if toks.get(gi).is_some_and(|t| t.kind == TokKind::Ident) {
+                    let vname = toks[gi].text.clone();
+                    let mut ty = None;
+                    if toks.get(gi + 1).is_some_and(|t| t.text == ":")
+                        && toks.get(gi + 2).map_or(true, |t| t.text != ":")
+                    {
+                        ty = outer_type(toks, gi + 2, body_end.min(n));
+                    } else if toks.get(gi + 1).is_some_and(|t| t.text == "=") {
+                        // `let x = Type { .. }` / `let x = Type::ctor(..)`
+                        let ctor = toks.get(gi + 2).is_some_and(|t| {
+                            t.kind == TokKind::Ident
+                                && t.text.chars().next().is_some_and(|c| c.is_ascii_uppercase())
+                        });
+                        let shaped = toks.get(gi + 3).is_some_and(|t| t.text == "{")
+                            || (toks.get(gi + 3).is_some_and(|t| t.text == ":")
+                                && toks.get(gi + 4).is_some_and(|t| t.text == ":"));
+                        if ctor && shaped {
+                            ty = Some(toks[gi + 2].text.clone());
+                        }
+                    }
+                    if let Some(ty) = ty {
+                        locals.insert(vname, ty);
+                    }
+                }
+            }
+            q += 1;
+        }
+        out.push(FnItem {
+            name,
+            impl_type: impl_type_at(impls, i),
+            has_self,
+            line: toks[i + 1].line,
+            body_start,
+            body_end,
+            params,
+            locals,
+        });
+        i += 2;
+    }
+    out
+}
+
+fn skip_attr(toks: &[Tok], mut k: usize, close: usize) -> usize {
+    // `toks[k]` is `#`; returns the index past the matching `]`
+    let mut d = 0i32;
+    while k < close {
+        if toks[k].text == "[" {
+            d += 1;
+        } else if toks[k].text == "]" {
+            d -= 1;
+            if d == 0 {
+                return k + 1;
+            }
+        }
+        k += 1;
+    }
+    k
+}
+
+fn index_structs(toks: &[Tok], skip: &[(usize, usize)]) -> Vec<StructItem> {
+    let n = toks.len();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < n {
+        let t = &toks[i];
+        let named = t.kind == TokKind::Ident
+            && t.text == "struct"
+            && i + 1 < n
+            && toks[i + 1].kind == TokKind::Ident;
+        if in_regions(i, skip) || !named {
+            i += 1;
+            continue;
+        }
+        let name = toks[i + 1].text.clone();
+        let line = toks[i + 1].line;
+        let mut j = skip_generics(toks, i + 2);
+        // run (past a possible where clause) to `{`, `;` or tuple `(`
+        let mut d = 0i32;
+        while j < n {
+            let tj = &toks[j];
+            if tj.text == "<" {
+                d += 1;
+            } else if tj.text == ">" && !(j >= 1 && toks[j - 1].text == "-") {
+                d -= 1;
+            } else if d == 0 && (tj.text == "{" || tj.text == ";" || tj.text == "(") {
+                break;
+            }
+            j += 1;
+        }
+        if !(j < n && toks[j].text == "{") {
+            // unit/tuple struct: no named fields to track
+            i = if j > i { j } else { i + 1 };
+            continue;
+        }
+        let close = match_brace(toks, j);
+        let mut fields = Vec::new();
+        let mut k = j + 1;
+        while k < close {
+            if toks[k].text == "#" && toks.get(k + 1).is_some_and(|t| t.text == "[") {
+                k = skip_attr(toks, k, close);
+                continue;
+            }
+            if toks[k].kind == TokKind::Ident && toks[k].text == "pub" {
+                k += 1;
+                if toks.get(k).is_some_and(|t| t.text == "(") {
+                    // pub(crate) & friends
+                    let mut d2 = 0i32;
+                    while k < close {
+                        if toks[k].text == "(" {
+                            d2 += 1;
+                        } else if toks[k].text == ")" {
+                            d2 -= 1;
+                            if d2 == 0 {
+                                break;
+                            }
+                        }
+                        k += 1;
+                    }
+                    k += 1;
+                }
+                continue;
+            }
+            if toks[k].kind == TokKind::Ident
+                && toks.get(k + 1).is_some_and(|t| t.text == ":")
+            {
+                fields.push(Field {
+                    name: toks[k].text.clone(),
+                    line: toks[k].line,
+                    ty: outer_type(toks, k + 2, close),
+                });
+                // skip the field's type to the `,` at depth 0
+                let mut d2 = 0i32;
+                let mut ang = 0i32;
+                k += 2;
+                while k < close {
+                    let tk = &toks[k];
+                    if tk.text == "(" || tk.text == "[" || tk.text == "{" {
+                        d2 += 1;
+                    } else if tk.text == ")" || tk.text == "]" || tk.text == "}" {
+                        d2 -= 1;
+                    } else if tk.text == "<" {
+                        ang += 1;
+                    } else if tk.text == ">" && !(k >= 1 && toks[k - 1].text == "-") {
+                        ang -= 1;
+                    } else if tk.text == "," && d2 == 0 && ang <= 0 {
+                        break;
+                    }
+                    k += 1;
+                }
+                k += 1;
+                continue;
+            }
+            k += 1;
+        }
+        out.push(StructItem { name, line, fields });
+        i = close + 1;
+    }
+    out
+}
+
+fn index_enums(toks: &[Tok], skip: &[(usize, usize)]) -> Vec<EnumItem> {
+    let n = toks.len();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < n {
+        let t = &toks[i];
+        let named = t.kind == TokKind::Ident
+            && t.text == "enum"
+            && i + 1 < n
+            && toks[i + 1].kind == TokKind::Ident;
+        if in_regions(i, skip) || !named {
+            i += 1;
+            continue;
+        }
+        let name = toks[i + 1].text.clone();
+        let line = toks[i + 1].line;
+        let mut j = skip_generics(toks, i + 2);
+        while j < n && toks[j].text != "{" {
+            j += 1;
+        }
+        if j >= n {
+            break;
+        }
+        let close = match_brace(toks, j);
+        let mut variants = Vec::new();
+        let mut expect = true;
+        let mut d = 0i32;
+        let mut k = j + 1;
+        while k < close {
+            let tk = &toks[k];
+            if expect && d == 0 && tk.text == "#"
+                && toks.get(k + 1).is_some_and(|t| t.text == "[")
+            {
+                k = skip_attr(toks, k, close);
+                continue;
+            }
+            if tk.text == "(" || tk.text == "[" || tk.text == "{" {
+                d += 1;
+            } else if tk.text == ")" || tk.text == "]" || tk.text == "}" {
+                d -= 1;
+            } else if d == 0 && tk.text == "," {
+                expect = true;
+                k += 1;
+                continue;
+            }
+            if expect && d == 0 && tk.kind == TokKind::Ident {
+                variants.push(Field { name: tk.text.clone(), line: tk.line, ty: None });
+                expect = false;
+            }
+            k += 1;
+        }
+        out.push(EnumItem { name, line, variants });
+        i = close + 1;
+    }
+    out
+}
+
+/// Index one file's comment-free token stream.
+pub fn index_file(toks: &[Tok]) -> FileIndex {
+    let skip = test_regions(toks);
+    let impls = impl_ranges(toks, &skip);
+    FileIndex {
+        fns: index_fns(toks, &skip, &impls),
+        structs: index_structs(toks, &skip),
+        enums: index_enums(toks, &skip),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+    use crate::analysis::scope::code_tokens;
+
+    fn idx(src: &str) -> FileIndex {
+        index_file(&code_tokens(&lex(src)))
+    }
+
+    #[test]
+    fn fns_get_impl_context_and_param_types() {
+        let src = "
+            fn free_one(n: usize, conn: &mut ShardConn) {}
+            struct Foo { cache: CalibCache, items: Vec<WorkerStats> }
+            impl Foo {
+                fn method(&self, x: u32) { let c = NetClient::connect(); }
+            }
+            impl std::fmt::Display for Foo {
+                fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                    Ok(())
+                }
+            }
+            trait T { fn decl(&self); }
+        ";
+        let ix = idx(src);
+        let names: Vec<String> = ix.fns.iter().map(|f| f.qual()).collect();
+        assert_eq!(names, ["free_one", "Foo::method", "Foo::fmt"]);
+        assert_eq!(ix.fns[0].params.get("conn").map(String::as_str), Some("ShardConn"));
+        assert!(ix.fns[1].has_self);
+        assert_eq!(ix.fns[1].locals.get("c").map(String::as_str), Some("NetClient"));
+        let foo = &ix.structs[0];
+        assert_eq!(foo.fields[0].ty.as_deref(), Some("CalibCache"));
+        // outer type only: Vec<WorkerStats> must NOT type the field as
+        // WorkerStats (a `.push()` on it is a Vec method)
+        assert_eq!(foo.fields[1].ty.as_deref(), Some("Vec"));
+    }
+
+    #[test]
+    fn struct_fields_and_enum_variants_with_attrs() {
+        let src = "
+            pub struct Stats {
+                pub requests: u64,
+                #[allow(dead_code)]
+                latency: Hist,
+                pub(crate) map: BTreeMap<String, u64>,
+            }
+            enum Msg {
+                Hello { peer: String },
+                #[allow(dead_code)]
+                Ping(u64),
+                Stop,
+            }
+        ";
+        let ix = idx(src);
+        let fields: Vec<&str> =
+            ix.structs[0].fields.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(fields, ["requests", "latency", "map"]);
+        let variants: Vec<&str> =
+            ix.enums[0].variants.iter().map(|v| v.name.as_str()).collect();
+        assert_eq!(variants, ["Hello", "Ping", "Stop"]);
+    }
+
+    #[test]
+    fn test_regions_are_not_indexed() {
+        let src = "
+            fn prod() {}
+            #[cfg(test)]
+            mod tests {
+                fn helper() {}
+                struct Fake { x: u32 }
+            }
+        ";
+        let ix = idx(src);
+        assert_eq!(ix.fns.len(), 1);
+        assert!(ix.structs.is_empty());
+    }
+
+    #[test]
+    fn outer_type_strips_refs_and_paths() {
+        let toks = code_tokens(&lex("&'a mut crate::serve::net::NetClient"));
+        assert_eq!(outer_type(&toks, 0, toks.len()).as_deref(), Some("NetClient"));
+        let toks = code_tokens(&lex("[u8; 4]"));
+        assert_eq!(outer_type(&toks, 0, toks.len()), None);
+    }
+}

@@ -3,9 +3,10 @@
 //! A dependency-free lint pass purpose-built for the concurrency
 //! invariants the serve stack depends on but `rustc`/clippy cannot
 //! see: which mutex may be held across which calls, in what order
-//! locks nest, and which code paths must never panic. It runs in CI
-//! against the whole tree (and in a unit test below, so `cargo test`
-//! alone catches regressions).
+//! locks nest, which code paths must never panic, and whether a new
+//! stats field is plumbed end-to-end. It runs in CI against the whole
+//! tree (and in a unit test below, so `cargo test` alone catches
+//! regressions).
 //!
 //! ## Pipeline
 //!
@@ -17,17 +18,51 @@
 //!    `#[test]` regions (exempt from every rule), per-function body
 //!    ranges, statement boundaries, `pool.execute(..)`/`spawn(..)`
 //!    offload ranges.
-//! 3. [`rules`] — the rule engine; each rule is a pure function from
-//!    tokens to [`Finding`]s:
+//! 3. [`index`] — per-file item extraction on the same token stream:
+//!    fn definitions (with enclosing `impl` type, parameter types and
+//!    typed locals), struct fields with declared outer types, enum
+//!    variants.
+//! 4. [`graph`] — the whole-program call graph over every indexed
+//!    file, with *typed* call resolution (a method call resolves only
+//!    when the receiver's outer type is known — `self`, a declared
+//!    `self.field` type, a typed param or local; unknown receivers
+//!    produce no edge) and the transitive-blocking fixpoint: a fn
+//!    that calls anything in `BLOCKING`, or anything inferred
+//!    blocking, is itself blocking. Offload ranges and
+//!    `allow(transitive-blocking)` pragma cuts stop the propagation.
+//! 5. [`rules`] — the rule engine; each rule is a pure function from
+//!    tokens (and, for the interprocedural ones, the graph) to
+//!    [`Finding`]s:
 //!
 //!    | rule | guards against |
 //!    |------|----------------|
-//!    | `lock-across-blocking` | holding a mutex guard across socket/frame I/O, channel `recv`, `sleep`, `join` — and re-acquiring a held mutex (self-deadlock) |
+//!    | `lock-across-blocking` | holding a mutex guard across socket/frame I/O, channel `recv`, `sleep`, `join` — directly, or through any call chain the graph infers as blocking — and re-acquiring a held mutex (self-deadlock) |
 //!    | `lock-order` | acquisitions that invert the declared rank registry (`state` → `readers` → `bulk` → `data`/`ctrl`/`stream`/`half` → `record`), or touch an unregistered mutex while one is held |
 //!    | `no-panic-paths` | `.unwrap()` / `.expect()` / `panic!`-family in production `serve/`, `runtime/` and `sampler/` code; slice-indexing peer bytes on `serve/net` decode paths |
 //!    | `protocol-exhaustiveness` | silent `_ => {}` arms over protocol enums (`Msg`, `WireError`, `ShardState`, `Role`, `Health`) in `serve/net` |
-//!    | `reactor-discipline` | blocking calls inside reactor callbacks (`on_*` fns, fns taking `Ctl`) outside `reactor.rs` |
+//!    | `reactor-discipline` | blocking calls — direct or through an inferred-blocking chain — inside reactor callbacks (`on_*` fns, fns taking `Ctl`) outside `reactor.rs` |
 //!    | `non-poisoning-lock` | `.lock().unwrap()` — call sites belong on [`crate::util::lock`] |
+//!    | `stats-plumbing` | a `ServerStats`/`WorkerStats`/`RungStats`/`SampleStats` field or `Msg` variant missing from its serde encode/decode, `absorb`, or `stats_fold` (registry + declared exemptions in [`rules::STATS_PLUMBING`] / [`rules::STATS_EXEMPT`]) |
+//!
+//!    Interprocedural findings print the blocking *chain*, e.g.
+//!    `on_readable -> flush_shard -> write_frame [blocking: write_all]`,
+//!    so the repair site is visible without re-deriving the graph by
+//!    hand.
+//!
+//! ## Blocking inference semantics
+//!
+//! Seeds are non-offloaded calls to the 14 `BLOCKING` names plus
+//! `wait`/`wait_timeout` (`join` only when zero-arg, so `Path::join`
+//! and `slice::join` don't seed). Propagation follows resolved call
+//! edges only — typed resolution means precision over recall: a
+//! receiver the index can't type contributes *no* edge rather than an
+//! edge to every same-named method in the tree. Two cuts stop
+//! propagation: work inside `pool.execute(..)`/`spawn(..)` argument
+//! ranges runs elsewhere, and a fn whose definition line carries
+//! `// tq-lint: allow(transitive-blocking): reason` is *declared*
+//! non-blocking for inference (a mode-dispatch shim whose hot path is
+//! non-blocking; the direct rules still check its body). The graph is
+//! serialized by `tq-dit lint --graph-json` for offline inspection.
 //!
 //! ## Suppressions
 //!
@@ -35,7 +70,19 @@
 //! the pragma's own line); `// tq-lint: allow-file(rule): reason`
 //! exempts the file. A reason is mandatory and the rule name must be
 //! real — anything else is a `bad-pragma` finding, so suppressions
-//! never rot silently.
+//! never rot silently. `tq-dit lint --pragmas` reports every pragma
+//! with its reason, and CI ratchets the production pragma count
+//! against `rust/lint_pragmas.baseline` so the number can shrink but
+//! not grow.
+//!
+//! ## Parallelism and determinism
+//!
+//! [`lint_tree`] parses and indexes files in parallel on
+//! [`crate::util::threadpool::par_map`], builds the graph once, then
+//! runs the per-file rules in parallel again. Findings are merged and
+//! sorted by `(file, line, rule)`, so the output order is
+//! deterministic regardless of scheduling; per-rule wall time is
+//! aggregated into [`LintRun::timings`].
 //!
 //! ## Fixtures
 //!
@@ -47,35 +94,106 @@
 //! file is clean. CI additionally runs `tq-dit lint` on each `_bad`
 //! fixture expecting a nonzero exit.
 
+pub mod graph;
+pub mod index;
 pub mod lexer;
 pub mod rules;
 pub mod scope;
 
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::{Path, PathBuf};
+use std::time::Instant;
 
-pub use rules::{Finding, KNOWN_RULES};
+pub use rules::{Finding, PragmaRec, KNOWN_RULES};
 
 use crate::util::json::Json;
+use crate::util::threadpool::par_map;
 
-/// Lint one source text. `path` is used both for reporting and for the
-/// path-gated rules (`serve/`, `runtime/`, `sampler/`, `serve/net`), so pass a
-/// repo-relative or absolute path with `/` separators.
-pub fn lint_source(path: &str, src: &str) -> Vec<Finding> {
+/// Display labels for the per-file rule passes, in [`run_rules`]
+/// order. The first walk serves two rules at once.
+const RULE_LABELS: [&str; 5] = [
+    "lock-across-blocking+lock-order",
+    "no-panic-paths",
+    "protocol-exhaustiveness",
+    "reactor-discipline",
+    "non-poisoning-lock",
+];
+
+/// Everything derived from one file before graph construction.
+struct FileUnit {
+    path: String,
+    toks: Vec<lexer::Tok>,
+    skip: Vec<(usize, usize)>,
+    fns: Vec<scope::FnBody>,
+    index: index::FileIndex,
+    pragmas: rules::Pragmas,
+    pragma_findings: Vec<Finding>,
+    /// Fn-definition lines declared as blocking-propagation cuts.
+    cuts: BTreeSet<usize>,
+}
+
+fn parse_unit(path: &str, src: &str) -> FileUnit {
     let raw = lexer::lex(src);
-    let mut findings = Vec::new();
-    let pragmas = rules::parse_pragmas(&raw, path, &mut findings);
+    let mut pragma_findings = Vec::new();
+    let pragmas = rules::parse_pragmas(&raw, path, &mut pragma_findings);
     let toks = scope::code_tokens(&raw);
     let skip = scope::test_regions(&toks);
     let fns = scope::functions(&toks, &skip);
-    rules::rule_locks(path, &toks, &fns, &mut findings);
-    rules::rule_no_panic(path, &toks, &fns, &mut findings);
-    rules::rule_protocol(path, &toks, &skip, &mut findings);
-    rules::rule_reactor(path, &toks, &fns, &mut findings);
-    rules::rule_lock_helper(path, &toks, &skip, &mut findings);
-    findings
+    let index = index::index_file(&toks);
+    let cuts = index
+        .fns
+        .iter()
+        .filter(|f| pragmas.suppresses("transitive-blocking", f.line))
+        .map(|f| f.line)
+        .collect();
+    FileUnit { path: path.to_string(), toks, skip, fns, index, pragmas, pragma_findings, cuts }
+}
+
+/// The per-file rule passes; returns unfiltered findings plus one
+/// nanosecond timing per [`RULE_LABELS`] entry.
+fn run_rules(unit: &FileUnit, g: &graph::Graph) -> (Vec<Finding>, [u128; 5]) {
+    let mut findings = unit.pragma_findings.clone();
+    let mut ns = [0u128; 5];
+    let t = Instant::now();
+    rules::rule_locks(&unit.path, &unit.toks, &unit.fns, g, &mut findings);
+    ns[0] = t.elapsed().as_nanos();
+    let t = Instant::now();
+    rules::rule_no_panic(&unit.path, &unit.toks, &unit.fns, &mut findings);
+    ns[1] = t.elapsed().as_nanos();
+    let t = Instant::now();
+    rules::rule_protocol(&unit.path, &unit.toks, &unit.skip, &mut findings);
+    ns[2] = t.elapsed().as_nanos();
+    let t = Instant::now();
+    rules::rule_reactor(&unit.path, &unit.toks, &unit.fns, g, &mut findings);
+    ns[3] = t.elapsed().as_nanos();
+    let t = Instant::now();
+    rules::rule_lock_helper(&unit.path, &unit.toks, &unit.skip, &mut findings);
+    ns[4] = t.elapsed().as_nanos();
+    (findings, ns)
+}
+
+/// Lint one source text. `path` is used both for reporting and for the
+/// path-gated rules (`serve/`, `runtime/`, `sampler/`, `serve/net`), so pass a
+/// repo-relative or absolute path with `/` separators. The call graph
+/// spans just this file, so interprocedural findings cover
+/// same-file helpers — fixtures stay self-contained.
+pub fn lint_source(path: &str, src: &str) -> Vec<Finding> {
+    let unit = parse_unit(path, src);
+    let input = graph::GraphInput {
+        path: &unit.path,
+        toks: &unit.toks,
+        index: &unit.index,
+        cuts: &unit.cuts,
+    };
+    let g = graph::Graph::build(std::slice::from_ref(&input));
+    let (mut findings, _ns) = run_rules(&unit, &g);
+    rules::rule_stats_plumbing(&g, &mut findings);
+    let mut out: Vec<Finding> = findings
         .into_iter()
-        .filter(|f| !pragmas.suppresses(&f.rule, f.line))
-        .collect()
+        .filter(|f| !unit.pragmas.suppresses(&f.rule, f.line))
+        .collect();
+    out.sort();
+    out
 }
 
 fn collect_rs(root: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
@@ -101,29 +219,123 @@ fn collect_rs(root: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
     Ok(())
 }
 
+/// One whole-program lint run: filtered findings plus everything the
+/// CLI reports around them.
+pub struct LintRun {
+    /// Sorted by `(file, line, rule)` — deterministic across runs.
+    pub findings: Vec<Finding>,
+    pub files: usize,
+    /// Every well-formed pragma in the linted files: `(file, record)`.
+    pub pragmas: Vec<(String, PragmaRec)>,
+    /// `(label, nanoseconds)` per phase/rule: parse+index, graph, the
+    /// five per-file passes, stats-plumbing.
+    pub timings: Vec<(&'static str, u128)>,
+    pub wall_ns: u128,
+    pub graph: graph::Graph,
+}
+
 /// Lint every `.rs` file under the given roots (files are linted
-/// directly; directories are walked, skipping `fixtures`). Findings
-/// come back sorted by file, line, rule.
-pub fn lint_paths(roots: &[PathBuf]) -> std::io::Result<Vec<Finding>> {
+/// directly; directories are walked, skipping `fixtures`) as one
+/// program: parse/index in parallel, build the call graph, run the
+/// rules in parallel, merge deterministically.
+pub fn lint_tree(roots: &[PathBuf]) -> std::io::Result<LintRun> {
+    let t_all = Instant::now();
     let mut files = Vec::new();
     for root in roots {
         collect_rs(root, &mut files)?;
     }
     files.sort();
-    let mut findings = Vec::new();
+    files.dedup();
+    let mut sources = Vec::with_capacity(files.len());
     for f in &files {
         let src = std::fs::read_to_string(f)?;
         let rel = f.to_string_lossy().replace('\\', "/");
-        findings.extend(lint_source(&rel, &src));
+        sources.push((rel, src));
     }
+    let t = Instant::now();
+    let units: Vec<FileUnit> = par_map(&sources, |(rel, src)| parse_unit(rel, src));
+    let parse_ns = t.elapsed().as_nanos();
+
+    let t = Instant::now();
+    let inputs: Vec<graph::GraphInput> = units
+        .iter()
+        .map(|u| graph::GraphInput {
+            path: &u.path,
+            toks: &u.toks,
+            index: &u.index,
+            cuts: &u.cuts,
+        })
+        .collect();
+    let g = graph::Graph::build(&inputs);
+    drop(inputs);
+    let graph_ns = t.elapsed().as_nanos();
+
+    let per_file: Vec<(Vec<Finding>, [u128; 5])> =
+        par_map(&units, |u| run_rules(u, &g));
+    let mut rule_ns = [0u128; 5];
+    let mut findings = Vec::new();
+    for (u, (fs, ns)) in units.iter().zip(per_file) {
+        for (acc, n) in rule_ns.iter_mut().zip(ns) {
+            *acc += n;
+        }
+        findings.extend(
+            fs.into_iter().filter(|f| !u.pragmas.suppresses(&f.rule, f.line)),
+        );
+    }
+
+    let t = Instant::now();
+    let mut stats = Vec::new();
+    rules::rule_stats_plumbing(&g, &mut stats);
+    let by_path: BTreeMap<&str, &rules::Pragmas> =
+        units.iter().map(|u| (u.path.as_str(), &u.pragmas)).collect();
+    findings.extend(stats.into_iter().filter(|f| {
+        by_path
+            .get(f.file.as_str())
+            .map_or(true, |p| !p.suppresses(&f.rule, f.line))
+    }));
+    let stats_ns = t.elapsed().as_nanos();
     findings.sort();
-    Ok(findings)
+
+    let pragmas = units
+        .iter()
+        .flat_map(|u| {
+            u.pragmas.records().iter().map(|r| (u.path.clone(), r.clone()))
+        })
+        .collect();
+    let mut timings = vec![("parse+index", parse_ns), ("graph", graph_ns)];
+    for (label, n) in RULE_LABELS.into_iter().zip(rule_ns) {
+        timings.push((label, n));
+    }
+    timings.push(("stats-plumbing", stats_ns));
+    Ok(LintRun {
+        findings,
+        files: files.len(),
+        pragmas,
+        timings,
+        wall_ns: t_all.elapsed().as_nanos(),
+        graph: g,
+    })
+}
+
+/// Findings only — the original entry point, now a thin wrapper over
+/// [`lint_tree`].
+pub fn lint_paths(roots: &[PathBuf]) -> std::io::Result<Vec<Finding>> {
+    lint_tree(roots).map(|r| r.findings)
+}
+
+/// Parse `lint_pragmas.baseline`: `#` comment lines and blanks around
+/// a single integer.
+pub fn parse_ratchet(text: &str) -> Option<usize> {
+    text.lines()
+        .map(str::trim)
+        .find(|l| !l.is_empty() && !l.starts_with('#'))?
+        .parse()
+        .ok()
 }
 
 /// Canonical JSON report: `{"findings": [...], "counts": {...}}` via
 /// the crate's own serializer, for the CI artifact.
 pub fn report_json(findings: &[Finding]) -> Json {
-    use std::collections::BTreeMap;
     let items: Vec<Json> = findings
         .iter()
         .map(|f| {
@@ -159,6 +371,17 @@ mod tests {
         rs.sort();
         rs.dedup();
         rs
+    }
+
+    /// The tree the binary lints in CI — the manifest may sit at the
+    /// repo root (src under rust/src) or alongside the sources.
+    fn tree_root() -> PathBuf {
+        let base = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+        if base.join("rust/src").is_dir() {
+            base.join("rust/src")
+        } else {
+            base.join("src")
+        }
     }
 
     // ------------------------------------------------------- lexer
@@ -290,7 +513,7 @@ mod tests {
 
     // ---------------------------------------------------- fixtures
 
-    const FIXTURES: [(&str, &str, &str); 12] = [
+    const FIXTURES: [(&str, &str, &str); 16] = [
         (
             "lock-across-blocking",
             "fixtures/serve/net/lock_across_blocking_bad.rs",
@@ -350,6 +573,26 @@ mod tests {
             "",
             "fixtures/serve/net/non_poisoning_lock_ok.rs",
             include_str!("fixtures/serve/net/non_poisoning_lock_ok.rs"),
+        ),
+        (
+            "lock-across-blocking",
+            "fixtures/serve/net/transitive_blocking_bad.rs",
+            include_str!("fixtures/serve/net/transitive_blocking_bad.rs"),
+        ),
+        (
+            "",
+            "fixtures/serve/net/transitive_blocking_ok.rs",
+            include_str!("fixtures/serve/net/transitive_blocking_ok.rs"),
+        ),
+        (
+            "stats-plumbing",
+            "fixtures/serve/net/stats_plumbing_bad.rs",
+            include_str!("fixtures/serve/net/stats_plumbing_bad.rs"),
+        ),
+        (
+            "",
+            "fixtures/serve/net/stats_plumbing_ok.rs",
+            include_str!("fixtures/serve/net/stats_plumbing_ok.rs"),
         ),
     ];
 
@@ -418,27 +661,113 @@ mod tests {
         assert!(lint_source("serve/x.rs", src2).is_empty());
     }
 
+    // ------------------------------------- interprocedural findings
+
+    #[test]
+    fn transitive_finding_prints_the_chain() {
+        let (_rule, path, src) = FIXTURES
+            .iter()
+            .find(|(_, p, _)| p.ends_with("transitive_blocking_bad.rs"))
+            .unwrap();
+        let fs = lint_source(path, src);
+        let f = fs
+            .iter()
+            .find(|f| f.rule == "lock-across-blocking")
+            .expect("transitive fixture must trip lock-across-blocking");
+        assert!(
+            f.message.contains("call chain") && f.message.contains("->")
+                && f.message.contains("[blocking:"),
+            "chain missing from message: {}",
+            f.message
+        );
+    }
+
+    #[test]
+    fn stats_plumbing_catches_a_dropped_absorb_mention() {
+        // the acceptance contract: deleting any single field mention
+        // from absorb turns the clean fixture into a failing one
+        let (_r, path, src) = FIXTURES
+            .iter()
+            .find(|(_, p, _)| p.ends_with("stats_plumbing_ok.rs"))
+            .unwrap();
+        assert!(lint_source(path, src).is_empty());
+        let broken = src.replacen("self.reuse_hits += o.reuse_hits;", "", 1);
+        assert_ne!(&broken, src, "fixture must contain the absorb mention");
+        let fs = lint_source(path, &broken);
+        assert!(
+            fs.iter().any(|f| f.rule == "stats-plumbing"
+                && f.message.contains("reuse_hits")
+                && f.message.contains("absorb")),
+            "expected a stats-plumbing finding for reuse_hits, got {fs:?}"
+        );
+    }
+
+    #[test]
+    fn stats_plumbing_string_keys_count_as_mentions() {
+        // serde fns usually mention fields as "key" literals — words
+        // inside strings must count, and only as exact words
+        let src = r#"
+            struct ServerStats { requests: u64, failed_requests: u64 }
+            impl ServerStats {
+                fn absorb(&mut self, o: &ServerStats) {
+                    self.requests += o.requests;
+                    self.failed_requests += o.failed_requests;
+                }
+            }
+            fn stats_to_json(s: &ServerStats) -> u64 {
+                let _k = "requests failed_requests";
+                s.requests
+            }
+            fn stats_from_json(n: u64) -> u64 { let _ = "requests"; n }
+            fn stats_fold(a: u64) -> u64 { let _ = "requests failed_requests"; a }
+        "#;
+        let fs = lint_source("serve/stats.rs", src);
+        // `failed_requests` appears in from_json only as a substring
+        // of nothing — it is genuinely missing there
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert!(fs[0].message.contains("failed_requests"));
+        assert!(fs[0].message.contains("stats_from_json"));
+    }
+
     // ----------------------------------------------------- dogfood
 
     #[test]
     fn dogfood_whole_tree_is_clean() {
-        // the manifest may sit at the repo root (src under rust/src) or
-        // alongside the sources — handle both
-        let base = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
-        let root = if base.join("rust/src").is_dir() {
-            base.join("rust/src")
-        } else {
-            base.join("src")
-        };
-        let findings = lint_paths(&[root]).expect("walk src");
+        let run = lint_tree(&[tree_root()]).expect("walk src");
         assert!(
-            findings.is_empty(),
+            run.findings.is_empty(),
             "lint findings in the tree:\n{}",
-            findings
+            run.findings
                 .iter()
                 .map(|f| f.to_string())
                 .collect::<Vec<_>>()
                 .join("\n")
+        );
+        // the whole-program pass really saw the program
+        assert!(run.files > 30, "only {} files walked", run.files);
+        assert!(run.graph.fn_count() > 300, "index too small: {} fns", run.graph.fn_count());
+        assert!(run.graph.blocking_count() > 10, "blocking inference found nothing");
+        assert_eq!(run.timings.len(), 2 + RULE_LABELS.len() + 1);
+    }
+
+    #[test]
+    fn pragma_count_matches_checked_in_baseline() {
+        // the ratchet: pragmas may disappear (update the baseline),
+        // never appear (CI fails before a new one lands silently)
+        let baseline = parse_ratchet(include_str!("../../lint_pragmas.baseline"))
+            .expect("baseline file must contain a count");
+        let run = lint_tree(&[tree_root()]).expect("walk src");
+        let listing = run
+            .pragmas
+            .iter()
+            .map(|(f, r)| format!("{f}:{}: allow({}) — {}", r.line, r.rule, r.reason))
+            .collect::<Vec<_>>()
+            .join("\n");
+        assert_eq!(
+            run.pragmas.len(),
+            baseline,
+            "pragma count drifted from rust/lint_pragmas.baseline; \
+             current pragmas:\n{listing}"
         );
     }
 

@@ -1,8 +1,11 @@
-//! The rule engine: pragma parsing plus the six concurrency/robustness
+//! The rule engine: pragma parsing plus the concurrency/robustness
 //! rules, each a pure function over the token stream emitting
-//! [`Finding`]s. See the module doc on [`crate::analysis`] for what
-//! each rule enforces and why.
+//! [`Finding`]s. The two concurrency rules additionally consult the
+//! whole-program [`Graph`] so one helper fn of indirection no longer
+//! hides a blocking call. See the module doc on [`crate::analysis`]
+//! for what each rule enforces and why.
 
+use crate::analysis::graph::Graph;
 use crate::analysis::lexer::{Tok, TokKind};
 use crate::analysis::scope::{
     in_ranges, in_regions, match_brace, offload_ranges, stmt_start, FnBody,
@@ -26,19 +29,29 @@ impl std::fmt::Display for Finding {
 
 /// Every rule a pragma may name. A pragma naming anything else is
 /// itself a finding (`bad-pragma`), so suppressions can't rot silently.
-pub const KNOWN_RULES: [&str; 6] = [
+///
+/// `transitive-blocking` is special: it never emits findings under
+/// that name. A `tq-lint: allow(transitive-blocking): reason` pragma
+/// on a fn *definition* declares the fn non-blocking for call-graph
+/// inference — a cut point for mode-dispatch shims whose hot path is
+/// non-blocking (the direct rules still check the fn's own body).
+pub const KNOWN_RULES: [&str; 8] = [
     "lock-across-blocking",
     "lock-order",
     "no-panic-paths",
     "protocol-exhaustiveness",
     "reactor-discipline",
     "non-poisoning-lock",
+    "stats-plumbing",
+    "transitive-blocking",
 ];
 
 /// Calls that park the calling thread: socket and frame I/O, channel
 /// receives, sleeps and joins. Holding a mutex across any of these
-/// serializes every sibling on one peer's network behavior.
-const BLOCKING: [&str; 14] = [
+/// serializes every sibling on one peer's network behavior. These are
+/// also the call-graph blocking *seeds* (`join` only when zero-arg —
+/// `Path::join`/`slice::join` take arguments).
+pub const BLOCKING: [&str; 14] = [
     "write_all", "flush", "read_exact", "write_encoded", "write_frame",
     "read_frame", "read_message", "send_message", "connect", "accept",
     "sleep", "join", "recv", "recv_timeout",
@@ -55,6 +68,61 @@ const LOCK_RANKS: [(&str, i32); 10] = [
     ("record", 4),
 ];
 
+/// The stats-plumbing contract: every field of these structs (and
+/// every variant of the `Msg` enum) must be *mentioned* — as an
+/// identifier or a serde key inside a string literal — in each of the
+/// listed fns, or the `stats-plumbing` rule fires at the field's
+/// definition. `Type::name` specs resolve through the impl table,
+/// bare names through the free-fn table; a listed fn that is absent
+/// from the current run's index skips that requirement (so a
+/// single-file fixture can carry its own miniature plumbing). The
+/// path gate keys on the *defining* file, which keeps same-named
+/// private types elsewhere (e.g. `util::threadpool`'s `Msg`) out of
+/// the contract.
+pub const STATS_PLUMBING: [(&str, &str, &[&str]); 5] = [
+    ("ServerStats", "serve/", &[
+        "stats_to_json", "stats_from_json", "ServerStats::absorb", "stats_fold",
+    ]),
+    ("WorkerStats", "serve/", &[
+        "worker_to_json", "worker_from_json", "ServerStats::absorb",
+    ]),
+    ("RungStats", "serve/", &[
+        "rung_to_json", "rung_from_json", "ServerStats::absorb",
+    ]),
+    ("SampleStats", "sampler/", &["Sampler::generate"]),
+    ("Msg", "serve/net", &["Msg::kind", "Msg::to_json", "Msg::from_json"]),
+];
+
+/// Declared holes in the stats-plumbing contract:
+/// `(type, field, required fn, reason)`. An intentional local-only
+/// field is declared here, not silent — the reason is part of the
+/// registry so the exemption survives review the same way a pragma
+/// does. `stats_fold` starts from the latest delta (`d.clone()`), so
+/// gauges and breakdowns that aren't additive counters ride along
+/// without a mention.
+pub const STATS_EXEMPT: [(&str, &str, &str, &str); 10] = [
+    ("ServerStats", "batch_fill", "stats_fold",
+     "fill-ratio gauge; latest delta wins via d.clone(), quantities fold"),
+    ("ServerStats", "wall_s", "stats_fold",
+     "per-snapshot wall clock; latest delta wins via d.clone()"),
+    ("ServerStats", "queue_depth_avg", "stats_fold",
+     "queue gauge sampled at snapshot time; latest delta wins"),
+    ("ServerStats", "queue_depth_max", "stats_fold",
+     "queue gauge sampled at snapshot time; latest delta wins"),
+    ("ServerStats", "calib_cold_start_ms", "stats_fold",
+     "one-shot startup measurement; latest delta wins"),
+    ("ServerStats", "pending", "stats_fold",
+     "instantaneous queue length, not an additive counter"),
+    ("ServerStats", "rungs", "stats_fold",
+     "per-rung breakdown carried whole from the latest delta"),
+    ("ServerStats", "workers", "stats_fold",
+     "per-worker breakdown carried whole from the latest delta"),
+    ("WorkerStats", "ready", "ServerStats::absorb",
+     "per-worker liveness flag; absorb aggregates cluster totals"),
+    ("WorkerStats", "failed", "ServerStats::absorb",
+     "per-worker liveness flag; absorb aggregates cluster totals"),
+];
+
 const PANIC_MACROS: [&str; 4] = ["panic", "unreachable", "todo", "unimplemented"];
 
 /// Enum paths that mark a `match` as protocol-shaped: a silent `_`
@@ -65,17 +133,33 @@ fn lock_rank(name: &str) -> Option<i32> {
     LOCK_RANKS.iter().find(|(n, _)| *n == name).map(|&(_, r)| r)
 }
 
+/// One well-formed pragma as written, for the `--pragmas` report and
+/// the CI ratchet.
+#[derive(Clone, Debug)]
+pub struct PragmaRec {
+    pub line: usize,
+    pub rule: String,
+    pub reason: String,
+    pub filewide: bool,
+}
+
 /// Per-file pragma state: line-scoped allows per rule, plus file-wide
-/// allows.
+/// allows, plus the raw records.
 pub struct Pragmas {
     allow: BTreeMap<String, BTreeSet<usize>>,
     allow_file: BTreeSet<String>,
+    records: Vec<PragmaRec>,
 }
 
 impl Pragmas {
     pub fn suppresses(&self, rule: &str, line: usize) -> bool {
         self.allow_file.contains(rule)
             || self.allow.get(rule).is_some_and(|ls| ls.contains(&line))
+    }
+
+    /// Every well-formed pragma in the file, in source order.
+    pub fn records(&self) -> &[PragmaRec] {
+        &self.records
     }
 }
 
@@ -85,7 +169,11 @@ impl Pragmas {
 /// token stream. Malformed pragmas, unknown rules and missing reasons
 /// are `bad-pragma` findings — a suppression must always say why.
 pub fn parse_pragmas(raw: &[Tok], path: &str, findings: &mut Vec<Finding>) -> Pragmas {
-    let mut out = Pragmas { allow: BTreeMap::new(), allow_file: BTreeSet::new() };
+    let mut out = Pragmas {
+        allow: BTreeMap::new(),
+        allow_file: BTreeSet::new(),
+        records: Vec::new(),
+    };
     for (idx, t) in raw.iter().enumerate() {
         if t.kind != TokKind::LineComment {
             continue;
@@ -133,6 +221,15 @@ pub fn parse_pragmas(raw: &[Tok], path: &str, findings: &mut Vec<Finding>) -> Pr
                 });
                 break;
             }
+            out.records.push(PragmaRec {
+                line: t.line,
+                rule: rule.clone(),
+                reason: reason
+                    .strip_prefix(':')
+                    .map(|r| r.trim().to_string())
+                    .unwrap_or_default(),
+                filewide,
+            });
             if filewide {
                 out.allow_file.insert(rule);
             } else {
@@ -210,10 +307,19 @@ struct Guard {
 /// `drop()`, condvar-`wait()` consumption or block exit; temporaries
 /// die at their statement. Blocking calls and same-mutex re-acquisition
 /// while any guard is held are rule-1 findings; rank inversions and
-/// unregistered acquisitions are rule-2.
-pub fn rule_locks(path: &str, toks: &[Tok], fns: &[FnBody], findings: &mut Vec<Finding>) {
+/// unregistered acquisitions are rule-2. With the call graph, a call
+/// that *resolves* to an inferred-blocking fn under a held guard is a
+/// rule-1 finding too, and the message prints the blocking chain.
+pub fn rule_locks(
+    path: &str,
+    toks: &[Tok],
+    fns: &[FnBody],
+    graph: &Graph,
+    findings: &mut Vec<Finding>,
+) {
     for f in fns {
         let (bs, be) = (f.body_start, f.body_end.min(toks.len().saturating_sub(1)));
+        let fid = graph.fn_id(path, f.body_start);
         let mut guards: Vec<Guard> = Vec::new();
         let mut depth = 0i32;
         let offload = offload_ranges(toks, bs, be);
@@ -380,6 +486,25 @@ pub fn rule_locks(path: &str, toks: &[Tok], fns: &[FnBody], findings: &mut Vec<F
                 });
                 i += 1;
                 continue;
+            }
+            if is_call && !guards.is_empty() {
+                // transitive: does this call resolve to a fn the graph
+                // inferred as blocking?
+                if let Some(chain) = fid.and_then(|id| graph.blocking_chain(id, i)) {
+                    let g = &guards[guards.len() - 1];
+                    findings.push(Finding {
+                        file: path.to_string(),
+                        line: t.line,
+                        rule: "lock-across-blocking".to_string(),
+                        message: format!(
+                            "call chain `{} -> {chain}` may block while the `{}` \
+                             guard from line {} is held",
+                            f.name, g.src, g.line
+                        ),
+                    });
+                    i += 1;
+                    continue;
+                }
             }
             if !guards.is_empty()
                 && (t.text == "read" || t.text == "write")
@@ -589,12 +714,21 @@ pub fn rule_protocol(
 /// parameter — must not make blocking calls; one stalled handler
 /// freezes every connection on the loop. Work handed to
 /// `pool.execute(..)` / `spawn(..)` is exempt (it runs elsewhere).
-pub fn rule_reactor(path: &str, toks: &[Tok], fns: &[FnBody], findings: &mut Vec<Finding>) {
+/// With the call graph, a handler call that resolves to an
+/// inferred-blocking fn is a finding too, with the chain spelled out.
+pub fn rule_reactor(
+    path: &str,
+    toks: &[Tok],
+    fns: &[FnBody],
+    graph: &Graph,
+    findings: &mut Vec<Finding>,
+) {
     if !path.contains("serve/net") || path.ends_with("reactor.rs") {
         return;
     }
     for f in fns {
         let (bs, be) = (f.body_start, f.body_end.min(toks.len().saturating_sub(1)));
+        let fid = graph.fn_id(path, f.body_start);
         let mut is_handler = f.name.starts_with("on_");
         if !is_handler {
             // scan the signature backwards to the `fn` keyword
@@ -634,6 +768,81 @@ pub fn rule_reactor(path: &str, toks: &[Tok], fns: &[FnBody], findings: &mut Vec
                         "`{}` can block the reactor thread inside `{}` — queue it \
                          on the pool or use the reactor timer/handle",
                         t.text, f.name
+                    ),
+                });
+            } else if let Some(chain) = fid.and_then(|id| graph.blocking_chain(id, i)) {
+                findings.push(Finding {
+                    file: path.to_string(),
+                    line: t.line,
+                    rule: "reactor-discipline".to_string(),
+                    message: format!(
+                        "call chain `{} -> {chain}` can block the reactor thread — \
+                         queue it on the pool or use the reactor timer/handle",
+                        f.name
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Rule 7 — `stats-plumbing`: every member named by [`STATS_PLUMBING`]
+/// must be mentioned in each of its required fns (or carry a
+/// [`STATS_EXEMPT`] entry). Mentions are identifiers *or* words inside
+/// string literals, so a serde key like `"reuse_hits"` counts; words
+/// are exact matches, so `requests` does not satisfy
+/// `failed_requests`. Findings anchor at the member's definition line
+/// — the place a new field gets added is the place the reminder shows
+/// up.
+pub fn rule_stats_plumbing(graph: &Graph, findings: &mut Vec<Finding>) {
+    for (ty, gate, required) in STATS_PLUMBING {
+        let mut members: Vec<(&str, &str, usize)> = Vec::new();
+        for (file, s) in graph.structs() {
+            if s.name == ty && file.contains(gate) {
+                for fl in &s.fields {
+                    members.push((file.as_str(), fl.name.as_str(), fl.line));
+                }
+            }
+        }
+        for (file, e) in graph.enums() {
+            if e.name == ty && file.contains(gate) {
+                for v in &e.variants {
+                    members.push((file.as_str(), v.name.as_str(), v.line));
+                }
+            }
+        }
+        if members.is_empty() {
+            continue;
+        }
+        for spec in required {
+            let ids = graph.resolve_spec(spec);
+            if ids.is_empty() {
+                // the required fn is outside this run's index (e.g. a
+                // single-file lint): nothing to check against
+                continue;
+            }
+            let mut mentioned: BTreeSet<&str> = BTreeSet::new();
+            for id in &ids {
+                mentioned.extend(graph.mentions(*id).iter().map(String::as_str));
+            }
+            for (file, name, line) in &members {
+                if mentioned.contains(name) {
+                    continue;
+                }
+                let exempt = STATS_EXEMPT
+                    .iter()
+                    .any(|(t, fl, sp, _)| *t == ty && fl == name && sp == spec);
+                if exempt {
+                    continue;
+                }
+                findings.push(Finding {
+                    file: file.to_string(),
+                    line: *line,
+                    rule: "stats-plumbing".to_string(),
+                    message: format!(
+                        "`{ty}.{name}` is not mentioned in `{spec}` — plumb the \
+                         new member through, or declare it in STATS_EXEMPT \
+                         (analysis/rules.rs) with a reason"
                     ),
                 });
             }

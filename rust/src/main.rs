@@ -104,9 +104,12 @@ SUBCOMMANDS
                  (--listen ADDR, --workers, --run-secs N; 0 = forever)
   report         per-layer quantization-error attribution (--method)
   stats          manifest inventory
-  lint           static analysis over the repo's own Rust sources
-                 ([PATHS...], default rust/src; --json PATH writes a
-                 machine-readable report; exits nonzero on findings)
+  lint           whole-program static analysis over the repo's own Rust
+                 sources ([PATHS...], default rust/src; --json PATH
+                 writes a machine-readable report, --graph-json PATH
+                 dumps the inferred call graph, --pragmas lists every
+                 suppression with its reason, --ratchet FILE enforces
+                 the pragma-count baseline; exits nonzero on findings)
 
 FLAGS (all subcommands)
   --artifacts DIR       AOT artifact directory  [artifacts]
@@ -443,11 +446,15 @@ fn cmd_report(cfg: RunConfig, args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `tq-dit lint [--json PATH] [PATHS...]` — run the crate's own static
-/// analysis (see `tq_dit::analysis`) over the given files/directories,
-/// defaulting to the Rust source tree. Exits nonzero on any finding so
-/// CI can gate on it; `--json` additionally writes the report as an
-/// artifact.
+/// `tq-dit lint [--json PATH] [--graph-json PATH] [--pragmas]
+/// [--ratchet FILE] [PATHS...]` — run the crate's own whole-program
+/// static analysis (see `tq_dit::analysis`) over the given
+/// files/directories, defaulting to the Rust source tree. Exits
+/// nonzero on any finding so CI can gate on it. `--json` writes the
+/// findings report, `--graph-json` dumps the inferred call graph,
+/// `--pragmas` lists every suppression with its reason, and
+/// `--ratchet FILE` enforces the pragma-count baseline (fails if the
+/// count grew; rewrites the file if it shrank).
 fn cmd_lint(args: &Args) -> Result<()> {
     let roots: Vec<std::path::PathBuf> = if args.positional.is_empty() {
         // work from either the repo root or rust/
@@ -456,22 +463,89 @@ fn cmd_lint(args: &Args) -> Result<()> {
     } else {
         args.positional.iter().map(Into::into).collect()
     };
-    let findings = tq_dit::analysis::lint_paths(&roots)
+    let run = tq_dit::analysis::lint_tree(&roots)
         .with_context(|| format!("linting {roots:?}"))?;
-    for f in &findings {
+    for f in &run.findings {
         println!("{f}");
     }
     if let Some(path) = args.get("json") {
-        let report = tq_dit::analysis::report_json(&findings);
+        let report = tq_dit::analysis::report_json(&run.findings);
         std::fs::write(path, report.dump())
             .with_context(|| format!("writing lint report {path}"))?;
         eprintln!("wrote lint report to {path}");
     }
-    if findings.is_empty() {
+    if let Some(path) = args.get("graph-json") {
+        std::fs::write(path, run.graph.to_json().dump())
+            .with_context(|| format!("writing call graph {path}"))?;
+        eprintln!("wrote call graph to {path}");
+    }
+    if args.flag("pragmas") {
+        println!("{} pragma(s):", run.pragmas.len());
+        for (file, r) in &run.pragmas {
+            println!(
+                "  {file}:{}: {}({}) — {}",
+                r.line,
+                if r.filewide { "allow-file" } else { "allow" },
+                r.rule,
+                r.reason
+            );
+        }
+    }
+    let mut ratchet_err = None;
+    if let Some(path) = args.get("ratchet") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading pragma baseline {path}"))?;
+        let baseline = tq_dit::analysis::parse_ratchet(&text).ok_or_else(
+            || anyhow::anyhow!("{path}: no pragma count found"),
+        )?;
+        let n = run.pragmas.len();
+        if n > baseline {
+            eprintln!(
+                "pragma ratchet: {n} pragma(s) exceeds baseline {baseline} \
+                 — remove one, or justify the new one in review and bump \
+                 {path}:"
+            );
+            for (file, r) in &run.pragmas {
+                eprintln!("  {file}:{}: allow({}) — {}", r.line, r.rule, r.reason);
+            }
+            ratchet_err = Some(format!(
+                "pragma count {n} exceeds baseline {baseline}"
+            ));
+        } else if n < baseline {
+            // shrinking is progress: auto-tighten the baseline
+            std::fs::write(
+                path,
+                format!(
+                    "# Production `tq-lint` pragma count — the ratchet \
+                     floor.\n# `tq-dit lint --ratchet` fails when the live \
+                     count exceeds this\n# number and rewrites it downward \
+                     when suppressions are removed.\n{n}\n"
+                ),
+            )
+            .with_context(|| format!("tightening pragma baseline {path}"))?;
+            eprintln!("pragma ratchet: {n} < baseline {baseline}; tightened {path}");
+        } else {
+            eprintln!("pragma ratchet: {n} pragma(s), at baseline");
+        }
+    }
+    for (label, ns) in &run.timings {
+        eprintln!("  {label:<34} {:>9.2} ms", *ns as f64 / 1e6);
+    }
+    eprintln!(
+        "lint: {} file(s), {} fn(s), {} inferred blocking, {:.1} ms total",
+        run.files,
+        run.graph.fn_count(),
+        run.graph.blocking_count(),
+        run.wall_ns as f64 / 1e6
+    );
+    if let Some(e) = ratchet_err {
+        bail!("lint: {e}");
+    }
+    if run.findings.is_empty() {
         eprintln!("lint: clean");
         Ok(())
     } else {
-        bail!("lint: {} finding(s)", findings.len());
+        bail!("lint: {} finding(s)", run.findings.len());
     }
 }
 

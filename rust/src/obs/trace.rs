@@ -60,9 +60,14 @@ pub enum SpanKind {
     RungPick = 3,
     /// One batch forward on a worker (`a` = rung, `b` = batch).
     Generate = 4,
-    /// Full quantized transformer steps (`a` = TGQ group, `b` = len).
+    /// Full quantized transformer steps. `a`/`b` carry the half-open
+    /// step-index range `[start, end)` of the sampler run, so a
+    /// timeline shows *which* steps each span covered and the reuse
+    /// decision per run (this kind = every step dispatched).
     StepsFull = 5,
-    /// Reuse-fused closed-form steps (`a` = TGQ group, `b` = len).
+    /// Reuse-fused closed-form steps — same `[start, end)` step-index
+    /// range in `a`/`b`; this kind = the whole run was skipped on
+    /// device and applied as one fused host update.
     StepsReuse = 6,
     /// Response copy-out / encode on delivery.
     Encode = 7,
@@ -483,8 +488,28 @@ pub fn chrome_trace_json(spans: &[SpanRec]) -> String {
                 "parent".to_string(),
                 Json::Str(format!("{:016x}", rec.parent)),
             );
-            args.insert("a".to_string(), Json::Num(rec.a as f64));
-            args.insert("b".to_string(), Json::Num(rec.b as f64));
+            // name the payload for the kinds whose a/b have a fixed
+            // meaning, so a Perfetto row is legible without this file
+            match rec.kind {
+                SpanKind::StepsFull | SpanKind::StepsReuse => {
+                    args.insert(
+                        "step_start".to_string(),
+                        Json::Num(rec.a as f64),
+                    );
+                    args.insert(
+                        "step_end".to_string(),
+                        Json::Num(rec.b as f64),
+                    );
+                    args.insert(
+                        "reuse".to_string(),
+                        Json::Bool(rec.kind == SpanKind::StepsReuse),
+                    );
+                }
+                _ => {
+                    args.insert("a".to_string(), Json::Num(rec.a as f64));
+                    args.insert("b".to_string(), Json::Num(rec.b as f64));
+                }
+            }
             let mut e = BTreeMap::new();
             e.insert(
                 "name".to_string(),
@@ -565,8 +590,9 @@ mod tests {
         );
         assert_ne!(gen_span, 0);
         let child = ctx.child_of(gen_span);
+        // a/b on step spans are the run's step-index range
         record_span(child, SpanKind::StepsFull, 1_100, 4_000, 0, 12);
-        record_span(child, SpanKind::StepsReuse, 4_000, 4_100, 1, 37);
+        record_span(child, SpanKind::StepsReuse, 4_000, 4_100, 12, 49);
         let spans = spans_for_trace(ctx.trace);
         assert_eq!(spans.len(), 3);
         let full = spans
@@ -643,6 +669,33 @@ mod tests {
             events[0].get("ph").and_then(Json::as_str),
             Some("X")
         );
+    }
+
+    #[test]
+    fn chrome_step_spans_carry_named_step_range() {
+        let ctx = unique_ctx();
+        record_span(ctx, SpanKind::StepsReuse, 0, 500, 12, 49);
+        record_span(ctx, SpanKind::Queue, 500, 600, 3, 4);
+        let spans = spans_for_trace(ctx.trace);
+        let v = Json::parse(&chrome_trace_json(&spans)).expect("parses");
+        let events =
+            v.get("traceEvents").and_then(Json::as_arr).expect("events");
+        let args_of = |name: &str| {
+            events
+                .iter()
+                .find(|e| e.get("name").and_then(Json::as_str) == Some(name))
+                .and_then(|e| e.get("args"))
+                .cloned()
+                .expect("event args")
+        };
+        let steps = args_of("steps_reuse");
+        assert_eq!(steps.get("step_start").and_then(Json::as_f64), Some(12.0));
+        assert_eq!(steps.get("step_end").and_then(Json::as_f64), Some(49.0));
+        assert!(matches!(steps.get("reuse"), Some(Json::Bool(true))));
+        // other kinds keep the generic payload names
+        let queue = args_of("queue");
+        assert_eq!(queue.get("a").and_then(Json::as_f64), Some(3.0));
+        assert!(queue.get("step_start").is_none());
     }
 
     #[test]

@@ -307,9 +307,12 @@ impl<'a> Sampler<'a> {
                 stats.steps_skipped += run.len;
                 stats.uploads_saved += 2 * run.len; // x_t and t
                 if tctx.is_active() {
+                    // span args = the half-open step-index range this
+                    // run covered; the kind already says it was reused
                     trace::record_span(tctx, SpanKind::StepsReuse,
                                        run_start, trace::now_ns(),
-                                       g as u64, run.len as u64);
+                                       run.start as u64,
+                                       (run.start + run.len) as u64);
                 }
                 continue;
             }
@@ -373,7 +376,8 @@ impl<'a> Sampler<'a> {
             if tctx.is_active() {
                 trace::record_span(tctx, SpanKind::StepsFull,
                                    run_start, trace::now_ns(),
-                                   g as u64, run.len as u64);
+                                   run.start as u64,
+                                   (run.start + run.len) as u64);
             }
         }
         stats.host_s = t_total.elapsed().as_secs_f64() - stats.exec_s;

@@ -133,14 +133,21 @@
 //!
 //! * **No blocking under a lock** (`lock-across-blocking`): no mutex
 //!   guard may be held across socket/frame I/O, channel `recv`,
-//!   `sleep` or `join`. State updates happen under the lock; wire
-//!   writes happen after it is released (the lost-node path re-queues
-//!   on failure). The two deliberate exceptions carry
+//!   `sleep` or `join` — *directly or through any call chain*: the
+//!   lint builds a whole-program call graph and infers transitive
+//!   blocking, so hiding a `write_all` two helpers deep still fires
+//!   (the finding prints the chain). State updates happen under the
+//!   lock; wire writes happen after it is released (the lost-node
+//!   path re-queues on failure). The deliberate exceptions carry
 //!   `// tq-lint: allow(...)` pragmas with their justification: the
-//!   thread-pool worker whose receiver mutex *is* the work queue, and
-//!   the bounded single-frame writes in [`net::send_message`] /
+//!   thread-pool worker whose receiver mutex *is* the work queue, the
+//!   bounded single-frame writes in [`net::send_message`] /
 //!   `cluster::send_control` where the chunk protocol releases the
-//!   frame lock between chunks.
+//!   frame lock between chunks, and `cluster::send_data`, a
+//!   mode-dispatch shim declared `allow(transitive-blocking)` because
+//!   its reactor-mode path never blocks. CI ratchets the pragma count
+//!   against `rust/lint_pragmas.baseline`, so the exception list can
+//!   shrink but never silently grow.
 //! * **Lock order** (`lock-order`): nested acquisitions must ascend
 //!   the declared registry — `state` (0) → `readers` (1) → `bulk` (2)
 //!   → `data`/`ctrl`/`stream`/`half` (3) → `record` (4) — and no
@@ -160,11 +167,23 @@
 //!   decision, not vanish.
 //! * **Reactor callbacks never block** (`reactor-discipline`): `on_*`
 //!   handlers and `Ctl`-taking fns outside `reactor.rs` must hand
-//!   blocking work to the pool; one stalled callback would freeze
-//!   every connection on the loop.
+//!   blocking work to the pool — again transitively, through the
+//!   inferred call graph; one stalled callback would freeze every
+//!   connection on the loop.
 //! * **One way to lock** (`non-poisoning-lock`): every
 //!   `std::sync::Mutex` is taken through [`crate::util::lock`], which
 //!   recovers from poisoning instead of cascading `PoisonError`s.
+//! * **Stats are plumbed end-to-end** (`stats-plumbing`): every field
+//!   of [`ServerStats`], `WorkerStats`, `RungStats` and
+//!   [`crate::sampler::SampleStats`], and every [`net::proto`] `Msg`
+//!   variant, must be mentioned in its serde encode *and* decode, in
+//!   `ServerStats::absorb`, and in the cluster's `stats_fold` — a new
+//!   counter that is counted but never aggregated (or folded but never
+//!   shipped) is a lint finding at the field's definition. Fields that
+//!   are *deliberately* not folded (gauges and breakdowns where the
+//!   latest node delta wins, e.g. `queue_depth_max`) are declared in
+//!   the `STATS_EXEMPT` registry next to the rule, each with a reason
+//!   — the exemption is in the diff, not in a reviewer's memory.
 
 pub mod batcher;
 pub mod dispatch;

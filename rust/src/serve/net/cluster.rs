@@ -932,6 +932,10 @@ fn aggregate(st: &ClusterState, wall_s: f64) -> ServerStats {
 /// discipline — oversized messages go as chunk runs with the frame
 /// lock released between chunks. `Err` carries the cause for the
 /// lost-node path.
+// tq-lint: allow(transitive-blocking): mode dispatch — reactor-mode
+// callers take the non-blocking reactor_send path, and threaded-mode
+// callers are dedicated reader/monitor threads that are allowed to
+// block on the socket
 fn send_data(shared: &ClusterShared, shard: usize, msg: &Msg)
              -> std::result::Result<(), String> {
     if shared.opts.reactor {

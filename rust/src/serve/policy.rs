@@ -56,9 +56,9 @@ impl Ladder {
 
     /// Largest rung (the classic full artifact batch).
     pub fn max(&self) -> usize {
-        // tq-lint: allow(no-panic-paths): Ladder::new rejects an empty
-        // rung list, so `last()` is always Some
-        *self.rungs.last().unwrap()
+        // Ladder::new rejects an empty rung list; the fallback only
+        // keeps this panic-free
+        self.rungs.last().copied().unwrap_or(1)
     }
 
     /// Smallest rung that covers `n` slots, or the largest rung when
